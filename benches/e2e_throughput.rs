@@ -1,0 +1,113 @@
+//! End-to-end train-step latency per architecture and configuration --
+//! the headline L2/L3 performance numbers tracked in EXPERIMENTS.md
+//! section Perf.  Float vs fully-quantized configs isolate the cost of
+//! the in-graph quantizers; the integer engine gives the deployment-side
+//! number.
+
+use fxpnet::bench::{bench, Table};
+use fxpnet::coordinator::calibrate;
+use fxpnet::coordinator::trainer::{upd_all, Trainer};
+use fxpnet::data::loader::LoaderCfg;
+use fxpnet::data::synth::Dataset;
+use fxpnet::fixedpoint::QFormat;
+use fxpnet::inference::FixedPointNet;
+use fxpnet::model::params::ParamSet;
+use fxpnet::quant::calib::CalibMethod;
+use fxpnet::quant::policy::{NetQuant, WidthSpec};
+use fxpnet::runtime::Engine;
+
+fn step_ms(
+    engine: &Engine,
+    arch: &str,
+    nq: &NetQuant,
+    iters: usize,
+) -> (f64, usize) {
+    let spec = engine.manifest.arch(arch).unwrap().clone();
+    let params = ParamSet::init(&spec, 1);
+    let data = Dataset::generate(
+        spec.train_batch * 4,
+        spec.input[0],
+        spec.input[1],
+        9,
+    );
+    let mut tr = Trainer::new(
+        engine,
+        arch,
+        &params,
+        nq,
+        &upd_all(spec.num_layers),
+        0.01,
+        0.9,
+        data,
+        LoaderCfg { batch: spec.train_batch, augment: false, max_shift: 0, seed: 2 },
+        1e9, // no divergence cutoff for timing
+    )
+    .unwrap();
+    tr.step().unwrap(); // warm
+    let s = bench(&format!("{arch} train_step"), 1, iters, || {
+        tr.step().unwrap();
+    });
+    (s.mean_ms, spec.train_batch)
+}
+
+fn main() {
+    fxpnet::util::logging::init();
+    let artifacts = std::env::var("FXPNET_ARTIFACTS").unwrap_or("artifacts".into());
+    let engine = Engine::cpu(&artifacts).expect("run `make artifacts` first");
+
+    let mut t = Table::new(
+        "train-step latency (batch amortised)",
+        &["arch", "config", "ms/step", "img/s"],
+    );
+    for arch in ["tiny", "shallow", "paper12"] {
+        let spec = engine.manifest.arch(arch).unwrap().clone();
+        let l = spec.num_layers;
+        let iters = if arch == "paper12" { 8 } else { 20 };
+        // float
+        let (ms, b) = step_ms(&engine, arch, &NetQuant::all_float(l), iters);
+        t.row(vec![
+            arch.into(),
+            "float (enables off)".into(),
+            format!("{ms:.1}"),
+            format!("{:.0}", b as f64 / (ms / 1e3)),
+        ]);
+        // fully quantized 8/8
+        let params = ParamSet::init(&spec, 1);
+        let data = Dataset::generate(256, spec.input[0], spec.input[1], 10);
+        let a_stats = calibrate::activation_stats(&engine, arch, &params, &data, 1)
+            .unwrap()
+            .a_stats;
+        let nq = NetQuant::for_cell(
+            WidthSpec::Bits(8),
+            WidthSpec::Bits(8),
+            &params.weight_stats(),
+            &a_stats,
+            CalibMethod::MinMax,
+        )
+        .unwrap();
+        let (ms, b) = step_ms(&engine, arch, &nq, iters);
+        t.row(vec![
+            arch.into(),
+            "8w/8a quantized".into(),
+            format!("{ms:.1}"),
+            format!("{:.0}", b as f64 / (ms / 1e3)),
+        ]);
+        // integer engine inference
+        let net =
+            FixedPointNet::build(&spec, &params, &nq, QFormat::new(16, 14).unwrap())
+                .unwrap();
+        let imgs = data.images.gather_rows(&(0..64).collect::<Vec<_>>()).unwrap();
+        let s = bench(&format!("{arch} int fwd"), 1, 5, || {
+            std::hint::black_box(net.forward_batch(&imgs).unwrap());
+        });
+        t.row(vec![
+            arch.into(),
+            "integer engine fwd".into(),
+            format!("{:.1}", s.mean_ms / 64.0),
+            format!("{:.0}", 64.0 / (s.mean_ms / 1e3)),
+        ]);
+    }
+    println!("{}", t.render());
+    std::fs::create_dir_all("results").unwrap();
+    std::fs::write("results/e2e_throughput.txt", t.render()).unwrap();
+}

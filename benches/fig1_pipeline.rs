@@ -1,0 +1,84 @@
+//! Regenerates **Figure 1**: the three-step fixed-point pipeline
+//! (multiply -> wide accumulate -> round/truncate), demonstrated
+//! bit-exactly on the integer engine and micro-benchmarked step by step.
+
+use fxpnet::bench::{bench, Table};
+use fxpnet::fixedpoint::value::WideAcc;
+use fxpnet::fixedpoint::{Fx, QFormat, RoundMode};
+use fxpnet::inference::ops;
+use fxpnet::util::rng::Rng;
+
+fn main() {
+    // ---- the worked pipeline (paper Figure 1, 8-bit operands) -----------
+    let fmt8 = QFormat::new(8, 4).unwrap();
+    let w = Fx::from_f32(1.1875, fmt8, RoundMode::NearestHalfUp, None);
+    let g = Fx::from_f32(-0.8125, fmt8, RoundMode::NearestHalfUp, None);
+    let prod = w.wide_mul(&g); // step 1: 8b x 8b -> 16b
+    let mut acc = WideAcc::zero(prod.frac); // step 2: wide accumulator
+    for _ in 0..64 {
+        acc.add(prod);
+    }
+    acc.add_f32(0.5);
+    let out = acc.requantize(fmt8, RoundMode::NearestHalfUp, None); // step 3
+    let mut t = Table::new(
+        "Figure 1: w * g(a) pipeline, 8-bit operands, 64-term dot product",
+        &["step", "value", "representation"],
+    );
+    t.row(vec![
+        "operand w".into(),
+        format!("{}", w.to_f32()),
+        format!("code {} in {}", w.code, w.fmt),
+    ]);
+    t.row(vec![
+        "operand g(a)".into(),
+        format!("{}", g.to_f32()),
+        format!("code {} in {}", g.code, g.fmt),
+    ]);
+    t.row(vec![
+        "1: multiply".into(),
+        format!("{}", prod.to_f64()),
+        format!("code {} @ frac {}  (16-bit product)", prod.acc, prod.frac),
+    ]);
+    t.row(vec![
+        "2: accumulate x64 + bias".into(),
+        format!("{}", acc.to_f64()),
+        format!("code {} @ frac {}  (wide accumulator)", acc.acc, acc.frac),
+    ]);
+    t.row(vec![
+        "3: round/truncate".into(),
+        format!("{}", out.to_f32()),
+        format!("code {} in {}  (saturated)", out.code, out.fmt),
+    ]);
+    println!("{}", t.render());
+
+    // ---- microbench: per-step cost at layer scale ------------------------
+    let mut rng = Rng::new(1);
+    let n = 64 * 64; // one conv plane
+    let cin = 32;
+    let cout = 32;
+    let xs: Vec<f32> = (0..n * cin).map(|_| rng.normal() as f32).collect();
+    let ws: Vec<f32> = (0..9 * cin * cout).map(|_| rng.normal() as f32 * 0.1).collect();
+    let x_codes = ops::encode(&xs, fmt8);
+    let w_codes = ops::encode(&ws, fmt8);
+    let bias = vec![0.01f32; cout];
+
+    let s_enc = bench("step0 encode 128k f32 -> codes", 2, 10, || {
+        std::hint::black_box(ops::encode(&xs, fmt8));
+    });
+    let mut acc_out: Vec<i64> = Vec::new();
+    let s_conv = bench("step1+2 conv3x3 64x64x32->32 (i64 acc)", 1, 5, || {
+        acc_out = ops::conv3x3_acc(&x_codes, 64, 64, cin, &w_codes, cout, &bias, 8);
+        std::hint::black_box(&acc_out);
+    });
+    let s_req = bench("step3 requant+relu 128k accumulators", 2, 10, || {
+        std::hint::black_box(ops::requant_relu(&acc_out, 8, fmt8, true));
+    });
+    println!("{s_enc}");
+    println!("{s_conv}");
+    println!("{s_req}");
+    let macs = 64.0 * 64.0 * 9.0 * cin as f64 * cout as f64;
+    println!(
+        "conv throughput: {:.1} MMAC/s (integer path, single thread)",
+        macs / (s_conv.mean_ms / 1e3) / 1e6
+    );
+}

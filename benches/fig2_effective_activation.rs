@@ -1,0 +1,62 @@
+//! Regenerates **Figure 2**: the presumed (smooth) vs effective
+//! (staircase) ReLU of a fixed-point layer, as plottable series plus an
+//! ASCII rendering.  Writes results/fig2_effective_activation.csv.
+
+use fxpnet::fixedpoint::vector::effective_relu_curve;
+use fxpnet::fixedpoint::QFormat;
+
+fn main() {
+    let fmt = QFormat::new(4, 1).unwrap(); // 4-bit, step 0.5: a visible staircase
+    let curve = effective_relu_curve(fmt, -1.0, 4.0, 101);
+
+    // CSV for plotting (x, effective, presumed)
+    std::fs::create_dir_all("results").unwrap();
+    let mut csv = String::from("x,effective,presumed\n");
+    for &(x, e, p) in &curve {
+        csv.push_str(&format!("{x:.4},{e:.4},{p:.4}\n"));
+    }
+    std::fs::write("results/fig2_effective_activation.csv", &csv).unwrap();
+
+    println!("Figure 2: presumed ReLU (.) vs effective fixed-point ReLU (#), {fmt}");
+    // ASCII plot: y from 0..3.5 in steps, x across the curve
+    let rows = 15;
+    let ymax = 3.5f32;
+    for r in (0..=rows).rev() {
+        let y = ymax * r as f32 / rows as f32;
+        let mut line = format!("{y:>5.2} |");
+        for &(_, e, p) in curve.iter().step_by(1) {
+            let de = (e - y).abs();
+            let dp = (p - y).abs();
+            let tol = ymax / rows as f32 / 2.0;
+            line.push(if de <= tol {
+                '#'
+            } else if dp <= tol {
+                '.'
+            } else {
+                ' '
+            });
+        }
+        println!("{line}");
+    }
+    println!("      +{}", "-".repeat(curve.len()));
+    println!("       x in [-1, 4]   (# = staircase the network actually computes,");
+    println!("                       . = smooth ReLU the backward pass presumes)");
+    println!();
+    let n_levels = {
+        let mut lv: Vec<i64> = curve.iter().map(|&(_, e, _)| (e / fmt.step()) as i64).collect();
+        lv.sort();
+        lv.dedup();
+        lv.len()
+    };
+    let max_gap = curve
+        .iter()
+        .map(|&(_, e, p)| (e - p).abs())
+        .fold(0f32, f32::max);
+    println!(
+        "levels: {n_levels} (4-bit positive codes), max |effective - presumed| = {max_gap} \
+         (rounding contributes step/2 = {}; saturation above max_value {} the rest)",
+        fmt.step() / 2.0,
+        fmt.max_value()
+    );
+    println!("wrote results/fig2_effective_activation.csv");
+}

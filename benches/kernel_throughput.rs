@@ -1,0 +1,78 @@
+//! L1/L3 kernel microbenches (the section Perf baseline numbers):
+//! host-side quantizer throughput, Tensor<->Literal conversion cost, and
+//! AOT executable latency for eval/stats on the tiny net.
+
+use fxpnet::bench::bench;
+use fxpnet::data::synth::Dataset;
+use fxpnet::fixedpoint::vector::quantize_slice;
+use fxpnet::fixedpoint::{QFormat, RoundMode};
+use fxpnet::model::params::ParamSet;
+use fxpnet::quant::policy::NetQuant;
+use fxpnet::runtime::literal::{to_literal, HostValue};
+use fxpnet::runtime::Engine;
+use fxpnet::tensor::Tensor;
+use fxpnet::util::rng::Rng;
+
+fn main() {
+    fxpnet::util::logging::init();
+    let fmt = QFormat::new(8, 4).unwrap();
+    let mut rng = Rng::new(3);
+    let n = 1 << 20;
+    let xs: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+
+    // host quantizer (the L3 twin of the L1 Pallas kernel)
+    let mut buf = xs.clone();
+    let s = bench("quantize_slice 1M f32 (nearest)", 3, 20, || {
+        buf.copy_from_slice(&xs);
+        quantize_slice(&mut buf, fmt, RoundMode::NearestHalfUp, None);
+        std::hint::black_box(&buf);
+    });
+    println!("{s}  -> {:.1} Melem/s", s.throughput(n as f64) / 1e6);
+
+    let mut srng = Rng::new(4);
+    let s = bench("quantize_slice 1M f32 (stochastic)", 3, 10, || {
+        buf.copy_from_slice(&xs);
+        quantize_slice(&mut buf, fmt, RoundMode::Stochastic, Some(&mut srng));
+        std::hint::black_box(&buf);
+    });
+    println!("{s}  -> {:.1} Melem/s", s.throughput(n as f64) / 1e6);
+
+    // Tensor -> Literal conversion (per-step host boundary cost)
+    let t = Tensor::from_vec(&[64, 32, 32, 3], xs[..64 * 32 * 32 * 3].to_vec()).unwrap();
+    let hv = HostValue::F32(t);
+    let s = bench("to_literal 64x32x32x3 batch", 3, 50, || {
+        std::hint::black_box(to_literal(&hv).unwrap());
+    });
+    println!("{s}");
+
+    // AOT executable latency (tiny arch)
+    let artifacts = std::env::var("FXPNET_ARTIFACTS").unwrap_or("artifacts".into());
+    let engine = Engine::cpu(&artifacts).expect("run `make artifacts` first");
+    let spec = engine.manifest.arch("tiny").unwrap().clone();
+    let params = ParamSet::init(&spec, 1);
+    let data = Dataset::generate(spec.eval_batch, spec.input[0], spec.input[1], 5);
+    let nq = NetQuant::all_float(spec.num_layers);
+    let exe = engine.executable("tiny", "eval_batch").unwrap();
+    let v = nq.vectors();
+    let mk = |x: &[f32]| to_literal(&HostValue::F32(Tensor::from_vec(&[x.len()], x.to_vec()).unwrap())).unwrap();
+    let cfg = [
+        mk(&v.w_step), mk(&v.w_lo), mk(&v.w_hi), mk(&v.w_en),
+        mk(&v.a_step), mk(&v.a_lo), mk(&v.a_hi), mk(&v.a_en),
+    ];
+    let plits: Vec<xla::Literal> = params
+        .tensors
+        .iter()
+        .map(|t| to_literal(&HostValue::F32(t.clone())).unwrap())
+        .collect();
+    let x = to_literal(&HostValue::F32(data.images.clone())).unwrap();
+    let y = to_literal(&HostValue::I32(data.labels.clone())).unwrap();
+    let s = bench("tiny eval_batch executable (32 imgs)", 3, 30, || {
+        let mut inputs: Vec<&xla::Literal> = Vec::new();
+        inputs.extend(plits.iter());
+        inputs.push(&x);
+        inputs.push(&y);
+        inputs.extend(cfg.iter());
+        std::hint::black_box(exe.run_literals(&inputs).unwrap());
+    });
+    println!("{s}  -> {:.0} img/s", s.throughput(spec.eval_batch as f64));
+}

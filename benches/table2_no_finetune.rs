@@ -1,0 +1,25 @@
+//! Regenerates **Table 2**: error grid with *no fine-tuning* -- the
+//! pretrained float network is quantized per (weight width, activation
+//! width) cell and evaluated.
+//!
+//! Paper shape to expect: the Float/Float corner is best; 4-bit weights
+//! without fine-tuning are catastrophic (paper: ~97-99% on every 4-bit-
+//! weight cell); 4-bit activations degrade strongly; 8/8 loses a few
+//! points vs float.
+//!
+//! Scale via FXP_BENCH_* (see rust/src/bench/fixtures.rs).
+
+use fxpnet::bench::fixtures::bench_env;
+use fxpnet::coordinator::regimes::Regime;
+use fxpnet::coordinator::report;
+use fxpnet::util::timer::Stopwatch;
+
+fn main() {
+    let env = bench_env().expect("bench env (run `make artifacts` first)");
+    let mut runner = env.runner();
+    let sw = Stopwatch::start();
+    let grid = runner.run_grid(Regime::NoFinetune).expect("grid");
+    println!("{}", grid.render(env.cfg.topk));
+    println!("table 2 regenerated in {:.1}s", sw.elapsed().as_secs_f64());
+    report::save_grid(&grid, "results", env.cfg.topk).expect("save");
+}

@@ -1,0 +1,23 @@
+//! Regenerates **Table 3**: plain-vanilla fine-tuning under full
+//! quantization.  The paper's signature result is the `n/a` pattern:
+//! with fixed-point activations the deep network mostly *fails to
+//! converge* (divergence detector -> n/a), while the float-activation
+//! row fine-tunes fine -- low-precision weights are benign, low-precision
+//! activations are not.
+//!
+//! Scale via FXP_BENCH_* (see rust/src/bench/fixtures.rs).
+
+use fxpnet::bench::fixtures::bench_env;
+use fxpnet::coordinator::regimes::Regime;
+use fxpnet::coordinator::report;
+use fxpnet::util::timer::Stopwatch;
+
+fn main() {
+    let env = bench_env().expect("bench env (run `make artifacts` first)");
+    let mut runner = env.runner();
+    let sw = Stopwatch::start();
+    let grid = runner.run_grid(Regime::Vanilla).expect("grid");
+    println!("{}", grid.render(env.cfg.topk));
+    println!("table 3 regenerated in {:.1}s", sw.elapsed().as_secs_f64());
+    report::save_grid(&grid, "results", env.cfg.topk).expect("save");
+}

@@ -1,0 +1,25 @@
+//! Regenerates **Table 4** (Proposal 1): networks fine-tuned with the
+//! target *weight* precision but float activations, then run with
+//! fixed-point activations switched on post-hoc.
+//!
+//! Paper shape to expect: every cell beats its Table 2 counterpart
+//! (dramatically so for 4-bit weights), and loses modestly to the float-
+//! activation row -- no training instability anywhere because no training
+//! happens under quantized activations.
+//!
+//! Scale via FXP_BENCH_* (see rust/src/bench/fixtures.rs).
+
+use fxpnet::bench::fixtures::bench_env;
+use fxpnet::coordinator::regimes::Regime;
+use fxpnet::coordinator::report;
+use fxpnet::util::timer::Stopwatch;
+
+fn main() {
+    let env = bench_env().expect("bench env (run `make artifacts` first)");
+    let mut runner = env.runner();
+    let sw = Stopwatch::start();
+    let grid = runner.run_grid(Regime::Prop1).expect("grid");
+    println!("{}", grid.render(env.cfg.topk));
+    println!("table 4 regenerated in {:.1}s", sw.elapsed().as_secs_f64());
+    report::save_grid(&grid, "results", env.cfg.topk).expect("save");
+}

@@ -1,0 +1,21 @@
+//! Regenerates **Table 5** (Proposal 2): starting from the Proposal-1
+//! nets, fine-tune only the top fully-connected layer under full
+//! quantization.  The top layer's gradient has not accumulated mismatch,
+//! so this trains stably and buys a small improvement over Table 4.
+//!
+//! Scale via FXP_BENCH_* (see rust/src/bench/fixtures.rs).
+
+use fxpnet::bench::fixtures::bench_env;
+use fxpnet::coordinator::regimes::Regime;
+use fxpnet::coordinator::report;
+use fxpnet::util::timer::Stopwatch;
+
+fn main() {
+    let env = bench_env().expect("bench env (run `make artifacts` first)");
+    let mut runner = env.runner();
+    let sw = Stopwatch::start();
+    let grid = runner.run_grid(Regime::Prop2 { top_layers: 1 }).expect("grid");
+    println!("{}", grid.render(env.cfg.topk));
+    println!("table 5 regenerated in {:.1}s", sw.elapsed().as_secs_f64());
+    report::save_grid(&grid, "results", env.cfg.topk).expect("save");
+}

@@ -1,0 +1,25 @@
+//! Regenerates **Table 6** (Proposal 3): bottom-to-top iterative
+//! fine-tuning per the paper's Table 1 schedule, starting from the
+//! Proposal-1 nets.
+//!
+//! Paper shape to expect: the best fixed-point numbers of all five
+//! tables -- every cell trains stably (the gradient path never crosses a
+//! quantized activation), 4w/4a becomes usable, and some cells match or
+//! beat the float baseline (quantization noise as regularisation).
+//!
+//! Scale via FXP_BENCH_* (see rust/src/bench/fixtures.rs).
+
+use fxpnet::bench::fixtures::bench_env;
+use fxpnet::coordinator::regimes::Regime;
+use fxpnet::coordinator::report;
+use fxpnet::util::timer::Stopwatch;
+
+fn main() {
+    let env = bench_env().expect("bench env (run `make artifacts` first)");
+    let mut runner = env.runner();
+    let sw = Stopwatch::start();
+    let grid = runner.run_grid(Regime::Prop3).expect("grid");
+    println!("{}", grid.render(env.cfg.topk));
+    println!("table 6 regenerated in {:.1}s", sw.elapsed().as_secs_f64());
+    report::save_grid(&grid, "results", env.cfg.topk).expect("save");
+}

@@ -1,0 +1,83 @@
+//! Deployment path: run the pure-integer fixed-point engine (Figure 1
+//! semantics, i64 accumulators, no float in the layer loop) and check it
+//! against the XLA simulated-quantization path.
+//!
+//! ```sh
+//! cargo run --release --example fixedpoint_inference [ckpt]
+//! ```
+
+use fxpnet::coordinator::calibrate;
+use fxpnet::coordinator::trainer::{upd_all, Trainer};
+use fxpnet::data::loader::LoaderCfg;
+use fxpnet::data::synth::Dataset;
+use fxpnet::fixedpoint::QFormat;
+use fxpnet::inference::verify::parity_report;
+use fxpnet::inference::FixedPointNet;
+use fxpnet::model::checkpoint::Checkpoint;
+use fxpnet::model::params::ParamSet;
+use fxpnet::quant::calib::CalibMethod;
+use fxpnet::quant::policy::{NetQuant, WidthSpec};
+use fxpnet::runtime::Engine;
+use fxpnet::util::timer::Stopwatch;
+
+fn main() -> fxpnet::Result<()> {
+    fxpnet::util::logging::init();
+    let artifacts = std::env::var("FXPNET_ARTIFACTS").unwrap_or("artifacts".into());
+    let engine = Engine::cpu(&artifacts)?;
+    let arch = "shallow";
+    let spec = engine.manifest.arch(arch)?.clone();
+    let train = Dataset::generate(2048, spec.input[0], spec.input[1], 71);
+    let eval = Dataset::generate(512, spec.input[0], spec.input[1], 72);
+
+    let ckpt = std::env::args().nth(1);
+    let params = match ckpt {
+        Some(p) if std::path::Path::new(&p).exists() => {
+            println!("using checkpoint {p}");
+            Checkpoint::load(&p)?.params
+        }
+        _ => {
+            println!("pretraining shallow net (250 steps) ...");
+            let p = ParamSet::init(&spec, 17);
+            let nq = NetQuant::all_float(spec.num_layers);
+            let mut tr = Trainer::new(
+                &engine, arch, &p, &nq, &upd_all(spec.num_layers), 0.05, 0.9,
+                train.clone(),
+                LoaderCfg { batch: spec.train_batch, augment: true, max_shift: 2, seed: 8 },
+                30.0,
+            )?;
+            tr.run(250, 50)?;
+            tr.params()?
+        }
+    };
+
+    let calib = calibrate::activation_stats(&engine, arch, &params, &train, 3)?;
+    for &bits in &[16u8, 8, 4] {
+        let nq = NetQuant::for_cell(
+            WidthSpec::Bits(bits),
+            WidthSpec::Bits(bits),
+            &params.weight_stats(),
+            &calib.a_stats,
+            CalibMethod::SqnrGaussian,
+        )?;
+        let net = FixedPointNet::build(&spec, &params, &nq, QFormat::new(16, 14)?)?;
+        let sw = Stopwatch::start();
+        let int_logits = net.forward_batch(&eval.images)?;
+        let dt = sw.elapsed().as_secs_f64();
+        let top1 = int_logits.topk_rows(1)?;
+        let wrong = (0..eval.len())
+            .filter(|&i| top1[i][0] != eval.labels.data()[i] as usize)
+            .count();
+        let xla_logits = fxpnet::cli::commands::evaluate_logits(
+            &engine, arch, &params, &nq, &eval,
+        )?;
+        let parity = parity_report(&int_logits, &xla_logits)?;
+        println!(
+            "{bits:>2}w/{bits}a: {:.0} img/s ({:.1} MMAC/img)  top-1 err {:.2}%  \
+             parity[{parity}]",
+            eval.len() as f64 / dt,
+            net.macs_per_image() as f64 / 1e6,
+            100.0 * wrong as f64 / eval.len() as f64,
+        );
+    }
+    Ok(())
+}

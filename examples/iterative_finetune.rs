@@ -1,0 +1,110 @@
+//! Proposal 3 walk-through: watch the Table 1 schedule run phase by phase.
+//!
+//! Trains a float `shallow` net briefly, then fine-tunes it at 4-bit
+//! weights / 4-bit activations twice: once vanilla (all layers, fully
+//! quantized from step 0) and once with the bottom-to-top iterative
+//! schedule, printing the per-phase configuration and losses.  At 4 bits
+//! the vanilla run is expected to be unstable or clearly worse -- exactly
+//! the paper's motivation for the schedule.
+//!
+//! ```sh
+//! cargo run --release --example iterative_finetune
+//! ```
+
+use fxpnet::coordinator::calibrate;
+use fxpnet::coordinator::config::RunCfg;
+use fxpnet::coordinator::evaluator::evaluate;
+use fxpnet::coordinator::phases;
+use fxpnet::coordinator::regimes::{self, CellCtx};
+use fxpnet::coordinator::trainer::{upd_all, upd_single, Trainer};
+use fxpnet::data::loader::LoaderCfg;
+use fxpnet::data::synth::Dataset;
+use fxpnet::model::params::ParamSet;
+use fxpnet::quant::policy::{NetQuant, WidthSpec};
+use fxpnet::runtime::Engine;
+
+fn main() -> fxpnet::Result<()> {
+    fxpnet::util::logging::init();
+    let artifacts = std::env::var("FXPNET_ARTIFACTS").unwrap_or("artifacts".into());
+    let engine = Engine::cpu(&artifacts)?;
+    let arch = "shallow";
+    let spec = engine.manifest.arch(arch)?.clone();
+    let l = spec.num_layers;
+
+    let train = Dataset::generate(3072, spec.input[0], spec.input[1], 31);
+    let eval = Dataset::generate(768, spec.input[0], spec.input[1], 32);
+
+    // print the paper's Table 1 for this depth
+    println!("{}", phases::render_table1(l));
+
+    // float base
+    println!("pretraining float base (300 steps) ...");
+    let p0 = ParamSet::init(&spec, 9);
+    let nq_f = NetQuant::all_float(l);
+    let lcfg = LoaderCfg { batch: spec.train_batch, augment: true, max_shift: 2, seed: 5 };
+    let mut tr = Trainer::new(
+        &engine, arch, &p0, &nq_f, &upd_all(l), 0.05, 0.9, train.clone(),
+        lcfg.clone(), 30.0,
+    )?;
+    tr.run(300, 50)?;
+    let base = tr.params()?;
+    let ev_f = evaluate(&engine, arch, &base, &nq_f, &eval)?;
+    println!("float base: {ev_f}\n");
+
+    let cfg = RunCfg { finetune_steps: 120, phase_steps: 60, ..RunCfg::default() };
+    let calib = calibrate::activation_stats(&engine, arch, &base, &train, 3)?;
+    let ctx = CellCtx {
+        engine: &engine,
+        arch,
+        train_data: &train,
+        eval_data: &eval,
+        a_stats: &calib.a_stats,
+        cfg: &cfg,
+    };
+    let w = WidthSpec::Bits(4);
+    let a = WidthSpec::Bits(4);
+
+    // --- vanilla -----------------------------------------------------------
+    println!("vanilla 4w/4a fine-tuning ({} steps) ...", cfg.finetune_steps);
+    match regimes::run_vanilla(&ctx, &base, w, a)? {
+        Some(ev) => println!("vanilla result: {ev}\n"),
+        None => println!("vanilla result: n/a (diverged)\n"),
+    }
+
+    // --- Proposal 3, narrated ------------------------------------------------
+    println!("Proposal 3: float-activation seed net first ...");
+    let p1 = regimes::train_float_act_net(&ctx, &base, w)?.expect("seed diverged");
+    let full = ctx.resolve(&p1, w, a)?;
+    let mut tr = {
+        let p = phases::schedule(l)[0];
+        let nq = full.with_act_prefix(p.act_prefix);
+        Trainer::new(
+            &engine, arch, &p1, &nq, &upd_single(l, p.update_layer),
+            cfg.lr, cfg.momentum, train.clone(), lcfg, cfg.max_loss,
+        )?
+    };
+    for (i, p) in phases::schedule(l).iter().enumerate() {
+        if i > 0 {
+            let nq = full.with_act_prefix(p.act_prefix);
+            tr.set_config(&nq, &upd_single(l, p.update_layer), cfg.lr, cfg.momentum)?;
+            tr.reset_momenta()?;
+        }
+        let out = tr.run(cfg.phase_steps, 15)?;
+        let losses: Vec<String> =
+            out.history.iter().map(|(s, v)| format!("{s}:{v:.3}")).collect();
+        println!(
+            "  phase {}: acts[0..{}) fixed point, layer {} updating -> {}",
+            p.number,
+            p.act_prefix,
+            p.update_layer,
+            losses.join("  ")
+        );
+        assert!(!out.diverged, "phase {} diverged", p.number);
+    }
+    let tuned = tr.params()?;
+    let nq_eval = ctx.resolve(&tuned, w, a)?;
+    let ev = evaluate(&engine, arch, &tuned, &nq_eval, &eval)?;
+    println!("\nProposal 3 result: {ev}");
+    println!("float baseline   : {ev_f}");
+    Ok(())
+}

@@ -1,0 +1,70 @@
+//! Quickstart: the minimal end-to-end path through the library.
+//!
+//! Build artifacts once (`make artifacts`), then:
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Loads the AOT-compiled `tiny` network, trains it for a few dozen steps
+//! in float, calibrates fixed-point formats, and evaluates the same
+//! parameters at 8-bit weights / 8-bit activations -- all from Rust, with
+//! Python nowhere on the path.
+
+use fxpnet::coordinator::calibrate;
+use fxpnet::coordinator::evaluator::evaluate;
+use fxpnet::coordinator::trainer::{upd_all, Trainer};
+use fxpnet::data::loader::LoaderCfg;
+use fxpnet::data::synth::Dataset;
+use fxpnet::model::params::ParamSet;
+use fxpnet::quant::calib::CalibMethod;
+use fxpnet::quant::policy::{NetQuant, WidthSpec};
+use fxpnet::runtime::Engine;
+
+fn main() -> fxpnet::Result<()> {
+    fxpnet::util::logging::init();
+    let artifacts = std::env::var("FXPNET_ARTIFACTS").unwrap_or("artifacts".into());
+    let engine = Engine::cpu(&artifacts)?;
+    let arch = "tiny";
+    let spec = engine.manifest.arch(arch)?.clone();
+    println!(
+        "loaded arch '{arch}': {}x{}x{} input, {} weighted layers",
+        spec.input[0], spec.input[1], spec.input[2], spec.num_layers
+    );
+
+    // 1. data + init
+    let train = Dataset::generate(1024, spec.input[0], spec.input[1], 1);
+    let eval = Dataset::generate(256, spec.input[0], spec.input[1], 2);
+    let params = ParamSet::init(&spec, 42);
+    println!("initialised {} parameters", params.num_scalars());
+
+    // 2. a short float training run
+    let nq_float = NetQuant::all_float(spec.num_layers);
+    let mut tr = Trainer::new(
+        &engine, arch, &params, &nq_float, &upd_all(spec.num_layers),
+        0.05, 0.9, train.clone(),
+        LoaderCfg { batch: spec.train_batch, augment: false, max_shift: 0, seed: 1 },
+        30.0,
+    )?;
+    let out = tr.run(80, 10)?;
+    for (s, l) in &out.history {
+        println!("  step {s:>3}  loss {l:.4}");
+    }
+    let tuned = tr.params()?;
+
+    // 3. evaluate float vs 8w/8a fixed point
+    let ev_f = evaluate(&engine, arch, &tuned, &nq_float, &eval)?;
+    let calib = calibrate::activation_stats(&engine, arch, &tuned, &train, 2)?;
+    let nq_q = NetQuant::for_cell(
+        WidthSpec::Bits(8),
+        WidthSpec::Bits(8),
+        &tuned.weight_stats(),
+        &calib.a_stats,
+        CalibMethod::SqnrGaussian,
+    )?;
+    let ev_q = evaluate(&engine, arch, &tuned, &nq_q, &eval)?;
+    println!("float    : {ev_f}");
+    println!("8w/8a    : {ev_q}");
+    println!("formats  : {:?}", nq_q.acts.iter().map(|a| a.unwrap().to_string()).collect::<Vec<_>>());
+    Ok(())
+}

@@ -1,0 +1,161 @@
+"""AOT pipeline: lower every (arch x artifact-kind) to HLO **text** and
+write the JSON manifest the Rust runtime consumes.
+
+HLO text -- not ``.serialize()`` -- is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension
+0.5.1 (the version the published ``xla`` 0.1.6 crate binds) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly.  See /opt/xla-example/README.md.
+
+Run once at build time (``make artifacts``); Python never appears on the
+Rust request path.
+
+Usage:
+    python -m compile.aot [--out-dir ../artifacts] [--arch NAME ...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dtype_tag(sds) -> str:
+    return {jnp.float32.dtype: "f32", jnp.int32.dtype: "i32"}[sds.dtype]
+
+
+def _io_entry(name, sds):
+    return {"name": name, "shape": list(sds.shape), "dtype": _dtype_tag(sds)}
+
+
+def input_names(arch: str, kind: str):
+    """Ordered input names matching model.example_args (the Rust runtime
+    feeds literals in exactly this order)."""
+    pnames = [n for n, _ in model.param_shapes(arch)]
+    cfg_w = ["w_step", "w_lo", "w_hi", "w_en"]
+    cfg_a = ["a_step", "a_lo", "a_hi", "a_en"]
+    if kind == "train_step":
+        return (pnames + [f"m.{n}" for n in pnames] + ["x", "y"]
+                + cfg_w + cfg_a + ["upd", "lr", "mu"])
+    if kind == "eval_batch":
+        return pnames + ["x", "y"] + cfg_w + cfg_a
+    if kind == "stats_batch":
+        return pnames + ["x"] + cfg_w + cfg_a
+    if kind == "grads":
+        return pnames + ["x", "y"] + cfg_w + cfg_a
+    raise ValueError(kind)
+
+
+def output_names(arch: str, kind: str):
+    pnames = [n for n, _ in model.param_shapes(arch)]
+    if kind == "train_step":
+        return pnames + [f"m.{n}" for n in pnames] + ["loss"]
+    if kind == "eval_batch":
+        return ["logits", "loss_sum"]
+    if kind == "stats_batch":
+        return ["absmax", "meanabs", "meansq"]
+    if kind == "grads":
+        return ["loss"] + [f"g.{n}" for n in pnames]
+    raise ValueError(kind)
+
+
+def build_arch(arch: str, out_dir: str, kinds=model.ARTIFACT_KINDS):
+    """Lower all artifact kinds for ``arch``; returns its manifest dict."""
+    spec = model.ARCHS[arch]
+    entry = {
+        "input": list(spec["input"]),
+        "num_classes": model.NUM_CLASSES,
+        "num_layers": model.num_layers(arch),
+        "train_batch": spec["train_batch"],
+        "eval_batch": spec["eval_batch"],
+        "layers": [
+            {"kind": l[0], **({"out": l[1]} if len(l) > 1 else {})}
+            for l in spec["layers"]
+        ],
+        "params": [
+            {"name": n, "shape": list(s)} for n, s in model.param_shapes(arch)
+        ],
+        "artifacts": {},
+    }
+    for kind in kinds:
+        fn = model.make_fn(arch, kind)
+        args = model.example_args(arch, kind)
+        print(f"[aot] lowering {arch}/{kind} ({len(args)} inputs) ...",
+              flush=True)
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        fname = f"{arch}_{kind}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        names = input_names(arch, kind)
+        assert len(names) == len(args), (arch, kind, len(names), len(args))
+        # output shapes from the lowered signature
+        out_avals = lowered.out_info
+        flat = jax.tree_util.tree_leaves(out_avals)
+        onames = output_names(arch, kind)
+        assert len(onames) == len(flat), (arch, kind, len(onames), len(flat))
+        entry["artifacts"][kind] = {
+            "file": fname,
+            "inputs": [_io_entry(n, a) for n, a in zip(names, args)],
+            "outputs": [_io_entry(n, a) for n, a in zip(onames, flat)],
+        }
+        print(f"[aot]   wrote {fname}: {len(text)} chars", flush=True)
+    return entry
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    ap.add_argument("--arch", action="append", default=None,
+                    help="restrict to these architectures (default: all)")
+    ap.add_argument("--kind", action="append", default=None,
+                    help="restrict to these artifact kinds (default: all)")
+    ap.add_argument("--backend", default="pallas", choices=["pallas", "jnp"],
+                    help="kernel backend: the L1 Pallas kernels (default) or "
+                         "their pure-jnp twins (perf ablation; write to a "
+                         "separate --out-dir)")
+    args = ap.parse_args()
+    model.set_backend(args.backend)
+    archs = args.arch or list(model.ARCHS)
+    kinds = tuple(args.kind) if args.kind else model.ARTIFACT_KINDS
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {"version": 1, "archs": {}}
+    for arch in archs:
+        manifest["archs"][arch] = build_arch(arch, args.out_dir, kinds)
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    # merge with an existing manifest so partial rebuilds keep other archs
+    if os.path.exists(mpath) and (args.arch or args.kind):
+        with open(mpath) as f:
+            old = json.load(f)
+        merged = old.get("archs", {})
+        for k, v in manifest["archs"].items():
+            if args.kind and k in merged:
+                merged[k]["artifacts"].update(v["artifacts"])
+            else:
+                merged[k] = v
+        manifest["archs"] = merged
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {mpath}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

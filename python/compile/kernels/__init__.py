@@ -1,0 +1,17 @@
+"""L1 Pallas kernels for fxpnet.
+
+The compute hot-spot of the paper is the fixed-point quantizer: every
+weight tensor and every activation tensor in the network passes through
+it (Figure 1, step 3).  Two kernels:
+
+* :mod:`quantize`  -- elementwise fixed-point quantizer with runtime
+  step/clip parameters and nearest / stochastic rounding.
+* :mod:`qmatmul`   -- fused matmul + output re-quantization mirroring the
+  multiply -> wide-accumulate -> round/truncate pipeline of Figure 1.
+
+Both are lowered with ``interpret=True`` so the resulting HLO runs on the
+CPU PJRT client (real-TPU Mosaic lowering is compile-only in this image).
+Pure-jnp oracles live in :mod:`ref`; pytest + hypothesis compare them.
+"""
+
+from . import quantize, qmatmul, ref  # noqa: F401

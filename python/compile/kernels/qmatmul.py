@@ -1,0 +1,148 @@
+"""Pallas fused matmul + bias + output re-quantization (Figure 1, steps 1-3).
+
+The paper's arithmetic pipeline for one layer (eq. 1 + Figure 1) is:
+
+  step 1: multiply the (already fixed-point) operands,
+  step 2: accumulate in a register wider than the operand product
+          (bias is added into the same wide accumulator),
+  step 3: round/truncate the accumulator to the activation format.
+
+On TPU the wide accumulator is the MXU's f32 accumulation of the operand
+products; this kernel reproduces the structure exactly: a tiled
+``(M/bm, N/bn, K/bk)`` grid matmul accumulating in the f32 output tile,
+with bias-add and the output quantizer applied once, on the final K step.
+The quantization parameters (step/lo/hi/enable) are runtime tensors so a
+single compiled executable serves the whole experiment grid.
+
+Used by the L2 model for the fully-connected layers; conv layers use
+XLA's native convolution followed by the elementwise quantizer (DESIGN.md
+section 3).  Lowered with ``interpret=True`` on this image.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes.  (bm, bk) and (bk, bn) f32 tiles must fit VMEM
+# simultaneously with the (bm, bn) accumulator: 3 * 128^2 * 4B = 192 KiB,
+# far under the 16 MiB budget; 128 is also the MXU systolic dimension.
+BM = 128
+BN = 256
+BK = 512
+
+
+def _kernel(a_ref, b_ref, bias_ref, step_ref, lo_ref, hi_ref, en_ref, o_ref, *, nk: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # steps 1+2: multiply, accumulate wide (f32 accumulator tile)
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    # step 3: bias into the accumulator, then round/truncate once
+    @pl.when(k == nk - 1)
+    def _requant():
+        acc = o_ref[...] + bias_ref[...][None, :]
+        step = step_ref[0]
+        q = jnp.clip(jnp.floor(acc / step + 0.5), lo_ref[0], hi_ref[0]) * step
+        en = en_ref[0]
+        o_ref[...] = en * q + (1.0 - en) * acc
+
+
+def _pad_to(x, rows, cols):
+    pr = (-x.shape[0]) % rows
+    pc = (-x.shape[1]) % cols
+    if pr or pc:
+        x = jnp.pad(x, ((0, pr), (0, pc)))
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def qmatmul(a, b, bias, step, lo, hi, enable, *, bm: int = BM, bn: int = BN, bk: int = BK):
+    """``requant(a @ b + bias)`` with runtime quantization parameters.
+
+    a: (M, K) f32, b: (K, N) f32, bias: (N,) f32;
+    step/lo/hi/enable: (1,) f32 tensors.  ``enable`` in {0,1}: 0 bypasses
+    the output quantizer (float rows of the experiment grid).
+    Padding to tile multiples is handled here and stripped on return.
+    """
+    m, kdim = a.shape
+    k2, n = b.shape
+    assert kdim == k2, (a.shape, b.shape)
+    assert bias.shape == (n,), (bias.shape, n)
+    bm_, bn_, bk_ = min(bm, m), min(bn, n), min(bk, kdim)
+    a_p = _pad_to(a, bm_, bk_)
+    b_p = _pad_to(b, bk_, bn_)
+    bias_p = jnp.pad(bias, (0, b_p.shape[1] - n)) if b_p.shape[1] != n else bias
+    gm, gn, gk = a_p.shape[0] // bm_, b_p.shape[1] // bn_, a_p.shape[1] // bk_
+    out = pl.pallas_call(
+        functools.partial(_kernel, nk=gk),
+        grid=(gm, gn, gk),
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk_, bn_), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bn_,), lambda i, j, k: (j,)),
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((a_p.shape[0], b_p.shape[1]), jnp.float32),
+        interpret=True,
+    )(a_p, b_p, bias_p, step, lo, hi, enable)
+    return out[:m, :n]
+
+
+@jax.custom_vjp
+def qmatmul_ste_jnp(a, b, bias, step, lo, hi, enable):
+    """Pure-jnp twin of :func:`qmatmul_ste` (perf-ablation backend)."""
+    acc = jnp.matmul(a, b, preferred_element_type=jnp.float32) + bias[None, :]
+    q = jnp.clip(jnp.floor(acc / step + 0.5), lo, hi) * step
+    return enable * q + (1.0 - enable) * acc
+
+
+def _qmm_jnp_fwd(a, b, bias, step, lo, hi, enable):
+    return qmatmul_ste_jnp(a, b, bias, step, lo, hi, enable), (a, b)
+
+
+def _qmm_jnp_bwd(res, g):
+    a, b = res
+    ga = jnp.matmul(g, b.T, preferred_element_type=jnp.float32)
+    gb = jnp.matmul(a.T, g, preferred_element_type=jnp.float32)
+    return (ga, gb, jnp.sum(g, axis=0), None, None, None, None)
+
+
+qmatmul_ste_jnp.defvjp(_qmm_jnp_fwd, _qmm_jnp_bwd)
+
+
+@jax.custom_vjp
+def qmatmul_ste(a, b, bias, step, lo, hi, enable):
+    """STE wrapper: forward = fused quantized pipeline, backward = gradients
+    of the *float* ``a @ b + bias`` (the paper's presumed-gradient
+    semantics -- this is where the gradient mismatch physically enters).
+    custom_vjp because the Pallas call has no autodiff rule."""
+    return qmatmul(a, b, bias, step, lo, hi, enable)
+
+
+def _qmm_fwd(a, b, bias, step, lo, hi, enable):
+    return qmatmul_ste(a, b, bias, step, lo, hi, enable), (a, b)
+
+
+def _qmm_bwd(res, g):
+    a, b = res
+    ga = jnp.matmul(g, b.T, preferred_element_type=jnp.float32)
+    gb = jnp.matmul(a.T, g, preferred_element_type=jnp.float32)
+    gbias = jnp.sum(g, axis=0)
+    return (ga, gb, gbias, None, None, None, None)
+
+
+qmatmul_ste.defvjp(_qmm_fwd, _qmm_bwd)

@@ -1,0 +1,184 @@
+"""Pallas elementwise fixed-point quantizer (the paper's Figure 1, step 3).
+
+One kernel, two rounding modes:
+
+* ``mode="nearest"``    -- round-to-nearest (half up), the deterministic
+  quantizer used throughout the paper's experiments.
+* ``mode="stochastic"`` -- floor(x/step + u), u ~ U[0,1) from a
+  counter-based hash (seed is a runtime input), the Gupta et al. 2015
+  scheme the paper names as the complementary technique.
+
+All quantization *parameters* (step, qmin, qmax) are runtime tensors, so
+a single AOT-compiled executable serves every (bit-width, fractional
+length) cell of the experiment grid -- nothing is recompiled when the
+Rust coordinator sweeps formats.
+
+TPU mapping (DESIGN.md section 8): this is a VPU elementwise kernel; the
+BlockSpec tiles HBM->VMEM traffic in (BLOCK_ROWS x cols) slabs.  On this
+image it is lowered with ``interpret=True`` so the CPU PJRT client can
+execute the resulting HLO.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Upper bound on rows per grid step.  Chosen in the perf pass: large
+# enough that the interpret-mode grid loop is negligible, small enough
+# that a VMEM tile (BLOCK_ROWS x cols x 4B) stays well under the ~16 MiB
+# TPU budget for every tensor in the model (see EXPERIMENTS.md sec. Perf).
+BLOCK_ROWS = 16384
+
+
+def _pick_block(rows: int, block) -> int:
+    """Whole array when it is small; otherwise the configured tile."""
+    if block is None:
+        block = BLOCK_ROWS
+    return min(rows, block)
+
+
+def _mix32(h):
+    h = h ^ (h >> jnp.uint32(16))
+    h = h * jnp.uint32(0x85EBCA6B)
+    h = h ^ (h >> jnp.uint32(13))
+    h = h * jnp.uint32(0xC2B2AE35)
+    h = h ^ (h >> jnp.uint32(16))
+    return h
+
+
+def _kernel_nearest(x_ref, step_ref, lo_ref, hi_ref, o_ref):
+    x = x_ref[...]
+    step = step_ref[0]
+    inv = 1.0 / step
+    q = jnp.clip(jnp.floor(x * inv + 0.5), lo_ref[0], hi_ref[0])
+    o_ref[...] = q * step
+
+
+def _kernel_stochastic(x_ref, step_ref, lo_ref, hi_ref, seed_ref, o_ref, *, ncols):
+    i = pl.program_id(0)
+    x = x_ref[...]
+    step = step_ref[0]
+    inv = 1.0 / step
+    # Counter-based uniforms: global element index + seed -> U[0,1).
+    rows = x.shape[0]
+    base = (jnp.uint32(i) * jnp.uint32(rows * ncols)).astype(jnp.uint32)
+    idx = base + jax.lax.broadcasted_iota(jnp.uint32, x.shape, 0) * jnp.uint32(
+        ncols
+    ) + jax.lax.broadcasted_iota(jnp.uint32, x.shape, 1)
+    h = _mix32(idx * jnp.uint32(0x9E3779B9) + seed_ref[0].astype(jnp.uint32))
+    u = (h >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(1.0 / (1 << 24))
+    q = jnp.clip(jnp.floor(x * inv + u), lo_ref[0], hi_ref[0])
+    o_ref[...] = q * step
+
+
+def _pad_rows(x2d, block):
+    rows = x2d.shape[0]
+    pad = (-rows) % block
+    if pad:
+        x2d = jnp.pad(x2d, ((0, pad), (0, 0)))
+    return x2d, rows
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def quantize(x, step, lo, hi, *, block=None):
+    """Quantize ``x`` (any shape) to the fixed-point grid described by the
+    (1,)-shaped runtime tensors ``step``, ``lo``, ``hi`` with
+    round-to-nearest.  Returns a tensor of ``x``'s shape and dtype."""
+    shape = x.shape
+    x2d = x.reshape(-1, shape[-1]) if x.ndim >= 2 else x.reshape(-1, 1)
+    block = _pick_block(x2d.shape[0], block)
+    x2d, rows = _pad_rows(x2d, block)
+    ncols = x2d.shape[1]
+    grid = (x2d.shape[0] // block,)
+    out = pl.pallas_call(
+        _kernel_nearest,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, ncols), lambda i: (i, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec((block, ncols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x2d.shape, x.dtype),
+        interpret=True,
+    )(x2d, step, lo, hi)
+    return out[:rows].reshape(shape)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def quantize_stochastic(x, step, lo, hi, seed, *, block=None):
+    """Stochastic-rounding variant; ``seed`` is a (1,)-shaped uint32/int32
+    runtime tensor.  Same counter-based hash as ``ref.hash_uniform_ref``."""
+    shape = x.shape
+    x2d = x.reshape(-1, shape[-1]) if x.ndim >= 2 else x.reshape(-1, 1)
+    block = _pick_block(x2d.shape[0], block)
+    x2d, rows = _pad_rows(x2d, block)
+    ncols = x2d.shape[1]
+    grid = (x2d.shape[0] // block,)
+    out = pl.pallas_call(
+        functools.partial(_kernel_stochastic, ncols=ncols),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, ncols), lambda i: (i, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec((block, ncols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x2d.shape, x.dtype),
+        interpret=True,
+    )(x2d, step, lo, hi, seed)
+    return out[:rows].reshape(shape)
+
+
+@jax.custom_vjp
+def quantize_ste_jnp(x, step, lo, hi, enable):
+    """Pure-jnp twin of :func:`quantize_ste` (same semantics, no Pallas
+    call).  Selected by ``model.set_backend("jnp")`` for the perf ablation
+    in EXPERIMENTS.md section Perf: it quantifies what the interpret-mode
+    Pallas grid loops cost on CPU relative to XLA-native elementwise ops."""
+    q = jnp.clip(jnp.floor(x / step + 0.5), lo, hi) * step
+    return enable * q + (1.0 - enable) * x
+
+
+def _ste_jnp_fwd(x, step, lo, hi, enable):
+    return quantize_ste_jnp(x, step, lo, hi, enable), None
+
+
+def _ste_jnp_bwd(_, g):
+    return (g, None, None, None, None)
+
+
+quantize_ste_jnp.defvjp(_ste_jnp_fwd, _ste_jnp_bwd)
+
+
+@jax.custom_vjp
+def quantize_ste(x, step, lo, hi, enable):
+    """Straight-through-estimator wrapper used by the L2 model.
+
+    Forward: ``enable * q(x) + (1-enable) * x``  (enable is a (1,) 0/1
+    runtime tensor -- float rows of the grid bypass quantization without a
+    recompile).  Backward: identity w.r.t. ``x`` -- exactly the "presumed"
+    smooth gradient of the paper (Figure 2a), which is what creates the
+    gradient mismatch the paper analyses.  Implemented as a custom_vjp
+    because the Pallas call itself has no autodiff rule.
+    """
+    q = quantize(x, step, lo, hi)
+    return enable * q + (1.0 - enable) * x
+
+
+def _ste_fwd(x, step, lo, hi, enable):
+    return quantize_ste(x, step, lo, hi, enable), None
+
+
+def _ste_bwd(_, g):
+    return (g, None, None, None, None)
+
+
+quantize_ste.defvjp(_ste_fwd, _ste_bwd)

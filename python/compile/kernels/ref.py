@@ -1,0 +1,141 @@
+"""Pure-jnp oracles for the L1 kernels and the paper's arithmetic model.
+
+Everything here is the *specification*; the Pallas kernels must match it
+bit-for-bit (nearest rounding) or statistically (stochastic rounding).
+The Rust fixed-point library (rust/src/fixedpoint/) implements the same
+semantics over integers and is cross-checked in rust/tests/.
+
+Fixed-point model (Q-format, signed, saturating):
+    a value with bit-width ``B`` and fractional length ``FL`` covers the
+    integer grid  {-2^(B-1), ..., 2^(B-1)-1} * 2^-FL.
+
+    quantize(x) = clip(round(x / step), qmin, qmax) * step
+        step = 2^-FL,  qmin = -2^(B-1),  qmax = 2^(B-1) - 1
+
+Rounding modes:
+    * nearest    -- round half away from zero is what HW round-to-nearest
+                    usually means, but ``jnp.round`` is half-to-even; we
+                    standardise on floor(x + 0.5) (half up), matching the
+                    Rust engine.
+    * stochastic -- floor(x + u), u ~ U[0,1): unbiased, the Gupta et al.
+                    2015 scheme the paper names as complementary.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Q-format helpers
+# ---------------------------------------------------------------------------
+
+
+def qparams(bits: int, frac: int):
+    """(step, qmin, qmax) for a signed Q-format with ``bits`` total bits and
+    ``frac`` fractional bits.  ``frac`` may be negative or exceed ``bits``
+    (pure scaling); ``bits`` must be >= 2."""
+    if bits < 2:
+        raise ValueError(f"need >=2 bits for signed fixed point, got {bits}")
+    step = 2.0 ** (-frac)
+    qmin = -(2.0 ** (bits - 1))
+    qmax = 2.0 ** (bits - 1) - 1
+    return step, qmin, qmax
+
+
+def round_half_up(x):
+    """floor(x + 0.5): round-to-nearest, ties away from -inf (HW style)."""
+    return jnp.floor(x + 0.5)
+
+
+# ---------------------------------------------------------------------------
+# quantize oracle
+# ---------------------------------------------------------------------------
+
+
+def quantize_ref(x, step, qmin, qmax):
+    """Reference fixed-point quantizer (nearest rounding)."""
+    return jnp.clip(round_half_up(x / step), qmin, qmax) * step
+
+
+def quantize_bits_ref(x, bits: int, frac: int):
+    step, qmin, qmax = qparams(bits, frac)
+    return quantize_ref(x, step, qmin, qmax)
+
+
+def quantize_stochastic_ref(x, step, qmin, qmax, u):
+    """Stochastic rounding with externally supplied uniforms ``u`` in [0,1)."""
+    return jnp.clip(jnp.floor(x / step + u), qmin, qmax) * step
+
+
+# ---------------------------------------------------------------------------
+# counter-based uniform generator (shared spec with the Pallas kernel)
+# ---------------------------------------------------------------------------
+
+
+def _mix32(h):
+    """finalizer of MurmurHash3 over uint32 -- cheap, well-mixed."""
+    h = jnp.uint32(h)
+    h = h ^ (h >> jnp.uint32(16))
+    h = h * jnp.uint32(0x85EBCA6B)
+    h = h ^ (h >> jnp.uint32(13))
+    h = h * jnp.uint32(0xC2B2AE35)
+    h = h ^ (h >> jnp.uint32(16))
+    return h
+
+
+def hash_uniform_ref(counters, seed):
+    """U[0,1) from uint32 counters + uint32 seed (counter-based PRNG).
+
+    The same function is evaluated inside the Pallas kernel so stochastic
+    rounding is reproducible across the oracle, the kernel, and (with the
+    same integer math) the Rust engine.
+    """
+    counters = jnp.asarray(counters, jnp.uint32)
+    seed = jnp.uint32(seed)
+    h = _mix32(counters * jnp.uint32(0x9E3779B9) + seed)
+    # 24 high bits -> [0,1) with f32-exact spacing
+    return (h >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(1.0 / (1 << 24))
+
+
+# ---------------------------------------------------------------------------
+# fused quantized matmul oracle (Figure 1 steps 1-3)
+# ---------------------------------------------------------------------------
+
+
+def qmatmul_ref(a, b, step, qmin, qmax, enable=1.0):
+    """C = requant(A @ B): multiply (step 1), wide accumulate (step 2 -- f32
+    here stands in for the >=32-bit accumulator), round/truncate (step 3).
+    ``enable`` in {0,1} bypasses the output quantizer when 0 (float rows of
+    the experiment grid reuse the same compiled executable)."""
+    acc = jnp.matmul(a, b, preferred_element_type=jnp.float32)
+    q = quantize_ref(acc, step, qmin, qmax)
+    return enable * q + (1.0 - enable) * acc
+
+
+# ---------------------------------------------------------------------------
+# the paper's Figure 2: presumed vs effective activation function
+# ---------------------------------------------------------------------------
+
+
+def effective_relu_ref(x, bits: int, frac: int):
+    """The *effective* activation function of a fixed-point layer
+    (Figure 2b): ReLU followed by the output quantization step."""
+    step, qmin, qmax = qparams(bits, frac)
+    return quantize_ref(jnp.maximum(x, 0.0), step, qmin, qmax)
+
+
+def presumed_relu_ref(x):
+    """What the backward pass assumes (Figure 2a)."""
+    return jnp.maximum(x, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# numpy twins (used by tests that want no jax tracing)
+# ---------------------------------------------------------------------------
+
+
+def quantize_np(x, bits: int, frac: int):
+    step, qmin, qmax = qparams(bits, frac)
+    return np.clip(np.floor(np.asarray(x) / step + 0.5), qmin, qmax) * step

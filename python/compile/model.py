@@ -1,0 +1,422 @@
+"""L2: quantization-aware CNN forward/backward in JAX (build-time only).
+
+Implements the paper's simulated fixed-point network:
+
+* master weights are float; the forward pass sees ``q(w)`` (per-layer
+  runtime format) -- the paper: "weights can follow the desired fixed
+  point format without special treatment";
+* each layer's **pre-activation** is quantized (Figure 1 step 3 -- for FC
+  layers via the fused L1 ``qmatmul`` kernel, for conv layers via XLA's
+  convolution + the L1 elementwise quantizer), then ReLU is applied, so
+  the *effective* activation function is the staircase of Figure 2(b);
+* the backward pass uses the straight-through estimator: gradients of the
+  smooth float graph (Figure 2(a)).  The disagreement between the two is
+  exactly the paper's "gradient mismatch", physically present in every
+  fine-tuning run this library performs.
+
+Everything the experiments vary is a **runtime input** (per-layer
+quantization step/clip/enable vectors, per-layer update masks, learning
+rate, momentum), so each architecture compiles to just four executables
+(train_step / eval_batch / stats_batch / grads); the Rust coordinator
+drives the whole experiment grid -- including the Table 1 phase schedule
+of Proposal 3 -- as pure data.
+
+Conventions
+-----------
+* images: NHWC f32; labels: int32 class ids.
+* ``params``: flat list [w0, b0, w1, b1, ...] in layer order; conv w is
+  HWIO, fc w is (in, out).
+* quant config vectors: shape (L,) f32 -- ``a_step/a_lo/a_hi/a_en`` for
+  pre-activations, ``w_step/w_lo/w_hi/w_en`` for weights, ``upd`` for the
+  per-layer update mask; scalars ``lr``, ``mu`` are shape (1,).
+* biases are kept in the wide-accumulator precision (not quantized),
+  matching the hardware model of Figure 1.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import quantize as qz
+from .kernels import qmatmul as qm
+
+# Kernel backend: "pallas" (default; the L1 kernels, interpret-lowered)
+# or "jnp" (pure-jnp twins) -- the EXPERIMENTS.md section Perf ablation.
+_BACKEND = "pallas"
+
+
+def set_backend(name: str) -> None:
+    global _BACKEND
+    if name not in ("pallas", "jnp"):
+        raise ValueError(f"unknown backend {name!r}")
+    _BACKEND = name
+
+
+def _quantize_ste(*args):
+    fn = qz.quantize_ste if _BACKEND == "pallas" else qz.quantize_ste_jnp
+    return fn(*args)
+
+
+def _qmatmul_ste(*args):
+    fn = qm.qmatmul_ste if _BACKEND == "pallas" else qm.qmatmul_ste_jnp
+    return fn(*args)
+
+# ---------------------------------------------------------------------------
+# architecture registry
+# ---------------------------------------------------------------------------
+
+# Layer kinds: ("conv", out_ch) 3x3 SAME stride 1; "pool" 2x2 max;
+# ("fc", out). The first fc flattens. L counts weighted layers only.
+ARCHS: Dict[str, Dict[str, Any]] = {
+    # Deep net standing in for the paper's 12-conv + 5-fc ImageNet DCN:
+    # 8 conv + 3 fc = 11 weighted layers on 32x32x3 inputs (DESIGN.md sec.2).
+    "paper12": {
+        "input": (32, 32, 3),
+        "layers": [
+            ("conv", 32), ("conv", 32), ("pool",),
+            ("conv", 48), ("conv", 48), ("pool",),
+            ("conv", 64), ("conv", 64), ("pool",),
+            ("conv", 96), ("conv", 96),
+            ("fc", 256), ("fc", 128), ("fc", 10),
+        ],
+        "train_batch": 64,
+        "eval_batch": 128,
+    },
+    # Shallow contrast net (the paper: shallow nets fine-tune fine even at
+    # small bit-widths -- cf. their CIFAR-10 remark in section 3).
+    "shallow": {
+        "input": (32, 32, 3),
+        "layers": [
+            ("conv", 32), ("pool",),
+            ("conv", 64), ("pool",),
+            ("fc", 128), ("fc", 10),
+        ],
+        "train_batch": 64,
+        "eval_batch": 128,
+    },
+    # Test/bench architecture: small and fast.
+    "tiny": {
+        "input": (16, 16, 3),
+        "layers": [
+            ("conv", 8), ("pool",),
+            ("conv", 16), ("pool",),
+            ("fc", 10),
+        ],
+        "train_batch": 16,
+        "eval_batch": 32,
+    },
+}
+
+NUM_CLASSES = 10
+
+
+def weighted_layers(arch: str) -> List[Tuple[str, int]]:
+    """[(kind, out_dim)] for layers that carry parameters, in order."""
+    return [l for l in ARCHS[arch]["layers"] if l[0] != "pool"]
+
+
+def num_layers(arch: str) -> int:
+    return len(weighted_layers(arch))
+
+
+def param_shapes(arch: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Ordered [(name, shape)] of the flat parameter list."""
+    spec = ARCHS[arch]
+    h, w, c = spec["input"]
+    shapes: List[Tuple[str, Tuple[int, ...]]] = []
+    li = 0
+    flat_dim = None
+    for layer in spec["layers"]:
+        kind = layer[0]
+        if kind == "conv":
+            out = layer[1]
+            shapes.append((f"l{li}.w", (3, 3, c, out)))
+            shapes.append((f"l{li}.b", (out,)))
+            c = out
+            li += 1
+        elif kind == "pool":
+            h //= 2
+            w //= 2
+        elif kind == "fc":
+            out = layer[1]
+            if flat_dim is None:
+                flat_dim = h * w * c
+                in_dim = flat_dim
+            else:
+                in_dim = prev_out
+            shapes.append((f"l{li}.w", (in_dim, out)))
+            shapes.append((f"l{li}.b", (out,)))
+            prev_out = out
+            li += 1
+        else:
+            raise ValueError(kind)
+    return shapes
+
+
+def init_params(arch: str, seed: int = 0) -> List[np.ndarray]:
+    """He-normal initialisation (numpy; used by pytest -- the Rust side has
+    its own initialiser with identical semantics in tensor/init.rs)."""
+    rng = np.random.RandomState(seed)
+    out = []
+    for name, shape in param_shapes(arch):
+        if name.endswith(".b"):
+            out.append(np.zeros(shape, np.float32))
+        else:
+            fan_in = int(np.prod(shape[:-1]))
+            std = np.sqrt(2.0 / fan_in)
+            out.append((rng.randn(*shape) * std).astype(np.float32))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# forward pass
+# ---------------------------------------------------------------------------
+
+
+def _slice1(v, i: int):
+    """(1,)-shaped runtime scalar from a (L,) config vector, static index."""
+    return jax.lax.dynamic_slice_in_dim(v, i, 1)
+
+
+def _max_pool(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def forward(
+    arch: str,
+    params: List[jax.Array],
+    x: jax.Array,
+    wq,  # (w_step, w_lo, w_hi, w_en)   each (L,)
+    aq,  # (a_step, a_lo, a_hi, a_en)   each (L,)
+    collect_stats: bool = False,
+):
+    """Quantized forward pass.
+
+    Returns ``logits`` or, when ``collect_stats``, ``(logits, stats)``
+    where stats is a dict of three (L,) vectors over **pre-activations**
+    (absmax, mean-abs, mean-square) feeding the Rust-side calibration.
+    """
+    spec = ARCHS[arch]
+    w_step, w_lo, w_hi, w_en = wq
+    a_step, a_lo, a_hi, a_en = aq
+    li = 0
+    pi = 0
+    absmax, meanabs, meansq = [], [], []
+    h = x
+    nw = num_layers(arch)
+    for layer in spec["layers"]:
+        kind = layer[0]
+        if kind == "pool":
+            h = _max_pool(h)
+            continue
+        w, b = params[pi], params[pi + 1]
+        pi += 2
+        w_q = _quantize_ste(w, _slice1(w_step, li), _slice1(w_lo, li),
+                            _slice1(w_hi, li), _slice1(w_en, li))
+        if kind == "conv":
+            z_f = jax.lax.conv_general_dilated(
+                h, w_q, (1, 1), "SAME",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            ) + b[None, None, None, :]
+            # Figure 1 step 3 on the pre-activation (STE backward).
+            z = _quantize_ste(z_f, _slice1(a_step, li), _slice1(a_lo, li),
+                              _slice1(a_hi, li), _slice1(a_en, li))
+        else:  # fc
+            if h.ndim == 4:
+                h = h.reshape(h.shape[0], -1)
+            z = _qmatmul_ste(h, w_q, b, _slice1(a_step, li),
+                             _slice1(a_lo, li), _slice1(a_hi, li),
+                             _slice1(a_en, li))
+            z_f = z  # stats want the accumulator value; STE fwd ~ quantized,
+            # but absmax of the quantized value differs from float by <= step,
+            # irrelevant for range calibration.
+        if collect_stats:
+            absmax.append(jnp.max(jnp.abs(z_f)))
+            meanabs.append(jnp.mean(jnp.abs(z_f)))
+            meansq.append(jnp.mean(z_f * z_f))
+        # hidden layers: ReLU; final layer: logits pass through.
+        if li < nw - 1:
+            h = jnp.maximum(z, 0.0)
+        else:
+            h = z
+        li += 1
+    logits = h
+    if collect_stats:
+        stats = {
+            "absmax": jnp.stack(absmax),
+            "meanabs": jnp.stack(meanabs),
+            "meansq": jnp.stack(meansq),
+        }
+        return logits, stats
+    return logits
+
+
+def loss_fn(arch, params, x, y, wq, aq):
+    logits = forward(arch, params, x, wq, aq)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[:, None], axis=-1)[:, 0]
+    return jnp.mean(nll)
+
+
+# ---------------------------------------------------------------------------
+# the four AOT entry points
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(arch: str):
+    """(params..., momenta..., x, y, wq(4), aq(4), upd, lr, mu)
+       -> (params'..., momenta'..., loss)
+
+    SGD with momentum, masked per layer:
+        v' = upd_l * (mu * v + g) + (1 - upd_l) * v
+        p' = p - lr * upd_l * v'
+    ``upd`` implements Proposal 2 (top layers only) and each phase of
+    Proposal 3 (exactly one layer) without recompilation.
+    """
+    npar = 2 * num_layers(arch)
+
+    def train_step(*args):
+        params = list(args[:npar])
+        momenta = list(args[npar:2 * npar])
+        x, y = args[2 * npar], args[2 * npar + 1]
+        wq = args[2 * npar + 2:2 * npar + 6]
+        aq = args[2 * npar + 6:2 * npar + 10]
+        upd = args[2 * npar + 10]
+        lr = args[2 * npar + 11]
+        mu = args[2 * npar + 12]
+
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(arch, p, x, y, wq, aq)
+        )(params)
+
+        new_p, new_v = [], []
+        for i, (p, v, g) in enumerate(zip(params, momenta, grads)):
+            u = _slice1(upd, i // 2)[0]
+            v2 = u * (mu[0] * v + g) + (1.0 - u) * v
+            p2 = p - lr[0] * u * v2
+            new_p.append(p2)
+            new_v.append(v2)
+        return tuple(new_p) + tuple(new_v) + (loss,)
+
+    return train_step
+
+
+def make_eval_batch(arch: str):
+    """(params..., x, y, wq(4), aq(4)) -> (logits, loss_sum)"""
+    npar = 2 * num_layers(arch)
+
+    def eval_batch(*args):
+        params = list(args[:npar])
+        x, y = args[npar], args[npar + 1]
+        wq = args[npar + 2:npar + 6]
+        aq = args[npar + 6:npar + 10]
+        logits = forward(arch, params, x, wq, aq)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, y[:, None], axis=-1)[:, 0]
+        return (logits, jnp.sum(nll))
+
+    return eval_batch
+
+
+def make_stats_batch(arch: str):
+    """(params..., x, wq(4), aq(4)) -> (absmax, meanabs, meansq) each (L,).
+
+    Run with quantization disabled (en = 0) on the pretrained float net to
+    calibrate activation formats; wq/aq stay inputs so calibration can also
+    be re-run mid-regime (e.g. after Proposal 3 phases) if desired.
+    """
+    npar = 2 * num_layers(arch)
+
+    def stats_batch(*args):
+        params = list(args[:npar])
+        x = args[npar]
+        wq = args[npar + 1:npar + 5]
+        aq = args[npar + 5:npar + 9]
+        _, stats = forward(arch, params, x, wq, aq, collect_stats=True)
+        return (stats["absmax"], stats["meanabs"], stats["meansq"])
+
+    return stats_batch
+
+
+def make_grads(arch: str):
+    """(params..., x, y, wq(4), aq(4)) -> (loss, grads...)
+
+    Gradients of the quantized(-STE) graph; the gradient-mismatch analysis
+    (DESIGN.md experiment index, section 2.2 claim) compares these against
+    the same executable run with all enables = 0 (pure float path).
+    """
+    npar = 2 * num_layers(arch)
+
+    def grads_fn(*args):
+        params = list(args[:npar])
+        x, y = args[npar], args[npar + 1]
+        wq = args[npar + 2:npar + 6]
+        aq = args[npar + 6:npar + 10]
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(arch, p, x, y, wq, aq)
+        )(params)
+        return (loss,) + tuple(grads)
+
+    return grads_fn
+
+
+# ---------------------------------------------------------------------------
+# example-argument builders (shapes for jax.jit(...).lower)
+# ---------------------------------------------------------------------------
+
+
+def _f32(shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+def _i32(shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.int32)
+
+
+def example_args(arch: str, kind: str):
+    """ShapeDtypeStructs for lowering artifact ``kind`` of ``arch``."""
+    spec = ARCHS[arch]
+    L = num_layers(arch)
+    pshapes = [_f32(s) for _, s in param_shapes(arch)]
+    cfgL = [_f32((L,))] * 4
+    upd = _f32((L,))
+    s1 = _f32((1,))
+    if kind == "train_step":
+        b = spec["train_batch"]
+        x = _f32((b,) + tuple(spec["input"]))
+        y = _i32((b,))
+        return (*pshapes, *pshapes, x, y, *cfgL, *cfgL, upd, s1, s1)
+    if kind == "eval_batch":
+        b = spec["eval_batch"]
+        x = _f32((b,) + tuple(spec["input"]))
+        y = _i32((b,))
+        return (*pshapes, x, y, *cfgL, *cfgL)
+    if kind == "stats_batch":
+        b = spec["eval_batch"]
+        x = _f32((b,) + tuple(spec["input"]))
+        return (*pshapes, x, *cfgL, *cfgL)
+    if kind == "grads":
+        b = spec["train_batch"]
+        x = _f32((b,) + tuple(spec["input"]))
+        y = _i32((b,))
+        return (*pshapes, x, y, *cfgL, *cfgL)
+    raise ValueError(kind)
+
+
+ARTIFACT_KINDS = ("train_step", "eval_batch", "stats_batch", "grads")
+
+
+def make_fn(arch: str, kind: str):
+    return {
+        "train_step": make_train_step,
+        "eval_batch": make_eval_batch,
+        "stats_batch": make_stats_batch,
+        "grads": make_grads,
+    }[kind](arch)

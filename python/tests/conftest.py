@@ -1,0 +1,5 @@
+import os
+import sys
+
+# make `compile` importable when pytest is run from python/ or repo root
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))

@@ -1,0 +1,84 @@
+"""AOT pipeline: manifest consistency and HLO-text validity.
+
+These tests lower the `tiny` architecture fresh (not relying on a prior
+`make artifacts`) and check the contract the Rust runtime depends on.
+"""
+
+import json
+import os
+import tempfile
+
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    entry = aot.build_arch("tiny", out)
+    return out, entry
+
+
+def test_hlo_files_written(built):
+    out, entry = built
+    for kind in model.ARTIFACT_KINDS:
+        f = os.path.join(out, entry["artifacts"][kind]["file"])
+        assert os.path.exists(f)
+        head = open(f).read(200)
+        assert "HloModule" in head, head
+
+
+def test_manifest_io_counts(built):
+    _, entry = built
+    L = model.num_layers("tiny")
+    a = entry["artifacts"]
+    assert len(a["train_step"]["inputs"]) == 4 * L + 2 + 8 + 3
+    assert len(a["train_step"]["outputs"]) == 4 * L + 1
+    assert len(a["eval_batch"]["inputs"]) == 2 * L + 2 + 8
+    assert [o["name"] for o in a["eval_batch"]["outputs"]] == ["logits", "loss_sum"]
+    assert len(a["stats_batch"]["outputs"]) == 3
+    assert len(a["grads"]["outputs"]) == 1 + 2 * L
+
+
+def test_manifest_shapes_match_model(built):
+    _, entry = built
+    pshapes = dict(model.param_shapes("tiny"))
+    for p in entry["params"]:
+        assert tuple(p["shape"]) == pshapes[p["name"]]
+    ts = entry["artifacts"]["train_step"]
+    by_name = {i["name"]: i for i in ts["inputs"]}
+    assert by_name["x"]["shape"] == [model.ARCHS["tiny"]["train_batch"],
+                                     *model.ARCHS["tiny"]["input"]]
+    assert by_name["y"]["dtype"] == "i32"
+    L = model.num_layers("tiny")
+    for nm in ("w_step", "a_en", "upd"):
+        assert by_name[nm]["shape"] == [L]
+    assert by_name["lr"]["shape"] == [1]
+
+
+def test_input_order_params_first(built):
+    _, entry = built
+    ts = entry["artifacts"]["train_step"]["inputs"]
+    pnames = [n for n, _ in model.param_shapes("tiny")]
+    assert [i["name"] for i in ts[: len(pnames)]] == pnames
+    assert [i["name"] for i in ts[len(pnames): 2 * len(pnames)]] == [
+        f"m.{n}" for n in pnames
+    ]
+
+
+def test_output_order_matches_train_step(built):
+    _, entry = built
+    outs = [o["name"] for o in entry["artifacts"]["train_step"]["outputs"]]
+    pnames = [n for n, _ in model.param_shapes("tiny")]
+    assert outs == pnames + [f"m.{n}" for n in pnames] + ["loss"]
+
+
+def test_manifest_json_round_trip(built):
+    out, entry = built
+    path = os.path.join(out, "m.json")
+    with open(path, "w") as f:
+        json.dump({"version": 1, "archs": {"tiny": entry}}, f)
+    with open(path) as f:
+        back = json.load(f)
+    assert back["archs"]["tiny"]["num_layers"] == model.num_layers("tiny")

@@ -1,0 +1,107 @@
+"""The pallas and jnp kernel backends must agree bit-for-bit: same STE
+semantics, same forward numerics (up to tie-breaking f32 roundoff in the
+tiled matmul).  This underwrites the perf ablation in EXPERIMENTS.md --
+swapping backends changes speed, never results."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.kernels import qmatmul as qm
+from compile.kernels import quantize as qz
+from compile.kernels import ref
+
+
+def _cfg(bits, frac):
+    step, qmin, qmax = ref.qparams(bits, frac)
+    return (
+        jnp.array([step], jnp.float32),
+        jnp.array([qmin], jnp.float32),
+        jnp.array([qmax], jnp.float32),
+    )
+
+
+def test_quantize_backends_agree():
+    x = jnp.asarray(np.random.RandomState(0).randn(37, 5).astype(np.float32) * 4)
+    step, lo, hi = _cfg(6, 2)
+    en = jnp.array([1.0], jnp.float32)
+    a = np.asarray(qz.quantize_ste(x, step, lo, hi, en))
+    b = np.asarray(qz.quantize_ste_jnp(x, step, lo, hi, en))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_qmatmul_backends_agree():
+    r = np.random.RandomState(1)
+    a = jnp.asarray(r.randn(20, 30).astype(np.float32))
+    b = jnp.asarray(r.randn(30, 10).astype(np.float32))
+    bias = jnp.asarray(r.randn(10).astype(np.float32))
+    step, lo, hi = _cfg(8, 4)
+    en = jnp.array([1.0], jnp.float32)
+    pa = np.asarray(qm.qmatmul_ste(a, b, bias, step, lo, hi, en))
+    jn = np.asarray(qm.qmatmul_ste_jnp(a, b, bias, step, lo, hi, en))
+    # single K-tile here, so even the accumulation order matches
+    np.testing.assert_allclose(pa, jn, atol=1e-5)
+
+
+def test_model_forward_backends_agree():
+    arch = "tiny"
+    L = model.num_layers(arch)
+    params = [jnp.asarray(p) for p in model.init_params(arch, seed=2)]
+    x = jnp.asarray(
+        np.random.RandomState(3)
+        .rand(4, *model.ARCHS[arch]["input"])
+        .astype(np.float32)
+    )
+    step, qmin, qmax = ref.qparams(8, 4)
+    cfg = (
+        jnp.full((L,), step, jnp.float32),
+        jnp.full((L,), qmin, jnp.float32),
+        jnp.full((L,), qmax, jnp.float32),
+        jnp.ones((L,), jnp.float32),
+    )
+    try:
+        model.set_backend("pallas")
+        lp = np.asarray(model.forward(arch, params, x, cfg, cfg))
+        model.set_backend("jnp")
+        lj = np.asarray(model.forward(arch, params, x, cfg, cfg))
+    finally:
+        model.set_backend("pallas")
+    np.testing.assert_allclose(lp, lj, atol=1e-4)
+
+
+def test_backend_gradients_agree():
+    arch = "tiny"
+    L = model.num_layers(arch)
+    params = [jnp.asarray(p) for p in model.init_params(arch, seed=4)]
+    r = np.random.RandomState(5)
+    x = jnp.asarray(r.rand(4, *model.ARCHS[arch]["input"]).astype(np.float32))
+    y = jnp.asarray(r.randint(0, 10, size=4).astype(np.int32))
+    step, qmin, qmax = ref.qparams(8, 4)
+    cfg = (
+        jnp.full((L,), step, jnp.float32),
+        jnp.full((L,), qmin, jnp.float32),
+        jnp.full((L,), qmax, jnp.float32),
+        jnp.ones((L,), jnp.float32),
+    )
+
+    def loss(backend):
+        try:
+            model.set_backend(backend)
+            return jax.grad(
+                lambda p: model.loss_fn(arch, p, x, y, cfg, cfg)
+            )(params)
+        finally:
+            model.set_backend("pallas")
+
+    gp = loss("pallas")
+    gj = loss("jnp")
+    for a, b in zip(gp, gj):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+def test_set_backend_validates():
+    import pytest
+
+    with pytest.raises(ValueError):
+        model.set_backend("bogus")

@@ -1,0 +1,135 @@
+"""L1 fused qmatmul kernel vs oracle (Figure 1 steps 1-3)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import qmatmul as qm
+from compile.kernels import ref
+
+
+def _cfg(bits, frac):
+    step, qmin, qmax = ref.qparams(bits, frac)
+    return (
+        jnp.array([step], jnp.float32),
+        jnp.array([qmin], jnp.float32),
+        jnp.array([qmax], jnp.float32),
+    )
+
+
+def _rand(shape, scale, seed):
+    return (np.random.RandomState(seed).randn(*shape) * scale).astype(np.float32)
+
+
+def _oracle(a, b, bias, step, lo, hi, en):
+    acc = a @ b + bias[None, :]
+    if en:
+        return np.asarray(
+            ref.quantize_ref(jnp.asarray(acc), float(step[0]), float(lo[0]), float(hi[0]))
+        )
+    return acc
+
+
+@pytest.mark.parametrize(
+    "m,k,n", [(4, 8, 4), (16, 16, 16), (128, 128, 128), (130, 70, 33), (1, 5, 1)]
+)
+@pytest.mark.parametrize("bits,frac", [(8, 4), (16, 8)])
+def test_matches_oracle(m, k, n, bits, frac):
+    a = _rand((m, k), 1.0, 1)
+    b = _rand((k, n), 1.0, 2)
+    bias = _rand((n,), 1.0, 3)
+    step, lo, hi = _cfg(bits, frac)
+    en = jnp.array([1.0], jnp.float32)
+    got = np.asarray(qm.qmatmul(jnp.asarray(a), jnp.asarray(b), jnp.asarray(bias),
+                                step, lo, hi, en))
+    want = _oracle(a, b, bias, step, lo, hi, True)
+    # f32 accumulation order may differ between the tiled kernel and the
+    # oracle; at a rounding tie that moves the result by exactly one step.
+    diff = np.abs(got - want)
+    step_f = float(step[0])
+    assert ((diff < 1e-4) | (np.isclose(diff, step_f, atol=1e-4))).all()
+    assert (diff > 1e-4).mean() < 0.01
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    m=st.integers(1, 40),
+    k=st.integers(1, 50),
+    n=st.integers(1, 40),
+    bits=st.integers(4, 16),
+    frac=st.integers(0, 10),
+    seed=st.integers(0, 10**6),
+)
+def test_matches_oracle_hypothesis(m, k, n, bits, frac, seed):
+    a = _rand((m, k), 1.0, seed)
+    b = _rand((k, n), 1.0, seed + 1)
+    bias = _rand((n,), 0.5, seed + 2)
+    step, lo, hi = _cfg(bits, frac)
+    en = jnp.array([1.0], jnp.float32)
+    got = np.asarray(qm.qmatmul(jnp.asarray(a), jnp.asarray(b), jnp.asarray(bias),
+                                step, lo, hi, en))
+    want = _oracle(a, b, bias, step, lo, hi, True)
+    # accumulation order may differ across tiles -> allow f32 roundoff at
+    # the rounding boundary: values must land on the same grid point except
+    # where the accumulator sits within eps of a tie.
+    diff = np.abs(got - want)
+    step_f = float(step[0])
+    assert ((diff < 1e-4) | (np.isclose(diff, step_f, atol=1e-4))).all()
+    assert (diff > 1e-4).mean() < 0.02  # ties are rare
+
+
+def test_enable_bypass_is_float_matmul():
+    a = _rand((17, 9), 1.0, 5)
+    b = _rand((9, 13), 1.0, 6)
+    bias = _rand((13,), 1.0, 7)
+    step, lo, hi = _cfg(4, 2)
+    en = jnp.array([0.0], jnp.float32)
+    got = np.asarray(qm.qmatmul(jnp.asarray(a), jnp.asarray(b), jnp.asarray(bias),
+                                step, lo, hi, en))
+    np.testing.assert_allclose(got, a @ b + bias[None, :], rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(8, 8, 8), (32, 16, 8), (128, 128, 128)])
+def test_tile_invariance(bm, bn, bk):
+    """Result must not depend on the tiling (up to rounding-tie roundoff)."""
+    a = _rand((48, 40), 1.0, 8)
+    b = _rand((40, 24), 1.0, 9)
+    bias = _rand((24,), 1.0, 10)
+    step, lo, hi = _cfg(8, 5)
+    en = jnp.array([1.0], jnp.float32)
+    got = np.asarray(qm.qmatmul(jnp.asarray(a), jnp.asarray(b), jnp.asarray(bias),
+                                step, lo, hi, en, bm=bm, bn=bn, bk=bk))
+    want = np.asarray(qm.qmatmul(jnp.asarray(a), jnp.asarray(b), jnp.asarray(bias),
+                                 step, lo, hi, en))
+    diff = np.abs(got - want)
+    assert ((diff < 1e-4) | (np.isclose(diff, float(step[0]), atol=1e-4))).all()
+
+
+def test_ste_backward_is_float_gradient():
+    a = jnp.asarray(_rand((6, 5), 1.0, 11))
+    b = jnp.asarray(_rand((5, 4), 1.0, 12))
+    bias = jnp.asarray(_rand((4,), 1.0, 13))
+    step, lo, hi = _cfg(6, 3)
+    en = jnp.array([1.0], jnp.float32)
+
+    def f(a, b, bias):
+        return jnp.sum(qm.qmatmul_ste(a, b, bias, step, lo, hi, en))
+
+    ga, gb, gbias = jax.grad(f, argnums=(0, 1, 2))(a, b, bias)
+    ones = np.ones((6, 4), np.float32)
+    np.testing.assert_allclose(np.asarray(ga), ones @ np.asarray(b).T, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(gb), np.asarray(a).T @ ones, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(gbias), ones.sum(0), rtol=1e-5)
+
+
+def test_ste_forward_is_quantized():
+    a = jnp.asarray(_rand((7, 5), 1.0, 14))
+    b = jnp.asarray(_rand((5, 3), 1.0, 15))
+    bias = jnp.asarray(_rand((3,), 1.0, 16))
+    step, lo, hi = _cfg(8, 4)
+    en = jnp.array([1.0], jnp.float32)
+    y = np.asarray(qm.qmatmul_ste(a, b, bias, step, lo, hi, en))
+    w = np.asarray(qm.qmatmul(a, b, bias, step, lo, hi, en))
+    np.testing.assert_array_equal(y, w)

@@ -1,0 +1,212 @@
+"""L1 quantize kernel vs pure-jnp oracle: the core correctness signal.
+
+hypothesis sweeps shapes / Q-formats / value ranges; every case asserts
+bit-exact agreement between the Pallas kernel (interpret=True) and
+ref.quantize_ref, plus the fixed-point invariants the Rust property tests
+mirror (idempotence, grid membership, saturation, monotonicity).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import quantize as qz
+from compile.kernels import ref
+
+
+def _cfg(bits, frac):
+    step, qmin, qmax = ref.qparams(bits, frac)
+    return (
+        jnp.array([step], jnp.float32),
+        jnp.array([qmin], jnp.float32),
+        jnp.array([qmax], jnp.float32),
+    )
+
+
+def _rand(shape, scale, seed):
+    return (np.random.RandomState(seed).randn(*shape) * scale).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# kernel == oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bits,frac", [(4, 2), (8, 4), (8, 6), (16, 8), (2, 0)])
+@pytest.mark.parametrize("shape", [(7,), (16, 5), (3, 4, 5), (2, 3, 4, 5)])
+def test_kernel_matches_ref(bits, frac, shape):
+    x = _rand(shape, 4.0, 0)
+    step, lo, hi = _cfg(bits, frac)
+    got = np.asarray(qz.quantize(jnp.asarray(x), step, lo, hi))
+    want = np.asarray(ref.quantize_ref(jnp.asarray(x), step[0], lo[0], hi[0]))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    rows=st.integers(1, 70),
+    cols=st.integers(1, 9),
+    bits=st.integers(2, 16),
+    frac=st.integers(-2, 12),
+    scale=st.floats(1e-3, 64.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_matches_ref_hypothesis(rows, cols, bits, frac, scale, seed):
+    x = _rand((rows, cols), scale, seed % 2**32)
+    step, lo, hi = _cfg(bits, frac)
+    got = np.asarray(qz.quantize(jnp.asarray(x), step, lo, hi))
+    want = np.asarray(ref.quantize_ref(jnp.asarray(x), step[0], lo[0], hi[0]))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 300),
+    bits=st.integers(2, 12),
+    frac=st.integers(0, 8),
+    block=st.integers(1, 64),
+)
+def test_block_size_invariance(n, bits, frac, block):
+    """Tiling must not change values (padding is stripped correctly)."""
+    x = _rand((n, 3), 8.0, n)
+    step, lo, hi = _cfg(bits, frac)
+    a = np.asarray(qz.quantize(jnp.asarray(x), step, lo, hi, block=block))
+    b = np.asarray(qz.quantize(jnp.asarray(x), step, lo, hi, block=None))
+    np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# fixed-point invariants (mirrored by rust/src/fixedpoint tests)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(bits=st.integers(2, 12), frac=st.integers(-1, 10), seed=st.integers(0, 999))
+def test_idempotent(bits, frac, seed):
+    x = _rand((33, 4), 16.0, seed)
+    step, lo, hi = _cfg(bits, frac)
+    q1 = qz.quantize(jnp.asarray(x), step, lo, hi)
+    q2 = qz.quantize(q1, step, lo, hi)
+    np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+
+
+@settings(max_examples=40, deadline=None)
+@given(bits=st.integers(2, 12), frac=st.integers(0, 10), seed=st.integers(0, 999))
+def test_grid_membership_and_saturation(bits, frac, seed):
+    x = _rand((50,), 32.0, seed)
+    step, lo, hi = _cfg(bits, frac)
+    q = np.asarray(qz.quantize(jnp.asarray(x), step, lo, hi))
+    ints = q / float(step[0])
+    np.testing.assert_allclose(ints, np.round(ints), atol=1e-4)
+    assert ints.min() >= float(lo[0]) - 1e-4
+    assert ints.max() <= float(hi[0]) + 1e-4
+
+
+def test_monotone():
+    x = np.linspace(-20, 20, 4001).astype(np.float32)
+    step, lo, hi = _cfg(6, 2)
+    q = np.asarray(qz.quantize(jnp.asarray(x), step, lo, hi))
+    assert (np.diff(q) >= -1e-7).all()
+
+
+def test_round_half_up():
+    """Ties go up: 0.5 -> 1, -0.5 -> 0 (HW convention, matches Rust)."""
+    x = jnp.array([0.5, -0.5, 1.5, -1.5, 2.5], jnp.float32)
+    step, lo, hi = _cfg(8, 0)
+    q = np.asarray(qz.quantize(x, step, lo, hi))
+    np.testing.assert_array_equal(q, [1.0, 0.0, 2.0, -1.0, 3.0])
+
+
+# ---------------------------------------------------------------------------
+# stochastic rounding
+# ---------------------------------------------------------------------------
+
+
+def test_stochastic_matches_ref_hash():
+    """Kernel's in-kernel hash == ref.hash_uniform_ref on the same counters."""
+    x = _rand((64, 8), 2.0, 3)
+    step, lo, hi = _cfg(8, 4)
+    seed = jnp.array([1234], jnp.int32)
+    got = np.asarray(qz.quantize_stochastic(jnp.asarray(x), step, lo, hi, seed))
+    counters = np.arange(64 * 8, dtype=np.uint32).reshape(64, 8)
+    u = np.asarray(ref.hash_uniform_ref(counters, 1234))
+    want = np.asarray(
+        ref.quantize_stochastic_ref(jnp.asarray(x), step[0], lo[0], hi[0], u)
+    )
+    np.testing.assert_array_equal(got, want)
+
+
+def test_stochastic_unbiased():
+    """E[q(x)] ~= x for in-range x: the Gupta et al. 2015 property."""
+    x = jnp.full((4000, 1), 0.3, jnp.float32)
+    step, lo, hi = _cfg(8, 2)  # step 0.25: 0.3 rounds to 0.25 or 0.5
+    vals = []
+    for s in range(20):
+        q = qz.quantize_stochastic(x, step, lo, hi, jnp.array([s], jnp.int32))
+        vals.append(float(jnp.mean(q)))
+    m = np.mean(vals)
+    assert abs(m - 0.3) < 0.005, m
+
+
+def test_stochastic_determinism():
+    x = jnp.asarray(_rand((32, 4), 2.0, 7))
+    step, lo, hi = _cfg(8, 3)
+    seed = jnp.array([42], jnp.int32)
+    a = np.asarray(qz.quantize_stochastic(x, step, lo, hi, seed))
+    b = np.asarray(qz.quantize_stochastic(x, step, lo, hi, seed))
+    np.testing.assert_array_equal(a, b)
+    c = np.asarray(qz.quantize_stochastic(x, step, lo, hi, jnp.array([43], jnp.int32)))
+    assert (a != c).any()
+
+
+# ---------------------------------------------------------------------------
+# STE semantics
+# ---------------------------------------------------------------------------
+
+
+def test_ste_forward_and_gradient():
+    import jax
+
+    x = jnp.asarray(_rand((16, 4), 4.0, 11))
+    step, lo, hi = _cfg(6, 2)
+    en = jnp.array([1.0], jnp.float32)
+
+    def f(x):
+        return jnp.sum(qz.quantize_ste(x, step, lo, hi, en) ** 2)
+
+    # forward is the quantized value
+    y = qz.quantize_ste(x, step, lo, hi, en)
+    np.testing.assert_array_equal(
+        np.asarray(y), np.asarray(qz.quantize(x, step, lo, hi))
+    )
+    # backward is the float gradient: d/dx sum(q(x)^2) via STE = 2*q(x)
+    g = jax.grad(f)(x)
+    np.testing.assert_allclose(np.asarray(g), 2 * np.asarray(y), rtol=1e-5)
+
+
+def test_ste_enable_bypass():
+    x = jnp.asarray(_rand((8, 3), 4.0, 13))
+    step, lo, hi = _cfg(4, 1)
+    off = jnp.array([0.0], jnp.float32)
+    y = qz.quantize_ste(x, step, lo, hi, off)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(x))
+
+
+# ---------------------------------------------------------------------------
+# Figure 2: effective activation function is a staircase
+# ---------------------------------------------------------------------------
+
+
+def test_effective_relu_staircase():
+    x = jnp.linspace(-2.0, 4.0, 1201)
+    eff = np.asarray(ref.effective_relu_ref(x, bits=4, frac=1))
+    # staircase: few distinct levels, each a multiple of step
+    levels = np.unique(eff)
+    assert len(levels) <= 2 ** 3 + 1  # 4-bit signed, positive half + zero
+    np.testing.assert_allclose(levels / 0.5, np.round(levels / 0.5), atol=1e-6)
+    # negative inputs all collapse to 0
+    assert (eff[np.asarray(x) < -0.25] == 0).all()
+    # and it deviates from the presumed smooth ReLU
+    smooth = np.asarray(ref.presumed_relu_ref(x))
+    assert np.abs(eff - smooth).max() >= 0.24

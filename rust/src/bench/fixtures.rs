@@ -1,0 +1,114 @@
+//! Shared fixtures for the paper-table benches (benches/*.rs).
+//!
+//! Benches are sized by environment variables so the same binaries serve
+//! quick smoke runs and full-scale reproduction:
+//!
+//! * `FXP_BENCH_ARCH`     -- architecture (default "shallow": fast; the
+//!   full paper reproduction uses "paper12" via `fxpnet grid`)
+//! * `FXP_BENCH_STEPS`    -- fine-tune steps per cell (default 30)
+//! * `FXP_BENCH_PHASE`    -- steps per Proposal-3 phase (default 15)
+//! * `FXP_BENCH_PRETRAIN` -- float pretrain steps (default 250)
+//! * `FXP_BENCH_TRAIN_N`  -- training set size (default 3072)
+//! * `FXP_BENCH_EVAL_N`   -- eval set size (default 512)
+//! * `FXP_BENCH_CKPT`     -- optional float checkpoint to skip pretraining
+
+use crate::coordinator::calibrate;
+use crate::coordinator::config::RunCfg;
+use crate::coordinator::trainer::{upd_all, Trainer};
+use crate::data::loader::LoaderCfg;
+use crate::data::synth::Dataset;
+use crate::error::Result;
+use crate::model::checkpoint::Checkpoint;
+use crate::model::params::ParamSet;
+use crate::quant::calib::LayerStats;
+use crate::quant::policy::NetQuant;
+use crate::runtime::Engine;
+
+pub fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+pub fn env_str(key: &str, default: &str) -> String {
+    std::env::var(key).unwrap_or_else(|_| default.to_string())
+}
+
+/// Everything a table bench needs.
+pub struct BenchEnv {
+    pub engine: Engine,
+    pub arch: String,
+    pub base: ParamSet,
+    pub a_stats: Vec<LayerStats>,
+    pub train: Dataset,
+    pub eval: Dataset,
+    pub cfg: RunCfg,
+}
+
+/// Build the bench environment: load or pretrain the float base net,
+/// calibrate, size the RunCfg from the environment.
+pub fn bench_env() -> Result<BenchEnv> {
+    crate::util::logging::init();
+    let artifacts = env_str("FXPNET_ARTIFACTS", "artifacts");
+    let arch = env_str("FXP_BENCH_ARCH", "shallow");
+    let engine = Engine::cpu(&artifacts)?;
+    let spec = engine.manifest.arch(&arch)?.clone();
+    let train_n = env_usize("FXP_BENCH_TRAIN_N", 3072);
+    let eval_n = env_usize("FXP_BENCH_EVAL_N", 512);
+    let train = Dataset::generate(train_n, spec.input[0], spec.input[1], 201);
+    let eval = Dataset::generate(eval_n, spec.input[0], spec.input[1], 202);
+
+    let ckpt = env_str("FXP_BENCH_CKPT", &format!("{arch}_float.ckpt"));
+    let base = if std::path::Path::new(&ckpt).exists() {
+        let ck = Checkpoint::load(&ckpt)?;
+        ck.check_matches(&arch, &spec.params)?;
+        eprintln!("[bench] using checkpoint {ckpt}");
+        ck.params
+    } else {
+        let steps = env_usize("FXP_BENCH_PRETRAIN", 250);
+        eprintln!("[bench] no checkpoint {ckpt}; pretraining {steps} steps");
+        let p = ParamSet::init(&spec, 42);
+        let nq = NetQuant::all_float(spec.num_layers);
+        let mut tr = Trainer::new(
+            &engine,
+            &arch,
+            &p,
+            &nq,
+            &upd_all(spec.num_layers),
+            0.05,
+            0.9,
+            train.clone(),
+            LoaderCfg {
+                batch: spec.train_batch,
+                augment: true,
+                max_shift: 2,
+                seed: 77,
+            },
+            30.0,
+        )?;
+        tr.run(steps, 50)?;
+        tr.params()?
+    };
+
+    let a_stats =
+        calibrate::activation_stats(&engine, &arch, &base, &train, 3)?.a_stats;
+
+    let cfg = RunCfg {
+        finetune_steps: env_usize("FXP_BENCH_STEPS", 30),
+        phase_steps: env_usize("FXP_BENCH_PHASE", 15),
+        ..RunCfg::default()
+    };
+    Ok(BenchEnv { engine, arch, base, a_stats, train, eval, cfg })
+}
+
+impl BenchEnv {
+    pub fn runner(&self) -> crate::coordinator::grid::GridRunner<'_> {
+        crate::coordinator::grid::GridRunner::new(
+            &self.engine,
+            &self.arch,
+            self.base.clone(),
+            self.a_stats.clone(),
+            self.train.clone(),
+            self.eval.clone(),
+            self.cfg.clone(),
+        )
+    }
+}

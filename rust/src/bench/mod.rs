@@ -1,0 +1,138 @@
+//! Benchmark harness (criterion is not available offline; this provides
+//! the subset the paper-table benches need: warmup, timed iterations,
+//! robust stats, throughput, and aligned table printing).
+
+pub mod fixtures;
+
+use std::time::Instant;
+
+use crate::util::{mean, percentile, std_dev};
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ms: f64,
+    pub std_ms: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+}
+
+impl BenchStats {
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        if self.mean_ms <= 0.0 {
+            return 0.0;
+        }
+        items_per_iter / (self.mean_ms / 1e3)
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` untimed ones.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64() * 1e3);
+    }
+    BenchStats {
+        name: name.to_string(),
+        iters,
+        mean_ms: mean(&samples),
+        std_ms: std_dev(&samples),
+        p50_ms: percentile(&samples, 50.0),
+        p99_ms: percentile(&samples, 99.0),
+    }
+}
+
+impl std::fmt::Display for BenchStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<40} {:>10.3} ms ±{:>8.3}  p50 {:>9.3}  p99 {:>9.3}  (n={})",
+            self.name, self.mean_ms, self.std_ms, self.p50_ms, self.p99_ms, self.iters
+        )
+    }
+}
+
+/// Fixed-width table printer for paper-style grids.
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate().take(ncol) {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("{:>w$}  ", c, w = widths.get(i).copied().unwrap_or(8)));
+            }
+            s.trim_end().to_string()
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * ncol));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures() {
+        let s = bench("noop", 2, 10, || {
+            std::hint::black_box(42);
+        });
+        assert_eq!(s.iters, 10);
+        assert!(s.mean_ms >= 0.0);
+        assert!(s.p99_ms >= s.p50_ms);
+        assert!(s.throughput(100.0) > 0.0);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("Table X", &["Act", "4", "8"]);
+        t.row(vec!["4".into(), "98.6".into(), "33.4".into()]);
+        t.row(vec!["Float".into(), "96.6".into(), "14.1".into()]);
+        let s = t.render();
+        assert!(s.contains("Table X"));
+        assert!(s.contains("98.6"));
+        // all data lines have the same width
+        let lines: Vec<&str> = s.lines().skip(1).collect();
+        assert_eq!(lines[0].len(), lines[2].len());
+    }
+}

@@ -1,0 +1,407 @@
+//! CLI command implementations (thin orchestration over the library).
+
+use crate::cli::{artifacts_dir, Args};
+use crate::coordinator::calibrate;
+use crate::coordinator::config::RunCfg;
+use crate::coordinator::evaluator::evaluate;
+use crate::coordinator::grid::GridRunner;
+use crate::coordinator::phases;
+use crate::coordinator::regimes::Regime;
+use crate::coordinator::report;
+use crate::coordinator::trainer::{upd_all, Trainer};
+use crate::data::loader::LoaderCfg;
+use crate::data::synth::Dataset;
+use crate::error::{FxpError, Result};
+use crate::fixedpoint::QFormat;
+use crate::inference::verify::parity_report;
+use crate::inference::FixedPointNet;
+use crate::model::checkpoint::{save_params, Checkpoint};
+use crate::model::params::ParamSet;
+use crate::quant::calib::CalibMethod;
+use crate::quant::policy::{NetQuant, WidthSpec};
+use crate::runtime::Engine;
+
+pub fn dispatch(args: &Args) -> Result<()> {
+    match args.command.as_str() {
+        "pretrain" => pretrain(args),
+        "grid" => grid(args),
+        "eval" => eval_cmd(args),
+        "infer" => infer(args),
+        "mismatch" => mismatch(args),
+        "table1" => {
+            let layers = args.usize_or("layers", 4)?;
+            println!("{}", phases::render_table1(layers));
+            Ok(())
+        }
+        "help" | "--help" | "-h" => {
+            println!("{}", super::USAGE);
+            Ok(())
+        }
+        other => Err(FxpError::config(format!(
+            "unknown command '{other}'; try `fxpnet help`"
+        ))),
+    }
+}
+
+fn run_cfg(args: &Args) -> Result<RunCfg> {
+    let mut cfg = RunCfg::default();
+    cfg.lr = args.f32_or("lr", cfg.lr)?;
+    cfg.momentum = args.f32_or("momentum", cfg.momentum)?;
+    cfg.finetune_steps = args.usize_or("steps", cfg.finetune_steps)?;
+    cfg.phase_steps = args.usize_or("phase-steps", cfg.phase_steps)?;
+    cfg.seed = args.u64_or("seed", cfg.seed)?;
+    cfg.topk = args.usize_or("topk", cfg.topk)?;
+    cfg.max_loss = args.f32_or("max-loss", cfg.max_loss)?;
+    if let Some(m) = args.get("calib") {
+        cfg.method = CalibMethod::parse(m)
+            .ok_or_else(|| FxpError::config(format!("bad --calib '{m}'")))?;
+    }
+    Ok(cfg)
+}
+
+fn datasets(args: &Args, engine: &Engine, arch: &str) -> Result<(Dataset, Dataset)> {
+    let spec = engine.manifest.arch(arch)?;
+    let (h, w) = (spec.input[0], spec.input[1]);
+    let train_n = args.usize_or("train-n", 8192)?;
+    let eval_n = args.usize_or("eval-n", 2048)?;
+    let seed = args.u64_or("seed", 42)?;
+    log::info!("generating SynthShapes: train={train_n} eval={eval_n} ({h}x{w})");
+    // disjoint streams for train/eval
+    Ok((
+        Dataset::generate(train_n, h, w, seed.wrapping_mul(2).wrapping_add(1)),
+        Dataset::generate(eval_n, h, w, seed.wrapping_mul(2)),
+    ))
+}
+
+fn load_ckpt(args: &Args, engine: &Engine, arch: &str) -> Result<ParamSet> {
+    let path = args.require("ckpt")?;
+    let ck = Checkpoint::load(path)?;
+    ck.check_matches(arch, &engine.manifest.arch(arch)?.params)?;
+    log::info!("loaded checkpoint {path} (step {})", ck.step);
+    Ok(ck.params)
+}
+
+fn width(args: &Args, key: &str) -> Result<WidthSpec> {
+    let v = args.require(key)?;
+    WidthSpec::parse(v)
+        .ok_or_else(|| FxpError::config(format!("bad --{key} '{v}'")))
+}
+
+/// `fxpnet pretrain`: float baseline training with step-decay lr.
+fn pretrain(args: &Args) -> Result<()> {
+    let arch = args.get_or("arch", "paper12");
+    let engine = Engine::cpu(artifacts_dir(args))?;
+    let spec = engine.manifest.arch(&arch)?.clone();
+    let cfg = run_cfg(args)?;
+    let steps = args.usize_or("steps", 800)?;
+    let lr = args.f32_or("lr", 0.05)?;
+    let out = args.get_or("out", &format!("{arch}_float.ckpt"));
+    let (train, eval_set) = datasets(args, &engine, &arch)?;
+
+    // --from CKPT continues training from a checkpoint (e.g. when a run's
+    // saddle escape happened near the end of its step budget)
+    let params = match args.get("from") {
+        Some(path) => {
+            let ck = Checkpoint::load(path)?;
+            ck.check_matches(&arch, &spec.params)?;
+            log::info!("continuing from {path} (step {})", ck.step);
+            ck.params
+        }
+        None => ParamSet::init(&spec, cfg.seed),
+    };
+    log::info!(
+        "pretraining {arch}: {} params, {} steps, lr {lr}",
+        params.num_scalars(),
+        steps
+    );
+    let nq = NetQuant::all_float(spec.num_layers);
+    let mut tr = Trainer::new(
+        &engine,
+        &arch,
+        &params,
+        &nq,
+        &upd_all(spec.num_layers),
+        lr,
+        cfg.momentum,
+        train,
+        LoaderCfg {
+            batch: spec.train_batch,
+            augment: true,
+            max_shift: 2,
+            seed: cfg.seed,
+        },
+        cfg.max_loss,
+    )?;
+    // two-stage decay at 60% and 85%
+    let s1 = steps * 3 / 5;
+    let s2 = steps * 17 / 20;
+    let mut last = 0.0f32;
+    for (stage, (n, stage_lr)) in [
+        (s1, lr),
+        (s2 - s1, lr * 0.2),
+        (steps - s2, lr * 0.04),
+    ]
+    .iter()
+    .enumerate()
+    {
+        if stage > 0 {
+            tr.set_config(&nq, &upd_all(spec.num_layers), *stage_lr, cfg.momentum)?;
+        }
+        let outc = tr.run(*n, 20)?;
+        if outc.diverged {
+            return Err(FxpError::Diverged {
+                step: tr.global_step(),
+                loss: outc.final_loss().unwrap_or(f32::NAN),
+            });
+        }
+        for (s, l) in &outc.history {
+            log::info!("step {s:>5}  loss {l:.4}");
+        }
+        last = outc.final_loss().unwrap_or(last);
+    }
+    let tuned = tr.params()?;
+    let ev = evaluate(&engine, &arch, &tuned, &nq, &eval_set)?;
+    log::info!("pretrained: final loss {last:.4}; float eval: {ev}");
+    save_params(&out, &arch, tr.global_step() as u64, &tuned)?;
+    println!(
+        "pretrained {arch}: {} steps, float top-1 error {:.2}%, saved {out}",
+        tr.global_step(),
+        ev.top1_err * 100.0
+    );
+    Ok(())
+}
+
+/// `fxpnet grid`: run one regime's full grid (one paper table).
+fn grid(args: &Args) -> Result<()> {
+    let arch = args.get_or("arch", "paper12");
+    let regime_s = args.require("regime")?;
+    let regime = Regime::parse(regime_s)
+        .ok_or_else(|| FxpError::config(format!("bad --regime '{regime_s}'")))?;
+    let engine = Engine::cpu(artifacts_dir(args))?;
+    let cfg = run_cfg(args)?;
+    let base = load_ckpt(args, &engine, &arch)?;
+    let (train, eval_set) = datasets(args, &engine, &arch)?;
+    let calib = calibrate::activation_stats(
+        &engine,
+        &arch,
+        &base,
+        &train,
+        cfg.calib_batches,
+    )?;
+    let mut runner = GridRunner::new(
+        &engine,
+        &arch,
+        base,
+        calib.a_stats,
+        train,
+        eval_set,
+        cfg.clone(),
+    );
+    let result = runner.run_grid(regime)?;
+    let rendered = result.render(cfg.topk);
+    println!("{rendered}");
+    let out_dir = args.get_or("out", "results");
+    report::save_grid(&result, out_dir, cfg.topk)?;
+    Ok(())
+}
+
+/// `fxpnet eval`: single-cell evaluation of a checkpoint.
+fn eval_cmd(args: &Args) -> Result<()> {
+    let arch = args.get_or("arch", "paper12");
+    let engine = Engine::cpu(artifacts_dir(args))?;
+    let cfg = run_cfg(args)?;
+    let params = load_ckpt(args, &engine, &arch)?;
+    let (train, eval_set) = datasets(args, &engine, &arch)?;
+    let w = width(args, "w")?;
+    let a = width(args, "a")?;
+    let calib = calibrate::activation_stats(
+        &engine,
+        &arch,
+        &params,
+        &train,
+        cfg.calib_batches,
+    )?;
+    let nq = NetQuant::for_cell(
+        w,
+        a,
+        &params.weight_stats(),
+        &calib.a_stats,
+        cfg.method,
+    )?;
+    let ev = evaluate(&engine, &arch, &params, &nq, &eval_set)?;
+    println!(
+        "{arch} w={} a={}: top-1 {:.2}%  top-5 {:.2}%  loss {:.4}  (n={})",
+        w.label(),
+        a.label(),
+        ev.top1_err * 100.0,
+        ev.top5_err * 100.0,
+        ev.mean_loss,
+        ev.n
+    );
+    Ok(())
+}
+
+/// `fxpnet infer`: pure-integer engine + parity report vs the XLA path.
+fn infer(args: &Args) -> Result<()> {
+    let arch = args.get_or("arch", "paper12");
+    let engine = Engine::cpu(artifacts_dir(args))?;
+    let cfg = run_cfg(args)?;
+    let spec = engine.manifest.arch(&arch)?.clone();
+    let params = load_ckpt(args, &engine, &arch)?;
+    let (train, eval_set) = datasets(args, &engine, &arch)?;
+    let w = width(args, "w")?;
+    let a = width(args, "a")?;
+    if w == WidthSpec::Float || a == WidthSpec::Float {
+        return Err(FxpError::config(
+            "integer inference needs fixed-point --w and --a",
+        ));
+    }
+    let calib = calibrate::activation_stats(
+        &engine,
+        &arch,
+        &params,
+        &train,
+        cfg.calib_batches,
+    )?;
+    let nq = NetQuant::for_cell(
+        w,
+        a,
+        &params.weight_stats(),
+        &calib.a_stats,
+        cfg.method,
+    )?;
+    let net = FixedPointNet::build(&spec, &params, &nq, QFormat::new(16, 14)?)?;
+
+    // integer path on a slice of the eval set
+    let n = args.usize_or("eval-n", 256)?.min(eval_set.len());
+    let rows: Vec<usize> = (0..n).collect();
+    let images = eval_set.images.gather_rows(&rows)?;
+    let labels = eval_set.labels.gather_rows(&rows)?;
+    let t = std::time::Instant::now();
+    let int_logits = net.forward_batch(&images)?;
+    let dt = t.elapsed().as_secs_f64();
+    let top1 = int_logits.topk_rows(1)?;
+    let wrong = (0..n)
+        .filter(|&i| top1[i][0] != labels.data()[i] as usize)
+        .count();
+    println!(
+        "integer engine: {n} images in {:.2}s ({:.1} img/s, {:.0} MMAC/img), \
+         top-1 error {:.2}%",
+        dt,
+        n as f64 / dt,
+        net.macs_per_image() as f64 / 1e6,
+        100.0 * wrong as f64 / n as f64
+    );
+
+    // parity vs the XLA simulated-quantization path
+    let sub = Dataset { images, labels, h: spec.input[0], w: spec.input[1] };
+    let xla_ev = evaluate(&engine, &arch, &params, &nq, &sub)?;
+    let full = evaluate_logits(&engine, &arch, &params, &nq, &sub)?;
+    let parity = parity_report(&int_logits, &full)?;
+    println!("XLA path:      top-1 error {:.2}%", xla_ev.top1_err * 100.0);
+    println!("parity:        {parity}");
+    Ok(())
+}
+
+/// Collect XLA-path logits for a dataset (helper for parity checks).
+pub fn evaluate_logits(
+    engine: &Engine,
+    arch: &str,
+    params: &ParamSet,
+    nq: &NetQuant,
+    data: &Dataset,
+) -> Result<crate::tensor::TensorF> {
+    use crate::data::loader::sequential_batches;
+    use crate::runtime::literal::{to_literal, HostValue};
+    let spec = engine.manifest.arch(arch)?;
+    let exe = engine.executable(arch, "eval_batch")?;
+    let v = nq.vectors();
+    let mk = |x: &[f32]| -> Result<xla::Literal> {
+        to_literal(&HostValue::F32(crate::tensor::Tensor::from_vec(
+            &[x.len()],
+            x.to_vec(),
+        )?))
+    };
+    let cfg = [
+        mk(&v.w_step)?,
+        mk(&v.w_lo)?,
+        mk(&v.w_hi)?,
+        mk(&v.w_en)?,
+        mk(&v.a_step)?,
+        mk(&v.a_lo)?,
+        mk(&v.a_hi)?,
+        mk(&v.a_en)?,
+    ];
+    let param_lits: Vec<xla::Literal> = params
+        .tensors
+        .iter()
+        .map(|t| to_literal(&HostValue::F32(t.clone())))
+        .collect::<Result<_>>()?;
+    let mut all = Vec::new();
+    let mut total = 0usize;
+    for (images, labels, valid) in sequential_batches(data, spec.eval_batch)? {
+        let x = to_literal(&HostValue::F32(images))?;
+        let y = to_literal(&HostValue::I32(labels))?;
+        let mut inputs: Vec<&xla::Literal> = Vec::new();
+        inputs.extend(param_lits.iter());
+        inputs.push(&x);
+        inputs.push(&y);
+        inputs.extend(cfg.iter());
+        let outs = exe.run_literals(&inputs)?;
+        let logits = exe.output_host(&outs, "logits")?.into_f32()?;
+        let nc = logits.shape()[1];
+        all.extend_from_slice(&logits.data()[..valid * nc]);
+        total += valid;
+    }
+    crate::tensor::Tensor::from_vec(
+        &[total, engine.manifest.arch(arch)?.num_classes],
+        all,
+    )
+}
+
+/// `fxpnet mismatch`: per-layer cosine between float and quantized-path
+/// gradients (the section 2.2 analysis).
+fn mismatch(args: &Args) -> Result<()> {
+    let arch = args.get_or("arch", "paper12");
+    let engine = Engine::cpu(artifacts_dir(args))?;
+    let cfg = run_cfg(args)?;
+    let spec = engine.manifest.arch(&arch)?.clone();
+    let params = load_ckpt(args, &engine, &arch)?;
+    let (train, _) = datasets(args, &engine, &arch)?;
+    let bits = args.usize_or("bits", 8)? as u8;
+    let calib = calibrate::activation_stats(
+        &engine,
+        &arch,
+        &params,
+        &train,
+        cfg.calib_batches,
+    )?;
+    let report = crate::coordinator::mismatch::gradient_mismatch(
+        &engine,
+        &arch,
+        &params,
+        &calib.a_stats,
+        &train,
+        bits,
+        cfg.method,
+    )?;
+    println!(
+        "gradient mismatch, arch {arch}, {}w/{}a (cos(float grad, quantized grad)):",
+        bits, bits
+    );
+    for (l, c) in report.iter().enumerate() {
+        let bar = "#".repeat((c.max(0.0) * 40.0) as usize);
+        println!("  layer {l:>2}  cos {c:+.4}  {bar}");
+    }
+    let low = report[..spec.num_layers / 3].iter().sum::<f64>()
+        / (spec.num_layers / 3) as f64;
+    let high = report[spec.num_layers - spec.num_layers / 3..]
+        .iter()
+        .sum::<f64>()
+        / (spec.num_layers / 3) as f64;
+    println!(
+        "bottom-third mean {low:+.4} vs top-third mean {high:+.4} -- mismatch \
+         accumulates toward the bottom (section 2.2)"
+    );
+    Ok(())
+}

@@ -1,0 +1,157 @@
+//! Hand-rolled CLI (clap is not in the offline crate cache).
+//!
+//! Grammar: `fxpnet <command> [--flag value | --switch]...`
+
+pub mod commands;
+
+use std::collections::BTreeMap;
+
+use crate::error::{FxpError, Result};
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut it = argv.into_iter().peekable();
+        let command = it
+            .next()
+            .ok_or_else(|| FxpError::config("missing command; try `fxpnet help`"))?;
+        let mut flags = BTreeMap::new();
+        let mut switches = Vec::new();
+        while let Some(a) = it.next() {
+            let Some(name) = a.strip_prefix("--") else {
+                return Err(FxpError::config(format!("unexpected argument '{a}'")));
+            };
+            // --key=value or --key value or --switch
+            if let Some((k, v)) = name.split_once('=') {
+                flags.insert(k.to_string(), v.to_string());
+            } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                flags.insert(name.to_string(), it.next().unwrap());
+            } else {
+                switches.push(name.to_string());
+            }
+        }
+        Ok(Args { command, flags, switches })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| FxpError::config(format!("--{key}: bad integer '{v}'"))),
+        }
+    }
+
+    pub fn f32_or(&self, key: &str, default: f32) -> Result<f32> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| FxpError::config(format!("--{key}: bad float '{v}'"))),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| FxpError::config(format!("--{key}: bad integer '{v}'"))),
+        }
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+
+    pub fn require(&self, key: &str) -> Result<&str> {
+        self.get(key)
+            .ok_or_else(|| FxpError::config(format!("missing required flag --{key}")))
+    }
+}
+
+pub const USAGE: &str = "\
+fxpnet -- fixed-point DCN training (Lin & Talathi 2016 reproduction)
+
+USAGE: fxpnet <command> [flags]
+
+COMMANDS
+  pretrain   train the float baseline network
+             --arch A --steps N --out ckpt [--from ckpt] [--lr F] [--train-n N]
+  grid       run one experiment grid (a paper table)
+             --arch A --regime {none|vanilla|prop1|prop2|prop3} --ckpt F
+             [--out DIR] [--steps N] [--phase-steps N] [--train-n N]
+             [--eval-n N] [--calib {minmax|sqnr}] [--topk K]
+  eval       evaluate a checkpoint at one grid cell
+             --arch A --ckpt F --w {4|8|16|float} --a {4|8|16|float}
+  infer      pure-integer inference + parity vs the XLA path
+             --arch A --ckpt F --w B --a B [--eval-n N]
+  mismatch   per-layer gradient mismatch (section 2.2 analysis)
+             --arch A --ckpt F [--bits B]
+  table1     print the Proposal 3 phase schedule  [--layers N]
+  help       this text
+
+COMMON FLAGS
+  --artifacts DIR   artifact directory (default: ./artifacts or
+                    $FXPNET_ARTIFACTS)
+";
+
+/// Resolve the artifacts directory.
+pub fn artifacts_dir(args: &Args) -> String {
+    args.get("artifacts")
+        .map(|s| s.to_string())
+        .or_else(|| std::env::var("FXPNET_ARTIFACTS").ok())
+        .unwrap_or_else(|| "artifacts".to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|x| x.to_string())).unwrap()
+    }
+
+    #[test]
+    fn parse_flags_and_switches() {
+        let a = parse(&["grid", "--arch", "tiny", "--steps=12", "--verbose"]);
+        assert_eq!(a.command, "grid");
+        assert_eq!(a.get("arch"), Some("tiny"));
+        assert_eq!(a.usize_or("steps", 0).unwrap(), 12);
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+        assert_eq!(a.get_or("missing", "d"), "d");
+    }
+
+    #[test]
+    fn parse_errors() {
+        assert!(Args::parse(Vec::<String>::new()).is_err());
+        assert!(Args::parse(vec!["cmd".into(), "stray".into()]).is_err());
+        let a = parse(&["cmd", "--n", "abc"]);
+        assert!(a.usize_or("n", 1).is_err());
+        assert!(a.require("nope").is_err());
+    }
+
+    #[test]
+    fn trailing_switch() {
+        let a = parse(&["cmd", "--x", "1", "--flag"]);
+        assert!(a.has("flag"));
+        assert_eq!(a.get("x"), Some("1"));
+    }
+}

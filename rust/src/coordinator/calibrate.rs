@@ -1,0 +1,90 @@
+//! Calibration: collect per-layer statistics and resolve Q-formats.
+//!
+//! Activation statistics come from the `stats_batch` executable run on
+//! the *float* network over a few calibration batches (absmax is maxed,
+//! moments averaged); weight statistics are computed host-side from the
+//! parameter tensors.  `quant::calib` turns both into fractional lengths.
+
+use crate::data::loader::sequential_batches;
+use crate::data::synth::Dataset;
+use crate::error::Result;
+use crate::model::params::ParamSet;
+use crate::quant::calib::LayerStats;
+use crate::quant::policy::NetQuant;
+use crate::runtime::literal::{to_literal, HostValue};
+use crate::runtime::Engine;
+use crate::tensor::Tensor;
+
+/// Calibration data for one network.
+#[derive(Clone, Debug)]
+pub struct CalibData {
+    pub a_stats: Vec<LayerStats>,
+}
+
+fn vec_lit(v: &[f32]) -> Result<xla::Literal> {
+    to_literal(&HostValue::F32(Tensor::from_vec(&[v.len()], v.to_vec())?))
+}
+
+/// Run `stats_batch` over up to `batches` calibration batches with
+/// quantization disabled and aggregate.
+pub fn activation_stats(
+    engine: &Engine,
+    arch: &str,
+    params: &ParamSet,
+    data: &Dataset,
+    batches: usize,
+) -> Result<CalibData> {
+    let spec = engine.manifest.arch(arch)?;
+    let exe = engine.executable(arch, "stats_batch")?;
+    let l = spec.num_layers;
+    let float_nq = NetQuant::all_float(l);
+    let v = float_nq.vectors();
+    let cfg = [
+        vec_lit(&v.w_step)?,
+        vec_lit(&v.w_lo)?,
+        vec_lit(&v.w_hi)?,
+        vec_lit(&v.w_en)?,
+        vec_lit(&v.a_step)?,
+        vec_lit(&v.a_lo)?,
+        vec_lit(&v.a_hi)?,
+        vec_lit(&v.a_en)?,
+    ];
+    let param_lits: Vec<xla::Literal> = params
+        .tensors
+        .iter()
+        .map(|t| to_literal(&HostValue::F32(t.clone())))
+        .collect::<Result<_>>()?;
+
+    let mut absmax = vec![0f32; l];
+    let mut meanabs = vec![0f64; l];
+    let mut meansq = vec![0f64; l];
+    let mut used = 0usize;
+    for (images, _labels, _valid) in sequential_batches(data, spec.eval_batch)?
+        .into_iter()
+        .take(batches.max(1))
+    {
+        let x = to_literal(&HostValue::F32(images))?;
+        let mut inputs: Vec<&xla::Literal> = Vec::new();
+        inputs.extend(param_lits.iter());
+        inputs.push(&x);
+        inputs.extend(cfg.iter());
+        let outs = exe.run_literals(&inputs)?;
+        let am = exe.output_host(&outs, "absmax")?.into_f32()?;
+        let ma = exe.output_host(&outs, "meanabs")?.into_f32()?;
+        let ms = exe.output_host(&outs, "meansq")?.into_f32()?;
+        for i in 0..l {
+            absmax[i] = absmax[i].max(am.data()[i]);
+            meanabs[i] += ma.data()[i] as f64;
+            meansq[i] += ms.data()[i] as f64;
+        }
+        used += 1;
+    }
+    let a_stats = (0..l)
+        .map(|i| LayerStats {
+            absmax: absmax[i],
+            meanabs: (meanabs[i] / used as f64) as f32,
+            meansq: (meansq[i] / used as f64) as f32,
+        })
+        .collect();
+    Ok(CalibData { a_stats })
+}

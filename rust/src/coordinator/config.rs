@@ -1,0 +1,84 @@
+//! Run configuration shared by the trainer, regimes, and grid runner.
+
+use crate::quant::calib::CalibMethod;
+
+/// Hyperparameters and workload sizes for one experiment run.
+///
+/// The paper explicitly performs *no* hyperparameter search per cell
+/// ("we did not perform any hyperparameter optimization of the training
+/// parameters"); one `RunCfg` is used for every cell of a grid.
+#[derive(Clone, Debug)]
+pub struct RunCfg {
+    /// learning rate for fine-tuning steps
+    pub lr: f32,
+    /// SGD momentum
+    pub momentum: f32,
+    /// steps for full fine-tuning regimes (vanilla, Proposal 2)
+    pub finetune_steps: usize,
+    /// steps per phase of Proposal 3
+    pub phase_steps: usize,
+    /// pretraining steps (float baseline)
+    pub pretrain_steps: usize,
+    /// pretraining learning rate
+    pub pretrain_lr: f32,
+    /// calibration batches for activation statistics
+    pub calib_batches: usize,
+    /// calibration rule
+    pub method: CalibMethod,
+    /// divergence threshold: loss above this (or NaN/Inf) = n/a
+    pub max_loss: f32,
+    /// RNG seed for init/shuffling/augmentation
+    pub seed: u64,
+    /// data augmentation during training
+    pub augment: bool,
+    /// evaluate top-k error with this k (paper reports Top-5 on 1000
+    /// classes; with 10 classes we report top-1 as primary)
+    pub topk: usize,
+}
+
+impl Default for RunCfg {
+    fn default() -> Self {
+        RunCfg {
+            lr: 0.02,
+            momentum: 0.9,
+            finetune_steps: 200,
+            phase_steps: 40,
+            pretrain_steps: 800,
+            pretrain_lr: 0.05,
+            calib_batches: 4,
+            method: CalibMethod::SqnrGaussian,
+            max_loss: 20.0,
+            seed: 42,
+            augment: true,
+            topk: 1,
+        }
+    }
+}
+
+impl RunCfg {
+    /// Scaled-down configuration for tests and smoke benches.
+    pub fn smoke() -> Self {
+        RunCfg {
+            finetune_steps: 8,
+            phase_steps: 4,
+            pretrain_steps: 20,
+            calib_batches: 2,
+            ..Default::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_sane() {
+        let c = RunCfg::default();
+        assert!(c.lr > 0.0 && c.lr < 1.0);
+        assert!(c.finetune_steps > 0);
+        assert!(c.max_loss > 3.0);
+        let s = RunCfg::smoke();
+        assert!(s.finetune_steps < c.finetune_steps);
+    }
+}

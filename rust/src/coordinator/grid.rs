@@ -1,0 +1,276 @@
+//! The (weight width x activation width) experiment grid -- the engine
+//! behind every results table in the paper.
+
+use std::collections::HashMap;
+
+use crate::bench::Table;
+use crate::coordinator::config::RunCfg;
+use crate::coordinator::regimes::{self, CellCtx, Regime};
+use crate::coordinator::evaluator::EvalResult;
+use crate::error::Result;
+use crate::model::params::ParamSet;
+use crate::quant::calib::LayerStats;
+use crate::quant::policy::WidthSpec;
+use crate::data::synth::Dataset;
+use crate::runtime::Engine;
+
+/// One grid cell outcome.
+#[derive(Clone, Copy, Debug)]
+pub struct CellOutcome {
+    pub w: WidthSpec,
+    pub a: WidthSpec,
+    /// None = training failed to converge (the paper's "n/a")
+    pub eval: Option<EvalResult>,
+}
+
+impl CellOutcome {
+    /// Error percentage string in the paper's table style.
+    pub fn cell_str(&self, topk: usize) -> String {
+        match &self.eval {
+            None => "n/a".to_string(),
+            Some(e) => {
+                let err = if topk >= 5 { e.top5_err } else { e.top1_err };
+                format!("{:.1}", err * 100.0)
+            }
+        }
+    }
+}
+
+/// A completed grid.
+#[derive(Clone, Debug)]
+pub struct GridResult {
+    pub regime: Regime,
+    pub arch: String,
+    pub w_axis: Vec<WidthSpec>,
+    pub a_axis: Vec<WidthSpec>,
+    /// outcomes[a_idx][w_idx]
+    pub outcomes: Vec<Vec<CellOutcome>>,
+}
+
+impl GridResult {
+    /// Render in the paper's layout: rows = activation width, cols =
+    /// weight width.
+    pub fn render(&self, topk: usize) -> String {
+        let metric = if topk >= 5 { "Top-5" } else { "Top-1" };
+        let title = format!(
+            "{} -- {} error rate (%), arch {}",
+            self.regime.label(),
+            metric,
+            self.arch
+        );
+        let mut header = vec!["Act \\ Wgt".to_string()];
+        header.extend(self.w_axis.iter().map(|w| w.label()));
+        let mut t = Table::new(
+            &title,
+            &header.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+        );
+        for (ai, a) in self.a_axis.iter().enumerate() {
+            let mut row = vec![a.label()];
+            for wi in 0..self.w_axis.len() {
+                row.push(self.outcomes[ai][wi].cell_str(topk));
+            }
+            t.row(row);
+        }
+        t.render()
+    }
+
+    pub fn cell(&self, w: WidthSpec, a: WidthSpec) -> Option<&CellOutcome> {
+        let wi = self.w_axis.iter().position(|&x| x == w)?;
+        let ai = self.a_axis.iter().position(|&x| x == a)?;
+        Some(&self.outcomes[ai][wi])
+    }
+}
+
+/// Runs grids.  Caches the float-activation fine-tuned nets ("last row
+/// of Table 3") that seed Proposals 1-3, one per weight width.
+pub struct GridRunner<'a> {
+    pub engine: &'a Engine,
+    pub arch: String,
+    pub base: ParamSet,
+    pub a_stats: Vec<LayerStats>,
+    pub train_data: Dataset,
+    pub eval_data: Dataset,
+    pub cfg: RunCfg,
+    p1_cache: HashMap<String, Option<ParamSet>>,
+}
+
+impl<'a> GridRunner<'a> {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        engine: &'a Engine,
+        arch: &str,
+        base: ParamSet,
+        a_stats: Vec<LayerStats>,
+        train_data: Dataset,
+        eval_data: Dataset,
+        cfg: RunCfg,
+    ) -> GridRunner<'a> {
+        GridRunner {
+            engine,
+            arch: arch.to_string(),
+            base,
+            a_stats,
+            train_data,
+            eval_data,
+            cfg,
+            p1_cache: HashMap::new(),
+        }
+    }
+
+    fn ctx(&self) -> CellCtx<'_> {
+        CellCtx {
+            engine: self.engine,
+            arch: &self.arch,
+            train_data: &self.train_data,
+            eval_data: &self.eval_data,
+            a_stats: &self.a_stats,
+            cfg: &self.cfg,
+        }
+    }
+
+    /// The float-activation fine-tuned net for a weight width (cached).
+    pub fn p1_net(&mut self, w: WidthSpec) -> Result<Option<ParamSet>> {
+        let key = w.label();
+        if !self.p1_cache.contains_key(&key) {
+            log::info!("training float-activation net for weights={key}");
+            let ctx = CellCtx {
+                engine: self.engine,
+                arch: &self.arch,
+                train_data: &self.train_data,
+                eval_data: &self.eval_data,
+                a_stats: &self.a_stats,
+                cfg: &self.cfg,
+            };
+            let net = regimes::train_float_act_net(&ctx, &self.base, w)?;
+            self.p1_cache.insert(key.clone(), net);
+        }
+        Ok(self.p1_cache.get(&key).unwrap().clone())
+    }
+
+    /// Run one cell under `regime`.
+    pub fn run_cell(
+        &mut self,
+        regime: Regime,
+        w: WidthSpec,
+        a: WidthSpec,
+    ) -> Result<CellOutcome> {
+        log::info!(
+            "cell [{} w={} a={}]",
+            regime.label(),
+            w.label(),
+            a.label()
+        );
+        let eval = match regime {
+            Regime::NoFinetune => {
+                regimes::run_no_finetune(&self.ctx(), &self.base, w, a)?
+            }
+            Regime::Vanilla => regimes::run_vanilla(&self.ctx(), &self.base, w, a)?,
+            Regime::Prop1 | Regime::Prop2 { .. } | Regime::Prop3 => {
+                match self.p1_net(w)? {
+                    None => None, // seed training itself diverged
+                    Some(p1) => match regime {
+                        Regime::Prop1 => {
+                            regimes::run_prop1(&self.ctx(), &p1, w, a)?
+                        }
+                        Regime::Prop2 { top_layers } => {
+                            regimes::run_prop2(&self.ctx(), &p1, w, a, top_layers)?
+                        }
+                        Regime::Prop3 => {
+                            // float activations: nothing to schedule; the
+                            // p1 net already IS the answer (matches the
+                            // paper: the Float row repeats across 4-6)
+                            if a == WidthSpec::Float {
+                                regimes::run_prop1(&self.ctx(), &p1, w, a)?
+                            } else {
+                                regimes::run_prop3(&self.ctx(), &p1, w, a)?
+                            }
+                        }
+                        _ => unreachable!(),
+                    },
+                }
+            }
+        };
+        if let Some(e) = &eval {
+            log::info!(
+                "  -> top1 {:.2}% top5 {:.2}% loss {:.3}",
+                e.top1_err * 100.0,
+                e.top5_err * 100.0,
+                e.mean_loss
+            );
+        } else {
+            log::info!("  -> n/a (diverged)");
+        }
+        Ok(CellOutcome { w, a, eval })
+    }
+
+    /// Run the full paper grid for `regime`.
+    pub fn run_grid(&mut self, regime: Regime) -> Result<GridResult> {
+        let w_axis = WidthSpec::paper_axis().to_vec();
+        let a_axis = WidthSpec::paper_axis().to_vec();
+        let mut outcomes = Vec::with_capacity(a_axis.len());
+        for &a in &a_axis {
+            let mut row = Vec::with_capacity(w_axis.len());
+            for &w in &w_axis {
+                row.push(self.run_cell(regime, w, a)?);
+            }
+            outcomes.push(row);
+        }
+        Ok(GridResult {
+            regime,
+            arch: self.arch.clone(),
+            w_axis,
+            a_axis,
+            outcomes,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::policy::WidthSpec as W;
+
+    fn fake_eval(err: f64) -> EvalResult {
+        EvalResult { n: 100, top1_err: err, top5_err: err / 2.0, mean_loss: 1.0 }
+    }
+
+    #[test]
+    fn grid_result_render_and_lookup() {
+        let w_axis = W::paper_axis().to_vec();
+        let a_axis = W::paper_axis().to_vec();
+        let outcomes: Vec<Vec<CellOutcome>> = a_axis
+            .iter()
+            .enumerate()
+            .map(|(ai, &a)| {
+                w_axis
+                    .iter()
+                    .enumerate()
+                    .map(|(wi, &w)| CellOutcome {
+                        w,
+                        a,
+                        eval: if ai == 0 && wi == 0 {
+                            None
+                        } else {
+                            Some(fake_eval(0.01 * (ai * 4 + wi) as f64))
+                        },
+                    })
+                    .collect()
+            })
+            .collect();
+        let g = GridResult {
+            regime: Regime::Vanilla,
+            arch: "tiny".into(),
+            w_axis,
+            a_axis,
+            outcomes,
+        };
+        let s = g.render(1);
+        assert!(s.contains("n/a"));
+        assert!(s.contains("Table 3"));
+        assert!(s.contains("Float"));
+        // w=8 is column 1, a=4 is row 0 -> err = 0.01 * (0*4 + 1) = 1%
+        let c = g.cell(W::Bits(8), W::Bits(4)).unwrap();
+        assert!(c.eval.is_some());
+        assert_eq!(c.cell_str(1), "1.0");
+    }
+}

@@ -1,0 +1,94 @@
+//! Gradient-mismatch measurement (the paper's section 2.2 claim): compare
+//! weight gradients computed through the float graph vs. through the
+//! quantized(-STE) graph, layer by layer, using the `grads` executable.
+
+use crate::data::loader::sequential_batches;
+use crate::data::synth::Dataset;
+use crate::error::Result;
+use crate::model::params::ParamSet;
+use crate::quant::calib::{CalibMethod, LayerStats};
+use crate::quant::policy::{NetQuant, WidthSpec};
+use crate::runtime::literal::{to_literal, HostValue};
+use crate::runtime::Engine;
+use crate::tensor::Tensor;
+
+fn vec_lit(v: &[f32]) -> Result<xla::Literal> {
+    to_literal(&HostValue::F32(Tensor::from_vec(&[v.len()], v.to_vec())?))
+}
+
+fn cfg_lits(nq: &NetQuant) -> Result<Vec<xla::Literal>> {
+    let v = nq.vectors();
+    Ok(vec![
+        vec_lit(&v.w_step)?,
+        vec_lit(&v.w_lo)?,
+        vec_lit(&v.w_hi)?,
+        vec_lit(&v.w_en)?,
+        vec_lit(&v.a_step)?,
+        vec_lit(&v.a_lo)?,
+        vec_lit(&v.a_hi)?,
+        vec_lit(&v.a_en)?,
+    ])
+}
+
+/// Per-layer cosine similarity between float-path and quantized-path
+/// *weight* gradients at `bits`-wide weights and activations (logits kept
+/// at 16-bit, the paper's protocol), averaged over one training batch.
+#[allow(clippy::too_many_arguments)]
+pub fn gradient_mismatch(
+    engine: &Engine,
+    arch: &str,
+    params: &ParamSet,
+    a_stats: &[LayerStats],
+    data: &Dataset,
+    bits: u8,
+    method: CalibMethod,
+) -> Result<Vec<f64>> {
+    let spec = engine.manifest.arch(arch)?;
+    let exe = engine.executable(arch, "grads")?;
+    let l = spec.num_layers;
+
+    let float_cfg = cfg_lits(&NetQuant::all_float(l))?;
+    let q = NetQuant::for_cell(
+        WidthSpec::Bits(bits),
+        WidthSpec::Bits(bits),
+        &params.weight_stats(),
+        a_stats,
+        method,
+    )?;
+    let quant_cfg = cfg_lits(&q)?;
+
+    let param_lits: Vec<xla::Literal> = params
+        .tensors
+        .iter()
+        .map(|t| to_literal(&HostValue::F32(t.clone())))
+        .collect::<Result<_>>()?;
+
+    // one batch at the training batch size
+    let (images, labels, _) = sequential_batches(data, spec.train_batch)?
+        .into_iter()
+        .next()
+        .expect("dataset empty");
+    let x = to_literal(&HostValue::F32(images))?;
+    let y = to_literal(&HostValue::I32(labels))?;
+
+    let run = |cfg: &[xla::Literal]| -> Result<Vec<xla::Literal>> {
+        let mut inputs: Vec<&xla::Literal> = Vec::new();
+        inputs.extend(param_lits.iter());
+        inputs.push(&x);
+        inputs.push(&y);
+        inputs.extend(cfg.iter());
+        exe.run_literals(&inputs)
+    };
+    let outs_f = run(&float_cfg)?;
+    let outs_q = run(&quant_cfg)?;
+
+    // outputs: loss, then g.<param> in param order; weight grads at 1 + 2l
+    let mut cosines = Vec::with_capacity(l);
+    for li in 0..l {
+        let idx = 1 + 2 * li;
+        let gf = exe.output_host(&outs_f, &exe.spec.outputs[idx].name)?.into_f32()?;
+        let gq = exe.output_host(&outs_q, &exe.spec.outputs[idx].name)?.into_f32()?;
+        cosines.push(gf.cosine(&gq)?);
+    }
+    Ok(cosines)
+}

@@ -1,0 +1,33 @@
+//! The coordinator: the paper's *procedure* contribution, in Rust.
+//!
+//! The AOT executables know one thing: run a training/eval/stats/grads
+//! step under whatever per-layer quantization configuration they are
+//! handed.  Everything the paper actually proposes -- which layers'
+//! activations are fixed point when, which layers' weights update when,
+//! what happens after divergence -- is *data* constructed here:
+//!
+//! * `calibrate` -- activation/weight statistics -> per-layer Q-formats
+//!   (min-max or the companion paper's SQNR rule);
+//! * `trainer`   -- the SGD step loop over literal state, with divergence
+//!   detection (the paper's "fails to converge" = our `n/a`);
+//! * `phases`    -- the Table 1 bottom-to-top schedule of Proposal 3;
+//! * `regimes`   -- no-fine-tune / vanilla / Proposals 1-3 as strategies;
+//! * `grid`      -- the (weight width x activation width) experiment grid
+//!   behind every results table;
+//! * `evaluator` -- held-out top-k error;
+//! * `report`    -- paper-style table rendering and JSON result dumps.
+
+pub mod calibrate;
+pub mod config;
+pub mod evaluator;
+pub mod grid;
+pub mod mismatch;
+pub mod phases;
+pub mod regimes;
+pub mod report;
+pub mod trainer;
+
+pub use config::RunCfg;
+pub use grid::{CellOutcome, GridResult, GridRunner};
+pub use regimes::Regime;
+pub use trainer::{TrainOutcome, Trainer};

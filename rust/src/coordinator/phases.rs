@@ -1,0 +1,140 @@
+//! Proposal 3: the bottom-to-top iterative fine-tuning schedule
+//! (the paper's Table 1).
+//!
+//! For an L-layer network there are L-1 phases.  During phase p
+//! (1-indexed like the paper):
+//!
+//! * activations of layers 0..p are fixed point (`act_prefix = p`),
+//!   everything above stays float;
+//! * exactly layer p's weights update (`update_layer = p`, 0-indexed),
+//!   i.e. Phase 1 fine-tunes Layer2 in the paper's 1-indexed naming;
+//! * layer 0's weights are quantized but never fine-tuned.
+//!
+//! The invariant the schedule is designed around (checked by
+//! `gradient_path_is_float`): the gradient that reaches the updating
+//! layer only ever back-propagates through float-activation layers, so
+//! no gradient mismatch accumulates.
+
+/// One phase of the Table 1 schedule.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Phase {
+    /// 1-indexed phase number (paper naming)
+    pub number: usize,
+    /// layers 0..act_prefix have fixed-point activations
+    pub act_prefix: usize,
+    /// the (0-indexed) layer whose weights update this phase
+    pub update_layer: usize,
+}
+
+impl Phase {
+    /// True iff every layer the error signal crosses on its way to
+    /// `update_layer`'s weight gradient has float activations.
+    /// The weight gradient of layer l needs error signals from layers
+    /// l..L-1; those are computed through activations of layers >= l.
+    pub fn gradient_path_is_float(&self, _num_layers: usize) -> bool {
+        // layers with indices < act_prefix have quantized activations; the
+        // error signal reaching update_layer's weights only crosses the
+        // activations of layers >= update_layer, so the path is float iff
+        // the quantized prefix sits at or below the updating layer.
+        self.update_layer >= self.act_prefix
+    }
+}
+
+/// Build the full schedule for `num_layers` weighted layers.
+pub fn schedule(num_layers: usize) -> Vec<Phase> {
+    (1..num_layers)
+        .map(|p| Phase { number: p, act_prefix: p, update_layer: p })
+        .collect()
+}
+
+/// Render the schedule in the paper's Table 1 layout (for
+/// `fxpnet report --table1` and the docs).
+pub fn render_table1(num_layers: usize) -> String {
+    let phases = schedule(num_layers);
+    let mut t = crate::bench::Table::new(
+        &format!("Table 1: iterative fine-tuning phases ({num_layers} layers)"),
+        &std::iter::once("Layer".to_string())
+            .chain(phases.iter().map(|p| format!("Phase {} (A/W)", p.number)))
+            .collect::<Vec<_>>()
+            .iter()
+            .map(|s| s.as_str())
+            .collect::<Vec<_>>(),
+    );
+    for l in (0..num_layers).rev() {
+        let mut row = vec![format!("Layer{}", l + 1)];
+        for p in &phases {
+            let acts = if l < p.act_prefix { "FixPt" } else { "Float" };
+            let wgts = if l == p.update_layer { "update" } else { "-" };
+            row.push(format!("{acts}/{wgts}"));
+        }
+        t.row(row);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn four_layer_schedule_matches_paper_table1() {
+        // the paper's example: 4 layers, 3 phases
+        let s = schedule(4);
+        assert_eq!(s.len(), 3);
+        // Phase 1: Layer1 acts fixed point; Layer2 (0-indexed 1) updates
+        assert_eq!(s[0], Phase { number: 1, act_prefix: 1, update_layer: 1 });
+        // Phase 2: Layer1-2 acts fixed point; Layer3 updates
+        assert_eq!(s[1], Phase { number: 2, act_prefix: 2, update_layer: 2 });
+        // Phase 3: Layer1-3 acts fixed point; Layer4 updates
+        assert_eq!(s[2], Phase { number: 3, act_prefix: 3, update_layer: 3 });
+    }
+
+    #[test]
+    fn layer0_never_updates() {
+        for n in 2..12 {
+            assert!(schedule(n).iter().all(|p| p.update_layer != 0));
+        }
+    }
+
+    #[test]
+    fn every_other_layer_updates_once() {
+        for n in 2..12 {
+            let mut seen: Vec<usize> = schedule(n).iter().map(|p| p.update_layer).collect();
+            seen.sort();
+            assert_eq!(seen, (1..n).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn act_prefix_monotone_and_final() {
+        let s = schedule(11);
+        for w in s.windows(2) {
+            assert!(w[1].act_prefix == w[0].act_prefix + 1);
+        }
+        // last phase: all but the head activation fixed point
+        assert_eq!(s.last().unwrap().act_prefix, 10);
+    }
+
+    #[test]
+    fn gradient_never_crosses_quantized_activation() {
+        // the core design property of Proposal 3
+        for n in 2..12 {
+            for p in schedule(n) {
+                assert!(p.gradient_path_is_float(n), "phase {p:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn table1_renders() {
+        let s = render_table1(4);
+        assert!(s.contains("Phase 1"));
+        assert!(s.contains("Layer4"));
+        // paper Table 1 spot checks: phase 1 has Layer2 updating, Layer1 FixPt
+        let lines: Vec<&str> = s.lines().collect();
+        let layer2 = lines.iter().find(|l| l.contains("Layer2")).unwrap();
+        assert!(layer2.contains("Float/update"));
+        let layer1 = lines.iter().find(|l| l.contains("Layer1")).unwrap();
+        assert!(layer1.contains("FixPt/-"));
+    }
+}

@@ -1,0 +1,275 @@
+//! The five experiment regimes behind the paper's Tables 2-6.
+//!
+//! Every regime answers: given the pretrained float network, what are
+//! the parameters and the quantization configuration we finally evaluate
+//! for grid cell (weight width, activation width)?
+//!
+//! * `NoFinetune`  (Table 2): quantize, evaluate.
+//! * `Vanilla`     (Table 3): fine-tune all layers under the cell's full
+//!   quantization; divergence -> n/a.
+//! * `Prop1`       (Table 4): take the float-activation fine-tuned net
+//!   for this weight width ("the last row of Table 3") and just switch
+//!   on activation quantization at eval.
+//! * `Prop2`       (Table 5): from the Prop1 net, fine-tune only the top
+//!   layer(s) under full quantization.
+//! * `Prop3`       (Table 6): from the Prop1 net, run the Table 1
+//!   bottom-to-top phase schedule, then evaluate fully quantized.
+
+use crate::coordinator::config::RunCfg;
+use crate::coordinator::evaluator::{evaluate, EvalResult};
+use crate::coordinator::phases;
+use crate::coordinator::trainer::{upd_all, upd_single, upd_top, Trainer};
+use crate::data::loader::LoaderCfg;
+use crate::data::synth::Dataset;
+use crate::error::Result;
+use crate::model::params::ParamSet;
+use crate::quant::calib::LayerStats;
+use crate::quant::policy::{NetQuant, WidthSpec};
+use crate::runtime::Engine;
+
+/// Regime selector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Regime {
+    NoFinetune,
+    Vanilla,
+    Prop1,
+    Prop2 { top_layers: usize },
+    Prop3,
+}
+
+impl Regime {
+    pub fn parse(s: &str) -> Option<Regime> {
+        match s {
+            "none" | "noft" => Some(Regime::NoFinetune),
+            "vanilla" => Some(Regime::Vanilla),
+            "prop1" => Some(Regime::Prop1),
+            "prop2" => Some(Regime::Prop2 { top_layers: 1 }),
+            "prop3" => Some(Regime::Prop3),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Regime::NoFinetune => "no fine-tuning (Table 2)",
+            Regime::Vanilla => "vanilla fine-tuning (Table 3)",
+            Regime::Prop1 => "Proposal 1 (Table 4)",
+            Regime::Prop2 { .. } => "Proposal 2 (Table 5)",
+            Regime::Prop3 => "Proposal 3 (Table 6)",
+        }
+    }
+
+    /// Which paper table this regime regenerates.
+    pub fn table_number(&self) -> usize {
+        match self {
+            Regime::NoFinetune => 2,
+            Regime::Vanilla => 3,
+            Regime::Prop1 => 4,
+            Regime::Prop2 { .. } => 5,
+            Regime::Prop3 => 6,
+        }
+    }
+}
+
+/// Everything the regimes need to run one cell.
+pub struct CellCtx<'a> {
+    pub engine: &'a Engine,
+    pub arch: &'a str,
+    pub train_data: &'a Dataset,
+    pub eval_data: &'a Dataset,
+    /// activation stats of the pretrained float net
+    pub a_stats: &'a [LayerStats],
+    pub cfg: &'a RunCfg,
+}
+
+impl<'a> CellCtx<'a> {
+    fn loader_cfg(&self, tag: u64) -> Result<LoaderCfg> {
+        let spec = self.engine.manifest.arch(self.arch)?;
+        Ok(LoaderCfg {
+            batch: spec.train_batch,
+            augment: self.cfg.augment,
+            max_shift: 2,
+            seed: self.cfg.seed ^ tag,
+        })
+    }
+
+    /// Resolve the cell's full quantization against `params`' weights.
+    pub fn resolve(
+        &self,
+        params: &ParamSet,
+        w: WidthSpec,
+        a: WidthSpec,
+    ) -> Result<NetQuant> {
+        let w_stats = params.weight_stats();
+        NetQuant::for_cell(w, a, &w_stats, self.a_stats, self.cfg.method)
+    }
+
+    fn trainer(
+        &self,
+        params: &ParamSet,
+        nq: &NetQuant,
+        upd: &[f32],
+        tag: u64,
+    ) -> Result<Trainer> {
+        Trainer::new(
+            self.engine,
+            self.arch,
+            params,
+            nq,
+            upd,
+            self.cfg.lr,
+            self.cfg.momentum,
+            self.train_data.clone(),
+            self.loader_cfg(tag)?,
+            self.cfg.max_loss,
+        )
+    }
+}
+
+/// Outcome of one cell: Some(eval) or None when training diverged.
+pub type CellResult = Option<EvalResult>;
+
+/// Table 2: quantize the pretrained net, no fine-tuning.
+pub fn run_no_finetune(
+    ctx: &CellCtx,
+    base: &ParamSet,
+    w: WidthSpec,
+    a: WidthSpec,
+) -> Result<CellResult> {
+    let nq = ctx.resolve(base, w, a)?;
+    Ok(Some(evaluate(ctx.engine, ctx.arch, base, &nq, ctx.eval_data)?))
+}
+
+/// Table 3: plain fine-tuning of all layers under the cell's config.
+pub fn run_vanilla(
+    ctx: &CellCtx,
+    base: &ParamSet,
+    w: WidthSpec,
+    a: WidthSpec,
+) -> Result<CellResult> {
+    let nq = ctx.resolve(base, w, a)?;
+    let l = nq.num_layers();
+    let mut tr = ctx.trainer(base, &nq, &upd_all(l), 3)?;
+    let out = tr.run(ctx.cfg.finetune_steps, 10)?;
+    if out.diverged {
+        return Ok(None);
+    }
+    let tuned = tr.params()?;
+    // re-resolve weight formats against the *tuned* weights for eval
+    let nq_eval = ctx.resolve(&tuned, w, a)?;
+    Ok(Some(evaluate(ctx.engine, ctx.arch, &tuned, &nq_eval, ctx.eval_data)?))
+}
+
+/// The "last row of Table 3": fine-tune with quantized weights but float
+/// activations.  These nets seed Proposals 1-3; the grid runner caches
+/// one per weight width.
+pub fn train_float_act_net(
+    ctx: &CellCtx,
+    base: &ParamSet,
+    w: WidthSpec,
+) -> Result<Option<ParamSet>> {
+    if w == WidthSpec::Float {
+        return Ok(Some(base.clone()));
+    }
+    let nq = ctx.resolve(base, w, WidthSpec::Float)?;
+    let l = nq.num_layers();
+    let mut tr = ctx.trainer(base, &nq, &upd_all(l), 5)?;
+    let out = tr.run(ctx.cfg.finetune_steps, 10)?;
+    if out.diverged {
+        return Ok(None);
+    }
+    Ok(Some(tr.params()?))
+}
+
+/// Table 4 (Proposal 1): evaluate the float-activation net with the
+/// cell's activation quantization switched on post-hoc.
+pub fn run_prop1(
+    ctx: &CellCtx,
+    p1net: &ParamSet,
+    w: WidthSpec,
+    a: WidthSpec,
+) -> Result<CellResult> {
+    let nq = ctx.resolve(p1net, w, a)?;
+    Ok(Some(evaluate(ctx.engine, ctx.arch, p1net, &nq, ctx.eval_data)?))
+}
+
+/// Table 5 (Proposal 2): from the Prop1 net, fine-tune only the top
+/// `top_layers` layers under the full cell config.
+pub fn run_prop2(
+    ctx: &CellCtx,
+    p1net: &ParamSet,
+    w: WidthSpec,
+    a: WidthSpec,
+    top_layers: usize,
+) -> Result<CellResult> {
+    let nq = ctx.resolve(p1net, w, a)?;
+    let l = nq.num_layers();
+    let mut tr = ctx.trainer(p1net, &nq, &upd_top(l, top_layers), 7)?;
+    let out = tr.run(ctx.cfg.finetune_steps, 10)?;
+    if out.diverged {
+        return Ok(None);
+    }
+    let tuned = tr.params()?;
+    let nq_eval = ctx.resolve(&tuned, w, a)?;
+    Ok(Some(evaluate(ctx.engine, ctx.arch, &tuned, &nq_eval, ctx.eval_data)?))
+}
+
+/// Table 6 (Proposal 3): the Table 1 schedule from the Prop1 net.
+pub fn run_prop3(
+    ctx: &CellCtx,
+    p1net: &ParamSet,
+    w: WidthSpec,
+    a: WidthSpec,
+) -> Result<CellResult> {
+    let full = ctx.resolve(p1net, w, a)?;
+    let l = full.num_layers();
+    let sched = phases::schedule(l);
+    // start from phase 1's configuration
+    let mut tr = {
+        let p = sched[0];
+        let nq = full.with_act_prefix(p.act_prefix);
+        ctx.trainer(p1net, &nq, &upd_single(l, p.update_layer), 11)?
+    };
+    for (i, p) in sched.iter().enumerate() {
+        if i > 0 {
+            let nq = full.with_act_prefix(p.act_prefix);
+            tr.set_config(
+                &nq,
+                &upd_single(l, p.update_layer),
+                ctx.cfg.lr,
+                ctx.cfg.momentum,
+            )?;
+            tr.reset_momenta()?;
+        }
+        let out = tr.run(ctx.cfg.phase_steps, 10)?;
+        if out.diverged {
+            log::warn!("prop3 phase {} diverged", p.number);
+            return Ok(None);
+        }
+    }
+    let tuned = tr.params()?;
+    let nq_eval = ctx.resolve(&tuned, w, a)?;
+    Ok(Some(evaluate(ctx.engine, ctx.arch, &tuned, &nq_eval, ctx.eval_data)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn regime_parse_and_labels() {
+        assert_eq!(Regime::parse("vanilla"), Some(Regime::Vanilla));
+        assert_eq!(Regime::parse("prop2"), Some(Regime::Prop2 { top_layers: 1 }));
+        assert_eq!(Regime::parse("bogus"), None);
+        for (r, t) in [
+            (Regime::NoFinetune, 2),
+            (Regime::Vanilla, 3),
+            (Regime::Prop1, 4),
+            (Regime::Prop2 { top_layers: 1 }, 5),
+            (Regime::Prop3, 6),
+        ] {
+            assert_eq!(r.table_number(), t);
+            assert!(r.label().contains(&format!("Table {t}")));
+        }
+    }
+}

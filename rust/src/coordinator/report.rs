@@ -1,0 +1,123 @@
+//! Result persistence: paper-style text reports and JSON dumps that the
+//! bench harness and EXPERIMENTS.md consume.
+
+use std::path::Path;
+
+use crate::coordinator::grid::GridResult;
+use crate::error::Result;
+use crate::util::json::Json;
+
+/// Serialise a grid to JSON (for results/ dumps).
+pub fn grid_to_json(g: &GridResult) -> Json {
+    let mut rows = Vec::new();
+    for row in &g.outcomes {
+        for c in row {
+            rows.push(Json::obj(vec![
+                ("w", Json::Str(c.w.label())),
+                ("a", Json::Str(c.a.label())),
+                (
+                    "top1_err",
+                    match &c.eval {
+                        Some(e) => Json::Num(e.top1_err),
+                        None => Json::Null,
+                    },
+                ),
+                (
+                    "top5_err",
+                    match &c.eval {
+                        Some(e) => Json::Num(e.top5_err),
+                        None => Json::Null,
+                    },
+                ),
+                (
+                    "loss",
+                    match &c.eval {
+                        Some(e) => Json::Num(e.mean_loss),
+                        None => Json::Null,
+                    },
+                ),
+            ]));
+        }
+    }
+    Json::obj(vec![
+        ("table", Json::from(g.regime.table_number())),
+        ("regime", Json::from(g.regime.label())),
+        ("arch", Json::Str(g.arch.clone())),
+        ("cells", Json::Arr(rows)),
+    ])
+}
+
+/// Write a grid's text + JSON forms under `dir`.
+pub fn save_grid(g: &GridResult, dir: impl AsRef<Path>, topk: usize) -> Result<()> {
+    let dir = dir.as_ref();
+    std::fs::create_dir_all(dir)?;
+    let stem = format!("table{}_{}", g.regime.table_number(), g.arch);
+    std::fs::write(dir.join(format!("{stem}.txt")), g.render(topk))?;
+    std::fs::write(
+        dir.join(format!("{stem}.json")),
+        grid_to_json(g).to_string(),
+    )?;
+    log::info!("wrote {}/{stem}.{{txt,json}}", dir.display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::evaluator::EvalResult;
+    use crate::coordinator::grid::CellOutcome;
+    use crate::coordinator::regimes::Regime;
+    use crate::quant::policy::WidthSpec as W;
+
+    fn grid() -> GridResult {
+        GridResult {
+            regime: Regime::Prop3,
+            arch: "tiny".into(),
+            w_axis: vec![W::Bits(4), W::Float],
+            a_axis: vec![W::Bits(4), W::Float],
+            outcomes: vec![
+                vec![
+                    CellOutcome { w: W::Bits(4), a: W::Bits(4), eval: None },
+                    CellOutcome {
+                        w: W::Float,
+                        a: W::Bits(4),
+                        eval: Some(EvalResult {
+                            n: 10,
+                            top1_err: 0.25,
+                            top5_err: 0.05,
+                            mean_loss: 1.2,
+                        }),
+                    },
+                ],
+                vec![
+                    CellOutcome { w: W::Bits(4), a: W::Float, eval: None },
+                    CellOutcome { w: W::Float, a: W::Float, eval: None },
+                ],
+            ],
+        }
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let j = grid_to_json(&grid());
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("table").unwrap().as_usize().unwrap(), 6);
+        let cells = parsed.get("cells").unwrap().as_arr().unwrap();
+        assert_eq!(cells.len(), 4);
+        assert_eq!(*cells[0].get("top1_err").unwrap(), Json::Null);
+        assert!(
+            (cells[1].get("top1_err").unwrap().as_f64().unwrap() - 0.25).abs()
+                < 1e-12
+        );
+    }
+
+    #[test]
+    fn save_writes_files() {
+        let dir = std::env::temp_dir().join("fxp_report_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        save_grid(&grid(), &dir, 1).unwrap();
+        assert!(dir.join("table6_tiny.txt").exists());
+        let j = std::fs::read_to_string(dir.join("table6_tiny.json")).unwrap();
+        assert!(Json::parse(&j).is_ok());
+    }
+}

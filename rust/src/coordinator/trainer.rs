@@ -1,0 +1,262 @@
+//! The SGD step loop.
+//!
+//! State (parameters + momenta) lives as XLA literals and is fed straight
+//! from one step's outputs into the next step's inputs -- only the batch
+//! and the scalar loss cross the host boundary per step (measured in
+//! EXPERIMENTS.md section Perf).  Quantization configuration, update
+//! masks, lr and momentum are literals too, rebuilt only when a regime /
+//! phase changes them.
+
+use std::rc::Rc;
+
+use crate::data::loader::{Loader, LoaderCfg};
+use crate::data::synth::Dataset;
+use crate::error::{FxpError, Result};
+use crate::model::manifest::ArchSpec;
+use crate::model::params::ParamSet;
+use crate::quant::policy::NetQuant;
+use crate::runtime::literal::{to_literal, HostValue};
+use crate::runtime::{Engine, Executable};
+use crate::tensor::Tensor;
+
+/// Result of a training run.
+#[derive(Clone, Debug)]
+pub struct TrainOutcome {
+    /// (step, loss) samples
+    pub history: Vec<(usize, f32)>,
+    /// true if the run hit the divergence detector
+    pub diverged: bool,
+    /// steps actually executed
+    pub steps: usize,
+}
+
+impl TrainOutcome {
+    pub fn final_loss(&self) -> Option<f32> {
+        self.history.last().map(|&(_, l)| l)
+    }
+
+    /// Mean loss over the last `n` recorded samples.
+    pub fn tail_mean(&self, n: usize) -> f32 {
+        if self.history.is_empty() {
+            return f32::NAN;
+        }
+        let tail = &self.history[self.history.len().saturating_sub(n)..];
+        tail.iter().map(|&(_, l)| l).sum::<f32>() / tail.len() as f32
+    }
+}
+
+/// Per-layer update mask builders (the `upd` input of `train_step`).
+pub fn upd_all(num_layers: usize) -> Vec<f32> {
+    vec![1.0; num_layers]
+}
+
+/// Proposal 2: only the top `k` layers update.
+pub fn upd_top(num_layers: usize, k: usize) -> Vec<f32> {
+    let mut v = vec![0.0; num_layers];
+    for l in num_layers.saturating_sub(k)..num_layers {
+        v[l] = 1.0;
+    }
+    v
+}
+
+/// Proposal 3 phases: exactly one layer updates.
+pub fn upd_single(num_layers: usize, layer: usize) -> Vec<f32> {
+    let mut v = vec![0.0; num_layers];
+    v[layer] = 1.0;
+    v
+}
+
+pub struct Trainer {
+    exe: Rc<Executable>,
+    arch: ArchSpec,
+    loader: Loader,
+    /// params (2L) followed by momenta (2L), as literals
+    state: Vec<xla::Literal>,
+    /// w cfg (4) + a cfg (4) + upd + lr + mu, as literals
+    cfg: Vec<xla::Literal>,
+    pub max_loss: f32,
+    step: usize,
+}
+
+fn vec_lit(v: &[f32]) -> Result<xla::Literal> {
+    to_literal(&HostValue::F32(Tensor::from_vec(&[v.len()], v.to_vec())?))
+}
+
+fn scalar_lit(v: f32) -> Result<xla::Literal> {
+    to_literal(&HostValue::F32(Tensor::from_vec(&[1], vec![v])?))
+}
+
+impl Trainer {
+    /// Build a trainer for `arch` starting from `params` (momenta zero).
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        engine: &Engine,
+        arch_name: &str,
+        params: &ParamSet,
+        nq: &NetQuant,
+        upd: &[f32],
+        lr: f32,
+        momentum: f32,
+        data: Dataset,
+        loader_cfg: LoaderCfg,
+        max_loss: f32,
+    ) -> Result<Trainer> {
+        let arch = engine.manifest.arch(arch_name)?.clone();
+        if loader_cfg.batch != arch.train_batch {
+            return Err(FxpError::config(format!(
+                "loader batch {} != arch train batch {}",
+                loader_cfg.batch, arch.train_batch
+            )));
+        }
+        let exe = engine.executable(arch_name, "train_step")?;
+        let mut state = Vec::with_capacity(2 * params.len());
+        for t in &params.tensors {
+            state.push(to_literal(&HostValue::F32(t.clone()))?);
+        }
+        for t in &params.tensors {
+            state.push(to_literal(&HostValue::F32(Tensor::zeros(t.shape())))?);
+        }
+        let cfg = Self::build_cfg(nq, upd, lr, momentum)?;
+        let loader = Loader::spawn(data, loader_cfg);
+        Ok(Trainer { exe, arch, loader, state, cfg, max_loss, step: 0 })
+    }
+
+    fn build_cfg(
+        nq: &NetQuant,
+        upd: &[f32],
+        lr: f32,
+        momentum: f32,
+    ) -> Result<Vec<xla::Literal>> {
+        let v = nq.vectors();
+        Ok(vec![
+            vec_lit(&v.w_step)?,
+            vec_lit(&v.w_lo)?,
+            vec_lit(&v.w_hi)?,
+            vec_lit(&v.w_en)?,
+            vec_lit(&v.a_step)?,
+            vec_lit(&v.a_lo)?,
+            vec_lit(&v.a_hi)?,
+            vec_lit(&v.a_en)?,
+            vec_lit(upd)?,
+            scalar_lit(lr)?,
+            scalar_lit(momentum)?,
+        ])
+    }
+
+    /// Swap the quantization / update / lr configuration (phase change);
+    /// parameter and momentum state is preserved.
+    pub fn set_config(
+        &mut self,
+        nq: &NetQuant,
+        upd: &[f32],
+        lr: f32,
+        momentum: f32,
+    ) -> Result<()> {
+        self.cfg = Self::build_cfg(nq, upd, lr, momentum)?;
+        Ok(())
+    }
+
+    /// Reset momenta to zero (used between Proposal 3 phases so stale
+    /// velocity from the previous phase's layer does not leak).
+    pub fn reset_momenta(&mut self) -> Result<()> {
+        let n = self.state.len() / 2;
+        for i in 0..n {
+            let spec = &self.exe.spec.inputs[n + i];
+            self.state[n + i] =
+                to_literal(&HostValue::F32(Tensor::zeros(&spec.shape)))?;
+        }
+        Ok(())
+    }
+
+    pub fn global_step(&self) -> usize {
+        self.step
+    }
+
+    /// One SGD step; returns the batch loss.
+    pub fn step(&mut self) -> Result<f32> {
+        let batch = self.loader.next_batch();
+        let x = to_literal(&HostValue::F32(batch.images))?;
+        let y = to_literal(&HostValue::I32(batch.labels))?;
+        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(
+            self.state.len() + 2 + self.cfg.len(),
+        );
+        inputs.extend(self.state.iter());
+        inputs.push(&x);
+        inputs.push(&y);
+        inputs.extend(self.cfg.iter());
+        let mut outs = self.exe.run_literals(&inputs)?;
+        let loss_lit = outs.pop().expect("train_step outputs");
+        let loss: f32 = loss_lit.get_first_element()?;
+        self.state = outs;
+        self.step += 1;
+        Ok(loss)
+    }
+
+    /// Run `steps` steps with divergence detection; records the loss every
+    /// `record_every` steps (and always the last).
+    ///
+    /// "Diverged" (the paper's *fails to converge*, rendered `n/a` in the
+    /// tables) means any of:
+    /// * the loss goes NaN/Inf or exceeds `max_loss` at any step;
+    /// * for runs of >= 30 steps: the trailing-mean loss ends up clearly
+    ///   *above* where the run started -- fine-tuning made the network
+    ///   worse, which is exactly what happens when the mismatched
+    ///   gradients point the wrong way (see results/gradient_mismatch_*).
+    pub fn run(&mut self, steps: usize, record_every: usize) -> Result<TrainOutcome> {
+        let mut history = Vec::new();
+        let mut first_losses: Vec<f32> = Vec::new();
+        let mut tail: std::collections::VecDeque<f32> =
+            std::collections::VecDeque::with_capacity(8);
+        for i in 0..steps {
+            let loss = self.step()?;
+            if first_losses.len() < 5 {
+                first_losses.push(loss);
+            }
+            if tail.len() == 8 {
+                tail.pop_front();
+            }
+            tail.push_back(loss);
+            if i % record_every.max(1) == 0 || i + 1 == steps {
+                history.push((self.step, loss));
+            }
+            if !loss.is_finite() || loss > self.max_loss {
+                log::warn!(
+                    "diverged at step {} (loss {loss}): marking n/a",
+                    self.step
+                );
+                return Ok(TrainOutcome { history, diverged: true, steps: i + 1 });
+            }
+        }
+        if steps >= 30 {
+            let start =
+                first_losses.iter().sum::<f32>() / first_losses.len().max(1) as f32;
+            let end = tail.iter().sum::<f32>() / tail.len().max(1) as f32;
+            if end > (start * 1.3).max(start + 0.7) {
+                log::warn!(
+                    "failed to converge: loss {start:.3} -> {end:.3} over {steps} \
+                     steps; marking n/a"
+                );
+                return Ok(TrainOutcome { history, diverged: true, steps });
+            }
+        }
+        Ok(TrainOutcome { history, diverged: false, steps })
+    }
+
+    /// Read the current parameters back to the host.
+    pub fn params(&self) -> Result<ParamSet> {
+        let n = self.state.len() / 2;
+        let mut names = Vec::with_capacity(n);
+        let mut tensors = Vec::with_capacity(n);
+        for i in 0..n {
+            let spec = &self.exe.spec.inputs[i];
+            names.push(spec.name.clone());
+            let data = self.state[i].to_vec::<f32>()?;
+            tensors.push(Tensor::from_vec(&spec.shape, data)?);
+        }
+        Ok(ParamSet { names, tensors })
+    }
+
+    pub fn arch(&self) -> &ArchSpec {
+        &self.arch
+    }
+}

@@ -1,0 +1,117 @@
+//! Training-time augmentation: horizontal flip + pad-and-crop shifts,
+//! applied by the loader's worker thread on the host (never on the
+//! request path of the XLA executables).
+
+use crate::util::rng::Rng;
+
+/// Flip one HWC image horizontally in place.
+pub fn hflip(px: &mut [f32], h: usize, w: usize, c: usize) {
+    for y in 0..h {
+        for x in 0..w / 2 {
+            for ch in 0..c {
+                let a = y * w * c + x * c + ch;
+                let b = y * w * c + (w - 1 - x) * c + ch;
+                px.swap(a, b);
+            }
+        }
+    }
+}
+
+/// Shift one HWC image by (dy, dx) pixels (zero padding) into `out`.
+pub fn shift(px: &[f32], out: &mut [f32], h: usize, w: usize, c: usize, dy: i32, dx: i32) {
+    out.fill(0.0);
+    for y in 0..h as i32 {
+        let sy = y - dy;
+        if sy < 0 || sy >= h as i32 {
+            continue;
+        }
+        for x in 0..w as i32 {
+            let sx = x - dx;
+            if sx < 0 || sx >= w as i32 {
+                continue;
+            }
+            let src = (sy as usize * w + sx as usize) * c;
+            let dst = (y as usize * w + x as usize) * c;
+            out[dst..dst + c].copy_from_slice(&px[src..src + c]);
+        }
+    }
+}
+
+/// Augment a batch in place: each image flips with p=0.5 and shifts
+/// uniformly in [-max_shift, max_shift]^2.
+pub fn augment_batch(
+    batch: &mut [f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    max_shift: i32,
+    rng: &mut Rng,
+) {
+    let img_len = h * w * c;
+    let mut tmp = vec![0f32; img_len];
+    for i in 0..n {
+        let img = &mut batch[i * img_len..(i + 1) * img_len];
+        if rng.uniform() < 0.5 {
+            hflip(img, h, w, c);
+        }
+        if max_shift > 0 {
+            let dy = rng.below((2 * max_shift + 1) as usize) as i32 - max_shift;
+            let dx = rng.below((2 * max_shift + 1) as usize) as i32 - max_shift;
+            if dy != 0 || dx != 0 {
+                shift(img, &mut tmp, h, w, c, dy, dx);
+                img.copy_from_slice(&tmp);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hflip_involution() {
+        let mut px: Vec<f32> = (0..2 * 4 * 3).map(|i| i as f32).collect();
+        let orig = px.clone();
+        hflip(&mut px, 2, 4, 3);
+        assert_ne!(px, orig);
+        hflip(&mut px, 2, 4, 3);
+        assert_eq!(px, orig);
+    }
+
+    #[test]
+    fn hflip_moves_columns() {
+        // 1x3x1 image [1,2,3] -> [3,2,1]
+        let mut px = vec![1.0, 2.0, 3.0];
+        hflip(&mut px, 1, 3, 1);
+        assert_eq!(px, vec![3.0, 2.0, 1.0]);
+    }
+
+    #[test]
+    fn shift_zero_is_identity() {
+        let px: Vec<f32> = (0..3 * 3 * 2).map(|i| i as f32).collect();
+        let mut out = vec![0f32; px.len()];
+        shift(&px, &mut out, 3, 3, 2, 0, 0);
+        assert_eq!(px, out);
+    }
+
+    #[test]
+    fn shift_pads_with_zero() {
+        let px = vec![1.0f32; 2 * 2];
+        let mut out = vec![9f32; 4];
+        shift(&px, &mut out, 2, 2, 1, 1, 0);
+        // first row zero, second row copied from first
+        assert_eq!(out, vec![0.0, 0.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn augment_preserves_range() {
+        let mut rng = Rng::new(1);
+        let mut batch: Vec<f32> = (0..4 * 8 * 8 * 3)
+            .map(|i| (i % 7) as f32 / 7.0)
+            .collect();
+        augment_batch(&mut batch, 4, 8, 8, 3, 2, &mut rng);
+        assert!(batch.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+}

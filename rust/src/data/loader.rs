@@ -1,0 +1,190 @@
+//! Shuffling batch loader with a background prefetch worker.
+//!
+//! The worker thread assembles (and optionally augments) the next batches
+//! while the main thread drives the XLA executable, connected by a
+//! bounded channel (natural backpressure: the worker blocks once
+//! `PREFETCH_DEPTH` batches are waiting).  Epoch order is derived from a
+//! forked RNG stream, so runs replay exactly for a given seed.
+
+use std::sync::mpsc;
+use std::thread;
+
+use crate::data::augment::augment_batch;
+use crate::data::synth::Dataset;
+use crate::error::Result;
+use crate::tensor::{TensorF, TensorI};
+use crate::util::rng::Rng;
+
+/// Number of batches the worker may run ahead.
+pub const PREFETCH_DEPTH: usize = 4;
+
+/// One training/eval batch.
+#[derive(Debug)]
+pub struct Batch {
+    pub images: TensorF,
+    pub labels: TensorI,
+    /// 0-based step index of this batch within the loader's lifetime.
+    pub step: usize,
+}
+
+/// Loader configuration.
+#[derive(Clone, Debug)]
+pub struct LoaderCfg {
+    pub batch: usize,
+    pub augment: bool,
+    pub max_shift: i32,
+    pub seed: u64,
+}
+
+/// A prefetching loader producing an endless stream of shuffled batches
+/// (reshuffles at every epoch boundary).
+pub struct Loader {
+    rx: mpsc::Receiver<Batch>,
+    _worker: thread::JoinHandle<()>,
+}
+
+impl Loader {
+    pub fn spawn(data: Dataset, cfg: LoaderCfg) -> Loader {
+        let (tx, rx) = mpsc::sync_channel::<Batch>(PREFETCH_DEPTH);
+        let worker = thread::Builder::new()
+            .name("fxpnet-loader".into())
+            .spawn(move || worker_loop(data, cfg, tx))
+            .expect("spawn loader");
+        Loader { rx, _worker: worker }
+    }
+
+    /// Next batch (blocks on the worker if the queue is empty).
+    pub fn next_batch(&self) -> Batch {
+        self.rx.recv().expect("loader worker died")
+    }
+}
+
+fn worker_loop(data: Dataset, cfg: LoaderCfg, tx: mpsc::SyncSender<Batch>) {
+    let n = data.len();
+    let (h, w) = (data.h, data.w);
+    let mut rng = Rng::new(cfg.seed);
+    let mut order: Vec<usize> = (0..n).collect();
+    let mut pos = n; // force initial shuffle
+    let mut step = 0usize;
+    loop {
+        if pos + cfg.batch > n {
+            rng.shuffle(&mut order);
+            pos = 0;
+        }
+        let rows = &order[pos..pos + cfg.batch];
+        pos += cfg.batch;
+        let mut images = data.images.gather_rows(rows).expect("gather");
+        let labels = data.labels.gather_rows(rows).expect("gather");
+        if cfg.augment {
+            let mut arng = rng.fork(step as u64);
+            augment_batch(
+                images.data_mut(),
+                cfg.batch,
+                h,
+                w,
+                3,
+                cfg.max_shift,
+                &mut arng,
+            );
+        }
+        if tx.send(Batch { images, labels, step }).is_err() {
+            return; // receiver dropped: shut down
+        }
+        step += 1;
+    }
+}
+
+/// Sequential (non-shuffled, non-augmented) batches covering the dataset
+/// once; the evaluator uses this.  The tail partial batch is dropped if
+/// `drop_tail`, else padded by wrapping around (count returned).
+pub fn sequential_batches(
+    data: &Dataset,
+    batch: usize,
+) -> Result<Vec<(TensorF, TensorI, usize)>> {
+    let n = data.len();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < n {
+        let valid = batch.min(n - i);
+        let rows: Vec<usize> = (0..batch).map(|k| (i + k) % n).collect();
+        out.push((
+            data.images.gather_rows(&rows)?,
+            data.labels.gather_rows(&rows)?,
+            valid,
+        ));
+        i += batch;
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_data(n: usize) -> Dataset {
+        Dataset::generate(n, 8, 8, 42)
+    }
+
+    #[test]
+    fn loader_streams_batches() {
+        let data = tiny_data(20);
+        let loader = Loader::spawn(
+            data,
+            LoaderCfg { batch: 8, augment: false, max_shift: 0, seed: 1 },
+        );
+        for want in 0..5 {
+            let b = loader.next_batch();
+            assert_eq!(b.step, want);
+            assert_eq!(b.images.shape(), &[8, 8, 8, 3]);
+            assert_eq!(b.labels.shape(), &[8]);
+        }
+    }
+
+    #[test]
+    fn loader_deterministic_for_seed() {
+        let mk = || {
+            Loader::spawn(
+                tiny_data(32),
+                LoaderCfg { batch: 8, augment: true, max_shift: 2, seed: 9 },
+            )
+        };
+        let a = mk();
+        let b = mk();
+        for _ in 0..6 {
+            let ba = a.next_batch();
+            let bb = b.next_batch();
+            assert_eq!(ba.images.data(), bb.images.data());
+            assert_eq!(ba.labels.data(), bb.labels.data());
+        }
+    }
+
+    #[test]
+    fn epoch_covers_all_rows() {
+        let data = tiny_data(24);
+        let labels: Vec<i32> = data.labels.data().to_vec();
+        let loader = Loader::spawn(
+            data,
+            LoaderCfg { batch: 8, augment: false, max_shift: 0, seed: 3 },
+        );
+        // one epoch = 3 batches; the multiset of labels must match
+        let mut seen = Vec::new();
+        for _ in 0..3 {
+            seen.extend_from_slice(loader.next_batch().labels.data());
+        }
+        let mut a = labels;
+        let mut b = seen;
+        a.sort();
+        b.sort();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn sequential_covers_once() {
+        let data = tiny_data(20);
+        let batches = sequential_batches(&data, 8).unwrap();
+        assert_eq!(batches.len(), 3);
+        assert_eq!(batches[2].2, 4); // tail has 4 valid rows
+        let total: usize = batches.iter().map(|b| b.2).sum();
+        assert_eq!(total, 20);
+    }
+}

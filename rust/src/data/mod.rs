@@ -1,0 +1,14 @@
+//! Data pipeline: the SynthShapes dataset and a prefetching batch loader.
+//!
+//! ImageNet is not available in this environment (DESIGN.md section 2);
+//! SynthShapes is the substitution: a deterministic, procedurally
+//! generated 10-class image classification task hard enough that a deep
+//! CNN has to fit real structure -- which is all the paper's optimization
+//! -stability phenomenon needs.
+
+pub mod augment;
+pub mod loader;
+pub mod synth;
+
+pub use loader::{Batch, Loader};
+pub use synth::Dataset;

@@ -1,0 +1,51 @@
+//! Library-wide error type.
+
+use thiserror::Error;
+
+/// All errors surfaced by fxpnet.
+#[derive(Error, Debug)]
+pub enum FxpError {
+    /// Errors from the XLA/PJRT runtime (compilation, execution, literals).
+    #[error("xla: {0}")]
+    Xla(#[from] xla::Error),
+
+    /// Filesystem / IO errors.
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+
+    /// Manifest / metrics JSON problems.
+    #[error("json: {0}")]
+    Json(String),
+
+    /// Artifact manifest is missing something the coordinator needs.
+    #[error("manifest: {0}")]
+    Manifest(String),
+
+    /// Checkpoint file corrupt or mismatched.
+    #[error("checkpoint: {0}")]
+    Checkpoint(String),
+
+    /// Shape mismatch in tensor plumbing.
+    #[error("shape: {0}")]
+    Shape(String),
+
+    /// Bad configuration (CLI, quantization format, schedule...).
+    #[error("config: {0}")]
+    Config(String),
+
+    /// Training diverged (NaN/Inf loss or runaway loss) -- the paper's
+    /// "fails to converge" outcome; the grid runner records it as `n/a`.
+    #[error("diverged at step {step}: loss={loss}")]
+    Diverged { step: usize, loss: f32 },
+}
+
+pub type Result<T> = std::result::Result<T, FxpError>;
+
+impl FxpError {
+    pub fn config(msg: impl Into<String>) -> Self {
+        FxpError::Config(msg.into())
+    }
+    pub fn shape(msg: impl Into<String>) -> Self {
+        FxpError::Shape(msg.into())
+    }
+}

@@ -1,0 +1,175 @@
+//! Q-format descriptors.
+
+use std::fmt;
+
+use crate::error::{FxpError, Result};
+
+/// A signed fixed-point format: `bits` total bits (including sign),
+/// `frac` fractional bits.  `frac` may be negative (coarser-than-integer
+/// steps) or exceed `bits` (sub-unit ranges); both occur when calibrating
+/// layers with very small/large dynamic ranges.
+///
+/// Representable grid: `{qmin, ..., qmax} * 2^-frac` with
+/// `qmin = -2^(bits-1)` and `qmax = 2^(bits-1) - 1`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct QFormat {
+    pub bits: u8,
+    pub frac: i8,
+}
+
+impl QFormat {
+    pub fn new(bits: u8, frac: i8) -> Result<Self> {
+        if !(2..=32).contains(&bits) {
+            return Err(FxpError::config(format!(
+                "QFormat bits must be in 2..=32, got {bits}"
+            )));
+        }
+        Ok(QFormat { bits, frac })
+    }
+
+    /// Quantization step 2^-frac.
+    #[inline]
+    pub fn step(&self) -> f32 {
+        (self.frac as f32).exp2().recip()
+    }
+
+    /// Smallest representable code.
+    #[inline]
+    pub fn qmin(&self) -> i64 {
+        -(1i64 << (self.bits - 1))
+    }
+
+    /// Largest representable code.
+    #[inline]
+    pub fn qmax(&self) -> i64 {
+        (1i64 << (self.bits - 1)) - 1
+    }
+
+    /// Most negative representable value.
+    #[inline]
+    pub fn min_value(&self) -> f32 {
+        self.qmin() as f32 * self.step()
+    }
+
+    /// Most positive representable value.
+    #[inline]
+    pub fn max_value(&self) -> f32 {
+        self.qmax() as f32 * self.step()
+    }
+
+    /// The (step, qmin, qmax) triple fed to the AOT executables as runtime
+    /// config (matches python ref.qparams).
+    pub fn runtime_cfg(&self) -> (f32, f32, f32) {
+        (self.step(), self.qmin() as f32, self.qmax() as f32)
+    }
+
+    /// Smallest `frac` such that `absmax` still fits without overflow --
+    /// the min-max calibration rule: use all `bits-1` magnitude bits for
+    /// the integer part of the largest observed value.
+    pub fn fit_absmax(bits: u8, absmax: f32) -> Result<QFormat> {
+        if absmax <= 0.0 || !absmax.is_finite() {
+            // degenerate layer (all zeros): any format works; pick mid.
+            return QFormat::new(bits, (bits as i8) - 1);
+        }
+        // need absmax <= (2^(bits-1) - 1) * 2^-frac  (approx 2^(bits-1-frac))
+        // -> frac = bits - 1 - ceil(log2(absmax / (1 - 2^-(bits-1))))
+        let il = (absmax as f64 / (1.0 - 0.5f64.powi(bits as i32 - 1))).log2().ceil()
+            as i32;
+        let frac = bits as i32 - 1 - il;
+        let frac = frac.clamp(i8::MIN as i32, i8::MAX as i32) as i8;
+        QFormat::new(bits, frac)
+    }
+
+    /// Parse "B.F" / "B:F" (e.g. "8.4") into a format.
+    pub fn parse(s: &str) -> Result<QFormat> {
+        let s = s.trim();
+        let (b, f) = s
+            .split_once(['.', ':'])
+            .ok_or_else(|| FxpError::config(format!("bad QFormat '{s}'")))?;
+        let bits: u8 = b
+            .parse()
+            .map_err(|_| FxpError::config(format!("bad bits in '{s}'")))?;
+        let frac: i8 = f
+            .parse()
+            .map_err(|_| FxpError::config(format!("bad frac in '{s}'")))?;
+        QFormat::new(bits, frac)
+    }
+}
+
+impl fmt::Display for QFormat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Q{}.{}", self.bits, self.frac)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basics() {
+        let q = QFormat::new(8, 4).unwrap();
+        assert_eq!(q.step(), 0.0625);
+        assert_eq!(q.qmin(), -128);
+        assert_eq!(q.qmax(), 127);
+        assert_eq!(q.min_value(), -8.0);
+        assert!((q.max_value() - 7.9375).abs() < 1e-6);
+    }
+
+    #[test]
+    fn negative_frac() {
+        let q = QFormat::new(4, -1).unwrap();
+        assert_eq!(q.step(), 2.0);
+        assert_eq!(q.max_value(), 14.0);
+    }
+
+    #[test]
+    fn bits_bounds() {
+        assert!(QFormat::new(1, 0).is_err());
+        assert!(QFormat::new(33, 0).is_err());
+        assert!(QFormat::new(2, 0).is_ok());
+        assert!(QFormat::new(32, 16).is_ok());
+    }
+
+    #[test]
+    fn fit_absmax_covers() {
+        for &bits in &[4u8, 8, 16] {
+            for &am in &[0.3f32, 1.0, 1.5, 7.9, 100.0, 0.01] {
+                let q = QFormat::fit_absmax(bits, am).unwrap();
+                assert!(
+                    q.max_value() >= am * 0.999,
+                    "bits={bits} absmax={am} got {q} max={}",
+                    q.max_value()
+                );
+                // and not wastefully large: one fewer integer bit overflows
+                let tighter = QFormat::new(bits, q.frac + 1).unwrap();
+                assert!(
+                    tighter.max_value() < am,
+                    "bits={bits} absmax={am}: {q} not tight"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fit_absmax_degenerate() {
+        let q = QFormat::fit_absmax(8, 0.0).unwrap();
+        assert_eq!(q.bits, 8);
+    }
+
+    #[test]
+    fn parse_display() {
+        let q = QFormat::parse("8.4").unwrap();
+        assert_eq!(q, QFormat::new(8, 4).unwrap());
+        assert_eq!(QFormat::parse("16:-2").unwrap().frac, -2);
+        assert!(QFormat::parse("x").is_err());
+        assert_eq!(q.to_string(), "Q8.4");
+    }
+
+    #[test]
+    fn runtime_cfg_matches_python_qparams() {
+        // mirrors ref.qparams(8, 4)
+        let (s, lo, hi) = QFormat::new(8, 4).unwrap().runtime_cfg();
+        assert_eq!((s, lo, hi), (0.0625, -128.0, 127.0));
+    }
+}

@@ -1,0 +1,23 @@
+//! Software fixed-point arithmetic (Q-format), the bit-exact model of the
+//! paper's Figure 1 hardware pipeline.
+//!
+//! Three views of the same semantics live in this repo and are
+//! cross-checked by tests:
+//!
+//! 1. this module -- integer arithmetic on raw codes (used by the pure
+//!    fixed-point inference engine and by calibration);
+//! 2. the L1 Pallas kernels -- float simulation `clip(round(x/step))*step`
+//!    (what the AOT executables run);
+//! 3. `python/compile/kernels/ref.py` -- the pure-jnp oracle.
+//!
+//! Conventions: signed two's-complement codes, saturating, rounding mode
+//! "nearest, half up" (floor(x + 0.5)) unless stated otherwise.
+
+pub mod format;
+pub mod rounding;
+pub mod value;
+pub mod vector;
+
+pub use format::QFormat;
+pub use rounding::RoundMode;
+pub use value::Fx;

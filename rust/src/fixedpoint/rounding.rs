@@ -1,0 +1,86 @@
+//! Rounding modes for float -> code conversion.
+
+use crate::util::rng::Rng;
+
+/// How a real value is mapped to the nearest integer code.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoundMode {
+    /// floor(x + 0.5): round-to-nearest, ties toward +inf.  Matches the
+    /// Pallas kernel and ref.py bit-for-bit.
+    NearestHalfUp,
+    /// Truncation toward -inf (the cheapest HW option; shown in ablations).
+    Floor,
+    /// floor(x + u), u ~ U[0,1): unbiased stochastic rounding
+    /// (Gupta et al. 2015), the paper's named complementary technique.
+    Stochastic,
+}
+
+impl RoundMode {
+    /// Round a scaled value (already divided by the step) to an integer.
+    #[inline]
+    pub fn round(&self, scaled: f64, rng: Option<&mut Rng>) -> i64 {
+        match self {
+            RoundMode::NearestHalfUp => (scaled + 0.5).floor() as i64,
+            RoundMode::Floor => scaled.floor() as i64,
+            RoundMode::Stochastic => {
+                let u = rng.expect("stochastic rounding needs an Rng").uniform();
+                (scaled + u).floor() as i64
+            }
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<RoundMode> {
+        match s {
+            "nearest" => Some(RoundMode::NearestHalfUp),
+            "floor" => Some(RoundMode::Floor),
+            "stochastic" => Some(RoundMode::Stochastic),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nearest_half_up() {
+        let m = RoundMode::NearestHalfUp;
+        assert_eq!(m.round(0.5, None), 1);
+        assert_eq!(m.round(-0.5, None), 0);
+        assert_eq!(m.round(1.49, None), 1);
+        assert_eq!(m.round(-1.51, None), -2);
+    }
+
+    #[test]
+    fn floor() {
+        let m = RoundMode::Floor;
+        assert_eq!(m.round(1.99, None), 1);
+        assert_eq!(m.round(-0.01, None), -1);
+    }
+
+    #[test]
+    fn stochastic_unbiased() {
+        let mut rng = Rng::new(3);
+        let m = RoundMode::Stochastic;
+        let n = 40000;
+        let sum: i64 = (0..n).map(|_| m.round(0.3, Some(&mut rng))).sum();
+        let mean = sum as f64 / n as f64;
+        assert!((mean - 0.3).abs() < 0.01, "{mean}");
+    }
+
+    #[test]
+    fn stochastic_exact_integers_stay() {
+        let mut rng = Rng::new(4);
+        let m = RoundMode::Stochastic;
+        for _ in 0..100 {
+            assert_eq!(m.round(7.0, Some(&mut rng)), 7);
+        }
+    }
+
+    #[test]
+    fn parse() {
+        assert_eq!(RoundMode::parse("nearest"), Some(RoundMode::NearestHalfUp));
+        assert_eq!(RoundMode::parse("bogus"), None);
+    }
+}

@@ -1,0 +1,231 @@
+//! Scalar fixed-point values: raw integer codes + format, with the
+//! saturating arithmetic of the paper's Figure 1 pipeline.
+//!
+//! `Fx` is the unit of the pure-integer inference engine: multiplication
+//! widens (step 1), sums accumulate in i64 "wide accumulators" (step 2),
+//! and `requantize` rounds/saturates back to a narrow format (step 3).
+
+use super::format::QFormat;
+use super::rounding::RoundMode;
+use crate::util::rng::Rng;
+
+/// A fixed-point number: integer `code` in format `fmt`
+/// (value = code * 2^-fmt.frac).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Fx {
+    pub code: i64,
+    pub fmt: QFormat,
+}
+
+impl Fx {
+    /// Encode a float (saturating, given rounding mode).
+    pub fn from_f32(x: f32, fmt: QFormat, mode: RoundMode, rng: Option<&mut Rng>) -> Fx {
+        let scaled = x as f64 / fmt.step() as f64;
+        let code = mode.round(scaled, rng).clamp(fmt.qmin(), fmt.qmax());
+        Fx { code, fmt }
+    }
+
+    #[inline]
+    pub fn to_f32(&self) -> f32 {
+        self.code as f32 * self.fmt.step()
+    }
+
+    /// Saturating add within the same format.
+    pub fn sat_add(&self, other: &Fx) -> Fx {
+        assert_eq!(self.fmt, other.fmt, "sat_add: format mismatch");
+        let code = (self.code + other.code).clamp(self.fmt.qmin(), self.fmt.qmax());
+        Fx { code, fmt: self.fmt }
+    }
+
+    /// Widening multiply (Figure 1 step 1): an (a.bits x b.bits) multiply
+    /// produces a code in a (a.bits + b.bits)-bit format with summed
+    /// fractional lengths.  No rounding, no saturation -- exact.
+    pub fn wide_mul(&self, other: &Fx) -> WideAcc {
+        WideAcc {
+            acc: self.code as i128 * other.code as i128,
+            frac: self.fmt.frac as i32 + other.fmt.frac as i32,
+        }
+    }
+}
+
+/// The wide accumulator of Figure 1 step 2: i128 to make overflow
+/// impossible for any realistic layer size (codes are <= 2^31; a dot
+/// product of 2^40 terms still fits).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WideAcc {
+    pub acc: i128,
+    /// fractional length of the accumulator grid
+    pub frac: i32,
+}
+
+impl WideAcc {
+    pub fn zero(frac: i32) -> WideAcc {
+        WideAcc { acc: 0, frac }
+    }
+
+    /// Accumulate another product (must share the fractional length --
+    /// guaranteed when all operands share formats, as within one layer).
+    #[inline]
+    pub fn add(&mut self, p: WideAcc) {
+        debug_assert_eq!(self.frac, p.frac, "accumulator frac mismatch");
+        self.acc += p.acc;
+    }
+
+    /// Add a bias value expressed in float (converted exactly onto the
+    /// accumulator grid with nearest rounding -- biases are kept in
+    /// accumulator precision, cf. model.py).
+    pub fn add_f32(&mut self, b: f32) {
+        let scaled = b as f64 * (self.frac as f64).exp2();
+        self.acc += (scaled + 0.5).floor() as i128;
+    }
+
+    pub fn to_f64(&self) -> f64 {
+        self.acc as f64 * (-(self.frac as f64)).exp2()
+    }
+
+    /// Figure 1 step 3: round/truncate the accumulator into `fmt`.
+    pub fn requantize(&self, fmt: QFormat, mode: RoundMode, rng: Option<&mut Rng>) -> Fx {
+        // shift = number of fractional bits to drop (may be negative)
+        let shift = self.frac - fmt.frac as i32;
+        let code = if shift == 0 {
+            self.acc
+        } else if shift > 0 {
+            // dropping bits: round at the new LSB
+            match mode {
+                RoundMode::NearestHalfUp => {
+                    let half = 1i128 << (shift - 1);
+                    (self.acc + half) >> shift
+                }
+                RoundMode::Floor => self.acc >> shift,
+                RoundMode::Stochastic => {
+                    let u = rng.expect("stochastic needs rng").uniform();
+                    let frac_units = (u * (1i128 << shift) as f64) as i128;
+                    (self.acc + frac_units) >> shift
+                }
+            }
+        } else {
+            // gaining bits: exact
+            self.acc << (-shift)
+        };
+        let code =
+            code.clamp(fmt.qmin() as i128, fmt.qmax() as i128) as i64;
+        Fx { code, fmt }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn q(bits: u8, frac: i8) -> QFormat {
+        QFormat::new(bits, frac).unwrap()
+    }
+
+    #[test]
+    fn encode_decode() {
+        let f = q(8, 4);
+        let x = Fx::from_f32(1.5, f, RoundMode::NearestHalfUp, None);
+        assert_eq!(x.code, 24);
+        assert_eq!(x.to_f32(), 1.5);
+        // saturation
+        let s = Fx::from_f32(100.0, f, RoundMode::NearestHalfUp, None);
+        assert_eq!(s.code, 127);
+        let s = Fx::from_f32(-100.0, f, RoundMode::NearestHalfUp, None);
+        assert_eq!(s.code, -128);
+    }
+
+    #[test]
+    fn encode_matches_kernel_semantics() {
+        // same numbers as python test_round_half_up
+        let f = q(8, 0);
+        for (x, want) in [(0.5f32, 1), (-0.5, 0), (1.5, 2), (-1.5, -1), (2.5, 3)] {
+            assert_eq!(
+                Fx::from_f32(x, f, RoundMode::NearestHalfUp, None).code,
+                want,
+                "{x}"
+            );
+        }
+    }
+
+    #[test]
+    fn sat_add() {
+        let f = q(4, 0); // range -8..7
+        let a = Fx { code: 5, fmt: f };
+        let b = Fx { code: 6, fmt: f };
+        assert_eq!(a.sat_add(&b).code, 7);
+        let c = Fx { code: -8, fmt: f };
+        assert_eq!(c.sat_add(&c).code, -8);
+    }
+
+    #[test]
+    fn wide_mul_exact() {
+        // 1.5 * 2.25 in Q8.4: codes 24 and 36, product 864 at frac 8
+        let f = q(8, 4);
+        let a = Fx::from_f32(1.5, f, RoundMode::NearestHalfUp, None);
+        let b = Fx::from_f32(2.25, f, RoundMode::NearestHalfUp, None);
+        let p = a.wide_mul(&b);
+        assert_eq!(p.acc, 864);
+        assert_eq!(p.frac, 8);
+        assert_eq!(p.to_f64(), 3.375);
+    }
+
+    #[test]
+    fn accumulate_and_requantize() {
+        let f = q(8, 4);
+        let mut acc = WideAcc::zero(8);
+        for _ in 0..10 {
+            let a = Fx::from_f32(0.5, f, RoundMode::NearestHalfUp, None);
+            let b = Fx::from_f32(0.5, f, RoundMode::NearestHalfUp, None);
+            acc.add(a.wide_mul(&b));
+        }
+        assert_eq!(acc.to_f64(), 2.5);
+        let out = acc.requantize(q(8, 4), RoundMode::NearestHalfUp, None);
+        assert_eq!(out.to_f32(), 2.5);
+        // to a coarser grid
+        let out = acc.requantize(q(8, 0), RoundMode::NearestHalfUp, None);
+        assert_eq!(out.to_f32(), 3.0); // 2.5 rounds half-up to 3
+    }
+
+    #[test]
+    fn requantize_saturates() {
+        let mut acc = WideAcc::zero(8);
+        acc.add_f32(1000.0);
+        let out = acc.requantize(q(8, 4), RoundMode::NearestHalfUp, None);
+        assert_eq!(out.code, 127);
+    }
+
+    #[test]
+    fn requantize_gaining_bits_is_exact() {
+        let mut acc = WideAcc::zero(2);
+        acc.add_f32(1.25);
+        let out = acc.requantize(q(16, 8), RoundMode::NearestHalfUp, None);
+        assert_eq!(out.to_f32(), 1.25);
+    }
+
+    #[test]
+    fn bias_on_accumulator_grid() {
+        let mut acc = WideAcc::zero(8);
+        acc.add_f32(0.125);
+        assert_eq!(acc.acc, 32);
+    }
+
+    #[test]
+    fn requant_nearest_matches_float_path() {
+        // cross-check integer rounding against the float formula on many
+        // random accumulators (the parity the inference engine relies on)
+        let mut rng = Rng::new(11);
+        let out_fmt = q(8, 3);
+        for _ in 0..2000 {
+            let v = (rng.uniform() - 0.5) * 60.0;
+            let mut acc = WideAcc::zero(12);
+            // place v on the accumulator grid exactly
+            acc.acc = ((v * (1u64 << 12) as f64) + 0.5).floor() as i128;
+            let got = acc.requantize(out_fmt, RoundMode::NearestHalfUp, None);
+            let vv = acc.to_f64();
+            let want = ((vv / out_fmt.step() as f64 + 0.5).floor())
+                .clamp(out_fmt.qmin() as f64, out_fmt.qmax() as f64)
+                as i64;
+            assert_eq!(got.code, want, "v={vv}");
+        }
+    }
+}

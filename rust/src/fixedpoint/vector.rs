@@ -1,0 +1,199 @@
+//! Vectorised quantization over f32 slices -- the host-side twin of the
+//! L1 Pallas quantize kernel, plus the SQNR measurement used by
+//! calibration and the Figure 2 staircase sampler.
+
+use super::format::QFormat;
+use super::rounding::RoundMode;
+use crate::util::rng::Rng;
+
+/// Quantize a slice in place: `x <- clip(round(x/step), qmin, qmax)*step`.
+/// Bit-identical to the Pallas kernel for `NearestHalfUp`.
+pub fn quantize_slice(
+    xs: &mut [f32],
+    fmt: QFormat,
+    mode: RoundMode,
+    mut rng: Option<&mut Rng>,
+) {
+    let step = fmt.step();
+    let inv = 1.0 / step as f64;
+    let (lo, hi) = (fmt.qmin() as f64, fmt.qmax() as f64);
+    match mode {
+        RoundMode::NearestHalfUp => {
+            for x in xs.iter_mut() {
+                let code = ((*x as f64) * inv + 0.5).floor().clamp(lo, hi);
+                *x = (code * step as f64) as f32;
+            }
+        }
+        RoundMode::Floor => {
+            for x in xs.iter_mut() {
+                let code = ((*x as f64) * inv).floor().clamp(lo, hi);
+                *x = (code * step as f64) as f32;
+            }
+        }
+        RoundMode::Stochastic => {
+            let rng = rng.as_mut().expect("stochastic needs rng");
+            for x in xs.iter_mut() {
+                let u = rng.uniform();
+                let code = ((*x as f64) * inv + u).floor().clamp(lo, hi);
+                *x = (code * step as f64) as f32;
+            }
+        }
+    }
+}
+
+/// Non-destructive quantization.
+pub fn quantized(xs: &[f32], fmt: QFormat, mode: RoundMode, rng: Option<&mut Rng>) -> Vec<f32> {
+    let mut out = xs.to_vec();
+    quantize_slice(&mut out, fmt, mode, rng);
+    out
+}
+
+/// Encode a slice to integer codes (the deployment path of the inference
+/// engine).
+pub fn encode(xs: &[f32], fmt: QFormat) -> Vec<i64> {
+    let step = fmt.step() as f64;
+    xs.iter()
+        .map(|&x| {
+            ((x as f64 / step + 0.5).floor() as i64).clamp(fmt.qmin(), fmt.qmax())
+        })
+        .collect()
+}
+
+/// Decode integer codes back to floats.
+pub fn decode(codes: &[i64], fmt: QFormat) -> Vec<f32> {
+    let step = fmt.step();
+    codes.iter().map(|&c| c as f32 * step).collect()
+}
+
+/// Signal-to-quantization-noise ratio in dB of representing `xs` in `fmt`.
+/// This is the objective the SQNR-optimal calibration (quant/calib.rs)
+/// maximises, after Lin et al., ICML 2016.
+pub fn sqnr_db(xs: &[f32], fmt: QFormat) -> f64 {
+    let mut sig = 0.0f64;
+    let mut noise = 0.0f64;
+    let q = quantized(xs, fmt, RoundMode::NearestHalfUp, None);
+    for (&x, &xq) in xs.iter().zip(&q) {
+        sig += (x as f64) * (x as f64);
+        let d = (x - xq) as f64;
+        noise += d * d;
+    }
+    if sig == 0.0 {
+        return 0.0;
+    }
+    if noise == 0.0 {
+        return f64::INFINITY;
+    }
+    10.0 * (sig / noise).log10()
+}
+
+/// Sample the *effective* activation function of Figure 2(b):
+/// `relu` then quantization, over `n` points of [lo, hi].
+/// Returns (x, effective, presumed) triples for the figure bench.
+pub fn effective_relu_curve(
+    fmt: QFormat,
+    lo: f32,
+    hi: f32,
+    n: usize,
+) -> Vec<(f32, f32, f32)> {
+    (0..n)
+        .map(|i| {
+            let x = lo + (hi - lo) * i as f32 / (n - 1).max(1) as f32;
+            let presumed = x.max(0.0);
+            let mut v = [presumed];
+            quantize_slice(&mut v, fmt, RoundMode::NearestHalfUp, None);
+            (x, v[0], presumed)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn q(bits: u8, frac: i8) -> QFormat {
+        QFormat::new(bits, frac).unwrap()
+    }
+
+    #[test]
+    fn quantize_matches_scalar_path() {
+        let mut rng = Rng::new(1);
+        let fmt = q(6, 2);
+        let xs: Vec<f32> = (0..500).map(|_| rng.uniform_in(-20.0, 20.0)).collect();
+        let v = quantized(&xs, fmt, RoundMode::NearestHalfUp, None);
+        for (&x, &got) in xs.iter().zip(&v) {
+            let fx = super::super::value::Fx::from_f32(
+                x,
+                fmt,
+                RoundMode::NearestHalfUp,
+                None,
+            );
+            assert_eq!(got, fx.to_f32(), "x={x}");
+        }
+    }
+
+    #[test]
+    fn idempotent() {
+        let mut rng = Rng::new(2);
+        let fmt = q(8, 3);
+        let xs: Vec<f32> = (0..300).map(|_| rng.uniform_in(-40.0, 40.0)).collect();
+        let q1 = quantized(&xs, fmt, RoundMode::NearestHalfUp, None);
+        let q2 = quantized(&q1, fmt, RoundMode::NearestHalfUp, None);
+        assert_eq!(q1, q2);
+    }
+
+    #[test]
+    fn encode_decode_round_trip() {
+        let fmt = q(8, 4);
+        let xs = vec![0.0f32, 1.5, -3.25, 7.9375, -8.0, 100.0];
+        let codes = encode(&xs, fmt);
+        assert_eq!(codes, vec![0, 24, -52, 127, -128, 127]);
+        let back = decode(&codes, fmt);
+        assert_eq!(back[1], 1.5);
+        let again = encode(&back, fmt);
+        assert_eq!(codes, again);
+    }
+
+    #[test]
+    fn sqnr_improves_with_bits() {
+        let mut rng = Rng::new(3);
+        let xs: Vec<f32> = (0..4000).map(|_| rng.normal() as f32).collect();
+        let s4 = sqnr_db(&xs, QFormat::fit_absmax(4, 4.0).unwrap());
+        let s8 = sqnr_db(&xs, QFormat::fit_absmax(8, 4.0).unwrap());
+        let s16 = sqnr_db(&xs, QFormat::fit_absmax(16, 4.0).unwrap());
+        assert!(s4 < s8 && s8 < s16, "{s4} {s8} {s16}");
+        // each extra bit is worth ~6 dB
+        assert!((s8 - s4) > 15.0 && (s16 - s8) > 15.0, "{s4} {s8} {s16}");
+    }
+
+    #[test]
+    fn sqnr_edge_cases() {
+        assert_eq!(sqnr_db(&[0.0; 8], q(8, 4)), 0.0);
+        // exactly representable values -> infinite SQNR
+        assert_eq!(sqnr_db(&[1.0, 0.5, -0.25], q(8, 4)), f64::INFINITY);
+    }
+
+    #[test]
+    fn staircase_has_flat_steps() {
+        let curve = effective_relu_curve(q(4, 1), -1.0, 3.0, 801);
+        let distinct: std::collections::BTreeSet<i64> =
+            curve.iter().map(|&(_, e, _)| (e * 16.0) as i64).collect();
+        // 4-bit signed frac 1: positive codes 0..7 -> at most 8 levels
+        assert!(distinct.len() <= 8, "{}", distinct.len());
+        // effective differs from presumed somewhere
+        assert!(curve.iter().any(|&(_, e, p)| (e - p).abs() > 0.2));
+        // negative x collapses to zero
+        assert!(curve
+            .iter()
+            .filter(|&&(x, _, _)| x < -0.3)
+            .all(|&(_, e, _)| e == 0.0));
+    }
+
+    #[test]
+    fn stochastic_slice_unbiased() {
+        let mut rng = Rng::new(9);
+        let xs = vec![0.3f32; 20000];
+        let v = quantized(&xs, q(8, 2), RoundMode::Stochastic, Some(&mut rng));
+        let mean: f64 = v.iter().map(|&x| x as f64).sum::<f64>() / v.len() as f64;
+        assert!((mean - 0.3).abs() < 0.005, "{mean}");
+    }
+}

@@ -1,0 +1,241 @@
+//! The network-level integer engine: build from (arch, params, formats),
+//! run images to logits.
+
+use crate::error::{FxpError, Result};
+use crate::fixedpoint::QFormat;
+use crate::inference::ops;
+use crate::model::manifest::ArchSpec;
+use crate::model::params::ParamSet;
+use crate::quant::policy::NetQuant;
+use crate::tensor::{Tensor, TensorF};
+
+enum Layer {
+    Conv {
+        w_codes: Vec<i32>,
+        cin: usize,
+        cout: usize,
+        bias: Vec<f32>,
+        w_fmt: QFormat,
+        a_fmt: Option<QFormat>,
+        relu: bool,
+    },
+    Pool,
+    Fc {
+        w_codes: Vec<i32>,
+        n_in: usize,
+        n_out: usize,
+        bias: Vec<f32>,
+        w_fmt: QFormat,
+        a_fmt: Option<QFormat>,
+        relu: bool,
+    },
+}
+
+/// A fully-quantized network ready for integer-only inference.
+pub struct FixedPointNet {
+    layers: Vec<Layer>,
+    input_fmt: QFormat,
+    in_h: usize,
+    in_w: usize,
+    in_c: usize,
+    num_classes: usize,
+}
+
+fn encode_weights(w: &TensorF, fmt: QFormat) -> Vec<i32> {
+    ops::encode(w.data(), fmt)
+}
+
+impl FixedPointNet {
+    /// Build the engine.  All *weights* must be quantized in `nq`; hidden
+    /// *activations* must be quantized too (that is what "deployed in
+    /// fixed point" means); the final layer's activation format may be
+    /// anything -- logits are returned as f32 either way.
+    ///
+    /// `input_fmt` is the format input pixels are encoded with (images in
+    /// [0,1]; Q16.14 keeps the input quantization error negligible
+    /// relative to the 4-16 bit layer formats under study).
+    pub fn build(
+        arch: &ArchSpec,
+        params: &ParamSet,
+        nq: &NetQuant,
+        input_fmt: QFormat,
+    ) -> Result<FixedPointNet> {
+        if nq.num_layers() != arch.num_layers {
+            return Err(FxpError::config(format!(
+                "NetQuant has {} layers, arch {}",
+                nq.num_layers(),
+                arch.num_layers
+            )));
+        }
+        let mut layers = Vec::new();
+        let mut li = 0usize;
+        let l_last = arch.num_layers - 1;
+        for (kind, _out) in &arch.layers {
+            match kind.as_str() {
+                "pool" => layers.push(Layer::Pool),
+                "conv" | "fc" => {
+                    let w = params.weight(li);
+                    let b = params.bias(li);
+                    let w_fmt = nq.weights[li].ok_or_else(|| {
+                        FxpError::config(format!(
+                            "layer {li}: weights must be quantized for integer \
+                             inference"
+                        ))
+                    })?;
+                    let a_fmt = nq.acts[li];
+                    if li < l_last && a_fmt.is_none() {
+                        return Err(FxpError::config(format!(
+                            "layer {li}: hidden activations must be quantized \
+                             for integer inference"
+                        )));
+                    }
+                    let relu = li < l_last;
+                    let w_codes = encode_weights(w, w_fmt);
+                    if kind == "conv" {
+                        let s = w.shape();
+                        layers.push(Layer::Conv {
+                            w_codes,
+                            cin: s[2],
+                            cout: s[3],
+                            bias: b.data().to_vec(),
+                            w_fmt,
+                            a_fmt,
+                            relu,
+                        });
+                    } else {
+                        let s = w.shape();
+                        layers.push(Layer::Fc {
+                            w_codes,
+                            n_in: s[0],
+                            n_out: s[1],
+                            bias: b.data().to_vec(),
+                            w_fmt,
+                            a_fmt,
+                            relu,
+                        });
+                    }
+                    li += 1;
+                }
+                other => {
+                    return Err(FxpError::config(format!("unknown layer kind '{other}'")))
+                }
+            }
+        }
+        Ok(FixedPointNet {
+            layers,
+            input_fmt,
+            in_h: arch.input[0],
+            in_w: arch.input[1],
+            in_c: arch.input[2],
+            num_classes: arch.num_classes,
+        })
+    }
+
+    /// Forward one image (h*w*c floats in [0,1]) to f32 logits.
+    pub fn forward(&self, image: &[f32]) -> Result<Vec<f32>> {
+        if image.len() != self.in_h * self.in_w * self.in_c {
+            return Err(FxpError::shape(format!(
+                "image len {} != {}x{}x{}",
+                image.len(),
+                self.in_h,
+                self.in_w,
+                self.in_c
+            )));
+        }
+        let mut codes = ops::encode(image, self.input_fmt);
+        let mut fmt = self.input_fmt;
+        let (mut h, mut w) = (self.in_h, self.in_w);
+        let mut flat = false;
+        for layer in &self.layers {
+            match layer {
+                Layer::Pool => {
+                    let c = codes.len() / (h * w);
+                    let (o, oh, ow) = ops::maxpool2(&codes, h, w, c);
+                    codes = o;
+                    h = oh;
+                    w = ow;
+                }
+                Layer::Conv { w_codes, cin, cout, bias, w_fmt, a_fmt, relu } => {
+                    debug_assert!(!flat);
+                    let acc_frac = fmt.frac as i32 + w_fmt.frac as i32;
+                    let acc = ops::conv3x3_acc(
+                        &codes, h, w, *cin, w_codes, *cout, bias, acc_frac,
+                    );
+                    match a_fmt {
+                        Some(af) => {
+                            codes = ops::requant_relu(&acc, acc_frac, *af, *relu);
+                            fmt = *af;
+                        }
+                        None => {
+                            // float head on a conv would need f32 logits;
+                            // only valid as the last layer (checked in build)
+                            return Ok(ops::decode_acc(&acc, acc_frac));
+                        }
+                    }
+                }
+                Layer::Fc { w_codes, n_in, n_out, bias, w_fmt, a_fmt, relu } => {
+                    if !flat {
+                        flat = true; // NHWC flatten order matches jnp.reshape
+                    }
+                    if codes.len() != *n_in {
+                        return Err(FxpError::shape(format!(
+                            "fc expects {n_in} inputs, got {}",
+                            codes.len()
+                        )));
+                    }
+                    let acc_frac = fmt.frac as i32 + w_fmt.frac as i32;
+                    let acc = ops::fc_acc(&codes, w_codes, *n_out, bias, acc_frac);
+                    match a_fmt {
+                        Some(af) => {
+                            codes = ops::requant_relu(&acc, acc_frac, *af, *relu);
+                            fmt = *af;
+                        }
+                        None => return Ok(ops::decode_acc(&acc, acc_frac)),
+                    }
+                }
+            }
+        }
+        // all layers quantized including head: decode final codes
+        Ok(ops::decode(&codes, fmt))
+    }
+
+    /// Forward a batch tensor (n, h, w, c); returns (n, classes) logits.
+    pub fn forward_batch(&self, images: &TensorF) -> Result<TensorF> {
+        let n = images.shape()[0];
+        let img_len = self.in_h * self.in_w * self.in_c;
+        let mut out = Vec::with_capacity(n * self.num_classes);
+        for i in 0..n {
+            let logits = self.forward(&images.data()[i * img_len..(i + 1) * img_len])?;
+            if logits.len() != self.num_classes {
+                return Err(FxpError::shape(format!(
+                    "engine produced {} logits, expected {}",
+                    logits.len(),
+                    self.num_classes
+                )));
+            }
+            out.extend_from_slice(&logits);
+        }
+        Tensor::from_vec(&[n, self.num_classes], out)
+    }
+
+    /// Rough multiply count per image (for the Figure 1 bench).
+    pub fn macs_per_image(&self) -> usize {
+        let (mut h, mut w) = (self.in_h, self.in_w);
+        let mut macs = 0usize;
+        for layer in &self.layers {
+            match layer {
+                Layer::Pool => {
+                    h /= 2;
+                    w /= 2;
+                }
+                Layer::Conv { cin, cout, .. } => {
+                    macs += h * w * 9 * cin * cout;
+                }
+                Layer::Fc { n_in, n_out, .. } => {
+                    macs += n_in * n_out;
+                }
+            }
+        }
+        macs
+    }
+}

@@ -1,0 +1,21 @@
+//! Pure-integer fixed-point inference engine: the *deployment* semantics
+//! of the paper's Figure 1, with no floating point anywhere on the
+//! per-layer compute path.
+//!
+//! * operands are integer codes in per-layer Q-formats,
+//! * step 1: widening integer multiplies,
+//! * step 2: i64 "wide accumulator" sums (+ bias on the accumulator grid),
+//! * step 3: round/truncate back to the activation format.
+//!
+//! The engine exists for two reasons: (a) it is the system a user would
+//! actually ship to a DSP/NPU after fine-tuning with this library; and
+//! (b) it cross-validates the simulated quantization of the AOT
+//! executables -- `verify::parity_report` measures how closely the float
+//! -simulated path tracks true integer arithmetic (they agree up to f32
+//! accumulator roundoff; see rust/tests/inference_parity.rs).
+
+pub mod engine;
+pub mod ops;
+pub mod verify;
+
+pub use engine::FixedPointNet;

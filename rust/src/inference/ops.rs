@@ -1,0 +1,242 @@
+//! Integer layer primitives (single image, NHWC codes).
+
+use crate::fixedpoint::{QFormat, RoundMode};
+
+/// Requantize a wide accumulator value (frac = acc_frac) into `fmt`,
+/// nearest-half-up, saturating.  Mirrors fixedpoint::value::WideAcc but
+/// specialised to i64 for the conv/fc inner loops.
+#[inline]
+pub fn requant_i64(acc: i64, acc_frac: i32, fmt: QFormat) -> i32 {
+    let shift = acc_frac - fmt.frac as i32;
+    let code = if shift == 0 {
+        acc
+    } else if shift > 0 {
+        (acc + (1i64 << (shift - 1))) >> shift
+    } else {
+        acc << (-shift)
+    };
+    code.clamp(fmt.qmin(), fmt.qmax()) as i32
+}
+
+/// Encode a float bias onto the accumulator grid.
+#[inline]
+pub fn bias_to_acc(b: f32, acc_frac: i32) -> i64 {
+    ((b as f64) * (acc_frac as f64).exp2() + 0.5).floor() as i64
+}
+
+/// 3x3 SAME-padded stride-1 integer convolution.
+///
+/// `input`: (h, w, cin) codes; `weights`: (3, 3, cin, cout) codes;
+/// `bias`: float, added on the accumulator grid.  Output: per-pixel wide
+/// accumulators (h, w, cout) with fractional length
+/// `in_fmt.frac + w_fmt.frac`.
+#[allow(clippy::too_many_arguments)]
+pub fn conv3x3_acc(
+    input: &[i32],
+    h: usize,
+    w: usize,
+    cin: usize,
+    weights: &[i32],
+    cout: usize,
+    bias: &[f32],
+    acc_frac: i32,
+) -> Vec<i64> {
+    debug_assert_eq!(input.len(), h * w * cin);
+    debug_assert_eq!(weights.len(), 9 * cin * cout);
+    debug_assert_eq!(bias.len(), cout);
+    let bias_acc: Vec<i64> = bias.iter().map(|&b| bias_to_acc(b, acc_frac)).collect();
+    let mut out = vec![0i64; h * w * cout];
+    for y in 0..h {
+        for x in 0..w {
+            let o_base = (y * w + x) * cout;
+            out[o_base..o_base + cout].copy_from_slice(&bias_acc);
+            for ky in 0..3usize {
+                let sy = y as i64 + ky as i64 - 1;
+                if sy < 0 || sy >= h as i64 {
+                    continue;
+                }
+                for kx in 0..3usize {
+                    let sx = x as i64 + kx as i64 - 1;
+                    if sx < 0 || sx >= w as i64 {
+                        continue;
+                    }
+                    let i_base = (sy as usize * w + sx as usize) * cin;
+                    let w_base = (ky * 3 + kx) * cin * cout;
+                    for ci in 0..cin {
+                        let iv = input[i_base + ci] as i64;
+                        if iv == 0 {
+                            continue;
+                        }
+                        let wrow = &weights[w_base + ci * cout..w_base + (ci + 1) * cout];
+                        let orow = &mut out[o_base..o_base + cout];
+                        for (o, &wv) in orow.iter_mut().zip(wrow) {
+                            *o += iv * wv as i64;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Fully-connected: input (n,) codes x weights (n, m) codes + bias.
+pub fn fc_acc(
+    input: &[i32],
+    weights: &[i32],
+    m: usize,
+    bias: &[f32],
+    acc_frac: i32,
+) -> Vec<i64> {
+    let n = input.len();
+    debug_assert_eq!(weights.len(), n * m);
+    debug_assert_eq!(bias.len(), m);
+    let mut out: Vec<i64> = bias.iter().map(|&b| bias_to_acc(b, acc_frac)).collect();
+    for (i, &iv) in input.iter().enumerate() {
+        if iv == 0 {
+            continue;
+        }
+        let iv = iv as i64;
+        let wrow = &weights[i * m..(i + 1) * m];
+        for (o, &wv) in out.iter_mut().zip(wrow) {
+            *o += iv * wv as i64;
+        }
+    }
+    out
+}
+
+/// Requantize + ReLU a whole accumulator plane into activation codes.
+pub fn requant_relu(acc: &[i64], acc_frac: i32, fmt: QFormat, relu: bool) -> Vec<i32> {
+    acc.iter()
+        .map(|&a| {
+            let c = requant_i64(a, acc_frac, fmt);
+            if relu {
+                c.max(0)
+            } else {
+                c
+            }
+        })
+        .collect()
+}
+
+/// 2x2 max-pool on codes (VALID, stride 2).
+pub fn maxpool2(input: &[i32], h: usize, w: usize, c: usize) -> (Vec<i32>, usize, usize) {
+    let oh = h / 2;
+    let ow = w / 2;
+    let mut out = vec![i32::MIN; oh * ow * c];
+    for y in 0..oh {
+        for x in 0..ow {
+            for ch in 0..c {
+                let mut m = i32::MIN;
+                for dy in 0..2 {
+                    for dx in 0..2 {
+                        let v = input[((2 * y + dy) * w + 2 * x + dx) * c + ch];
+                        m = m.max(v);
+                    }
+                }
+                out[(y * ow + x) * c + ch] = m;
+            }
+        }
+    }
+    (out, oh, ow)
+}
+
+/// Encode a float slice into codes of `fmt` (nearest).
+pub fn encode(xs: &[f32], fmt: QFormat) -> Vec<i32> {
+    let mode = RoundMode::NearestHalfUp;
+    xs.iter()
+        .map(|&x| {
+            mode.round(x as f64 / fmt.step() as f64, None)
+                .clamp(fmt.qmin(), fmt.qmax()) as i32
+        })
+        .collect()
+}
+
+/// Decode codes to float.
+pub fn decode(codes: &[i32], fmt: QFormat) -> Vec<f32> {
+    codes.iter().map(|&c| c as f32 * fmt.step()).collect()
+}
+
+/// Decode wide accumulators to float (for float-activation heads).
+pub fn decode_acc(acc: &[i64], acc_frac: i32) -> Vec<f32> {
+    let s = (-(acc_frac as f64)).exp2();
+    acc.iter().map(|&a| (a as f64 * s) as f32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn q(bits: u8, frac: i8) -> QFormat {
+        QFormat::new(bits, frac).unwrap()
+    }
+
+    #[test]
+    fn requant_matches_float_model() {
+        // acc 2.5 at frac 8 -> Q8.0 rounds half-up to 3
+        let acc = (2.5f64 * 256.0) as i64;
+        assert_eq!(requant_i64(acc, 8, q(8, 0)), 3);
+        // saturation
+        assert_eq!(requant_i64(1 << 30, 8, q(8, 4)), 127);
+        assert_eq!(requant_i64(-(1 << 30), 8, q(8, 4)), -128);
+        // gaining precision is exact
+        assert_eq!(requant_i64(5, 0, q(16, 4)), 80);
+    }
+
+    #[test]
+    fn fc_simple() {
+        // [1, 2] codes (fmt Q8.1 -> 0.5, 1.0) x identity-ish weights
+        let input = vec![1i32, 2];
+        // weights 2x2 = [[2, 0], [0, 2]] codes (Q8.1 -> 1.0)
+        let weights = vec![2i32, 0, 0, 2];
+        let bias = vec![0.25f32, 0.0];
+        let acc = fc_acc(&input, &weights, 2, &bias, 2);
+        // acc frac 2: products at frac 2: 1*2=2, 2*2=4; bias 0.25 -> 1
+        assert_eq!(acc, vec![3, 4]);
+    }
+
+    #[test]
+    fn conv_center_pixel() {
+        // 3x3 single-channel input all ones (codes), center weight 1 others 0
+        let input = vec![1i32; 9];
+        let mut weights = vec![0i32; 9];
+        weights[4] = 1; // (ky=1,kx=1,ci=0,co=0)
+        let acc = conv3x3_acc(&input, 3, 3, 1, &weights, 1, &[0.0], 0);
+        assert_eq!(acc, vec![1i64; 9]);
+    }
+
+    #[test]
+    fn conv_same_padding_edges() {
+        // sum-kernel over all-ones input counts valid taps: corner 4, edge 6, center 9
+        let input = vec![1i32; 9];
+        let weights = vec![1i32; 9];
+        let acc = conv3x3_acc(&input, 3, 3, 1, &weights, 1, &[0.0], 0);
+        assert_eq!(acc, vec![4, 6, 4, 6, 9, 6, 4, 6, 4]);
+    }
+
+    #[test]
+    fn maxpool() {
+        let input = vec![1i32, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14, 15, 16];
+        let (out, oh, ow) = maxpool2(&input, 4, 4, 1);
+        assert_eq!((oh, ow), (2, 2));
+        assert_eq!(out, vec![6, 8, 14, 16]);
+    }
+
+    #[test]
+    fn encode_decode_round_trip() {
+        let fmt = q(8, 4);
+        let xs = vec![0.5f32, -1.25, 7.9375, 100.0];
+        let codes = encode(&xs, fmt);
+        assert_eq!(codes, vec![8, -20, 127, 127]);
+        assert_eq!(decode(&codes, fmt)[0], 0.5);
+    }
+
+    #[test]
+    fn relu_on_codes() {
+        let out = requant_relu(&[-100, 50], 4, q(8, 2), true);
+        assert_eq!(out[0], 0);
+        assert!(out[1] > 0);
+        let out = requant_relu(&[-100, 50], 4, q(8, 2), false);
+        assert!(out[0] < 0);
+    }
+}

@@ -1,0 +1,86 @@
+//! Cross-validation of the integer engine against the float-simulated
+//! quantization the AOT executables run.
+//!
+//! The two paths cannot agree bit-for-bit: XLA accumulates quantized
+//! operand products in f32 (24-bit mantissa) while the engine uses exact
+//! i64 accumulators, so pre-activations that land within f32 roundoff of
+//! a rounding boundary may step by one LSB.  What must hold -- and what
+//! `parity_report` measures -- is (a) logits close in units of the head
+//! step, and (b) near-total top-1 agreement.
+
+use crate::error::Result;
+use crate::tensor::TensorF;
+
+/// Parity metrics between two logit matrices (n, classes).
+#[derive(Clone, Copy, Debug)]
+pub struct ParityReport {
+    pub n: usize,
+    /// max |a-b| over all logits
+    pub linf: f32,
+    /// mean |a-b|
+    pub l1: f32,
+    /// fraction of rows with identical argmax
+    pub top1_agreement: f64,
+}
+
+pub fn parity_report(a: &TensorF, b: &TensorF) -> Result<ParityReport> {
+    assert_eq!(a.shape(), b.shape(), "parity: shape mismatch");
+    let n = a.shape()[0];
+    let ta = a.topk_rows(1)?;
+    let tb = b.topk_rows(1)?;
+    let agree = ta
+        .iter()
+        .zip(&tb)
+        .filter(|(x, y)| x[0] == y[0])
+        .count() as f64
+        / n.max(1) as f64;
+    let mut linf = 0f32;
+    let mut l1 = 0f64;
+    for (&x, &y) in a.data().iter().zip(b.data()) {
+        let d = (x - y).abs();
+        linf = linf.max(d);
+        l1 += d as f64;
+    }
+    Ok(ParityReport {
+        n,
+        linf,
+        l1: (l1 / a.len().max(1) as f64) as f32,
+        top1_agreement: agree,
+    })
+}
+
+impl std::fmt::Display for ParityReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "n={} linf={:.5} l1={:.5} top1-agree={:.2}%",
+            self.n,
+            self.linf,
+            self.l1,
+            self.top1_agreement * 100.0
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn identical_logits() {
+        let a = Tensor::from_vec(&[2, 3], vec![1.0, 2.0, 3.0, 3.0, 2.0, 1.0]).unwrap();
+        let r = parity_report(&a, &a).unwrap();
+        assert_eq!(r.linf, 0.0);
+        assert_eq!(r.top1_agreement, 1.0);
+    }
+
+    #[test]
+    fn detects_disagreement() {
+        let a = Tensor::from_vec(&[2, 2], vec![1.0, 0.0, 0.0, 1.0]).unwrap();
+        let b = Tensor::from_vec(&[2, 2], vec![0.0, 1.0, 0.0, 1.0]).unwrap();
+        let r = parity_report(&a, &b).unwrap();
+        assert_eq!(r.top1_agreement, 0.5);
+        assert_eq!(r.linf, 1.0);
+    }
+}

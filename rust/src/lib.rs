@@ -1,0 +1,43 @@
+//! # fxpnet
+//!
+//! Reproduction of *"Overcoming Challenges in Fixed Point Training of
+//! Deep Convolutional Networks"* (Lin & Talathi, ICML 2016 Workshop on
+//! On-Device Intelligence) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L1** (`python/compile/kernels/`): Pallas fixed-point quantizer and
+//!   fused quantized-matmul kernels (the paper's Figure 1 pipeline).
+//! * **L2** (`python/compile/model.py`): quantization-aware CNN fwd/bwd
+//!   with straight-through-estimator gradients -- the paper's "presumed"
+//!   smooth gradient, i.e. the gradient mismatch is physically present.
+//!   AOT-lowered once to HLO text (`make artifacts`).
+//! * **L3** (this crate): the coordinator -- calibration, the paper's
+//!   three fine-tuning proposals, the Table 1 phase scheduler, the
+//!   experiment grid, divergence detection, a pure-integer fixed-point
+//!   inference engine, and every substrate those need.
+//!
+//! Python never runs on the request path; the binary is self-contained
+//! once `artifacts/` is built.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured results.
+
+pub mod bench;
+pub mod cli;
+pub mod coordinator;
+pub mod data;
+pub mod error;
+pub mod fixedpoint;
+pub mod inference;
+pub mod model;
+pub mod quant;
+pub mod runtime;
+pub mod tensor;
+pub mod testutil;
+pub mod util;
+
+pub use error::{FxpError, Result};
+
+/// Crate version.
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

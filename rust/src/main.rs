@@ -1,0 +1,25 @@
+//! fxpnet CLI entrypoint.  Everything substantial lives in the library
+//! (rust/src/); this is arg parsing + dispatch + error formatting.
+
+use fxpnet::cli::{commands, Args, USAGE};
+use fxpnet::util::logging;
+
+fn main() {
+    logging::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        eprintln!("{USAGE}");
+        std::process::exit(2);
+    }
+    let args = match Args::parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = commands::dispatch(&args) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

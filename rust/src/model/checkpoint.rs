@@ -1,0 +1,216 @@
+//! Checkpoint I/O: a small self-describing binary format (serde is not
+//! available offline; the format is versioned and endian-explicit).
+//!
+//! Layout (little endian):
+//!   magic   "FXPCKPT1"
+//!   arch    u16 len + utf8 bytes
+//!   step    u64
+//!   count   u32                      number of tensors
+//!   per tensor:
+//!     name  u16 len + utf8 bytes
+//!     ndim  u8, dims u64 * ndim
+//!     data  f32 * prod(dims)
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use crate::error::{FxpError, Result};
+use crate::model::params::ParamSet;
+use crate::tensor::Tensor;
+#[cfg(test)]
+use crate::tensor::TensorF;
+
+const MAGIC: &[u8; 8] = b"FXPCKPT1";
+
+/// A saved training state.
+#[derive(Clone, Debug)]
+pub struct Checkpoint {
+    pub arch: String,
+    pub step: u64,
+    pub params: ParamSet,
+}
+
+fn write_str(w: &mut impl Write, s: &str) -> Result<()> {
+    let b = s.as_bytes();
+    if b.len() > u16::MAX as usize {
+        return Err(FxpError::Checkpoint("string too long".into()));
+    }
+    w.write_all(&(b.len() as u16).to_le_bytes())?;
+    w.write_all(b)?;
+    Ok(())
+}
+
+fn read_str(r: &mut impl Read) -> Result<String> {
+    let mut lb = [0u8; 2];
+    r.read_exact(&mut lb)?;
+    let len = u16::from_le_bytes(lb) as usize;
+    let mut b = vec![0u8; len];
+    r.read_exact(&mut b)?;
+    String::from_utf8(b).map_err(|_| FxpError::Checkpoint("bad utf8".into()))
+}
+
+impl Checkpoint {
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut w = BufWriter::new(File::create(path.as_ref())?);
+        w.write_all(MAGIC)?;
+        write_str(&mut w, &self.arch)?;
+        w.write_all(&self.step.to_le_bytes())?;
+        w.write_all(&(self.params.len() as u32).to_le_bytes())?;
+        for (name, t) in self.params.names.iter().zip(&self.params.tensors) {
+            write_str(&mut w, name)?;
+            w.write_all(&[t.shape().len() as u8])?;
+            for &d in t.shape() {
+                w.write_all(&(d as u64).to_le_bytes())?;
+            }
+            // bulk write the f32 payload
+            let bytes: Vec<u8> =
+                t.data().iter().flat_map(|x| x.to_le_bytes()).collect();
+            w.write_all(&bytes)?;
+        }
+        w.flush()?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
+        let mut r = BufReader::new(File::open(path.as_ref())?);
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            return Err(FxpError::Checkpoint(format!(
+                "{}: bad magic",
+                path.as_ref().display()
+            )));
+        }
+        let arch = read_str(&mut r)?;
+        let mut b8 = [0u8; 8];
+        r.read_exact(&mut b8)?;
+        let step = u64::from_le_bytes(b8);
+        let mut b4 = [0u8; 4];
+        r.read_exact(&mut b4)?;
+        let count = u32::from_le_bytes(b4) as usize;
+        let mut names = Vec::with_capacity(count);
+        let mut tensors = Vec::with_capacity(count);
+        for _ in 0..count {
+            let name = read_str(&mut r)?;
+            let mut nd = [0u8; 1];
+            r.read_exact(&mut nd)?;
+            let mut shape = Vec::with_capacity(nd[0] as usize);
+            for _ in 0..nd[0] {
+                r.read_exact(&mut b8)?;
+                shape.push(u64::from_le_bytes(b8) as usize);
+            }
+            let n: usize = shape.iter().product();
+            let mut bytes = vec![0u8; n * 4];
+            r.read_exact(&mut bytes)?;
+            let data: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            names.push(name);
+            tensors.push(Tensor::from_vec(&shape, data)?);
+        }
+        Ok(Checkpoint { arch, step, params: ParamSet { names, tensors } })
+    }
+
+    /// Validate against an expected arch/param list.
+    pub fn check_matches(
+        &self,
+        arch: &str,
+        expected: &[(String, Vec<usize>)],
+    ) -> Result<()> {
+        if self.arch != arch {
+            return Err(FxpError::Checkpoint(format!(
+                "checkpoint is for arch '{}', wanted '{arch}'",
+                self.arch
+            )));
+        }
+        if self.params.len() != expected.len() {
+            return Err(FxpError::Checkpoint(format!(
+                "{} tensors, expected {}",
+                self.params.len(),
+                expected.len()
+            )));
+        }
+        for ((name, shape), (have_n, have_t)) in expected
+            .iter()
+            .zip(self.params.names.iter().zip(&self.params.tensors))
+        {
+            if name != have_n || shape.as_slice() != have_t.shape() {
+                return Err(FxpError::Checkpoint(format!(
+                    "tensor mismatch: manifest {name}{shape:?} vs checkpoint \
+                     {have_n}{:?}",
+                    have_t.shape()
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Save just a ParamSet (helper used by the trainer).
+pub fn save_params(
+    path: impl AsRef<Path>,
+    arch: &str,
+    step: u64,
+    params: &ParamSet,
+) -> Result<()> {
+    Checkpoint { arch: arch.to_string(), step, params: params.clone() }.save(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_params() -> ParamSet {
+        ParamSet {
+            names: vec!["l0.w".into(), "l0.b".into()],
+            tensors: vec![
+                TensorF::from_vec(&[2, 3], vec![1.0, -2.5, 3.25, 0.0, 1e-7, -1e7])
+                    .unwrap(),
+                TensorF::from_vec(&[3], vec![0.5, 0.25, -0.125]).unwrap(),
+            ],
+        }
+    }
+
+    #[test]
+    fn round_trip() {
+        let dir = std::env::temp_dir().join("fxp_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("a.ckpt");
+        let ck = Checkpoint { arch: "tiny".into(), step: 1234, params: sample_params() };
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.arch, "tiny");
+        assert_eq!(back.step, 1234);
+        assert_eq!(back.params.names, ck.params.names);
+        for (a, b) in back.params.tensors.iter().zip(&ck.params.tensors) {
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn check_matches() {
+        let ck = Checkpoint { arch: "tiny".into(), step: 0, params: sample_params() };
+        let good = vec![
+            ("l0.w".to_string(), vec![2usize, 3]),
+            ("l0.b".to_string(), vec![3usize]),
+        ];
+        ck.check_matches("tiny", &good).unwrap();
+        assert!(ck.check_matches("other", &good).is_err());
+        let bad = vec![
+            ("l0.w".to_string(), vec![3usize, 2]),
+            ("l0.b".to_string(), vec![3usize]),
+        ];
+        assert!(ck.check_matches("tiny", &bad).is_err());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join("fxp_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("garbage.ckpt");
+        std::fs::write(&path, b"not a checkpoint at all").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+    }
+}

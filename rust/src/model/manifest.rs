@@ -1,0 +1,306 @@
+//! Parse `artifacts/manifest.json` (written by python/compile/aot.py).
+//!
+//! The manifest is the only contract between the build-time Python world
+//! and the Rust runtime: architecture shapes, parameter order, and the
+//! exact input/output ordering of every compiled executable.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{FxpError, Result};
+use crate::util::json::Json;
+
+/// Element type of an executable input/output.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            _ => Err(FxpError::Manifest(format!("unknown dtype '{s}'"))),
+        }
+    }
+}
+
+/// One input or output of an executable.
+#[derive(Clone, Debug)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl IoSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One compiled artifact (train_step / eval_batch / stats_batch / grads).
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub file: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+impl ArtifactSpec {
+    pub fn input_index(&self, name: &str) -> Result<usize> {
+        self.inputs
+            .iter()
+            .position(|i| i.name == name)
+            .ok_or_else(|| FxpError::Manifest(format!("no input '{name}'")))
+    }
+
+    pub fn output_index(&self, name: &str) -> Result<usize> {
+        self.outputs
+            .iter()
+            .position(|o| o.name == name)
+            .ok_or_else(|| FxpError::Manifest(format!("no output '{name}'")))
+    }
+}
+
+/// One architecture: layers, parameters, compiled artifacts.
+#[derive(Clone, Debug)]
+pub struct ArchSpec {
+    pub name: String,
+    /// input image (h, w, c)
+    pub input: [usize; 3],
+    pub num_classes: usize,
+    /// number of weighted layers L
+    pub num_layers: usize,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    /// layer sequence: ("conv", out) | ("pool", 0) | ("fc", out)
+    pub layers: Vec<(String, usize)>,
+    /// flat parameter list [(name, shape)] in executable input order
+    pub params: Vec<(String, Vec<usize>)>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl ArchSpec {
+    pub fn artifact(&self, kind: &str) -> Result<&ArtifactSpec> {
+        self.artifacts.get(kind).ok_or_else(|| {
+            FxpError::Manifest(format!(
+                "arch '{}' has no artifact '{kind}'",
+                self.name
+            ))
+        })
+    }
+
+    /// Flat index of the last weighted layer's weight tensor.
+    pub fn num_params(&self) -> usize {
+        self.params.len()
+    }
+}
+
+/// The whole manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub archs: BTreeMap<String, ArchSpec>,
+}
+
+fn parse_io(j: &Json) -> Result<IoSpec> {
+    Ok(IoSpec {
+        name: j.get("name")?.as_str()?.to_string(),
+        shape: j.get("shape")?.usize_vec()?,
+        dtype: Dtype::parse(j.get("dtype")?.as_str()?)?,
+    })
+}
+
+fn parse_arch(name: &str, j: &Json) -> Result<ArchSpec> {
+    let input = j.get("input")?.usize_vec()?;
+    if input.len() != 3 {
+        return Err(FxpError::Manifest("input must be [h,w,c]".into()));
+    }
+    let layers = j
+        .get("layers")?
+        .as_arr()?
+        .iter()
+        .map(|l| {
+            let kind = l.get("kind")?.as_str()?.to_string();
+            let out = match l.opt("out") {
+                Some(o) => o.as_usize()?,
+                None => 0,
+            };
+            Ok((kind, out))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let params = j
+        .get("params")?
+        .as_arr()?
+        .iter()
+        .map(|p| {
+            Ok((
+                p.get("name")?.as_str()?.to_string(),
+                p.get("shape")?.usize_vec()?,
+            ))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let mut artifacts = BTreeMap::new();
+    for (kind, a) in j.get("artifacts")?.as_obj()? {
+        artifacts.insert(
+            kind.clone(),
+            ArtifactSpec {
+                file: a.get("file")?.as_str()?.to_string(),
+                inputs: a
+                    .get("inputs")?
+                    .as_arr()?
+                    .iter()
+                    .map(parse_io)
+                    .collect::<Result<Vec<_>>>()?,
+                outputs: a
+                    .get("outputs")?
+                    .as_arr()?
+                    .iter()
+                    .map(parse_io)
+                    .collect::<Result<Vec<_>>>()?,
+            },
+        );
+    }
+    let spec = ArchSpec {
+        name: name.to_string(),
+        input: [input[0], input[1], input[2]],
+        num_classes: j.get("num_classes")?.as_usize()?,
+        num_layers: j.get("num_layers")?.as_usize()?,
+        train_batch: j.get("train_batch")?.as_usize()?,
+        eval_batch: j.get("eval_batch")?.as_usize()?,
+        layers,
+        params,
+        artifacts,
+    };
+    // consistency: 2 params per weighted layer
+    if spec.params.len() != 2 * spec.num_layers {
+        return Err(FxpError::Manifest(format!(
+            "arch '{name}': {} params but {} layers",
+            spec.params.len(),
+            spec.num_layers
+        )));
+    }
+    Ok(spec)
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            FxpError::Manifest(format!(
+                "cannot read {} (run `make artifacts`?): {e}",
+                path.display()
+            ))
+        })?;
+        Manifest::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let j = Json::parse(text)?;
+        let version = j.get("version")?.as_usize()?;
+        if version != 1 {
+            return Err(FxpError::Manifest(format!(
+                "unsupported manifest version {version}"
+            )));
+        }
+        let mut archs = BTreeMap::new();
+        for (name, a) in j.get("archs")?.as_obj()? {
+            archs.insert(name.clone(), parse_arch(name, a)?);
+        }
+        Ok(Manifest { dir, archs })
+    }
+
+    pub fn arch(&self, name: &str) -> Result<&ArchSpec> {
+        self.archs.get(name).ok_or_else(|| {
+            FxpError::Manifest(format!(
+                "arch '{name}' not in manifest (have: {})",
+                self.archs.keys().cloned().collect::<Vec<_>>().join(", ")
+            ))
+        })
+    }
+
+    pub fn artifact_path(&self, arch: &str, kind: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.arch(arch)?.artifact(kind)?.file))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SNIPPET: &str = r#"{
+      "version": 1,
+      "archs": {
+        "t": {
+          "input": [16,16,3], "num_classes": 10, "num_layers": 2,
+          "train_batch": 16, "eval_batch": 32,
+          "layers": [{"kind":"conv","out":8},{"kind":"pool"},{"kind":"fc","out":10}],
+          "params": [
+            {"name":"l0.w","shape":[3,3,3,8]}, {"name":"l0.b","shape":[8]},
+            {"name":"l1.w","shape":[512,10]},  {"name":"l1.b","shape":[10]}
+          ],
+          "artifacts": {
+            "eval_batch": {
+              "file": "t_eval_batch.hlo.txt",
+              "inputs": [
+                {"name":"l0.w","shape":[3,3,3,8],"dtype":"f32"},
+                {"name":"x","shape":[32,16,16,3],"dtype":"f32"},
+                {"name":"y","shape":[32],"dtype":"i32"}
+              ],
+              "outputs": [
+                {"name":"logits","shape":[32,10],"dtype":"f32"},
+                {"name":"loss_sum","shape":[],"dtype":"f32"}
+              ]
+            }
+          }
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parse_round_trip() {
+        let m = Manifest::parse(SNIPPET, PathBuf::from("/tmp/a")).unwrap();
+        let a = m.arch("t").unwrap();
+        assert_eq!(a.input, [16, 16, 3]);
+        assert_eq!(a.num_layers, 2);
+        assert_eq!(a.params[2].1, vec![512, 10]);
+        let e = a.artifact("eval_batch").unwrap();
+        assert_eq!(e.inputs[2].dtype, Dtype::I32);
+        assert_eq!(e.outputs[1].shape, Vec::<usize>::new());
+        assert_eq!(e.input_index("x").unwrap(), 1);
+        assert!(e.input_index("nope").is_err());
+        assert_eq!(
+            m.artifact_path("t", "eval_batch").unwrap(),
+            PathBuf::from("/tmp/a/t_eval_batch.hlo.txt")
+        );
+    }
+
+    #[test]
+    fn errors() {
+        let m = Manifest::parse(SNIPPET, PathBuf::from("/tmp")).unwrap();
+        assert!(m.arch("nope").is_err());
+        assert!(m.arch("t").unwrap().artifact("train_step").is_err());
+        assert!(Manifest::parse("{\"version\": 2, \"archs\": {}}", PathBuf::new())
+            .is_err());
+    }
+
+    #[test]
+    fn real_manifest_if_built() {
+        // integration check against the actual AOT output when present
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            let t = m.arch("tiny").unwrap();
+            assert_eq!(t.num_layers, 3);
+            for kind in ["train_step", "eval_batch", "stats_batch", "grads"] {
+                let a = t.artifact(kind).unwrap();
+                assert!(m.dir.join(&a.file).exists());
+                assert!(!a.inputs.is_empty() && !a.outputs.is_empty());
+            }
+        }
+    }
+}

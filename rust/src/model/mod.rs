@@ -1,0 +1,13 @@
+//! Model metadata and parameter state on the Rust side.
+//!
+//! The network's *math* lives in the AOT-compiled executables; this
+//! module owns everything around it: the manifest describing the
+//! compiled artifacts (shapes, input/output orders), the parameter /
+//! momentum tensors, and checkpoint I/O.
+
+pub mod checkpoint;
+pub mod manifest;
+pub mod params;
+
+pub use manifest::{ArchSpec, ArtifactSpec, IoSpec, Manifest};
+pub use params::ParamSet;

@@ -1,0 +1,179 @@
+//! Parameter (and momentum) state: the float "master copy" the paper's
+//! fine-tuning updates, with per-layer access helpers and weight
+//! statistics for calibration.
+
+use crate::error::{FxpError, Result};
+use crate::model::manifest::ArchSpec;
+use crate::quant::calib::LayerStats;
+use crate::tensor::{init, TensorF};
+use crate::util::rng::Rng;
+
+/// Named, ordered parameter tensors ([w0, b0, w1, b1, ...]).
+#[derive(Clone, Debug)]
+pub struct ParamSet {
+    pub names: Vec<String>,
+    pub tensors: Vec<TensorF>,
+}
+
+impl ParamSet {
+    /// He-normal weights / zero biases matching the manifest's shapes.
+    pub fn init(arch: &ArchSpec, seed: u64) -> ParamSet {
+        let mut rng = Rng::new(seed);
+        let mut names = Vec::with_capacity(arch.params.len());
+        let mut tensors = Vec::with_capacity(arch.params.len());
+        for (name, shape) in &arch.params {
+            names.push(name.clone());
+            tensors.push(init::for_param(name, shape, &mut rng));
+        }
+        ParamSet { names, tensors }
+    }
+
+    /// Zero tensors of the same shapes (momentum buffers).
+    pub fn zeros_like(&self) -> ParamSet {
+        ParamSet {
+            names: self.names.clone(),
+            tensors: self
+                .tensors
+                .iter()
+                .map(|t| TensorF::zeros(t.shape()))
+                .collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    /// Number of weighted layers (= len / 2).
+    pub fn num_layers(&self) -> usize {
+        self.len() / 2
+    }
+
+    /// Total scalar parameter count.
+    pub fn num_scalars(&self) -> usize {
+        self.tensors.iter().map(|t| t.len()).sum()
+    }
+
+    /// Weight tensor of layer l (index 2l).
+    pub fn weight(&self, l: usize) -> &TensorF {
+        &self.tensors[2 * l]
+    }
+
+    /// Bias tensor of layer l (index 2l+1).
+    pub fn bias(&self, l: usize) -> &TensorF {
+        &self.tensors[2 * l + 1]
+    }
+
+    /// Replace all tensors (used after a train step returns new params).
+    pub fn replace(&mut self, tensors: Vec<TensorF>) -> Result<()> {
+        if tensors.len() != self.tensors.len() {
+            return Err(FxpError::shape(format!(
+                "replace: {} tensors, expected {}",
+                tensors.len(),
+                self.tensors.len()
+            )));
+        }
+        for (old, new) in self.tensors.iter().zip(&tensors) {
+            if old.shape() != new.shape() {
+                return Err(FxpError::shape(format!(
+                    "replace: shape {:?} -> {:?}",
+                    old.shape(),
+                    new.shape()
+                )));
+            }
+        }
+        self.tensors = tensors;
+        Ok(())
+    }
+
+    /// Per-layer *weight* statistics for calibration (biases excluded --
+    /// they stay in accumulator precision).
+    pub fn weight_stats(&self) -> Vec<LayerStats> {
+        (0..self.num_layers())
+            .map(|l| {
+                let w = self.weight(l);
+                let absmax = w.abs_max();
+                let n = w.len().max(1) as f64;
+                let meanabs =
+                    (w.data().iter().map(|&x| x.abs() as f64).sum::<f64>() / n) as f32;
+                let meansq = (w.data().iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>()
+                    / n) as f32;
+                LayerStats { absmax, meanabs, meansq }
+            })
+            .collect()
+    }
+
+    /// Raw weight samples of layer l (for empirical SQNR calibration).
+    pub fn weight_samples(&self, l: usize) -> &[f32] {
+        self.weight(l).data()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::manifest::Manifest;
+    use std::path::PathBuf;
+
+    fn arch() -> ArchSpec {
+        let text = r#"{"version":1,"archs":{"t":{
+            "input":[8,8,3],"num_classes":10,"num_layers":2,
+            "train_batch":4,"eval_batch":8,
+            "layers":[{"kind":"conv","out":4},{"kind":"fc","out":10}],
+            "params":[
+              {"name":"l0.w","shape":[3,3,3,4]},{"name":"l0.b","shape":[4]},
+              {"name":"l1.w","shape":[256,10]},{"name":"l1.b","shape":[10]}],
+            "artifacts":{}}}}"#;
+        Manifest::parse(text, PathBuf::new())
+            .unwrap()
+            .arch("t")
+            .unwrap()
+            .clone()
+    }
+
+    #[test]
+    fn init_shapes_and_determinism() {
+        let a = arch();
+        let p1 = ParamSet::init(&a, 5);
+        let p2 = ParamSet::init(&a, 5);
+        assert_eq!(p1.len(), 4);
+        assert_eq!(p1.num_layers(), 2);
+        assert_eq!(p1.weight(1).shape(), &[256, 10]);
+        assert_eq!(p1.bias(0).shape(), &[4]);
+        assert_eq!(p1.tensors[0].data(), p2.tensors[0].data());
+        assert_ne!(
+            p1.tensors[0].data(),
+            ParamSet::init(&a, 6).tensors[0].data()
+        );
+        assert_eq!(p1.num_scalars(), 3 * 3 * 3 * 4 + 4 + 256 * 10 + 10);
+    }
+
+    #[test]
+    fn zeros_like_and_replace() {
+        let a = arch();
+        let mut p = ParamSet::init(&a, 1);
+        let m = p.zeros_like();
+        assert!(m.tensors.iter().all(|t| t.data().iter().all(|&x| x == 0.0)));
+        let new = m.tensors.clone();
+        p.replace(new).unwrap();
+        assert!(p.weight(0).data().iter().all(|&x| x == 0.0));
+        // wrong arity
+        assert!(p.replace(vec![]).is_err());
+    }
+
+    #[test]
+    fn weight_stats_sane() {
+        let a = arch();
+        let p = ParamSet::init(&a, 2);
+        let s = p.weight_stats();
+        assert_eq!(s.len(), 2);
+        for st in &s {
+            assert!(st.absmax > 0.0);
+            assert!(st.meansq > 0.0 && st.meansq < st.absmax * st.absmax);
+        }
+    }
+}

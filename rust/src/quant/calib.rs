@@ -1,0 +1,211 @@
+//! Fractional-length calibration: min-max and SQNR-optimal (the Lin et
+//! al. ICML 2016 baseline quantizer the paper builds on).
+//!
+//! Min-max guarantees no overload distortion; SQNR-optimal trades a
+//! little clipping of the distribution tail for a finer step, maximising
+//! the signal-to-quantization-noise ratio.  For bell-shaped activation /
+//! weight distributions the optimum is typically 1-2 fractional bits
+//! finer than min-max at 8 bits and below.
+
+use crate::error::Result;
+use crate::fixedpoint::QFormat;
+
+/// Per-layer statistics collected by the `stats_batch` executable (over
+/// pre-activations) or computed directly from weight tensors.
+#[derive(Clone, Copy, Debug)]
+pub struct LayerStats {
+    pub absmax: f32,
+    pub meanabs: f32,
+    pub meansq: f32,
+}
+
+/// Which calibration rule to use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CalibMethod {
+    /// Cover the observed absmax exactly (no clipping).
+    MinMax,
+    /// Maximise analytic SQNR under a Gaussian fit of the stats.
+    SqnrGaussian,
+}
+
+impl CalibMethod {
+    pub fn parse(s: &str) -> Option<CalibMethod> {
+        match s {
+            "minmax" => Some(CalibMethod::MinMax),
+            "sqnr" => Some(CalibMethod::SqnrGaussian),
+            _ => None,
+        }
+    }
+
+    /// Choose a format for one layer.
+    pub fn choose(&self, bits: u8, stats: &LayerStats) -> Result<QFormat> {
+        match self {
+            CalibMethod::MinMax => QFormat::fit_absmax(bits, stats.absmax),
+            CalibMethod::SqnrGaussian => sqnr_optimal_gaussian(bits, stats),
+        }
+    }
+}
+
+/// erf via the Abramowitz & Stegun 7.1.26 rational approximation
+/// (|error| <= 1.5e-7, plenty for picking an integer fractional length).
+fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t
+            - 0.284496736)
+            * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+fn phi(x: f64) -> f64 {
+    (-(x * x) / 2.0).exp() / (2.0 * std::f64::consts::PI).sqrt()
+}
+
+/// Expected quantization distortion of a zero-mean Gaussian with std
+/// `sigma` under a symmetric uniform quantizer with step `delta` and
+/// clip level `c` (granular + overload noise, standard high-rate model).
+fn gaussian_distortion(sigma: f64, delta: f64, c: f64) -> f64 {
+    if sigma <= 0.0 {
+        return 0.0;
+    }
+    let a = c / sigma;
+    // P(|x| < c)
+    let p_in = erf(a / std::f64::consts::SQRT_2);
+    let granular = delta * delta / 12.0 * p_in;
+    // E[(|x|-c)^2 ; |x|>c] for x ~ N(0, sigma^2):
+    //   = 2 * [ (sigma^2 + c^2) * Q(a) - sigma * c * phi(a) ]   with
+    //   Q(a) = 0.5 * erfc(a / sqrt2)
+    let q_a = 0.5 * (1.0 - erf(a / std::f64::consts::SQRT_2));
+    let overload = 2.0 * ((sigma * sigma + c * c) * q_a - sigma * c * phi(a));
+    granular + overload.max(0.0)
+}
+
+/// SQNR-optimal fractional length under a Gaussian fit: search formats
+/// from min-max (no clipping) down to several bits finer, minimising the
+/// analytic distortion.
+pub fn sqnr_optimal_gaussian(bits: u8, stats: &LayerStats) -> Result<QFormat> {
+    let base = QFormat::fit_absmax(bits, stats.absmax)?;
+    let sigma = (stats.meansq.max(0.0) as f64).sqrt();
+    if sigma == 0.0 {
+        return Ok(base);
+    }
+    let mut best = base;
+    let mut best_d = f64::INFINITY;
+    for extra in 0..=6i8 {
+        let frac = base.frac.saturating_add(extra);
+        let fmt = QFormat::new(bits, frac)?;
+        let delta = fmt.step() as f64;
+        let c = fmt.max_value() as f64;
+        let d = gaussian_distortion(sigma, delta, c);
+        if d < best_d {
+            best_d = d;
+            best = fmt;
+        }
+    }
+    Ok(best)
+}
+
+/// Empirical SQNR-optimal format from raw samples (used for weights,
+/// which the coordinator holds in full): sweep candidate fractional
+/// lengths, measure true SQNR, keep the best.
+pub fn sqnr_optimal_empirical(bits: u8, samples: &[f32]) -> Result<QFormat> {
+    let absmax = samples.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+    let base = QFormat::fit_absmax(bits, absmax)?;
+    let mut best = base;
+    let mut best_sqnr = f64::NEG_INFINITY;
+    for extra in 0..=6i8 {
+        let fmt = QFormat::new(bits, base.frac.saturating_add(extra))?;
+        let s = crate::fixedpoint::vector::sqnr_db(samples, fmt);
+        if s > best_sqnr {
+            best_sqnr = s;
+            best = fmt;
+        }
+    }
+    Ok(best)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn gauss_samples(n: usize, sigma: f32, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal() as f32 * sigma).collect()
+    }
+
+    #[test]
+    fn erf_accuracy() {
+        // reference values
+        for (x, want) in [(0.0, 0.0), (0.5, 0.5204999), (1.0, 0.8427008), (2.0, 0.9953223)] {
+            assert!((erf(x) - want).abs() < 1e-5, "erf({x})");
+        }
+        assert!((erf(-1.0) + 0.8427008).abs() < 1e-5);
+    }
+
+    #[test]
+    fn minmax_never_clips() {
+        let xs = gauss_samples(5000, 2.0, 1);
+        let absmax = xs.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        let stats = LayerStats { absmax, meanabs: 0.0, meansq: 4.0 };
+        let fmt = CalibMethod::MinMax.choose(8, &stats).unwrap();
+        assert!(fmt.max_value() >= absmax * 0.999);
+    }
+
+    #[test]
+    fn sqnr_gaussian_beats_minmax_in_sqnr() {
+        // the whole point of the companion-paper quantizer
+        let xs = gauss_samples(20000, 1.0, 2);
+        let absmax = xs.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        let meansq = xs.iter().map(|&x| x * x).sum::<f32>() / xs.len() as f32;
+        let stats = LayerStats { absmax, meanabs: 0.8, meansq };
+        for bits in [4u8, 8] {
+            let mm = CalibMethod::MinMax.choose(bits, &stats).unwrap();
+            let sq = CalibMethod::SqnrGaussian.choose(bits, &stats).unwrap();
+            let s_mm = crate::fixedpoint::vector::sqnr_db(&xs, mm);
+            let s_sq = crate::fixedpoint::vector::sqnr_db(&xs, sq);
+            assert!(
+                s_sq >= s_mm - 0.3,
+                "bits={bits}: sqnr {s_sq:.2} dB vs minmax {s_mm:.2} dB ({sq} vs {mm})"
+            );
+            // at low bit-width the optimum clips: finer frac than minmax
+            if bits <= 8 {
+                assert!(sq.frac >= mm.frac, "{sq} vs {mm}");
+            }
+        }
+    }
+
+    #[test]
+    fn empirical_matches_or_beats_gaussian() {
+        let xs = gauss_samples(20000, 0.7, 3);
+        let absmax = xs.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        let meansq = xs.iter().map(|&x| x * x).sum::<f32>() / xs.len() as f32;
+        let stats = LayerStats { absmax, meanabs: 0.0, meansq };
+        let g = sqnr_optimal_gaussian(4, &stats).unwrap();
+        let e = sqnr_optimal_empirical(4, &xs).unwrap();
+        let s_g = crate::fixedpoint::vector::sqnr_db(&xs, g);
+        let s_e = crate::fixedpoint::vector::sqnr_db(&xs, e);
+        assert!(s_e >= s_g - 1e-9, "{s_e} vs {s_g}");
+        // gaussian analytic pick should be within 1.5 dB of empirical best
+        assert!(s_g > s_e - 1.5, "{s_g} vs {s_e}");
+    }
+
+    #[test]
+    fn degenerate_stats() {
+        let stats = LayerStats { absmax: 0.0, meanabs: 0.0, meansq: 0.0 };
+        assert!(CalibMethod::MinMax.choose(8, &stats).is_ok());
+        assert!(CalibMethod::SqnrGaussian.choose(8, &stats).is_ok());
+    }
+
+    #[test]
+    fn parse() {
+        assert_eq!(CalibMethod::parse("minmax"), Some(CalibMethod::MinMax));
+        assert_eq!(CalibMethod::parse("sqnr"), Some(CalibMethod::SqnrGaussian));
+        assert_eq!(CalibMethod::parse("x"), None);
+    }
+}

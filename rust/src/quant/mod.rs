@@ -1,0 +1,16 @@
+//! Quantization format selection and experiment-grid configuration.
+//!
+//! The paper fine-tunes networks that were quantized with the scheme of
+//! its companion paper (Lin, Talathi & Annapureddy, ICML 2016: "Fixed
+//! point quantization of deep convolutional networks") -- per-layer
+//! fractional lengths chosen to maximise SQNR.  `calib` implements that
+//! baseline (plus plain min-max) from activation statistics collected by
+//! the `stats_batch` AOT executable; `policy` turns grid cells like
+//! (w=4 bits, a=8 bits) into the runtime config vectors the executables
+//! consume.
+
+pub mod calib;
+pub mod policy;
+
+pub use calib::{CalibMethod, LayerStats};
+pub use policy::{NetQuant, QuantVectors, WidthSpec};

@@ -1,0 +1,290 @@
+//! Grid cells -> runtime quantization configuration.
+//!
+//! A cell of the paper's experiment grid is a pair (weight width,
+//! activation width), each in {4, 8, 16, Float}.  `NetQuant` resolves a
+//! cell against per-layer calibration into concrete `QFormat`s (or None
+//! for float), applying the paper's special rule that the final layer's
+//! output activation is always at least 16-bit ("the subsequent softmax
+//! layer is rather sensitive to low precision inputs").  The
+//! `QuantVectors` it produces are fed verbatim as the (L,)-shaped inputs
+//! of every AOT executable.
+
+use crate::error::Result;
+use crate::fixedpoint::QFormat;
+
+use super::calib::{CalibMethod, LayerStats};
+
+/// One axis value of the experiment grid.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WidthSpec {
+    Bits(u8),
+    Float,
+}
+
+impl WidthSpec {
+    pub fn parse(s: &str) -> Option<WidthSpec> {
+        match s {
+            "float" | "f" | "fp" => Some(WidthSpec::Float),
+            _ => s.parse::<u8>().ok().map(WidthSpec::Bits),
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            WidthSpec::Bits(b) => b.to_string(),
+            WidthSpec::Float => "Float".to_string(),
+        }
+    }
+
+    /// The paper's grid axes: 4, 8, 16, Float.
+    pub fn paper_axis() -> [WidthSpec; 4] {
+        [
+            WidthSpec::Bits(4),
+            WidthSpec::Bits(8),
+            WidthSpec::Bits(16),
+            WidthSpec::Float,
+        ]
+    }
+}
+
+/// Resolved per-layer quantization of one network: `None` = float.
+#[derive(Clone, Debug)]
+pub struct NetQuant {
+    pub weights: Vec<Option<QFormat>>,
+    pub acts: Vec<Option<QFormat>>,
+}
+
+/// The (L,)-shaped runtime vectors consumed by the AOT executables.
+#[derive(Clone, Debug)]
+pub struct QuantVectors {
+    pub w_step: Vec<f32>,
+    pub w_lo: Vec<f32>,
+    pub w_hi: Vec<f32>,
+    pub w_en: Vec<f32>,
+    pub a_step: Vec<f32>,
+    pub a_lo: Vec<f32>,
+    pub a_hi: Vec<f32>,
+    pub a_en: Vec<f32>,
+}
+
+fn push_cfg(
+    fmt: &Option<QFormat>,
+    step: &mut Vec<f32>,
+    lo: &mut Vec<f32>,
+    hi: &mut Vec<f32>,
+    en: &mut Vec<f32>,
+) {
+    match fmt {
+        Some(f) => {
+            let (s, l, h) = f.runtime_cfg();
+            step.push(s);
+            lo.push(l);
+            hi.push(h);
+            en.push(1.0);
+        }
+        None => {
+            // disabled: enable=0 bypasses; benign placeholder params
+            step.push(1.0);
+            lo.push(-1.0);
+            hi.push(1.0);
+            en.push(0.0);
+        }
+    }
+}
+
+impl NetQuant {
+    /// Everything float (the pretraining configuration).
+    pub fn all_float(num_layers: usize) -> NetQuant {
+        NetQuant {
+            weights: vec![None; num_layers],
+            acts: vec![None; num_layers],
+        }
+    }
+
+    /// Resolve a grid cell.
+    ///
+    /// * `w_width` / `a_width`: the cell's axes.
+    /// * `w_stats` / `a_stats`: per-layer calibration statistics
+    ///   (weights from the checkpoint, activations from `stats_batch`).
+    /// * `method`: min-max or SQNR-optimal.
+    ///
+    /// The final layer's activation (the logits) is kept at >= 16 bits
+    /// whenever activations are quantized, per the paper's protocol.
+    pub fn for_cell(
+        w_width: WidthSpec,
+        a_width: WidthSpec,
+        w_stats: &[LayerStats],
+        a_stats: &[LayerStats],
+        method: CalibMethod,
+    ) -> Result<NetQuant> {
+        assert_eq!(w_stats.len(), a_stats.len());
+        let n = w_stats.len();
+        let mut weights = Vec::with_capacity(n);
+        let mut acts = Vec::with_capacity(n);
+        for (i, (ws, as_)) in w_stats.iter().zip(a_stats).enumerate() {
+            weights.push(match w_width {
+                WidthSpec::Float => None,
+                WidthSpec::Bits(b) => Some(method.choose(b, ws)?),
+            });
+            let is_last = i == n - 1;
+            acts.push(match a_width {
+                WidthSpec::Float => None,
+                WidthSpec::Bits(b) => {
+                    // paper: final FC output always 16-bit
+                    let eff = if is_last { b.max(16) } else { b };
+                    Some(method.choose(eff, as_)?)
+                }
+            });
+        }
+        Ok(NetQuant { weights, acts })
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.weights.len()
+    }
+
+    /// Activation formats fixed-point only for layers `< k` (the Table 1
+    /// phase schedule of Proposal 3: during phase p, activations of
+    /// layers 0..=p are fixed point, everything above stays float).
+    pub fn with_act_prefix(&self, k: usize) -> NetQuant {
+        let mut out = self.clone();
+        for (i, a) in out.acts.iter_mut().enumerate() {
+            if i >= k {
+                *a = None;
+            }
+        }
+        out
+    }
+
+    /// All activations float, weights unchanged (Proposal 1 training
+    /// configuration).
+    pub fn with_float_acts(&self) -> NetQuant {
+        let mut out = self.clone();
+        for a in out.acts.iter_mut() {
+            *a = None;
+        }
+        out
+    }
+
+    /// The runtime vectors for the executables.
+    pub fn vectors(&self) -> QuantVectors {
+        let mut v = QuantVectors {
+            w_step: vec![],
+            w_lo: vec![],
+            w_hi: vec![],
+            w_en: vec![],
+            a_step: vec![],
+            a_lo: vec![],
+            a_hi: vec![],
+            a_en: vec![],
+        };
+        for f in &self.weights {
+            push_cfg(f, &mut v.w_step, &mut v.w_lo, &mut v.w_hi, &mut v.w_en);
+        }
+        for f in &self.acts {
+            push_cfg(f, &mut v.a_step, &mut v.a_lo, &mut v.a_hi, &mut v.a_en);
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats(n: usize) -> Vec<LayerStats> {
+        (0..n)
+            .map(|i| LayerStats {
+                absmax: 2.0 + i as f32,
+                meanabs: 0.5,
+                meansq: 1.0,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn cell_resolution_basic() {
+        let s = stats(4);
+        let nq = NetQuant::for_cell(
+            WidthSpec::Bits(8),
+            WidthSpec::Bits(4),
+            &s,
+            &s,
+            CalibMethod::MinMax,
+        )
+        .unwrap();
+        assert_eq!(nq.num_layers(), 4);
+        assert!(nq.weights.iter().all(|w| w.unwrap().bits == 8));
+        // hidden acts 4-bit, last >= 16-bit (paper's softmax rule)
+        assert!(nq.acts[..3].iter().all(|a| a.unwrap().bits == 4));
+        assert_eq!(nq.acts[3].unwrap().bits, 16);
+    }
+
+    #[test]
+    fn float_axes() {
+        let s = stats(3);
+        let nq = NetQuant::for_cell(
+            WidthSpec::Float,
+            WidthSpec::Float,
+            &s,
+            &s,
+            CalibMethod::MinMax,
+        )
+        .unwrap();
+        assert!(nq.weights.iter().all(|w| w.is_none()));
+        assert!(nq.acts.iter().all(|a| a.is_none()));
+    }
+
+    #[test]
+    fn act_prefix_schedule() {
+        let s = stats(4);
+        let nq = NetQuant::for_cell(
+            WidthSpec::Bits(8),
+            WidthSpec::Bits(8),
+            &s,
+            &s,
+            CalibMethod::MinMax,
+        )
+        .unwrap();
+        // phase 1 of Table 1: only layer 0 activations fixed point
+        let p1 = nq.with_act_prefix(1);
+        assert!(p1.acts[0].is_some());
+        assert!(p1.acts[1..].iter().all(|a| a.is_none()));
+        // weights untouched
+        assert!(p1.weights.iter().all(|w| w.is_some()));
+        // prefix 0: nothing quantized
+        assert!(nq.with_act_prefix(0).acts.iter().all(|a| a.is_none()));
+        // full prefix: everything as resolved
+        assert_eq!(
+            nq.with_act_prefix(4).acts.iter().filter(|a| a.is_some()).count(),
+            4
+        );
+    }
+
+    #[test]
+    fn vectors_layout() {
+        let s = stats(2);
+        let nq = NetQuant::for_cell(
+            WidthSpec::Bits(4),
+            WidthSpec::Float,
+            &s,
+            &s,
+            CalibMethod::MinMax,
+        )
+        .unwrap();
+        let v = nq.vectors();
+        assert_eq!(v.w_en, vec![1.0, 1.0]);
+        assert_eq!(v.a_en, vec![0.0, 0.0]);
+        assert_eq!(v.w_lo, vec![-8.0, -8.0]);
+        assert_eq!(v.w_hi, vec![7.0, 7.0]);
+        assert!(v.w_step.iter().all(|&s| s > 0.0));
+    }
+
+    #[test]
+    fn width_spec_parse() {
+        assert_eq!(WidthSpec::parse("8"), Some(WidthSpec::Bits(8)));
+        assert_eq!(WidthSpec::parse("float"), Some(WidthSpec::Float));
+        assert_eq!(WidthSpec::parse("x"), None);
+        assert_eq!(WidthSpec::paper_axis().len(), 4);
+    }
+}

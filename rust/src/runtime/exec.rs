@@ -1,0 +1,92 @@
+//! A compiled executable plus its manifest signature.
+//!
+//! Two call levels:
+//! * `run` -- named host tensors in/out with full validation (used by
+//!   evaluation, calibration, one-shot paths);
+//! * `run_literals` -- raw literal in/out (the training hot path: the
+//!   updated parameter/momentum literals returned by one step are fed
+//!   straight back into the next step without a host round-trip).
+
+use crate::error::{FxpError, Result};
+use crate::model::manifest::ArtifactSpec;
+use crate::runtime::literal::{check_input, from_literal, to_literal, HostValue};
+
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub spec: ArtifactSpec,
+}
+
+impl Executable {
+    pub fn new(exe: xla::PjRtLoadedExecutable, spec: ArtifactSpec) -> Executable {
+        Executable { exe, spec }
+    }
+
+    pub fn num_inputs(&self) -> usize {
+        self.spec.inputs.len()
+    }
+
+    pub fn num_outputs(&self) -> usize {
+        self.spec.outputs.len()
+    }
+
+    /// Execute with raw literals (no validation beyond arity); returns the
+    /// untupled output literals in manifest order.
+    pub fn run_literals(&self, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        if inputs.len() != self.spec.inputs.len() {
+            return Err(FxpError::shape(format!(
+                "executable {}: {} inputs, expected {}",
+                self.spec.file,
+                inputs.len(),
+                self.spec.inputs.len()
+            )));
+        }
+        let result = self.exe.execute::<&xla::Literal>(inputs)?;
+        // AOT lowering uses return_tuple=True: single tuple result.
+        let lit = result[0][0].to_literal_sync()?;
+        let outs = lit.to_tuple()?;
+        if outs.len() != self.spec.outputs.len() {
+            return Err(FxpError::shape(format!(
+                "executable {}: {} outputs, manifest says {}",
+                self.spec.file,
+                outs.len(),
+                self.spec.outputs.len()
+            )));
+        }
+        Ok(outs)
+    }
+
+    /// Execute with validated host tensors; returns host tensors.
+    pub fn run(&self, inputs: &[HostValue]) -> Result<Vec<HostValue>> {
+        if inputs.len() != self.spec.inputs.len() {
+            return Err(FxpError::shape(format!(
+                "executable {}: {} inputs, expected {}",
+                self.spec.file,
+                inputs.len(),
+                self.spec.inputs.len()
+            )));
+        }
+        for (v, spec) in inputs.iter().zip(&self.spec.inputs) {
+            check_input(v, spec)?;
+        }
+        let lits: Vec<xla::Literal> =
+            inputs.iter().map(to_literal).collect::<Result<_>>()?;
+        let refs: Vec<&xla::Literal> = lits.iter().collect();
+        let outs = self.run_literals(&refs)?;
+        outs.iter()
+            .zip(&self.spec.outputs)
+            .map(|(l, s)| from_literal(l, s))
+            .collect()
+    }
+
+    /// Convert host inputs to literals without running (callers that reuse
+    /// constant inputs across many steps convert once).
+    pub fn literals_of(&self, inputs: &[HostValue]) -> Result<Vec<xla::Literal>> {
+        inputs.iter().map(to_literal).collect()
+    }
+
+    /// Read one named output from a literal row returned by `run_literals`.
+    pub fn output_host(&self, outs: &[xla::Literal], name: &str) -> Result<HostValue> {
+        let idx = self.spec.output_index(name)?;
+        from_literal(&outs[idx], &self.spec.outputs[idx])
+    }
+}

@@ -1,0 +1,184 @@
+//! Host tensor <-> XLA literal conversion.
+
+use crate::error::{FxpError, Result};
+use crate::model::manifest::{Dtype, IoSpec};
+use crate::tensor::{Tensor, TensorF, TensorI};
+
+/// A host-side value crossing the executable boundary.
+#[derive(Clone, Debug)]
+pub enum HostValue {
+    F32(TensorF),
+    I32(TensorI),
+}
+
+impl HostValue {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostValue::F32(t) => t.shape(),
+            HostValue::I32(t) => t.shape(),
+        }
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            HostValue::F32(_) => Dtype::F32,
+            HostValue::I32(_) => Dtype::I32,
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&TensorF> {
+        match self {
+            HostValue::F32(t) => Ok(t),
+            _ => Err(FxpError::shape("expected f32 tensor")),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<TensorF> {
+        match self {
+            HostValue::F32(t) => Ok(t),
+            _ => Err(FxpError::shape("expected f32 tensor")),
+        }
+    }
+
+    pub fn into_i32(self) -> Result<TensorI> {
+        match self {
+            HostValue::I32(t) => Ok(t),
+            _ => Err(FxpError::shape("expected i32 tensor")),
+        }
+    }
+
+    /// Scalar f32 view (for loss outputs).
+    pub fn scalar_f32(&self) -> Result<f32> {
+        let t = self.as_f32()?;
+        if t.len() != 1 {
+            return Err(FxpError::shape(format!(
+                "expected scalar, got shape {:?}",
+                t.shape()
+            )));
+        }
+        Ok(t.data()[0])
+    }
+}
+
+impl From<TensorF> for HostValue {
+    fn from(t: TensorF) -> Self {
+        HostValue::F32(t)
+    }
+}
+
+impl From<TensorI> for HostValue {
+    fn from(t: TensorI) -> Self {
+        HostValue::I32(t)
+    }
+}
+
+/// Build an XLA literal from a host value (bulk byte copy).
+pub fn to_literal(v: &HostValue) -> Result<xla::Literal> {
+    match v {
+        HostValue::F32(t) => {
+            let bytes: &[u8] = unsafe {
+                std::slice::from_raw_parts(
+                    t.data().as_ptr() as *const u8,
+                    t.data().len() * 4,
+                )
+            };
+            Ok(xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::F32,
+                t.shape(),
+                bytes,
+            )?)
+        }
+        HostValue::I32(t) => {
+            let bytes: &[u8] = unsafe {
+                std::slice::from_raw_parts(
+                    t.data().as_ptr() as *const u8,
+                    t.data().len() * 4,
+                )
+            };
+            Ok(xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::S32,
+                t.shape(),
+                bytes,
+            )?)
+        }
+    }
+}
+
+/// Read a literal back into a host value, validated against the spec.
+pub fn from_literal(lit: &xla::Literal, spec: &IoSpec) -> Result<HostValue> {
+    match spec.dtype {
+        Dtype::F32 => {
+            let data = lit.to_vec::<f32>()?;
+            Ok(HostValue::F32(Tensor::from_vec(&spec.shape, data)?))
+        }
+        Dtype::I32 => {
+            let data = lit.to_vec::<i32>()?;
+            Ok(HostValue::I32(Tensor::from_vec(&spec.shape, data)?))
+        }
+    }
+}
+
+/// Validate a host value against an input spec (shape + dtype).
+pub fn check_input(v: &HostValue, spec: &IoSpec) -> Result<()> {
+    if v.dtype() != spec.dtype {
+        return Err(FxpError::shape(format!(
+            "input '{}': dtype {:?}, expected {:?}",
+            spec.name,
+            v.dtype(),
+            spec.dtype
+        )));
+    }
+    if v.shape() != spec.shape.as_slice() {
+        return Err(FxpError::shape(format!(
+            "input '{}': shape {:?}, expected {:?}",
+            spec.name,
+            v.shape(),
+            spec.shape
+        )));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_round_trip() {
+        let t = TensorF::from_vec(&[2, 3], vec![1.0, -2.0, 3.5, 0.0, 1e-9, -7.25])
+            .unwrap();
+        let v = HostValue::F32(t.clone());
+        let lit = to_literal(&v).unwrap();
+        let spec = IoSpec { name: "x".into(), shape: vec![2, 3], dtype: Dtype::F32 };
+        let back = from_literal(&lit, &spec).unwrap().into_f32().unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn i32_round_trip() {
+        let t = TensorI::from_vec(&[4], vec![0, -5, 123456, i32::MAX]).unwrap();
+        let lit = to_literal(&HostValue::I32(t.clone())).unwrap();
+        let spec = IoSpec { name: "y".into(), shape: vec![4], dtype: Dtype::I32 };
+        let back = from_literal(&lit, &spec).unwrap().into_i32().unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn check_input_catches_mismatch() {
+        let spec = IoSpec { name: "x".into(), shape: vec![2], dtype: Dtype::F32 };
+        let ok = HostValue::F32(TensorF::zeros(&[2]));
+        check_input(&ok, &spec).unwrap();
+        let bad_shape = HostValue::F32(TensorF::zeros(&[3]));
+        assert!(check_input(&bad_shape, &spec).is_err());
+        let bad_ty = HostValue::I32(TensorI::zeros(&[2]));
+        assert!(check_input(&bad_ty, &spec).is_err());
+    }
+
+    #[test]
+    fn scalar_accessor() {
+        let v = HostValue::F32(TensorF::from_vec(&[], vec![2.5]).unwrap());
+        assert_eq!(v.scalar_f32().unwrap(), 2.5);
+        let not_scalar = HostValue::F32(TensorF::zeros(&[2]));
+        assert!(not_scalar.scalar_f32().is_err());
+    }
+}

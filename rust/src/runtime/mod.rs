@@ -1,0 +1,82 @@
+//! PJRT runtime: load AOT-compiled HLO text, compile once, execute many.
+//!
+//! This is the only place the `xla` crate is touched.  The `Engine` owns
+//! the (process-wide) CPU PJRT client and an executable cache keyed by
+//! (arch, kind); `exec::Executable` wraps one compiled program with its
+//! manifest signature so callers feed/receive named host tensors instead
+//! of raw literals.
+//!
+//! Everything here is single-threaded by design (the PJRT wrapper types
+//! hold raw pointers); the data loader runs on its own thread and talks
+//! to the engine's thread through channels.
+
+pub mod exec;
+pub mod literal;
+
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use crate::error::{FxpError, Result};
+use crate::model::manifest::Manifest;
+
+pub use exec::Executable;
+pub use literal::HostValue;
+
+/// The runtime engine: PJRT client + manifest + executable cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: std::cell::RefCell<HashMap<(String, String), Rc<Executable>>>,
+}
+
+impl Engine {
+    /// Create a CPU engine over an artifact directory (must contain
+    /// `manifest.json`; see `make artifacts`).
+    pub fn cpu(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        log::info!(
+            "PJRT client: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(Engine { client, manifest, cache: Default::default() })
+    }
+
+    /// Compile (or fetch from cache) the executable for (arch, kind).
+    pub fn executable(&self, arch: &str, kind: &str) -> Result<Rc<Executable>> {
+        let key = (arch.to_string(), kind.to_string());
+        if let Some(e) = self.cache.borrow().get(&key) {
+            return Ok(e.clone());
+        }
+        let path = self.manifest.artifact_path(arch, kind)?;
+        let spec = self.manifest.arch(arch)?.artifact(kind)?.clone();
+        let t = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path).map_err(|e| {
+            FxpError::Manifest(format!(
+                "cannot parse HLO text {}: {e}",
+                path.display()
+            ))
+        })?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        log::info!(
+            "compiled {arch}/{kind} in {:.2}s ({} inputs, {} outputs)",
+            t.elapsed().as_secs_f64(),
+            spec.inputs.len(),
+            spec.outputs.len()
+        );
+        let wrapped = Rc::new(Executable::new(exe, spec));
+        self.cache.borrow_mut().insert(key, wrapped.clone());
+        Ok(wrapped)
+    }
+
+    /// Drop all cached executables (frees memory; mostly for tests).
+    pub fn clear_cache(&self) {
+        self.cache.borrow_mut().clear();
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}

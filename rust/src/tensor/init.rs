@@ -1,0 +1,69 @@
+//! Parameter initialisation (mirrors python/compile/model.py:init_params).
+//!
+//! Weights: He-normal (std = sqrt(2 / fan_in), fan_in = product of all but
+//! the last dimension -- correct for both HWIO conv kernels and (in, out)
+//! FC matrices).  Biases: zero.
+
+use super::Tensor;
+use crate::util::rng::Rng;
+
+/// He-normal weight tensor.
+pub fn he_normal(shape: &[usize], rng: &mut Rng) -> Tensor<f32> {
+    let fan_in: usize = shape[..shape.len().saturating_sub(1)].iter().product();
+    let std = (2.0 / fan_in.max(1) as f64).sqrt() as f32;
+    let mut t = Tensor::zeros(shape);
+    rng.fill_normal(t.data_mut(), std);
+    t
+}
+
+/// Zero bias.
+pub fn zeros(shape: &[usize]) -> Tensor<f32> {
+    Tensor::zeros(shape)
+}
+
+/// Initialise a parameter by name convention: "*.b" -> zeros, else He.
+pub fn for_param(name: &str, shape: &[usize], rng: &mut Rng) -> Tensor<f32> {
+    if name.ends_with(".b") {
+        zeros(shape)
+    } else {
+        he_normal(shape, rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn he_std_is_right() {
+        let mut rng = Rng::new(0);
+        let t = he_normal(&[3, 3, 16, 32], &mut rng);
+        let fan_in = 3 * 3 * 16;
+        let want = (2.0 / fan_in as f64).sqrt();
+        let m = t.mean();
+        let var = t
+            .data()
+            .iter()
+            .map(|&x| (x as f64 - m) * (x as f64 - m))
+            .sum::<f64>()
+            / t.len() as f64;
+        assert!(m.abs() < 0.01, "{m}");
+        assert!((var.sqrt() - want).abs() / want < 0.1, "{} vs {want}", var.sqrt());
+    }
+
+    #[test]
+    fn bias_is_zero() {
+        let mut rng = Rng::new(0);
+        let t = for_param("l3.b", &[64], &mut rng);
+        assert!(t.data().iter().all(|&x| x == 0.0));
+        let w = for_param("l3.w", &[8, 8], &mut rng);
+        assert!(w.data().iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = he_normal(&[4, 4], &mut Rng::new(7));
+        let b = he_normal(&[4, 4], &mut Rng::new(7));
+        assert_eq!(a.data(), b.data());
+    }
+}

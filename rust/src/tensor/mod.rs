@@ -1,0 +1,227 @@
+//! Host-side dense tensors (row-major, contiguous).
+//!
+//! These are deliberately simple: the heavy math runs inside the
+//! AOT-compiled XLA executables; the host only needs construction,
+//! reshuffling, reductions for evaluation, and conversion to/from PJRT
+//! literals (rust/src/runtime/literal.rs).
+
+pub mod init;
+
+use crate::error::{FxpError, Result};
+
+/// Dense row-major tensor over a copyable scalar.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor<T: Copy> {
+    shape: Vec<usize>,
+    data: Vec<T>,
+}
+
+pub type TensorF = Tensor<f32>;
+pub type TensorI = Tensor<i32>;
+
+impl<T: Copy + Default> Tensor<T> {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![T::default(); n] }
+    }
+}
+
+impl<T: Copy> Tensor<T> {
+    pub fn from_vec(shape: &[usize], data: Vec<T>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            return Err(FxpError::shape(format!(
+                "shape {:?} needs {} elements, got {}",
+                shape,
+                n,
+                data.len()
+            )));
+        }
+        Ok(Tensor { shape: shape.to_vec(), data })
+    }
+
+    pub fn full(shape: &[usize], v: T) -> Self {
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![v; n] }
+    }
+
+    pub fn scalar1(v: T) -> Self {
+        Tensor { shape: vec![1], data: vec![v] }
+    }
+
+    #[inline]
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    #[inline]
+    pub fn data(&self) -> &[T] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [T] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<T> {
+        self.data
+    }
+
+    /// Reinterpret with a new shape (same element count).
+    pub fn reshape(mut self, shape: &[usize]) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != self.data.len() {
+            return Err(FxpError::shape(format!(
+                "cannot reshape {:?} -> {:?}",
+                self.shape, shape
+            )));
+        }
+        self.shape = shape.to_vec();
+        Ok(self)
+    }
+
+    /// Rows `rows[i]` of a 2-D-interpretable tensor (first dim = rows),
+    /// gathered into a new tensor; used to assemble shuffled batches.
+    pub fn gather_rows(&self, rows: &[usize]) -> Result<Self> {
+        if self.shape.is_empty() {
+            return Err(FxpError::shape("gather_rows on scalar"));
+        }
+        let row_len: usize = self.shape[1..].iter().product();
+        let n_rows = self.shape[0];
+        let mut data = Vec::with_capacity(rows.len() * row_len);
+        for &r in rows {
+            if r >= n_rows {
+                return Err(FxpError::shape(format!(
+                    "row {r} out of range {n_rows}"
+                )));
+            }
+            data.extend_from_slice(&self.data[r * row_len..(r + 1) * row_len]);
+        }
+        let mut shape = self.shape.clone();
+        shape[0] = rows.len();
+        Ok(Tensor { shape, data })
+    }
+}
+
+impl Tensor<f32> {
+    /// L2 norm.
+    pub fn norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    /// Cosine similarity with another tensor of the same shape.
+    pub fn cosine(&self, other: &Tensor<f32>) -> Result<f64> {
+        if self.shape != other.shape {
+            return Err(FxpError::shape("cosine: shape mismatch"));
+        }
+        let dot: f64 = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| a as f64 * b as f64)
+            .sum();
+        let na = self.norm();
+        let nb = other.norm();
+        if na == 0.0 || nb == 0.0 {
+            return Ok(0.0);
+        }
+        Ok(dot / (na * nb))
+    }
+
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().map(|&x| x as f64).sum::<f64>() / self.data.len() as f64
+    }
+
+    /// Indices of the k largest values in each row of a (n, m) tensor,
+    /// descending; used for top-k error in the evaluator.
+    pub fn topk_rows(&self, k: usize) -> Result<Vec<Vec<usize>>> {
+        if self.shape.len() != 2 {
+            return Err(FxpError::shape("topk_rows wants 2-D"));
+        }
+        let (n, m) = (self.shape[0], self.shape[1]);
+        let k = k.min(m);
+        let mut out = Vec::with_capacity(n);
+        for r in 0..n {
+            let row = &self.data[r * m..(r + 1) * m];
+            let mut idx: Vec<usize> = (0..m).collect();
+            idx.sort_by(|&a, &b| row[b].partial_cmp(&row[a]).unwrap());
+            idx.truncate(k);
+            out.push(idx);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_reshape() {
+        let t = Tensor::from_vec(&[2, 3], vec![1.0f32, 2., 3., 4., 5., 6.]).unwrap();
+        assert_eq!(t.shape(), &[2, 3]);
+        let t = t.reshape(&[3, 2]).unwrap();
+        assert_eq!(t.shape(), &[3, 2]);
+        assert!(t.clone().reshape(&[4, 2]).is_err());
+        assert!(Tensor::from_vec(&[2, 2], vec![0.0f32; 3]).is_err());
+    }
+
+    #[test]
+    fn gather_rows() {
+        let t = Tensor::from_vec(&[3, 2], vec![0f32, 1., 10., 11., 20., 21.]).unwrap();
+        let g = t.gather_rows(&[2, 0]).unwrap();
+        assert_eq!(g.shape(), &[2, 2]);
+        assert_eq!(g.data(), &[20., 21., 0., 1.]);
+        assert!(t.gather_rows(&[5]).is_err());
+    }
+
+    #[test]
+    fn reductions() {
+        let t = Tensor::from_vec(&[4], vec![3.0f32, -4.0, 0.0, 1.0]).unwrap();
+        assert!((t.norm() - (26.0f64).sqrt()).abs() < 1e-12);
+        assert_eq!(t.abs_max(), 4.0);
+        assert_eq!(t.mean(), 0.0);
+    }
+
+    #[test]
+    fn cosine() {
+        let a = Tensor::from_vec(&[3], vec![1.0f32, 0., 0.]).unwrap();
+        let b = Tensor::from_vec(&[3], vec![0.0f32, 1., 0.]).unwrap();
+        assert_eq!(a.cosine(&b).unwrap(), 0.0);
+        assert!((a.cosine(&a).unwrap() - 1.0).abs() < 1e-12);
+        let z = Tensor::zeros(&[3]);
+        assert_eq!(a.cosine(&z).unwrap(), 0.0);
+        let c = Tensor::<f32>::zeros(&[4]);
+        assert!(a.cosine(&c).is_err());
+    }
+
+    #[test]
+    fn topk() {
+        let t =
+            Tensor::from_vec(&[2, 4], vec![0.1f32, 0.9, 0.5, 0.2, 9., 7., 8., 6.])
+                .unwrap();
+        let tk = t.topk_rows(2).unwrap();
+        assert_eq!(tk[0], vec![1, 2]);
+        assert_eq!(tk[1], vec![0, 2]);
+        // k larger than row is clamped
+        assert_eq!(t.topk_rows(10).unwrap()[0].len(), 4);
+    }
+}

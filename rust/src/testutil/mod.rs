@@ -1,0 +1,120 @@
+//! Mini property-testing harness (proptest is not in the offline cache).
+//!
+//! `check` runs a property over `n` seeded random cases; on failure it
+//! reports the failing seed so the case can be replayed exactly:
+//! `check_seeded(seed, prop)`.  Generators are plain functions over
+//! `Rng`, composed by hand -- small, but covers the invariants this
+//! library cares about (see the property tests in fixedpoint/, quant/,
+//! and rust/tests/).
+
+use crate::util::rng::Rng;
+
+/// Run `prop` over `n` random cases; panics with the failing seed.
+pub fn check<F: FnMut(&mut Rng) -> std::result::Result<(), String>>(
+    name: &str,
+    n: usize,
+    mut prop: F,
+) {
+    for case in 0..n {
+        let seed = 0xF00D_0000u64 + case as u64;
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property '{name}' failed at seed {seed:#x}: {msg}");
+        }
+    }
+}
+
+/// Replay a single failing case.
+pub fn check_seeded<F: FnMut(&mut Rng) -> std::result::Result<(), String>>(
+    name: &str,
+    seed: u64,
+    mut prop: F,
+) {
+    let mut rng = Rng::new(seed);
+    if let Err(msg) = prop(&mut rng) {
+        panic!("property '{name}' failed at seed {seed:#x}: {msg}");
+    }
+}
+
+/// Generator helpers.
+pub mod gen {
+    use crate::fixedpoint::QFormat;
+    use crate::util::rng::Rng;
+
+    /// Vec of f32 drawn from N(0, scale^2).
+    pub fn normal_vec(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32 * scale).collect()
+    }
+
+    /// Uniform vec in [lo, hi).
+    pub fn uniform_vec(rng: &mut Rng, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..n).map(|_| rng.uniform_in(lo, hi)).collect()
+    }
+
+    /// Random Q-format with bits in [2, 16], frac in [-2, 12].
+    pub fn qformat(rng: &mut Rng) -> QFormat {
+        let bits = 2 + rng.below(15) as u8;
+        let frac = rng.below(15) as i8 - 2;
+        QFormat::new(bits, frac).unwrap()
+    }
+
+    /// Random length in [1, max].
+    pub fn len(rng: &mut Rng, max: usize) -> usize {
+        1 + rng.below(max)
+    }
+}
+
+/// Assert two f32 slices are elementwise close.
+pub fn assert_close(a: &[f32], b: &[f32], tol: f32) -> std::result::Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        if (x - y).abs() > tol {
+            return Err(format!("index {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_good_property() {
+        check("uniform in range", 50, |rng| {
+            let x = rng.uniform();
+            if (0.0..1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("{x} out of range"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn check_reports_failure() {
+        check("always fails", 3, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn assert_close_works() {
+        assert!(assert_close(&[1.0, 2.0], &[1.0, 2.0001], 1e-3).is_ok());
+        assert!(assert_close(&[1.0], &[1.1], 1e-3).is_err());
+        assert!(assert_close(&[1.0], &[1.0, 2.0], 1e-3).is_err());
+    }
+
+    #[test]
+    fn generators_in_bounds() {
+        let mut rng = crate::util::rng::Rng::new(1);
+        for _ in 0..100 {
+            let q = gen::qformat(&mut rng);
+            assert!((2..=16).contains(&q.bits));
+            assert!((-2..=12).contains(&q.frac));
+            let n = gen::len(&mut rng, 7);
+            assert!((1..=7).contains(&n));
+        }
+    }
+}

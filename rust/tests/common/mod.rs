@@ -1,0 +1,20 @@
+//! Shared helpers for integration tests (require `make artifacts`).
+
+use std::path::PathBuf;
+
+use fxpnet::runtime::Engine;
+
+/// Locate the artifacts directory (repo root / artifacts).
+pub fn artifacts_dir() -> PathBuf {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    assert!(
+        dir.join("manifest.json").exists(),
+        "artifacts/manifest.json missing -- run `make artifacts` before \
+         `cargo test` (the Makefile `test` target does this)"
+    );
+    dir
+}
+
+pub fn engine() -> Engine {
+    Engine::cpu(artifacts_dir()).expect("engine")
+}

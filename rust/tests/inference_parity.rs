@@ -1,0 +1,104 @@
+//! Integration: the pure-integer engine tracks the XLA simulated-
+//! quantization path (same grid points up to f32 accumulator roundoff).
+
+mod common;
+
+use fxpnet::cli::commands::evaluate_logits;
+use fxpnet::coordinator::calibrate;
+use fxpnet::data::synth::Dataset;
+use fxpnet::fixedpoint::QFormat;
+use fxpnet::inference::verify::parity_report;
+use fxpnet::inference::FixedPointNet;
+use fxpnet::model::params::ParamSet;
+use fxpnet::quant::calib::CalibMethod;
+use fxpnet::quant::policy::{NetQuant, WidthSpec};
+
+fn cell(
+    engine: &fxpnet::runtime::Engine,
+    params: &ParamSet,
+    data: &Dataset,
+    bits: u8,
+) -> NetQuant {
+    let calib =
+        calibrate::activation_stats(engine, "tiny", params, data, 2).unwrap();
+    NetQuant::for_cell(
+        WidthSpec::Bits(bits),
+        WidthSpec::Bits(bits),
+        &params.weight_stats(),
+        &calib.a_stats,
+        CalibMethod::MinMax,
+    )
+    .unwrap()
+}
+
+#[test]
+fn engine_matches_xla_path_8bit() {
+    let engine = common::engine();
+    let spec = engine.manifest.arch("tiny").unwrap().clone();
+    let params = ParamSet::init(&spec, 3);
+    let data = Dataset::generate(64, spec.input[0], spec.input[1], 11);
+    let nq = cell(&engine, &params, &data, 8);
+
+    let net =
+        FixedPointNet::build(&spec, &params, &nq, QFormat::new(16, 14).unwrap())
+            .unwrap();
+    let int_logits = net.forward_batch(&data.images).unwrap();
+    let xla_logits = evaluate_logits(&engine, "tiny", &params, &nq, &data).unwrap();
+
+    let p = parity_report(&int_logits, &xla_logits).unwrap();
+    // predictions match; logit differences stay below one hidden-layer LSB
+    // (a 1-LSB hidden difference -- f32 accumulator roundoff at a rounding
+    // tie -- propagates to the logits scaled by downstream weights)
+    assert!(p.top1_agreement >= 0.95, "{p}");
+    let hidden_step = nq.acts[..nq.acts.len() - 1]
+        .iter()
+        .map(|a| a.unwrap().step())
+        .fold(0f32, f32::max);
+    assert!(p.linf <= hidden_step, "{p} (hidden step {hidden_step})");
+    assert!(p.l1 <= hidden_step * 0.05, "{p}");
+}
+
+#[test]
+fn engine_matches_xla_path_4bit() {
+    let engine = common::engine();
+    let spec = engine.manifest.arch("tiny").unwrap().clone();
+    let params = ParamSet::init(&spec, 4);
+    let data = Dataset::generate(64, spec.input[0], spec.input[1], 12);
+    let nq = cell(&engine, &params, &data, 4);
+    let net =
+        FixedPointNet::build(&spec, &params, &nq, QFormat::new(16, 14).unwrap())
+            .unwrap();
+    let int_logits = net.forward_batch(&data.images).unwrap();
+    let xla_logits = evaluate_logits(&engine, "tiny", &params, &nq, &data).unwrap();
+    let p = parity_report(&int_logits, &xla_logits).unwrap();
+    // coarser grid -> coarser agreement, but predictions still track
+    assert!(p.top1_agreement >= 0.90, "{p}");
+}
+
+#[test]
+fn engine_rejects_float_hidden_layers() {
+    let engine = common::engine();
+    let spec = engine.manifest.arch("tiny").unwrap().clone();
+    let params = ParamSet::init(&spec, 5);
+    let nq = NetQuant::all_float(spec.num_layers);
+    assert!(FixedPointNet::build(
+        &spec,
+        &params,
+        &nq,
+        QFormat::new(16, 14).unwrap()
+    )
+    .is_err());
+}
+
+#[test]
+fn macs_counter_is_positive() {
+    let engine = common::engine();
+    let spec = engine.manifest.arch("tiny").unwrap().clone();
+    let params = ParamSet::init(&spec, 6);
+    let data = Dataset::generate(32, spec.input[0], spec.input[1], 13);
+    let nq = cell(&engine, &params, &data, 8);
+    let net =
+        FixedPointNet::build(&spec, &params, &nq, QFormat::new(16, 14).unwrap())
+            .unwrap();
+    assert!(net.macs_per_image() > 10_000);
+}

@@ -1,0 +1,175 @@
+//! Property tests over the testutil harness: the fixed-point invariants
+//! the whole stack rests on, randomised across formats/shapes/seeds.
+
+use fxpnet::fixedpoint::vector::{quantize_slice, quantized, sqnr_db};
+use fxpnet::fixedpoint::{Fx, QFormat, RoundMode};
+use fxpnet::inference::ops;
+use fxpnet::quant::calib::{sqnr_optimal_empirical, CalibMethod, LayerStats};
+use fxpnet::testutil::{check, gen};
+
+#[test]
+fn prop_quantize_idempotent() {
+    check("q(q(x)) == q(x)", 200, |rng| {
+        let fmt = gen::qformat(rng);
+        let n = gen::len(rng, 200);
+        let xs = gen::normal_vec(rng, n, 8.0);
+        let q1 = quantized(&xs, fmt, RoundMode::NearestHalfUp, None);
+        let q2 = quantized(&q1, fmt, RoundMode::NearestHalfUp, None);
+        if q1 != q2 {
+            return Err(format!("not idempotent for {fmt}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_quantize_bounded_error_in_range() {
+    check("|x - q(x)| <= step/2 for in-range x", 200, |rng| {
+        let fmt = gen::qformat(rng);
+        let half_range = fmt.max_value().min(-fmt.min_value()) * 0.9;
+        if half_range <= 0.0 {
+            return Ok(());
+        }
+        let xs = gen::uniform_vec(rng, 100, -half_range, half_range);
+        let q = quantized(&xs, fmt, RoundMode::NearestHalfUp, None);
+        for (&x, &xq) in xs.iter().zip(&q) {
+            if (x - xq).abs() > fmt.step() * 0.5 + 1e-6 {
+                return Err(format!("{fmt}: x={x} q={xq}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_quantize_monotone() {
+    check("x <= y => q(x) <= q(y)", 100, |rng| {
+        let fmt = gen::qformat(rng);
+        let mut xs = gen::normal_vec(rng, 64, 16.0);
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let q = quantized(&xs, fmt, RoundMode::NearestHalfUp, None);
+        for w in q.windows(2) {
+            if w[1] < w[0] {
+                return Err(format!("{fmt}: {} > {}", w[0], w[1]));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_quantize_saturates_to_format_bounds() {
+    check("q(x) within [min_value, max_value]", 200, |rng| {
+        let fmt = gen::qformat(rng);
+        let xs = gen::normal_vec(rng, 100, 1e4);
+        let q = quantized(&xs, fmt, RoundMode::NearestHalfUp, None);
+        for &v in &q {
+            if v < fmt.min_value() - 1e-5 || v > fmt.max_value() + 1e-5 {
+                return Err(format!("{fmt}: {v}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_scalar_vector_engine_agree() {
+    check("Fx scalar == vector path == engine encode", 100, |rng| {
+        let fmt = gen::qformat(rng);
+        let xs = gen::normal_vec(rng, 50, 8.0);
+        let v = quantized(&xs, fmt, RoundMode::NearestHalfUp, None);
+        let e = ops::encode(&xs, fmt);
+        for ((&x, &xv), &code) in xs.iter().zip(&v).zip(&e) {
+            let fx = Fx::from_f32(x, fmt, RoundMode::NearestHalfUp, None);
+            if fx.to_f32() != xv {
+                return Err(format!("{fmt}: scalar {x} -> {} vs {xv}", fx.to_f32()));
+            }
+            if fx.code != code as i64 {
+                return Err(format!("{fmt}: code {x} -> {} vs {code}", fx.code));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_stochastic_rounding_unbiased() {
+    check("E[q_st(x)] ~ x", 20, |rng| {
+        let fmt = QFormat::new(8, 3).unwrap();
+        let x = rng.uniform_in(-10.0, 10.0);
+        let n = 4000;
+        let mut xs = vec![x; n];
+        quantize_slice(&mut xs, fmt, RoundMode::Stochastic, Some(rng));
+        let mean: f64 = xs.iter().map(|&v| v as f64).sum::<f64>() / n as f64;
+        let clipped = (x).clamp(fmt.min_value(), fmt.max_value()) as f64;
+        if (mean - clipped).abs() > fmt.step() as f64 * 0.15 {
+            return Err(format!("x={x} mean={mean}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_more_bits_never_hurt_sqnr() {
+    check("sqnr(bits+2) >= sqnr(bits)", 60, |rng| {
+        let scale = 1.0 + rng.uniform() as f32 * 4.0;
+        let xs = gen::normal_vec(rng, 800, scale);
+        let bits = 3 + rng.below(10) as u8;
+        let a = sqnr_optimal_empirical(bits, &xs).unwrap();
+        let b = sqnr_optimal_empirical(bits + 2, &xs).unwrap();
+        let sa = sqnr_db(&xs, a);
+        let sb = sqnr_db(&xs, b);
+        if sb + 1e-9 < sa {
+            return Err(format!("bits {bits}: {sa} dB vs {}+2: {sb} dB", bits));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_calib_covers_or_beats_minmax() {
+    check("sqnr calib >= minmax - 2dB (Gaussian-fit model error bound)", 60, |rng| {
+        let scale = 0.2 + rng.uniform() as f32 * 3.0;
+        let xs = gen::normal_vec(rng, 2000, scale);
+        let absmax = xs.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        let meansq = xs.iter().map(|&x| x * x).sum::<f32>() / xs.len() as f32;
+        let stats = LayerStats { absmax, meanabs: 0.0, meansq };
+        let bits = 4 + rng.below(5) as u8;
+        let mm = CalibMethod::MinMax.choose(bits, &stats).unwrap();
+        let sq = CalibMethod::SqnrGaussian.choose(bits, &stats).unwrap();
+        let d = sqnr_db(&xs, sq) - sqnr_db(&xs, mm);
+        if d < -2.0 {
+            return Err(format!("bits {bits}: sqnr pick worse by {d} dB"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_requant_i64_matches_wideacc() {
+    check("ops::requant_i64 == WideAcc::requantize", 200, |rng| {
+        let fmt = gen::qformat(rng);
+        let acc_frac = fmt.frac as i32 + rng.below(8) as i32;
+        let acc_val = (rng.normal() * 1e6) as i64;
+        let a = ops::requant_i64(acc_val, acc_frac, fmt) as i64;
+        let wa = fxpnet::fixedpoint::value::WideAcc { acc: acc_val as i128, frac: acc_frac };
+        let b = wa.requantize(fmt, RoundMode::NearestHalfUp, None).code;
+        if a != b {
+            return Err(format!("{fmt} acc={acc_val}@{acc_frac}: {a} vs {b}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dataset_batches_deterministic() {
+    check("dataset generation independent of count", 10, |rng| {
+        let seed = rng.next_u64();
+        let a = fxpnet::data::synth::Dataset::generate(8, 8, 8, seed);
+        let b = fxpnet::data::synth::Dataset::generate(16, 8, 8, seed);
+        if a.images.data() != &b.images.data()[..a.images.len()] {
+            return Err("prefix mismatch".into());
+        }
+        Ok(())
+    });
+}

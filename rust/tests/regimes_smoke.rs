@@ -1,0 +1,153 @@
+//! Integration: the five regimes and the grid runner at smoke scale on
+//! the tiny architecture.
+
+mod common;
+
+use fxpnet::coordinator::calibrate;
+use fxpnet::coordinator::config::RunCfg;
+use fxpnet::coordinator::grid::GridRunner;
+use fxpnet::coordinator::regimes::{self, CellCtx, Regime};
+use fxpnet::coordinator::trainer::{upd_all, Trainer};
+use fxpnet::data::loader::LoaderCfg;
+use fxpnet::data::synth::Dataset;
+use fxpnet::model::params::ParamSet;
+use fxpnet::quant::policy::{NetQuant, WidthSpec};
+
+struct Fixture {
+    engine: fxpnet::runtime::Engine,
+    base: ParamSet,
+    a_stats: Vec<fxpnet::quant::calib::LayerStats>,
+    train: Dataset,
+    eval: Dataset,
+    cfg: RunCfg,
+}
+
+/// Pretrain a tiny float net briefly so regimes have a sensible base.
+fn fixture(seed: u64) -> Fixture {
+    let engine = common::engine();
+    let spec = engine.manifest.arch("tiny").unwrap().clone();
+    let train = Dataset::generate(512, spec.input[0], spec.input[1], seed + 1);
+    let eval = Dataset::generate(128, spec.input[0], spec.input[1], seed + 2);
+    let params = ParamSet::init(&spec, seed);
+    let nq = NetQuant::all_float(spec.num_layers);
+    let mut tr = Trainer::new(
+        &engine,
+        "tiny",
+        &params,
+        &nq,
+        &upd_all(spec.num_layers),
+        0.05,
+        0.9,
+        train.clone(),
+        LoaderCfg { batch: spec.train_batch, augment: false, max_shift: 0, seed },
+        30.0,
+    )
+    .unwrap();
+    tr.run(60, 10).unwrap();
+    let base = tr.params().unwrap();
+    let a_stats = calibrate::activation_stats(&engine, "tiny", &base, &train, 2)
+        .unwrap()
+        .a_stats;
+    Fixture { engine, base, a_stats, train, eval, cfg: RunCfg::smoke() }
+}
+
+impl Fixture {
+    fn ctx(&self) -> CellCtx<'_> {
+        CellCtx {
+            engine: &self.engine,
+            arch: "tiny",
+            train_data: &self.train,
+            eval_data: &self.eval,
+            a_stats: &self.a_stats,
+            cfg: &self.cfg,
+        }
+    }
+}
+
+#[test]
+fn all_regimes_produce_outcomes() {
+    let f = fixture(21);
+    let ctx = f.ctx();
+    let w = WidthSpec::Bits(8);
+    let a = WidthSpec::Bits(8);
+
+    let noft = regimes::run_no_finetune(&ctx, &f.base, w, a).unwrap().unwrap();
+    assert!(noft.top1_err <= 1.0 && noft.mean_loss.is_finite());
+
+    let vanilla = regimes::run_vanilla(&ctx, &f.base, w, a).unwrap();
+    assert!(vanilla.is_some());
+
+    let p1net = regimes::train_float_act_net(&ctx, &f.base, w).unwrap().unwrap();
+    let p1 = regimes::run_prop1(&ctx, &p1net, w, a).unwrap().unwrap();
+    assert!(p1.mean_loss.is_finite());
+
+    let p2 = regimes::run_prop2(&ctx, &p1net, w, a, 1).unwrap();
+    assert!(p2.is_some());
+
+    let p3 = regimes::run_prop3(&ctx, &p1net, w, a).unwrap();
+    assert!(p3.is_some());
+}
+
+#[test]
+fn float_cell_is_identity_for_prop1() {
+    let f = fixture(22);
+    let ctx = f.ctx();
+    // with float weights the p1 seed net is the base itself
+    let p1net = regimes::train_float_act_net(&ctx, &f.base, WidthSpec::Float)
+        .unwrap()
+        .unwrap();
+    for (a, b) in p1net.tensors.iter().zip(&f.base.tensors) {
+        assert_eq!(a.data(), b.data());
+    }
+}
+
+#[test]
+fn grid_runner_single_cells_and_cache() {
+    let mut f = fixture(23);
+    let cfg = f.cfg.clone();
+    let mut runner = GridRunner::new(
+        &f.engine,
+        "tiny",
+        f.base.clone(),
+        f.a_stats.clone(),
+        f.train.clone(),
+        f.eval.clone(),
+        cfg,
+    );
+    let c1 = runner
+        .run_cell(Regime::NoFinetune, WidthSpec::Bits(4), WidthSpec::Bits(4))
+        .unwrap();
+    assert!(c1.eval.is_some());
+    // prop1 twice with the same weight width: cache must avoid retraining
+    let t0 = std::time::Instant::now();
+    runner
+        .run_cell(Regime::Prop1, WidthSpec::Bits(8), WidthSpec::Bits(8))
+        .unwrap();
+    let first = t0.elapsed();
+    let t1 = std::time::Instant::now();
+    runner
+        .run_cell(Regime::Prop1, WidthSpec::Bits(8), WidthSpec::Bits(4))
+        .unwrap();
+    let second = t1.elapsed();
+    assert!(
+        second < first,
+        "p1 cache miss? first {first:?} second {second:?}"
+    );
+    f.cfg.finetune_steps = 1; // silence unused-mut lint paranoia
+}
+
+#[test]
+fn outcome_cell_strings() {
+    let f = fixture(24);
+    let ctx = f.ctx();
+    let out = regimes::run_no_finetune(
+        &ctx,
+        &f.base,
+        WidthSpec::Float,
+        WidthSpec::Float,
+    )
+    .unwrap()
+    .unwrap();
+    // 60-step tiny net: better than chance (90%)
+    assert!(out.top1_err < 0.9, "{out}");
+}

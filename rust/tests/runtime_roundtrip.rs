@@ -1,0 +1,90 @@
+//! Integration: artifact load + execute round-trips with correct numerics.
+
+mod common;
+
+use fxpnet::coordinator::calibrate;
+use fxpnet::coordinator::evaluator::evaluate;
+use fxpnet::data::synth::Dataset;
+use fxpnet::model::params::ParamSet;
+use fxpnet::quant::policy::{NetQuant, WidthSpec};
+use fxpnet::quant::calib::CalibMethod;
+
+#[test]
+fn eval_batch_runs_and_loss_is_chance() {
+    let engine = common::engine();
+    let spec = engine.manifest.arch("tiny").unwrap().clone();
+    let params = ParamSet::init(&spec, 0);
+    let data = Dataset::generate(64, spec.input[0], spec.input[1], 7);
+    let nq = NetQuant::all_float(spec.num_layers);
+    let ev = evaluate(&engine, "tiny", &params, &nq, &data).unwrap();
+    assert_eq!(ev.n, 64);
+    // untrained network: loss ~ ln(10), top-1 error ~ 90%
+    assert!((ev.mean_loss - (10f64).ln()).abs() < 0.8, "{ev}");
+    assert!(ev.top1_err > 0.6, "{ev}");
+    assert!(ev.top5_err < ev.top1_err + 1e-9);
+}
+
+#[test]
+fn executable_cache_hits() {
+    let engine = common::engine();
+    let a = engine.executable("tiny", "eval_batch").unwrap();
+    let b = engine.executable("tiny", "eval_batch").unwrap();
+    assert!(std::rc::Rc::ptr_eq(&a, &b));
+    engine.clear_cache();
+    let c = engine.executable("tiny", "eval_batch").unwrap();
+    assert!(!std::rc::Rc::ptr_eq(&a, &c));
+}
+
+#[test]
+fn wrong_arity_is_rejected() {
+    let engine = common::engine();
+    let exe = engine.executable("tiny", "eval_batch").unwrap();
+    assert!(exe.run_literals(&[]).is_err());
+    assert!(exe.run(&[]).is_err());
+}
+
+#[test]
+fn stats_batch_collects_positive_ranges() {
+    let engine = common::engine();
+    let spec = engine.manifest.arch("tiny").unwrap().clone();
+    let params = ParamSet::init(&spec, 1);
+    let data = Dataset::generate(64, spec.input[0], spec.input[1], 8);
+    let calib =
+        calibrate::activation_stats(&engine, "tiny", &params, &data, 2).unwrap();
+    assert_eq!(calib.a_stats.len(), spec.num_layers);
+    for s in &calib.a_stats {
+        assert!(s.absmax > 0.0 && s.absmax.is_finite());
+        assert!(s.meansq > 0.0);
+        assert!(s.meanabs <= s.absmax);
+    }
+}
+
+#[test]
+fn quantized_eval_differs_from_float_but_is_sane() {
+    let engine = common::engine();
+    let spec = engine.manifest.arch("tiny").unwrap().clone();
+    let params = ParamSet::init(&spec, 2);
+    let data = Dataset::generate(64, spec.input[0], spec.input[1], 9);
+    let calib =
+        calibrate::activation_stats(&engine, "tiny", &params, &data, 2).unwrap();
+    let nq = NetQuant::for_cell(
+        WidthSpec::Bits(8),
+        WidthSpec::Bits(8),
+        &params.weight_stats(),
+        &calib.a_stats,
+        CalibMethod::SqnrGaussian,
+    )
+    .unwrap();
+    let ev_q = evaluate(&engine, "tiny", &params, &nq, &data).unwrap();
+    let ev_f = evaluate(
+        &engine,
+        "tiny",
+        &params,
+        &NetQuant::all_float(spec.num_layers),
+        &data,
+    )
+    .unwrap();
+    // 8-bit quantization at random init: loss shifts slightly, stays finite
+    assert!(ev_q.mean_loss.is_finite());
+    assert!((ev_q.mean_loss - ev_f.mean_loss).abs() < 1.0, "{ev_q} vs {ev_f}");
+}

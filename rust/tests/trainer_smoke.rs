@@ -1,0 +1,144 @@
+//! Integration: the training loop end-to-end on the tiny architecture.
+
+mod common;
+
+use fxpnet::coordinator::trainer::{upd_all, upd_single, upd_top, Trainer};
+use fxpnet::data::loader::LoaderCfg;
+use fxpnet::data::synth::Dataset;
+use fxpnet::model::checkpoint::{save_params, Checkpoint};
+use fxpnet::model::params::ParamSet;
+use fxpnet::quant::policy::NetQuant;
+
+fn setup(seed: u64) -> (fxpnet::runtime::Engine, ParamSet, Dataset, LoaderCfg) {
+    let engine = common::engine();
+    let spec = engine.manifest.arch("tiny").unwrap().clone();
+    let params = ParamSet::init(&spec, seed);
+    let data = Dataset::generate(256, spec.input[0], spec.input[1], seed);
+    let cfg = LoaderCfg {
+        batch: spec.train_batch,
+        augment: false,
+        max_shift: 0,
+        seed,
+    };
+    (engine, params, data, cfg)
+}
+
+#[test]
+fn float_training_reduces_loss() {
+    let (engine, params, data, lcfg) = setup(1);
+    let spec = engine.manifest.arch("tiny").unwrap().clone();
+    let nq = NetQuant::all_float(spec.num_layers);
+    let mut tr = Trainer::new(
+        &engine, "tiny", &params, &nq, &upd_all(spec.num_layers),
+        0.05, 0.9, data, lcfg, 30.0,
+    )
+    .unwrap();
+    let out = tr.run(40, 1).unwrap();
+    assert!(!out.diverged);
+    assert_eq!(out.steps, 40);
+    let first = out.history[0].1;
+    let last = out.tail_mean(5);
+    assert!(last < first, "loss did not decrease: {first} -> {last}");
+}
+
+#[test]
+fn update_mask_freezes_layers_through_runtime() {
+    let (engine, params, data, lcfg) = setup(2);
+    let spec = engine.manifest.arch("tiny").unwrap().clone();
+    let l = spec.num_layers;
+    let nq = NetQuant::all_float(l);
+    // only the top layer updates
+    let mut tr = Trainer::new(
+        &engine, "tiny", &params, &nq, &upd_top(l, 1), 0.05, 0.9, data, lcfg,
+        30.0,
+    )
+    .unwrap();
+    tr.run(5, 1).unwrap();
+    let tuned = tr.params().unwrap();
+    for li in 0..l {
+        let changed = tuned.weight(li).data() != params.weight(li).data();
+        assert_eq!(changed, li == l - 1, "layer {li}");
+    }
+}
+
+#[test]
+fn upd_single_only_touches_one_layer() {
+    let (engine, params, data, lcfg) = setup(3);
+    let spec = engine.manifest.arch("tiny").unwrap().clone();
+    let l = spec.num_layers;
+    let nq = NetQuant::all_float(l);
+    let mut tr = Trainer::new(
+        &engine, "tiny", &params, &nq, &upd_single(l, 1), 0.05, 0.0, data,
+        lcfg, 30.0,
+    )
+    .unwrap();
+    tr.run(3, 1).unwrap();
+    let tuned = tr.params().unwrap();
+    for li in 0..l {
+        let changed = tuned.weight(li).data() != params.weight(li).data();
+        assert_eq!(changed, li == 1, "layer {li}");
+    }
+}
+
+#[test]
+fn set_config_mid_run_preserves_state() {
+    let (engine, params, data, lcfg) = setup(4);
+    let spec = engine.manifest.arch("tiny").unwrap().clone();
+    let l = spec.num_layers;
+    let nq = NetQuant::all_float(l);
+    let mut tr = Trainer::new(
+        &engine, "tiny", &params, &nq, &upd_all(l), 0.05, 0.9, data, lcfg,
+        30.0,
+    )
+    .unwrap();
+    tr.run(5, 1).unwrap();
+    let mid = tr.params().unwrap();
+    // freeze everything: params must stop changing
+    tr.set_config(&nq, &vec![0.0; l], 0.05, 0.9).unwrap();
+    tr.reset_momenta().unwrap();
+    tr.run(5, 1).unwrap();
+    let end = tr.params().unwrap();
+    for (a, b) in mid.tensors.iter().zip(&end.tensors) {
+        assert_eq!(a.data(), b.data());
+    }
+    assert_eq!(tr.global_step(), 10);
+}
+
+#[test]
+fn divergence_detector_fires() {
+    let (engine, params, data, lcfg) = setup(5);
+    let spec = engine.manifest.arch("tiny").unwrap().clone();
+    let nq = NetQuant::all_float(spec.num_layers);
+    // absurd lr -> loss blows up
+    let mut tr = Trainer::new(
+        &engine, "tiny", &params, &nq, &upd_all(spec.num_layers),
+        1e4, 0.9, data, lcfg, 30.0,
+    )
+    .unwrap();
+    let out = tr.run(50, 1).unwrap();
+    assert!(out.diverged, "expected divergence: {:?}", out.history);
+    assert!(out.steps < 50);
+}
+
+#[test]
+fn checkpoint_round_trip_through_trainer() {
+    let (engine, params, data, lcfg) = setup(6);
+    let spec = engine.manifest.arch("tiny").unwrap().clone();
+    let nq = NetQuant::all_float(spec.num_layers);
+    let mut tr = Trainer::new(
+        &engine, "tiny", &params, &nq, &upd_all(spec.num_layers),
+        0.05, 0.9, data, lcfg, 30.0,
+    )
+    .unwrap();
+    tr.run(4, 1).unwrap();
+    let tuned = tr.params().unwrap();
+    let dir = std::env::temp_dir().join("fxp_trainer_ckpt");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("t.ckpt");
+    save_params(&path, "tiny", 4, &tuned).unwrap();
+    let back = Checkpoint::load(&path).unwrap();
+    back.check_matches("tiny", &spec.params).unwrap();
+    for (a, b) in back.params.tensors.iter().zip(&tuned.tensors) {
+        assert_eq!(a.data(), b.data());
+    }
+}
