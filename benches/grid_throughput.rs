@@ -1,0 +1,117 @@
+//! Grid-sweep scaling: how the parallel work-queue engine behaves as the
+//! worker count grows.
+//!
+//! Cells are synthetic but CPU-bound (seeded fixed-point quantization
+//! rounds through the real `fixedpoint::vector` path), so the bench runs
+//! in the offline build and isolates the pool/sharding overhead from
+//! XLA compile/execute noise.  With 4 workers the sweep must complete
+//! >= 2x faster than with 1 (the acceptance bar for the parallel
+//! runner); expect near-linear scaling until cells outnumber cores.
+//!
+//! Scale via:
+//! * `FXP_BENCH_CELL_N`      -- floats quantized per round (default 200k)
+//! * `FXP_BENCH_CELL_ROUNDS` -- rounds per cell (default 30)
+//! * `FXP_BENCH_MAX_WORKERS` -- highest worker count tried (default 8)
+
+use fxpnet::bench::fixtures::env_usize;
+use fxpnet::bench::Table;
+use fxpnet::coordinator::evaluator::EvalResult;
+use fxpnet::coordinator::grid::{self, CellJob, SweepOpts};
+use fxpnet::coordinator::regimes::{CellResult, Regime};
+use fxpnet::fixedpoint::vector::quantize_slice;
+use fxpnet::fixedpoint::{QFormat, RoundMode};
+use fxpnet::util::rng::Rng;
+use fxpnet::util::timer::Stopwatch;
+
+fn synthetic_cell(job: &CellJob, n: usize, rounds: usize) -> fxpnet::Result<CellResult> {
+    let mut rng = Rng::new(job.seed);
+    let fmt = QFormat::new(8, 4)?;
+    let mut xs: Vec<f32> = (0..n).map(|_| rng.uniform_in(-6.0, 6.0)).collect();
+    let mut acc = 0.0f64;
+    for _ in 0..rounds {
+        quantize_slice(&mut xs, fmt, RoundMode::Stochastic, Some(&mut rng));
+        acc += xs.iter().map(|&v| v as f64).sum::<f64>();
+        // re-perturb so each round does fresh rounding work
+        for v in xs.iter_mut() {
+            *v += rng.uniform_in(-0.1, 0.1);
+        }
+    }
+    Ok(Some(EvalResult {
+        n,
+        top1_err: (acc.abs() % 1.0).min(0.999),
+        top5_err: 0.0,
+        mean_loss: acc.abs() % 10.0,
+    }))
+}
+
+fn timed_sweep(workers: usize, n: usize, rounds: usize) -> (f64, usize) {
+    let sw = Stopwatch::start();
+    let out = grid::run_sweep_with(
+        Regime::Vanilla,
+        "bench",
+        42,
+        &SweepOpts { workers, ..Default::default() },
+        |_| Ok(()),
+        |_, job| synthetic_cell(job, n, rounds),
+    )
+    .expect("sweep");
+    assert!(out.is_complete());
+    (sw.elapsed().as_secs_f64() * 1e3, out.pool.workers)
+}
+
+fn main() {
+    fxpnet::util::logging::init();
+    let n = env_usize("FXP_BENCH_CELL_N", 200_000);
+    let rounds = env_usize("FXP_BENCH_CELL_ROUNDS", 30);
+    let max_workers = env_usize("FXP_BENCH_MAX_WORKERS", 8);
+    let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
+    println!(
+        "grid throughput: 16 synthetic cells x {rounds} rounds x {n} floats, \
+         {cores} cores"
+    );
+
+    // warm-up (page in buffers, settle the allocator)
+    let _ = timed_sweep(1, n / 4, 2);
+
+    let mut t = Table::new(
+        "Grid sweep scaling (16 cells)",
+        &["workers", "ms", "speedup", "efficiency"],
+    );
+    let mut base_ms = 0.0f64;
+    let mut w = 1usize;
+    let mut speedup_at_4 = 0.0f64;
+    while w <= max_workers {
+        let (ms, used) = timed_sweep(w, n, rounds);
+        if w == 1 {
+            base_ms = ms;
+        }
+        let speedup = base_ms / ms;
+        if w == 4 {
+            speedup_at_4 = speedup;
+        }
+        t.row(vec![
+            format!("{used}"),
+            format!("{ms:.1}"),
+            format!("{speedup:.2}x"),
+            format!("{:.0}%", 100.0 * speedup / used as f64),
+        ]);
+        w *= 2;
+    }
+    println!("{}", t.render());
+    if speedup_at_4 > 0.0 {
+        println!(
+            "4-worker speedup: {speedup_at_4:.2}x (acceptance bar: >= 2x on \
+             a >= 4-core machine)"
+        );
+        // enforce the bar when asked (CI sets FXP_BENCH_ASSERT=1); only
+        // meaningful where 4 workers can actually run in parallel
+        if std::env::var("FXP_BENCH_ASSERT").is_ok() && cores >= 4 && speedup_at_4 < 2.0
+        {
+            eprintln!(
+                "FAIL: 4-worker speedup {speedup_at_4:.2}x < 2x on a \
+                 {cores}-core machine"
+            );
+            std::process::exit(1);
+        }
+    }
+}

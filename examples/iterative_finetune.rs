@@ -60,6 +60,7 @@ fn main() -> fxpnet::Result<()> {
         eval_data: &eval,
         a_stats: &calib.a_stats,
         cfg: &cfg,
+        cell_seed: cfg.seed,
     };
     let w = WidthSpec::Bits(4);
     let a = WidthSpec::Bits(4);

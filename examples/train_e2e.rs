@@ -126,6 +126,7 @@ fn main() -> fxpnet::Result<()> {
         eval_data: &eval,
         a_stats: &calib.a_stats,
         cfg: &cfg,
+        cell_seed: cfg.seed,
     };
     let w8 = WidthSpec::Bits(8);
     let a8 = WidthSpec::Bits(8);

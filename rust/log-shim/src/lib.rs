@@ -1,0 +1,138 @@
+//! Offline stand-in for the `log` facade crate.
+//!
+//! Call sites use the standard `log::{error,warn,info,debug,trace}!`
+//! macros unchanged.  Instead of the facade's pluggable `Log` trait, the
+//! sink is built in: timestamped lines on stderr, filtered by a global
+//! level (default Info).  `fxpnet::util::logging::init()` sets the level
+//! from the `FXPNET_LOG` environment variable.
+//!
+//! The subset is deliberately small; swapping the real `log` +
+//! `env_logger` pair back in only requires restoring `util/logging.rs`'s
+//! `Log`-trait backend.
+
+use std::fmt::Arguments;
+use std::io::Write;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Verbosity of one message.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(usize)]
+pub enum Level {
+    Error = 1,
+    Warn = 2,
+    Info = 3,
+    Debug = 4,
+    Trace = 5,
+}
+
+/// Global filter: messages with `level as usize` above this are dropped.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(usize)]
+pub enum LevelFilter {
+    Off = 0,
+    Error = 1,
+    Warn = 2,
+    Info = 3,
+    Debug = 4,
+    Trace = 5,
+}
+
+static MAX_LEVEL: AtomicUsize = AtomicUsize::new(LevelFilter::Info as usize);
+static START: OnceLock<Instant> = OnceLock::new();
+
+pub fn set_max_level(filter: LevelFilter) {
+    MAX_LEVEL.store(filter as usize, Ordering::Relaxed);
+}
+
+pub fn max_level() -> LevelFilter {
+    match MAX_LEVEL.load(Ordering::Relaxed) {
+        0 => LevelFilter::Off,
+        1 => LevelFilter::Error,
+        2 => LevelFilter::Warn,
+        3 => LevelFilter::Info,
+        4 => LevelFilter::Debug,
+        _ => LevelFilter::Trace,
+    }
+}
+
+#[doc(hidden)]
+pub fn __enabled(level: Level) -> bool {
+    level as usize <= MAX_LEVEL.load(Ordering::Relaxed)
+}
+
+/// The built-in sink: `[  12.345s I target] message` on stderr.
+#[doc(hidden)]
+pub fn __log(level: Level, target: &str, args: Arguments<'_>) {
+    if !__enabled(level) {
+        return;
+    }
+    let t = START.get_or_init(Instant::now).elapsed().as_secs_f64();
+    let lvl = match level {
+        Level::Error => "E",
+        Level::Warn => "W",
+        Level::Info => "I",
+        Level::Debug => "D",
+        Level::Trace => "T",
+    };
+    let mut err = std::io::stderr().lock();
+    let _ = writeln!(err, "[{t:9.3}s {lvl} {target}] {args}");
+}
+
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)*) => {
+        $crate::__log($crate::Level::Error, module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)*) => {
+        $crate::__log($crate::Level::Warn, module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => {
+        $crate::__log($crate::Level::Info, module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => {
+        $crate::__log($crate::Level::Debug, module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)*) => {
+        $crate::__log($crate::Level::Trace, module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // single test: the level filter is process-global, so splitting these
+    // into separate #[test]s would race under the parallel test runner
+    #[test]
+    fn levels_and_macros() {
+        set_max_level(LevelFilter::Warn);
+        assert!(__enabled(Level::Error));
+        assert!(__enabled(Level::Warn));
+        assert!(!__enabled(Level::Info));
+        set_max_level(LevelFilter::Trace);
+        assert!(__enabled(Level::Trace));
+        assert_eq!(max_level(), LevelFilter::Trace);
+        set_max_level(LevelFilter::Info);
+        info!("smoke {} {}", 1, "two");
+        warn!("warn path");
+        debug!("filtered out at default level");
+    }
+}

@@ -1,10 +1,10 @@
 //! CLI command implementations (thin orchestration over the library).
 
-use crate::cli::{artifacts_dir, Args};
+use crate::cli::{artifacts_dir, parse_shard, Args};
 use crate::coordinator::calibrate;
 use crate::coordinator::config::RunCfg;
 use crate::coordinator::evaluator::evaluate;
-use crate::coordinator::grid::GridRunner;
+use crate::coordinator::grid::{GridRunner, ParallelGridRunner, SweepOpts};
 use crate::coordinator::phases;
 use crate::coordinator::regimes::Regime;
 use crate::coordinator::report;
@@ -44,19 +44,24 @@ pub fn dispatch(args: &Args) -> Result<()> {
 }
 
 fn run_cfg(args: &Args) -> Result<RunCfg> {
-    let mut cfg = RunCfg::default();
-    cfg.lr = args.f32_or("lr", cfg.lr)?;
-    cfg.momentum = args.f32_or("momentum", cfg.momentum)?;
-    cfg.finetune_steps = args.usize_or("steps", cfg.finetune_steps)?;
-    cfg.phase_steps = args.usize_or("phase-steps", cfg.phase_steps)?;
-    cfg.seed = args.u64_or("seed", cfg.seed)?;
-    cfg.topk = args.usize_or("topk", cfg.topk)?;
-    cfg.max_loss = args.f32_or("max-loss", cfg.max_loss)?;
-    if let Some(m) = args.get("calib") {
-        cfg.method = CalibMethod::parse(m)
-            .ok_or_else(|| FxpError::config(format!("bad --calib '{m}'")))?;
-    }
-    Ok(cfg)
+    let d = RunCfg::default();
+    let method = match args.get("calib") {
+        None => d.method,
+        Some(m) => CalibMethod::parse(m)
+            .ok_or_else(|| FxpError::config(format!("bad --calib '{m}'")))?,
+    };
+    Ok(RunCfg {
+        lr: args.f32_or("lr", d.lr)?,
+        momentum: args.f32_or("momentum", d.momentum)?,
+        finetune_steps: args.usize_or("steps", d.finetune_steps)?,
+        phase_steps: args.usize_or("phase-steps", d.phase_steps)?,
+        seed: args.u64_or("seed", d.seed)?,
+        workers: args.usize_or("workers", d.workers)?,
+        topk: args.usize_or("topk", d.topk)?,
+        max_loss: args.f32_or("max-loss", d.max_loss)?,
+        method,
+        ..d
+    })
 }
 
 fn datasets(args: &Args, engine: &Engine, arch: &str) -> Result<(Dataset, Dataset)> {
@@ -171,13 +176,18 @@ fn pretrain(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `fxpnet grid`: run one regime's full grid (one paper table).
+/// `fxpnet grid`: run one regime's full grid (one paper table) through
+/// the parallel sweep engine -- `--workers`, `--shard I/N`, `--resume`
+/// and `--cache` control execution; results are bit-identical for any
+/// worker count / shard layout (the per-cell seed tree keys every
+/// stochastic stream by cell identity, not by scheduling).
 fn grid(args: &Args) -> Result<()> {
     let arch = args.get_or("arch", "paper12");
     let regime_s = args.require("regime")?;
     let regime = Regime::parse(regime_s)
         .ok_or_else(|| FxpError::config(format!("bad --regime '{regime_s}'")))?;
-    let engine = Engine::cpu(artifacts_dir(args))?;
+    let artifacts = artifacts_dir(args);
+    let engine = Engine::cpu(&artifacts)?;
     let cfg = run_cfg(args)?;
     let base = load_ckpt(args, &engine, &arch)?;
     let (train, eval_set) = datasets(args, &engine, &arch)?;
@@ -188,20 +198,69 @@ fn grid(args: &Args) -> Result<()> {
         &train,
         cfg.calib_batches,
     )?;
-    let mut runner = GridRunner::new(
-        &engine,
-        &arch,
-        base,
-        calib.a_stats,
-        train,
-        eval_set,
-        cfg.clone(),
-    );
-    let result = runner.run_grid(regime)?;
-    let rendered = result.render(cfg.topk);
-    println!("{rendered}");
     let out_dir = args.get_or("out", "results");
-    report::save_grid(&result, out_dir, cfg.topk)?;
+
+    let shard = match args.get("shard") {
+        None => None,
+        Some(s) => Some(parse_shard(s)?),
+    };
+    let resume = args.has("resume");
+    let cache_path = args.get("cache").map(std::path::PathBuf::from).or_else(|| {
+        (resume || shard.is_some()).then(|| {
+            std::path::Path::new(&out_dir)
+                .join(format!("cache_table{}_{arch}.json", regime.table_number()))
+        })
+    });
+
+    // serial fast path: one shared engine (compile each executable once)
+    if cfg.workers == 1 && shard.is_none() && cache_path.is_none() {
+        let mut runner = GridRunner::new(
+            &engine,
+            &arch,
+            base,
+            calib.a_stats,
+            train,
+            eval_set,
+            cfg.clone(),
+        );
+        let result = runner.run_grid(regime)?;
+        println!("{}", result.render(cfg.topk));
+        report::save_grid(&result, out_dir, cfg.topk)?;
+        return Ok(());
+    }
+
+    drop(engine); // each worker builds its own engine
+    let runner = ParallelGridRunner {
+        artifacts_dir: artifacts.into(),
+        arch: arch.clone(),
+        base,
+        a_stats: calib.a_stats,
+        train_data: train,
+        eval_data: eval_set,
+        cfg: cfg.clone(),
+    };
+    let opts = SweepOpts { workers: cfg.workers, shard, cache_path, resume };
+    let sweep = runner.run_sweep(regime, &opts)?;
+    println!("{}", sweep.grid.render(cfg.topk));
+    log::info!(
+        "sweep: {} computed ({} failed -> n/a), {} cached, {} missing, \
+         {} workers",
+        sweep.computed,
+        sweep.failed,
+        sweep.cached,
+        sweep.missing,
+        sweep.pool.workers
+    );
+    if sweep.is_complete() {
+        report::save_grid(&sweep.grid, out_dir, cfg.topk)?;
+    } else {
+        println!(
+            "partial sweep: {} cells belong to other shards; run them \
+             against the same --cache and the final shard prints the \
+             full table",
+            sweep.missing
+        );
+    }
     Ok(())
 }
 

@@ -94,10 +94,18 @@ USAGE: fxpnet <command> [flags]
 COMMANDS
   pretrain   train the float baseline network
              --arch A --steps N --out ckpt [--from ckpt] [--lr F] [--train-n N]
-  grid       run one experiment grid (a paper table)
+  grid       run one experiment grid (a paper table), in parallel
              --arch A --regime {none|vanilla|prop1|prop2|prop3} --ckpt F
              [--out DIR] [--steps N] [--phase-steps N] [--train-n N]
              [--eval-n N] [--calib {minmax|sqnr}] [--topk K]
+             [--workers N]   worker threads (default: all cores; results
+                             are bit-identical for any worker count)
+             [--shard I/N]   run only cells with flat_index % N == I
+             [--resume]      skip cells already in the cell cache
+             [--cache FILE]  cell cache path (default when sharding or
+                             resuming: OUT/cache_table<T>_<ARCH>.json);
+                             shards sharing a cache union into the full
+                             table; "n/a" outcomes are cached too
   eval       evaluate a checkpoint at one grid cell
              --arch A --ckpt F --w {4|8|16|float} --a {4|8|16|float}
   infer      pure-integer inference + parity vs the XLA path
@@ -118,6 +126,18 @@ pub fn artifacts_dir(args: &Args) -> String {
         .map(|s| s.to_string())
         .or_else(|| std::env::var("FXPNET_ARTIFACTS").ok())
         .unwrap_or_else(|| "artifacts".to_string())
+}
+
+/// Parse a `--shard I/N` value.
+pub fn parse_shard(s: &str) -> Result<(usize, usize)> {
+    let bad = || FxpError::config(format!("bad --shard '{s}': expected I/N with I < N"));
+    let (i, n) = s.split_once('/').ok_or_else(bad)?;
+    let index: usize = i.trim().parse().map_err(|_| bad())?;
+    let count: usize = n.trim().parse().map_err(|_| bad())?;
+    if count == 0 || index >= count {
+        return Err(bad());
+    }
+    Ok((index, count))
 }
 
 #[cfg(test)]
@@ -153,5 +173,16 @@ mod tests {
         let a = parse(&["cmd", "--x", "1", "--flag"]);
         assert!(a.has("flag"));
         assert_eq!(a.get("x"), Some("1"));
+    }
+
+    #[test]
+    fn shard_parsing() {
+        assert_eq!(parse_shard("0/4").unwrap(), (0, 4));
+        assert_eq!(parse_shard("3/4").unwrap(), (3, 4));
+        assert!(parse_shard("4/4").is_err());
+        assert!(parse_shard("0/0").is_err());
+        assert!(parse_shard("1").is_err());
+        assert!(parse_shard("a/b").is_err());
+        assert!(parse_shard("-1/2").is_err());
     }
 }

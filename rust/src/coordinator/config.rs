@@ -27,8 +27,12 @@ pub struct RunCfg {
     pub method: CalibMethod,
     /// divergence threshold: loss above this (or NaN/Inf) = n/a
     pub max_loss: f32,
-    /// RNG seed for init/shuffling/augmentation
+    /// RNG seed for init/shuffling/augmentation.  Also the root of the
+    /// grid's per-cell seed tree (`grid::cell_seed`); results are a pure
+    /// function of this value regardless of worker count.
     pub seed: u64,
+    /// worker threads for grid sweeps (0 = available parallelism)
+    pub workers: usize,
     /// data augmentation during training
     pub augment: bool,
     /// evaluate top-k error with this k (paper reports Top-5 on 1000
@@ -49,6 +53,7 @@ impl Default for RunCfg {
             method: CalibMethod::SqnrGaussian,
             max_loss: 20.0,
             seed: 42,
+            workers: 0,
             augment: true,
             topk: 1,
         }

@@ -11,7 +11,7 @@ use crate::runtime::Engine;
 use crate::tensor::Tensor;
 
 /// Evaluation result.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct EvalResult {
     pub n: usize,
     pub top1_err: f64,

@@ -1,25 +1,105 @@
 //! The (weight width x activation width) experiment grid -- the engine
 //! behind every results table in the paper.
+//!
+//! Two execution paths share one cell dispatch
+//! (`regimes::dispatch_cell`) and one seed tree (`cell_seed`/`p1_seed`):
+//!
+//! * [`GridRunner`] -- the original serial runner over a single borrowed
+//!   engine (benches, one-off cells);
+//! * [`run_sweep_with`] / [`ParallelGridRunner`] -- the work-queue
+//!   engine: cells become [`CellJob`]s executed by a `std::thread` worker
+//!   pool ([`coordinator::pool`]), with per-cell deterministic seeding,
+//!   panic/divergence isolation (a dead cell is the paper's "n/a", not a
+//!   dead sweep), `--shard i/n` partitioning, and a JSON cell-result
+//!   cache ([`report::CellCache`]) so interrupted sweeps resume and
+//!   shards union into the full table.
+//!
+//! Determinism contract: a cell's entire stochastic state derives from
+//! `(base seed, regime, w, a)` -- never from worker identity, scheduling
+//! order, shard layout, or cache hits -- so any worker count produces
+//! bit-identical `CellOutcome` tables (pinned by tests/grid_parallel.rs).
 
 use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Mutex;
 
 use crate::bench::Table;
 use crate::coordinator::config::RunCfg;
-use crate::coordinator::regimes::{self, CellCtx, Regime};
 use crate::coordinator::evaluator::EvalResult;
-use crate::error::Result;
+use crate::coordinator::pool::{self, PoolStats};
+use crate::coordinator::regimes::{self, CellCtx, CellResult, Regime};
+use crate::coordinator::report::CellCache;
+use crate::data::synth::Dataset;
+use crate::error::{FxpError, Result};
 use crate::model::params::ParamSet;
 use crate::quant::calib::LayerStats;
 use crate::quant::policy::WidthSpec;
-use crate::data::synth::Dataset;
 use crate::runtime::Engine;
+use crate::util::rng;
+
+/// Seed of one grid cell: pure function of what the cell *is*.
+pub fn cell_seed(base: u64, regime: Regime, w: WidthSpec, a: WidthSpec) -> u64 {
+    rng::derive_seed(
+        base,
+        "grid-cell",
+        &[regime.seed_tag(), w.seed_tag(), a.seed_tag()],
+    )
+}
+
+/// Seed of the float-activation fine-tuned net for a weight width (the
+/// "last row of Table 3" that seeds Proposals 1-3).  Deliberately
+/// regime-independent: Tables 4-6 share these nets.
+pub fn p1_seed(base: u64, w: WidthSpec) -> u64 {
+    rng::derive_seed(base, "p1-net", &[w.seed_tag()])
+}
+
+/// One unit of sweep work: a fully-described, independently-executable
+/// grid cell.
+#[derive(Clone, Copy, Debug)]
+pub struct CellJob {
+    pub regime: Regime,
+    pub w: WidthSpec,
+    pub a: WidthSpec,
+    /// column in the result table
+    pub w_idx: usize,
+    /// row in the result table
+    pub a_idx: usize,
+    /// flat index in the unsharded grid (`a_idx * w_len + w_idx`)
+    pub flat: usize,
+    /// cell-scoped RNG seed (`cell_seed`)
+    pub seed: u64,
+}
+
+/// All jobs of one regime's paper grid, in the serial runner's order
+/// (rows = activation width, inner loop = weight width).
+pub fn grid_jobs(regime: Regime, base_seed: u64) -> Vec<CellJob> {
+    let w_axis = WidthSpec::paper_axis();
+    let a_axis = WidthSpec::paper_axis();
+    let mut jobs = Vec::with_capacity(w_axis.len() * a_axis.len());
+    for (a_idx, &a) in a_axis.iter().enumerate() {
+        for (w_idx, &w) in w_axis.iter().enumerate() {
+            jobs.push(CellJob {
+                regime,
+                w,
+                a,
+                w_idx,
+                a_idx,
+                flat: a_idx * w_axis.len() + w_idx,
+                seed: cell_seed(base_seed, regime, w, a),
+            });
+        }
+    }
+    jobs
+}
 
 /// One grid cell outcome.
 #[derive(Clone, Copy, Debug)]
 pub struct CellOutcome {
     pub w: WidthSpec,
     pub a: WidthSpec,
-    /// None = training failed to converge (the paper's "n/a")
+    /// None = training failed to converge (the paper's "n/a").  Sharded
+    /// partial sweeps also render not-yet-computed cells as n/a until the
+    /// shards are unioned through a shared cell cache.
     pub eval: Option<EvalResult>,
 }
 
@@ -81,8 +161,318 @@ impl GridResult {
     }
 }
 
-/// Runs grids.  Caches the float-activation fine-tuned nets ("last row
-/// of Table 3") that seed Proposals 1-3, one per weight width.
+/// Options for a parallel sweep.
+#[derive(Clone, Debug, Default)]
+pub struct SweepOpts {
+    /// worker threads; 0 = available parallelism
+    pub workers: usize,
+    /// run only cells with `flat % count == index` (`--shard i/n`)
+    pub shard: Option<(usize, usize)>,
+    /// JSON cell-result cache: written incrementally as cells finish,
+    /// consulted to merge shards into a full table
+    pub cache_path: Option<PathBuf>,
+    /// skip cells already present in the cache (`--resume`)
+    pub resume: bool,
+}
+
+/// True iff `flat` belongs to the (round-robin) shard.
+pub fn in_shard(flat: usize, shard: Option<(usize, usize)>) -> bool {
+    match shard {
+        None => true,
+        Some((index, count)) => flat % count == index,
+    }
+}
+
+fn check_shard(shard: Option<(usize, usize)>) -> Result<()> {
+    if let Some((index, count)) = shard {
+        if count == 0 || index >= count {
+            return Err(FxpError::config(format!(
+                "bad shard {index}/{count}: need index < count, count > 0"
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// What a sweep did, beyond the table itself.
+#[derive(Debug)]
+pub struct SweepOutcome {
+    pub grid: GridResult,
+    /// cells executed in this run
+    pub computed: usize,
+    /// cells taken from the cache
+    pub cached: usize,
+    /// cells neither computed (other shards) nor cached -- rendered n/a
+    pub missing: usize,
+    /// computed cells that errored or panicked (recorded n/a)
+    pub failed: usize,
+    pub pool: PoolStats,
+}
+
+impl SweepOutcome {
+    /// All cells of the paper grid accounted for (nothing left to other
+    /// shards) -- the table is final and safe to publish.
+    pub fn is_complete(&self) -> bool {
+        self.missing == 0
+    }
+}
+
+/// Run one regime's sweep through the worker pool with a caller-supplied
+/// executor -- the testable core of the parallel engine.
+///
+/// * `init(worker_id)` builds one worker's private context (e.g. its own
+///   PJRT engine) inside the worker thread;
+/// * `run(ctx, job)` executes one cell; `Err`/panic => "n/a".
+///
+/// Results are keyed by cell identity, written through the optional
+/// cache as they finish, and assembled into the paper's table layout.
+pub fn run_sweep_with<W, I, F>(
+    regime: Regime,
+    arch: &str,
+    base_seed: u64,
+    opts: &SweepOpts,
+    init: I,
+    run: F,
+) -> Result<SweepOutcome>
+where
+    I: Fn(usize) -> Result<W> + Sync,
+    F: Fn(&mut W, &CellJob) -> Result<CellResult> + Sync,
+{
+    check_shard(opts.shard)?;
+    let w_axis = WidthSpec::paper_axis().to_vec();
+    let a_axis = WidthSpec::paper_axis().to_vec();
+    let all = grid_jobs(regime, base_seed);
+
+    let cache = match &opts.cache_path {
+        Some(p) => Some(CellCache::open(p, arch, regime, base_seed)?),
+        None => None,
+    };
+
+    // partition: cached / todo / missing (other shards, not in cache)
+    let mut cached_hits: HashMap<usize, CellResult> = HashMap::new();
+    let mut todo: Vec<CellJob> = Vec::new();
+    let mut missing = 0usize;
+    for job in &all {
+        let hit = cache.as_ref().and_then(|c| c.get(job));
+        if in_shard(job.flat, opts.shard) {
+            match hit {
+                Some(r) if opts.resume => {
+                    cached_hits.insert(job.flat, r);
+                }
+                _ => todo.push(*job),
+            }
+        } else {
+            match hit {
+                Some(r) => {
+                    cached_hits.insert(job.flat, r);
+                }
+                None => missing += 1,
+            }
+        }
+    }
+    log::info!(
+        "sweep {}: {} cells to run, {} cached, {} left to other shards",
+        regime.label(),
+        todo.len(),
+        cached_hits.len(),
+        missing
+    );
+
+    // execute; completed cells stream into the cache so an interrupted
+    // sweep resumes instead of recomputing
+    let cache = Mutex::new(cache);
+    let (slots, pool_stats) = pool::run_jobs(&todo, opts.workers, init, |ctx, _i, job| {
+        let r = run(ctx, job);
+        if let Ok(res) = &r {
+            if let Some(c) = cache.lock().unwrap().as_mut() {
+                c.put(job, res);
+                if let Err(e) = c.save() {
+                    log::warn!("cell cache save failed: {e}");
+                }
+            }
+        }
+        r
+    })?;
+
+    // panicked/errored cells become n/a -- cached too, so a resume does
+    // not endlessly retry a deterministically-crashing cell
+    let mut cache = cache.into_inner().unwrap();
+    let mut fresh: HashMap<usize, CellResult> = HashMap::new();
+    let mut failed = 0usize;
+    for (job, slot) in todo.iter().zip(slots) {
+        match slot {
+            Some(res) => {
+                fresh.insert(job.flat, res);
+            }
+            None => {
+                failed += 1;
+                // a panicked/errored recompute must not clobber a
+                // previously good cached result (the failure may be
+                // transient, e.g. OOM); fall back to the cache if it
+                // knows better, and record "n/a" only for cells it has
+                // never seen -- that still stops --resume from endlessly
+                // retrying a deterministically-crashing cell
+                let prev = cache.as_ref().and_then(|c| c.get(job));
+                match prev {
+                    Some(known) => {
+                        fresh.insert(job.flat, known);
+                    }
+                    None => {
+                        fresh.insert(job.flat, None);
+                        if let Some(c) = cache.as_mut() {
+                            c.put(job, &None);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    if let Some(c) = &cache {
+        // a cache write failure must not discard a finished sweep's
+        // results (mid-run save failures are warnings for the same
+        // reason)
+        if let Err(e) = c.save() {
+            log::warn!("final cell cache save failed: {e}");
+        }
+    }
+
+    let mut outcomes = Vec::with_capacity(a_axis.len());
+    for (ai, &a) in a_axis.iter().enumerate() {
+        let mut row = Vec::with_capacity(w_axis.len());
+        for (wi, &w) in w_axis.iter().enumerate() {
+            let flat = ai * w_axis.len() + wi;
+            let eval = fresh
+                .get(&flat)
+                .or_else(|| cached_hits.get(&flat))
+                .copied()
+                .flatten();
+            row.push(CellOutcome { w, a, eval });
+        }
+        outcomes.push(row);
+    }
+    Ok(SweepOutcome {
+        grid: GridResult {
+            regime,
+            arch: arch.to_string(),
+            w_axis,
+            a_axis,
+            outcomes,
+        },
+        computed: todo.len(),
+        cached: cached_hits.len(),
+        missing,
+        failed,
+        pool: pool_stats,
+    })
+}
+
+/// The parallel engine-backed sweep runner: one PJRT engine per worker
+/// (the engine's wrapper types are single-threaded by design), shared
+/// read-only base net / calibration / datasets.
+pub struct ParallelGridRunner {
+    pub artifacts_dir: PathBuf,
+    pub arch: String,
+    pub base: ParamSet,
+    pub a_stats: Vec<LayerStats>,
+    pub train_data: Dataset,
+    pub eval_data: Dataset,
+    pub cfg: RunCfg,
+}
+
+impl ParallelGridRunner {
+    fn cell_ctx<'a>(&'a self, engine: &'a Engine, seed: u64) -> CellCtx<'a> {
+        CellCtx {
+            engine,
+            arch: &self.arch,
+            train_data: &self.train_data,
+            eval_data: &self.eval_data,
+            a_stats: &self.a_stats,
+            cfg: &self.cfg,
+            cell_seed: seed,
+        }
+    }
+
+    /// Weight widths whose p1 seed net this run will actually use: only
+    /// widths with at least one in-shard cell not already satisfied by
+    /// the cache.  Seed training dominates a Proposal sweep's cost, so a
+    /// resumed/sharded run must not retrain nets for cells it will skip.
+    fn widths_needing_p1(
+        &self,
+        regime: Regime,
+        opts: &SweepOpts,
+    ) -> Result<Vec<WidthSpec>> {
+        check_shard(opts.shard)?;
+        let cache = match &opts.cache_path {
+            Some(p) => Some(CellCache::open(p, &self.arch, regime, self.cfg.seed)?),
+            None => None,
+        };
+        let mut ws: Vec<WidthSpec> = Vec::new();
+        for job in grid_jobs(regime, self.cfg.seed) {
+            if !in_shard(job.flat, opts.shard) {
+                continue;
+            }
+            if opts.resume && cache.as_ref().and_then(|c| c.get(&job)).is_some() {
+                continue;
+            }
+            if !ws.contains(&job.w) {
+                ws.push(job.w);
+            }
+        }
+        Ok(ws)
+    }
+
+    /// Wave 1 of a Proposal sweep: the float-activation fine-tuned nets,
+    /// one per needed weight width, trained in parallel.  A panicked/
+    /// failed training slot behaves like divergence (all its cells go
+    /// n/a).
+    fn train_p1_nets(
+        &self,
+        workers: usize,
+        ws: Vec<WidthSpec>,
+    ) -> Result<HashMap<String, Option<ParamSet>>> {
+        log::info!("training {} float-activation seed nets", ws.len());
+        let (slots, _) = pool::run_jobs(
+            &ws,
+            workers,
+            |_wid| Engine::cpu(&self.artifacts_dir),
+            |engine, _i, w: &WidthSpec| {
+                let ctx = self.cell_ctx(engine, p1_seed(self.cfg.seed, *w));
+                regimes::train_float_act_net(&ctx, &self.base, *w)
+            },
+        )?;
+        Ok(ws
+            .iter()
+            .zip(slots)
+            .map(|(w, slot)| (w.label(), slot.flatten()))
+            .collect())
+    }
+
+    /// Run the full paper grid for `regime` under `opts`.
+    pub fn run_sweep(&self, regime: Regime, opts: &SweepOpts) -> Result<SweepOutcome> {
+        let p1: HashMap<String, Option<ParamSet>> = if regime.needs_p1_net() {
+            self.train_p1_nets(opts.workers, self.widths_needing_p1(regime, opts)?)?
+        } else {
+            HashMap::new()
+        };
+        run_sweep_with(
+            regime,
+            &self.arch,
+            self.cfg.seed,
+            opts,
+            |_wid| Engine::cpu(&self.artifacts_dir),
+            |engine, job| {
+                let ctx = self.cell_ctx(engine, job.seed);
+                let p1_net = p1.get(&job.w.label()).and_then(|o| o.as_ref());
+                regimes::dispatch_cell(&ctx, job.regime, &self.base, p1_net, job.w, job.a)
+            },
+        )
+    }
+}
+
+/// Serial runner over one borrowed engine.  Caches the float-activation
+/// fine-tuned nets ("last row of Table 3") that seed Proposals 1-3, one
+/// per weight width.  Seeded identically to the parallel engine, so the
+/// two produce bit-identical tables.
 pub struct GridRunner<'a> {
     pub engine: &'a Engine,
     pub arch: String,
@@ -117,7 +507,7 @@ impl<'a> GridRunner<'a> {
         }
     }
 
-    fn ctx(&self) -> CellCtx<'_> {
+    fn ctx(&self, seed: u64) -> CellCtx<'_> {
         CellCtx {
             engine: self.engine,
             arch: &self.arch,
@@ -125,6 +515,7 @@ impl<'a> GridRunner<'a> {
             eval_data: &self.eval_data,
             a_stats: &self.a_stats,
             cfg: &self.cfg,
+            cell_seed: seed,
         }
     }
 
@@ -133,14 +524,7 @@ impl<'a> GridRunner<'a> {
         let key = w.label();
         if !self.p1_cache.contains_key(&key) {
             log::info!("training float-activation net for weights={key}");
-            let ctx = CellCtx {
-                engine: self.engine,
-                arch: &self.arch,
-                train_data: &self.train_data,
-                eval_data: &self.eval_data,
-                a_stats: &self.a_stats,
-                cfg: &self.cfg,
-            };
+            let ctx = self.ctx(p1_seed(self.cfg.seed, w));
             let net = regimes::train_float_act_net(&ctx, &self.base, w)?;
             self.p1_cache.insert(key.clone(), net);
         }
@@ -160,36 +544,14 @@ impl<'a> GridRunner<'a> {
             w.label(),
             a.label()
         );
-        let eval = match regime {
-            Regime::NoFinetune => {
-                regimes::run_no_finetune(&self.ctx(), &self.base, w, a)?
-            }
-            Regime::Vanilla => regimes::run_vanilla(&self.ctx(), &self.base, w, a)?,
-            Regime::Prop1 | Regime::Prop2 { .. } | Regime::Prop3 => {
-                match self.p1_net(w)? {
-                    None => None, // seed training itself diverged
-                    Some(p1) => match regime {
-                        Regime::Prop1 => {
-                            regimes::run_prop1(&self.ctx(), &p1, w, a)?
-                        }
-                        Regime::Prop2 { top_layers } => {
-                            regimes::run_prop2(&self.ctx(), &p1, w, a, top_layers)?
-                        }
-                        Regime::Prop3 => {
-                            // float activations: nothing to schedule; the
-                            // p1 net already IS the answer (matches the
-                            // paper: the Float row repeats across 4-6)
-                            if a == WidthSpec::Float {
-                                regimes::run_prop1(&self.ctx(), &p1, w, a)?
-                            } else {
-                                regimes::run_prop3(&self.ctx(), &p1, w, a)?
-                            }
-                        }
-                        _ => unreachable!(),
-                    },
-                }
-            }
+        let p1 = if regime.needs_p1_net() {
+            self.p1_net(w)?
+        } else {
+            None
         };
+        let ctx = self.ctx(cell_seed(self.cfg.seed, regime, w, a));
+        let eval =
+            regimes::dispatch_cell(&ctx, regime, &self.base, p1.as_ref(), w, a)?;
         if let Some(e) = &eval {
             log::info!(
                 "  -> top1 {:.2}% top5 {:.2}% loss {:.3}",
@@ -203,7 +565,7 @@ impl<'a> GridRunner<'a> {
         Ok(CellOutcome { w, a, eval })
     }
 
-    /// Run the full paper grid for `regime`.
+    /// Run the full paper grid for `regime`, serially.
     pub fn run_grid(&mut self, regime: Regime) -> Result<GridResult> {
         let w_axis = WidthSpec::paper_axis().to_vec();
         let a_axis = WidthSpec::paper_axis().to_vec();
@@ -272,5 +634,43 @@ mod tests {
         let c = g.cell(W::Bits(8), W::Bits(4)).unwrap();
         assert!(c.eval.is_some());
         assert_eq!(c.cell_str(1), "1.0");
+    }
+
+    #[test]
+    fn jobs_cover_grid_with_distinct_seeds() {
+        let jobs = grid_jobs(Regime::Vanilla, 42);
+        assert_eq!(jobs.len(), 16);
+        let mut seeds: Vec<u64> = jobs.iter().map(|j| j.seed).collect();
+        seeds.sort();
+        seeds.dedup();
+        assert_eq!(seeds.len(), 16);
+        for (i, j) in jobs.iter().enumerate() {
+            assert_eq!(j.flat, i);
+            assert_eq!(j.seed, cell_seed(42, Regime::Vanilla, j.w, j.a));
+        }
+        // regime-independent p1 seeds differ from every cell seed
+        for j in &jobs {
+            assert_ne!(j.seed, p1_seed(42, j.w));
+        }
+    }
+
+    #[test]
+    fn shard_partition_is_exact() {
+        let jobs = grid_jobs(Regime::Prop1, 7);
+        for count in 1..=5usize {
+            let mut seen = vec![0usize; jobs.len()];
+            for index in 0..count {
+                for j in &jobs {
+                    if in_shard(j.flat, Some((index, count))) {
+                        seen[j.flat] += 1;
+                    }
+                }
+            }
+            assert!(seen.iter().all(|&c| c == 1), "count={count}: {seen:?}");
+        }
+        assert!(check_shard(Some((2, 2))).is_err());
+        assert!(check_shard(Some((0, 0))).is_err());
+        assert!(check_shard(Some((1, 4))).is_ok());
+        assert!(check_shard(None).is_ok());
     }
 }

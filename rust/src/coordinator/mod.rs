@@ -12,10 +12,13 @@
 //!   detection (the paper's "fails to converge" = our `n/a`);
 //! * `phases`    -- the Table 1 bottom-to-top schedule of Proposal 3;
 //! * `regimes`   -- no-fine-tune / vanilla / Proposals 1-3 as strategies;
+//! * `pool`      -- the deterministic work-queue + worker-pool substrate
+//!   (panic isolation, per-worker contexts);
 //! * `grid`      -- the (weight width x activation width) experiment grid
-//!   behind every results table;
+//!   behind every results table, serial and parallel/sharded/resumable;
 //! * `evaluator` -- held-out top-k error;
-//! * `report`    -- paper-style table rendering and JSON result dumps.
+//! * `report`    -- paper-style table rendering, JSON result dumps, and
+//!   the per-cell sweep cache.
 
 pub mod calibrate;
 pub mod config;
@@ -23,11 +26,15 @@ pub mod evaluator;
 pub mod grid;
 pub mod mismatch;
 pub mod phases;
+pub mod pool;
 pub mod regimes;
 pub mod report;
 pub mod trainer;
 
 pub use config::RunCfg;
-pub use grid::{CellOutcome, GridResult, GridRunner};
+pub use grid::{
+    CellJob, CellOutcome, GridResult, GridRunner, ParallelGridRunner,
+    SweepOpts, SweepOutcome,
+};
 pub use regimes::Regime;
 pub use trainer::{TrainOutcome, Trainer};

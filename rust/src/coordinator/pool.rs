@@ -1,0 +1,265 @@
+//! Deterministic work-queue executed by a `std::thread` worker pool.
+//!
+//! The grid runner's execution substrate: a slice of jobs, a per-worker
+//! context factory (each worker owns, e.g., its own PJRT `Engine` --
+//! engines are single-threaded by design), and a job function.  Results
+//! land in a slot vector indexed by job position, so the output is a pure
+//! function of the jobs themselves: worker count and scheduling order
+//! cannot change it.
+//!
+//! Failure containment (the paper's "n/a" semantics): a job that returns
+//! `Err` or panics leaves its slot `None` and the sweep continues.  After
+//! a panic the worker's context is re-created from the factory before it
+//! takes the next job, so a trainer that died mid-step cannot leak
+//! corrupt state into later cells.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::error::{FxpError, Result};
+
+/// What happened across one `run_jobs` call.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PoolStats {
+    /// jobs submitted
+    pub jobs: usize,
+    /// jobs that returned Ok
+    pub ok: usize,
+    /// jobs that returned Err (slot = None)
+    pub failed: usize,
+    /// jobs that panicked (slot = None)
+    pub panicked: usize,
+    /// worker threads used
+    pub workers: usize,
+}
+
+/// Resolve a requested worker count: 0 means "all available cores",
+/// and there is never a point in more workers than jobs.
+pub fn effective_workers(requested: usize, jobs: usize) -> usize {
+    let auto = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let w = if requested == 0 { auto } else { requested };
+    w.clamp(1, jobs.max(1))
+}
+
+/// Run `jobs` across `workers` threads (0 = available parallelism).
+///
+/// * `init(worker_id)` builds one worker's private context inside that
+///   worker's thread (contexts need not be `Send`).
+/// * `run(ctx, job_idx, job)` executes one job; `Err`/panic => `None`
+///   slot.
+///
+/// Returns the result slots (index-aligned with `jobs`) and stats.
+/// Errors only if workers died (context factory failures) before every
+/// job could be attempted.
+pub fn run_jobs<J, R, W, I, F>(
+    jobs: &[J],
+    workers: usize,
+    init: I,
+    run: F,
+) -> Result<(Vec<Option<R>>, PoolStats)>
+where
+    J: Sync,
+    R: Send,
+    I: Fn(usize) -> Result<W> + Sync,
+    F: Fn(&mut W, usize, &J) -> Result<R> + Sync,
+{
+    let workers = effective_workers(workers, jobs.len());
+    if jobs.is_empty() {
+        return Ok((Vec::new(), PoolStats { workers: 0, ..Default::default() }));
+    }
+
+    let next = AtomicUsize::new(0);
+    let attempted = AtomicUsize::new(0);
+    let failed = AtomicUsize::new(0);
+    let panicked = AtomicUsize::new(0);
+    let slots: Mutex<Vec<Option<R>>> =
+        Mutex::new((0..jobs.len()).map(|_| None).collect());
+    let init_errs: Mutex<Vec<FxpError>> = Mutex::new(Vec::new());
+
+    std::thread::scope(|scope| {
+        for wid in 0..workers {
+            let next = &next;
+            let attempted = &attempted;
+            let failed = &failed;
+            let panicked = &panicked;
+            let slots = &slots;
+            let init_errs = &init_errs;
+            let init = &init;
+            let run = &run;
+            scope.spawn(move || {
+                let mut ctx = match init(wid) {
+                    Ok(c) => c,
+                    Err(e) => {
+                        log::warn!("worker {wid}: context init failed: {e}");
+                        init_errs.lock().unwrap().push(e);
+                        return;
+                    }
+                };
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= jobs.len() {
+                        break;
+                    }
+                    let outcome =
+                        catch_unwind(AssertUnwindSafe(|| run(&mut ctx, i, &jobs[i])));
+                    attempted.fetch_add(1, Ordering::Relaxed);
+                    match outcome {
+                        Ok(Ok(r)) => {
+                            slots.lock().unwrap()[i] = Some(r);
+                        }
+                        Ok(Err(e)) => {
+                            log::warn!("job {i} failed (worker {wid}): {e}");
+                            failed.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(_) => {
+                            log::warn!("job {i} panicked (worker {wid}); isolating");
+                            panicked.fetch_add(1, Ordering::Relaxed);
+                            // the panic may have left ctx inconsistent
+                            match init(wid) {
+                                Ok(c) => ctx = c,
+                                Err(e) => {
+                                    log::warn!(
+                                        "worker {wid}: re-init after panic \
+                                         failed: {e}"
+                                    );
+                                    init_errs.lock().unwrap().push(e);
+                                    return;
+                                }
+                            }
+                        }
+                    }
+                }
+            });
+        }
+    });
+
+    let attempted = attempted.load(Ordering::Relaxed);
+    if attempted < jobs.len() {
+        let errs = init_errs.lock().unwrap();
+        let detail = errs
+            .first()
+            .map(|e| e.to_string())
+            .unwrap_or_else(|| "unknown".to_string());
+        return Err(FxpError::config(format!(
+            "worker pool exhausted with {} of {} jobs unattempted \
+             (first worker error: {detail})",
+            jobs.len() - attempted,
+            jobs.len()
+        )));
+    }
+
+    let slots = slots.into_inner().unwrap();
+    let stats = PoolStats {
+        jobs: jobs.len(),
+        ok: slots.iter().filter(|s| s.is_some()).count(),
+        failed: failed.load(Ordering::Relaxed),
+        panicked: panicked.load(Ordering::Relaxed),
+        workers,
+    };
+    Ok((slots, stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_jobs_run_and_slots_align() {
+        let jobs: Vec<u64> = (0..100).collect();
+        for workers in [1, 2, 4, 7] {
+            let (slots, stats) =
+                run_jobs(&jobs, workers, |_| Ok(()), |_, _, &j| Ok(j * 3)).unwrap();
+            assert_eq!(stats.jobs, 100);
+            assert_eq!(stats.ok, 100);
+            assert_eq!(stats.failed + stats.panicked, 0);
+            for (i, s) in slots.iter().enumerate() {
+                assert_eq!(*s, Some(i as u64 * 3));
+            }
+        }
+    }
+
+    #[test]
+    fn errors_and_panics_are_isolated() {
+        let jobs: Vec<usize> = (0..40).collect();
+        let (slots, stats) = run_jobs(
+            &jobs,
+            4,
+            |_| Ok(()),
+            |_, _, &j| {
+                if j % 10 == 3 {
+                    panic!("job {j} exploded");
+                }
+                if j % 10 == 7 {
+                    return Err(FxpError::config("job declined"));
+                }
+                Ok(j)
+            },
+        )
+        .unwrap();
+        assert_eq!(stats.panicked, 4);
+        assert_eq!(stats.failed, 4);
+        assert_eq!(stats.ok, 32);
+        for (i, s) in slots.iter().enumerate() {
+            if i % 10 == 3 || i % 10 == 7 {
+                assert!(s.is_none(), "slot {i}");
+            } else {
+                assert_eq!(*s, Some(i));
+            }
+        }
+    }
+
+    #[test]
+    fn worker_context_recreated_after_panic() {
+        // context counts jobs since (re-)init; a panic resets it
+        let jobs: Vec<usize> = (0..10).collect();
+        let inits = AtomicUsize::new(0);
+        let (_, stats) = run_jobs(
+            &jobs,
+            1,
+            |_| {
+                inits.fetch_add(1, Ordering::Relaxed);
+                Ok(0usize)
+            },
+            |count, _, &j| {
+                *count += 1;
+                if j == 4 {
+                    panic!("mid-queue panic");
+                }
+                Ok(*count)
+            },
+        )
+        .unwrap();
+        assert_eq!(stats.panicked, 1);
+        assert_eq!(inits.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn init_failure_of_all_workers_is_an_error() {
+        let jobs: Vec<usize> = (0..5).collect();
+        let r: Result<(Vec<Option<usize>>, PoolStats)> = run_jobs(
+            &jobs,
+            3,
+            |_| Err(FxpError::config("no engine here")),
+            |_: &mut (), _, &j| Ok(j),
+        );
+        assert!(r.is_err());
+        assert!(r.unwrap_err().to_string().contains("unattempted"));
+    }
+
+    #[test]
+    fn empty_job_list() {
+        let (slots, stats) =
+            run_jobs(&Vec::<u64>::new(), 4, |_| Ok(()), |_, _, &j| Ok(j)).unwrap();
+        assert!(slots.is_empty());
+        assert_eq!(stats.jobs, 0);
+    }
+
+    #[test]
+    fn effective_worker_resolution() {
+        assert_eq!(effective_workers(3, 100), 3);
+        assert_eq!(effective_workers(8, 2), 2);
+        assert_eq!(effective_workers(5, 0), 1);
+        assert!(effective_workers(0, 1000) >= 1);
+    }
+}

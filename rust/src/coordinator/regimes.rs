@@ -69,6 +69,21 @@ impl Regime {
             Regime::Prop3 => 6,
         }
     }
+
+    /// Stable tag for seed derivation.  Also folds in `top_layers` so
+    /// Proposal 2 variants get distinct streams.
+    pub fn seed_tag(&self) -> u64 {
+        match self {
+            Regime::Prop2 { top_layers } => 5 | ((*top_layers as u64) << 8),
+            other => other.table_number() as u64,
+        }
+    }
+
+    /// True for the regimes seeded by the float-activation fine-tuned net
+    /// ("the last row of Table 3").
+    pub fn needs_p1_net(&self) -> bool {
+        matches!(self, Regime::Prop1 | Regime::Prop2 { .. } | Regime::Prop3)
+    }
 }
 
 /// Everything the regimes need to run one cell.
@@ -80,6 +95,11 @@ pub struct CellCtx<'a> {
     /// activation stats of the pretrained float net
     pub a_stats: &'a [LayerStats],
     pub cfg: &'a RunCfg,
+    /// Cell-scoped seed (see `grid::cell_seed` / `grid::p1_seed`): a pure
+    /// function of `(base seed, regime, weight width, activation width)`,
+    /// never of worker identity or scheduling order, so parallel sweeps
+    /// replay the serial runner bit-for-bit.
+    pub cell_seed: u64,
 }
 
 impl<'a> CellCtx<'a> {
@@ -89,7 +109,7 @@ impl<'a> CellCtx<'a> {
             batch: spec.train_batch,
             augment: self.cfg.augment,
             max_shift: 2,
-            seed: self.cfg.seed ^ tag,
+            seed: crate::util::rng::derive_seed(self.cell_seed, "loader", &[tag]),
         })
     }
 
@@ -128,6 +148,47 @@ impl<'a> CellCtx<'a> {
 
 /// Outcome of one cell: Some(eval) or None when training diverged.
 pub type CellResult = Option<EvalResult>;
+
+/// Run one grid cell under `regime`.
+///
+/// The single dispatch shared by the serial `GridRunner` and the
+/// parallel sweep engine, so both execute byte-identical logic.  `p1` is
+/// the float-activation fine-tuned net for the cell's weight width
+/// (required by Proposals 1-3; `None` there means that seed training
+/// itself diverged, which makes the whole cell `n/a`).
+pub fn dispatch_cell(
+    ctx: &CellCtx,
+    regime: Regime,
+    base: &ParamSet,
+    p1: Option<&ParamSet>,
+    w: WidthSpec,
+    a: WidthSpec,
+) -> Result<CellResult> {
+    match regime {
+        Regime::NoFinetune => run_no_finetune(ctx, base, w, a),
+        Regime::Vanilla => run_vanilla(ctx, base, w, a),
+        Regime::Prop1 | Regime::Prop2 { .. } | Regime::Prop3 => match p1 {
+            None => Ok(None), // seed training itself diverged
+            Some(p1) => match regime {
+                Regime::Prop1 => run_prop1(ctx, p1, w, a),
+                Regime::Prop2 { top_layers } => {
+                    run_prop2(ctx, p1, w, a, top_layers)
+                }
+                Regime::Prop3 => {
+                    // float activations: nothing to schedule; the p1 net
+                    // already IS the answer (matches the paper: the Float
+                    // row repeats across Tables 4-6)
+                    if a == WidthSpec::Float {
+                        run_prop1(ctx, p1, w, a)
+                    } else {
+                        run_prop3(ctx, p1, w, a)
+                    }
+                }
+                _ => unreachable!(),
+            },
+        },
+    }
+}
 
 /// Table 2: quantize the pretrained net, no fine-tuning.
 pub fn run_no_finetune(
@@ -255,6 +316,27 @@ pub fn run_prop3(
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn seed_tags_distinct() {
+        let tags: Vec<u64> = [
+            Regime::NoFinetune,
+            Regime::Vanilla,
+            Regime::Prop1,
+            Regime::Prop2 { top_layers: 1 },
+            Regime::Prop2 { top_layers: 2 },
+            Regime::Prop3,
+        ]
+        .iter()
+        .map(|r| r.seed_tag())
+        .collect();
+        let mut uniq = tags.clone();
+        uniq.sort();
+        uniq.dedup();
+        assert_eq!(uniq.len(), tags.len(), "{tags:?}");
+        assert!(Regime::Prop2 { top_layers: 1 }.needs_p1_net());
+        assert!(!Regime::Vanilla.needs_p1_net());
+    }
 
     #[test]
     fn regime_parse_and_labels() {

@@ -1,10 +1,35 @@
-//! Result persistence: paper-style text reports and JSON dumps that the
-//! bench harness and EXPERIMENTS.md consume.
+//! Result persistence: paper-style text reports, JSON dumps that the
+//! bench harness and EXPERIMENTS.md consume, and the per-cell result
+//! cache behind `--resume` / `--shard`.
+//!
+//! ## Cell cache format
+//!
+//! One JSON file per (regime, arch, base seed) sweep:
+//!
+//! ```json
+//! {"version": 1, "arch": "paper12", "regime_tag": 3, "base_seed": "42",
+//!  "cells": {"w=8,a=4": {"status": "ok", "n": 2048,
+//!                         "top1_err": 0.334, "top5_err": 0.071,
+//!                         "loss": 1.207},
+//!            "w=4,a=4": {"status": "na"}}}
+//! ```
+//!
+//! `"na"` records the paper's "failed to converge" outcome (including
+//! panicked cells), so resuming never retries a deterministically-dead
+//! cell.  Floats are written with Rust's shortest-round-trip formatting
+//! and `base_seed` as a string, so entries reload bit-exactly; a header
+//! mismatch (different sweep) discards the stale file.  Writes go
+//! through a temp file + rename, making each save atomic.  Shards
+//! sharing one filesystem can union through a common cache file by
+//! running against it in turn; cross-process locking is future work.
 
-use std::path::Path;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
 
-use crate::coordinator::grid::GridResult;
-use crate::error::Result;
+use crate::coordinator::evaluator::EvalResult;
+use crate::coordinator::grid::{CellJob, GridResult};
+use crate::coordinator::regimes::{CellResult, Regime};
+use crate::error::{FxpError, Result};
 use crate::util::json::Json;
 
 /// Serialise a grid to JSON (for results/ dumps).
@@ -59,6 +84,176 @@ pub fn save_grid(g: &GridResult, dir: impl AsRef<Path>, topk: usize) -> Result<(
     )?;
     log::info!("wrote {}/{stem}.{{txt,json}}", dir.display());
     Ok(())
+}
+
+/// Persistent per-cell results of one sweep (see the module docs for the
+/// on-disk format).
+#[derive(Debug)]
+pub struct CellCache {
+    path: PathBuf,
+    arch: String,
+    regime_tag: u64,
+    base_seed: u64,
+    cells: BTreeMap<String, Option<EvalResult>>,
+}
+
+impl CellCache {
+    /// Cache key of a cell within its sweep file.
+    pub fn key(job: &CellJob) -> String {
+        format!("w={},a={}", job.w.label(), job.a.label())
+    }
+
+    /// Open (or create) the cache for one sweep.  An existing file whose
+    /// header does not match `(arch, regime, base_seed)` is stale (a
+    /// different sweep) and is discarded with a warning.
+    pub fn open(
+        path: impl AsRef<Path>,
+        arch: &str,
+        regime: Regime,
+        base_seed: u64,
+    ) -> Result<CellCache> {
+        let path = path.as_ref().to_path_buf();
+        let mut cache = CellCache {
+            path,
+            arch: arch.to_string(),
+            regime_tag: regime.seed_tag(),
+            base_seed,
+            cells: BTreeMap::new(),
+        };
+        if !cache.path.exists() {
+            return Ok(cache);
+        }
+        let text = std::fs::read_to_string(&cache.path)?;
+        match cache.parse_into(&text) {
+            Ok(true) => {
+                log::info!(
+                    "cell cache {}: {} entries loaded",
+                    cache.path.display(),
+                    cache.cells.len()
+                );
+            }
+            Ok(false) => {
+                log::warn!(
+                    "cell cache {}: header mismatch (different sweep); \
+                     starting fresh",
+                    cache.path.display()
+                );
+                cache.cells.clear();
+            }
+            Err(e) => {
+                log::warn!(
+                    "cell cache {}: unreadable ({e}); starting fresh",
+                    cache.path.display()
+                );
+                cache.cells.clear();
+            }
+        }
+        Ok(cache)
+    }
+
+    /// Returns Ok(false) on a header mismatch.
+    fn parse_into(&mut self, text: &str) -> Result<bool> {
+        let j = Json::parse(text)?;
+        if j.get("version")?.as_usize()? != 1
+            || j.get("arch")?.as_str()? != self.arch
+            || j.get("regime_tag")?.as_usize()? as u64 != self.regime_tag
+            || j.get("base_seed")?.as_str()?.parse::<u64>().ok()
+                != Some(self.base_seed)
+        {
+            return Ok(false);
+        }
+        for (key, cell) in j.get("cells")?.as_obj()? {
+            let entry = match cell.get("status")?.as_str()? {
+                "na" => None,
+                "ok" => Some(EvalResult {
+                    n: cell.get("n")?.as_usize()?,
+                    top1_err: cell.get("top1_err")?.as_f64()?,
+                    top5_err: cell.get("top5_err")?.as_f64()?,
+                    mean_loss: cell.get("loss")?.as_f64()?,
+                }),
+                other => {
+                    return Err(FxpError::Json(format!(
+                        "cell '{key}': bad status '{other}'"
+                    )))
+                }
+            };
+            self.cells.insert(key.clone(), entry);
+        }
+        Ok(true)
+    }
+
+    /// Cached result for a cell, if any.  The outer Option is presence;
+    /// the inner `CellResult` keeps the "n/a" distinction.
+    pub fn get(&self, job: &CellJob) -> Option<CellResult> {
+        self.cells.get(&Self::key(job)).copied()
+    }
+
+    pub fn put(&mut self, job: &CellJob, res: &CellResult) {
+        // JSON cannot carry NaN/inf; a non-finite eval is the paper's
+        // divergence anyway, so record it as "n/a" rather than writing a
+        // token that would corrupt the file and discard the whole cache
+        // on the next open.
+        let entry = match res {
+            Some(e)
+                if !(e.top1_err.is_finite()
+                    && e.top5_err.is_finite()
+                    && e.mean_loss.is_finite()) =>
+            {
+                log::warn!(
+                    "cell {}: non-finite eval cached as n/a",
+                    Self::key(job)
+                );
+                None
+            }
+            other => *other,
+        };
+        self.cells.insert(Self::key(job), entry);
+    }
+
+    pub fn len(&self) -> usize {
+        self.cells.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cells.is_empty()
+    }
+
+    fn to_json(&self) -> Json {
+        let mut cells = BTreeMap::new();
+        for (key, entry) in &self.cells {
+            let cell = match entry {
+                None => Json::obj(vec![("status", Json::Str("na".into()))]),
+                Some(e) => Json::obj(vec![
+                    ("status", Json::Str("ok".into())),
+                    ("n", Json::from(e.n)),
+                    ("top1_err", Json::Num(e.top1_err)),
+                    ("top5_err", Json::Num(e.top5_err)),
+                    ("loss", Json::Num(e.mean_loss)),
+                ]),
+            };
+            cells.insert(key.clone(), cell);
+        }
+        Json::obj(vec![
+            ("version", Json::from(1usize)),
+            ("arch", Json::Str(self.arch.clone())),
+            ("regime_tag", Json::from(self.regime_tag as usize)),
+            ("base_seed", Json::Str(self.base_seed.to_string())),
+            ("cells", Json::Obj(cells)),
+        ])
+    }
+
+    /// Atomically persist (write temp file, rename over the target).
+    pub fn save(&self) -> Result<()> {
+        if let Some(dir) = self.path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let tmp = self.path.with_extension("json.tmp");
+        std::fs::write(&tmp, self.to_json().to_string())?;
+        std::fs::rename(&tmp, &self.path)?;
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -119,5 +314,70 @@ mod tests {
         assert!(dir.join("table6_tiny.txt").exists());
         let j = std::fs::read_to_string(dir.join("table6_tiny.json")).unwrap();
         assert!(Json::parse(&j).is_ok());
+    }
+
+    fn job(w: W, a: W) -> crate::coordinator::grid::CellJob {
+        crate::coordinator::grid::CellJob {
+            regime: Regime::Vanilla,
+            w,
+            a,
+            w_idx: 0,
+            a_idx: 0,
+            flat: 0,
+            seed: 1,
+        }
+    }
+
+    #[test]
+    fn cell_cache_round_trips_bit_exact() {
+        let dir = std::env::temp_dir().join("fxp_cellcache_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("cache.json");
+        let mut c = CellCache::open(&path, "tiny", Regime::Vanilla, 42).unwrap();
+        assert!(c.is_empty());
+        // awkward floats on purpose: must survive the JSON round trip
+        let e = EvalResult {
+            n: 2048,
+            top1_err: 0.1 + 0.2,
+            top5_err: 1.0 / 3.0,
+            mean_loss: 1e-17,
+        };
+        c.put(&job(W::Bits(8), W::Bits(4)), &Some(e));
+        c.put(&job(W::Bits(4), W::Bits(4)), &None);
+        c.save().unwrap();
+
+        let c2 = CellCache::open(&path, "tiny", Regime::Vanilla, 42).unwrap();
+        assert_eq!(c2.len(), 2);
+        assert_eq!(c2.get(&job(W::Bits(4), W::Bits(4))), Some(None));
+        let back = c2.get(&job(W::Bits(8), W::Bits(4))).unwrap().unwrap();
+        assert_eq!(back.n, e.n);
+        assert_eq!(back.top1_err.to_bits(), e.top1_err.to_bits());
+        assert_eq!(back.top5_err.to_bits(), e.top5_err.to_bits());
+        assert_eq!(back.mean_loss.to_bits(), e.mean_loss.to_bits());
+        // absent cell
+        assert_eq!(c2.get(&job(W::Float, W::Float)), None);
+    }
+
+    #[test]
+    fn cell_cache_header_mismatch_starts_fresh() {
+        let dir = std::env::temp_dir().join("fxp_cellcache_hdr_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("cache.json");
+        let mut c = CellCache::open(&path, "tiny", Regime::Vanilla, 42).unwrap();
+        c.put(&job(W::Bits(8), W::Bits(8)), &None);
+        c.save().unwrap();
+        // different seed => stale
+        let c2 = CellCache::open(&path, "tiny", Regime::Vanilla, 43).unwrap();
+        assert!(c2.is_empty());
+        // different regime => stale
+        let c3 = CellCache::open(&path, "tiny", Regime::Prop1, 42).unwrap();
+        assert!(c3.is_empty());
+        // matching header => loaded
+        let c4 = CellCache::open(&path, "tiny", Regime::Vanilla, 42).unwrap();
+        assert_eq!(c4.len(), 1);
+        // corrupt file => fresh, not an error
+        std::fs::write(&path, "{not json").unwrap();
+        let c5 = CellCache::open(&path, "tiny", Regime::Vanilla, 42).unwrap();
+        assert!(c5.is_empty());
     }
 }

@@ -1,42 +1,76 @@
 //! Library-wide error type.
+//!
+//! Hand-implemented `Display`/`Error`/`From` (thiserror is not in the
+//! offline crate cache -- see `util/mod.rs` on the substitution policy).
 
-use thiserror::Error;
+use std::fmt;
 
 /// All errors surfaced by fxpnet.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum FxpError {
     /// Errors from the XLA/PJRT runtime (compilation, execution, literals).
-    #[error("xla: {0}")]
-    Xla(#[from] xla::Error),
+    Xla(xla::Error),
 
     /// Filesystem / IO errors.
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
     /// Manifest / metrics JSON problems.
-    #[error("json: {0}")]
     Json(String),
 
     /// Artifact manifest is missing something the coordinator needs.
-    #[error("manifest: {0}")]
     Manifest(String),
 
     /// Checkpoint file corrupt or mismatched.
-    #[error("checkpoint: {0}")]
     Checkpoint(String),
 
     /// Shape mismatch in tensor plumbing.
-    #[error("shape: {0}")]
     Shape(String),
 
     /// Bad configuration (CLI, quantization format, schedule...).
-    #[error("config: {0}")]
     Config(String),
 
     /// Training diverged (NaN/Inf loss or runaway loss) -- the paper's
     /// "fails to converge" outcome; the grid runner records it as `n/a`.
-    #[error("diverged at step {step}: loss={loss}")]
     Diverged { step: usize, loss: f32 },
+}
+
+impl fmt::Display for FxpError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FxpError::Xla(e) => write!(f, "xla: {e}"),
+            FxpError::Io(e) => write!(f, "io: {e}"),
+            FxpError::Json(m) => write!(f, "json: {m}"),
+            FxpError::Manifest(m) => write!(f, "manifest: {m}"),
+            FxpError::Checkpoint(m) => write!(f, "checkpoint: {m}"),
+            FxpError::Shape(m) => write!(f, "shape: {m}"),
+            FxpError::Config(m) => write!(f, "config: {m}"),
+            FxpError::Diverged { step, loss } => {
+                write!(f, "diverged at step {step}: loss={loss}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for FxpError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            FxpError::Xla(e) => Some(e),
+            FxpError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<xla::Error> for FxpError {
+    fn from(e: xla::Error) -> Self {
+        FxpError::Xla(e)
+    }
+}
+
+impl From<std::io::Error> for FxpError {
+    fn from(e: std::io::Error) -> Self {
+        FxpError::Io(e)
+    }
 }
 
 pub type Result<T> = std::result::Result<T, FxpError>;
@@ -47,5 +81,24 @@ impl FxpError {
     }
     pub fn shape(msg: impl Into<String>) -> Self {
         FxpError::Shape(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_and_source() {
+        let e = FxpError::config("bad flag");
+        assert_eq!(e.to_string(), "config: bad flag");
+        let e = FxpError::Diverged { step: 7, loss: f32::NAN };
+        assert!(e.to_string().contains("step 7"));
+        // via From, without assuming the xla Error's concrete shape
+        // (the stub and the real crate differ there)
+        let e: FxpError =
+            std::io::Error::new(std::io::ErrorKind::NotFound, "boom").into();
+        assert!(e.to_string().starts_with("io:"));
+        assert!(std::error::Error::source(&e).is_some());
     }
 }

@@ -18,6 +18,31 @@
 //! Python never runs on the request path; the binary is self-contained
 //! once `artifacts/` is built.
 //!
+//! ## Parallel grid sweeps
+//!
+//! Every paper table is a (weight width x activation width) grid of
+//! independent training/finetune jobs.  `coordinator::grid` executes
+//! them through a `std::thread` worker pool (`coordinator::pool`) with:
+//!
+//! * **deterministic per-cell seeding** -- each cell's RNG seed derives
+//!   from `(base seed, regime, w, a)` via `util::rng::derive_seed`, so
+//!   tables are bit-identical for any `--workers` count, shard layout,
+//!   or resume pattern (pinned by tests/grid_parallel.rs);
+//! * **divergence/panic isolation** -- a cell that diverges, errors, or
+//!   panics becomes the paper's "n/a" instead of killing the sweep;
+//! * **sharding + resume** -- `--shard I/N` partitions cells round-robin
+//!   across processes, and a JSON cell cache (`report::CellCache`, see
+//!   the format notes in `coordinator::report`) lets interrupted sweeps
+//!   resume and shards union into the full table.
+//!
+//! ## Offline build layout
+//!
+//! The workspace builds with zero external crates: `rust/xla-stub`
+//! (package `xla`) stands in for the PJRT bindings (literals functional,
+//! execution unavailable -- engine tests skip without `artifacts/`), and
+//! `rust/log-shim` (package `log`) provides the log facade.  Swap the
+//! real `xla` crate back in via one line of rust/Cargo.toml.
+//!
 //! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
 //! paper-vs-measured results.
 

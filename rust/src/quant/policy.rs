@@ -36,6 +36,15 @@ impl WidthSpec {
         }
     }
 
+    /// Stable tag for seed derivation (`util::rng::derive_seed`): the bit
+    /// width itself, or a constant far outside the u8 range for Float.
+    pub fn seed_tag(&self) -> u64 {
+        match self {
+            WidthSpec::Bits(b) => *b as u64,
+            WidthSpec::Float => 0xF10A7,
+        }
+    }
+
     /// The paper's grid axes: 4, 8, 16, Float.
     pub fn paper_axis() -> [WidthSpec; 4] {
         [

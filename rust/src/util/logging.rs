@@ -1,45 +1,14 @@
-//! Tiny `log`-facade backend: timestamped stderr logging, level from
-//! `FXPNET_LOG` (error|warn|info|debug|trace; default info).
+//! Logging configuration: level from `FXPNET_LOG` (error|warn|info|debug
+//! |trace; default info).
+//!
+//! The sink itself (timestamped stderr lines) lives in the offline `log`
+//! shim crate (rust/log-shim); this module only translates the
+//! environment variable into a level filter.
 
-use std::io::Write;
-use std::time::Instant;
+use log::LevelFilter;
 
-use log::{Level, LevelFilter, Metadata, Record};
-use once_cell::sync::OnceCell;
-
-static START: OnceCell<Instant> = OnceCell::new();
-
-struct StderrLogger;
-
-impl log::Log for StderrLogger {
-    fn enabled(&self, metadata: &Metadata) -> bool {
-        metadata.level() <= log::max_level()
-    }
-
-    fn log(&self, record: &Record) {
-        if !self.enabled(record.metadata()) {
-            return;
-        }
-        let t = START.get().map(|s| s.elapsed().as_secs_f64()).unwrap_or(0.0);
-        let lvl = match record.level() {
-            Level::Error => "E",
-            Level::Warn => "W",
-            Level::Info => "I",
-            Level::Debug => "D",
-            Level::Trace => "T",
-        };
-        let mut err = std::io::stderr().lock();
-        let _ = writeln!(err, "[{t:9.3}s {lvl} {}] {}", record.target(), record.args());
-    }
-
-    fn flush(&self) {}
-}
-
-static LOGGER: StderrLogger = StderrLogger;
-
-/// Install the logger (idempotent).
+/// Install the log level from the environment (idempotent).
 pub fn init() {
-    START.get_or_init(Instant::now);
     let level = match std::env::var("FXPNET_LOG").as_deref() {
         Ok("error") => LevelFilter::Error,
         Ok("warn") => LevelFilter::Warn,
@@ -47,9 +16,7 @@ pub fn init() {
         Ok("trace") => LevelFilter::Trace,
         _ => LevelFilter::Info,
     };
-    if log::set_logger(&LOGGER).is_ok() {
-        log::set_max_level(level);
-    }
+    log::set_max_level(level);
 }
 
 #[cfg(test)]

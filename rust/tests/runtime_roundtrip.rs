@@ -11,7 +11,7 @@ use fxpnet::quant::calib::CalibMethod;
 
 #[test]
 fn eval_batch_runs_and_loss_is_chance() {
-    let engine = common::engine();
+    let Some(engine) = common::engine_opt() else { return };
     let spec = engine.manifest.arch("tiny").unwrap().clone();
     let params = ParamSet::init(&spec, 0);
     let data = Dataset::generate(64, spec.input[0], spec.input[1], 7);
@@ -26,7 +26,7 @@ fn eval_batch_runs_and_loss_is_chance() {
 
 #[test]
 fn executable_cache_hits() {
-    let engine = common::engine();
+    let Some(engine) = common::engine_opt() else { return };
     let a = engine.executable("tiny", "eval_batch").unwrap();
     let b = engine.executable("tiny", "eval_batch").unwrap();
     assert!(std::rc::Rc::ptr_eq(&a, &b));
@@ -37,7 +37,7 @@ fn executable_cache_hits() {
 
 #[test]
 fn wrong_arity_is_rejected() {
-    let engine = common::engine();
+    let Some(engine) = common::engine_opt() else { return };
     let exe = engine.executable("tiny", "eval_batch").unwrap();
     assert!(exe.run_literals(&[]).is_err());
     assert!(exe.run(&[]).is_err());
@@ -45,7 +45,7 @@ fn wrong_arity_is_rejected() {
 
 #[test]
 fn stats_batch_collects_positive_ranges() {
-    let engine = common::engine();
+    let Some(engine) = common::engine_opt() else { return };
     let spec = engine.manifest.arch("tiny").unwrap().clone();
     let params = ParamSet::init(&spec, 1);
     let data = Dataset::generate(64, spec.input[0], spec.input[1], 8);
@@ -61,7 +61,7 @@ fn stats_batch_collects_positive_ranges() {
 
 #[test]
 fn quantized_eval_differs_from_float_but_is_sane() {
-    let engine = common::engine();
+    let Some(engine) = common::engine_opt() else { return };
     let spec = engine.manifest.arch("tiny").unwrap().clone();
     let params = ParamSet::init(&spec, 2);
     let data = Dataset::generate(64, spec.input[0], spec.input[1], 9);

@@ -9,8 +9,11 @@ use fxpnet::model::checkpoint::{save_params, Checkpoint};
 use fxpnet::model::params::ParamSet;
 use fxpnet::quant::policy::NetQuant;
 
-fn setup(seed: u64) -> (fxpnet::runtime::Engine, ParamSet, Dataset, LoaderCfg) {
-    let engine = common::engine();
+/// `None` => artifacts absent; the caller skips.
+fn setup(
+    seed: u64,
+) -> Option<(fxpnet::runtime::Engine, ParamSet, Dataset, LoaderCfg)> {
+    let engine = common::engine_opt()?;
     let spec = engine.manifest.arch("tiny").unwrap().clone();
     let params = ParamSet::init(&spec, seed);
     let data = Dataset::generate(256, spec.input[0], spec.input[1], seed);
@@ -20,12 +23,12 @@ fn setup(seed: u64) -> (fxpnet::runtime::Engine, ParamSet, Dataset, LoaderCfg) {
         max_shift: 0,
         seed,
     };
-    (engine, params, data, cfg)
+    Some((engine, params, data, cfg))
 }
 
 #[test]
 fn float_training_reduces_loss() {
-    let (engine, params, data, lcfg) = setup(1);
+    let Some((engine, params, data, lcfg)) = setup(1) else { return };
     let spec = engine.manifest.arch("tiny").unwrap().clone();
     let nq = NetQuant::all_float(spec.num_layers);
     let mut tr = Trainer::new(
@@ -43,7 +46,7 @@ fn float_training_reduces_loss() {
 
 #[test]
 fn update_mask_freezes_layers_through_runtime() {
-    let (engine, params, data, lcfg) = setup(2);
+    let Some((engine, params, data, lcfg)) = setup(2) else { return };
     let spec = engine.manifest.arch("tiny").unwrap().clone();
     let l = spec.num_layers;
     let nq = NetQuant::all_float(l);
@@ -63,7 +66,7 @@ fn update_mask_freezes_layers_through_runtime() {
 
 #[test]
 fn upd_single_only_touches_one_layer() {
-    let (engine, params, data, lcfg) = setup(3);
+    let Some((engine, params, data, lcfg)) = setup(3) else { return };
     let spec = engine.manifest.arch("tiny").unwrap().clone();
     let l = spec.num_layers;
     let nq = NetQuant::all_float(l);
@@ -82,7 +85,7 @@ fn upd_single_only_touches_one_layer() {
 
 #[test]
 fn set_config_mid_run_preserves_state() {
-    let (engine, params, data, lcfg) = setup(4);
+    let Some((engine, params, data, lcfg)) = setup(4) else { return };
     let spec = engine.manifest.arch("tiny").unwrap().clone();
     let l = spec.num_layers;
     let nq = NetQuant::all_float(l);
@@ -106,7 +109,7 @@ fn set_config_mid_run_preserves_state() {
 
 #[test]
 fn divergence_detector_fires() {
-    let (engine, params, data, lcfg) = setup(5);
+    let Some((engine, params, data, lcfg)) = setup(5) else { return };
     let spec = engine.manifest.arch("tiny").unwrap().clone();
     let nq = NetQuant::all_float(spec.num_layers);
     // absurd lr -> loss blows up
@@ -122,7 +125,7 @@ fn divergence_detector_fires() {
 
 #[test]
 fn checkpoint_round_trip_through_trainer() {
-    let (engine, params, data, lcfg) = setup(6);
+    let Some((engine, params, data, lcfg)) = setup(6) else { return };
     let spec = engine.manifest.arch("tiny").unwrap().clone();
     let nq = NetQuant::all_float(spec.num_layers);
     let mut tr = Trainer::new(

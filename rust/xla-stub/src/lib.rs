@@ -1,0 +1,291 @@
+//! Offline stand-in for the `xla` (PJRT bindings) crate.
+//!
+//! The container this repo builds in has no XLA runtime and no network,
+//! so this path crate supplies the subset of the real crate's API that
+//! fxpnet touches:
+//!
+//! * [`Literal`] is **fully functional**: host buffers round-trip through
+//!   it bit-for-bit (`runtime/literal.rs` unit tests exercise this), so
+//!   everything up to the device boundary behaves exactly as with the
+//!   real crate.
+//! * Program loading/compilation ([`HloModuleProto`], [`XlaComputation`],
+//!   [`PjRtClient::compile`]) succeeds structurally, but
+//!   [`PjRtLoadedExecutable::execute`] returns an [`Error`]: the stub
+//!   cannot run HLO.  Engine-dependent integration tests detect the
+//!   missing `artifacts/` directory and skip themselves.
+//!
+//! Swapping the real bindings back in is a one-line change in
+//! `rust/Cargo.toml` (point the `xla` dependency at the real crate); no
+//! source file in fxpnet needs to change.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type mirroring `xla::Error`'s role (message-only here).
+#[derive(Clone, Debug)]
+pub struct Error(pub String);
+
+impl Error {
+    fn msg(s: impl Into<String>) -> Error {
+        Error(s.into())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types fxpnet uses (the real crate has many more).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+impl ElementType {
+    fn byte_size(self) -> usize {
+        4
+    }
+}
+
+mod sealed {
+    pub trait Sealed {}
+    impl Sealed for f32 {}
+    impl Sealed for i32 {}
+}
+
+/// Scalar types storable in stub literals.
+pub trait NativeType: Copy + sealed::Sealed {
+    const TY: ElementType;
+    fn read(bytes: &[u8]) -> Self;
+    fn write(self, out: &mut Vec<u8>);
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn read(bytes: &[u8]) -> f32 {
+        f32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]])
+    }
+    fn write(self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn read(bytes: &[u8]) -> i32 {
+        i32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]])
+    }
+    fn write(self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+}
+
+/// A host-side typed buffer with a shape; the only data carrier crossing
+/// the (stub) device boundary.
+#[derive(Clone, Debug)]
+pub struct Literal {
+    ty: ElementType,
+    shape: Vec<usize>,
+    data: Vec<u8>,
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        shape: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let n: usize = shape.iter().product();
+        if n * ty.byte_size() != data.len() {
+            return Err(Error::msg(format!(
+                "literal shape {shape:?} needs {} bytes, got {}",
+                n * ty.byte_size(),
+                data.len()
+            )));
+        }
+        Ok(Literal { ty, shape: shape.to_vec(), data: data.to_vec() })
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn element_type(&self) -> ElementType {
+        self.ty
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if self.ty != T::TY {
+            return Err(Error::msg(format!(
+                "literal is {:?}, requested {:?}",
+                self.ty,
+                T::TY
+            )));
+        }
+        Ok(self.data.chunks_exact(4).map(T::read).collect())
+    }
+
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        if self.ty != T::TY {
+            return Err(Error::msg(format!(
+                "literal is {:?}, requested {:?}",
+                self.ty,
+                T::TY
+            )));
+        }
+        if self.data.len() < 4 {
+            return Err(Error::msg("empty literal"));
+        }
+        Ok(T::read(&self.data[..4]))
+    }
+
+    /// The real crate unpacks tuple literals returned by executables;
+    /// stub literals are never tuples because the stub never executes.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(Error::msg("stub literal is not a tuple"))
+    }
+}
+
+/// Parsed HLO module (the stub only checks the file is readable).
+pub struct HloModuleProto {
+    #[allow(dead_code)]
+    text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| Error::msg(format!("read {}: {e}", path.as_ref().display())))?;
+        Ok(HloModuleProto { text })
+    }
+}
+
+/// Computation handle (opaque in the stub).
+pub struct XlaComputation {}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation {}
+    }
+}
+
+const NO_EXEC: &str = "offline `xla` stub cannot execute programs; point the \
+                       `xla` dependency in rust/Cargo.toml at the real PJRT \
+                       bindings to run compiled artifacts";
+
+/// CPU client handle.  Construction succeeds (it is just a handle);
+/// execution of compiled programs does not.
+pub struct PjRtClient {}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient {})
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub-cpu".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        1
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Ok(PjRtLoadedExecutable {})
+    }
+}
+
+/// Compiled executable handle; `execute` always errors in the stub.
+pub struct PjRtLoadedExecutable {}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::msg(NO_EXEC))
+    }
+}
+
+/// Device buffer handle; never constructed by the stub.
+pub struct PjRtBuffer {}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::msg(NO_EXEC))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_round_trip_f32() {
+        let xs = [1.0f32, -2.5, 3.25];
+        let mut bytes = Vec::new();
+        for &x in &xs {
+            x.write(&mut bytes);
+        }
+        let lit = Literal::create_from_shape_and_untyped_data(
+            ElementType::F32,
+            &[3],
+            &bytes,
+        )
+        .unwrap();
+        assert_eq!(lit.element_count(), 3);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), xs);
+        let first: f32 = lit.get_first_element().unwrap();
+        assert_eq!(first, 1.0);
+        assert!(lit.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn literal_round_trip_i32() {
+        let xs = [7i32, -9, i32::MAX];
+        let mut bytes = Vec::new();
+        for &x in &xs {
+            x.write(&mut bytes);
+        }
+        let lit = Literal::create_from_shape_and_untyped_data(
+            ElementType::S32,
+            &[3],
+            &bytes,
+        )
+        .unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), xs);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(Literal::create_from_shape_and_untyped_data(
+            ElementType::F32,
+            &[2],
+            &[0u8; 4],
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn execution_unavailable() {
+        let client = PjRtClient::cpu().unwrap();
+        assert_eq!(client.device_count(), 1);
+        let exe = client.compile(&XlaComputation::from_proto(&HloModuleProto {
+            text: String::new(),
+        }))
+        .unwrap();
+        let e = exe.execute::<Literal>(&[]).unwrap_err();
+        assert!(e.to_string().contains("stub"));
+    }
+}
