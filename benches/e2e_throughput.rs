@@ -10,7 +10,7 @@ use fxpnet::coordinator::trainer::{upd_all, Trainer};
 use fxpnet::data::loader::LoaderCfg;
 use fxpnet::data::synth::Dataset;
 use fxpnet::fixedpoint::QFormat;
-use fxpnet::inference::FixedPointNet;
+use fxpnet::inference::{FixedPointNet, Scratch};
 use fxpnet::model::params::ParamSet;
 use fxpnet::quant::calib::CalibMethod;
 use fxpnet::quant::policy::{NetQuant, WidthSpec};
@@ -92,17 +92,23 @@ fn main() {
             format!("{ms:.1}"),
             format!("{:.0}", b as f64 / (ms / 1e3)),
         ]);
-        // integer engine inference
+        // integer engine inference: batched GEMM path, warm scratch
+        // (zero steady-state allocation), row-blocks over all cores
+        let threads =
+            std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
         let net =
             FixedPointNet::build(&spec, &params, &nq, QFormat::new(16, 14).unwrap())
                 .unwrap();
         let imgs = data.images.gather_rows(&(0..64).collect::<Vec<_>>()).unwrap();
+        let mut scratch = Scratch::for_net(&net, 64, threads);
+        let mut logits = vec![0f32; 64 * spec.num_classes];
         let s = bench(&format!("{arch} int fwd"), 1, 5, || {
-            std::hint::black_box(net.forward_batch(&imgs).unwrap());
+            net.forward_batch_into(&imgs, &mut scratch, threads, &mut logits).unwrap();
+            std::hint::black_box(&logits);
         });
         t.row(vec![
             arch.into(),
-            "integer engine fwd".into(),
+            format!("integer engine fwd ({threads}t GEMM)"),
             format!("{:.1}", s.mean_ms / 64.0),
             format!("{:.0}", 64.0 / (s.mean_ms / 1e3)),
         ]);

@@ -1,0 +1,125 @@
+//! Batched integer-GEMM engine throughput vs the retained direct
+//! per-image reference path, on the CIFAR-shaped fixture net (offline:
+//! no artifacts needed).  Writes `BENCH_engine.json` for CI artifact
+//! upload and asserts the speedup floor under `FXP_BENCH_ASSERT`.
+//!
+//! Scale via:
+//! * `FXP_BENCH_ENGINE_N`       -- batch size (default 32)
+//! * `FXP_BENCH_ENGINE_ITERS`   -- timed iterations per case (default 10)
+//! * `FXP_BENCH_ENGINE_THREADS` -- worker count for the threaded case
+//!   (default: all cores)
+//! * `FXP_BENCH_ASSERT`         -- if set, require batched GEMM (1
+//!   thread) >= 2x the per-image direct path
+
+use fxpnet::bench::fixtures::{env_usize, int_engine_fixture};
+use fxpnet::bench::{bench, Table};
+use fxpnet::data::synth::Dataset;
+use fxpnet::fixedpoint::QFormat;
+use fxpnet::inference::{FixedPointNet, Scratch};
+
+fn main() {
+    fxpnet::util::logging::init();
+    let n = env_usize("FXP_BENCH_ENGINE_N", 32);
+    let iters = env_usize("FXP_BENCH_ENGINE_ITERS", 10);
+    let threads = env_usize(
+        "FXP_BENCH_ENGINE_THREADS",
+        std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1),
+    );
+
+    let (spec, params, nq) = int_engine_fixture(8, 42).expect("fixture");
+    let net = FixedPointNet::build(&spec, &params, &nq, QFormat::new(16, 14).unwrap())
+        .expect("build");
+    let data = Dataset::generate(n, 32, 32, 7);
+    let img_len = 32 * 32 * 3;
+    let nc = net.num_classes();
+
+    // parity guard: the three timed cases must compute the same logits
+    let mut reference = Vec::with_capacity(n * nc);
+    for i in 0..n {
+        reference.extend(
+            net.forward(&data.images.data()[i * img_len..(i + 1) * img_len]).unwrap(),
+        );
+    }
+    let batched = net.forward_batch_threaded(&data.images, threads.max(2)).unwrap();
+    assert_eq!(batched.data(), &reference[..], "GEMM/direct parity");
+
+    let s_direct = bench("direct conv, per image", 1, iters, || {
+        for i in 0..n {
+            std::hint::black_box(
+                net.forward(&data.images.data()[i * img_len..(i + 1) * img_len])
+                    .unwrap(),
+            );
+        }
+    });
+
+    let mut scratch = Scratch::for_net(&net, n, threads);
+    let mut out = vec![0f32; n * nc];
+    let s_gemm1 = bench("GEMM batch, 1 thread", 1, iters, || {
+        net.forward_batch_into(&data.images, &mut scratch, 1, &mut out).unwrap();
+        std::hint::black_box(&out);
+    });
+    let s_gemmt = bench(&format!("GEMM batch, {threads} threads"), 1, iters, || {
+        net.forward_batch_into(&data.images, &mut scratch, threads, &mut out).unwrap();
+        std::hint::black_box(&out);
+    });
+
+    let ips_direct = s_direct.throughput(n as f64);
+    let ips_gemm1 = s_gemm1.throughput(n as f64);
+    let ips_gemmt = s_gemmt.throughput(n as f64);
+    let speedup_1t = ips_gemm1 / ips_direct.max(1e-12);
+    let speedup_mt = ips_gemmt / ips_direct.max(1e-12);
+
+    let mut t = Table::new(
+        &format!("integer engine throughput (batch {n}, {} MMAC/img)",
+            net.macs_per_image() / 1_000_000),
+        &["path", "ms/batch", "img/s", "speedup"],
+    );
+    for (s, ips, sp) in [
+        (&s_direct, ips_direct, 1.0),
+        (&s_gemm1, ips_gemm1, speedup_1t),
+        (&s_gemmt, ips_gemmt, speedup_mt),
+    ] {
+        t.row(vec![
+            s.name.clone(),
+            format!("{:.2}", s.mean_ms),
+            format!("{ips:.0}"),
+            format!("{sp:.2}x"),
+        ]);
+    }
+    println!("{}", t.render());
+
+    let json = format!(
+        "{{\n  \"bench\": \"engine_throughput\",\n  \"arch\": \"{}\",\n  \
+         \"batch\": {n},\n  \"threads\": {threads},\n  \"macs_per_image\": {},\n  \
+         \"direct_img_per_s\": {ips_direct:.2},\n  \
+         \"gemm_1t_img_per_s\": {ips_gemm1:.2},\n  \
+         \"gemm_mt_img_per_s\": {ips_gemmt:.2},\n  \
+         \"speedup_gemm_1t\": {speedup_1t:.3},\n  \
+         \"speedup_gemm_mt\": {speedup_mt:.3}\n}}\n",
+        spec.name,
+        net.macs_per_image(),
+    );
+    // cargo runs bench executables with cwd = the package root (rust/);
+    // anchor the report at the workspace root where CI picks it up
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_engine.json");
+    std::fs::write(&path, &json).expect("write BENCH_engine.json");
+    println!("wrote {}", path.display());
+
+    // FXP_BENCH_ASSERT=1 gates at the CI floor (2x); a numeric value
+    // sets the floor directly (e.g. FXP_BENCH_ASSERT=4 for the paper
+    // acceptance bar on a quiet box)
+    if let Ok(v) = std::env::var("FXP_BENCH_ASSERT") {
+        let floor: f64 = v.parse().ok().filter(|&f| f > 1.0).unwrap_or(2.0);
+        assert!(
+            speedup_1t >= floor,
+            "batched GEMM (1 thread) only {speedup_1t:.2}x the per-image \
+             direct path (need >= {floor}x)"
+        );
+        println!(
+            "FXP_BENCH_ASSERT ok: single-thread GEMM speedup {speedup_1t:.2}x \
+             (floor {floor}x)"
+        );
+    }
+}

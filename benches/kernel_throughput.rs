@@ -1,11 +1,14 @@
 //! L1/L3 kernel microbenches (the section Perf baseline numbers):
-//! host-side quantizer throughput, Tensor<->Literal conversion cost, and
-//! AOT executable latency for eval/stats on the tiny net.
+//! host-side quantizer throughput, the integer GEMM microkernel,
+//! Tensor<->Literal conversion cost, and AOT executable latency for
+//! eval/stats on the tiny net (skipped when artifacts are absent).
 
 use fxpnet::bench::bench;
 use fxpnet::data::synth::Dataset;
 use fxpnet::fixedpoint::vector::quantize_slice;
 use fxpnet::fixedpoint::{QFormat, RoundMode};
+use fxpnet::inference::gemm;
+use fxpnet::inference::packing::PackedPanels;
 use fxpnet::model::params::ParamSet;
 use fxpnet::quant::policy::NetQuant;
 use fxpnet::runtime::literal::{to_literal, HostValue};
@@ -37,6 +40,25 @@ fn main() {
     });
     println!("{s}  -> {:.1} Melem/s", s.throughput(n as f64) / 1e6);
 
+    // integer GEMM microkernel (the conv engine's inner loop):
+    // CIFAR-first-conv-shaped (k = 9*32, n = 32) over 4096 patch rows
+    {
+        let (rows, k, ncol) = (4096usize, 288usize, 32usize);
+        let mut irng = Rng::new(8);
+        let a: Vec<i32> = (0..rows * k).map(|_| irng.below(255) as i32 - 127).collect();
+        let w: Vec<i32> = (0..k * ncol).map(|_| irng.below(255) as i32 - 127).collect();
+        let pw = PackedPanels::pack(&w, k, ncol);
+        let bias: Vec<i64> = (0..ncol).map(|i| i as i64 * 10).collect();
+        let fmt = QFormat::new(8, 4).unwrap();
+        let mut out = vec![0i32; rows * ncol];
+        let s = bench("gemm_requant_relu 4096x288x32", 2, 20, || {
+            gemm::gemm_requant_relu(&a, rows, k, &pw, &bias, 9, fmt, true, &mut out);
+            std::hint::black_box(&out);
+        });
+        let macs = (rows * k * ncol) as f64;
+        println!("{s}  -> {:.2} GMAC/s", s.throughput(macs) / 1e9);
+    }
+
     // Tensor -> Literal conversion (per-step host boundary cost)
     let t = Tensor::from_vec(&[64, 32, 32, 3], xs[..64 * 32 * 32 * 3].to_vec()).unwrap();
     let hv = HostValue::F32(t);
@@ -45,9 +67,12 @@ fn main() {
     });
     println!("{s}");
 
-    // AOT executable latency (tiny arch)
+    // AOT executable latency (tiny arch); needs built artifacts
     let artifacts = std::env::var("FXPNET_ARTIFACTS").unwrap_or("artifacts".into());
-    let engine = Engine::cpu(&artifacts).expect("run `make artifacts` first");
+    let Ok(engine) = Engine::cpu(&artifacts) else {
+        eprintln!("skipping AOT latency section: no {artifacts}/ (run `make artifacts`)");
+        return;
+    };
     let spec = engine.manifest.arch("tiny").unwrap().clone();
     let params = ParamSet::init(&spec, 1);
     let data = Dataset::generate(spec.eval_batch, spec.input[0], spec.input[1], 5);

@@ -12,6 +12,8 @@
 //! * `FXP_BENCH_EVAL_N`   -- eval set size (default 512)
 //! * `FXP_BENCH_CKPT`     -- optional float checkpoint to skip pretraining
 
+use std::collections::BTreeMap;
+
 use crate::coordinator::calibrate;
 use crate::coordinator::config::RunCfg;
 use crate::coordinator::trainer::{upd_all, Trainer};
@@ -19,13 +21,80 @@ use crate::data::loader::LoaderCfg;
 use crate::data::synth::Dataset;
 use crate::error::Result;
 use crate::model::checkpoint::Checkpoint;
+use crate::model::manifest::ArchSpec;
 use crate::model::params::ParamSet;
-use crate::quant::calib::LayerStats;
-use crate::quant::policy::NetQuant;
+use crate::quant::calib::{CalibMethod, LayerStats};
+use crate::quant::policy::{NetQuant, WidthSpec};
 use crate::runtime::Engine;
 
 pub fn env_usize(key: &str, default: usize) -> usize {
     std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// CIFAR-shaped architecture for the integer-engine benches and parity
+/// tests: 32x32x3 -> conv32 -> pool -> conv32 -> pool -> fc10.  Built
+/// directly (no manifest / artifacts / Engine), so it works in the
+/// offline build.
+pub fn int_engine_arch() -> ArchSpec {
+    ArchSpec {
+        name: "cifar-fixture".into(),
+        input: [32, 32, 3],
+        num_classes: 10,
+        num_layers: 3,
+        train_batch: 32,
+        eval_batch: 32,
+        layers: vec![
+            ("conv".into(), 32),
+            ("pool".into(), 0),
+            ("conv".into(), 32),
+            ("pool".into(), 0),
+            ("fc".into(), 10),
+        ],
+        params: vec![
+            ("l0.w".into(), vec![3, 3, 3, 32]),
+            ("l0.b".into(), vec![32]),
+            ("l1.w".into(), vec![3, 3, 32, 32]),
+            ("l1.b".into(), vec![32]),
+            ("l2.w".into(), vec![8 * 8 * 32, 10]),
+            ("l2.b".into(), vec![10]),
+        ],
+        artifacts: BTreeMap::new(),
+    }
+}
+
+/// Resolve any offline arch into a concrete quantization cell:
+/// He-normal params, min-max weight calibration, synthetic activation
+/// ranges (only the resulting formats matter for engine benches/tests,
+/// not calibration fidelity).
+pub fn int_engine_cell(
+    spec: &ArchSpec,
+    bits: u8,
+    seed: u64,
+) -> Result<(ParamSet, NetQuant)> {
+    let params = ParamSet::init(spec, seed);
+    let w_stats = params.weight_stats();
+    let a_stats: Vec<LayerStats> = (0..spec.num_layers)
+        .map(|i| LayerStats {
+            absmax: 3.0 + i as f32,
+            meanabs: 0.8,
+            meansq: 1.2,
+        })
+        .collect();
+    let nq = NetQuant::for_cell(
+        WidthSpec::Bits(bits),
+        WidthSpec::Bits(bits),
+        &w_stats,
+        &a_stats,
+        CalibMethod::MinMax,
+    )?;
+    Ok((params, nq))
+}
+
+/// The CIFAR-shaped fixture resolved to a concrete quantization cell.
+pub fn int_engine_fixture(bits: u8, seed: u64) -> Result<(ArchSpec, ParamSet, NetQuant)> {
+    let spec = int_engine_arch();
+    let (params, nq) = int_engine_cell(&spec, bits, seed)?;
+    Ok((spec, params, nq))
 }
 
 pub fn env_str(key: &str, default: &str) -> String {

@@ -331,21 +331,27 @@ fn infer(args: &Args) -> Result<()> {
     )?;
     let net = FixedPointNet::build(&spec, &params, &nq, QFormat::new(16, 14)?)?;
 
-    // integer path on a slice of the eval set
+    // integer path on a slice of the eval set (batched GEMM engine,
+    // row-blocks sharded over --threads workers; bit-identical logits
+    // for any thread count)
+    let threads = args.usize_or(
+        "threads",
+        std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1),
+    )?;
     let n = args.usize_or("eval-n", 256)?.min(eval_set.len());
     let rows: Vec<usize> = (0..n).collect();
     let images = eval_set.images.gather_rows(&rows)?;
     let labels = eval_set.labels.gather_rows(&rows)?;
     let t = std::time::Instant::now();
-    let int_logits = net.forward_batch(&images)?;
+    let int_logits = net.forward_batch_threaded(&images, threads)?;
     let dt = t.elapsed().as_secs_f64();
     let top1 = int_logits.topk_rows(1)?;
     let wrong = (0..n)
         .filter(|&i| top1[i][0] != labels.data()[i] as usize)
         .count();
     println!(
-        "integer engine: {n} images in {:.2}s ({:.1} img/s, {:.0} MMAC/img), \
-         top-1 error {:.2}%",
+        "integer engine: {n} images in {:.2}s ({:.1} img/s, {:.0} MMAC/img, \
+         {threads} threads), top-1 error {:.2}%",
         dt,
         n as f64 / dt,
         net.macs_per_image() as f64 / 1e6,

@@ -110,6 +110,8 @@ COMMANDS
              --arch A --ckpt F --w {4|8|16|float} --a {4|8|16|float}
   infer      pure-integer inference + parity vs the XLA path
              --arch A --ckpt F --w B --a B [--eval-n N]
+             [--threads N]   GEMM row-block workers (default: all cores;
+                             logits are bit-identical for any count)
   mismatch   per-layer gradient mismatch (section 2.2 analysis)
              --arch A --ckpt F [--bits B]
   table1     print the Proposal 3 phase schedule  [--layers N]

@@ -1,14 +1,17 @@
 //! Held-out evaluation: top-k error and mean loss under a quantization
-//! configuration, via the `eval_batch` executable.
+//! configuration -- via the `eval_batch` executable (the float-simulated
+//! XLA path) or via the pure-integer batched GEMM engine
+//! ([`evaluate_int`]).
 
 use crate::data::loader::sequential_batches;
 use crate::data::synth::Dataset;
 use crate::error::Result;
+use crate::inference::FixedPointNet;
 use crate::model::params::ParamSet;
 use crate::quant::policy::NetQuant;
 use crate::runtime::literal::{to_literal, HostValue};
 use crate::runtime::Engine;
-use crate::tensor::Tensor;
+use crate::tensor::{Tensor, TensorF};
 
 /// Evaluation result.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -34,6 +37,63 @@ impl std::fmt::Display for EvalResult {
 
 fn vec_lit(v: &[f32]) -> Result<xla::Literal> {
     to_literal(&HostValue::F32(Tensor::from_vec(&[v.len()], v.to_vec())?))
+}
+
+/// Accumulate (top-1 misses, top-5 misses, summed softmax NLL) over the
+/// first `valid` rows of a (n, classes) logit matrix -- the one metric
+/// loop shared by the XLA eval path and the integer-engine path.
+fn accumulate_metrics(
+    logits: &TensorF,
+    labels: &[i32],
+    valid: usize,
+) -> Result<(usize, usize, f64)> {
+    let nc = logits.shape()[1];
+    let topk = logits.topk_rows(5)?;
+    let mut top1_wrong = 0usize;
+    let mut top5_wrong = 0usize;
+    let mut loss_sum = 0f64;
+    for i in 0..valid {
+        let y = labels[i] as usize;
+        if topk[i][0] != y {
+            top1_wrong += 1;
+        }
+        if !topk[i].contains(&y) {
+            top5_wrong += 1;
+        }
+        // host-side softmax NLL
+        let row = &logits.data()[i * nc..(i + 1) * nc];
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let z: f64 = row.iter().map(|&v| ((v - m) as f64).exp()).sum();
+        loss_sum += -((row[y] - m) as f64 - z.ln());
+    }
+    Ok((top1_wrong, top5_wrong, loss_sum))
+}
+
+/// Top-1/top-5 error and mean softmax NLL from a (n, classes) logit
+/// matrix against integer labels.
+pub fn metrics_from_logits(logits: &TensorF, labels: &[i32]) -> Result<EvalResult> {
+    let n = logits.shape()[0];
+    debug_assert_eq!(labels.len(), n);
+    let (top1_wrong, top5_wrong, loss_sum) = accumulate_metrics(logits, labels, n)?;
+    Ok(EvalResult {
+        n,
+        top1_err: top1_wrong as f64 / n.max(1) as f64,
+        top5_err: top5_wrong as f64 / n.max(1) as f64,
+        mean_loss: loss_sum / n.max(1) as f64,
+    })
+}
+
+/// Evaluate a built [`FixedPointNet`] on `data` with the pure-integer
+/// batched GEMM engine -- no XLA involvement, runs in the offline build.
+/// `threads` shards GEMM row-blocks; the result is bit-identical for
+/// every thread count.
+pub fn evaluate_int(
+    net: &FixedPointNet,
+    data: &Dataset,
+    threads: usize,
+) -> Result<EvalResult> {
+    let logits = net.forward_batch_threaded(&data.images, threads)?;
+    metrics_from_logits(&logits, data.labels.data())
 }
 
 /// Evaluate `params` on `data` under `nq`.
@@ -63,7 +123,6 @@ pub fn evaluate(
         .map(|t| to_literal(&HostValue::F32(t.clone())))
         .collect::<Result<_>>()?;
 
-    let nc = spec.num_classes;
     let mut n_total = 0usize;
     let mut top1_wrong = 0usize;
     let mut top5_wrong = 0usize;
@@ -78,24 +137,12 @@ pub fn evaluate(
         inputs.extend(cfg.iter());
         let outs = exe.run_literals(&inputs)?;
         let logits = exe.output_host(&outs, "logits")?.into_f32()?;
-        // loss_sum from the executable includes padded rows; recompute the
-        // padded-row contribution is avoidable by only using logits for
-        // error and computing loss host-side for valid rows:
-        let topk = logits.topk_rows(5)?;
-        for i in 0..valid {
-            let y = labels.data()[i] as usize;
-            if topk[i][0] != y {
-                top1_wrong += 1;
-            }
-            if !topk[i].contains(&y) {
-                top5_wrong += 1;
-            }
-            // host-side softmax NLL for the valid rows
-            let row = &logits.data()[i * nc..(i + 1) * nc];
-            let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-            let z: f64 = row.iter().map(|&v| ((v - m) as f64).exp()).sum();
-            loss_sum += -((row[y] - m) as f64 - z.ln());
-        }
+        // loss_sum from the executable includes padded rows; avoid that
+        // by scoring only the `valid` rows host-side
+        let (t1, t5, ls) = accumulate_metrics(&logits, labels.data(), valid)?;
+        top1_wrong += t1;
+        top5_wrong += t5;
+        loss_sum += ls;
         n_total += valid;
     }
     Ok(EvalResult {

@@ -7,7 +7,7 @@
 //! One JSON file per (regime, arch, base seed) sweep:
 //!
 //! ```json
-//! {"version": 1, "arch": "paper12", "regime_tag": 3, "base_seed": "42",
+//! {"version": 2, "arch": "paper12", "regime_tag": 3, "base_seed": "42",
 //!  "cells": {"w=8,a=4": {"status": "ok", "n": 2048,
 //!                         "top1_err": 0.334, "top5_err": 0.071,
 //!                         "loss": 1.207},
@@ -86,6 +86,12 @@ pub fn save_grid(g: &GridResult, dir: impl AsRef<Path>, topk: usize) -> Result<(
     Ok(())
 }
 
+/// Cell-cache schema/stream version.  Bump whenever cached results stop
+/// being comparable with freshly-computed ones -- e.g. v2: the Rng
+/// stream changed (Lemire `below`, integer stochastic-requantize
+/// dither), so v1 cells must not union with v2 sweeps under `--resume`.
+const CACHE_VERSION: usize = 2;
+
 /// Persistent per-cell results of one sweep (see the module docs for the
 /// on-disk format).
 #[derive(Debug)]
@@ -154,7 +160,7 @@ impl CellCache {
     /// Returns Ok(false) on a header mismatch.
     fn parse_into(&mut self, text: &str) -> Result<bool> {
         let j = Json::parse(text)?;
-        if j.get("version")?.as_usize()? != 1
+        if j.get("version")?.as_usize()? != CACHE_VERSION
             || j.get("arch")?.as_str()? != self.arch
             || j.get("regime_tag")?.as_usize()? as u64 != self.regime_tag
             || j.get("base_seed")?.as_str()?.parse::<u64>().ok()
@@ -234,7 +240,7 @@ impl CellCache {
             cells.insert(key.clone(), cell);
         }
         Json::obj(vec![
-            ("version", Json::from(1usize)),
+            ("version", Json::from(CACHE_VERSION)),
             ("arch", Json::Str(self.arch.clone())),
             ("regime_tag", Json::from(self.regime_tag as usize)),
             ("base_seed", Json::Str(self.base_seed.to_string())),

@@ -98,8 +98,14 @@ impl WideAcc {
                 }
                 RoundMode::Floor => self.acc >> shift,
                 RoundMode::Stochastic => {
-                    let u = rng.expect("stochastic needs rng").uniform();
-                    let frac_units = (u * (1i128 << shift) as f64) as i128;
+                    // draw the additive dither as an *integer* uniform in
+                    // [0, 2^shift): a f64 draw scaled by 2^shift only has
+                    // 53 mantissa bits, so for shift > 53 it could never
+                    // set the low bits and the rounding went subtly
+                    // deterministic in them
+                    debug_assert!(shift < 128, "requantize shift {shift} too wide");
+                    let frac_units =
+                        rng.expect("stochastic needs rng").bits128(shift as u32) as i128;
                     (self.acc + frac_units) >> shift
                 }
             }
@@ -207,6 +213,39 @@ mod tests {
         let mut acc = WideAcc::zero(8);
         acc.add_f32(0.125);
         assert_eq!(acc.acc, 32);
+    }
+
+    #[test]
+    fn stochastic_requantize_unbiased_at_wide_shift() {
+        // shift = 60 (> 53): the old f64-scaled draw lost the low bits of
+        // the dither; the integer draw must stay unbiased and in-range.
+        let mut rng = Rng::new(77);
+        let out_fmt = q(8, 0);
+        // value 2.5 placed exactly on a frac-60 accumulator grid
+        let acc = WideAcc { acc: 5i128 << 59, frac: 60 };
+        let mut sum = 0i64;
+        let n = 20000;
+        for _ in 0..n {
+            let c = acc.requantize(out_fmt, RoundMode::Stochastic, Some(&mut rng)).code;
+            assert!(c == 2 || c == 3, "{c}");
+            sum += c;
+        }
+        let mean = sum as f64 / n as f64;
+        assert!((mean - 2.5).abs() < 0.02, "{mean}");
+    }
+
+    #[test]
+    fn stochastic_requantize_deterministic_per_seed() {
+        let acc = WideAcc { acc: (3i128 << 70) + 12345, frac: 72 };
+        let fmt = q(16, 4);
+        let mut a = Rng::new(5);
+        let mut b = Rng::new(5);
+        for _ in 0..100 {
+            assert_eq!(
+                acc.requantize(fmt, RoundMode::Stochastic, Some(&mut a)).code,
+                acc.requantize(fmt, RoundMode::Stochastic, Some(&mut b)).code
+            );
+        }
     }
 
     #[test]

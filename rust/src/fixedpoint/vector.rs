@@ -31,11 +31,19 @@ pub fn quantize_slice(
             }
         }
         RoundMode::Stochastic => {
+            // block-buffered dither: one fill_uniform call per 256
+            // elements instead of one uniform() call each -- the same
+            // draw stream, so results are bit-identical to the scalar
+            // loop, but the rounding loop below stays branch-free
             let rng = rng.as_mut().expect("stochastic needs rng");
-            for x in xs.iter_mut() {
-                let u = rng.uniform();
-                let code = ((*x as f64) * inv + u).floor().clamp(lo, hi);
-                *x = (code * step as f64) as f32;
+            let mut us = [0f64; 256];
+            for chunk in xs.chunks_mut(256) {
+                let dither = &mut us[..chunk.len()];
+                rng.fill_uniform(dither);
+                for (x, &u) in chunk.iter_mut().zip(dither.iter()) {
+                    let code = ((*x as f64) * inv + u).floor().clamp(lo, hi);
+                    *x = (code * step as f64) as f32;
+                }
             }
         }
     }
@@ -68,12 +76,22 @@ pub fn decode(codes: &[i64], fmt: QFormat) -> Vec<f32> {
 /// Signal-to-quantization-noise ratio in dB of representing `xs` in `fmt`.
 /// This is the objective the SQNR-optimal calibration (quant/calib.rs)
 /// maximises, after Lin et al., ICML 2016.
+///
+/// Single pass, no intermediate buffer: each element is quantized on the
+/// fly with the same nearest-half-up arithmetic as [`quantize_slice`]
+/// (identical numerics), and only the two running sums are kept.  The
+/// SQNR-optimal calibration calls this once per candidate format per
+/// layer, so the allocation it used to make was a hot one.
 pub fn sqnr_db(xs: &[f32], fmt: QFormat) -> f64 {
+    let step = fmt.step();
+    let inv = 1.0 / step as f64;
+    let (lo, hi) = (fmt.qmin() as f64, fmt.qmax() as f64);
     let mut sig = 0.0f64;
     let mut noise = 0.0f64;
-    let q = quantized(xs, fmt, RoundMode::NearestHalfUp, None);
-    for (&x, &xq) in xs.iter().zip(&q) {
+    for &x in xs {
         sig += (x as f64) * (x as f64);
+        let code = ((x as f64) * inv + 0.5).floor().clamp(lo, hi);
+        let xq = (code * step as f64) as f32;
         let d = (x - xq) as f64;
         noise += d * d;
     }
@@ -186,6 +204,50 @@ mod tests {
             .iter()
             .filter(|&&(x, _, _)| x < -0.3)
             .all(|&(_, e, _)| e == 0.0));
+    }
+
+    #[test]
+    fn stochastic_block_buffering_keeps_the_stream() {
+        // the 256-block fill_uniform path must consume the rng exactly as
+        // the old per-element loop did (lengths straddle block edges)
+        for n in [1usize, 255, 256, 257, 1000] {
+            let mut rng = Rng::new(41);
+            let fmt = q(8, 3);
+            let xs: Vec<f32> = (0..n).map(|i| (i as f32 * 0.37).sin() * 5.0).collect();
+            let got = quantized(&xs, fmt, RoundMode::Stochastic, Some(&mut rng));
+            // reference: scalar draws from an identical rng
+            let mut rref = Rng::new(41);
+            let step = fmt.step() as f64;
+            let inv = 1.0 / step;
+            let want: Vec<f32> = xs
+                .iter()
+                .map(|&x| {
+                    let u = rref.uniform();
+                    let code = (x as f64 * inv + u)
+                        .floor()
+                        .clamp(fmt.qmin() as f64, fmt.qmax() as f64);
+                    (code * step) as f32
+                })
+                .collect();
+            assert_eq!(got, want, "n={n}");
+        }
+    }
+
+    #[test]
+    fn sqnr_single_pass_matches_quantized_reference() {
+        let mut rng = Rng::new(6);
+        let xs: Vec<f32> = (0..3000).map(|_| rng.normal() as f32 * 2.0).collect();
+        for fmt in [q(4, 2), q(8, 4), q(16, 10), q(8, -1)] {
+            let q = quantized(&xs, fmt, RoundMode::NearestHalfUp, None);
+            let (mut sig, mut noise) = (0f64, 0f64);
+            for (&x, &xq) in xs.iter().zip(&q) {
+                sig += (x as f64) * (x as f64);
+                let d = (x - xq) as f64;
+                noise += d * d;
+            }
+            let want = 10.0 * (sig / noise).log10();
+            assert_eq!(sqnr_db(&xs, fmt), want, "{fmt}");
+        }
     }
 
     #[test]

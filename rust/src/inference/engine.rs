@@ -1,34 +1,70 @@
 //! The network-level integer engine: build from (arch, params, formats),
 //! run images to logits.
+//!
+//! Two execution paths share one set of quantized weights:
+//!
+//! * [`FixedPointNet::forward`] -- the retained direct-convolution
+//!   reference: one image, naive 3x3 loops, allocating.  It exists as
+//!   the semantic ground truth the fast path is pinned against
+//!   (rust/tests/engine_gemm_parity.rs) and as the baseline the
+//!   engine-throughput bench measures speedups over.
+//! * [`FixedPointNet::forward_batch_into`] -- the batched GEMM engine:
+//!   the whole (N, H, W, C) batch runs layer-by-layer, each conv as one
+//!   im2col + panel-packed GEMM over `N*H*W` patch rows with a fused
+//!   bias/requantize/ReLU epilogue, each FC as a GEMM over `N` rows.
+//!   All working memory lives in a caller-owned [`Scratch`] arena, so
+//!   steady-state forwards do zero heap allocation, and GEMM row-blocks
+//!   shard across `std::thread::scope` workers.  The path is pure
+//!   integer, so results are bit-identical for any batch size, block
+//!   size, or thread count.
+//!
+//! Weight panels are packed once at [`FixedPointNet::build`]; biases are
+//! converted to the i64 accumulator grid once per layer (the per-layer
+//! accumulator fractional length is a build-time constant: input format
+//! and every activation format are fixed at build).
 
 use crate::error::{FxpError, Result};
 use crate::fixedpoint::QFormat;
+use crate::inference::gemm;
 use crate::inference::ops;
+use crate::inference::packing::{self, PackedPanels};
 use crate::model::manifest::ArchSpec;
 use crate::model::params::ParamSet;
 use crate::quant::policy::NetQuant;
 use crate::tensor::{Tensor, TensorF};
 
+/// Patch rows extracted per im2col + GEMM block: bounds the per-thread
+/// scratch to `ROW_BLOCK * 9 * cin` codes and keeps a block resident in
+/// L2 while its GEMM runs.
+const ROW_BLOCK: usize = 64;
+
+/// One weighted (conv or fc) layer, ready for both paths.
+struct Dense {
+    /// raw weight codes -- (3, 3, cin, cout) for conv, (n_in, n_out) for
+    /// fc -- used by the direct reference path
+    w_codes: Vec<i32>,
+    /// the same codes as NR-column panels for the GEMM path
+    packed: PackedPanels,
+    /// GEMM reduction length: 9*cin (conv) or n_in (fc)
+    k: usize,
+    /// output channels / units
+    n_out: usize,
+    /// input channels (conv only; 0 for fc)
+    cin: usize,
+    /// float bias (reference path re-derives the accumulator bias)
+    bias: Vec<f32>,
+    /// bias on the i64 accumulator grid (fused into the GEMM epilogue)
+    bias_acc: Vec<i64>,
+    /// accumulator fractional length: in_fmt.frac + w_fmt.frac
+    acc_frac: i32,
+    a_fmt: Option<QFormat>,
+    relu: bool,
+}
+
 enum Layer {
-    Conv {
-        w_codes: Vec<i32>,
-        cin: usize,
-        cout: usize,
-        bias: Vec<f32>,
-        w_fmt: QFormat,
-        a_fmt: Option<QFormat>,
-        relu: bool,
-    },
+    Conv(Dense),
     Pool,
-    Fc {
-        w_codes: Vec<i32>,
-        n_in: usize,
-        n_out: usize,
-        bias: Vec<f32>,
-        w_fmt: QFormat,
-        a_fmt: Option<QFormat>,
-        relu: bool,
-    },
+    Fc(Dense),
 }
 
 /// A fully-quantized network ready for integer-only inference.
@@ -39,6 +75,46 @@ pub struct FixedPointNet {
     in_w: usize,
     in_c: usize,
     num_classes: usize,
+}
+
+/// Reusable working memory for [`FixedPointNet::forward_batch_into`]:
+/// two ping-pong activation planes and per-thread im2col patch blocks.
+/// Buffers grow on first use (or via [`Scratch::for_net`]) and are
+/// reused verbatim afterwards -- a warm scratch makes
+/// `forward_batch_into` allocation-free.
+#[derive(Default)]
+pub struct Scratch {
+    act_a: Vec<i32>,
+    act_b: Vec<i32>,
+    patches: Vec<i32>,
+}
+
+impl Scratch {
+    pub fn new() -> Scratch {
+        Scratch::default()
+    }
+
+    /// Pre-size every buffer for `batch`-image forwards of `net` with
+    /// `threads` workers, so the first forward is already allocation-free.
+    pub fn for_net(net: &FixedPointNet, batch: usize, threads: usize) -> Scratch {
+        let mut s = Scratch::new();
+        s.ensure(net, batch, threads);
+        s
+    }
+
+    fn ensure(&mut self, net: &FixedPointNet, batch: usize, threads: usize) {
+        let acts = net.act_capacity(batch);
+        if self.act_a.len() < acts {
+            self.act_a.resize(acts, 0);
+        }
+        if self.act_b.len() < acts {
+            self.act_b.resize(acts, 0);
+        }
+        let patches = threads.max(1) * ROW_BLOCK * net.max_conv_k();
+        if self.patches.len() < patches {
+            self.patches.resize(patches, 0);
+        }
+    }
 }
 
 fn encode_weights(w: &TensorF, fmt: QFormat) -> Vec<i32> {
@@ -70,6 +146,7 @@ impl FixedPointNet {
         let mut layers = Vec::new();
         let mut li = 0usize;
         let l_last = arch.num_layers - 1;
+        let mut fmt = input_fmt;
         for (kind, _out) in &arch.layers {
             match kind.as_str() {
                 "pool" => layers.push(Layer::Pool),
@@ -91,28 +168,38 @@ impl FixedPointNet {
                     }
                     let relu = li < l_last;
                     let w_codes = encode_weights(w, w_fmt);
-                    if kind == "conv" {
-                        let s = w.shape();
-                        layers.push(Layer::Conv {
-                            w_codes,
-                            cin: s[2],
-                            cout: s[3],
-                            bias: b.data().to_vec(),
-                            w_fmt,
-                            a_fmt,
-                            relu,
-                        });
+                    let s = w.shape().to_vec();
+                    let (k, n_out, cin) = if kind == "conv" {
+                        (9 * s[2], s[3], s[2])
                     } else {
-                        let s = w.shape();
-                        layers.push(Layer::Fc {
-                            w_codes,
-                            n_in: s[0],
-                            n_out: s[1],
-                            bias: b.data().to_vec(),
-                            w_fmt,
-                            a_fmt,
-                            relu,
-                        });
+                        (s[0], s[1], 0)
+                    };
+                    let acc_frac = fmt.frac as i32 + w_fmt.frac as i32;
+                    let bias_acc: Vec<i64> = b
+                        .data()
+                        .iter()
+                        .map(|&bv| ops::bias_to_acc(bv, acc_frac))
+                        .collect();
+                    let packed = PackedPanels::pack(&w_codes, k, n_out);
+                    let dense = Dense {
+                        w_codes,
+                        packed,
+                        k,
+                        n_out,
+                        cin,
+                        bias: b.data().to_vec(),
+                        bias_acc,
+                        acc_frac,
+                        a_fmt,
+                        relu,
+                    };
+                    layers.push(if kind == "conv" {
+                        Layer::Conv(dense)
+                    } else {
+                        Layer::Fc(dense)
+                    });
+                    if let Some(af) = a_fmt {
+                        fmt = af;
                     }
                     li += 1;
                 }
@@ -131,7 +218,54 @@ impl FixedPointNet {
         })
     }
 
-    /// Forward one image (h*w*c floats in [0,1]) to f32 logits.
+    pub fn num_classes(&self) -> usize {
+        self.num_classes
+    }
+
+    /// Input image shape (h, w, c).
+    pub fn input_shape(&self) -> (usize, usize, usize) {
+        (self.in_h, self.in_w, self.in_c)
+    }
+
+    /// Largest activation plane (in codes) any layer boundary needs for a
+    /// `batch`-image forward.
+    fn act_capacity(&self, batch: usize) -> usize {
+        let (mut h, mut w) = (self.in_h, self.in_w);
+        let mut c = self.in_c;
+        let mut cap = batch * h * w * c;
+        for layer in &self.layers {
+            match layer {
+                Layer::Pool => {
+                    h /= 2;
+                    w /= 2;
+                }
+                Layer::Conv(d) => c = d.n_out,
+                Layer::Fc(d) => {
+                    h = 1;
+                    w = 1;
+                    c = d.n_out;
+                }
+            }
+            cap = cap.max(batch * h * w * c);
+        }
+        cap
+    }
+
+    /// Widest im2col row (9*cin) over the conv layers.
+    fn max_conv_k(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| match l {
+                Layer::Conv(d) => d.k,
+                _ => 0,
+            })
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Forward one image (h*w*c floats in [0,1]) to f32 logits via the
+    /// direct per-image reference path (naive convolution, allocating).
+    /// The batched GEMM path is pinned bit-for-bit against this.
     pub fn forward(&self, image: &[f32]) -> Result<Vec<f32>> {
         if image.len() != self.in_h * self.in_w * self.in_c {
             return Err(FxpError::shape(format!(
@@ -145,7 +279,6 @@ impl FixedPointNet {
         let mut codes = ops::encode(image, self.input_fmt);
         let mut fmt = self.input_fmt;
         let (mut h, mut w) = (self.in_h, self.in_w);
-        let mut flat = false;
         for layer in &self.layers {
             match layer {
                 Layer::Pool => {
@@ -155,42 +288,53 @@ impl FixedPointNet {
                     h = oh;
                     w = ow;
                 }
-                Layer::Conv { w_codes, cin, cout, bias, w_fmt, a_fmt, relu } => {
-                    debug_assert!(!flat);
-                    let acc_frac = fmt.frac as i32 + w_fmt.frac as i32;
+                Layer::Conv(d) => {
+                    if codes.len() != h * w * d.cin {
+                        return Err(FxpError::shape(format!(
+                            "conv expects {}x{}x{} codes, got {}",
+                            h,
+                            w,
+                            d.cin,
+                            codes.len()
+                        )));
+                    }
                     let acc = ops::conv3x3_acc(
-                        &codes, h, w, *cin, w_codes, *cout, bias, acc_frac,
+                        &codes,
+                        h,
+                        w,
+                        d.cin,
+                        &d.w_codes,
+                        d.n_out,
+                        &d.bias,
+                        d.acc_frac,
                     );
-                    match a_fmt {
+                    match d.a_fmt {
                         Some(af) => {
-                            codes = ops::requant_relu(&acc, acc_frac, *af, *relu);
-                            fmt = *af;
+                            codes = ops::requant_relu(&acc, d.acc_frac, af, d.relu);
+                            fmt = af;
                         }
                         None => {
                             // float head on a conv would need f32 logits;
                             // only valid as the last layer (checked in build)
-                            return Ok(ops::decode_acc(&acc, acc_frac));
+                            return Ok(ops::decode_acc(&acc, d.acc_frac));
                         }
                     }
                 }
-                Layer::Fc { w_codes, n_in, n_out, bias, w_fmt, a_fmt, relu } => {
-                    if !flat {
-                        flat = true; // NHWC flatten order matches jnp.reshape
-                    }
-                    if codes.len() != *n_in {
+                Layer::Fc(d) => {
+                    if codes.len() != d.k {
                         return Err(FxpError::shape(format!(
-                            "fc expects {n_in} inputs, got {}",
+                            "fc expects {} inputs, got {}",
+                            d.k,
                             codes.len()
                         )));
                     }
-                    let acc_frac = fmt.frac as i32 + w_fmt.frac as i32;
-                    let acc = ops::fc_acc(&codes, w_codes, *n_out, bias, acc_frac);
-                    match a_fmt {
+                    let acc = ops::fc_acc(&codes, &d.w_codes, d.n_out, &d.bias, d.acc_frac);
+                    match d.a_fmt {
                         Some(af) => {
-                            codes = ops::requant_relu(&acc, acc_frac, *af, *relu);
-                            fmt = *af;
+                            codes = ops::requant_relu(&acc, d.acc_frac, af, d.relu);
+                            fmt = af;
                         }
-                        None => return Ok(ops::decode_acc(&acc, acc_frac)),
+                        None => return Ok(ops::decode_acc(&acc, d.acc_frac)),
                     }
                 }
             }
@@ -200,22 +344,191 @@ impl FixedPointNet {
     }
 
     /// Forward a batch tensor (n, h, w, c); returns (n, classes) logits.
+    /// Runs the batched GEMM engine single-threaded with a throwaway
+    /// scratch; for steady-state/threaded use, hold a [`Scratch`] and
+    /// call [`forward_batch_into`](Self::forward_batch_into) or
+    /// [`forward_batch_threaded`](Self::forward_batch_threaded).
     pub fn forward_batch(&self, images: &TensorF) -> Result<TensorF> {
-        let n = images.shape()[0];
-        let img_len = self.in_h * self.in_w * self.in_c;
-        let mut out = Vec::with_capacity(n * self.num_classes);
-        for i in 0..n {
-            let logits = self.forward(&images.data()[i * img_len..(i + 1) * img_len])?;
-            if logits.len() != self.num_classes {
-                return Err(FxpError::shape(format!(
-                    "engine produced {} logits, expected {}",
-                    logits.len(),
-                    self.num_classes
-                )));
-            }
-            out.extend_from_slice(&logits);
-        }
+        self.forward_batch_threaded(images, 1)
+    }
+
+    /// Forward a batch with `threads` GEMM row-block workers.  Results
+    /// are bit-identical for every thread count (pure integer path).
+    pub fn forward_batch_threaded(
+        &self,
+        images: &TensorF,
+        threads: usize,
+    ) -> Result<TensorF> {
+        let n = images.shape().first().copied().unwrap_or(0);
+        let mut scratch = Scratch::new();
+        let mut out = vec![0f32; n * self.num_classes];
+        self.forward_batch_into(images, &mut scratch, threads, &mut out)?;
         Tensor::from_vec(&[n, self.num_classes], out)
+    }
+
+    /// The zero-allocation batched forward: whole-batch layer-by-layer
+    /// GEMM execution into caller-owned buffers.  `out` receives the
+    /// (n, classes) logits row-major.  With a warm `scratch` this
+    /// performs no heap allocation.
+    pub fn forward_batch_into(
+        &self,
+        images: &TensorF,
+        scratch: &mut Scratch,
+        threads: usize,
+        out: &mut [f32],
+    ) -> Result<()> {
+        let shape = images.shape();
+        if shape.is_empty() {
+            return Err(FxpError::shape("forward_batch: scalar input"));
+        }
+        let n = shape[0];
+        let img_len = self.in_h * self.in_w * self.in_c;
+        if images.len() != n * img_len {
+            return Err(FxpError::shape(format!(
+                "batch len {} != {n}x{}x{}x{}",
+                images.len(),
+                self.in_h,
+                self.in_w,
+                self.in_c
+            )));
+        }
+        if out.len() != n * self.num_classes {
+            return Err(FxpError::shape(format!(
+                "logit buffer len {} != {n}x{}",
+                out.len(),
+                self.num_classes
+            )));
+        }
+        if n == 0 {
+            return Ok(());
+        }
+        let threads = threads.max(1);
+        scratch.ensure(self, n, threads);
+        let Scratch { act_a, act_b, patches } = scratch;
+        let (mut src, mut dst): (&mut [i32], &mut [i32]) =
+            (&mut act_a[..], &mut act_b[..]);
+
+        ops::encode_into(images.data(), self.input_fmt, &mut src[..n * img_len]);
+        let (mut h, mut w) = (self.in_h, self.in_w);
+        let mut c = self.in_c;
+        let mut fmt = self.input_fmt;
+        for layer in &self.layers {
+            match layer {
+                Layer::Pool => {
+                    let (oh, ow) = ops::maxpool2_batch_into(
+                        &src[..n * h * w * c],
+                        n,
+                        h,
+                        w,
+                        c,
+                        &mut dst[..n * (h / 2) * (w / 2) * c],
+                    );
+                    h = oh;
+                    w = ow;
+                    std::mem::swap(&mut src, &mut dst);
+                }
+                Layer::Conv(d) => {
+                    if c != d.cin {
+                        return Err(FxpError::shape(format!(
+                            "conv expects {} channels, got {c}",
+                            d.cin
+                        )));
+                    }
+                    let rows = n * h * w;
+                    match d.a_fmt {
+                        Some(af) => {
+                            conv_gemm(
+                                d,
+                                &src[..rows * c],
+                                n,
+                                h,
+                                w,
+                                threads,
+                                &mut patches[..],
+                                ConvOut::Codes {
+                                    out: &mut dst[..rows * d.n_out],
+                                    fmt: af,
+                                },
+                            );
+                            c = d.n_out;
+                            fmt = af;
+                            std::mem::swap(&mut src, &mut dst);
+                        }
+                        None => {
+                            // float conv head: only shape-valid when the
+                            // remaining plane is exactly the logit matrix
+                            if rows * d.n_out != n * self.num_classes {
+                                return Err(FxpError::shape(format!(
+                                    "conv head produces {} logits/image, \
+                                     expected {}",
+                                    h * w * d.n_out,
+                                    self.num_classes
+                                )));
+                            }
+                            conv_gemm(
+                                d,
+                                &src[..rows * c],
+                                n,
+                                h,
+                                w,
+                                threads,
+                                &mut patches[..],
+                                ConvOut::Floats(&mut out[..]),
+                            );
+                            return Ok(());
+                        }
+                    }
+                }
+                Layer::Fc(d) => {
+                    let k = h * w * c;
+                    if k != d.k {
+                        return Err(FxpError::shape(format!(
+                            "fc expects {} inputs, got {k}",
+                            d.k
+                        )));
+                    }
+                    match d.a_fmt {
+                        Some(af) => {
+                            fc_gemm(
+                                d,
+                                &src[..n * k],
+                                n,
+                                threads,
+                                ConvOut::Codes {
+                                    out: &mut dst[..n * d.n_out],
+                                    fmt: af,
+                                },
+                            );
+                            h = 1;
+                            w = 1;
+                            c = d.n_out;
+                            fmt = af;
+                            std::mem::swap(&mut src, &mut dst);
+                        }
+                        None => {
+                            if d.n_out != self.num_classes {
+                                return Err(FxpError::shape(format!(
+                                    "fc head produces {} logits, expected {}",
+                                    d.n_out, self.num_classes
+                                )));
+                            }
+                            fc_gemm(d, &src[..n * k], n, threads, ConvOut::Floats(&mut out[..]));
+                            return Ok(());
+                        }
+                    }
+                }
+            }
+        }
+        // all layers quantized including head: decode final codes
+        if n * h * w * c != n * self.num_classes {
+            return Err(FxpError::shape(format!(
+                "network leaves {} values/image, expected {} logits",
+                h * w * c,
+                self.num_classes
+            )));
+        }
+        ops::decode_into(&src[..n * self.num_classes], fmt, out);
+        Ok(())
     }
 
     /// Rough multiply count per image (for the Figure 1 bench).
@@ -228,14 +541,176 @@ impl FixedPointNet {
                     h /= 2;
                     w /= 2;
                 }
-                Layer::Conv { cin, cout, .. } => {
-                    macs += h * w * 9 * cin * cout;
+                Layer::Conv(d) => {
+                    macs += h * w * d.k * d.n_out;
                 }
-                Layer::Fc { n_in, n_out, .. } => {
-                    macs += n_in * n_out;
+                Layer::Fc(d) => {
+                    macs += d.k * d.n_out;
                 }
             }
         }
         macs
+    }
+}
+
+/// Where a GEMM layer writes: requantized codes or decoded f32 logits.
+enum ConvOut<'a> {
+    Codes { out: &'a mut [i32], fmt: QFormat },
+    Floats(&'a mut [f32]),
+}
+
+/// Split `total` rows into per-worker contiguous ranges and run `work`
+/// on each (inline when a single worker suffices).  `work` receives
+/// `(first_row, out_chunk, patch_chunk)`.
+#[allow(clippy::too_many_arguments)]
+fn shard_rows<E: Send, W>(
+    total: usize,
+    n_out: usize,
+    threads: usize,
+    patch_per: usize,
+    out: &mut [E],
+    patches: &mut [i32],
+    work: W,
+) where
+    W: Fn(usize, &mut [E], &mut [i32]) + Sync,
+{
+    let threads = threads.max(1).min(total.max(1));
+    let rows_per = total.div_ceil(threads);
+    if threads == 1 {
+        work(0, &mut out[..total * n_out], &mut patches[..patch_per]);
+        return;
+    }
+    std::thread::scope(|s| {
+        let mut out_rem: &mut [E] = out;
+        let mut patch_rem: &mut [i32] = patches;
+        let mut row0 = 0usize;
+        while row0 < total {
+            let rows = rows_per.min(total - row0);
+            let (out_chunk, orest) = out_rem.split_at_mut(rows * n_out);
+            out_rem = orest;
+            let (patch_chunk, prest) = patch_rem.split_at_mut(patch_per);
+            patch_rem = prest;
+            let r0 = row0;
+            row0 += rows;
+            if row0 < total {
+                let work = &work;
+                s.spawn(move || work(r0, out_chunk, patch_chunk));
+            } else {
+                // last chunk runs on the calling thread, which would
+                // otherwise idle at the scope join -- one fewer spawn
+                // per layer
+                work(r0, out_chunk, patch_chunk);
+            }
+        }
+    });
+}
+
+/// One worker's share of a conv layer: walk `ROW_BLOCK`-row blocks,
+/// im2col each into the worker's patch scratch, and hand the block to
+/// the fused-epilogue GEMM `g`.
+#[allow(clippy::too_many_arguments)]
+fn conv_worker<E, G: Fn(&[i32], usize, &mut [E])>(
+    d: &Dense,
+    src: &[i32],
+    n: usize,
+    h: usize,
+    w: usize,
+    row0: usize,
+    out: &mut [E],
+    patch: &mut [i32],
+    g: &G,
+) {
+    let rows = out.len() / d.n_out;
+    let mut r = 0usize;
+    while r < rows {
+        let block = ROW_BLOCK.min(rows - r);
+        let pb = &mut patch[..block * d.k];
+        packing::im2col_rows(src, n, h, w, d.cin, row0 + r, block, pb);
+        g(pb, block, &mut out[r * d.n_out..(r + block) * d.n_out]);
+        r += block;
+    }
+}
+
+/// One conv layer over the whole batch: blocked im2col + GEMM with the
+/// fused epilogue, sharded over row-blocks of the (n*h*w) patch matrix.
+#[allow(clippy::too_many_arguments)]
+fn conv_gemm(
+    d: &Dense,
+    src: &[i32],
+    n: usize,
+    h: usize,
+    w: usize,
+    threads: usize,
+    patches: &mut [i32],
+    out: ConvOut<'_>,
+) {
+    let total = n * h * w;
+    let patch_per = ROW_BLOCK * d.k;
+    match out {
+        ConvOut::Codes { out, fmt } => {
+            let g = |pb: &[i32], block: usize, ob: &mut [i32]| {
+                gemm::gemm_requant_relu(
+                    pb,
+                    block,
+                    d.k,
+                    &d.packed,
+                    &d.bias_acc,
+                    d.acc_frac,
+                    fmt,
+                    d.relu,
+                    ob,
+                );
+            };
+            shard_rows(total, d.n_out, threads, patch_per, out, patches, |row0, o, p| {
+                conv_worker(d, src, n, h, w, row0, o, p, &g);
+            });
+        }
+        ConvOut::Floats(out) => {
+            let g = |pb: &[i32], block: usize, ob: &mut [f32]| {
+                gemm::gemm_decode(pb, block, d.k, &d.packed, &d.bias_acc, d.acc_frac, ob);
+            };
+            shard_rows(total, d.n_out, threads, patch_per, out, patches, |row0, o, p| {
+                conv_worker(d, src, n, h, w, row0, o, p, &g);
+            });
+        }
+    }
+}
+
+/// One fc layer over the whole batch: the activation matrix is already
+/// the GEMM A operand (NHWC flatten == row-major), so workers slice it
+/// directly -- no im2col, no patch scratch.
+fn fc_gemm(d: &Dense, src: &[i32], n: usize, threads: usize, out: ConvOut<'_>) {
+    let mut no_patches: [i32; 0] = [];
+    match out {
+        ConvOut::Codes { out, fmt } => {
+            shard_rows(n, d.n_out, threads, 0, out, &mut no_patches[..], |row0, o, _| {
+                let rows = o.len() / d.n_out;
+                gemm::gemm_requant_relu(
+                    &src[row0 * d.k..(row0 + rows) * d.k],
+                    rows,
+                    d.k,
+                    &d.packed,
+                    &d.bias_acc,
+                    d.acc_frac,
+                    fmt,
+                    d.relu,
+                    o,
+                );
+            });
+        }
+        ConvOut::Floats(out) => {
+            shard_rows(n, d.n_out, threads, 0, out, &mut no_patches[..], |row0, o, _| {
+                let rows = o.len() / d.n_out;
+                gemm::gemm_decode(
+                    &src[row0 * d.k..(row0 + rows) * d.k],
+                    rows,
+                    d.k,
+                    &d.packed,
+                    &d.bias_acc,
+                    d.acc_frac,
+                    o,
+                );
+            });
+        }
     }
 }

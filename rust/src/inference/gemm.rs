@@ -1,0 +1,223 @@
+//! Tiled integer GEMM microkernel with fused requantize epilogues.
+//!
+//! This is the Figure 1 pipeline expressed as a matrix multiply: i32
+//! operand codes widen into i64 accumulators (steps 1-2), and the fused
+//! epilogue rounds/saturates back to the activation format (step 3) --
+//! or decodes to f32 for a float logit head -- without ever
+//! materialising the accumulator plane.  Requantization reuses
+//! `ops::requant_i64`, so results are bit-for-bit those of the direct
+//! per-image reference path (`FixedPointNet::forward`): integer adds are
+//! exact and order-free, and zero-padded taps/columns contribute nothing.
+//!
+//! Blocking: weights are pre-packed into `NR`-column panels
+//! (`packing::PackedPanels`); the microkernel walks `MR`-row strips of
+//! the (im2col'd) activation matrix holding an `MR x NR` i64 accumulator
+//! tile in registers, so each `a` element loaded from cache feeds `NR`
+//! multiplies and each packed `b` row feeds `MR`.
+
+use crate::fixedpoint::QFormat;
+use crate::inference::ops::requant_i64;
+use crate::inference::packing::{PackedPanels, NR};
+
+/// Rows per microkernel tile.  `MR * NR` i64 accumulators (4x8 = 32)
+/// stay comfortably in registers on x86-64 and aarch64.
+pub const MR: usize = 4;
+
+/// Accumulate an `M x NR` tile: rows `base..base+M` of the row-major
+/// `(rows, k)` matrix `a` against one packed panel, starting every row's
+/// accumulators at `init` (the fused bias).
+#[inline(always)]
+fn micro_tile<const M: usize>(
+    a: &[i32],
+    k: usize,
+    base: usize,
+    panel: &[i32],
+    init: &[i64; NR],
+) -> [[i64; NR]; M] {
+    let mut acc = [[0i64; NR]; M];
+    for row in acc.iter_mut() {
+        *row = *init;
+    }
+    for p in 0..k {
+        let b = &panel[p * NR..(p + 1) * NR];
+        for (ii, acc_row) in acc.iter_mut().enumerate() {
+            let av = a[(base + ii) * k + p] as i64;
+            for (accv, &bv) in acc_row.iter_mut().zip(b) {
+                *accv += av * bv as i64;
+            }
+        }
+    }
+    acc
+}
+
+/// Panel-blocked GEMM driver: `emit(row * n + col, acc)` receives every
+/// finished accumulator exactly once (bias already folded in).
+#[inline]
+fn gemm_panels<E: FnMut(usize, i64)>(
+    a: &[i32],
+    rows: usize,
+    k: usize,
+    pw: &PackedPanels,
+    bias_acc: &[i64],
+    mut emit: E,
+) {
+    debug_assert_eq!(pw.k, k);
+    debug_assert!(a.len() >= rows * k);
+    debug_assert_eq!(bias_acc.len(), pw.n);
+    let n = pw.n;
+    for jp in 0..pw.num_panels() {
+        let panel = pw.panel(jp);
+        let j0 = jp * NR;
+        let jw = NR.min(n - j0);
+        let mut init = [0i64; NR];
+        init[..jw].copy_from_slice(&bias_acc[j0..j0 + jw]);
+        let mut i = 0usize;
+        while i + MR <= rows {
+            let acc = micro_tile::<MR>(a, k, i, panel, &init);
+            for (ii, acc_row) in acc.iter().enumerate() {
+                let o = (i + ii) * n + j0;
+                for (j, &v) in acc_row[..jw].iter().enumerate() {
+                    emit(o + j, v);
+                }
+            }
+            i += MR;
+        }
+        while i < rows {
+            let acc = micro_tile::<1>(a, k, i, panel, &init);
+            let o = i * n + j0;
+            for (j, &v) in acc[0][..jw].iter().enumerate() {
+                emit(o + j, v);
+            }
+            i += 1;
+        }
+    }
+}
+
+/// GEMM with the integer epilogue: bias + requantize (+ ReLU) into
+/// activation codes.  `out` is row-major `(rows, pw.n)`.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_requant_relu(
+    a: &[i32],
+    rows: usize,
+    k: usize,
+    pw: &PackedPanels,
+    bias_acc: &[i64],
+    acc_frac: i32,
+    fmt: QFormat,
+    relu: bool,
+    out: &mut [i32],
+) {
+    debug_assert_eq!(out.len(), rows * pw.n);
+    if relu {
+        gemm_panels(a, rows, k, pw, bias_acc, |idx, acc| {
+            out[idx] = requant_i64(acc, acc_frac, fmt).max(0);
+        });
+    } else {
+        gemm_panels(a, rows, k, pw, bias_acc, |idx, acc| {
+            out[idx] = requant_i64(acc, acc_frac, fmt);
+        });
+    }
+}
+
+/// GEMM with the float-head epilogue: bias + decode to f32 logits
+/// (bit-identical to `ops::decode_acc` on the same accumulators).
+pub fn gemm_decode(
+    a: &[i32],
+    rows: usize,
+    k: usize,
+    pw: &PackedPanels,
+    bias_acc: &[i64],
+    acc_frac: i32,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), rows * pw.n);
+    let s = (-(acc_frac as f64)).exp2();
+    gemm_panels(a, rows, k, pw, bias_acc, |idx, acc| {
+        out[idx] = (acc as f64 * s) as f32;
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::inference::ops;
+    use crate::util::rng::Rng;
+
+    fn q(bits: u8, frac: i8) -> QFormat {
+        QFormat::new(bits, frac).unwrap()
+    }
+
+    /// Naive i64 reference: C = A*B + bias.
+    fn naive(
+        a: &[i32],
+        rows: usize,
+        k: usize,
+        w: &[i32],
+        n: usize,
+        bias_acc: &[i64],
+    ) -> Vec<i64> {
+        let mut out = vec![0i64; rows * n];
+        for r in 0..rows {
+            for j in 0..n {
+                let mut acc = bias_acc[j];
+                for p in 0..k {
+                    acc += a[r * k + p] as i64 * w[p * n + j] as i64;
+                }
+                out[r * n + j] = acc;
+            }
+        }
+        out
+    }
+
+    fn random_case(seed: u64, rows: usize, k: usize, n: usize) -> (Vec<i32>, Vec<i32>, Vec<i64>) {
+        let mut rng = Rng::new(seed);
+        let a: Vec<i32> = (0..rows * k).map(|_| rng.below(511) as i32 - 255).collect();
+        let w: Vec<i32> = (0..k * n).map(|_| rng.below(255) as i32 - 127).collect();
+        let bias: Vec<i64> = (0..n).map(|_| rng.below(2001) as i64 - 1000).collect();
+        (a, w, bias)
+    }
+
+    #[test]
+    fn requant_epilogue_matches_naive() {
+        // sweep odd shapes around the MR/NR tile edges
+        for (seed, rows, k, n) in [
+            (1u64, 1usize, 3usize, 1usize),
+            (2, 4, 9, 8),
+            (3, 7, 27, 10),
+            (4, 13, 16, 17),
+            (5, 32, 5, 7),
+        ] {
+            let (a, w, bias) = random_case(seed, rows, k, n);
+            let pw = PackedPanels::pack(&w, k, n);
+            let fmt = q(8, 2);
+            let acc_frac = 7;
+            let want: Vec<i32> = naive(&a, rows, k, &w, n, &bias)
+                .iter()
+                .map(|&acc| requant_i64(acc, acc_frac, fmt).max(0))
+                .collect();
+            let mut got = vec![0i32; rows * n];
+            gemm_requant_relu(&a, rows, k, &pw, &bias, acc_frac, fmt, true, &mut got);
+            assert_eq!(got, want, "rows={rows} k={k} n={n}");
+            // and without relu
+            let want: Vec<i32> = naive(&a, rows, k, &w, n, &bias)
+                .iter()
+                .map(|&acc| requant_i64(acc, acc_frac, fmt))
+                .collect();
+            gemm_requant_relu(&a, rows, k, &pw, &bias, acc_frac, fmt, false, &mut got);
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn decode_epilogue_matches_decode_acc() {
+        let (rows, k, n) = (6usize, 12usize, 10usize);
+        let (a, w, bias) = random_case(9, rows, k, n);
+        let pw = PackedPanels::pack(&w, k, n);
+        let acc_frac = 11;
+        let accs = naive(&a, rows, k, &w, n, &bias);
+        let want = ops::decode_acc(&accs, acc_frac);
+        let mut got = vec![0f32; rows * n];
+        gemm_decode(&a, rows, k, &pw, &bias, acc_frac, &mut got);
+        assert_eq!(got, want);
+    }
+}

@@ -14,8 +14,22 @@
 //! -simulated path tracks true integer arithmetic (they agree up to f32
 //! accumulator roundoff; see rust/tests/inference_parity.rs).
 
+//! Layer map:
+//!
+//! * [`ops`] -- scalar/per-plane primitives and the direct per-image
+//!   reference convolution (the semantic ground truth),
+//! * [`packing`] -- build-time weight panel packing + forward-time
+//!   im2col into reusable scratch,
+//! * [`gemm`] -- the tiled i32xi32->i64 microkernel with fused
+//!   bias/requantize/ReLU (or f32-decode) epilogues,
+//! * [`engine`] -- the network-level driver: batched, zero-allocation,
+//!   row-block-threaded execution over a [`Scratch`] arena, pinned
+//!   bit-for-bit to the reference path.
+
 pub mod engine;
+pub mod gemm;
 pub mod ops;
+pub mod packing;
 pub mod verify;
 
-pub use engine::FixedPointNet;
+pub use engine::{FixedPointNet, Scratch};

@@ -143,18 +143,73 @@ pub fn maxpool2(input: &[i32], h: usize, w: usize, c: usize) -> (Vec<i32>, usize
 
 /// Encode a float slice into codes of `fmt` (nearest).
 pub fn encode(xs: &[f32], fmt: QFormat) -> Vec<i32> {
+    let mut out = vec![0i32; xs.len()];
+    encode_into(xs, fmt, &mut out);
+    out
+}
+
+/// Encode into a caller-provided buffer (the zero-allocation path of the
+/// batched engine).  Bit-identical to [`encode`].
+pub fn encode_into(xs: &[f32], fmt: QFormat, out: &mut [i32]) {
+    debug_assert_eq!(xs.len(), out.len());
     let mode = RoundMode::NearestHalfUp;
-    xs.iter()
-        .map(|&x| {
-            mode.round(x as f64 / fmt.step() as f64, None)
-                .clamp(fmt.qmin(), fmt.qmax()) as i32
-        })
-        .collect()
+    for (o, &x) in out.iter_mut().zip(xs) {
+        *o = mode
+            .round(x as f64 / fmt.step() as f64, None)
+            .clamp(fmt.qmin(), fmt.qmax()) as i32;
+    }
 }
 
 /// Decode codes to float.
 pub fn decode(codes: &[i32], fmt: QFormat) -> Vec<f32> {
     codes.iter().map(|&c| c as f32 * fmt.step()).collect()
+}
+
+/// Decode codes into a caller-provided buffer.  Bit-identical to
+/// [`decode`].
+pub fn decode_into(codes: &[i32], fmt: QFormat, out: &mut [f32]) {
+    debug_assert_eq!(codes.len(), out.len());
+    for (o, &c) in out.iter_mut().zip(codes) {
+        *o = c as f32 * fmt.step();
+    }
+}
+
+/// 2x2 max-pool (VALID, stride 2) over a whole NHWC batch into a
+/// caller-provided buffer.  Per-image semantics identical to
+/// [`maxpool2`].
+pub fn maxpool2_batch_into(
+    input: &[i32],
+    n: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    out: &mut [i32],
+) -> (usize, usize) {
+    let oh = h / 2;
+    let ow = w / 2;
+    debug_assert_eq!(input.len(), n * h * w * c);
+    debug_assert_eq!(out.len(), n * oh * ow * c);
+    for img in 0..n {
+        let src = &input[img * h * w * c..(img + 1) * h * w * c];
+        let dst = &mut out[img * oh * ow * c..(img + 1) * oh * ow * c];
+        for y in 0..oh {
+            for x in 0..ow {
+                let o_base = (y * ow + x) * c;
+                let i00 = ((2 * y) * w + 2 * x) * c;
+                let i01 = i00 + c;
+                let i10 = ((2 * y + 1) * w + 2 * x) * c;
+                let i11 = i10 + c;
+                for ch in 0..c {
+                    let m = src[i00 + ch]
+                        .max(src[i01 + ch])
+                        .max(src[i10 + ch])
+                        .max(src[i11 + ch]);
+                    dst[o_base + ch] = m;
+                }
+            }
+        }
+    }
+    (oh, ow)
 }
 
 /// Decode wide accumulators to float (for float-activation heads).
@@ -220,6 +275,40 @@ mod tests {
         let (out, oh, ow) = maxpool2(&input, 4, 4, 1);
         assert_eq!((oh, ow), (2, 2));
         assert_eq!(out, vec![6, 8, 14, 16]);
+    }
+
+    #[test]
+    fn maxpool_batch_matches_per_image() {
+        let (n, h, w, c) = (3usize, 4usize, 6usize, 2usize);
+        let input: Vec<i32> = (0..n * h * w * c)
+            .map(|i| ((i as i64 * 2_654_435_761) % 97 - 48) as i32)
+            .collect();
+        let mut got = vec![0i32; n * (h / 2) * (w / 2) * c];
+        let (oh, ow) = maxpool2_batch_into(&input, n, h, w, c, &mut got);
+        assert_eq!((oh, ow), (2, 3));
+        for img in 0..n {
+            let (want, _, _) =
+                maxpool2(&input[img * h * w * c..(img + 1) * h * w * c], h, w, c);
+            assert_eq!(
+                &got[img * oh * ow * c..(img + 1) * oh * ow * c],
+                &want[..],
+                "img {img}"
+            );
+        }
+    }
+
+    #[test]
+    fn encode_decode_into_match_allocating() {
+        let fmt = q(8, 4);
+        let xs = vec![0.5f32, -1.25, 7.9375, 100.0, -100.0, 0.03125];
+        let codes = encode(&xs, fmt);
+        let mut buf = vec![0i32; xs.len()];
+        encode_into(&xs, fmt, &mut buf);
+        assert_eq!(codes, buf);
+        let floats = decode(&codes, fmt);
+        let mut fbuf = vec![0f32; codes.len()];
+        decode_into(&codes, fmt, &mut fbuf);
+        assert_eq!(floats, fbuf);
     }
 
     #[test]

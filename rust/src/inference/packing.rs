@@ -1,0 +1,194 @@
+//! Data layout for the batched integer GEMM engine: weight panel packing
+//! (done once at `FixedPointNet::build`) and im2col patch extraction
+//! (done into reusable scratch, block by block, at forward time).
+//!
+//! A 3x3 SAME stride-1 convolution over an NHWC code tensor is exactly a
+//! GEMM: each output pixel is one row of an `(N*H*W, 9*Cin)` patch matrix
+//! multiplied by the `(9*Cin, Cout)` weight matrix.  The HWIO weight
+//! layout `(3, 3, cin, cout)` already *is* that matrix row-major, with
+//! row index `(ky*3 + kx)*cin + ci` -- the same order `im2col_rows`
+//! emits patch elements -- so packing is a pure relayout, no transpose.
+//!
+//! Out-of-image taps are emitted as zero codes.  An integer multiply by
+//! zero contributes exactly nothing to the i64 accumulator, so the
+//! padded GEMM is bit-identical to the tap-skipping direct convolution
+//! in `ops::conv3x3_acc`.
+
+/// Panel width of the packed weight layout (columns per panel).  The
+/// microkernel in `gemm.rs` holds `MR x NR` i64 accumulators in
+/// registers; 8 columns of i64 is one or two SIMD registers per row on
+/// common targets.
+pub const NR: usize = 8;
+
+/// Weights relayouted into `NR`-column panels, each panel contiguous and
+/// k-major: element `(p, j)` of panel `jp` lives at `p*NR + j`.  Columns
+/// past `n` are zero-padded so the microkernel never branches on width.
+#[derive(Clone, Debug)]
+pub struct PackedPanels {
+    data: Vec<i32>,
+    /// reduction length (rows of the unpacked matrix)
+    pub k: usize,
+    /// logical column count (output channels / units)
+    pub n: usize,
+}
+
+impl PackedPanels {
+    /// Pack a row-major `(k, n)` weight matrix.
+    pub fn pack(w: &[i32], k: usize, n: usize) -> PackedPanels {
+        debug_assert_eq!(w.len(), k * n);
+        let panels = n.div_ceil(NR);
+        let mut data = vec![0i32; panels * k * NR];
+        for jp in 0..panels {
+            let j0 = jp * NR;
+            let jw = NR.min(n - j0);
+            let dst = &mut data[jp * k * NR..(jp + 1) * k * NR];
+            for p in 0..k {
+                for j in 0..jw {
+                    dst[p * NR + j] = w[p * n + j0 + j];
+                }
+            }
+        }
+        PackedPanels { data, k, n }
+    }
+
+    #[inline]
+    pub fn num_panels(&self) -> usize {
+        self.n.div_ceil(NR)
+    }
+
+    /// Panel `jp` as a contiguous `k * NR` slice.
+    #[inline]
+    pub fn panel(&self, jp: usize) -> &[i32] {
+        &self.data[jp * self.k * NR..(jp + 1) * self.k * NR]
+    }
+}
+
+/// Extract im2col patch rows `row0..row0+rows` of a batched NHWC code
+/// tensor into `out` (row-major `(rows, 9*cin)`).
+///
+/// Global row index `r` maps to output pixel `(img, y, x)` with
+/// `img = r / (h*w)`, `y = (r / w) % h`, `x = r % w`.  Patch element
+/// order is `(ky, kx, ci)` -- matching the HWIO weight matrix rows.
+/// Taps outside the image are written as zero codes.
+#[allow(clippy::too_many_arguments)]
+pub fn im2col_rows(
+    input: &[i32],
+    n: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    row0: usize,
+    rows: usize,
+    out: &mut [i32],
+) {
+    let k = 9 * cin;
+    debug_assert_eq!(input.len(), n * h * w * cin);
+    debug_assert!(row0 + rows <= n * h * w);
+    debug_assert!(out.len() >= rows * k);
+    for ri in 0..rows {
+        let r = row0 + ri;
+        let img = r / (h * w);
+        let y = (r / w) % h;
+        let x = r % w;
+        let img_base = img * h * w * cin;
+        let dst_row = &mut out[ri * k..(ri + 1) * k];
+        for ky in 0..3usize {
+            let dst = &mut dst_row[ky * 3 * cin..(ky + 1) * 3 * cin];
+            let sy = y as isize + ky as isize - 1;
+            if sy < 0 || sy >= h as isize {
+                dst.fill(0);
+                continue;
+            }
+            let src_row = img_base + sy as usize * w * cin;
+            if x >= 1 && x + 1 < w {
+                // interior column: the three taps are contiguous in NHWC
+                let s = src_row + (x - 1) * cin;
+                dst.copy_from_slice(&input[s..s + 3 * cin]);
+            } else {
+                for kx in 0..3usize {
+                    let d = &mut dst[kx * cin..(kx + 1) * cin];
+                    let sx = x as isize + kx as isize - 1;
+                    if sx < 0 || sx >= w as isize {
+                        d.fill(0);
+                    } else {
+                        let s = src_row + sx as usize * cin;
+                        d.copy_from_slice(&input[s..s + cin]);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_layout_round_trip() {
+        // (k=2, n=NR+3): values encode (p, j) so positions are checkable
+        let k = 2;
+        let n = NR + 3;
+        let w: Vec<i32> = (0..k * n).map(|i| i as i32 + 1).collect();
+        let pw = PackedPanels::pack(&w, k, n);
+        assert_eq!(pw.num_panels(), 2);
+        for jp in 0..pw.num_panels() {
+            let panel = pw.panel(jp);
+            for p in 0..k {
+                for j in 0..NR {
+                    let col = jp * NR + j;
+                    let want = if col < n { w[p * n + col] } else { 0 };
+                    assert_eq!(panel[p * NR + j], want, "jp={jp} p={p} j={j}");
+                }
+            }
+        }
+    }
+
+    /// Reference patch extraction straight from the definition.
+    fn patch_ref(
+        input: &[i32],
+        h: usize,
+        w: usize,
+        cin: usize,
+        img: usize,
+        y: usize,
+        x: usize,
+    ) -> Vec<i32> {
+        let mut row = Vec::with_capacity(9 * cin);
+        for ky in 0..3isize {
+            for kx in 0..3isize {
+                let (sy, sx) = (y as isize + ky - 1, x as isize + kx - 1);
+                for ci in 0..cin {
+                    if sy < 0 || sy >= h as isize || sx < 0 || sx >= w as isize {
+                        row.push(0);
+                    } else {
+                        row.push(
+                            input[((img * h + sy as usize) * w + sx as usize) * cin
+                                + ci],
+                        );
+                    }
+                }
+            }
+        }
+        row
+    }
+
+    #[test]
+    fn im2col_matches_reference() {
+        let (n, h, w, cin) = (2usize, 4usize, 5usize, 3usize);
+        let input: Vec<i32> = (0..n * h * w * cin).map(|i| i as i32 - 40).collect();
+        let k = 9 * cin;
+        let total = n * h * w;
+        // extract in two uneven blocks to exercise row0 offsets
+        for (row0, rows) in [(0usize, 13usize), (13, total - 13)] {
+            let mut out = vec![99i32; rows * k];
+            im2col_rows(&input, n, h, w, cin, row0, rows, &mut out);
+            for ri in 0..rows {
+                let r = row0 + ri;
+                let (img, y, x) = (r / (h * w), (r / w) % h, r % w);
+                let want = patch_ref(&input, h, w, cin, img, y, x);
+                assert_eq!(&out[ri * k..(ri + 1) * k], &want[..], "row {r}");
+            }
+        }
+    }
+}

@@ -100,17 +100,61 @@ impl Rng {
         (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
     }
 
+    /// Fill a slice with uniforms in [0, 1) -- the exact stream
+    /// [`uniform`](Self::uniform) would produce, but drawn in one tight
+    /// loop so vectorised consumers (e.g. stochastic `quantize_slice`)
+    /// amortise the call overhead over a block.
+    #[inline]
+    pub fn fill_uniform(&mut self, out: &mut [f64]) {
+        for v in out.iter_mut() {
+            *v = self.uniform();
+        }
+    }
+
     /// Uniform f32 in [lo, hi).
     #[inline]
     pub fn uniform_in(&mut self, lo: f32, hi: f32) -> f32 {
         lo + (hi - lo) * self.uniform() as f32
     }
 
-    /// Uniform integer in [0, n) (Lemire-style rejection-free for our use).
+    /// Uniform integer in [0, n): Lemire's widening-multiply method
+    /// (next_u64 * n) >> 64, with the standard rejection step that
+    /// removes the multiply's modulo bias exactly.
     #[inline]
     pub fn below(&mut self, n: usize) -> usize {
-        debug_assert!(n > 0);
-        (self.uniform() * n as f64) as usize % n
+        // hard assert: the old float-modulo implementation panicked on
+        // n == 0 in every profile; a silent 0 would surface as an
+        // out-of-bounds read far from the caller's bug
+        assert!(n > 0, "Rng::below(0)");
+        let n64 = n as u64;
+        let mut m = self.next_u64() as u128 * n64 as u128;
+        let mut lo = m as u64;
+        if lo < n64 {
+            // threshold = 2^64 mod n; draws with low half below it are the
+            // over-represented remainder and get rejected
+            let t = n64.wrapping_neg() % n64;
+            while lo < t {
+                m = self.next_u64() as u128 * n64 as u128;
+                lo = m as u64;
+            }
+        }
+        (m >> 64) as usize
+    }
+
+    /// Uniform integer with exactly `bits` random bits (1..=128), i.e. in
+    /// [0, 2^bits).  Draws one `next_u64` for <= 64 bits, two above --
+    /// full-resolution integer randomness for wide stochastic
+    /// requantization shifts where a f64 mantissa (53 bits) cannot reach
+    /// the low bits.
+    #[inline]
+    pub fn bits128(&mut self, bits: u32) -> u128 {
+        debug_assert!((1..=128).contains(&bits));
+        if bits <= 64 {
+            (self.next_u64() >> (64 - bits)) as u128
+        } else {
+            let hi = (self.next_u64() >> (128 - bits)) as u128;
+            (hi << 64) | self.next_u64() as u128
+        }
     }
 
     /// Standard normal via Box-Muller.
@@ -185,6 +229,61 @@ mod tests {
             seen[k] = true;
         }
         assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn below_is_uniform() {
+        // Lemire widening-multiply: each residue within 3 sigma of n/k
+        let mut r = Rng::new(17);
+        let n = 30000usize;
+        for k in [3usize, 7, 10, 16] {
+            let mut counts = vec![0usize; k];
+            for _ in 0..n {
+                counts[r.below(k)] += 1;
+            }
+            let expect = n as f64 / k as f64;
+            let sigma = (expect * (1.0 - 1.0 / k as f64)).sqrt();
+            for (i, &c) in counts.iter().enumerate() {
+                assert!(
+                    (c as f64 - expect).abs() < 5.0 * sigma + 1.0,
+                    "k={k} residue {i}: {c} vs {expect}"
+                );
+            }
+        }
+        // degenerate range
+        assert_eq!(r.below(1), 0);
+    }
+
+    #[test]
+    fn fill_uniform_matches_scalar_stream() {
+        let mut a = Rng::new(23);
+        let mut b = Rng::new(23);
+        let mut buf = [0f64; 97];
+        a.fill_uniform(&mut buf);
+        for (i, &u) in buf.iter().enumerate() {
+            assert_eq!(u, b.uniform(), "index {i}");
+        }
+    }
+
+    #[test]
+    fn bits128_range_and_low_bit_coverage() {
+        let mut r = Rng::new(31);
+        for bits in [1u32, 7, 53, 60, 64, 65, 100, 127, 128] {
+            let mut low_ones = 0usize;
+            for _ in 0..200 {
+                let v = r.bits128(bits);
+                if bits < 128 {
+                    assert!(v < 1u128 << bits, "bits={bits}: {v}");
+                }
+                low_ones += (v & 1) as usize;
+            }
+            // the low bit must actually vary -- this is exactly what the
+            // old f64-based draw lost for shifts > 53
+            assert!(
+                (40..=160).contains(&low_ones),
+                "bits={bits}: low bit set {low_ones}/200"
+            );
+        }
     }
 
     #[test]

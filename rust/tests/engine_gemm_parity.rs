@@ -1,0 +1,146 @@
+//! Golden bit-parity: the batched GEMM engine (`forward_batch_into` /
+//! `forward_batch_threaded`) must produce logits *bit-identical* to the
+//! retained direct-convolution reference path (`forward`), on random
+//! nets across formats {Q4, Q8, Q16} x batch sizes {1, 7, 32} x thread
+//! counts {1, 4}.
+//!
+//! This is stronger than the float-path parity in inference_parity.rs:
+//! both paths here are pure integer, so i64 accumulation is exact and
+//! order-free and the two implementations must agree in every bit --
+//! any deviation is a bug, not roundoff.  Runs in the offline build (no
+//! artifacts needed).
+
+use std::collections::BTreeMap;
+
+use fxpnet::bench::fixtures::{int_engine_cell, int_engine_fixture};
+use fxpnet::coordinator::evaluator::evaluate_int;
+use fxpnet::data::synth::Dataset;
+use fxpnet::fixedpoint::QFormat;
+use fxpnet::inference::{FixedPointNet, Scratch};
+use fxpnet::model::manifest::ArchSpec;
+
+/// Small conv/pool/fc arch (8x8x3 -> conv8 -> pool -> fc10) so the
+/// direct reference stays fast across the whole grid.
+fn small_arch() -> ArchSpec {
+    ArchSpec {
+        name: "parity-net".into(),
+        input: [8, 8, 3],
+        num_classes: 10,
+        num_layers: 2,
+        train_batch: 8,
+        eval_batch: 8,
+        layers: vec![
+            ("conv".into(), 8),
+            ("pool".into(), 0),
+            ("fc".into(), 10),
+        ],
+        params: vec![
+            ("l0.w".into(), vec![3, 3, 3, 8]),
+            ("l0.b".into(), vec![8]),
+            ("l1.w".into(), vec![4 * 4 * 8, 10]),
+            ("l1.b".into(), vec![10]),
+        ],
+        artifacts: BTreeMap::new(),
+    }
+}
+
+fn build_net(spec: &ArchSpec, bits: u8, seed: u64) -> FixedPointNet {
+    let (params, nq) = int_engine_cell(spec, bits, seed).unwrap();
+    FixedPointNet::build(spec, &params, &nq, QFormat::new(16, 14).unwrap()).unwrap()
+}
+
+/// Direct-path logits, one image at a time.
+fn reference_logits(net: &FixedPointNet, images: &fxpnet::tensor::TensorF) -> Vec<f32> {
+    let n = images.shape()[0];
+    let img_len = images.len() / n;
+    let mut out = Vec::with_capacity(n * 10);
+    for i in 0..n {
+        out.extend(net.forward(&images.data()[i * img_len..(i + 1) * img_len]).unwrap());
+    }
+    out
+}
+
+#[test]
+fn gemm_batch_bit_identical_to_direct_reference() {
+    let spec = small_arch();
+    let full = Dataset::generate(32, 8, 8, 99);
+    for (bi, &bits) in [4u8, 8, 16].iter().enumerate() {
+        let net = build_net(&spec, bits, 1000 + bi as u64);
+        for &batch in &[1usize, 7, 32] {
+            let rows: Vec<usize> = (0..batch).collect();
+            let images = full.images.gather_rows(&rows).unwrap();
+            let want = reference_logits(&net, &images);
+            for &threads in &[1usize, 4] {
+                let got = net.forward_batch_threaded(&images, threads).unwrap();
+                assert_eq!(got.shape(), &[batch, 10]);
+                assert_eq!(
+                    got.data(),
+                    &want[..],
+                    "bits={bits} batch={batch} threads={threads}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn gemm_scratch_reuse_is_stable() {
+    // a warm scratch reused across different batch sizes must not change
+    // results (stale buffer contents are never read)
+    let spec = small_arch();
+    let full = Dataset::generate(32, 8, 8, 7);
+    let net = build_net(&spec, 8, 5);
+    let mut scratch = Scratch::for_net(&net, 32, 4);
+    for &batch in &[32usize, 1, 7, 32, 3] {
+        let rows: Vec<usize> = (0..batch).collect();
+        let images = full.images.gather_rows(&rows).unwrap();
+        let want = reference_logits(&net, &images);
+        let mut out = vec![0f32; batch * 10];
+        net.forward_batch_into(&images, &mut scratch, 4, &mut out).unwrap();
+        assert_eq!(out, want, "batch={batch}");
+    }
+}
+
+#[test]
+fn cifar_fixture_parity_spot_check() {
+    // the bench fixture net (two convs, two pools, fc) at batch 4
+    let (spec, params, nq) = int_engine_fixture(8, 42).unwrap();
+    let net =
+        FixedPointNet::build(&spec, &params, &nq, QFormat::new(16, 14).unwrap()).unwrap();
+    let data = Dataset::generate(4, 32, 32, 11);
+    let want = reference_logits(&net, &data.images);
+    for &threads in &[1usize, 4] {
+        let got = net.forward_batch_threaded(&data.images, threads).unwrap();
+        assert_eq!(got.data(), &want[..], "threads={threads}");
+    }
+}
+
+#[test]
+fn evaluate_int_is_thread_invariant() {
+    let (spec, params, nq) = int_engine_fixture(8, 3).unwrap();
+    let net =
+        FixedPointNet::build(&spec, &params, &nq, QFormat::new(16, 14).unwrap()).unwrap();
+    let data = Dataset::generate(16, 32, 32, 21);
+    let e1 = evaluate_int(&net, &data, 1).unwrap();
+    let e4 = evaluate_int(&net, &data, 4).unwrap();
+    assert_eq!(e1, e4);
+    assert_eq!(e1.n, 16);
+    assert!((0.0..=1.0).contains(&e1.top1_err));
+    assert!(e1.mean_loss.is_finite());
+}
+
+#[test]
+fn batch_shape_errors() {
+    let spec = small_arch();
+    let net = build_net(&spec, 8, 2);
+    // wrong image size
+    let bad = fxpnet::tensor::Tensor::from_vec(&[2, 4, 4, 3], vec![0f32; 96]).unwrap();
+    assert!(net.forward_batch(&bad).is_err());
+    // wrong logit buffer
+    let ok = Dataset::generate(2, 8, 8, 1);
+    let mut scratch = Scratch::new();
+    let mut out = vec![0f32; 7];
+    assert!(net
+        .forward_batch_into(&ok.images, &mut scratch, 1, &mut out)
+        .is_err());
+}
