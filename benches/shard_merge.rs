@@ -1,0 +1,134 @@
+//! Multi-process sharding overhead: what does the cache/lock/merge
+//! layer cost relative to the sweep work it coordinates?
+//!
+//! Three measurements, all engine-free so the bench runs offline:
+//!
+//! * per-shard sweep writes (`--shard-cache` path): the incremental
+//!   locked cache saves that stream results to disk as cells finish;
+//! * `grid merge` of N shard files into the full table (the CI merge
+//!   job's hot path) -- strict parse, conflict scan, coverage;
+//! * raw advisory lock acquire/release cycles.
+//!
+//! Scale via:
+//! * `FXP_BENCH_MERGE_SHARDS` -- shard count (default 3)
+//! * `FXP_BENCH_MERGE_ITERS`  -- merge iterations (default 200)
+//!
+//! `FXP_BENCH_ASSERT=1` additionally enforces the correctness gate: the
+//! merged table must be bit-identical to the unsharded sweep.
+
+use std::path::PathBuf;
+
+use fxpnet::bench::fixtures::env_usize;
+use fxpnet::bench::Table;
+use fxpnet::coordinator::grid::{self, GridResult, SweepOpts};
+use fxpnet::coordinator::regimes::Regime;
+use fxpnet::coordinator::shard::{self, FileLock, LockOpts};
+use fxpnet::util::timer::Stopwatch;
+
+fn sweep(opts: &SweepOpts) -> grid::SweepOutcome {
+    grid::run_sweep_with(
+        Regime::Vanilla,
+        "bench",
+        42,
+        opts,
+        |_wid| Ok(()),
+        |_, job| grid::synthetic_cell(job),
+    )
+    .expect("sweep")
+}
+
+fn bits(g: &GridResult) -> Vec<Option<u64>> {
+    g.outcomes
+        .iter()
+        .flatten()
+        .map(|c| c.eval.map(|e| e.top1_err.to_bits()))
+        .collect()
+}
+
+fn main() {
+    fxpnet::util::logging::init();
+    let shards = env_usize("FXP_BENCH_MERGE_SHARDS", 3);
+    let iters = env_usize("FXP_BENCH_MERGE_ITERS", 200);
+    let dir = std::env::temp_dir()
+        .join(format!("fxp_bench_shard_merge_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("temp dir");
+    let base = dir.join("cache.json");
+
+    let mut t = Table::new(
+        &format!("Multi-process sharding overhead ({shards} shards)"),
+        &["stage", "total ms", "per-op us"],
+    );
+
+    // reference: unsharded in-process sweep, no cache
+    let sw = Stopwatch::start();
+    let reference = sweep(&SweepOpts { workers: 2, ..Default::default() });
+    let ms = sw.elapsed().as_secs_f64() * 1e3;
+    t.row(vec!["unsharded sweep (no cache)".into(), format!("{ms:.1}"), "-".into()]);
+
+    // per-shard sweeps with locked incremental cache writes
+    let sw = Stopwatch::start();
+    let files: Vec<PathBuf> = (0..shards)
+        .map(|index| {
+            let opts = SweepOpts {
+                workers: 2,
+                shard: Some((index, shards)),
+                cache_path: Some(base.clone()),
+                split_cache: true,
+                ..Default::default()
+            };
+            let out = sweep(&opts);
+            assert_eq!(out.computed + out.missing, 16);
+            opts.cache_file().expect("cache path")
+        })
+        .collect();
+    let ms = sw.elapsed().as_secs_f64() * 1e3;
+    t.row(vec![
+        format!("{shards} sharded sweeps (locked cache writes)"),
+        format!("{ms:.1}"),
+        "-".into(),
+    ]);
+
+    // merge throughput
+    let sw = Stopwatch::start();
+    let mut merged = None;
+    for _ in 0..iters {
+        merged = Some(shard::merge_files(&files, None).expect("merge"));
+    }
+    let ms = sw.elapsed().as_secs_f64() * 1e3;
+    t.row(vec![
+        format!("grid merge x{iters}"),
+        format!("{ms:.1}"),
+        format!("{:.1}", ms * 1e3 / iters as f64),
+    ]);
+
+    // raw lock acquire/release cycles
+    let lock_target = dir.join("lock-bench.json");
+    let opts = LockOpts::default();
+    let sw = Stopwatch::start();
+    for _ in 0..iters {
+        let l = FileLock::acquire(&lock_target, &opts).expect("lock");
+        drop(l);
+    }
+    let ms = sw.elapsed().as_secs_f64() * 1e3;
+    t.row(vec![
+        format!("lock acquire+release x{iters}"),
+        format!("{ms:.1}"),
+        format!("{:.1}", ms * 1e3 / iters as f64),
+    ]);
+    println!("{}", t.render());
+
+    // correctness gate: merged table == unsharded table, bit for bit
+    let merged = merged.expect("at least one merge iteration");
+    assert!(merged.is_complete(), "merge missing {:?}", merged.missing);
+    let ok = bits(&merged.to_grid()) == bits(&reference.grid);
+    println!(
+        "merged table bit-identical to unsharded sweep: {}",
+        if ok { "yes" } else { "NO" }
+    );
+    if !ok && std::env::var("FXP_BENCH_ASSERT").is_ok() {
+        eprintln!("FAIL: merged table differs from the unsharded sweep");
+        std::process::exit(1);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}

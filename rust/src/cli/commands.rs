@@ -4,10 +4,13 @@ use crate::cli::{artifacts_dir, parse_shard, Args};
 use crate::coordinator::calibrate;
 use crate::coordinator::config::RunCfg;
 use crate::coordinator::evaluator::evaluate;
-use crate::coordinator::grid::{GridRunner, ParallelGridRunner, SweepOpts};
+use crate::coordinator::grid::{
+    self, GridRunner, ParallelGridRunner, SweepOpts, SweepOutcome,
+};
 use crate::coordinator::phases;
 use crate::coordinator::regimes::Regime;
 use crate::coordinator::report;
+use crate::coordinator::shard::{self, LockOpts, SweepManifest};
 use crate::coordinator::trainer::{upd_all, Trainer};
 use crate::data::loader::LoaderCfg;
 use crate::data::synth::Dataset;
@@ -21,26 +24,33 @@ use crate::quant::calib::CalibMethod;
 use crate::quant::policy::{NetQuant, WidthSpec};
 use crate::runtime::Engine;
 
-pub fn dispatch(args: &Args) -> Result<()> {
+/// Run one command; the returned value is the process exit code (the
+/// `grid merge --check` coverage contract uses 2 for "incomplete").
+pub fn dispatch(args: &Args) -> Result<i32> {
     match args.command.as_str() {
-        "pretrain" => pretrain(args),
-        "grid" => grid(args),
-        "eval" => eval_cmd(args),
-        "infer" => infer(args),
-        "mismatch" => mismatch(args),
+        "pretrain" => args.no_positionals().and_then(|()| pretrain(args)).map(ok),
+        "grid" => grid_cmd(args),
+        "eval" => args.no_positionals().and_then(|()| eval_cmd(args)).map(ok),
+        "infer" => args.no_positionals().and_then(|()| infer(args)).map(ok),
+        "mismatch" => args.no_positionals().and_then(|()| mismatch(args)).map(ok),
         "table1" => {
+            args.no_positionals()?;
             let layers = args.usize_or("layers", 4)?;
             println!("{}", phases::render_table1(layers));
-            Ok(())
+            Ok(0)
         }
         "help" | "--help" | "-h" => {
             println!("{}", super::USAGE);
-            Ok(())
+            Ok(0)
         }
         other => Err(FxpError::config(format!(
             "unknown command '{other}'; try `fxpnet help`"
         ))),
     }
+}
+
+fn ok(_: ()) -> i32 {
+    0
 }
 
 fn run_cfg(args: &Args) -> Result<RunCfg> {
@@ -176,19 +186,116 @@ fn pretrain(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `fxpnet grid [plan|merge]`: subcommand routing.
+fn grid_cmd(args: &Args) -> Result<i32> {
+    match args.positionals().first().map(String::as_str) {
+        None => grid_run(args).map(ok),
+        Some("plan") => grid_plan(args).map(ok),
+        Some("merge") => grid_merge(args),
+        Some(other) => Err(FxpError::config(format!(
+            "unknown grid subcommand '{other}'; try `fxpnet grid plan` or \
+             `fxpnet grid merge`"
+        ))),
+    }
+}
+
+/// The cell-cache / sharding options shared by the real and synthetic
+/// sweep paths.
+fn sweep_opts(
+    args: &Args,
+    cfg: &RunCfg,
+    regime: Regime,
+    arch: &str,
+    out_dir: &str,
+) -> Result<SweepOpts> {
+    let shard = match args.get("shard") {
+        None => None,
+        Some(s) => Some(parse_shard(s)?),
+    };
+    let resume = args.has("resume");
+    let split_cache = args.has("shard-cache");
+    if split_cache && shard.is_none() {
+        return Err(FxpError::config("--shard-cache needs --shard I/N"));
+    }
+    let cache_path = args.get("cache").map(std::path::PathBuf::from).or_else(|| {
+        (resume || shard.is_some()).then(|| {
+            std::path::Path::new(out_dir)
+                .join(format!("cache_table{}_{arch}.json", regime.table_number()))
+        })
+    });
+    Ok(SweepOpts {
+        workers: cfg.workers,
+        shard,
+        cache_path,
+        resume,
+        split_cache,
+        lock: LockOpts {
+            wait: std::time::Duration::from_secs_f64(
+                (args.f32_or("lock-wait", 10.0)? as f64).max(0.0),
+            ),
+            ..Default::default()
+        },
+    })
+}
+
+/// Print a finished sweep, persist the table when it is final, and
+/// explain what remains when it is not.
+fn finish_sweep(sweep: &SweepOutcome, out_dir: &str, topk: usize) -> Result<()> {
+    println!("{}", sweep.grid.render(topk));
+    log::info!(
+        "sweep: {} computed ({} failed -> n/a), {} cached, {} missing, \
+         {} workers",
+        sweep.computed,
+        sweep.failed,
+        sweep.cached,
+        sweep.missing,
+        sweep.pool.workers
+    );
+    if sweep.is_complete() {
+        report::save_grid(&sweep.grid, out_dir, topk)?;
+    } else {
+        println!(
+            "partial sweep: {} cells belong to other shards; with a shared \
+             --cache the final shard prints the full table, with \
+             --shard-cache combine the shard files via `fxpnet grid merge`",
+            sweep.missing
+        );
+    }
+    Ok(())
+}
+
 /// `fxpnet grid`: run one regime's full grid (one paper table) through
-/// the parallel sweep engine -- `--workers`, `--shard I/N`, `--resume`
-/// and `--cache` control execution; results are bit-identical for any
-/// worker count / shard layout (the per-cell seed tree keys every
-/// stochastic stream by cell identity, not by scheduling).
-fn grid(args: &Args) -> Result<()> {
+/// the parallel sweep engine -- `--workers`, `--shard I/N`, `--resume`,
+/// `--cache` and `--shard-cache` control execution; results are
+/// bit-identical for any worker count / shard layout (the per-cell seed
+/// tree keys every stochastic stream by cell identity, not by
+/// scheduling).
+fn grid_run(args: &Args) -> Result<()> {
     let arch = args.get_or("arch", "paper12");
     let regime_s = args.require("regime")?;
     let regime = Regime::parse(regime_s)
         .ok_or_else(|| FxpError::config(format!("bad --regime '{regime_s}'")))?;
+    let cfg = run_cfg(args)?;
+    let out_dir = args.get_or("out", "results");
+    let opts = sweep_opts(args, &cfg, regime, &arch, &out_dir)?;
+
+    // --synthetic: the deterministic engine-free executor -- exercises
+    // the whole sweep/shard/cache/merge machinery without artifacts, an
+    // XLA runtime, or a checkpoint (the sharded CI matrix runs this)
+    if args.has("synthetic") {
+        let sweep = grid::run_sweep_with(
+            regime,
+            &arch,
+            cfg.seed,
+            &opts,
+            |_wid| Ok(()),
+            |_, job| grid::synthetic_cell(job),
+        )?;
+        return finish_sweep(&sweep, &out_dir, cfg.topk);
+    }
+
     let artifacts = artifacts_dir(args);
     let engine = Engine::cpu(&artifacts)?;
-    let cfg = run_cfg(args)?;
     let base = load_ckpt(args, &engine, &arch)?;
     let (train, eval_set) = datasets(args, &engine, &arch)?;
     let calib = calibrate::activation_stats(
@@ -198,22 +305,9 @@ fn grid(args: &Args) -> Result<()> {
         &train,
         cfg.calib_batches,
     )?;
-    let out_dir = args.get_or("out", "results");
-
-    let shard = match args.get("shard") {
-        None => None,
-        Some(s) => Some(parse_shard(s)?),
-    };
-    let resume = args.has("resume");
-    let cache_path = args.get("cache").map(std::path::PathBuf::from).or_else(|| {
-        (resume || shard.is_some()).then(|| {
-            std::path::Path::new(&out_dir)
-                .join(format!("cache_table{}_{arch}.json", regime.table_number()))
-        })
-    });
 
     // serial fast path: one shared engine (compile each executable once)
-    if cfg.workers == 1 && shard.is_none() && cache_path.is_none() {
+    if cfg.workers == 1 && opts.shard.is_none() && opts.cache_path.is_none() {
         let mut runner = GridRunner::new(
             &engine,
             &arch,
@@ -239,29 +333,83 @@ fn grid(args: &Args) -> Result<()> {
         eval_data: eval_set,
         cfg: cfg.clone(),
     };
-    let opts = SweepOpts { workers: cfg.workers, shard, cache_path, resume };
     let sweep = runner.run_sweep(regime, &opts)?;
-    println!("{}", sweep.grid.render(cfg.topk));
-    log::info!(
-        "sweep: {} computed ({} failed -> n/a), {} cached, {} missing, \
-         {} workers",
-        sweep.computed,
-        sweep.failed,
-        sweep.cached,
-        sweep.missing,
-        sweep.pool.workers
-    );
-    if sweep.is_complete() {
-        report::save_grid(&sweep.grid, out_dir, cfg.topk)?;
-    } else {
-        println!(
-            "partial sweep: {} cells belong to other shards; run them \
-             against the same --cache and the final shard prints the \
-             full table",
-            sweep.missing
-        );
+    finish_sweep(&sweep, &out_dir, cfg.topk)
+}
+
+/// `fxpnet grid plan`: print/write the sweep manifest and per-shard
+/// cell lists, so an external scheduler can launch one `fxpnet grid
+/// --shard I/N --shard-cache` job per shard and `merge` can later
+/// verify the result partition.
+fn grid_plan(args: &Args) -> Result<()> {
+    if args.positionals().len() > 1 {
+        return Err(FxpError::config(format!(
+            "unexpected argument '{}'",
+            args.positionals()[1]
+        )));
+    }
+    let regime_s = args.require("regime")?;
+    let regime = Regime::parse(regime_s)
+        .ok_or_else(|| FxpError::config(format!("bad --regime '{regime_s}'")))?;
+    let arch = args.get_or("arch", "paper12");
+    let seed = args.u64_or("seed", RunCfg::default().seed)?;
+    let shards = args.usize_or("shards", 1)?;
+    let manifest = SweepManifest::new(&arch, regime, seed, shards)?;
+    print!("{}", manifest.render());
+    // NOT --out: that means "results directory" everywhere else in the
+    // grid family, while this is a single file (merge reads it back
+    // with the same --manifest flag)
+    if let Some(path) = args.get("manifest") {
+        manifest.save(path)?;
+        println!("wrote manifest {path}");
     }
     Ok(())
+}
+
+/// `fxpnet grid merge <out> <in>...`: union per-shard cell caches into
+/// one whole-sweep cache without re-running anything.  Exit code
+/// contract under `--check`: 0 = complete sweep, 2 = incomplete (the
+/// missing cells are listed on stderr), so CI and cluster scripts can
+/// gate on coverage without parsing text.
+fn grid_merge(args: &Args) -> Result<i32> {
+    let pos = args.positionals();
+    if pos.len() < 3 {
+        return Err(FxpError::config(
+            "usage: fxpnet grid merge <out.json> <in.json>... \
+             [--manifest F] [--render] [--topk K] [--check]",
+        ));
+    }
+    let out = std::path::PathBuf::from(&pos[1]);
+    let inputs: Vec<std::path::PathBuf> =
+        pos[2..].iter().map(std::path::PathBuf::from).collect();
+    if inputs.contains(&out) {
+        return Err(FxpError::config(format!(
+            "merge output {} is also an input; refusing to overwrite a \
+             shard cache (the first positional is the output path)",
+            out.display()
+        )));
+    }
+    let manifest = match args.get("manifest") {
+        Some(p) => Some(SweepManifest::load(p)?),
+        None => None,
+    };
+    let merged = shard::merge_files(&inputs, manifest.as_ref())?;
+    merged.save(&out)?;
+    // summary on stderr: --render's stdout must be exactly the table
+    // (byte-comparable against save_grid's .txt output)
+    eprintln!("{} -> {}", merged.summary(), out.display());
+    if args.has("render") {
+        let topk = args.usize_or("topk", 1)?;
+        print!("{}", merged.to_grid().render(topk));
+    }
+    if args.has("check") && !merged.is_complete() {
+        eprintln!("incomplete sweep: {} cells missing:", merged.missing.len());
+        for key in &merged.missing {
+            eprintln!("  {key}");
+        }
+        return Ok(2);
+    }
+    Ok(0)
 }
 
 /// `fxpnet eval`: single-cell evaluation of a checkpoint.

@@ -1,6 +1,11 @@
 //! Hand-rolled CLI (clap is not in the offline crate cache).
 //!
-//! Grammar: `fxpnet <command> [--flag value | --switch]...`
+//! Grammar: `fxpnet <command> [positional]... [--flag value | --switch]...`
+//!
+//! Positionals carry subcommands and file lists (`grid merge <out>
+//! <in>...`).  Because `--flag value` greedily consumes the next bare
+//! token, positionals must come before flag/value pairs; commands that
+//! take no positionals reject strays via [`Args::no_positionals`].
 
 pub mod commands;
 
@@ -8,12 +13,22 @@ use std::collections::BTreeMap;
 
 use crate::error::{FxpError, Result};
 
+/// Flags that never take a value.  The parser needs this registry
+/// because `--flag value` is greedy: without it, a switch followed by a
+/// bare token (`grid merge --render out.json in.json`) would silently
+/// swallow the token as the switch's "value" -- and for `merge` that
+/// misparse would shift the output path onto a shard input and
+/// overwrite it.  Add every new boolean flag here.
+const KNOWN_SWITCHES: &[&str] =
+    &["check", "render", "resume", "shard-cache", "synthetic"];
+
 /// Parsed command line.
 #[derive(Clone, Debug, Default)]
 pub struct Args {
     pub command: String,
     flags: BTreeMap<String, String>,
     switches: Vec<String>,
+    positionals: Vec<String>,
 }
 
 impl Args {
@@ -25,20 +40,40 @@ impl Args {
             .ok_or_else(|| FxpError::config("missing command; try `fxpnet help`"))?;
         let mut flags = BTreeMap::new();
         let mut switches = Vec::new();
+        let mut positionals = Vec::new();
         while let Some(a) = it.next() {
             let Some(name) = a.strip_prefix("--") else {
-                return Err(FxpError::config(format!("unexpected argument '{a}'")));
+                positionals.push(a);
+                continue;
             };
-            // --key=value or --key value or --switch
+            // --key=value or --switch or --key value
             if let Some((k, v)) = name.split_once('=') {
                 flags.insert(k.to_string(), v.to_string());
+            } else if KNOWN_SWITCHES.contains(&name) {
+                switches.push(name.to_string());
             } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
                 flags.insert(name.to_string(), it.next().unwrap());
             } else {
                 switches.push(name.to_string());
             }
         }
-        Ok(Args { command, flags, switches })
+        Ok(Args { command, flags, switches, positionals })
+    }
+
+    /// Positional arguments, in order (e.g. `merge out.json in0.json`).
+    pub fn positionals(&self) -> &[String] {
+        &self.positionals
+    }
+
+    /// Error if any positional argument was given (commands without
+    /// positional grammar keep the strict old behavior).
+    pub fn no_positionals(&self) -> Result<()> {
+        match self.positionals.first() {
+            None => Ok(()),
+            Some(p) => {
+                Err(FxpError::config(format!("unexpected argument '{p}'")))
+            }
+        }
     }
 
     pub fn get(&self, key: &str) -> Option<&str> {
@@ -104,8 +139,33 @@ COMMANDS
              [--resume]      skip cells already in the cell cache
              [--cache FILE]  cell cache path (default when sharding or
                              resuming: OUT/cache_table<T>_<ARCH>.json);
-                             shards sharing a cache union into the full
-                             table; "n/a" outcomes are cached too
+                             lock-protected, so concurrent processes can
+                             share one cache file; "n/a" outcomes are
+                             cached too
+             [--shard-cache] with --shard I/N, write a per-shard
+                             FILE-derived cache.shard-I-of-N.json for
+                             `grid merge` (shards need not share a
+                             filesystem)
+             [--lock-wait S] seconds to wait for the cache lock (def 10)
+             [--synthetic]   engine-free deterministic cells (no --ckpt
+                             or artifacts needed; exercises the sweep /
+                             shard / cache plumbing, e.g. in CI)
+  grid plan  print the sweep manifest + per-shard cell lists, so external
+             schedulers (CI matrix, cluster) can launch one job per shard
+             --regime R [--arch A] [--seed S] [--shards N]
+             [--manifest FILE]  also write the manifest JSON (the same
+                                file `grid merge --manifest` verifies)
+  grid merge union per-shard cell caches into one (no re-running):
+             fxpnet grid merge <out.json> <in.json>... [flags]
+             Strict: version/sweep header mismatches and conflicting
+             results for the same cell are hard errors; *.tmp/*.lock
+             litter among the inputs is skipped.
+             [--manifest F]  verify the inputs partition F's sweep
+             [--render]      print the merged table (exact save_grid
+                             bytes) on stdout
+             [--topk K]      metric for --render (default 1)
+             [--check]       exit 0 iff the sweep is complete, 2 if
+                             cells are missing (listed on stderr)
   eval       evaluate a checkpoint at one grid cell
              --arch A --ckpt F --w {4|8|16|float} --a {4|8|16|float}
   infer      pure-integer inference + parity vs the XLA path
@@ -164,10 +224,41 @@ mod tests {
     #[test]
     fn parse_errors() {
         assert!(Args::parse(Vec::<String>::new()).is_err());
-        assert!(Args::parse(vec!["cmd".into(), "stray".into()]).is_err());
         let a = parse(&["cmd", "--n", "abc"]);
         assert!(a.usize_or("n", 1).is_err());
         assert!(a.require("nope").is_err());
+    }
+
+    #[test]
+    fn positionals_are_collected_and_rejectable() {
+        let a = parse(&["grid", "merge", "out.json", "a.json", "b.json", "--check"]);
+        assert_eq!(a.command, "grid");
+        assert_eq!(a.positionals(), ["merge", "out.json", "a.json", "b.json"]);
+        assert!(a.has("check"));
+        assert!(a.no_positionals().is_err());
+
+        // commands without positional grammar keep the strict behavior
+        let a = parse(&["eval", "stray"]);
+        let err = a.no_positionals().unwrap_err();
+        assert!(err.to_string().contains("stray"));
+        assert!(parse(&["grid", "--workers", "2"]).no_positionals().is_ok());
+    }
+
+    #[test]
+    fn known_switches_never_swallow_positionals() {
+        // `--render out.json ...`: render must stay a switch, out.json a
+        // positional -- a misparse here would shift merge's output path
+        // onto a shard input and overwrite it
+        let a = parse(&["grid", "merge", "--render", "o.json", "a.json", "--check"]);
+        assert!(a.has("render"));
+        assert!(a.has("check"));
+        assert_eq!(a.get("render"), None);
+        assert_eq!(a.positionals(), ["merge", "o.json", "a.json"]);
+        // value-taking flags still consume the next bare token
+        let a = parse(&["grid", "--cache", "c.json", "--resume", "--workers", "2"]);
+        assert_eq!(a.get("cache"), Some("c.json"));
+        assert!(a.has("resume"));
+        assert_eq!(a.usize_or("workers", 0).unwrap(), 2);
     }
 
     #[test]

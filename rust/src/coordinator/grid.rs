@@ -29,6 +29,7 @@ use crate::coordinator::evaluator::EvalResult;
 use crate::coordinator::pool::{self, PoolStats};
 use crate::coordinator::regimes::{self, CellCtx, CellResult, Regime};
 use crate::coordinator::report::CellCache;
+use crate::coordinator::shard::{self, LockOpts, ShardedCache};
 use crate::data::synth::Dataset;
 use crate::error::{FxpError, Result};
 use crate::model::params::ParamSet;
@@ -169,10 +170,62 @@ pub struct SweepOpts {
     /// run only cells with `flat % count == index` (`--shard i/n`)
     pub shard: Option<(usize, usize)>,
     /// JSON cell-result cache: written incrementally as cells finish,
-    /// consulted to merge shards into a full table
+    /// consulted to merge shards into a full table.  Protected by an
+    /// advisory file lock held for the whole sweep.
     pub cache_path: Option<PathBuf>,
     /// skip cells already present in the cache (`--resume`)
     pub resume: bool,
+    /// with `shard`, write a per-shard `cache.shard-I-of-N.json`
+    /// (derived from `cache_path`) instead of sharing one file; combine
+    /// the shard files later with `fxpnet grid merge` (`--shard-cache`)
+    pub split_cache: bool,
+    /// how long to wait for the cache's advisory lock
+    pub lock: LockOpts,
+}
+
+impl SweepOpts {
+    /// Shard metadata recorded in (and required of) the cache header.
+    fn cache_shard(&self) -> Option<(usize, usize)> {
+        if self.split_cache {
+            self.shard
+        } else {
+            None
+        }
+    }
+
+    /// The file this sweep actually reads/writes (per-shard when
+    /// `split_cache`).
+    pub fn cache_file(&self) -> Option<PathBuf> {
+        let base = self.cache_path.as_ref()?;
+        Some(match self.cache_shard() {
+            Some((i, n)) => shard::shard_cache_path(base, i, n),
+            None => base.clone(),
+        })
+    }
+}
+
+/// Deterministic engine-free stand-in for a real training cell: a few
+/// thousand seeded RNG draws whose outcome -- including the paper's
+/// "diverged -> n/a" case -- is a pure function of the job's derived
+/// seed.  `fxpnet grid --synthetic`, the sharded CI matrix, and the
+/// parallel-sweep tests all run this one executor, so the multi-process
+/// cache/merge plumbing is exercised end-to-end without artifacts or an
+/// XLA runtime.
+pub fn synthetic_cell(job: &CellJob) -> Result<CellResult> {
+    let mut rng = rng::Rng::new(job.seed);
+    let mut acc = 0.0f64;
+    for _ in 0..2000 {
+        acc += rng.uniform();
+    }
+    if rng.uniform() < 0.2 {
+        return Ok(None); // this cell "fails to converge"
+    }
+    Ok(Some(EvalResult {
+        n: 1000 + rng.below(1000),
+        top1_err: rng.uniform(),
+        top5_err: rng.uniform() * 0.5,
+        mean_loss: acc / 1000.0,
+    }))
 }
 
 /// True iff `flat` belongs to the (round-robin) shard.
@@ -243,8 +296,17 @@ where
     let a_axis = WidthSpec::paper_axis().to_vec();
     let all = grid_jobs(regime, base_seed);
 
+    // the advisory lock is held until the cache drops at the end of the
+    // sweep, so concurrent processes sharing one cache file serialize
     let cache = match &opts.cache_path {
-        Some(p) => Some(CellCache::open(p, arch, regime, base_seed)?),
+        Some(p) => Some(ShardedCache::open(
+            p,
+            arch,
+            regime,
+            base_seed,
+            opts.cache_shard(),
+            &opts.lock,
+        )?),
         None => None,
     };
 
@@ -402,8 +464,17 @@ impl ParallelGridRunner {
         opts: &SweepOpts,
     ) -> Result<Vec<WidthSpec>> {
         check_shard(opts.shard)?;
-        let cache = match &opts.cache_path {
-            Some(p) => Some(CellCache::open(p, &self.arch, regime, self.cfg.seed)?),
+        // read-only peek (no lock): saves are atomic renames, so a
+        // concurrent writer can only make us retrain a net we could
+        // have skipped, never corrupt what we read
+        let cache = match opts.cache_file() {
+            Some(p) => Some(CellCache::open_with_shard(
+                p,
+                &self.arch,
+                regime,
+                self.cfg.seed,
+                opts.cache_shard(),
+            )?),
             None => None,
         };
         let mut ws: Vec<WidthSpec> = Vec::new();

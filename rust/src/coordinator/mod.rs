@@ -16,6 +16,9 @@
 //!   (panic isolation, per-worker contexts);
 //! * `grid`      -- the (weight width x activation width) experiment grid
 //!   behind every results table, serial and parallel/sharded/resumable;
+//! * `shard`     -- the multi-process/multi-machine layer: advisory file
+//!   locks, per-shard cache files, sweep manifests, and the strict
+//!   `grid merge` union;
 //! * `evaluator` -- held-out top-k error;
 //! * `report`    -- paper-style table rendering, JSON result dumps, and
 //!   the per-cell sweep cache.
@@ -29,6 +32,7 @@ pub mod phases;
 pub mod pool;
 pub mod regimes;
 pub mod report;
+pub mod shard;
 pub mod trainer;
 
 pub use config::RunCfg;
@@ -37,4 +41,7 @@ pub use grid::{
     SweepOpts, SweepOutcome,
 };
 pub use regimes::Regime;
+pub use shard::{
+    FileLock, LockOpts, MergeOutcome, ShardedCache, SweepManifest,
+};
 pub use trainer::{TrainOutcome, Trainer};

@@ -79,6 +79,22 @@ impl Regime {
         }
     }
 
+    /// Inverse of [`Regime::seed_tag`] -- reconstructs the regime from a
+    /// cell-cache or sweep-manifest header, so `grid merge` can render a
+    /// merged table without being told the regime again.
+    pub fn from_seed_tag(tag: u64) -> Option<Regime> {
+        match tag {
+            2 => Some(Regime::NoFinetune),
+            3 => Some(Regime::Vanilla),
+            4 => Some(Regime::Prop1),
+            6 => Some(Regime::Prop3),
+            t if t & 0xff == 5 && t >> 8 > 0 => {
+                Some(Regime::Prop2 { top_layers: (t >> 8) as usize })
+            }
+            _ => None,
+        }
+    }
+
     /// True for the regimes seeded by the float-activation fine-tuned net
     /// ("the last row of Table 3").
     pub fn needs_p1_net(&self) -> bool {
@@ -336,6 +352,23 @@ mod tests {
         assert_eq!(uniq.len(), tags.len(), "{tags:?}");
         assert!(Regime::Prop2 { top_layers: 1 }.needs_p1_net());
         assert!(!Regime::Vanilla.needs_p1_net());
+    }
+
+    #[test]
+    fn seed_tag_round_trips() {
+        for r in [
+            Regime::NoFinetune,
+            Regime::Vanilla,
+            Regime::Prop1,
+            Regime::Prop2 { top_layers: 1 },
+            Regime::Prop2 { top_layers: 3 },
+            Regime::Prop3,
+        ] {
+            assert_eq!(Regime::from_seed_tag(r.seed_tag()), Some(r));
+        }
+        assert_eq!(Regime::from_seed_tag(0), None);
+        assert_eq!(Regime::from_seed_tag(5), None); // Prop2 with 0 layers
+        assert_eq!(Regime::from_seed_tag(999), None);
     }
 
     #[test]

@@ -14,17 +14,33 @@
 //!            "w=4,a=4": {"status": "na"}}}
 //! ```
 //!
+//! Per-shard caches (`--shard I/N --shard-cache`) additionally carry
+//! `"shard_index"`/`"shard_count"` in the header, file names of the form
+//! `cache.shard-I-of-N.json`, and are combined by `fxpnet grid merge`
+//! (see [`coordinator::shard`]).
+//!
 //! `"na"` records the paper's "failed to converge" outcome (including
 //! panicked cells), so resuming never retries a deterministically-dead
 //! cell.  Floats are written with Rust's shortest-round-trip formatting
 //! and `base_seed` as a string, so entries reload bit-exactly; a header
 //! mismatch (different sweep) discards the stale file.  Writes go
-//! through a temp file + rename, making each save atomic.  Shards
-//! sharing one filesystem can union through a common cache file by
-//! running against it in turn; cross-process locking is future work.
+//! through a uniquely-named temp file + rename, making each save atomic
+//! even when several processes point at sibling paths.  Cross-process
+//! sharing of one cache file is safe: the sweep engine holds the
+//! advisory file lock ([`shard::FileLock`]) for the whole run, so
+//! concurrent sweeps against a common cache serialize instead of
+//! clobbering each other's cells.
+//!
+//! Two ways to read a cache file:
+//! * [`CellCache::open`] -- tolerant: a mismatched or unreadable file is
+//!   *stale* (a different sweep) and silently starts fresh;
+//! * [`parse_cache_text`] -- strict: every schema problem is an error.
+//!   `grid merge` uses this, because silently dropping a shard's results
+//!   must never happen during a union.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 use crate::coordinator::evaluator::EvalResult;
 use crate::coordinator::grid::{CellJob, GridResult};
@@ -90,7 +106,69 @@ pub fn save_grid(g: &GridResult, dir: impl AsRef<Path>, topk: usize) -> Result<(
 /// being comparable with freshly-computed ones -- e.g. v2: the Rng
 /// stream changed (Lemire `below`, integer stochastic-requantize
 /// dither), so v1 cells must not union with v2 sweeps under `--resume`.
-const CACHE_VERSION: usize = 2;
+pub const CACHE_VERSION: usize = 2;
+
+/// Parsed header of a cell-cache file.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CacheHeader {
+    pub version: usize,
+    pub arch: String,
+    pub regime_tag: u64,
+    pub base_seed: u64,
+    /// `Some((index, count))` when the file is a per-shard cache.
+    pub shard: Option<(usize, usize)>,
+}
+
+/// Strictly parse a cache file's text into header + cells.  Unlike
+/// `CellCache::open`, *any* schema problem is an error -- `grid merge`
+/// must refuse a shard file it cannot fully account for rather than
+/// silently dropping its cells.
+pub fn parse_cache_text(
+    text: &str,
+) -> Result<(CacheHeader, BTreeMap<String, Option<EvalResult>>)> {
+    let j = Json::parse(text)?;
+    let shard = match (j.opt("shard_index"), j.opt("shard_count")) {
+        (Some(i), Some(n)) => Some((i.as_usize()?, n.as_usize()?)),
+        (None, None) => None,
+        _ => {
+            return Err(FxpError::Json(
+                "half-specified shard header (shard_index without \
+                 shard_count or vice versa)"
+                    .into(),
+            ))
+        }
+    };
+    let header = CacheHeader {
+        version: j.get("version")?.as_usize()?,
+        arch: j.get("arch")?.as_str()?.to_string(),
+        regime_tag: j.get("regime_tag")?.as_usize()? as u64,
+        base_seed: {
+            let s = j.get("base_seed")?.as_str()?;
+            s.parse::<u64>()
+                .map_err(|_| FxpError::Json(format!("bad base_seed '{s}'")))?
+        },
+        shard,
+    };
+    let mut cells = BTreeMap::new();
+    for (key, cell) in j.get("cells")?.as_obj()? {
+        let entry = match cell.get("status")?.as_str()? {
+            "na" => None,
+            "ok" => Some(EvalResult {
+                n: cell.get("n")?.as_usize()?,
+                top1_err: cell.get("top1_err")?.as_f64()?,
+                top5_err: cell.get("top5_err")?.as_f64()?,
+                mean_loss: cell.get("loss")?.as_f64()?,
+            }),
+            other => {
+                return Err(FxpError::Json(format!(
+                    "cell '{key}': bad status '{other}'"
+                )))
+            }
+        };
+        cells.insert(key.clone(), entry);
+    }
+    Ok((header, cells))
+}
 
 /// Persistent per-cell results of one sweep (see the module docs for the
 /// on-disk format).
@@ -100,13 +178,23 @@ pub struct CellCache {
     arch: String,
     regime_tag: u64,
     base_seed: u64,
+    /// shard metadata written into (and required of) the header; `None`
+    /// for a whole-sweep cache
+    shard: Option<(usize, usize)>,
     cells: BTreeMap<String, Option<EvalResult>>,
+}
+
+/// Cache key from axis labels -- the single definition of the cell-key
+/// format; `CellCache::key`, the sweep manifest, and `grid merge`'s
+/// coverage/table assembly all derive keys through it.
+pub fn cell_key(w_label: &str, a_label: &str) -> String {
+    format!("w={w_label},a={a_label}")
 }
 
 impl CellCache {
     /// Cache key of a cell within its sweep file.
     pub fn key(job: &CellJob) -> String {
-        format!("w={},a={}", job.w.label(), job.a.label())
+        cell_key(&job.w.label(), &job.a.label())
     }
 
     /// Open (or create) the cache for one sweep.  An existing file whose
@@ -118,12 +206,27 @@ impl CellCache {
         regime: Regime,
         base_seed: u64,
     ) -> Result<CellCache> {
+        Self::open_with_shard(path, arch, regime, base_seed, None)
+    }
+
+    /// Like [`CellCache::open`], but for a per-shard cache file: the
+    /// header must additionally carry exactly `shard`'s
+    /// `(index, count)` -- a whole-sweep cache is stale for a shard
+    /// opener and vice versa (their cell sets mean different things).
+    pub fn open_with_shard(
+        path: impl AsRef<Path>,
+        arch: &str,
+        regime: Regime,
+        base_seed: u64,
+        shard: Option<(usize, usize)>,
+    ) -> Result<CellCache> {
         let path = path.as_ref().to_path_buf();
         let mut cache = CellCache {
             path,
             arch: arch.to_string(),
             regime_tag: regime.seed_tag(),
             base_seed,
+            shard,
             cells: BTreeMap::new(),
         };
         if !cache.path.exists() {
@@ -159,33 +262,44 @@ impl CellCache {
 
     /// Returns Ok(false) on a header mismatch.
     fn parse_into(&mut self, text: &str) -> Result<bool> {
-        let j = Json::parse(text)?;
-        if j.get("version")?.as_usize()? != CACHE_VERSION
-            || j.get("arch")?.as_str()? != self.arch
-            || j.get("regime_tag")?.as_usize()? as u64 != self.regime_tag
-            || j.get("base_seed")?.as_str()?.parse::<u64>().ok()
-                != Some(self.base_seed)
+        let (header, cells) = parse_cache_text(text)?;
+        if header
+            != (CacheHeader {
+                version: CACHE_VERSION,
+                arch: self.arch.clone(),
+                regime_tag: self.regime_tag,
+                base_seed: self.base_seed,
+                shard: self.shard,
+            })
         {
             return Ok(false);
         }
-        for (key, cell) in j.get("cells")?.as_obj()? {
-            let entry = match cell.get("status")?.as_str()? {
-                "na" => None,
-                "ok" => Some(EvalResult {
-                    n: cell.get("n")?.as_usize()?,
-                    top1_err: cell.get("top1_err")?.as_f64()?,
-                    top5_err: cell.get("top5_err")?.as_f64()?,
-                    mean_loss: cell.get("loss")?.as_f64()?,
-                }),
-                other => {
-                    return Err(FxpError::Json(format!(
-                        "cell '{key}': bad status '{other}'"
-                    )))
-                }
-            };
-            self.cells.insert(key.clone(), entry);
-        }
+        self.cells = cells;
         Ok(true)
+    }
+
+    /// Rebuild a cache from already-parsed parts (the `grid merge`
+    /// output path).  Never reads the filesystem.
+    pub fn from_parts(
+        path: impl AsRef<Path>,
+        arch: &str,
+        regime: Regime,
+        base_seed: u64,
+        cells: BTreeMap<String, Option<EvalResult>>,
+    ) -> CellCache {
+        CellCache {
+            path: path.as_ref().to_path_buf(),
+            arch: arch.to_string(),
+            regime_tag: regime.seed_tag(),
+            base_seed,
+            shard: None,
+            cells,
+        }
+    }
+
+    /// Backing file.
+    pub fn path(&self) -> &Path {
+        &self.path
     }
 
     /// Cached result for a cell, if any.  The outer Option is presence;
@@ -239,23 +353,44 @@ impl CellCache {
             };
             cells.insert(key.clone(), cell);
         }
-        Json::obj(vec![
+        let mut pairs = vec![
             ("version", Json::from(CACHE_VERSION)),
             ("arch", Json::Str(self.arch.clone())),
             ("regime_tag", Json::from(self.regime_tag as usize)),
             ("base_seed", Json::Str(self.base_seed.to_string())),
             ("cells", Json::Obj(cells)),
-        ])
+        ];
+        if let Some((index, count)) = self.shard {
+            pairs.push(("shard_index", Json::from(index)));
+            pairs.push(("shard_count", Json::from(count)));
+        }
+        Json::obj(pairs)
     }
 
     /// Atomically persist (write temp file, rename over the target).
+    ///
+    /// The temp name is unique per (process, save): `a.json` and a
+    /// sibling cache `a.json.tmp` must not collide, and two processes
+    /// saving sibling caches in one directory must not clobber each
+    /// other's in-flight writes.  A crash can still leave `*.tmp`
+    /// litter behind; `grid merge` skips such files by name.
     pub fn save(&self) -> Result<()> {
+        static TMP_SEQ: AtomicUsize = AtomicUsize::new(0);
         if let Some(dir) = self.path.parent() {
             if !dir.as_os_str().is_empty() {
                 std::fs::create_dir_all(dir)?;
             }
         }
-        let tmp = self.path.with_extension("json.tmp");
+        let name = self
+            .path
+            .file_name()
+            .and_then(|n| n.to_str())
+            .unwrap_or("cache.json");
+        let tmp = self.path.with_file_name(format!(
+            ".{name}.{}-{}.tmp",
+            std::process::id(),
+            TMP_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
         std::fs::write(&tmp, self.to_json().to_string())?;
         std::fs::rename(&tmp, &self.path)?;
         Ok(())
@@ -385,5 +520,71 @@ mod tests {
         std::fs::write(&path, "{not json").unwrap();
         let c5 = CellCache::open(&path, "tiny", Regime::Vanilla, 42).unwrap();
         assert!(c5.is_empty());
+    }
+
+    #[test]
+    fn shard_header_round_trips_and_separates_from_whole_sweep() {
+        let dir = std::env::temp_dir().join("fxp_cellcache_shard_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("cache.shard-1-of-3.json");
+        let mut c = CellCache::open_with_shard(
+            &path,
+            "tiny",
+            Regime::Vanilla,
+            42,
+            Some((1, 3)),
+        )
+        .unwrap();
+        c.put(&job(W::Bits(8), W::Bits(8)), &None);
+        c.save().unwrap();
+
+        // strict reader sees the shard metadata
+        let text = std::fs::read_to_string(&path).unwrap();
+        let (h, cells) = parse_cache_text(&text).unwrap();
+        assert_eq!(h.shard, Some((1, 3)));
+        assert_eq!(h.version, CACHE_VERSION);
+        assert_eq!(cells.len(), 1);
+
+        // same shard reloads; other layouts and whole-sweep openers see
+        // a stale file
+        let same =
+            CellCache::open_with_shard(&path, "tiny", Regime::Vanilla, 42, Some((1, 3)))
+                .unwrap();
+        assert_eq!(same.len(), 1);
+        let other =
+            CellCache::open_with_shard(&path, "tiny", Regime::Vanilla, 42, Some((2, 3)))
+                .unwrap();
+        assert!(other.is_empty());
+        let whole = CellCache::open(&path, "tiny", Regime::Vanilla, 42).unwrap();
+        assert!(whole.is_empty());
+    }
+
+    #[test]
+    fn save_does_not_collide_with_tmp_named_sibling() {
+        // a sibling cache literally named `a.json.tmp` used to be
+        // clobbered by `a.json`'s temp file (with_extension("json.tmp"))
+        let dir = std::env::temp_dir().join("fxp_cellcache_tmpname_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let a = dir.join("a.json");
+        let sibling = dir.join("a.json.tmp");
+        let mut cs = CellCache::open(&sibling, "tiny", Regime::Vanilla, 42).unwrap();
+        cs.put(&job(W::Bits(4), W::Bits(4)), &None);
+        cs.save().unwrap();
+        let before = std::fs::read_to_string(&sibling).unwrap();
+
+        let mut ca = CellCache::open(&a, "tiny", Regime::Vanilla, 42).unwrap();
+        ca.put(&job(W::Bits(8), W::Bits(8)), &None);
+        ca.save().unwrap();
+        assert_eq!(std::fs::read_to_string(&sibling).unwrap(), before);
+        // and no temp litter is left behind after a clean save
+        let litter: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| {
+                e.file_name().to_string_lossy().ends_with(".tmp")
+                    && e.path() != sibling
+            })
+            .collect();
+        assert!(litter.is_empty(), "{litter:?}");
     }
 }

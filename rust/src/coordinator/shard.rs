@@ -1,0 +1,1054 @@
+//! Multi-process sharded sweeps: per-shard cell caches, advisory file
+//! locks, sweep manifests, and the `fxpnet grid merge` engine.
+//!
+//! PR 1's `--shard I/N` scaled a sweep across the cores of one host;
+//! this module scales it across *processes and machines*.  The moving
+//! parts:
+//!
+//! * [`FileLock`] -- advisory `.lock` file (PID + hostname) protecting a
+//!   cache file.  Held for the whole sweep, so concurrent processes
+//!   pointed at one shared cache serialize cleanly instead of racing.
+//!   A lock left behind by a dead process on the same host is detected
+//!   (via procfs) and reclaimed.
+//! * [`ShardedCache`] -- lock-protected [`CellCache`]: with a shard
+//!   layout it writes `cache.shard-I-of-N.json` with the shard recorded
+//!   in the header, so shards on different machines never share a file
+//!   and `grid merge` can later verify the partition.
+//! * [`SweepManifest`] -- the full sweep description (regime, arch,
+//!   base seed, axes, shard layout, per-shard cell lists) as JSON.
+//!   `fxpnet grid plan` prints/writes it so external schedulers (a CI
+//!   matrix, a cluster) can launch one job per shard; `merge
+//!   --manifest` verifies the shard files actually partition that
+//!   sweep and reports exactly which cells remain.
+//! * [`merge_files`] -- strict union of shard caches: hard errors on
+//!   header/version mismatches and on conflicting results for the same
+//!   cell (bit-compared), `*.tmp`/`*.lock` litter skipped, coverage
+//!   reported.  [`MergeOutcome::to_grid`] renders the merged table
+//!   without re-running anything.
+//!
+//! Determinism makes all of this sound: a cell's result is a pure
+//! function of `(base seed, regime, w, a)`, so shards computed anywhere
+//! must agree bit-for-bit wherever they overlap -- a merge conflict is
+//! always a real defect (mixed versions, corruption), never noise.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::evaluator::EvalResult;
+use crate::coordinator::grid::{grid_jobs, CellOutcome, GridResult};
+use crate::coordinator::regimes::Regime;
+use crate::coordinator::report::{
+    cell_key, parse_cache_text, CacheHeader, CellCache, CACHE_VERSION,
+};
+use crate::error::{FxpError, Result};
+use crate::quant::policy::WidthSpec;
+use crate::util::json::Json;
+
+// -- advisory file lock -------------------------------------------------------
+
+/// This host's name, for lock ownership records.
+pub fn hostname() -> String {
+    if let Ok(h) = std::fs::read_to_string("/proc/sys/kernel/hostname") {
+        let h = h.trim();
+        if !h.is_empty() {
+            return h.to_string();
+        }
+    }
+    std::env::var("HOSTNAME").unwrap_or_else(|_| "unknown-host".to_string())
+}
+
+/// Identity of this process's execution environment: kernel boot id +
+/// pid namespace.  "pid absent from /proc" proves the owner is dead
+/// only when the owner ran in *our* pid table -- a peer container can
+/// share the lock's filesystem (and even our hostname) while its pids
+/// are invisible to us, and reclaiming its live lock would put two
+/// writers on one cache.  Empty components on platforms without procfs.
+pub fn instance_id() -> String {
+    static ID: std::sync::OnceLock<String> = std::sync::OnceLock::new();
+    ID.get_or_init(|| {
+        let boot = std::fs::read_to_string("/proc/sys/kernel/random/boot_id")
+            .map(|s| s.trim().to_string())
+            .unwrap_or_default();
+        let pidns = std::fs::read_link("/proc/self/ns/pid")
+            .map(|p| p.to_string_lossy().into_owned())
+            .unwrap_or_default();
+        format!("{boot}/{pidns}")
+    })
+    .clone()
+}
+
+/// Is `pid` alive on this host?  `None` when we cannot tell (no procfs).
+fn pid_alive(pid: u64) -> Option<bool> {
+    if Path::new("/proc/self").exists() {
+        Some(Path::new(&format!("/proc/{pid}")).exists())
+    } else {
+        None
+    }
+}
+
+/// How long to wait for a contended lock before erroring.
+#[derive(Clone, Copy, Debug)]
+pub struct LockOpts {
+    pub wait: Duration,
+    pub poll: Duration,
+}
+
+impl Default for LockOpts {
+    fn default() -> LockOpts {
+        LockOpts { wait: Duration::from_secs(10), poll: Duration::from_millis(50) }
+    }
+}
+
+/// A lock file that cannot be parsed is reclaimed only after this age --
+/// younger ones may simply be mid-write by their creator.
+const CORRUPT_LOCK_GRACE: Duration = Duration::from_secs(10);
+
+/// Advisory lock on a cache file: `<file>.lock` created with
+/// `create_new` (atomic on POSIX and NFS-safe enough for a results
+/// cache), containing the owner's PID, hostname and environment
+/// ([`instance_id`]) as JSON.
+///
+/// Stale-lock recovery: a lock whose owner is provably dead -- same
+/// host, same boot + pid namespace, PID absent from /proc -- is
+/// reclaimed.  Locks from other hosts or other containers are never
+/// presumed stale (we cannot check liveness there); they time out with
+/// an error naming the owner.  Reclaims are serialized through a
+/// short-lived `.reclaim` guard and re-verify the lock's exact content
+/// before unlinking, so a waiter acting on a stale diagnosis cannot
+/// unlink a lock that a new owner acquired in the meantime.
+#[derive(Debug)]
+pub struct FileLock {
+    path: PathBuf,
+}
+
+/// The lock path guarding `target` (`cache.json` -> `cache.json.lock`).
+pub fn lock_path(target: &Path) -> PathBuf {
+    let mut name = target
+        .file_name()
+        .map(|n| n.to_os_string())
+        .unwrap_or_else(|| "cache".into());
+    name.push(".lock");
+    target.with_file_name(name)
+}
+
+impl FileLock {
+    /// Acquire the lock guarding `target`, waiting up to `opts.wait`.
+    pub fn acquire(target: &Path, opts: &LockOpts) -> Result<FileLock> {
+        if let Some(dir) = target.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let path = lock_path(target);
+        let owner = Json::obj(vec![
+            ("pid", Json::from(std::process::id() as usize)),
+            ("host", Json::Str(hostname())),
+            ("instance", Json::Str(instance_id())),
+        ])
+        .to_string();
+        let deadline = Instant::now() + opts.wait;
+        loop {
+            match std::fs::OpenOptions::new()
+                .write(true)
+                .create_new(true)
+                .open(&path)
+            {
+                Ok(mut f) => {
+                    if let Err(e) = f.write_all(owner.as_bytes()) {
+                        // an owner-less lock would block every waiter
+                        // for the corrupt-lock grace period; undo it
+                        drop(f);
+                        let _ = std::fs::remove_file(&path);
+                        return Err(e.into());
+                    }
+                    return Ok(FileLock { path });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                    if let Some((why, observed)) = Self::stale_reason(&path) {
+                        if Self::try_reclaim(&path, &observed) {
+                            log::warn!(
+                                "reclaimed stale lock {} ({why})",
+                                path.display()
+                            );
+                            // the lock is free now -- retry immediately,
+                            // even if the deadline has passed
+                            continue;
+                        }
+                    }
+                    // the deadline also applies to the stale path: an
+                    // unreclaimable stale lock must error, not spin
+                    if Instant::now() >= deadline {
+                        return Err(FxpError::config(format!(
+                            "cache lock {} is held by {}; gave up after \
+                             {:.1}s.  Another sweep is writing this cache -- \
+                             point this run at its own --cache file, raise \
+                             --lock-wait, or delete the lock if its owner is \
+                             truly gone",
+                            path.display(),
+                            Self::describe_owner(&path),
+                            opts.wait.as_secs_f64(),
+                        )));
+                    }
+                    std::thread::sleep(opts.poll);
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+    }
+
+    /// `Some((reason, exact file content))` iff the lock at `path` is
+    /// provably stale.  The content is what [`FileLock::try_reclaim`]
+    /// re-verifies before unlinking.
+    fn stale_reason(path: &Path) -> Option<(String, String)> {
+        let text = std::fs::read_to_string(path).ok()?;
+        match Json::parse(&text) {
+            Ok(j) => {
+                let pid = j.opt("pid")?.as_usize().ok()? as u64;
+                let host = j.opt("host")?.as_str().ok()?.to_string();
+                let instance = j
+                    .opt("instance")
+                    .and_then(|x| x.as_str().ok())
+                    .unwrap_or("")
+                    .to_string();
+                // proving death needs the owner's pid table to be ours:
+                // same host AND same boot/pid-namespace
+                if host == hostname()
+                    && instance == instance_id()
+                    && pid_alive(pid) == Some(false)
+                {
+                    let why = format!("owner pid {pid} in this environment is dead");
+                    Some((why, text))
+                } else {
+                    None
+                }
+            }
+            Err(_) => {
+                // unparseable: mid-write or litter from a crashed writer
+                let age = std::fs::metadata(path)
+                    .and_then(|m| m.modified())
+                    .ok()
+                    .and_then(|t| t.elapsed().ok())?;
+                if age > CORRUPT_LOCK_GRACE {
+                    Some((format!("unreadable owner record, {age:.0?} old"), text))
+                } else {
+                    None
+                }
+            }
+        }
+    }
+
+    /// Remove a stale lock without racing a fresh owner: serialize
+    /// reclaimers through a `create_new` `.reclaim` guard and, inside
+    /// it, unlink only if the lock still holds exactly the record that
+    /// was diagnosed as stale.  A lock re-acquired in the meantime
+    /// carries a live owner record, compares unequal, and survives.
+    fn try_reclaim(lock: &Path, observed: &str) -> bool {
+        let guard = {
+            let mut name = lock
+                .file_name()
+                .map(|n| n.to_os_string())
+                .unwrap_or_else(|| "lock".into());
+            name.push(".reclaim");
+            lock.with_file_name(name)
+        };
+        // a guard abandoned by a crashed reclaimer is itself removed by
+        // age; the critical section below is a few syscalls
+        if let Ok(meta) = std::fs::metadata(&guard) {
+            let old = meta
+                .modified()
+                .ok()
+                .and_then(|t| t.elapsed().ok())
+                .is_some_and(|age| age > CORRUPT_LOCK_GRACE);
+            if old {
+                let _ = std::fs::remove_file(&guard);
+            }
+        }
+        let Ok(_g) = std::fs::OpenOptions::new()
+            .write(true)
+            .create_new(true)
+            .open(&guard)
+        else {
+            return false; // another process is reclaiming; let it finish
+        };
+        let still = std::fs::read_to_string(lock).unwrap_or_default();
+        let reclaimed = still == observed && std::fs::remove_file(lock).is_ok();
+        let _ = std::fs::remove_file(&guard);
+        reclaimed
+    }
+
+    fn describe_owner(path: &Path) -> String {
+        let parsed = std::fs::read_to_string(path)
+            .ok()
+            .and_then(|t| Json::parse(&t).ok());
+        match parsed {
+            Some(j) => format!(
+                "pid {} on host {}",
+                j.opt("pid")
+                    .and_then(|p| p.as_usize().ok())
+                    .map(|p| p.to_string())
+                    .unwrap_or_else(|| "?".into()),
+                j.opt("host")
+                    .and_then(|h| h.as_str().ok())
+                    .unwrap_or("?"),
+            ),
+            None => "an unknown owner".to_string(),
+        }
+    }
+}
+
+impl Drop for FileLock {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+// -- per-shard cache ----------------------------------------------------------
+
+/// Per-shard cache file name: `cache.json` -> `cache.shard-I-of-N.json`.
+pub fn shard_cache_path(base: &Path, index: usize, count: usize) -> PathBuf {
+    let stem = base
+        .file_stem()
+        .and_then(|s| s.to_str())
+        .unwrap_or("cache");
+    let ext = base.extension().and_then(|s| s.to_str()).unwrap_or("json");
+    base.with_file_name(format!("{stem}.shard-{index}-of-{count}.{ext}"))
+}
+
+/// A lock-protected [`CellCache`].  With `split = Some((i, n))` the
+/// backing file is the per-shard `cache.shard-i-of-n.json` and its
+/// header records the shard layout; with `None` it is the shared
+/// whole-sweep file at `base_path`.  The advisory lock is held until
+/// the `ShardedCache` is dropped.
+#[derive(Debug)]
+pub struct ShardedCache {
+    inner: CellCache,
+    _lock: FileLock,
+}
+
+impl ShardedCache {
+    pub fn open(
+        base_path: &Path,
+        arch: &str,
+        regime: Regime,
+        base_seed: u64,
+        split: Option<(usize, usize)>,
+        lock: &LockOpts,
+    ) -> Result<ShardedCache> {
+        let path = match split {
+            Some((i, n)) => shard_cache_path(base_path, i, n),
+            None => base_path.to_path_buf(),
+        };
+        let _lock = FileLock::acquire(&path, lock)?;
+        let inner = CellCache::open_with_shard(&path, arch, regime, base_seed, split)?;
+        Ok(ShardedCache { inner, _lock })
+    }
+
+    pub fn get(&self, job: &crate::coordinator::grid::CellJob) -> Option<Option<EvalResult>> {
+        self.inner.get(job)
+    }
+
+    pub fn put(
+        &mut self,
+        job: &crate::coordinator::grid::CellJob,
+        res: &Option<EvalResult>,
+    ) {
+        self.inner.put(job, res)
+    }
+
+    pub fn save(&self) -> Result<()> {
+        self.inner.save()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.inner.is_empty()
+    }
+
+    pub fn path(&self) -> &Path {
+        self.inner.path()
+    }
+}
+
+// -- sweep manifest -----------------------------------------------------------
+
+/// Manifest schema version (independent of the cell-cache version,
+/// which it also records).
+pub const MANIFEST_VERSION: usize = 1;
+
+/// Everything a scheduler needs to launch a sweep's shards, and
+/// everything `merge` needs to verify they partition one sweep.
+#[derive(Clone, Debug)]
+pub struct SweepManifest {
+    pub arch: String,
+    pub regime: Regime,
+    pub base_seed: u64,
+    pub w_axis: Vec<String>,
+    pub a_axis: Vec<String>,
+    pub shard_count: usize,
+    /// `shards[i]` = cell keys owned by shard `i` (round-robin over the
+    /// flat grid index, matching `grid::in_shard`).
+    pub shards: Vec<Vec<String>>,
+}
+
+impl SweepManifest {
+    pub fn new(
+        arch: &str,
+        regime: Regime,
+        base_seed: u64,
+        shard_count: usize,
+    ) -> Result<SweepManifest> {
+        if shard_count == 0 {
+            return Err(FxpError::config("manifest: shard count must be > 0"));
+        }
+        let mut shards = vec![Vec::new(); shard_count];
+        for job in grid_jobs(regime, base_seed) {
+            shards[job.flat % shard_count].push(CellCache::key(&job));
+        }
+        Ok(SweepManifest {
+            arch: arch.to_string(),
+            regime,
+            base_seed,
+            w_axis: WidthSpec::paper_axis().iter().map(|w| w.label()).collect(),
+            a_axis: WidthSpec::paper_axis().iter().map(|a| a.label()).collect(),
+            shard_count,
+            shards,
+        })
+    }
+
+    /// All cell keys of the sweep, in flat (row-major) grid order.
+    pub fn expected_cells(&self) -> Vec<String> {
+        let mut keys = Vec::with_capacity(self.w_axis.len() * self.a_axis.len());
+        for a in &self.a_axis {
+            for w in &self.w_axis {
+                keys.push(cell_key(w, a));
+            }
+        }
+        keys
+    }
+
+    /// Error unless a cache header belongs to this manifest's sweep.
+    pub fn check_header(&self, path: &Path, h: &CacheHeader) -> Result<()> {
+        let mut bad = Vec::new();
+        if h.arch != self.arch {
+            bad.push(format!("arch {} != {}", h.arch, self.arch));
+        }
+        if h.regime_tag != self.regime.seed_tag() {
+            bad.push(format!(
+                "regime tag {} != {}",
+                h.regime_tag,
+                self.regime.seed_tag()
+            ));
+        }
+        if h.base_seed != self.base_seed {
+            bad.push(format!("base seed {} != {}", h.base_seed, self.base_seed));
+        }
+        if let Some((i, n)) = h.shard {
+            if n != self.shard_count {
+                bad.push(format!(
+                    "shard layout /{n} != manifest's /{}",
+                    self.shard_count
+                ));
+            } else if i >= n {
+                bad.push(format!("shard index {i} out of range /{n}"));
+            }
+        }
+        if bad.is_empty() {
+            Ok(())
+        } else {
+            Err(FxpError::config(format!(
+                "{} does not belong to this manifest's sweep: {}",
+                path.display(),
+                bad.join("; ")
+            )))
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("manifest_version", Json::from(MANIFEST_VERSION)),
+            ("cache_version", Json::from(CACHE_VERSION)),
+            ("arch", Json::Str(self.arch.clone())),
+            ("regime", Json::Str(self.regime.label().to_string())),
+            ("regime_tag", Json::from(self.regime.seed_tag() as usize)),
+            ("base_seed", Json::Str(self.base_seed.to_string())),
+            (
+                "w_axis",
+                Json::Arr(self.w_axis.iter().map(|s| Json::Str(s.clone())).collect()),
+            ),
+            (
+                "a_axis",
+                Json::Arr(self.a_axis.iter().map(|s| Json::Str(s.clone())).collect()),
+            ),
+            ("shard_count", Json::from(self.shard_count)),
+            (
+                "shards",
+                Json::Arr(
+                    self.shards
+                        .iter()
+                        .map(|cells| {
+                            Json::Arr(
+                                cells.iter().map(|k| Json::Str(k.clone())).collect(),
+                            )
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn parse(text: &str) -> Result<SweepManifest> {
+        let j = Json::parse(text)?;
+        let v = j.get("manifest_version")?.as_usize()?;
+        if v != MANIFEST_VERSION {
+            return Err(FxpError::Json(format!(
+                "manifest version {v} (supported: {MANIFEST_VERSION})"
+            )));
+        }
+        let cv = j.get("cache_version")?.as_usize()?;
+        if cv != CACHE_VERSION {
+            return Err(FxpError::Json(format!(
+                "manifest is for cache version {cv}, this build writes \
+                 {CACHE_VERSION}; results would not be comparable"
+            )));
+        }
+        let tag = j.get("regime_tag")?.as_usize()? as u64;
+        let regime = Regime::from_seed_tag(tag)
+            .ok_or_else(|| FxpError::Json(format!("unknown regime tag {tag}")))?;
+        let str_vec = |key: &str| -> Result<Vec<String>> {
+            j.get(key)?
+                .as_arr()?
+                .iter()
+                .map(|s| Ok(s.as_str()?.to_string()))
+                .collect()
+        };
+        let shard_count = j.get("shard_count")?.as_usize()?;
+        let shards: Vec<Vec<String>> = j
+            .get("shards")?
+            .as_arr()?
+            .iter()
+            .map(|cells| {
+                cells
+                    .as_arr()?
+                    .iter()
+                    .map(|k| Ok(k.as_str()?.to_string()))
+                    .collect()
+            })
+            .collect::<Result<_>>()?;
+        if shard_count == 0 || shards.len() != shard_count {
+            return Err(FxpError::Json(format!(
+                "manifest shard lists ({}) do not match shard_count ({shard_count})",
+                shards.len()
+            )));
+        }
+        Ok(SweepManifest {
+            arch: j.get("arch")?.as_str()?.to_string(),
+            regime,
+            base_seed: j
+                .get("base_seed")?
+                .as_str()?
+                .parse::<u64>()
+                .map_err(|_| FxpError::Json("bad base_seed".into()))?,
+            w_axis: str_vec("w_axis")?,
+            a_axis: str_vec("a_axis")?,
+            shard_count,
+            shards,
+        })
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<SweepManifest> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            FxpError::config(format!("manifest {}: {e}", path.display()))
+        })?;
+        Self::parse(&text)
+            .map_err(|e| FxpError::Json(format!("manifest {}: {e}", path.display())))
+    }
+
+    /// Human-readable plan: the sweep header plus one line per shard
+    /// with its cell list -- what `fxpnet grid plan` prints for external
+    /// schedulers.
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "sweep plan: {} arch={} seed={} ({} cells, {} shard{})\n",
+            self.regime.label(),
+            self.arch,
+            self.base_seed,
+            self.w_axis.len() * self.a_axis.len(),
+            self.shard_count,
+            if self.shard_count == 1 { "" } else { "s" },
+        );
+        for (i, cells) in self.shards.iter().enumerate() {
+            out.push_str(&format!(
+                "  shard {i}/{}: {:2} cells: {}\n",
+                self.shard_count,
+                cells.len(),
+                cells.join(" ")
+            ));
+        }
+        out
+    }
+}
+
+// -- merge --------------------------------------------------------------------
+
+/// One cache file, strictly parsed (any schema problem is an error).
+#[derive(Debug)]
+pub struct ShardFile {
+    pub path: PathBuf,
+    pub header: CacheHeader,
+    pub cells: BTreeMap<String, Option<EvalResult>>,
+}
+
+/// Strictly read one cache file for merging.
+pub fn read_cache_file(path: &Path) -> Result<ShardFile> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| FxpError::config(format!("{}: {e}", path.display())))?;
+    let (header, cells) = parse_cache_text(&text)
+        .map_err(|e| FxpError::Json(format!("{}: {e}", path.display())))?;
+    Ok(ShardFile { path: path.to_path_buf(), header, cells })
+}
+
+/// What `merge_files` produced.
+#[derive(Debug)]
+pub struct MergeOutcome {
+    pub arch: String,
+    pub regime: Regime,
+    pub base_seed: u64,
+    pub cells: BTreeMap<String, Option<EvalResult>>,
+    /// cache files actually merged
+    pub merged_files: usize,
+    /// `*.tmp` / `*.lock` litter skipped by name
+    pub skipped: Vec<PathBuf>,
+    /// cells present in more than one input with bit-identical results
+    pub duplicates: usize,
+    /// expected cells with no result in any input (flat grid order)
+    pub missing: Vec<String>,
+}
+
+/// Bit-exact equality of two cached cell results ("n/a" only equals
+/// "n/a"; floats compare by representation, not by `==`).
+fn cells_bit_equal(a: &Option<EvalResult>, b: &Option<EvalResult>) -> bool {
+    match (a, b) {
+        (None, None) => true,
+        (Some(x), Some(y)) => {
+            x.n == y.n
+                && x.top1_err.to_bits() == y.top1_err.to_bits()
+                && x.top5_err.to_bits() == y.top5_err.to_bits()
+                && x.mean_loss.to_bits() == y.mean_loss.to_bits()
+        }
+        _ => false,
+    }
+}
+
+fn paper_cells() -> Vec<String> {
+    let axis = WidthSpec::paper_axis();
+    let mut keys = Vec::with_capacity(axis.len() * axis.len());
+    for a in &axis {
+        for w in &axis {
+            keys.push(cell_key(&w.label(), &a.label()));
+        }
+    }
+    keys
+}
+
+/// Union shard caches into one result set.
+///
+/// Strictness contract (a distributed sweep must fail loudly, never
+/// publish a silently-wrong table):
+/// * every input must parse and carry cache version [`CACHE_VERSION`];
+/// * all inputs must describe the same sweep `(arch, regime, seed)`;
+/// * the same cell appearing twice must agree bit-for-bit -- anything
+///   else is a hard error naming the cell and both files;
+/// * a cell outside the sweep's grid (or, with a manifest, outside its
+///   file's declared shard partition) is a hard error;
+/// * inputs named `*.tmp` / `*.lock` (crash litter from interrupted
+///   saves) are skipped, not parsed.
+pub fn merge_files(
+    inputs: &[PathBuf],
+    manifest: Option<&SweepManifest>,
+) -> Result<MergeOutcome> {
+    let mut skipped = Vec::new();
+    let mut files: Vec<ShardFile> = Vec::new();
+    for p in inputs {
+        let name = p.file_name().and_then(|n| n.to_str()).unwrap_or("");
+        if name.ends_with(".tmp") || name.ends_with(".lock") {
+            log::info!("merge: skipping temp/lock litter {}", p.display());
+            skipped.push(p.clone());
+            continue;
+        }
+        files.push(read_cache_file(p)?);
+    }
+    let Some(first) = files.first() else {
+        return Err(FxpError::config(format!(
+            "no cache files to merge ({} temp/lock inputs skipped)",
+            skipped.len()
+        )));
+    };
+
+    for f in &files {
+        if f.header.version != CACHE_VERSION {
+            return Err(FxpError::config(format!(
+                "{}: cache version {} (this build merges version \
+                 {CACHE_VERSION}); results across versions are not \
+                 comparable -- re-run the sweep",
+                f.path.display(),
+                f.header.version
+            )));
+        }
+    }
+    for f in &files[1..] {
+        let a = &first.header;
+        let b = &f.header;
+        if (a.arch.as_str(), a.regime_tag, a.base_seed)
+            != (b.arch.as_str(), b.regime_tag, b.base_seed)
+        {
+            return Err(FxpError::config(format!(
+                "{} and {} are from different sweeps: \
+                 (arch={}, regime_tag={}, seed={}) vs \
+                 (arch={}, regime_tag={}, seed={})",
+                first.path.display(),
+                f.path.display(),
+                a.arch,
+                a.regime_tag,
+                a.base_seed,
+                b.arch,
+                b.regime_tag,
+                b.base_seed
+            )));
+        }
+    }
+    let regime = Regime::from_seed_tag(first.header.regime_tag).ok_or_else(|| {
+        FxpError::config(format!(
+            "{}: unknown regime tag {}",
+            first.path.display(),
+            first.header.regime_tag
+        ))
+    })?;
+
+    if let Some(m) = manifest {
+        for f in &files {
+            m.check_header(&f.path, &f.header)?;
+            if let Some((i, _)) = f.header.shard {
+                let allowed: BTreeSet<&str> =
+                    m.shards[i].iter().map(|s| s.as_str()).collect();
+                for key in f.cells.keys() {
+                    if !allowed.contains(key.as_str()) {
+                        return Err(FxpError::config(format!(
+                            "{}: cell '{key}' is outside shard {i}'s \
+                             partition -- the file does not match the \
+                             manifest's shard layout",
+                            f.path.display()
+                        )));
+                    }
+                }
+            }
+        }
+    }
+
+    let mut cells: BTreeMap<String, Option<EvalResult>> = BTreeMap::new();
+    let mut owner: BTreeMap<String, PathBuf> = BTreeMap::new();
+    let mut duplicates = 0usize;
+    for f in &files {
+        for (key, res) in &f.cells {
+            match cells.get(key) {
+                None => {
+                    cells.insert(key.clone(), *res);
+                    owner.insert(key.clone(), f.path.clone());
+                }
+                Some(prev) if cells_bit_equal(prev, res) => duplicates += 1,
+                Some(_) => {
+                    return Err(FxpError::config(format!(
+                        "merge conflict at cell '{key}': {} and {} carry the \
+                         same sweep header but different results -- one of \
+                         them was produced by a different build or is \
+                         corrupt; refusing to pick a winner",
+                        owner[key].display(),
+                        f.path.display()
+                    )))
+                }
+            }
+        }
+    }
+
+    let expected = match manifest {
+        Some(m) => m.expected_cells(),
+        None => paper_cells(),
+    };
+    let expected_set: BTreeSet<&str> = expected.iter().map(|s| s.as_str()).collect();
+    for key in cells.keys() {
+        if !expected_set.contains(key.as_str()) {
+            return Err(FxpError::config(format!(
+                "merged inputs contain cell '{key}', which is not part of \
+                 this sweep's grid"
+            )));
+        }
+    }
+    let missing: Vec<String> = expected
+        .iter()
+        .filter(|k| !cells.contains_key(*k))
+        .cloned()
+        .collect();
+
+    Ok(MergeOutcome {
+        arch: first.header.arch.clone(),
+        regime,
+        base_seed: first.header.base_seed,
+        cells,
+        merged_files: files.len(),
+        skipped,
+        duplicates,
+        missing,
+    })
+}
+
+impl MergeOutcome {
+    /// Every expected cell accounted for -- the table is final.
+    pub fn is_complete(&self) -> bool {
+        self.missing.is_empty()
+    }
+
+    /// Assemble the paper-layout grid from the merged cells, without
+    /// re-running anything.  Cells with no result render as "n/a".
+    pub fn to_grid(&self) -> GridResult {
+        let w_axis = WidthSpec::paper_axis().to_vec();
+        let a_axis = WidthSpec::paper_axis().to_vec();
+        let outcomes = a_axis
+            .iter()
+            .map(|&a| {
+                w_axis
+                    .iter()
+                    .map(|&w| CellOutcome {
+                        w,
+                        a,
+                        eval: self
+                            .cells
+                            .get(&cell_key(&w.label(), &a.label()))
+                            .copied()
+                            .flatten(),
+                    })
+                    .collect()
+            })
+            .collect();
+        GridResult {
+            regime: self.regime,
+            arch: self.arch.clone(),
+            w_axis,
+            a_axis,
+            outcomes,
+        }
+    }
+
+    /// Write the union as a whole-sweep cache file (usable as `--cache
+    /// --resume` input, or as the final record of the sweep).
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        CellCache::from_parts(
+            path,
+            &self.arch,
+            self.regime,
+            self.base_seed,
+            self.cells.clone(),
+        )
+        .save()
+    }
+
+    /// One-line coverage summary for logs and CI.
+    pub fn summary(&self) -> String {
+        let total = self.cells.len() + self.missing.len();
+        let mut s = format!(
+            "merged {} file{} ({} duplicate cell{}, {} temp/lock skipped): \
+             {}/{} cells present",
+            self.merged_files,
+            if self.merged_files == 1 { "" } else { "s" },
+            self.duplicates,
+            if self.duplicates == 1 { "" } else { "s" },
+            self.skipped.len(),
+            self.cells.len(),
+            total,
+        );
+        if !self.missing.is_empty() {
+            s.push_str(&format!(", missing: {}", self.missing.join(" ")));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_dir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("fxp_shard_{name}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn shard_cache_path_naming() {
+        let p = shard_cache_path(Path::new("out/cache.json"), 1, 3);
+        assert_eq!(p, Path::new("out/cache.shard-1-of-3.json"));
+        let p = shard_cache_path(Path::new("cache"), 0, 2);
+        assert_eq!(p, Path::new("cache.shard-0-of-2.json"));
+    }
+
+    #[test]
+    fn manifest_round_trips_and_partitions() {
+        let m = SweepManifest::new("tiny", Regime::Prop3, 42, 3).unwrap();
+        assert_eq!(m.shards.len(), 3);
+        let total: usize = m.shards.iter().map(|s| s.len()).sum();
+        assert_eq!(total, 16);
+        // the shard lists partition the expected cells exactly
+        let mut union: Vec<String> =
+            m.shards.iter().flatten().cloned().collect();
+        union.sort();
+        let mut expected = m.expected_cells();
+        expected.sort();
+        assert_eq!(union, expected);
+
+        let back = SweepManifest::parse(&m.to_json().to_string()).unwrap();
+        assert_eq!(back.arch, m.arch);
+        assert_eq!(back.regime, m.regime);
+        assert_eq!(back.base_seed, m.base_seed);
+        assert_eq!(back.shards, m.shards);
+        assert!(back.render().contains("shard 2/3"));
+
+        assert!(SweepManifest::new("tiny", Regime::Vanilla, 1, 0).is_err());
+        assert!(SweepManifest::parse("{}").is_err());
+    }
+
+    #[test]
+    fn manifest_header_check() {
+        let m = SweepManifest::new("tiny", Regime::Vanilla, 42, 2).unwrap();
+        let ok = CacheHeader {
+            version: CACHE_VERSION,
+            arch: "tiny".into(),
+            regime_tag: Regime::Vanilla.seed_tag(),
+            base_seed: 42,
+            shard: Some((1, 2)),
+        };
+        assert!(m.check_header(Path::new("x"), &ok).is_ok());
+        let mut bad = ok.clone();
+        bad.base_seed = 43;
+        assert!(m.check_header(Path::new("x"), &bad).is_err());
+        let mut bad = ok.clone();
+        bad.shard = Some((0, 3));
+        assert!(m.check_header(Path::new("x"), &bad).is_err());
+    }
+
+    #[test]
+    fn lock_roundtrip_and_release_on_drop() {
+        let dir = temp_dir("lockdrop");
+        let target = dir.join("cache.json");
+        let opts = LockOpts {
+            wait: Duration::from_millis(100),
+            poll: Duration::from_millis(5),
+        };
+        {
+            let _l = FileLock::acquire(&target, &opts).unwrap();
+            assert!(lock_path(&target).exists());
+            // held by our live pid: a second acquire must error cleanly
+            let err = FileLock::acquire(&target, &opts).unwrap_err();
+            let msg = err.to_string();
+            assert!(msg.contains("held by"), "{msg}");
+            assert!(msg.contains(&std::process::id().to_string()), "{msg}");
+        }
+        assert!(!lock_path(&target).exists(), "lock not released on drop");
+        let _l = FileLock::acquire(&target, &opts).unwrap();
+    }
+
+    /// Lock-file content claiming a dead owner in the given environment.
+    fn dead_owner_record(instance: &str) -> String {
+        // largest pid_max on Linux is 2^22; this pid cannot be alive
+        format!(
+            "{{\"pid\": 4194305, \"host\": \"{}\", \"instance\": \"{instance}\"}}",
+            hostname()
+        )
+    }
+
+    #[test]
+    fn stale_lock_from_dead_pid_is_reclaimed() {
+        if pid_alive(1).is_none() {
+            return; // no procfs: liveness is undecidable on this platform
+        }
+        let dir = temp_dir("stalelock");
+        let target = dir.join("cache.json");
+        std::fs::write(lock_path(&target), dead_owner_record(&instance_id()))
+            .unwrap();
+        let opts = LockOpts {
+            wait: Duration::from_millis(200),
+            poll: Duration::from_millis(5),
+        };
+        let _l = FileLock::acquire(&target, &opts)
+            .expect("stale lock should be reclaimed");
+    }
+
+    #[test]
+    fn foreign_host_or_container_lock_is_never_presumed_stale() {
+        let dir = temp_dir("foreignlock");
+        let target = dir.join("cache.json");
+        std::fs::write(
+            lock_path(&target),
+            "{\"pid\": 4194305, \"host\": \"some-other-machine\", \
+             \"instance\": \"x\"}",
+        )
+        .unwrap();
+        let opts = LockOpts {
+            wait: Duration::from_millis(50),
+            poll: Duration::from_millis(5),
+        };
+        let err = FileLock::acquire(&target, &opts).unwrap_err();
+        assert!(err.to_string().contains("some-other-machine"));
+
+        // same hostname but another container/boot (a peer whose pids we
+        // cannot see): its dead-looking pid proves nothing, never reclaim
+        std::fs::write(
+            lock_path(&target),
+            dead_owner_record("someone-elses-boot/pidns"),
+        )
+        .unwrap();
+        assert!(FileLock::acquire(&target, &opts).is_err());
+        // pre-instance lock formats are likewise not reclaimable
+        std::fs::write(
+            lock_path(&target),
+            format!("{{\"pid\": 4194305, \"host\": \"{}\"}}", hostname()),
+        )
+        .unwrap();
+        assert!(FileLock::acquire(&target, &opts).is_err());
+    }
+
+    #[test]
+    fn reclaim_reverifies_content_before_unlinking() {
+        let dir = temp_dir("reclaimverify");
+        let target = dir.join("cache.json");
+        let lock = lock_path(&target);
+        let stale = dead_owner_record(&instance_id());
+        std::fs::write(&lock, &stale).unwrap();
+        // the lock changed hands between diagnosis and reclaim: the old
+        // observation must not unlink the new owner's lock
+        let fresh = "{\"pid\": 1, \"host\": \"h\", \"instance\": \"i\"}";
+        std::fs::write(&lock, fresh).unwrap();
+        assert!(!FileLock::try_reclaim(&lock, &stale));
+        assert_eq!(std::fs::read_to_string(&lock).unwrap(), fresh);
+        // unchanged content does get reclaimed
+        std::fs::write(&lock, &stale).unwrap();
+        assert!(FileLock::try_reclaim(&lock, &stale));
+        assert!(!lock.exists());
+    }
+}

@@ -6,20 +6,27 @@ use fxpnet::util::logging;
 
 fn main() {
     logging::init();
+    // exit-code contract: 0 = success (for `grid merge --check`: sweep
+    // complete), 1 = any error including bad usage, 2 = reserved for
+    // `--check`'s "incomplete sweep" -- scripts gating on coverage must
+    // never confuse a mangled command line with missing cells
     let argv: Vec<String> = std::env::args().skip(1).collect();
     if argv.is_empty() {
         eprintln!("{USAGE}");
-        std::process::exit(2);
+        std::process::exit(1);
     }
     let args = match Args::parse(argv) {
         Ok(a) => a,
         Err(e) => {
             eprintln!("error: {e}\n\n{USAGE}");
-            std::process::exit(2);
+            std::process::exit(1);
         }
     };
-    if let Err(e) = commands::dispatch(&args) {
-        eprintln!("error: {e}");
-        std::process::exit(1);
+    match commands::dispatch(&args) {
+        Ok(code) => std::process::exit(code),
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        }
     }
 }

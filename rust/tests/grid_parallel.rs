@@ -1,39 +1,25 @@
-//! Regression: serial/parallel equivalence of the grid sweep engine.
+//! Regression: serial/parallel/multi-process equivalence of the grid
+//! sweep engine.
 //!
 //! The determinism contract under test: a sweep's `CellOutcome` table is
 //! a pure function of `(base_seed, regime, arch)` -- worker count,
-//! scheduling order, sharding, and resume-from-cache must all be
-//! invisible in the results, bit for bit.
+//! scheduling order, sharding, resume-from-cache, per-shard cache files
+//! and `grid merge` must all be invisible in the results, bit for bit.
 //!
-//! Cells here are synthetic (seeded RNG work, no XLA engine) so the test
-//! runs in the offline build; the real regimes feed every stochastic
-//! stream from the same per-cell seeds (`grid::cell_seed`), which is
-//! exactly the property exercised here.
+//! Cells are synthetic (`grid::synthetic_cell`: seeded RNG work, no XLA
+//! engine) so the tests run in the offline build; the real regimes feed
+//! every stochastic stream from the same per-cell seeds
+//! (`grid::cell_seed`), which is exactly the property exercised here.
 
-use fxpnet::coordinator::evaluator::EvalResult;
-use fxpnet::coordinator::grid::{self, CellJob, GridResult, SweepOpts};
-use fxpnet::coordinator::regimes::{CellResult, Regime};
-use fxpnet::util::rng::Rng;
+use std::path::{Path, PathBuf};
+use std::time::Duration;
 
-/// Deterministic synthetic cell: a few thousand RNG draws (stand-in for
-/// training) whose outcome -- including the "diverged -> n/a" case --
-/// depends only on the job's derived seed.
-fn fake_cell(job: &CellJob) -> fxpnet::Result<CellResult> {
-    let mut rng = Rng::new(job.seed);
-    let mut acc = 0.0f64;
-    for _ in 0..2000 {
-        acc += rng.uniform();
-    }
-    if rng.uniform() < 0.2 {
-        return Ok(None); // this cell "fails to converge"
-    }
-    Ok(Some(EvalResult {
-        n: 1000 + rng.below(1000),
-        top1_err: rng.uniform(),
-        top5_err: rng.uniform() * 0.5,
-        mean_loss: acc / 1000.0,
-    }))
-}
+use fxpnet::coordinator::grid::{self, GridResult, SweepOpts};
+use fxpnet::coordinator::regimes::Regime;
+use fxpnet::coordinator::report::CACHE_VERSION;
+use fxpnet::coordinator::shard::{
+    self, lock_path, FileLock, LockOpts, SweepManifest,
+};
 
 fn sweep(base_seed: u64, opts: &SweepOpts) -> grid::SweepOutcome {
     grid::run_sweep_with(
@@ -42,7 +28,7 @@ fn sweep(base_seed: u64, opts: &SweepOpts) -> grid::SweepOutcome {
         base_seed,
         opts,
         |_wid| Ok(()),
-        |_, job| fake_cell(job),
+        |_, job| grid::synthetic_cell(job),
     )
     .unwrap()
 }
@@ -65,12 +51,34 @@ fn bits(g: &GridResult) -> Vec<Option<(usize, u64, u64, u64)>> {
         .collect()
 }
 
-fn temp_dir(name: &str) -> std::path::PathBuf {
+fn temp_dir(name: &str) -> PathBuf {
     let dir = std::env::temp_dir()
         .join(format!("fxp_grid_parallel_{name}_{}", std::process::id()));
     let _ = std::fs::remove_dir_all(&dir);
     std::fs::create_dir_all(&dir).unwrap();
     dir
+}
+
+/// Run all `count` shards of a sweep into per-shard cache files and
+/// return the shard file paths.
+fn run_split_shards(dir: &Path, base_seed: u64, count: usize) -> Vec<PathBuf> {
+    let base = dir.join("cache.json");
+    (0..count)
+        .map(|index| {
+            let opts = SweepOpts {
+                workers: 2,
+                shard: Some((index, count)),
+                cache_path: Some(base.clone()),
+                split_cache: true,
+                ..Default::default()
+            };
+            let out = sweep(base_seed, &opts);
+            assert!(!out.is_complete() || count == 1);
+            let path = opts.cache_file().unwrap();
+            assert!(path.exists(), "{} missing", path.display());
+            path
+        })
+        .collect()
 }
 
 #[test]
@@ -116,7 +124,7 @@ fn shards_union_to_the_unsharded_result() {
                 workers: 2,
                 shard: Some((index, 3)),
                 cache_path: Some(cache.clone()),
-                resume: false,
+                ..Default::default()
             },
         );
         // a shard computes ~1/3 of the 16 cells
@@ -135,6 +143,8 @@ fn shards_union_to_the_unsharded_result() {
         bits(&last.grid),
         "sharded union differs from the unsharded sweep"
     );
+    // the sweep released its advisory lock on completion
+    assert!(!lock_path(&cache).exists());
 }
 
 #[test]
@@ -143,9 +153,9 @@ fn resume_skips_cached_cells_and_preserves_bits() {
     let cache = dir.join("cache.json");
     let opts = SweepOpts {
         workers: 4,
-        shard: None,
         cache_path: Some(cache.clone()),
         resume: true,
+        ..Default::default()
     };
     let first = sweep(42, &opts);
     assert_eq!(first.computed, 16);
@@ -167,12 +177,7 @@ fn resume_skips_cached_cells_and_preserves_bits() {
 fn sharding_without_cache_is_partial_but_ordered() {
     let out = sweep(
         42,
-        &SweepOpts {
-            workers: 2,
-            shard: Some((1, 4)),
-            cache_path: None,
-            resume: false,
-        },
+        &SweepOpts { workers: 2, shard: Some((1, 4)), ..Default::default() },
     );
     assert_eq!(out.computed, 4);
     assert_eq!(out.missing, 12);
@@ -187,4 +192,229 @@ fn sharding_without_cache_is_partial_but_ordered() {
             assert!(cell.is_none(), "cell {flat} should be missing/n-a");
         }
     }
+}
+
+// -- multi-process sharding: per-shard caches + merge -------------------------
+
+#[test]
+fn merged_shard_caches_equal_the_serial_table_bit_exactly() {
+    let reference = sweep(42, &SweepOpts { workers: 1, ..Default::default() });
+    for count in [2usize, 3] {
+        let dir = temp_dir(&format!("merge{count}"));
+        let files = run_split_shards(&dir, 42, count);
+        let manifest = SweepManifest::new("tiny", Regime::Vanilla, 42, count).unwrap();
+
+        // merge without and with the manifest; both must be complete
+        for m in [None, Some(&manifest)] {
+            let merged = shard::merge_files(&files, m).unwrap();
+            assert!(
+                merged.is_complete(),
+                "{count} shards: missing {:?}",
+                merged.missing
+            );
+            assert_eq!(merged.merged_files, count);
+            assert_eq!(merged.duplicates, 0);
+            assert_eq!(
+                bits(&reference.grid),
+                bits(&merged.to_grid()),
+                "{count}-shard merge differs from the serial sweep"
+            );
+        }
+
+        // the saved union is a valid whole-sweep cache: resuming from it
+        // computes nothing and reproduces the same table
+        let out = dir.join("merged.json");
+        shard::merge_files(&files, Some(&manifest)).unwrap().save(&out).unwrap();
+        let resumed = sweep(
+            42,
+            &SweepOpts {
+                workers: 2,
+                cache_path: Some(out),
+                resume: true,
+                ..Default::default()
+            },
+        );
+        assert_eq!(resumed.computed, 0);
+        assert_eq!(bits(&reference.grid), bits(&resumed.grid));
+    }
+}
+
+#[test]
+fn merge_reports_missing_cells_of_a_partial_union() {
+    let dir = temp_dir("merge_partial");
+    let files = run_split_shards(&dir, 42, 3);
+    let merged = shard::merge_files(&files[..2], None).unwrap();
+    assert!(!merged.is_complete());
+    // shard 2 of 3 owns flat = 2, 5, 8, 11, 14
+    assert_eq!(merged.missing.len(), 5);
+    let manifest = SweepManifest::new("tiny", Regime::Vanilla, 42, 3).unwrap();
+    let mut expected: Vec<String> = manifest.shards[2].clone();
+    let mut got = merged.missing.clone();
+    expected.sort();
+    got.sort();
+    assert_eq!(got, expected);
+    assert!(merged.summary().contains("11/16"));
+}
+
+#[test]
+fn merge_rejects_shards_from_different_sweeps_and_versions() {
+    let dir = temp_dir("merge_reject");
+    let a = run_split_shards(&dir.join("a"), 42, 2);
+    let b = run_split_shards(&dir.join("b"), 43, 2);
+
+    // different base seed => different sweep
+    let err =
+        shard::merge_files(&[a[0].clone(), b[1].clone()], None).unwrap_err();
+    assert!(err.to_string().contains("different sweeps"), "{err}");
+
+    // version tampering => hard error naming the file and version
+    let text = std::fs::read_to_string(&a[0]).unwrap();
+    let tampered_path = dir.join("tampered.json");
+    let tampered =
+        text.replace(&format!("\"version\":{CACHE_VERSION}"), "\"version\":1");
+    assert_ne!(text, tampered, "version field not found to tamper");
+    std::fs::write(&tampered_path, tampered).unwrap();
+    let err = shard::merge_files(&[tampered_path.clone()], None).unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("version 1"), "{msg}");
+    assert!(msg.contains("tampered.json"), "{msg}");
+
+    // unparseable file => hard error (merge is strict, unlike --resume)
+    std::fs::write(&tampered_path, "{not json").unwrap();
+    assert!(shard::merge_files(&[tampered_path], None).is_err());
+
+    // manifest mismatch: files from seed 43 against a seed-42 manifest
+    let manifest = SweepManifest::new("tiny", Regime::Vanilla, 42, 2).unwrap();
+    let err = shard::merge_files(&b, Some(&manifest)).unwrap_err();
+    assert!(err.to_string().contains("does not belong"), "{err}");
+}
+
+#[test]
+fn merge_conflict_on_one_cell_is_a_hard_error_naming_it() {
+    let dir = temp_dir("merge_conflict");
+    let files = run_split_shards(&dir, 42, 2);
+    // forge a copy of shard 1 claiming different bits for one cell
+    let text = std::fs::read_to_string(&files[1]).unwrap();
+    let forged = text.replacen("\"top1_err\":0.", "\"top1_err\":0.99", 1);
+    assert_ne!(text, forged, "no ok cell found to forge");
+    let forged_path = dir.join("cache.shard-1-of-2.forged.json");
+    std::fs::write(&forged_path, forged).unwrap();
+
+    let err = shard::merge_files(&[files[1].clone(), forged_path], None)
+        .unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("merge conflict at cell 'w="), "{msg}");
+    assert!(msg.contains("forged"), "{msg}");
+
+    // identical duplicate inputs, by contrast, merge fine
+    let merged =
+        shard::merge_files(&[files[1].clone(), files[1].clone()], None).unwrap();
+    assert!(merged.duplicates > 0);
+}
+
+#[test]
+fn merge_skips_tmp_and_lock_litter() {
+    let dir = temp_dir("merge_litter");
+    let files = run_split_shards(&dir, 42, 2);
+    // crash litter: an interrupted save and an abandoned lock file
+    let tmp = dir.join(".cache.json.12345-0.tmp");
+    std::fs::write(&tmp, "{half a json").unwrap();
+    let lock = dir.join("cache.json.lock");
+    std::fs::write(&lock, "{\"pid\": 1, \"host\": \"gone\"}").unwrap();
+
+    let mut inputs = files.clone();
+    inputs.push(tmp.clone());
+    inputs.push(lock.clone());
+    let merged = shard::merge_files(&inputs, None).unwrap();
+    assert!(merged.is_complete());
+    assert_eq!(merged.skipped, vec![tmp.clone(), lock.clone()]);
+
+    // but merging *only* litter is an error, not an empty success
+    assert!(shard::merge_files(&[tmp, lock], None).is_err());
+}
+
+// -- cross-process lock protection --------------------------------------------
+
+#[test]
+fn second_opener_of_a_locked_cache_errors_cleanly() {
+    let dir = temp_dir("lock_contention");
+    let cache = dir.join("cache.json");
+    let _held = FileLock::acquire(&cache, &LockOpts::default()).unwrap();
+    let opts = SweepOpts {
+        workers: 1,
+        cache_path: Some(cache.clone()),
+        lock: LockOpts {
+            wait: Duration::from_millis(100),
+            poll: Duration::from_millis(10),
+        },
+        ..Default::default()
+    };
+    let err = grid::run_sweep_with(
+        Regime::Vanilla,
+        "tiny",
+        42,
+        &opts,
+        |_wid| Ok(()),
+        |_, job| grid::synthetic_cell(job),
+    )
+    .unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("held by"), "{msg}");
+    assert!(msg.contains(&std::process::id().to_string()), "{msg}");
+}
+
+#[test]
+fn waiting_opener_proceeds_once_the_lock_is_released() {
+    let dir = temp_dir("lock_wait");
+    let cache = dir.join("cache.json");
+    let held = FileLock::acquire(&cache, &LockOpts::default()).unwrap();
+    let release = std::thread::spawn(move || {
+        std::thread::sleep(Duration::from_millis(150));
+        drop(held);
+    });
+    let opts = SweepOpts {
+        workers: 2,
+        cache_path: Some(cache.clone()),
+        lock: LockOpts {
+            wait: Duration::from_secs(30),
+            poll: Duration::from_millis(10),
+        },
+        ..Default::default()
+    };
+    let out = sweep(42, &opts);
+    assert!(out.is_complete());
+    release.join().unwrap();
+    let reference = sweep(42, &SweepOpts { workers: 1, ..Default::default() });
+    assert_eq!(bits(&reference.grid), bits(&out.grid));
+}
+
+#[test]
+fn stale_lock_from_a_dead_pid_is_reclaimed_by_a_sweep() {
+    if !std::path::Path::new("/proc/self").exists() {
+        return; // liveness is undecidable without procfs
+    }
+    let dir = temp_dir("lock_stale");
+    let cache = dir.join("cache.json");
+    // pid_max on Linux caps at 2^22, so this owner cannot exist
+    std::fs::write(
+        lock_path(&cache),
+        format!(
+            "{{\"pid\": 4194305, \"host\": \"{}\", \"instance\": \"{}\"}}",
+            shard::hostname(),
+            shard::instance_id()
+        ),
+    )
+    .unwrap();
+    let opts = SweepOpts {
+        workers: 2,
+        cache_path: Some(cache.clone()),
+        lock: LockOpts {
+            wait: Duration::from_millis(500),
+            poll: Duration::from_millis(10),
+        },
+        ..Default::default()
+    };
+    let out = sweep(42, &opts);
+    assert!(out.is_complete(), "stale lock was not reclaimed");
+    assert!(!lock_path(&cache).exists());
 }
