@@ -1,0 +1,124 @@
+//! Native training-engine throughput: SGD steps/second (and images/s)
+//! of the pure-Rust backprop + stochastic-rounding fixed-point trainer,
+//! fully offline.  Writes `BENCH_train.json` for CI artifact upload
+//! next to `BENCH_engine.json`.
+//!
+//! Scale via:
+//! * `FXP_BENCH_TRAIN_ARCH`  -- architecture (default "tiny")
+//! * `FXP_BENCH_TRAIN_STEPS` -- timed steps (default 30)
+//! * `FXP_BENCH_TRAIN_N`     -- training set size (default 512)
+//! * `FXP_BENCH_ASSERT`      -- if set, require finite losses and a
+//!   positive step rate (the convergence *gate* lives in
+//!   `fxpnet train --gate`; this bench only measures)
+
+use fxpnet::bench::fixtures::{env_str, env_usize};
+use fxpnet::bench::Table;
+use fxpnet::coordinator::backend::{Backend, SessionCfg};
+use fxpnet::coordinator::trainer::{upd_all, TrainSession};
+use fxpnet::data::loader::LoaderCfg;
+use fxpnet::data::synth::Dataset;
+use fxpnet::model::params::ParamSet;
+use fxpnet::quant::policy::{NetQuant, WidthSpec};
+use fxpnet::train::NativeBackend;
+
+fn main() {
+    fxpnet::util::logging::init();
+    let arch = env_str("FXP_BENCH_TRAIN_ARCH", "tiny");
+    let steps = env_usize("FXP_BENCH_TRAIN_STEPS", 30);
+    let train_n = env_usize("FXP_BENCH_TRAIN_N", 512);
+
+    let backend = NativeBackend::new();
+    let spec = backend.arch(&arch).expect("zoo arch");
+    let data = Dataset::generate(train_n, spec.input[0], spec.input[1], 301);
+    let params = ParamSet::init(&spec, 42);
+    let a_stats = backend
+        .activation_stats(&arch, &params, &data, 2)
+        .expect("calibration");
+    let nq = NetQuant::for_cell(
+        WidthSpec::Bits(8),
+        WidthSpec::Bits(8),
+        &params.weight_stats(),
+        &a_stats,
+        fxpnet::quant::calib::CalibMethod::SqnrGaussian,
+    )
+    .expect("cell");
+    let mut sess = backend
+        .new_session(SessionCfg {
+            arch: &arch,
+            params: &params,
+            nq: &nq,
+            upd: &upd_all(spec.num_layers),
+            lr: 0.02,
+            momentum: 0.9,
+            data,
+            loader: LoaderCfg {
+                batch: spec.train_batch,
+                augment: true,
+                max_shift: 2,
+                seed: 42,
+            },
+            max_loss: 30.0,
+            seed: 42,
+        })
+        .expect("session");
+
+    // warm up buffers, the loader prefetch, and the weight packer
+    let mut losses = Vec::with_capacity(steps + 3);
+    for _ in 0..3 {
+        losses.push(sess.step().expect("warmup step"));
+    }
+    let t = std::time::Instant::now();
+    for _ in 0..steps {
+        losses.push(sess.step().expect("train step"));
+    }
+    let dt = t.elapsed().as_secs_f64();
+    let steps_per_s = steps as f64 / dt.max(1e-12);
+    let img_per_s = steps_per_s * spec.train_batch as f64;
+
+    let mut table = Table::new(
+        &format!(
+            "native train throughput ({arch}, batch {}, 8w/8a)",
+            spec.train_batch
+        ),
+        &["metric", "value"],
+    );
+    table.row(vec!["steps timed".into(), steps.to_string()]);
+    table.row(vec!["ms/step".into(), format!("{:.2}", 1e3 * dt / steps as f64)]);
+    table.row(vec!["steps/s".into(), format!("{steps_per_s:.1}")]);
+    table.row(vec!["img/s".into(), format!("{img_per_s:.0}")]);
+    table.row(vec![
+        "loss".into(),
+        format!("{:.4} -> {:.4}", losses[0], losses[losses.len() - 1]),
+    ]);
+    println!("{}", table.render());
+
+    let json = format!(
+        "{{\n  \"bench\": \"train_throughput\",\n  \"arch\": \"{arch}\",\n  \
+         \"batch\": {},\n  \"steps\": {steps},\n  \
+         \"ms_per_step\": {:.3},\n  \"steps_per_s\": {steps_per_s:.2},\n  \
+         \"img_per_s\": {img_per_s:.2},\n  \"first_loss\": {:.6},\n  \
+         \"final_loss\": {:.6}\n}}\n",
+        spec.train_batch,
+        1e3 * dt / steps as f64,
+        losses[0],
+        losses[losses.len() - 1],
+    );
+    // cargo runs bench executables with cwd = the package root (rust/);
+    // anchor the report at the workspace root where CI picks it up
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_train.json");
+    std::fs::write(&path, &json).expect("write BENCH_train.json");
+    println!("wrote {}", path.display());
+
+    if std::env::var("FXP_BENCH_ASSERT").is_ok() {
+        assert!(
+            losses.iter().all(|l| l.is_finite()),
+            "non-finite training loss: {losses:?}"
+        );
+        assert!(steps_per_s > 0.0);
+        println!(
+            "FXP_BENCH_ASSERT ok: {steps_per_s:.1} steps/s, losses finite"
+        );
+    }
+}

@@ -11,6 +11,7 @@
 //! cargo run --release --example iterative_finetune
 //! ```
 
+use fxpnet::coordinator::backend::XlaBackend;
 use fxpnet::coordinator::calibrate;
 use fxpnet::coordinator::config::RunCfg;
 use fxpnet::coordinator::evaluator::evaluate;
@@ -26,7 +27,8 @@ use fxpnet::runtime::Engine;
 fn main() -> fxpnet::Result<()> {
     fxpnet::util::logging::init();
     let artifacts = std::env::var("FXPNET_ARTIFACTS").unwrap_or("artifacts".into());
-    let engine = Engine::cpu(&artifacts)?;
+    let backend = XlaBackend::new(Engine::cpu(&artifacts)?);
+    let engine = backend.engine();
     let arch = "shallow";
     let spec = engine.manifest.arch(arch)?.clone();
     let l = spec.num_layers;
@@ -43,18 +45,18 @@ fn main() -> fxpnet::Result<()> {
     let nq_f = NetQuant::all_float(l);
     let lcfg = LoaderCfg { batch: spec.train_batch, augment: true, max_shift: 2, seed: 5 };
     let mut tr = Trainer::new(
-        &engine, arch, &p0, &nq_f, &upd_all(l), 0.05, 0.9, train.clone(),
+        engine, arch, &p0, &nq_f, &upd_all(l), 0.05, 0.9, train.clone(),
         lcfg.clone(), 30.0,
     )?;
     tr.run(300, 50)?;
     let base = tr.params()?;
-    let ev_f = evaluate(&engine, arch, &base, &nq_f, &eval)?;
+    let ev_f = evaluate(engine, arch, &base, &nq_f, &eval)?;
     println!("float base: {ev_f}\n");
 
     let cfg = RunCfg { finetune_steps: 120, phase_steps: 60, ..RunCfg::default() };
-    let calib = calibrate::activation_stats(&engine, arch, &base, &train, 3)?;
+    let calib = calibrate::activation_stats(engine, arch, &base, &train, 3)?;
     let ctx = CellCtx {
-        engine: &engine,
+        backend: &backend,
         arch,
         train_data: &train,
         eval_data: &eval,
@@ -80,7 +82,7 @@ fn main() -> fxpnet::Result<()> {
         let p = phases::schedule(l)[0];
         let nq = full.with_act_prefix(p.act_prefix);
         Trainer::new(
-            &engine, arch, &p1, &nq, &upd_single(l, p.update_layer),
+            engine, arch, &p1, &nq, &upd_single(l, p.update_layer),
             cfg.lr, cfg.momentum, train.clone(), lcfg, cfg.max_loss,
         )?
     };
@@ -104,7 +106,7 @@ fn main() -> fxpnet::Result<()> {
     }
     let tuned = tr.params()?;
     let nq_eval = ctx.resolve(&tuned, w, a)?;
-    let ev = evaluate(&engine, arch, &tuned, &nq_eval, &eval)?;
+    let ev = evaluate(engine, arch, &tuned, &nq_eval, &eval)?;
     println!("\nProposal 3 result: {ev}");
     println!("float baseline   : {ev_f}");
     Ok(())

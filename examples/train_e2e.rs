@@ -16,6 +16,7 @@
 //! E2E_PRETRAIN=60 E2E_PHASE=5 cargo run --release --example train_e2e  # smoke
 //! ```
 
+use fxpnet::coordinator::backend::XlaBackend;
 use fxpnet::coordinator::calibrate;
 use fxpnet::coordinator::config::RunCfg;
 use fxpnet::coordinator::evaluator::evaluate;
@@ -39,7 +40,8 @@ fn envn(key: &str, default: usize) -> usize {
 fn main() -> fxpnet::Result<()> {
     fxpnet::util::logging::init();
     let artifacts = std::env::var("FXPNET_ARTIFACTS").unwrap_or("artifacts".into());
-    let engine = Engine::cpu(&artifacts)?;
+    let backend = XlaBackend::new(Engine::cpu(&artifacts)?);
+    let engine = backend.engine();
     let arch = "paper12";
     let spec = engine.manifest.arch(arch)?.clone();
 
@@ -77,7 +79,7 @@ fn main() -> fxpnet::Result<()> {
     };
     let nq_float = fxpnet::quant::policy::NetQuant::all_float(spec.num_layers);
     let mut tr = Trainer::new(
-        &engine, arch, &params, &nq_float, &upd_all(spec.num_layers),
+        engine, arch, &params, &nq_float, &upd_all(spec.num_layers),
         if from_ckpt { 0.002 } else { 0.05 }, 0.9, train.clone(),
         LoaderCfg { batch: spec.train_batch, augment: true, max_shift: 2, seed: 42 },
         30.0,
@@ -112,15 +114,15 @@ fn main() -> fxpnet::Result<()> {
         // never clobber a full CLI pretrain with a shorter example run
         save_params("paper12_float.ckpt", arch, tr.global_step() as u64, &base)?;
     }
-    let ev_float = evaluate(&engine, arch, &base, &nq_float, &eval)?;
+    let ev_float = evaluate(engine, arch, &base, &nq_float, &eval)?;
     println!("float baseline: {ev_float}");
 
     // ---- 2. calibration -------------------------------------------------
-    let calib = calibrate::activation_stats(&engine, arch, &base, &train, 4)?;
+    let calib = calibrate::activation_stats(engine, arch, &base, &train, 4)?;
     println!("calibrated activation formats (8-bit, SQNR):");
     let cfg = RunCfg { phase_steps, finetune_steps: 150, ..RunCfg::default() };
     let ctx = CellCtx {
-        engine: &engine,
+        backend: &backend,
         arch,
         train_data: &train,
         eval_data: &eval,
@@ -156,7 +158,7 @@ fn main() -> fxpnet::Result<()> {
     let ips = n as f64 / sw2.elapsed().as_secs_f64();
     let sub = Dataset { images: imgs, labels: eval.labels.gather_rows(&rows)?, h: spec.input[0], w: spec.input[1] };
     let xla_logits =
-        fxpnet::cli::commands::evaluate_logits(&engine, arch, &p1net, &tuned_nq, &sub)?;
+        fxpnet::cli::commands::evaluate_logits(engine, arch, &p1net, &tuned_nq, &sub)?;
     let parity = parity_report(&int_logits, &xla_logits)?;
     println!("integer engine     : {ips:.1} img/s, parity {parity}");
 

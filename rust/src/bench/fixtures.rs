@@ -14,9 +14,9 @@
 
 use std::collections::BTreeMap;
 
-use crate::coordinator::calibrate;
+use crate::coordinator::backend::{Backend, BackendSpec, SessionCfg};
 use crate::coordinator::config::RunCfg;
-use crate::coordinator::trainer::{upd_all, Trainer};
+use crate::coordinator::trainer::{run_session, upd_all, TrainSession};
 use crate::data::loader::LoaderCfg;
 use crate::data::synth::Dataset;
 use crate::error::Result;
@@ -25,7 +25,6 @@ use crate::model::manifest::ArchSpec;
 use crate::model::params::ParamSet;
 use crate::quant::calib::{CalibMethod, LayerStats};
 use crate::quant::policy::{NetQuant, WidthSpec};
-use crate::runtime::Engine;
 
 pub fn env_usize(key: &str, default: usize) -> usize {
     std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
@@ -103,7 +102,7 @@ pub fn env_str(key: &str, default: &str) -> String {
 
 /// Everything a table bench needs.
 pub struct BenchEnv {
-    pub engine: Engine,
+    pub backend: Box<dyn Backend>,
     pub arch: String,
     pub base: ParamSet,
     pub a_stats: Vec<LayerStats>,
@@ -112,14 +111,25 @@ pub struct BenchEnv {
     pub cfg: RunCfg,
 }
 
+/// Backend for benches: `FXP_BENCH_BACKEND={native|xla}` wins; by
+/// default the table benches run the native engine offline and the XLA
+/// path when `artifacts/` has been built.
+pub fn bench_backend() -> Result<Box<dyn Backend>> {
+    let artifacts = env_str("FXPNET_ARTIFACTS", "artifacts");
+    let spec = match std::env::var("FXP_BENCH_BACKEND") {
+        Ok(s) => BackendSpec::parse(&s, &artifacts)?,
+        Err(_) => BackendSpec::auto(&artifacts),
+    };
+    spec.build()
+}
+
 /// Build the bench environment: load or pretrain the float base net,
 /// calibrate, size the RunCfg from the environment.
 pub fn bench_env() -> Result<BenchEnv> {
     crate::util::logging::init();
-    let artifacts = env_str("FXPNET_ARTIFACTS", "artifacts");
     let arch = env_str("FXP_BENCH_ARCH", "shallow");
-    let engine = Engine::cpu(&artifacts)?;
-    let spec = engine.manifest.arch(&arch)?.clone();
+    let backend = bench_backend()?;
+    let spec = backend.arch(&arch)?;
     let train_n = env_usize("FXP_BENCH_TRAIN_N", 3072);
     let eval_n = env_usize("FXP_BENCH_EVAL_N", 512);
     let train = Dataset::generate(train_n, spec.input[0], spec.input[1], 201);
@@ -133,45 +143,48 @@ pub fn bench_env() -> Result<BenchEnv> {
         ck.params
     } else {
         let steps = env_usize("FXP_BENCH_PRETRAIN", 250);
-        eprintln!("[bench] no checkpoint {ckpt}; pretraining {steps} steps");
+        eprintln!(
+            "[bench] no checkpoint {ckpt}; pretraining {steps} steps on the \
+             {} backend",
+            backend.name()
+        );
         let p = ParamSet::init(&spec, 42);
         let nq = NetQuant::all_float(spec.num_layers);
-        let mut tr = Trainer::new(
-            &engine,
-            &arch,
-            &p,
-            &nq,
-            &upd_all(spec.num_layers),
-            0.05,
-            0.9,
-            train.clone(),
-            LoaderCfg {
+        let mut tr = backend.new_session(SessionCfg {
+            arch: &arch,
+            params: &p,
+            nq: &nq,
+            upd: &upd_all(spec.num_layers),
+            lr: 0.05,
+            momentum: 0.9,
+            data: train.clone(),
+            loader: LoaderCfg {
                 batch: spec.train_batch,
                 augment: true,
                 max_shift: 2,
                 seed: 77,
             },
-            30.0,
-        )?;
-        tr.run(steps, 50)?;
+            max_loss: 30.0,
+            seed: 77,
+        })?;
+        run_session(&mut *tr, steps, 50)?;
         tr.params()?
     };
 
-    let a_stats =
-        calibrate::activation_stats(&engine, &arch, &base, &train, 3)?.a_stats;
+    let a_stats = backend.activation_stats(&arch, &base, &train, 3)?;
 
     let cfg = RunCfg {
         finetune_steps: env_usize("FXP_BENCH_STEPS", 30),
         phase_steps: env_usize("FXP_BENCH_PHASE", 15),
         ..RunCfg::default()
     };
-    Ok(BenchEnv { engine, arch, base, a_stats, train, eval, cfg })
+    Ok(BenchEnv { backend, arch, base, a_stats, train, eval, cfg })
 }
 
 impl BenchEnv {
     pub fn runner(&self) -> crate::coordinator::grid::GridRunner<'_> {
         crate::coordinator::grid::GridRunner::new(
-            &self.engine,
+            self.backend.as_ref(),
             &self.arch,
             self.base.clone(),
             self.a_stats.clone(),

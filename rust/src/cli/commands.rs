@@ -1,6 +1,7 @@
 //! CLI command implementations (thin orchestration over the library).
 
 use crate::cli::{artifacts_dir, parse_shard, Args};
+use crate::coordinator::backend::{Backend, BackendSpec, SessionCfg};
 use crate::coordinator::calibrate;
 use crate::coordinator::config::RunCfg;
 use crate::coordinator::evaluator::evaluate;
@@ -11,7 +12,7 @@ use crate::coordinator::phases;
 use crate::coordinator::regimes::Regime;
 use crate::coordinator::report;
 use crate::coordinator::shard::{self, LockOpts, SweepManifest};
-use crate::coordinator::trainer::{upd_all, Trainer};
+use crate::coordinator::trainer::{run_session, upd_all, TrainSession};
 use crate::data::loader::LoaderCfg;
 use crate::data::synth::Dataset;
 use crate::error::{FxpError, Result};
@@ -19,16 +20,19 @@ use crate::fixedpoint::QFormat;
 use crate::inference::verify::parity_report;
 use crate::inference::FixedPointNet;
 use crate::model::checkpoint::{save_params, Checkpoint};
+use crate::model::manifest::ArchSpec;
 use crate::model::params::ParamSet;
 use crate::quant::calib::CalibMethod;
 use crate::quant::policy::{NetQuant, WidthSpec};
 use crate::runtime::Engine;
+use crate::util::rng::derive_seed;
 
 /// Run one command; the returned value is the process exit code (the
 /// `grid merge --check` coverage contract uses 2 for "incomplete").
 pub fn dispatch(args: &Args) -> Result<i32> {
     match args.command.as_str() {
         "pretrain" => args.no_positionals().and_then(|()| pretrain(args)).map(ok),
+        "train" => args.no_positionals().and_then(|()| train_cmd(args)).map(ok),
         "grid" => grid_cmd(args),
         "eval" => args.no_positionals().and_then(|()| eval_cmd(args)).map(ok),
         "infer" => args.no_positionals().and_then(|()| infer(args)).map(ok),
@@ -74,8 +78,17 @@ fn run_cfg(args: &Args) -> Result<RunCfg> {
     })
 }
 
-fn datasets(args: &Args, engine: &Engine, arch: &str) -> Result<(Dataset, Dataset)> {
-    let spec = engine.manifest.arch(arch)?;
+/// Resolve `--backend`: explicit flag wins; otherwise XLA when the
+/// artifact directory exists, native for the offline build.
+fn backend_spec(args: &Args) -> Result<BackendSpec> {
+    let artifacts = artifacts_dir(args);
+    match args.get("backend") {
+        None => Ok(BackendSpec::auto(&artifacts)),
+        Some(s) => BackendSpec::parse(s, &artifacts),
+    }
+}
+
+fn datasets(args: &Args, spec: &ArchSpec) -> Result<(Dataset, Dataset)> {
     let (h, w) = (spec.input[0], spec.input[1]);
     let train_n = args.usize_or("train-n", 8192)?;
     let eval_n = args.usize_or("eval-n", 2048)?;
@@ -88,12 +101,35 @@ fn datasets(args: &Args, engine: &Engine, arch: &str) -> Result<(Dataset, Datase
     ))
 }
 
-fn load_ckpt(args: &Args, engine: &Engine, arch: &str) -> Result<ParamSet> {
+fn load_ckpt(args: &Args, spec: &ArchSpec) -> Result<ParamSet> {
     let path = args.require("ckpt")?;
     let ck = Checkpoint::load(path)?;
-    ck.check_matches(arch, &engine.manifest.arch(arch)?.params)?;
+    ck.check_matches(&spec.name, &spec.params)?;
     log::info!("loaded checkpoint {path} (step {})", ck.step);
     Ok(ck.params)
+}
+
+/// The base parameters a command starts from: `--ckpt` when given; with
+/// the native backend a fresh deterministic He init from `--seed` is an
+/// accepted substitute (CI sweeps need no checkpoint file).
+fn base_params(
+    args: &Args,
+    spec: &ArchSpec,
+    backend: &dyn Backend,
+    seed: u64,
+) -> Result<ParamSet> {
+    if args.get("ckpt").is_some() {
+        return load_ckpt(args, spec);
+    }
+    if backend.supports_fresh_init() {
+        log::info!("no --ckpt: fresh He init from seed {seed}");
+        return Ok(ParamSet::init(spec, derive_seed(seed, "base-init", &[])));
+    }
+    Err(FxpError::config(format!(
+        "missing required flag --ckpt (the {} backend cannot start from \
+         a fresh init)",
+        backend.name()
+    )))
 }
 
 fn width(args: &Args, key: &str) -> Result<WidthSpec> {
@@ -102,16 +138,17 @@ fn width(args: &Args, key: &str) -> Result<WidthSpec> {
         .ok_or_else(|| FxpError::config(format!("bad --{key} '{v}'")))
 }
 
-/// `fxpnet pretrain`: float baseline training with step-decay lr.
+/// `fxpnet pretrain`: float baseline training with step-decay lr, on
+/// either backend.
 fn pretrain(args: &Args) -> Result<()> {
     let arch = args.get_or("arch", "paper12");
-    let engine = Engine::cpu(artifacts_dir(args))?;
-    let spec = engine.manifest.arch(&arch)?.clone();
+    let backend = backend_spec(args)?.build()?;
+    let spec = backend.arch(&arch)?;
     let cfg = run_cfg(args)?;
     let steps = args.usize_or("steps", 800)?;
     let lr = args.f32_or("lr", 0.05)?;
     let out = args.get_or("out", &format!("{arch}_float.ckpt"));
-    let (train, eval_set) = datasets(args, &engine, &arch)?;
+    let (train, eval_set) = datasets(args, &spec)?;
 
     // --from CKPT continues training from a checkpoint (e.g. when a run's
     // saddle escape happened near the end of its step budget)
@@ -125,28 +162,29 @@ fn pretrain(args: &Args) -> Result<()> {
         None => ParamSet::init(&spec, cfg.seed),
     };
     log::info!(
-        "pretraining {arch}: {} params, {} steps, lr {lr}",
+        "pretraining {arch} ({} backend): {} params, {} steps, lr {lr}",
+        backend.name(),
         params.num_scalars(),
         steps
     );
     let nq = NetQuant::all_float(spec.num_layers);
-    let mut tr = Trainer::new(
-        &engine,
-        &arch,
-        &params,
-        &nq,
-        &upd_all(spec.num_layers),
+    let mut tr = backend.new_session(SessionCfg {
+        arch: &arch,
+        params: &params,
+        nq: &nq,
+        upd: &upd_all(spec.num_layers),
         lr,
-        cfg.momentum,
-        train,
-        LoaderCfg {
+        momentum: cfg.momentum,
+        data: train,
+        loader: LoaderCfg {
             batch: spec.train_batch,
             augment: true,
             max_shift: 2,
             seed: cfg.seed,
         },
-        cfg.max_loss,
-    )?;
+        max_loss: cfg.max_loss,
+        seed: derive_seed(cfg.seed, "sgd-round", &[0]),
+    })?;
     // two-stage decay at 60% and 85%
     let s1 = steps * 3 / 5;
     let s2 = steps * 17 / 20;
@@ -162,7 +200,7 @@ fn pretrain(args: &Args) -> Result<()> {
         if stage > 0 {
             tr.set_config(&nq, &upd_all(spec.num_layers), *stage_lr, cfg.momentum)?;
         }
-        let outc = tr.run(*n, 20)?;
+        let outc = run_session(&mut *tr, *n, 20)?;
         if outc.diverged {
             return Err(FxpError::Diverged {
                 step: tr.global_step(),
@@ -175,7 +213,7 @@ fn pretrain(args: &Args) -> Result<()> {
         last = outc.final_loss().unwrap_or(last);
     }
     let tuned = tr.params()?;
-    let ev = evaluate(&engine, &arch, &tuned, &nq, &eval_set)?;
+    let ev = backend.evaluate(&arch, &tuned, &nq, &eval_set)?;
     log::info!("pretrained: final loss {last:.4}; float eval: {ev}");
     save_params(&out, &arch, tr.global_step() as u64, &tuned)?;
     println!(
@@ -183,6 +221,84 @@ fn pretrain(args: &Args) -> Result<()> {
         tr.global_step(),
         ev.top1_err * 100.0
     );
+    Ok(())
+}
+
+/// `fxpnet train`: one fine-tuning run at a single (w, a) cell with the
+/// convergence verdict on stdout -- the native engine's CI gate
+/// (`--gate` turns "did not improve" into a non-zero exit).
+fn train_cmd(args: &Args) -> Result<()> {
+    let arch = args.get_or("arch", "tiny");
+    let backend = backend_spec(args)?.build()?;
+    let spec = backend.arch(&arch)?;
+    let cfg = run_cfg(args)?;
+    let steps = args.usize_or("steps", 100)?;
+    let (train, eval_set) = datasets(args, &spec)?;
+    let params = base_params(args, &spec, backend.as_ref(), cfg.seed)?;
+    let w = WidthSpec::parse(&args.get_or("w", "8"))
+        .ok_or_else(|| FxpError::config("bad --w"))?;
+    let a = WidthSpec::parse(&args.get_or("a", "8"))
+        .ok_or_else(|| FxpError::config("bad --a"))?;
+    let a_stats =
+        backend.activation_stats(&arch, &params, &train, cfg.calib_batches)?;
+    let nq =
+        NetQuant::for_cell(w, a, &params.weight_stats(), &a_stats, cfg.method)?;
+    log::info!(
+        "training {arch} ({} backend) at w={} a={} for {steps} steps",
+        backend.name(),
+        w.label(),
+        a.label()
+    );
+    let mut tr = backend.new_session(SessionCfg {
+        arch: &arch,
+        params: &params,
+        nq: &nq,
+        upd: &upd_all(spec.num_layers),
+        lr: cfg.lr,
+        momentum: cfg.momentum,
+        data: train,
+        loader: LoaderCfg {
+            batch: spec.train_batch,
+            augment: cfg.augment,
+            max_shift: 2,
+            seed: cfg.seed,
+        },
+        max_loss: cfg.max_loss,
+        seed: derive_seed(cfg.seed, "sgd-round", &[1]),
+    })?;
+    let outc = run_session(&mut *tr, steps, (steps / 20).max(1))?;
+    for (s, l) in &outc.history {
+        println!("step {s:>5}  loss {l:.4}");
+    }
+    let initial = outc.history.first().map(|&(_, l)| l).unwrap_or(f32::NAN);
+    let final_loss = outc.final_loss().unwrap_or(f32::NAN);
+    if outc.diverged {
+        // like pretrain: never persist a blown-up net
+        return Err(FxpError::Diverged {
+            step: tr.global_step(),
+            loss: final_loss,
+        });
+    }
+    let tuned = tr.params()?;
+    if let Some(out) = args.get("out") {
+        save_params(out, &arch, tr.global_step() as u64, &tuned)?;
+        println!("saved {out}");
+    }
+    let ev = backend.evaluate(&arch, &tuned, &nq, &eval_set)?;
+    println!(
+        "trained {arch} w={} a={}: loss {initial:.4} -> {final_loss:.4} over \
+         {} steps; eval {ev}",
+        w.label(),
+        a.label(),
+        outc.steps
+    );
+    let improved = final_loss < initial;
+    if args.has("gate") && !improved {
+        return Err(FxpError::config(format!(
+            "train gate failed: final loss {final_loss:.4} did not improve \
+             on initial {initial:.4}"
+        )));
+    }
     Ok(())
 }
 
@@ -281,7 +397,7 @@ fn grid_run(args: &Args) -> Result<()> {
 
     // --synthetic: the deterministic engine-free executor -- exercises
     // the whole sweep/shard/cache/merge machinery without artifacts, an
-    // XLA runtime, or a checkpoint (the sharded CI matrix runs this)
+    // XLA runtime, or a checkpoint (a fast mode for plumbing tests)
     if args.has("synthetic") {
         let sweep = grid::run_sweep_with(
             regime,
@@ -294,25 +410,22 @@ fn grid_run(args: &Args) -> Result<()> {
         return finish_sweep(&sweep, &out_dir, cfg.topk);
     }
 
-    let artifacts = artifacts_dir(args);
-    let engine = Engine::cpu(&artifacts)?;
-    let base = load_ckpt(args, &engine, &arch)?;
-    let (train, eval_set) = datasets(args, &engine, &arch)?;
-    let calib = calibrate::activation_stats(
-        &engine,
-        &arch,
-        &base,
-        &train,
-        cfg.calib_batches,
-    )?;
+    let spec = backend_spec(args)?;
+    let backend = spec.build()?;
+    let arch_spec = backend.arch(&arch)?;
+    let base = base_params(args, &arch_spec, backend.as_ref(), cfg.seed)?;
+    let (train, eval_set) = datasets(args, &arch_spec)?;
+    let a_stats =
+        backend.activation_stats(&arch, &base, &train, cfg.calib_batches)?;
+    log::info!("grid sweep on the {} backend", backend.name());
 
-    // serial fast path: one shared engine (compile each executable once)
+    // serial fast path: one shared backend (compile each executable once)
     if cfg.workers == 1 && opts.shard.is_none() && opts.cache_path.is_none() {
         let mut runner = GridRunner::new(
-            &engine,
+            backend.as_ref(),
             &arch,
             base,
-            calib.a_stats,
+            a_stats,
             train,
             eval_set,
             cfg.clone(),
@@ -323,12 +436,12 @@ fn grid_run(args: &Args) -> Result<()> {
         return Ok(());
     }
 
-    drop(engine); // each worker builds its own engine
+    drop(backend); // each worker builds its own backend instance
     let runner = ParallelGridRunner {
-        artifacts_dir: artifacts.into(),
+        backend: spec,
         arch: arch.clone(),
         base,
-        a_stats: calib.a_stats,
+        a_stats,
         train_data: train,
         eval_data: eval_set,
         cfg: cfg.clone(),
@@ -376,7 +489,7 @@ fn grid_merge(args: &Args) -> Result<i32> {
     if pos.len() < 3 {
         return Err(FxpError::config(
             "usage: fxpnet grid merge <out.json> <in.json>... \
-             [--manifest F] [--render] [--topk K] [--check]",
+             [--manifest F] [--render] [--topk K] [--check] [--prune]",
         ));
     }
     let out = std::path::PathBuf::from(&pos[1]);
@@ -407,7 +520,17 @@ fn grid_merge(args: &Args) -> Result<i32> {
         for key in &merged.missing {
             eprintln!("  {key}");
         }
+        if args.has("prune") {
+            eprintln!("not pruning shard caches (sweep incomplete)");
+        }
         return Ok(2);
+    }
+    if args.has("prune") {
+        // strict refusal on incomplete coverage lives in
+        // prune_shard_inputs, so --prune without --check cannot delete
+        // the only copy of a partial sweep either
+        let removed = shard::prune_shard_inputs(&merged)?;
+        eprintln!("pruned {} superseded shard cache file(s)", removed.len());
     }
     Ok(0)
 }
@@ -415,27 +538,23 @@ fn grid_merge(args: &Args) -> Result<i32> {
 /// `fxpnet eval`: single-cell evaluation of a checkpoint.
 fn eval_cmd(args: &Args) -> Result<()> {
     let arch = args.get_or("arch", "paper12");
-    let engine = Engine::cpu(artifacts_dir(args))?;
+    let backend = backend_spec(args)?.build()?;
     let cfg = run_cfg(args)?;
-    let params = load_ckpt(args, &engine, &arch)?;
-    let (train, eval_set) = datasets(args, &engine, &arch)?;
+    let spec = backend.arch(&arch)?;
+    let params = load_ckpt(args, &spec)?;
+    let (train, eval_set) = datasets(args, &spec)?;
     let w = width(args, "w")?;
     let a = width(args, "a")?;
-    let calib = calibrate::activation_stats(
-        &engine,
-        &arch,
-        &params,
-        &train,
-        cfg.calib_batches,
-    )?;
+    let a_stats =
+        backend.activation_stats(&arch, &params, &train, cfg.calib_batches)?;
     let nq = NetQuant::for_cell(
         w,
         a,
         &params.weight_stats(),
-        &calib.a_stats,
+        &a_stats,
         cfg.method,
     )?;
-    let ev = evaluate(&engine, &arch, &params, &nq, &eval_set)?;
+    let ev = backend.evaluate(&arch, &params, &nq, &eval_set)?;
     println!(
         "{arch} w={} a={}: top-1 {:.2}%  top-5 {:.2}%  loss {:.4}  (n={})",
         w.label(),
@@ -454,8 +573,8 @@ fn infer(args: &Args) -> Result<()> {
     let engine = Engine::cpu(artifacts_dir(args))?;
     let cfg = run_cfg(args)?;
     let spec = engine.manifest.arch(&arch)?.clone();
-    let params = load_ckpt(args, &engine, &arch)?;
-    let (train, eval_set) = datasets(args, &engine, &arch)?;
+    let params = load_ckpt(args, &spec)?;
+    let (train, eval_set) = datasets(args, &spec)?;
     let w = width(args, "w")?;
     let a = width(args, "a")?;
     if w == WidthSpec::Float || a == WidthSpec::Float {
@@ -579,8 +698,8 @@ fn mismatch(args: &Args) -> Result<()> {
     let engine = Engine::cpu(artifacts_dir(args))?;
     let cfg = run_cfg(args)?;
     let spec = engine.manifest.arch(&arch)?.clone();
-    let params = load_ckpt(args, &engine, &arch)?;
-    let (train, _) = datasets(args, &engine, &arch)?;
+    let params = load_ckpt(args, &spec)?;
+    let (train, _) = datasets(args, &spec)?;
     let bits = args.usize_or("bits", 8)? as u8;
     let calib = calibrate::activation_stats(
         &engine,

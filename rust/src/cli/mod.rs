@@ -20,7 +20,7 @@ use crate::error::{FxpError, Result};
 /// misparse would shift the output path onto a shard input and
 /// overwrite it.  Add every new boolean flag here.
 const KNOWN_SWITCHES: &[&str] =
-    &["check", "render", "resume", "shard-cache", "synthetic"];
+    &["check", "gate", "prune", "render", "resume", "shard-cache", "synthetic"];
 
 /// Parsed command line.
 #[derive(Clone, Debug, Default)]
@@ -129,8 +129,19 @@ USAGE: fxpnet <command> [flags]
 COMMANDS
   pretrain   train the float baseline network
              --arch A --steps N --out ckpt [--from ckpt] [--lr F] [--train-n N]
+  train      one fine-tuning run at a single (w, a) cell, with the
+             convergence verdict on stdout -- the CI gate for the native
+             engine
+             [--arch A] [--ckpt F]  start from a checkpoint (default:
+                                    fresh He init from --seed)
+             [--w B] [--a B]        cell widths (default 8/8)
+             [--steps N] [--out F]  save the tuned net
+             [--gate]               exit non-zero unless the final loss
+                                    improved on the initial loss
   grid       run one experiment grid (a paper table), in parallel
              --arch A --regime {none|vanilla|prop1|prop2|prop3} --ckpt F
+             (--ckpt is optional with --backend native: a fresh He init
+             from --seed is used, e.g. for CI sweeps)
              [--out DIR] [--steps N] [--phase-steps N] [--train-n N]
              [--eval-n N] [--calib {minmax|sqnr}] [--topk K]
              [--workers N]   worker threads (default: all cores; results
@@ -166,6 +177,9 @@ COMMANDS
              [--topk K]      metric for --render (default 1)
              [--check]       exit 0 iff the sweep is complete, 2 if
                              cells are missing (listed on stderr)
+             [--prune]       after a complete merge, delete the merged
+                             per-shard cache.shard-I-of-N.json inputs
+                             (refused while any cell is missing)
   eval       evaluate a checkpoint at one grid cell
              --arch A --ckpt F --w {4|8|16|float} --a {4|8|16|float}
   infer      pure-integer inference + parity vs the XLA path
@@ -178,6 +192,12 @@ COMMANDS
   help       this text
 
 COMMON FLAGS
+  --backend {native|xla}
+                    training/eval engine: 'native' is the pure-Rust
+                    backprop + stochastic-rounding SGD engine (no
+                    artifacts needed); 'xla' is the AOT/PJRT path.
+                    Default: xla when ARTIFACTS/manifest.json exists,
+                    native otherwise
   --artifacts DIR   artifact directory (default: ./artifacts or
                     $FXPNET_ARTIFACTS)
 ";

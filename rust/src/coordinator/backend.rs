@@ -1,0 +1,251 @@
+//! The training/evaluation backend abstraction.
+//!
+//! Everything a regime needs from an execution engine is four
+//! capabilities: describe an architecture, open a fine-tuning session
+//! ([`crate::coordinator::trainer::TrainSession`]), evaluate a
+//! parameter set under a quantization cell, and calibrate activation
+//! statistics.  Two implementations exist:
+//!
+//! * [`XlaBackend`] -- the original PJRT path over AOT-compiled HLO
+//!   (`artifacts/`); float-simulated quantization inside the compiled
+//!   graph.  Requires the real `xla` crate to be relinked.
+//! * `train::NativeBackend` -- the pure-Rust backprop + fixed-point SGD
+//!   engine; runs offline with zero external dependencies and is the
+//!   default whenever `artifacts/` is absent.
+//!
+//! [`BackendSpec`] is the cheap, `Send + Sync` description of a backend
+//! that the parallel sweep engine clones into every worker thread (PJRT
+//! engines are single-threaded by design, so each worker builds its own
+//! instance from the spec).
+
+use std::path::{Path, PathBuf};
+
+use crate::coordinator::calibrate;
+use crate::coordinator::evaluator::{self, EvalResult};
+use crate::coordinator::trainer::{TrainSession, Trainer};
+use crate::data::loader::LoaderCfg;
+use crate::data::synth::Dataset;
+use crate::error::{FxpError, Result};
+use crate::model::manifest::ArchSpec;
+use crate::model::params::ParamSet;
+use crate::quant::calib::LayerStats;
+use crate::quant::policy::NetQuant;
+use crate::runtime::Engine;
+
+/// Everything needed to open one fine-tuning session.
+pub struct SessionCfg<'a> {
+    pub arch: &'a str,
+    pub params: &'a ParamSet,
+    pub nq: &'a NetQuant,
+    pub upd: &'a [f32],
+    pub lr: f32,
+    pub momentum: f32,
+    pub data: Dataset,
+    pub loader: LoaderCfg,
+    pub max_loss: f32,
+    /// Seed of the backend's own stochastic streams (the native engine's
+    /// stochastic weight-update rounding).  Derived from the cell seed,
+    /// so sessions replay bit-for-bit; the XLA backend has no host-side
+    /// stochastic state and ignores it.
+    pub seed: u64,
+}
+
+/// One training/evaluation engine (see the module docs).
+pub trait Backend {
+    /// Short stable name ("native" / "xla") for logs and reports.
+    fn name(&self) -> &'static str;
+
+    /// Whether a command may substitute a fresh deterministic He init
+    /// for a missing `--ckpt` (the native engine can train from scratch
+    /// end-to-end; the XLA path expects a pretrained checkpoint).
+    fn supports_fresh_init(&self) -> bool {
+        false
+    }
+
+    /// The architecture description behind `name`.
+    fn arch(&self, name: &str) -> Result<ArchSpec>;
+
+    /// Open a fine-tuning session.
+    fn new_session(&self, cfg: SessionCfg<'_>) -> Result<Box<dyn TrainSession>>;
+
+    /// Held-out evaluation of `params` under the cell's quantization.
+    fn evaluate(
+        &self,
+        arch: &str,
+        params: &ParamSet,
+        nq: &NetQuant,
+        data: &Dataset,
+    ) -> Result<EvalResult>;
+
+    /// Per-layer activation statistics of the *float* network over up to
+    /// `batches` calibration batches (absmax maxed, moments averaged).
+    fn activation_stats(
+        &self,
+        arch: &str,
+        params: &ParamSet,
+        data: &Dataset,
+        batches: usize,
+    ) -> Result<Vec<LayerStats>>;
+}
+
+/// The XLA/PJRT backend: a thin adapter over [`Engine`].
+pub struct XlaBackend {
+    engine: Engine,
+}
+
+impl XlaBackend {
+    pub fn new(engine: Engine) -> XlaBackend {
+        XlaBackend { engine }
+    }
+
+    /// Open over an artifact directory (must contain `manifest.json`).
+    pub fn open(artifacts_dir: impl AsRef<Path>) -> Result<XlaBackend> {
+        Ok(XlaBackend { engine: Engine::cpu(artifacts_dir)? })
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+}
+
+impl Backend for XlaBackend {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn arch(&self, name: &str) -> Result<ArchSpec> {
+        Ok(self.engine.manifest.arch(name)?.clone())
+    }
+
+    fn new_session(&self, cfg: SessionCfg<'_>) -> Result<Box<dyn TrainSession>> {
+        Ok(Box::new(Trainer::new(
+            &self.engine,
+            cfg.arch,
+            cfg.params,
+            cfg.nq,
+            cfg.upd,
+            cfg.lr,
+            cfg.momentum,
+            cfg.data,
+            cfg.loader,
+            cfg.max_loss,
+        )?))
+    }
+
+    fn evaluate(
+        &self,
+        arch: &str,
+        params: &ParamSet,
+        nq: &NetQuant,
+        data: &Dataset,
+    ) -> Result<EvalResult> {
+        evaluator::evaluate(&self.engine, arch, params, nq, data)
+    }
+
+    fn activation_stats(
+        &self,
+        arch: &str,
+        params: &ParamSet,
+        data: &Dataset,
+        batches: usize,
+    ) -> Result<Vec<LayerStats>> {
+        Ok(calibrate::activation_stats(&self.engine, arch, params, data, batches)?
+            .a_stats)
+    }
+}
+
+/// Cheap description of a backend, cloned into every sweep worker.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum BackendSpec {
+    /// Pure-Rust training engine (`rust/src/train/`); no artifacts.
+    Native,
+    /// PJRT over the AOT artifacts in the given directory.
+    Xla(PathBuf),
+}
+
+impl BackendSpec {
+    /// Parse a `--backend` value.
+    pub fn parse(s: &str, artifacts_dir: &str) -> Result<BackendSpec> {
+        match s {
+            "native" => Ok(BackendSpec::Native),
+            "xla" => Ok(BackendSpec::Xla(PathBuf::from(artifacts_dir))),
+            other => Err(FxpError::config(format!(
+                "bad --backend '{other}': expected 'native' or 'xla'"
+            ))),
+        }
+    }
+
+    /// The default policy: XLA when the artifact directory exists (its
+    /// compiled graphs are the reference semantics), native otherwise --
+    /// so the offline build trains for real out of the box.
+    pub fn auto(artifacts_dir: &str) -> BackendSpec {
+        if Path::new(artifacts_dir).join("manifest.json").exists() {
+            BackendSpec::Xla(PathBuf::from(artifacts_dir))
+        } else {
+            BackendSpec::Native
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            BackendSpec::Native => "native",
+            BackendSpec::Xla(_) => "xla",
+        }
+    }
+
+    /// Instantiate the backend (one per sweep worker; PJRT engines are
+    /// single-threaded by design).
+    pub fn build(&self) -> Result<Box<dyn Backend>> {
+        match self {
+            BackendSpec::Native => {
+                Ok(Box::new(crate::train::NativeBackend::new()))
+            }
+            BackendSpec::Xla(dir) => Ok(Box::new(XlaBackend::open(dir)?)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_parse_and_labels() {
+        assert_eq!(
+            BackendSpec::parse("native", "artifacts").unwrap(),
+            BackendSpec::Native
+        );
+        assert_eq!(
+            BackendSpec::parse("xla", "a").unwrap(),
+            BackendSpec::Xla(PathBuf::from("a"))
+        );
+        assert!(BackendSpec::parse("cuda", "a").is_err());
+        assert_eq!(BackendSpec::Native.label(), "native");
+        assert_eq!(BackendSpec::Xla(PathBuf::new()).label(), "xla");
+    }
+
+    #[test]
+    fn auto_prefers_native_without_artifacts() {
+        let dir = std::env::temp_dir().join("fxp_backend_auto_none");
+        let _ = std::fs::remove_dir_all(&dir);
+        assert_eq!(
+            BackendSpec::auto(dir.to_str().unwrap()),
+            BackendSpec::Native
+        );
+        // and xla once a manifest appears
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), "{}").unwrap();
+        assert_eq!(
+            BackendSpec::auto(dir.to_str().unwrap()),
+            BackendSpec::Xla(dir.clone())
+        );
+    }
+
+    #[test]
+    fn native_spec_builds_offline() {
+        let b = BackendSpec::Native.build().unwrap();
+        assert_eq!(b.name(), "native");
+        assert!(b.arch("tiny").is_ok());
+        assert!(b.arch("nope").is_err());
+    }
+}

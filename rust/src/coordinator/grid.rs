@@ -20,10 +20,11 @@
 //! bit-identical `CellOutcome` tables (pinned by tests/grid_parallel.rs).
 
 use std::collections::HashMap;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::Mutex;
 
 use crate::bench::Table;
+use crate::coordinator::backend::{Backend, BackendSpec};
 use crate::coordinator::config::RunCfg;
 use crate::coordinator::evaluator::EvalResult;
 use crate::coordinator::pool::{self, PoolStats};
@@ -32,10 +33,10 @@ use crate::coordinator::report::CellCache;
 use crate::coordinator::shard::{self, LockOpts, ShardedCache};
 use crate::data::synth::Dataset;
 use crate::error::{FxpError, Result};
+use crate::model::checkpoint::{self, Checkpoint};
 use crate::model::params::ParamSet;
 use crate::quant::calib::LayerStats;
 use crate::quant::policy::WidthSpec;
-use crate::runtime::Engine;
 use crate::util::rng;
 
 /// Seed of one grid cell: pure function of what the cell *is*.
@@ -428,11 +429,158 @@ where
     })
 }
 
-/// The parallel engine-backed sweep runner: one PJRT engine per worker
-/// (the engine's wrapper types are single-threaded by design), shared
-/// read-only base net / calibration / datasets.
+/// Fingerprint of everything a float-activation seed net is a function
+/// of *besides* `(arch, weight width, base seed)`: the base parameters,
+/// the calibration stats, the training hyperparameters, and the training
+/// dataset.  Folded into the seed-net cache file name, so a cache entry
+/// can never be silently reused across a different base checkpoint, step
+/// budget, lr, or dataset -- it simply becomes a different file.
+pub fn p1_fingerprint(
+    base: &ParamSet,
+    a_stats: &[LayerStats],
+    cfg: &RunCfg,
+    train: &Dataset,
+) -> u64 {
+    fn fnv_bytes(mut h: u64, bytes: &[u8]) -> u64 {
+        for &b in bytes {
+            h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01B3);
+        }
+        h
+    }
+    fn fnv_f32s(mut h: u64, xs: &[f32]) -> u64 {
+        for &x in xs {
+            h = fnv_bytes(h, &x.to_bits().to_le_bytes());
+        }
+        h
+    }
+    let mut h = 0xCBF2_9CE4_8422_2325u64;
+    for (name, t) in base.names.iter().zip(&base.tensors) {
+        h = fnv_bytes(h, name.as_bytes());
+        h = fnv_f32s(h, t.data());
+    }
+    for s in a_stats {
+        h = fnv_f32s(h, &[s.absmax, s.meanabs, s.meansq]);
+    }
+    h = fnv_f32s(h, &[cfg.lr, cfg.momentum, cfg.max_loss]);
+    h = fnv_bytes(h, &(cfg.finetune_steps as u64).to_le_bytes());
+    h = fnv_bytes(h, &[cfg.augment as u8, cfg.method as u8]);
+    h = fnv_f32s(h, train.images.data());
+    for &y in train.labels.data() {
+        h = fnv_bytes(h, &y.to_le_bytes());
+    }
+    h
+}
+
+/// Disk cache of a float-activation seed net ("p1 net"): one checkpoint
+/// per (arch, weight width, base seed, [`p1_fingerprint`]), stored next
+/// to the cell cache so resumed and sharded runs stop retraining the
+/// most expensive part of a Proposal sweep per process.  A `.na` marker
+/// records a seed training that itself diverged, so that outcome is
+/// cached too.
+///
+/// Loading is safe because seed training is deterministic and the
+/// fingerprint pins every input: a cached net is bit-identical to what
+/// this process would have trained (pinned by
+/// rust/tests/train_native.rs).
+pub fn p1_net_path(
+    dir: &Path,
+    arch: &str,
+    w: WidthSpec,
+    base_seed: u64,
+    fp: u64,
+) -> PathBuf {
+    dir.join(format!(
+        "p1net_{arch}_w{}_seed{base_seed}_{fp:016x}.ckpt",
+        w.label()
+    ))
+}
+
+fn p1_na_path(dir: &Path, arch: &str, w: WidthSpec, base_seed: u64, fp: u64) -> PathBuf {
+    p1_net_path(dir, arch, w, base_seed, fp).with_extension("na")
+}
+
+/// Load a cached seed net.  Outer `None` = nothing cached (train it);
+/// inner `None` = cached "seed training diverged".
+#[allow(clippy::too_many_arguments)]
+pub fn load_p1_net(
+    dir: &Path,
+    arch: &str,
+    expected: &[(String, Vec<usize>)],
+    w: WidthSpec,
+    base_seed: u64,
+    fp: u64,
+) -> Option<Option<ParamSet>> {
+    if p1_na_path(dir, arch, w, base_seed, fp).exists() {
+        return Some(None);
+    }
+    let path = p1_net_path(dir, arch, w, base_seed, fp);
+    if !path.exists() {
+        return None;
+    }
+    match Checkpoint::load(&path) {
+        Ok(ck) => match ck.check_matches(arch, expected) {
+            Ok(()) => {
+                log::info!("p1 net cache hit: {}", path.display());
+                Some(Some(ck.params))
+            }
+            Err(e) => {
+                log::warn!(
+                    "p1 net cache {}: wrong shape ({e}); retraining",
+                    path.display()
+                );
+                None
+            }
+        },
+        Err(e) => {
+            log::warn!(
+                "p1 net cache {}: unreadable ({e}); retraining",
+                path.display()
+            );
+            None
+        }
+    }
+}
+
+/// Persist a freshly-trained seed net (atomic rename, so concurrent
+/// shard processes racing on the same width cannot corrupt the file --
+/// and since training is deterministic, both write the same bytes).
+#[allow(clippy::too_many_arguments)]
+pub fn save_p1_net(
+    dir: &Path,
+    arch: &str,
+    w: WidthSpec,
+    base_seed: u64,
+    fp: u64,
+    steps: u64,
+    net: &Option<ParamSet>,
+) -> Result<()> {
+    if !dir.as_os_str().is_empty() {
+        std::fs::create_dir_all(dir)?;
+    }
+    match net {
+        None => {
+            std::fs::write(p1_na_path(dir, arch, w, base_seed, fp), b"")?;
+        }
+        Some(params) => {
+            let path = p1_net_path(dir, arch, w, base_seed, fp);
+            let tmp = path.with_file_name(format!(
+                ".{}.{}.tmp",
+                path.file_name().and_then(|n| n.to_str()).unwrap_or("p1net"),
+                std::process::id()
+            ));
+            checkpoint::save_params(&tmp, arch, steps, params)?;
+            std::fs::rename(&tmp, &path)?;
+        }
+    }
+    Ok(())
+}
+
+/// The parallel backend-driven sweep runner: one backend instance per
+/// worker (PJRT engines are single-threaded by design; the native
+/// backend is cheap to build), shared read-only base net / calibration /
+/// datasets.
 pub struct ParallelGridRunner {
-    pub artifacts_dir: PathBuf,
+    pub backend: BackendSpec,
     pub arch: String,
     pub base: ParamSet,
     pub a_stats: Vec<LayerStats>,
@@ -442,9 +590,9 @@ pub struct ParallelGridRunner {
 }
 
 impl ParallelGridRunner {
-    fn cell_ctx<'a>(&'a self, engine: &'a Engine, seed: u64) -> CellCtx<'a> {
+    fn cell_ctx<'a>(&'a self, backend: &'a dyn Backend, seed: u64) -> CellCtx<'a> {
         CellCtx {
-            engine,
+            backend,
             arch: &self.arch,
             train_data: &self.train_data,
             eval_data: &self.eval_data,
@@ -452,6 +600,17 @@ impl ParallelGridRunner {
             cfg: &self.cfg,
             cell_seed: seed,
         }
+    }
+
+    /// The sweep's seed-net cache fingerprint ([`p1_fingerprint`] of the
+    /// base/calibration/config/dataset, plus the backend identity --
+    /// the native and XLA engines do not produce comparable nets).
+    pub fn p1_cache_fingerprint(&self) -> u64 {
+        rng::derive_seed(
+            p1_fingerprint(&self.base, &self.a_stats, &self.cfg, &self.train_data),
+            self.backend.label(),
+            &[],
+        )
     }
 
     /// Weight widths whose p1 seed net this run will actually use: only
@@ -495,20 +654,58 @@ impl ParallelGridRunner {
     /// Wave 1 of a Proposal sweep: the float-activation fine-tuned nets,
     /// one per needed weight width, trained in parallel.  A panicked/
     /// failed training slot behaves like divergence (all its cells go
-    /// n/a).
+    /// n/a).  With `p1_dir` set (a cell cache is in play), each worker
+    /// first consults the on-disk seed-net cache and persists what it
+    /// trains, so resumed/sharded processes share the work.
     fn train_p1_nets(
         &self,
         workers: usize,
         ws: Vec<WidthSpec>,
+        p1_dir: Option<PathBuf>,
     ) -> Result<HashMap<String, Option<ParamSet>>> {
         log::info!("training {} float-activation seed nets", ws.len());
+        let steps = self.cfg.finetune_steps as u64;
+        // one fingerprint per sweep: pins base params, calibration,
+        // hyperparameters, and the training set, so a stale disk entry
+        // from a different run can never be mistaken for this sweep's
+        let fp = p1_dir.as_ref().map(|_| self.p1_cache_fingerprint());
         let (slots, _) = pool::run_jobs(
             &ws,
             workers,
-            |_wid| Engine::cpu(&self.artifacts_dir),
-            |engine, _i, w: &WidthSpec| {
-                let ctx = self.cell_ctx(engine, p1_seed(self.cfg.seed, *w));
-                regimes::train_float_act_net(&ctx, &self.base, *w)
+            |_wid| self.backend.build(),
+            |backend, _i, w: &WidthSpec| {
+                // Float-width "seed net" is just the base net; not worth
+                // a cache file
+                let cacheable = *w != WidthSpec::Float;
+                if let (Some(dir), Some(fp), true) = (&p1_dir, fp, cacheable) {
+                    let spec = backend.arch(&self.arch)?;
+                    if let Some(cached) = load_p1_net(
+                        dir,
+                        &self.arch,
+                        &spec.params,
+                        *w,
+                        self.cfg.seed,
+                        fp,
+                    ) {
+                        return Ok(cached);
+                    }
+                }
+                let ctx = self.cell_ctx(backend.as_ref(), p1_seed(self.cfg.seed, *w));
+                let net = regimes::train_float_act_net(&ctx, &self.base, *w)?;
+                if let (Some(dir), Some(fp), true) = (&p1_dir, fp, cacheable) {
+                    if let Err(e) = save_p1_net(
+                        dir,
+                        &self.arch,
+                        *w,
+                        self.cfg.seed,
+                        fp,
+                        steps,
+                        &net,
+                    ) {
+                        log::warn!("p1 net cache save failed: {e}");
+                    }
+                }
+                Ok(net)
             },
         )?;
         Ok(ws
@@ -521,7 +718,16 @@ impl ParallelGridRunner {
     /// Run the full paper grid for `regime` under `opts`.
     pub fn run_sweep(&self, regime: Regime, opts: &SweepOpts) -> Result<SweepOutcome> {
         let p1: HashMap<String, Option<ParamSet>> = if regime.needs_p1_net() {
-            self.train_p1_nets(opts.workers, self.widths_needing_p1(regime, opts)?)?
+            // seed nets live next to the cell cache (shared by shards
+            // pointing at sibling cache files in one directory)
+            let p1_dir = opts
+                .cache_file()
+                .and_then(|p| p.parent().map(Path::to_path_buf));
+            self.train_p1_nets(
+                opts.workers,
+                self.widths_needing_p1(regime, opts)?,
+                p1_dir,
+            )?
         } else {
             HashMap::new()
         };
@@ -530,9 +736,9 @@ impl ParallelGridRunner {
             &self.arch,
             self.cfg.seed,
             opts,
-            |_wid| Engine::cpu(&self.artifacts_dir),
-            |engine, job| {
-                let ctx = self.cell_ctx(engine, job.seed);
+            |_wid| self.backend.build(),
+            |backend, job| {
+                let ctx = self.cell_ctx(backend.as_ref(), job.seed);
                 let p1_net = p1.get(&job.w.label()).and_then(|o| o.as_ref());
                 regimes::dispatch_cell(&ctx, job.regime, &self.base, p1_net, job.w, job.a)
             },
@@ -540,12 +746,12 @@ impl ParallelGridRunner {
     }
 }
 
-/// Serial runner over one borrowed engine.  Caches the float-activation
+/// Serial runner over one borrowed backend.  Caches the float-activation
 /// fine-tuned nets ("last row of Table 3") that seed Proposals 1-3, one
 /// per weight width.  Seeded identically to the parallel engine, so the
 /// two produce bit-identical tables.
 pub struct GridRunner<'a> {
-    pub engine: &'a Engine,
+    pub backend: &'a dyn Backend,
     pub arch: String,
     pub base: ParamSet,
     pub a_stats: Vec<LayerStats>,
@@ -558,7 +764,7 @@ pub struct GridRunner<'a> {
 impl<'a> GridRunner<'a> {
     #[allow(clippy::too_many_arguments)]
     pub fn new(
-        engine: &'a Engine,
+        backend: &'a dyn Backend,
         arch: &str,
         base: ParamSet,
         a_stats: Vec<LayerStats>,
@@ -567,7 +773,7 @@ impl<'a> GridRunner<'a> {
         cfg: RunCfg,
     ) -> GridRunner<'a> {
         GridRunner {
-            engine,
+            backend,
             arch: arch.to_string(),
             base,
             a_stats,
@@ -580,7 +786,7 @@ impl<'a> GridRunner<'a> {
 
     fn ctx(&self, seed: u64) -> CellCtx<'_> {
         CellCtx {
-            engine: self.engine,
+            backend: self.backend,
             arch: &self.arch,
             train_data: &self.train_data,
             eval_data: &self.eval_data,

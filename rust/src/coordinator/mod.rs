@@ -6,10 +6,14 @@
 //! activations are fixed point when, which layers' weights update when,
 //! what happens after divergence -- is *data* constructed here:
 //!
+//! * `backend`   -- the engine abstraction: the XLA/PJRT path and the
+//!   pure-Rust native training engine (`crate::train`) behind one trait,
+//!   selected per run (`--backend {native,xla}`);
 //! * `calibrate` -- activation/weight statistics -> per-layer Q-formats
 //!   (min-max or the companion paper's SQNR rule);
-//! * `trainer`   -- the SGD step loop over literal state, with divergence
-//!   detection (the paper's "fails to converge" = our `n/a`);
+//! * `trainer`   -- the SGD step loop (XLA literals) plus the
+//!   `TrainSession` contract and the shared divergence-detecting run
+//!   loop (the paper's "fails to converge" = our `n/a`);
 //! * `phases`    -- the Table 1 bottom-to-top schedule of Proposal 3;
 //! * `regimes`   -- no-fine-tune / vanilla / Proposals 1-3 as strategies;
 //! * `pool`      -- the deterministic work-queue + worker-pool substrate
@@ -23,6 +27,7 @@
 //! * `report`    -- paper-style table rendering, JSON result dumps, and
 //!   the per-cell sweep cache.
 
+pub mod backend;
 pub mod calibrate;
 pub mod config;
 pub mod evaluator;
@@ -35,6 +40,7 @@ pub mod report;
 pub mod shard;
 pub mod trainer;
 
+pub use backend::{Backend, BackendSpec, SessionCfg, XlaBackend};
 pub use config::RunCfg;
 pub use grid::{
     CellJob, CellOutcome, GridResult, GridRunner, ParallelGridRunner,
@@ -44,4 +50,4 @@ pub use regimes::Regime;
 pub use shard::{
     FileLock, LockOpts, MergeOutcome, ShardedCache, SweepManifest,
 };
-pub use trainer::{TrainOutcome, Trainer};
+pub use trainer::{TrainOutcome, TrainSession, Trainer};

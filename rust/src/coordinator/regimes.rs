@@ -15,17 +15,20 @@
 //! * `Prop3`       (Table 6): from the Prop1 net, run the Table 1
 //!   bottom-to-top phase schedule, then evaluate fully quantized.
 
+use crate::coordinator::backend::{Backend, SessionCfg};
 use crate::coordinator::config::RunCfg;
-use crate::coordinator::evaluator::{evaluate, EvalResult};
+use crate::coordinator::evaluator::EvalResult;
 use crate::coordinator::phases;
-use crate::coordinator::trainer::{upd_all, upd_single, upd_top, Trainer};
+use crate::coordinator::trainer::{
+    run_session, upd_all, upd_single, upd_top, TrainSession,
+};
 use crate::data::loader::LoaderCfg;
 use crate::data::synth::Dataset;
 use crate::error::Result;
 use crate::model::params::ParamSet;
 use crate::quant::calib::LayerStats;
 use crate::quant::policy::{NetQuant, WidthSpec};
-use crate::runtime::Engine;
+use crate::util::rng::derive_seed;
 
 /// Regime selector.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -104,7 +107,9 @@ impl Regime {
 
 /// Everything the regimes need to run one cell.
 pub struct CellCtx<'a> {
-    pub engine: &'a Engine,
+    /// The training/evaluation engine (native or XLA) -- the regimes are
+    /// backend-agnostic and execute identically on either.
+    pub backend: &'a dyn Backend,
     pub arch: &'a str,
     pub train_data: &'a Dataset,
     pub eval_data: &'a Dataset,
@@ -120,12 +125,12 @@ pub struct CellCtx<'a> {
 
 impl<'a> CellCtx<'a> {
     fn loader_cfg(&self, tag: u64) -> Result<LoaderCfg> {
-        let spec = self.engine.manifest.arch(self.arch)?;
+        let spec = self.backend.arch(self.arch)?;
         Ok(LoaderCfg {
             batch: spec.train_batch,
             augment: self.cfg.augment,
             max_shift: 2,
-            seed: crate::util::rng::derive_seed(self.cell_seed, "loader", &[tag]),
+            seed: derive_seed(self.cell_seed, "loader", &[tag]),
         })
     }
 
@@ -146,19 +151,26 @@ impl<'a> CellCtx<'a> {
         nq: &NetQuant,
         upd: &[f32],
         tag: u64,
-    ) -> Result<Trainer> {
-        Trainer::new(
-            self.engine,
-            self.arch,
+    ) -> Result<Box<dyn TrainSession>> {
+        self.backend.new_session(SessionCfg {
+            arch: self.arch,
             params,
             nq,
             upd,
-            self.cfg.lr,
-            self.cfg.momentum,
-            self.train_data.clone(),
-            self.loader_cfg(tag)?,
-            self.cfg.max_loss,
-        )
+            lr: self.cfg.lr,
+            momentum: self.cfg.momentum,
+            data: self.train_data.clone(),
+            loader: self.loader_cfg(tag)?,
+            max_loss: self.cfg.max_loss,
+            // the native engine's stochastic weight-update rounding
+            // stream: keyed by the cell and the regime's stream tag,
+            // like every other per-cell stochastic stream
+            seed: derive_seed(self.cell_seed, "sgd-round", &[tag]),
+        })
+    }
+
+    fn evaluate(&self, params: &ParamSet, nq: &NetQuant) -> Result<EvalResult> {
+        self.backend.evaluate(self.arch, params, nq, self.eval_data)
     }
 }
 
@@ -214,7 +226,7 @@ pub fn run_no_finetune(
     a: WidthSpec,
 ) -> Result<CellResult> {
     let nq = ctx.resolve(base, w, a)?;
-    Ok(Some(evaluate(ctx.engine, ctx.arch, base, &nq, ctx.eval_data)?))
+    Ok(Some(ctx.evaluate(base, &nq)?))
 }
 
 /// Table 3: plain fine-tuning of all layers under the cell's config.
@@ -227,14 +239,14 @@ pub fn run_vanilla(
     let nq = ctx.resolve(base, w, a)?;
     let l = nq.num_layers();
     let mut tr = ctx.trainer(base, &nq, &upd_all(l), 3)?;
-    let out = tr.run(ctx.cfg.finetune_steps, 10)?;
+    let out = run_session(&mut *tr, ctx.cfg.finetune_steps, 10)?;
     if out.diverged {
         return Ok(None);
     }
     let tuned = tr.params()?;
     // re-resolve weight formats against the *tuned* weights for eval
     let nq_eval = ctx.resolve(&tuned, w, a)?;
-    Ok(Some(evaluate(ctx.engine, ctx.arch, &tuned, &nq_eval, ctx.eval_data)?))
+    Ok(Some(ctx.evaluate(&tuned, &nq_eval)?))
 }
 
 /// The "last row of Table 3": fine-tune with quantized weights but float
@@ -251,7 +263,7 @@ pub fn train_float_act_net(
     let nq = ctx.resolve(base, w, WidthSpec::Float)?;
     let l = nq.num_layers();
     let mut tr = ctx.trainer(base, &nq, &upd_all(l), 5)?;
-    let out = tr.run(ctx.cfg.finetune_steps, 10)?;
+    let out = run_session(&mut *tr, ctx.cfg.finetune_steps, 10)?;
     if out.diverged {
         return Ok(None);
     }
@@ -267,7 +279,7 @@ pub fn run_prop1(
     a: WidthSpec,
 ) -> Result<CellResult> {
     let nq = ctx.resolve(p1net, w, a)?;
-    Ok(Some(evaluate(ctx.engine, ctx.arch, p1net, &nq, ctx.eval_data)?))
+    Ok(Some(ctx.evaluate(p1net, &nq)?))
 }
 
 /// Table 5 (Proposal 2): from the Prop1 net, fine-tune only the top
@@ -282,13 +294,13 @@ pub fn run_prop2(
     let nq = ctx.resolve(p1net, w, a)?;
     let l = nq.num_layers();
     let mut tr = ctx.trainer(p1net, &nq, &upd_top(l, top_layers), 7)?;
-    let out = tr.run(ctx.cfg.finetune_steps, 10)?;
+    let out = run_session(&mut *tr, ctx.cfg.finetune_steps, 10)?;
     if out.diverged {
         return Ok(None);
     }
     let tuned = tr.params()?;
     let nq_eval = ctx.resolve(&tuned, w, a)?;
-    Ok(Some(evaluate(ctx.engine, ctx.arch, &tuned, &nq_eval, ctx.eval_data)?))
+    Ok(Some(ctx.evaluate(&tuned, &nq_eval)?))
 }
 
 /// Table 6 (Proposal 3): the Table 1 schedule from the Prop1 net.
@@ -318,7 +330,7 @@ pub fn run_prop3(
             )?;
             tr.reset_momenta()?;
         }
-        let out = tr.run(ctx.cfg.phase_steps, 10)?;
+        let out = run_session(&mut *tr, ctx.cfg.phase_steps, 10)?;
         if out.diverged {
             log::warn!("prop3 phase {} diverged", p.number);
             return Ok(None);
@@ -326,7 +338,7 @@ pub fn run_prop3(
     }
     let tuned = tr.params()?;
     let nq_eval = ctx.resolve(&tuned, w, a)?;
-    Ok(Some(evaluate(ctx.engine, ctx.arch, &tuned, &nq_eval, ctx.eval_data)?))
+    Ok(Some(ctx.evaluate(&tuned, &nq_eval)?))
 }
 
 #[cfg(test)]

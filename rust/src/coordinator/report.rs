@@ -37,6 +37,21 @@
 //! * [`parse_cache_text`] -- strict: every schema problem is an error.
 //!   `grid merge` uses this, because silently dropping a shard's results
 //!   must never happen during a union.
+//!
+//! ## Backends and cache identity
+//!
+//! The header identifies a sweep by `(arch, regime, base seed)` but NOT
+//! by which executor produced the cells -- the native training backend,
+//! the XLA path, and `--synthetic` all share that namespace and do not
+//! produce comparable numbers.  Keep per-backend sweeps in separate
+//! cache files (the strict bit-exact conflict detection in `grid merge`
+//! will refuse a mixed union loudly rather than pick a winner, and
+//! `--resume` against the wrong backend's cache would silently keep its
+//! cells).  Seed-net files (`p1net_*.ckpt`, written by the grid runner
+//! next to the cell cache) do NOT have this problem: their file name
+//! carries a fingerprint of the backend, base parameters,
+//! hyperparameters, calibration, and dataset (`grid::p1_fingerprint`),
+//! so a mismatched entry is simply a different file.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};

@@ -639,6 +639,9 @@ pub struct MergeOutcome {
     pub duplicates: usize,
     /// expected cells with no result in any input (flat grid order)
     pub missing: Vec<String>,
+    /// merged input files whose header declares a shard layout -- the
+    /// per-shard caches a complete merge supersedes (`merge --prune`)
+    pub shard_inputs: Vec<PathBuf>,
 }
 
 /// Bit-exact equality of two cached cell results ("n/a" only equals
@@ -805,6 +808,12 @@ pub fn merge_files(
         .cloned()
         .collect();
 
+    let shard_inputs: Vec<PathBuf> = files
+        .iter()
+        .filter(|f| f.header.shard.is_some())
+        .map(|f| f.path.clone())
+        .collect();
+
     Ok(MergeOutcome {
         arch: first.header.arch.clone(),
         regime,
@@ -814,7 +823,33 @@ pub fn merge_files(
         skipped,
         duplicates,
         missing,
+        shard_inputs,
     })
+}
+
+/// Delete the per-shard cache files a finished merge supersedes
+/// (`fxpnet grid merge --prune`).
+///
+/// Refuses unless the merge covered the complete sweep: pruning inputs
+/// of a partial union would destroy the only copy of those cells.  Only
+/// inputs whose header declares a shard layout are deleted -- merging
+/// whole-sweep caches never removes them.  Returns the deleted paths.
+pub fn prune_shard_inputs(outcome: &MergeOutcome) -> Result<Vec<PathBuf>> {
+    if !outcome.is_complete() {
+        return Err(FxpError::config(format!(
+            "refusing to prune shard caches: sweep incomplete ({} cells \
+             missing: {})",
+            outcome.missing.len(),
+            outcome.missing.join(" ")
+        )));
+    }
+    let mut removed = Vec::with_capacity(outcome.shard_inputs.len());
+    for p in &outcome.shard_inputs {
+        std::fs::remove_file(p)?;
+        log::info!("pruned superseded shard cache {}", p.display());
+        removed.push(p.clone());
+    }
+    Ok(removed)
 }
 
 impl MergeOutcome {

@@ -1,11 +1,23 @@
-//! The SGD step loop.
+//! The SGD step loop, and the [`TrainSession`] abstraction both training
+//! backends implement.
 //!
-//! State (parameters + momenta) lives as XLA literals and is fed straight
-//! from one step's outputs into the next step's inputs -- only the batch
-//! and the scalar loss cross the host boundary per step (measured in
-//! EXPERIMENTS.md section Perf).  Quantization configuration, update
-//! masks, lr and momentum are literals too, rebuilt only when a regime /
-//! phase changes them.
+//! Two engines can drive a fine-tuning run:
+//!
+//! * [`Trainer`] -- the XLA path: state (parameters + momenta) lives as
+//!   XLA literals and is fed straight from one step's outputs into the
+//!   next step's inputs -- only the batch and the scalar loss cross the
+//!   host boundary per step (measured in EXPERIMENTS.md section Perf).
+//!   Quantization configuration, update masks, lr and momentum are
+//!   literals too, rebuilt only when a regime / phase changes them.
+//!   Needs `artifacts/` and a real PJRT runtime (relink the `xla` crate).
+//! * `train::NativeTrainer` -- the pure-Rust backprop engine: runs the
+//!   same step contract offline, with stochastic-rounding fixed-point
+//!   weight updates (Gupta et al. 2015).
+//!
+//! The regimes talk to either through the [`TrainSession`] trait; the
+//! shared [`run_session`] loop owns divergence detection (the paper's
+//! "fails to converge" -> `n/a`), so both backends judge runs by exactly
+//! the same rule.
 
 use std::rc::Rc;
 
@@ -64,6 +76,97 @@ pub fn upd_single(num_layers: usize, layer: usize) -> Vec<f32> {
     let mut v = vec![0.0; num_layers];
     v[layer] = 1.0;
     v
+}
+
+/// One in-progress fine-tuning run, behind either backend.
+///
+/// A session owns its parameter/momentum state and its data loader; the
+/// regimes drive it through `step`/`set_config`/`reset_momenta` and read
+/// the result back with `params`.  Divergence policy is not the
+/// session's business -- [`run_session`] applies it identically to every
+/// implementation.
+pub trait TrainSession {
+    /// One SGD step; returns the batch loss.
+    fn step(&mut self) -> Result<f32>;
+
+    /// Swap the quantization / update / lr configuration (phase change);
+    /// parameter and momentum state is preserved.
+    fn set_config(
+        &mut self,
+        nq: &NetQuant,
+        upd: &[f32],
+        lr: f32,
+        momentum: f32,
+    ) -> Result<()>;
+
+    /// Reset momenta to zero (used between Proposal 3 phases so stale
+    /// velocity from the previous phase's layer does not leak).
+    fn reset_momenta(&mut self) -> Result<()>;
+
+    /// Read the current parameters back to the host.
+    fn params(&self) -> Result<ParamSet>;
+
+    /// Steps executed over the session's lifetime.
+    fn global_step(&self) -> usize;
+
+    /// Divergence threshold (loss above this, or NaN/Inf, is "n/a").
+    fn max_loss(&self) -> f32;
+}
+
+/// Run `steps` steps of a session with divergence detection; records the
+/// loss every `record_every` steps (and always the last).
+///
+/// "Diverged" (the paper's *fails to converge*, rendered `n/a` in the
+/// tables) means any of:
+/// * the loss goes NaN/Inf or exceeds the session's `max_loss` at any
+///   step;
+/// * for runs of >= 30 steps: the trailing-mean loss ends up clearly
+///   *above* where the run started -- fine-tuning made the network
+///   worse, which is exactly what happens when the mismatched gradients
+///   point the wrong way (see results/gradient_mismatch_*).
+pub fn run_session(
+    s: &mut dyn TrainSession,
+    steps: usize,
+    record_every: usize,
+) -> Result<TrainOutcome> {
+    let max_loss = s.max_loss();
+    let mut history = Vec::new();
+    let mut first_losses: Vec<f32> = Vec::new();
+    let mut tail: std::collections::VecDeque<f32> =
+        std::collections::VecDeque::with_capacity(8);
+    for i in 0..steps {
+        let loss = s.step()?;
+        if first_losses.len() < 5 {
+            first_losses.push(loss);
+        }
+        if tail.len() == 8 {
+            tail.pop_front();
+        }
+        tail.push_back(loss);
+        if i % record_every.max(1) == 0 || i + 1 == steps {
+            history.push((s.global_step(), loss));
+        }
+        if !loss.is_finite() || loss > max_loss {
+            log::warn!(
+                "diverged at step {} (loss {loss}): marking n/a",
+                s.global_step()
+            );
+            return Ok(TrainOutcome { history, diverged: true, steps: i + 1 });
+        }
+    }
+    if steps >= 30 {
+        let start =
+            first_losses.iter().sum::<f32>() / first_losses.len().max(1) as f32;
+        let end = tail.iter().sum::<f32>() / tail.len().max(1) as f32;
+        if end > (start * 1.3).max(start + 0.7) {
+            log::warn!(
+                "failed to converge: loss {start:.3} -> {end:.3} over {steps} \
+                 steps; marking n/a"
+            );
+            return Ok(TrainOutcome { history, diverged: true, steps });
+        }
+    }
+    Ok(TrainOutcome { history, diverged: false, steps })
 }
 
 pub struct Trainer {
@@ -192,54 +295,10 @@ impl Trainer {
         Ok(loss)
     }
 
-    /// Run `steps` steps with divergence detection; records the loss every
-    /// `record_every` steps (and always the last).
-    ///
-    /// "Diverged" (the paper's *fails to converge*, rendered `n/a` in the
-    /// tables) means any of:
-    /// * the loss goes NaN/Inf or exceeds `max_loss` at any step;
-    /// * for runs of >= 30 steps: the trailing-mean loss ends up clearly
-    ///   *above* where the run started -- fine-tuning made the network
-    ///   worse, which is exactly what happens when the mismatched
-    ///   gradients point the wrong way (see results/gradient_mismatch_*).
+    /// Run `steps` steps with divergence detection (see [`run_session`],
+    /// which owns the shared policy).
     pub fn run(&mut self, steps: usize, record_every: usize) -> Result<TrainOutcome> {
-        let mut history = Vec::new();
-        let mut first_losses: Vec<f32> = Vec::new();
-        let mut tail: std::collections::VecDeque<f32> =
-            std::collections::VecDeque::with_capacity(8);
-        for i in 0..steps {
-            let loss = self.step()?;
-            if first_losses.len() < 5 {
-                first_losses.push(loss);
-            }
-            if tail.len() == 8 {
-                tail.pop_front();
-            }
-            tail.push_back(loss);
-            if i % record_every.max(1) == 0 || i + 1 == steps {
-                history.push((self.step, loss));
-            }
-            if !loss.is_finite() || loss > self.max_loss {
-                log::warn!(
-                    "diverged at step {} (loss {loss}): marking n/a",
-                    self.step
-                );
-                return Ok(TrainOutcome { history, diverged: true, steps: i + 1 });
-            }
-        }
-        if steps >= 30 {
-            let start =
-                first_losses.iter().sum::<f32>() / first_losses.len().max(1) as f32;
-            let end = tail.iter().sum::<f32>() / tail.len().max(1) as f32;
-            if end > (start * 1.3).max(start + 0.7) {
-                log::warn!(
-                    "failed to converge: loss {start:.3} -> {end:.3} over {steps} \
-                     steps; marking n/a"
-                );
-                return Ok(TrainOutcome { history, diverged: true, steps });
-            }
-        }
-        Ok(TrainOutcome { history, diverged: false, steps })
+        run_session(self, steps, record_every)
     }
 
     /// Read the current parameters back to the host.
@@ -258,5 +317,37 @@ impl Trainer {
 
     pub fn arch(&self) -> &ArchSpec {
         &self.arch
+    }
+}
+
+impl TrainSession for Trainer {
+    fn step(&mut self) -> Result<f32> {
+        Trainer::step(self)
+    }
+
+    fn set_config(
+        &mut self,
+        nq: &NetQuant,
+        upd: &[f32],
+        lr: f32,
+        momentum: f32,
+    ) -> Result<()> {
+        Trainer::set_config(self, nq, upd, lr, momentum)
+    }
+
+    fn reset_momenta(&mut self) -> Result<()> {
+        Trainer::reset_momenta(self)
+    }
+
+    fn params(&self) -> Result<ParamSet> {
+        Trainer::params(self)
+    }
+
+    fn global_step(&self) -> usize {
+        self.step
+    }
+
+    fn max_loss(&self) -> f32 {
+        self.max_loss
     }
 }

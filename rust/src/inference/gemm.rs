@@ -23,27 +23,54 @@ use crate::inference::packing::{PackedPanels, NR};
 /// stay comfortably in registers on x86-64 and aarch64.
 pub const MR: usize = 4;
 
+/// Element type the microkernel can run over: i32 codes widening into
+/// i64 accumulators (the integer inference engine), or f32 operands with
+/// f32 accumulators (the native training engine's forward and
+/// input-gradient GEMMs).  Accumulation order is a fixed walk over the
+/// reduction axis per output element, so both instantiations are
+/// deterministic for any row blocking or thread count.
+pub trait GemmScalar: Copy + Default {
+    type Acc: Copy + Default;
+    fn madd(acc: Self::Acc, a: Self, b: Self) -> Self::Acc;
+}
+
+impl GemmScalar for i32 {
+    type Acc = i64;
+    #[inline(always)]
+    fn madd(acc: i64, a: i32, b: i32) -> i64 {
+        acc + a as i64 * b as i64
+    }
+}
+
+impl GemmScalar for f32 {
+    type Acc = f32;
+    #[inline(always)]
+    fn madd(acc: f32, a: f32, b: f32) -> f32 {
+        acc + a * b
+    }
+}
+
 /// Accumulate an `M x NR` tile: rows `base..base+M` of the row-major
 /// `(rows, k)` matrix `a` against one packed panel, starting every row's
 /// accumulators at `init` (the fused bias).
 #[inline(always)]
-fn micro_tile<const M: usize>(
-    a: &[i32],
+fn micro_tile<T: GemmScalar, const M: usize>(
+    a: &[T],
     k: usize,
     base: usize,
-    panel: &[i32],
-    init: &[i64; NR],
-) -> [[i64; NR]; M] {
-    let mut acc = [[0i64; NR]; M];
+    panel: &[T],
+    init: &[T::Acc; NR],
+) -> [[T::Acc; NR]; M] {
+    let mut acc = [[T::Acc::default(); NR]; M];
     for row in acc.iter_mut() {
         *row = *init;
     }
     for p in 0..k {
         let b = &panel[p * NR..(p + 1) * NR];
         for (ii, acc_row) in acc.iter_mut().enumerate() {
-            let av = a[(base + ii) * k + p] as i64;
+            let av = a[(base + ii) * k + p];
             for (accv, &bv) in acc_row.iter_mut().zip(b) {
-                *accv += av * bv as i64;
+                *accv = T::madd(*accv, av, bv);
             }
         }
     }
@@ -53,12 +80,12 @@ fn micro_tile<const M: usize>(
 /// Panel-blocked GEMM driver: `emit(row * n + col, acc)` receives every
 /// finished accumulator exactly once (bias already folded in).
 #[inline]
-fn gemm_panels<E: FnMut(usize, i64)>(
-    a: &[i32],
+pub fn gemm_panels<T: GemmScalar, E: FnMut(usize, T::Acc)>(
+    a: &[T],
     rows: usize,
     k: usize,
-    pw: &PackedPanels,
-    bias_acc: &[i64],
+    pw: &PackedPanels<T>,
+    bias_acc: &[T::Acc],
     mut emit: E,
 ) {
     debug_assert_eq!(pw.k, k);
@@ -69,11 +96,11 @@ fn gemm_panels<E: FnMut(usize, i64)>(
         let panel = pw.panel(jp);
         let j0 = jp * NR;
         let jw = NR.min(n - j0);
-        let mut init = [0i64; NR];
+        let mut init = [T::Acc::default(); NR];
         init[..jw].copy_from_slice(&bias_acc[j0..j0 + jw]);
         let mut i = 0usize;
         while i + MR <= rows {
-            let acc = micro_tile::<MR>(a, k, i, panel, &init);
+            let acc = micro_tile::<T, MR>(a, k, i, panel, &init);
             for (ii, acc_row) in acc.iter().enumerate() {
                 let o = (i + ii) * n + j0;
                 for (j, &v) in acc_row[..jw].iter().enumerate() {
@@ -83,7 +110,7 @@ fn gemm_panels<E: FnMut(usize, i64)>(
             i += MR;
         }
         while i < rows {
-            let acc = micro_tile::<1>(a, k, i, panel, &init);
+            let acc = micro_tile::<T, 1>(a, k, i, panel, &init);
             let o = i * n + j0;
             for (j, &v) in acc[0][..jw].iter().enumerate() {
                 emit(o + j, v);
@@ -91,6 +118,22 @@ fn gemm_panels<E: FnMut(usize, i64)>(
             i += 1;
         }
     }
+}
+
+/// f32 GEMM with the bias folded into the accumulator start: the native
+/// training engine's forward (im2col patches x quantized weights) and
+/// input-gradient (output grads x transposed weights) matmuls.  `out` is
+/// row-major `(rows, pw.n)`.
+pub fn gemm_bias_f32(
+    a: &[f32],
+    rows: usize,
+    k: usize,
+    pw: &PackedPanels<f32>,
+    bias: &[f32],
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), rows * pw.n);
+    gemm_panels(a, rows, k, pw, bias, |idx, acc| out[idx] = acc);
 }
 
 /// GEMM with the integer epilogue: bias + requantize (+ ReLU) into

@@ -23,32 +23,48 @@ pub const NR: usize = 8;
 /// Weights relayouted into `NR`-column panels, each panel contiguous and
 /// k-major: element `(p, j)` of panel `jp` lives at `p*NR + j`.  Columns
 /// past `n` are zero-padded so the microkernel never branches on width.
+///
+/// Generic over the element type: `i32` codes for the integer inference
+/// engine, `f32` for the native training engine (which repacks the
+/// quantized weights every step and therefore reuses the buffer via
+/// [`PackedPanels::pack_into`]).
 #[derive(Clone, Debug)]
-pub struct PackedPanels {
-    data: Vec<i32>,
+pub struct PackedPanels<T = i32> {
+    data: Vec<T>,
     /// reduction length (rows of the unpacked matrix)
     pub k: usize,
     /// logical column count (output channels / units)
     pub n: usize,
 }
 
-impl PackedPanels {
+impl<T: Copy + Default> PackedPanels<T> {
     /// Pack a row-major `(k, n)` weight matrix.
-    pub fn pack(w: &[i32], k: usize, n: usize) -> PackedPanels {
+    pub fn pack(w: &[T], k: usize, n: usize) -> PackedPanels<T> {
+        let mut p = PackedPanels { data: Vec::new(), k: 0, n: 0 };
+        p.pack_into(w, k, n);
+        p
+    }
+
+    /// Repack in place, reusing the existing buffer (the native trainer
+    /// repacks per step, so steady-state packing must not allocate once
+    /// warm).  Every slot -- including the zero padding -- is rewritten.
+    pub fn pack_into(&mut self, w: &[T], k: usize, n: usize) {
         debug_assert_eq!(w.len(), k * n);
         let panels = n.div_ceil(NR);
-        let mut data = vec![0i32; panels * k * NR];
+        self.data.clear();
+        self.data.resize(panels * k * NR, T::default());
+        self.k = k;
+        self.n = n;
         for jp in 0..panels {
             let j0 = jp * NR;
             let jw = NR.min(n - j0);
-            let dst = &mut data[jp * k * NR..(jp + 1) * k * NR];
+            let dst = &mut self.data[jp * k * NR..(jp + 1) * k * NR];
             for p in 0..k {
                 for j in 0..jw {
                     dst[p * NR + j] = w[p * n + j0 + j];
                 }
             }
         }
-        PackedPanels { data, k, n }
     }
 
     #[inline]
@@ -58,7 +74,7 @@ impl PackedPanels {
 
     /// Panel `jp` as a contiguous `k * NR` slice.
     #[inline]
-    pub fn panel(&self, jp: usize) -> &[i32] {
+    pub fn panel(&self, jp: usize) -> &[T] {
         &self.data[jp * self.k * NR..(jp + 1) * self.k * NR]
     }
 }
@@ -71,15 +87,15 @@ impl PackedPanels {
 /// order is `(ky, kx, ci)` -- matching the HWIO weight matrix rows.
 /// Taps outside the image are written as zero codes.
 #[allow(clippy::too_many_arguments)]
-pub fn im2col_rows(
-    input: &[i32],
+pub fn im2col_rows<T: Copy + Default>(
+    input: &[T],
     n: usize,
     h: usize,
     w: usize,
     cin: usize,
     row0: usize,
     rows: usize,
-    out: &mut [i32],
+    out: &mut [T],
 ) {
     let k = 9 * cin;
     debug_assert_eq!(input.len(), n * h * w * cin);
@@ -96,7 +112,7 @@ pub fn im2col_rows(
             let dst = &mut dst_row[ky * 3 * cin..(ky + 1) * 3 * cin];
             let sy = y as isize + ky as isize - 1;
             if sy < 0 || sy >= h as isize {
-                dst.fill(0);
+                dst.fill(T::default());
                 continue;
             }
             let src_row = img_base + sy as usize * w * cin;
@@ -109,7 +125,7 @@ pub fn im2col_rows(
                     let d = &mut dst[kx * cin..(kx + 1) * cin];
                     let sx = x as isize + kx as isize - 1;
                     if sx < 0 || sx >= w as isize {
-                        d.fill(0);
+                        d.fill(T::default());
                     } else {
                         let s = src_row + sx as usize * cin;
                         d.copy_from_slice(&input[s..s + cin]);

@@ -43,6 +43,13 @@
 //! `rust/log-shim` (package `log`) provides the log facade.  Swap the
 //! real `xla` crate back in via one line of rust/Cargo.toml.
 //!
+//! Training does **not** require the relink: the native backend
+//! (`crate::train`, `--backend native`, the default offline) is a
+//! pure-Rust backprop + stochastic-rounding fixed-point SGD engine that
+//! runs the paper's sweeps for real with zero external dependencies;
+//! the XLA path remains available behind `coordinator::backend` for
+//! environments with the real PJRT bindings.
+//!
 //! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
 //! paper-vs-measured results.
 
@@ -58,6 +65,7 @@ pub mod quant;
 pub mod runtime;
 pub mod tensor;
 pub mod testutil;
+pub mod train;
 pub mod util;
 
 pub use error::{FxpError, Result};

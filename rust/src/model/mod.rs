@@ -8,6 +8,7 @@
 pub mod checkpoint;
 pub mod manifest;
 pub mod params;
+pub mod zoo;
 
 pub use manifest::{ArchSpec, ArtifactSpec, IoSpec, Manifest};
 pub use params::ParamSet;

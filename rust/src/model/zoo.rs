@@ -1,0 +1,164 @@
+//! Built-in architecture definitions for the native training backend.
+//!
+//! The XLA backend learns its architectures from `artifacts/manifest.json`
+//! (written at AOT-compile time); the native backend needs no artifacts,
+//! so the same three paper architectures are defined here directly.  The
+//! names mirror the Python side (`python/compile/model.py`): `tiny` for
+//! tests/CI, `shallow` for quick experiments, `paper12` for the full
+//! reproduction grid.
+//!
+//! A zoo arch carries an empty `artifacts` map -- asking the XLA runtime
+//! to execute one is a manifest error, exactly as asking the native
+//! backend for an arch outside the zoo is.
+
+use std::collections::BTreeMap;
+
+use crate::model::manifest::ArchSpec;
+
+/// Build an [`ArchSpec`] from a layer walk, deriving parameter shapes the
+/// same way the Python model does: conv kernels are HWIO `(3, 3, cin,
+/// cout)`, pools halve the spatial dims, the FC matrix flattens whatever
+/// plane reaches it.
+pub fn make_arch(
+    name: &str,
+    input: [usize; 3],
+    layers: &[(&str, usize)],
+    train_batch: usize,
+    eval_batch: usize,
+) -> ArchSpec {
+    let (mut h, mut w, mut c) = (input[0], input[1], input[2]);
+    let mut params = Vec::new();
+    let mut spec_layers = Vec::new();
+    let mut li = 0usize;
+    let mut num_classes = 0usize;
+    for &(kind, out) in layers {
+        spec_layers.push((kind.to_string(), out));
+        match kind {
+            "conv" => {
+                params.push((format!("l{li}.w"), vec![3, 3, c, out]));
+                params.push((format!("l{li}.b"), vec![out]));
+                c = out;
+                num_classes = out;
+                li += 1;
+            }
+            "pool" => {
+                h /= 2;
+                w /= 2;
+            }
+            "fc" => {
+                params.push((format!("l{li}.w"), vec![h * w * c, out]));
+                params.push((format!("l{li}.b"), vec![out]));
+                h = 1;
+                w = 1;
+                c = out;
+                num_classes = out;
+                li += 1;
+            }
+            other => panic!("zoo: unknown layer kind '{other}'"),
+        }
+    }
+    ArchSpec {
+        name: name.to_string(),
+        input,
+        num_classes,
+        num_layers: li,
+        train_batch,
+        eval_batch,
+        layers: spec_layers,
+        params,
+        artifacts: BTreeMap::new(),
+    }
+}
+
+/// The native backend's architecture registry.
+pub fn builtin_archs() -> BTreeMap<String, ArchSpec> {
+    let mut m = BTreeMap::new();
+    // 3 weighted layers on 16x16 inputs: the test/CI workhorse.
+    m.insert(
+        "tiny".to_string(),
+        make_arch(
+            "tiny",
+            [16, 16, 3],
+            &[("conv", 8), ("pool", 0), ("conv", 16), ("pool", 0), ("fc", 10)],
+            16,
+            32,
+        ),
+    );
+    // CIFAR-shaped quick-experiment net.
+    m.insert(
+        "shallow".to_string(),
+        make_arch(
+            "shallow",
+            [32, 32, 3],
+            &[
+                ("conv", 32),
+                ("pool", 0),
+                ("conv", 32),
+                ("pool", 0),
+                ("fc", 10),
+            ],
+            32,
+            64,
+        ),
+    );
+    // The deep network behind the paper's main tables.
+    m.insert(
+        "paper12".to_string(),
+        make_arch(
+            "paper12",
+            [32, 32, 3],
+            &[
+                ("conv", 64),
+                ("conv", 64),
+                ("pool", 0),
+                ("conv", 128),
+                ("conv", 128),
+                ("pool", 0),
+                ("conv", 256),
+                ("conv", 256),
+                ("pool", 0),
+                ("fc", 10),
+            ],
+            32,
+            64,
+        ),
+    );
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zoo_shapes_are_consistent() {
+        for (name, spec) in builtin_archs() {
+            assert_eq!(spec.name, name);
+            assert_eq!(spec.params.len(), 2 * spec.num_layers, "{name}");
+            assert_eq!(spec.num_classes, 10, "{name}");
+            assert!(spec.train_batch > 0 && spec.eval_batch > 0);
+            // parameters are initialisable (shape conventions hold)
+            let p = crate::model::params::ParamSet::init(&spec, 1);
+            assert_eq!(p.num_layers(), spec.num_layers);
+        }
+    }
+
+    #[test]
+    fn tiny_fc_input_is_flattened_plane() {
+        let archs = builtin_archs();
+        let tiny = &archs["tiny"];
+        // 16x16 -> conv8 -> pool(8x8) -> conv16 -> pool(4x4) -> fc
+        let (fc_name, fc_shape) = &tiny.params[4];
+        assert_eq!(fc_name, "l2.w");
+        assert_eq!(fc_shape, &vec![4 * 4 * 16, 10]);
+        assert_eq!(tiny.num_layers, 3);
+    }
+
+    #[test]
+    fn paper12_is_deep() {
+        let archs = builtin_archs();
+        assert_eq!(archs["paper12"].num_layers, 7);
+        let (_, fc_shape) = archs["paper12"].params.last().map(|p| (&p.0, &p.1)).unwrap();
+        assert_eq!(fc_shape, &vec![10]);
+    }
+}

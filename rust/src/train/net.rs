@@ -1,0 +1,860 @@
+//! Native forward/backward over the paper's layer set: 3x3 SAME conv,
+//! 2x2 max-pool, fully-connected, ReLU, softmax cross-entropy.
+//!
+//! Semantics mirror the AOT-compiled XLA graphs: *simulated*
+//! quantization in f32 -- weights snap to their Q-format grid
+//! (nearest-half-up) before every forward, hidden activations snap after
+//! ReLU, and gradients flow through the quantizers as straight-through
+//! estimators (the paper's "presumed" smooth gradient, so the section
+//! 2.2 gradient mismatch is physically present here exactly as it is in
+//! the compiled graphs).
+//!
+//! The heavy math reuses the PR 2 GEMM machinery, instantiated at f32
+//! via [`gemm::GemmScalar`]: the forward conv/fc matmuls run blocked
+//! im2col + panel-packed microkernel, and the input-gradient matmuls run
+//! the same microkernel against per-step-packed transposed weights.
+//! Weight gradients use an A-stationary rank-1 accumulation (patch rows
+//! are already materialised, so no second im2col pass is needed).
+//!
+//! Determinism: every accumulation walks a fixed order that depends only
+//! on the architecture and batch size -- never on threads, blocking, or
+//! scheduling -- so a loss history is a pure function of
+//! `(arch, params, quantization, data seed)`.  Max-pool ties route the
+//! gradient to the *first* maximal element.
+//!
+//! All buffers are allocated once at [`NativeNet::build`] and reused;
+//! steady-state training steps do no heap allocation.
+
+#![allow(clippy::needless_range_loop)]
+
+use crate::error::{FxpError, Result};
+use crate::fixedpoint::vector::quantize_slice;
+use crate::fixedpoint::{QFormat, RoundMode};
+use crate::inference::gemm;
+use crate::inference::packing::{self, PackedPanels};
+use crate::model::manifest::ArchSpec;
+use crate::model::params::ParamSet;
+use crate::quant::policy::NetQuant;
+
+/// Patch rows extracted per im2col + GEMM block (same rationale as the
+/// inference engine's block size: keep a block resident in L2).
+const ROW_BLOCK: usize = 64;
+
+/// One structural stage of the network (weighted layers carry their
+/// flat layer index `li`).
+#[derive(Clone, Copy, Debug)]
+enum Stage {
+    Conv { li: usize, cin: usize, cout: usize },
+    Pool,
+    Fc { li: usize, k: usize, nout: usize },
+}
+
+/// A network instance with training caches: quantized forward weights,
+/// per-stage activation planes, pre-activation planes (for the ReLU
+/// mask), pool argmax maps, and gradient planes.
+pub struct NativeNet {
+    stages: Vec<Stage>,
+    /// (h, w, c) per stage boundary; `shapes[0]` is the input plane.
+    shapes: Vec<(usize, usize, usize)>,
+    /// stage index of each weighted layer
+    layer_stage: Vec<usize>,
+    /// (k, n) GEMM dims of each weighted layer
+    layer_dims: Vec<(usize, usize)>,
+    num_layers: usize,
+    num_classes: usize,
+    batch: usize,
+    // per weighted layer, refreshed by `set_weights`:
+    wq: Vec<Vec<f32>>,
+    wt: Vec<Vec<f32>>,
+    bias: Vec<Vec<f32>>,
+    packed_w: Vec<PackedPanels<f32>>,
+    packed_wt: Vec<PackedPanels<f32>>,
+    a_fmt: Vec<Option<QFormat>>,
+    // caches sized for `batch` images:
+    acts: Vec<Vec<f32>>,
+    zs: Vec<Vec<f32>>,
+    argmax: Vec<Vec<u32>>,
+    dacts: Vec<Vec<f32>>,
+    probs: Vec<f32>,
+    patches: Vec<f32>,
+    dpatches: Vec<f32>,
+    zero_bias: Vec<f32>,
+}
+
+impl NativeNet {
+    /// Build the structure and allocate every buffer for `batch`-image
+    /// steps.  Weights are loaded separately ([`NativeNet::set_weights`])
+    /// because they change every training step.
+    pub fn build(spec: &ArchSpec, batch: usize) -> Result<NativeNet> {
+        if batch == 0 {
+            return Err(FxpError::config("native net: batch must be > 0"));
+        }
+        let mut shapes = vec![(
+            spec.input[0],
+            spec.input[1],
+            spec.input[2],
+        )];
+        let mut stages = Vec::new();
+        let mut layer_stage = Vec::new();
+        let mut layer_dims = Vec::new();
+        let mut li = 0usize;
+        for (kind, out) in &spec.layers {
+            let (h, w, c) = *shapes.last().unwrap();
+            match kind.as_str() {
+                "conv" => {
+                    layer_stage.push(stages.len());
+                    stages.push(Stage::Conv { li, cin: c, cout: *out });
+                    layer_dims.push((9 * c, *out));
+                    shapes.push((h, w, *out));
+                    li += 1;
+                }
+                "pool" => {
+                    if h < 2 || w < 2 {
+                        return Err(FxpError::config(format!(
+                            "native net: pool over a {h}x{w} plane"
+                        )));
+                    }
+                    stages.push(Stage::Pool);
+                    shapes.push((h / 2, w / 2, c));
+                }
+                "fc" => {
+                    layer_stage.push(stages.len());
+                    stages.push(Stage::Fc { li, k: h * w * c, nout: *out });
+                    layer_dims.push((h * w * c, *out));
+                    shapes.push((1, 1, *out));
+                    li += 1;
+                }
+                other => {
+                    return Err(FxpError::config(format!(
+                        "native net: unknown layer kind '{other}'"
+                    )))
+                }
+            }
+        }
+        if li != spec.num_layers {
+            return Err(FxpError::config(format!(
+                "native net: arch '{}' declares {} layers, walk found {li}",
+                spec.name, spec.num_layers
+            )));
+        }
+        let (lh, lw, lc) = *shapes.last().unwrap();
+        if lh * lw * lc != spec.num_classes {
+            return Err(FxpError::config(format!(
+                "native net: head leaves {} values/image, expected {} logits",
+                lh * lw * lc,
+                spec.num_classes
+            )));
+        }
+        let acts: Vec<Vec<f32>> = shapes
+            .iter()
+            .map(|&(h, w, c)| vec![0f32; batch * h * w * c])
+            .collect();
+        let dacts = acts.clone();
+        let zs: Vec<Vec<f32>> = stages
+            .iter()
+            .enumerate()
+            .map(|(s, st)| match st {
+                Stage::Pool => Vec::new(),
+                _ => {
+                    let (h, w, c) = shapes[s + 1];
+                    vec![0f32; batch * h * w * c]
+                }
+            })
+            .collect();
+        let argmax: Vec<Vec<u32>> = stages
+            .iter()
+            .enumerate()
+            .map(|(s, st)| match st {
+                Stage::Pool => {
+                    let (h, w, c) = shapes[s + 1];
+                    vec![0u32; batch * h * w * c]
+                }
+                _ => Vec::new(),
+            })
+            .collect();
+        let conv_k_max = stages
+            .iter()
+            .map(|st| match st {
+                Stage::Conv { cin, .. } => 9 * cin,
+                _ => 0,
+            })
+            .max()
+            .unwrap_or(0);
+        let k_max = layer_dims.iter().map(|&(k, _)| k).max().unwrap_or(0);
+        let num_layers = spec.num_layers;
+        Ok(NativeNet {
+            stages,
+            shapes,
+            layer_stage,
+            layer_dims,
+            num_layers,
+            num_classes: spec.num_classes,
+            batch,
+            wq: vec![Vec::new(); num_layers],
+            wt: vec![Vec::new(); num_layers],
+            bias: vec![Vec::new(); num_layers],
+            packed_w: (0..num_layers)
+                .map(|_| PackedPanels::<f32>::pack(&[], 0, 0))
+                .collect(),
+            packed_wt: (0..num_layers)
+                .map(|_| PackedPanels::<f32>::pack(&[], 0, 0))
+                .collect(),
+            a_fmt: vec![None; num_layers],
+            acts,
+            zs,
+            argmax,
+            dacts,
+            probs: vec![0f32; batch * spec.num_classes],
+            patches: vec![0f32; ROW_BLOCK * conv_k_max],
+            dpatches: vec![0f32; ROW_BLOCK * conv_k_max],
+            zero_bias: vec![0f32; k_max],
+        })
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.num_classes
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Load `params` under the cell's quantization: weights snap to
+    /// their grid (nearest-half-up, the Pallas kernel semantics) and are
+    /// packed for the forward and input-gradient GEMMs; biases stay in
+    /// full precision (they live on the accumulator grid in hardware).
+    /// Called once per training step -- buffers are reused, so a warm
+    /// net repacks without allocating.
+    pub fn set_weights(&mut self, params: &ParamSet, nq: &NetQuant) -> Result<()> {
+        if nq.num_layers() != self.num_layers {
+            return Err(FxpError::config(format!(
+                "native net: NetQuant has {} layers, net {}",
+                nq.num_layers(),
+                self.num_layers
+            )));
+        }
+        if params.num_layers() != self.num_layers {
+            return Err(FxpError::config(format!(
+                "native net: ParamSet has {} layers, net {}",
+                params.num_layers(),
+                self.num_layers
+            )));
+        }
+        for li in 0..self.num_layers {
+            let (k, n) = self.layer_dims[li];
+            let w = params.weight(li);
+            if w.len() != k * n {
+                return Err(FxpError::shape(format!(
+                    "native net: layer {li} weights have {} values, \
+                     expected {k}x{n}",
+                    w.len()
+                )));
+            }
+            let wq = &mut self.wq[li];
+            wq.clear();
+            wq.extend_from_slice(w.data());
+            if let Some(fmt) = nq.weights[li] {
+                quantize_slice(wq, fmt, RoundMode::NearestHalfUp, None);
+            }
+            self.packed_w[li].pack_into(wq, k, n);
+            let wt = &mut self.wt[li];
+            wt.clear();
+            wt.resize(k * n, 0.0);
+            for p in 0..k {
+                for j in 0..n {
+                    wt[j * k + p] = wq[p * n + j];
+                }
+            }
+            self.packed_wt[li].pack_into(wt, n, k);
+            let b = params.bias(li);
+            if b.len() != n {
+                return Err(FxpError::shape(format!(
+                    "native net: layer {li} bias has {} values, expected {n}",
+                    b.len()
+                )));
+            }
+            let bias = &mut self.bias[li];
+            bias.clear();
+            bias.extend_from_slice(b.data());
+            self.a_fmt[li] = nq.acts[li];
+        }
+        Ok(())
+    }
+
+    /// Forward `n` images (NHWC floats in [0,1]) through the quantized
+    /// net; returns the `(n, classes)` logits.  Caches every stage's
+    /// activations and pre-activations for [`NativeNet::backward`].
+    pub fn forward(&mut self, images: &[f32], n: usize) -> Result<&[f32]> {
+        let (h0, w0, c0) = self.shapes[0];
+        if n == 0 || n > self.batch {
+            return Err(FxpError::shape(format!(
+                "native net: batch {n} not in 1..={}",
+                self.batch
+            )));
+        }
+        if images.len() != n * h0 * w0 * c0 {
+            return Err(FxpError::shape(format!(
+                "native net: batch len {} != {n}x{h0}x{w0}x{c0}",
+                images.len()
+            )));
+        }
+        let last = self.num_layers - 1;
+        {
+            let NativeNet {
+                stages,
+                shapes,
+                acts,
+                zs,
+                argmax,
+                packed_w,
+                bias,
+                a_fmt,
+                patches,
+                ..
+            } = &mut *self;
+            acts[0][..images.len()].copy_from_slice(images);
+            for (s, stage) in stages.iter().enumerate() {
+                let (ih, iw, ic) = shapes[s];
+                let (oh, ow, _oc) = shapes[s + 1];
+                let (lo, hi) = acts.split_at_mut(s + 1);
+                let src = &lo[s][..n * ih * iw * ic];
+                let dst = &mut hi[0];
+                match *stage {
+                    Stage::Pool => {
+                        maxpool2_argmax(
+                            src,
+                            n,
+                            ih,
+                            iw,
+                            ic,
+                            &mut dst[..n * oh * ow * ic],
+                            &mut argmax[s][..n * oh * ow * ic],
+                        );
+                    }
+                    Stage::Conv { li, cin, cout } => {
+                        let rows = n * oh * ow;
+                        let k = 9 * cin;
+                        let z = &mut zs[s][..rows * cout];
+                        let mut r0 = 0usize;
+                        while r0 < rows {
+                            let block = ROW_BLOCK.min(rows - r0);
+                            let pb = &mut patches[..block * k];
+                            packing::im2col_rows(src, n, ih, iw, cin, r0, block, pb);
+                            gemm::gemm_bias_f32(
+                                pb,
+                                block,
+                                k,
+                                &packed_w[li],
+                                &bias[li],
+                                &mut z[r0 * cout..(r0 + block) * cout],
+                            );
+                            r0 += block;
+                        }
+                        activate(z, &mut dst[..rows * cout], li < last, a_fmt[li]);
+                    }
+                    Stage::Fc { li, k, nout } => {
+                        let z = &mut zs[s][..n * nout];
+                        gemm::gemm_bias_f32(
+                            &src[..n * k],
+                            n,
+                            k,
+                            &packed_w[li],
+                            &bias[li],
+                            z,
+                        );
+                        activate(z, &mut dst[..n * nout], li < last, a_fmt[li]);
+                    }
+                }
+            }
+        }
+        Ok(&self.acts[self.stages.len()][..n * self.num_classes])
+    }
+
+    /// Mean softmax cross-entropy of the cached logits against `labels`
+    /// (f64 accumulation); caches the softmax for the backward pass.
+    pub fn loss(&mut self, labels: &[i32], n: usize) -> Result<f32> {
+        let nc = self.num_classes;
+        if labels.len() < n {
+            return Err(FxpError::shape(format!(
+                "native net: {} labels for batch {n}",
+                labels.len()
+            )));
+        }
+        let logits = &self.acts[self.stages.len()];
+        let probs = &mut self.probs;
+        let mut total = 0f64;
+        for i in 0..n {
+            let y = labels[i] as usize;
+            if y >= nc {
+                return Err(FxpError::shape(format!(
+                    "native net: label {y} out of range {nc}"
+                )));
+            }
+            let row = &logits[i * nc..(i + 1) * nc];
+            let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut zsum = 0f64;
+            for &v in row {
+                zsum += ((v - m) as f64).exp();
+            }
+            let prow = &mut probs[i * nc..(i + 1) * nc];
+            for (p, &v) in prow.iter_mut().zip(row) {
+                *p = (((v - m) as f64).exp() / zsum) as f32;
+            }
+            total -= (row[y] - m) as f64 - zsum.ln();
+        }
+        Ok((total / n as f64) as f32)
+    }
+
+    /// Backprop from the cached softmax to parameter gradients.
+    ///
+    /// `grads` follows the [`ParamSet`] layout (`[w0, b0, w1, b1, ...]`)
+    /// and is zeroed here before accumulation.  Gradients pass straight
+    /// through the quantizers (STE) and through the ReLU mask taken from
+    /// the *pre-quantization* pre-activation.
+    ///
+    /// `upd` is the per-layer update mask: layers with `upd[li] == 0.0`
+    /// skip their (dominant-cost) weight/bias gradient accumulation and
+    /// leave zeros in `grads` -- the error signal still propagates
+    /// *through* them, which is all Proposals 2/3 need.  The first
+    /// stage's input gradient is never consumed and is skipped too.
+    pub fn backward(
+        &mut self,
+        labels: &[i32],
+        n: usize,
+        upd: &[f32],
+        grads: &mut [Vec<f32>],
+    ) -> Result<()> {
+        if upd.len() != self.num_layers {
+            return Err(FxpError::shape(format!(
+                "native net: update mask has {} entries, net {}",
+                upd.len(),
+                self.num_layers
+            )));
+        }
+        if grads.len() != 2 * self.num_layers {
+            return Err(FxpError::shape(format!(
+                "native net: {} grad tensors, expected {}",
+                grads.len(),
+                2 * self.num_layers
+            )));
+        }
+        for (t, &(k, c)) in self.layer_dims.iter().enumerate() {
+            if grads[2 * t].len() != k * c || grads[2 * t + 1].len() != c {
+                return Err(FxpError::shape(format!(
+                    "native net: grad tensor shapes for layer {t} do not \
+                     match ({k}x{c})"
+                )));
+            }
+            grads[2 * t].fill(0.0);
+            grads[2 * t + 1].fill(0.0);
+        }
+        let nc = self.num_classes;
+        let last = self.num_layers - 1;
+        let NativeNet {
+            stages,
+            shapes,
+            acts,
+            zs,
+            argmax,
+            packed_wt,
+            dacts,
+            probs,
+            patches,
+            dpatches,
+            zero_bias,
+            ..
+        } = &mut *self;
+        let top = stages.len();
+        // dL/dlogits = (softmax - onehot) / n
+        let dl = &mut dacts[top][..n * nc];
+        for i in 0..n {
+            let y = labels[i] as usize;
+            let prow = &probs[i * nc..(i + 1) * nc];
+            let drow = &mut dl[i * nc..(i + 1) * nc];
+            for (j, (d, &p)) in drow.iter_mut().zip(prow).enumerate() {
+                let onehot = if j == y { 1.0 } else { 0.0 };
+                *d = (p - onehot) / n as f32;
+            }
+        }
+        for s in (0..top).rev() {
+            let (ih, iw, ic) = shapes[s];
+            let (oh, ow, _oc) = shapes[s + 1];
+            let (dlo, dhi) = dacts.split_at_mut(s + 1);
+            let da_in = &mut dlo[s];
+            let dz = &mut dhi[0];
+            match stages[s] {
+                Stage::Pool => {
+                    if s == 0 {
+                        continue;
+                    }
+                    let in_len = n * ih * iw * ic;
+                    let out_len = n * oh * ow * ic;
+                    da_in[..in_len].fill(0.0);
+                    let am = &argmax[s][..out_len];
+                    for (i, &src_idx) in am.iter().enumerate() {
+                        da_in[src_idx as usize] += dz[i];
+                    }
+                }
+                Stage::Fc { li, k, nout } => {
+                    let dzb = &mut dz[..n * nout];
+                    if li < last {
+                        relu_mask(dzb, &zs[s][..n * nout]);
+                    }
+                    if upd[li] != 0.0 {
+                        let (gw, gb) = grad_pair(grads, li);
+                        accumulate_bias_grad(dzb, n, nout, gb);
+                        accumulate_weight_grad(
+                            &acts[s][..n * k],
+                            dzb,
+                            n,
+                            k,
+                            nout,
+                            gw,
+                        );
+                    }
+                    if s > 0 {
+                        gemm::gemm_bias_f32(
+                            dzb,
+                            n,
+                            nout,
+                            &packed_wt[li],
+                            &zero_bias[..k],
+                            &mut da_in[..n * k],
+                        );
+                    }
+                }
+                Stage::Conv { li, cin, cout } => {
+                    let rows = n * oh * ow;
+                    let k = 9 * cin;
+                    let dzb = &mut dz[..rows * cout];
+                    if li < last {
+                        relu_mask(dzb, &zs[s][..rows * cout]);
+                    }
+                    if upd[li] != 0.0 {
+                        let (gw, gb) = grad_pair(grads, li);
+                        accumulate_bias_grad(dzb, rows, cout, gb);
+                        let src_act = &acts[s][..n * ih * iw * ic];
+                        let mut r0 = 0usize;
+                        while r0 < rows {
+                            let block = ROW_BLOCK.min(rows - r0);
+                            let pb = &mut patches[..block * k];
+                            packing::im2col_rows(
+                                src_act, n, ih, iw, cin, r0, block, pb,
+                            );
+                            accumulate_weight_grad(
+                                pb,
+                                &dzb[r0 * cout..(r0 + block) * cout],
+                                block,
+                                k,
+                                cout,
+                                gw,
+                            );
+                            r0 += block;
+                        }
+                    }
+                    if s > 0 {
+                        let in_len = n * ih * iw * ic;
+                        da_in[..in_len].fill(0.0);
+                        let mut r0 = 0usize;
+                        while r0 < rows {
+                            let block = ROW_BLOCK.min(rows - r0);
+                            let dp = &mut dpatches[..block * k];
+                            gemm::gemm_bias_f32(
+                                &dzb[r0 * cout..(r0 + block) * cout],
+                                block,
+                                cout,
+                                &packed_wt[li],
+                                &zero_bias[..k],
+                                dp,
+                            );
+                            col2im_add(
+                                dp,
+                                n,
+                                ih,
+                                iw,
+                                cin,
+                                r0,
+                                block,
+                                &mut da_in[..in_len],
+                            );
+                            r0 += block;
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Cached activations of weighted layer `li` after the last forward
+    /// (post-ReLU / post-quantization for hidden layers, logits for the
+    /// head) -- the values calibration measures.
+    pub fn layer_activation(&self, li: usize, n: usize) -> &[f32] {
+        let s = self.layer_stage[li];
+        let (h, w, c) = self.shapes[s + 1];
+        &self.acts[s + 1][..n * h * w * c]
+    }
+}
+
+/// ReLU (optional) + simulated activation quantization from the
+/// pre-activation plane into the stage output.
+fn activate(z: &[f32], out: &mut [f32], relu: bool, fmt: Option<QFormat>) {
+    if relu {
+        for (o, &v) in out.iter_mut().zip(z) {
+            *o = v.max(0.0);
+        }
+    } else {
+        out.copy_from_slice(z);
+    }
+    if let Some(f) = fmt {
+        quantize_slice(out, f, RoundMode::NearestHalfUp, None);
+    }
+}
+
+/// STE through ReLU: kill the gradient where the pre-activation was
+/// non-positive.
+fn relu_mask(dz: &mut [f32], z: &[f32]) {
+    for (g, &zv) in dz.iter_mut().zip(z) {
+        if zv <= 0.0 {
+            *g = 0.0;
+        }
+    }
+}
+
+/// The (dW, db) gradient buffers of weighted layer `li`.
+fn grad_pair(grads: &mut [Vec<f32>], li: usize) -> (&mut [f32], &mut [f32]) {
+    let (a, b) = grads.split_at_mut(2 * li + 1);
+    (&mut a[2 * li][..], &mut b[0][..])
+}
+
+/// db[j] += sum over rows of dz[r, j].
+fn accumulate_bias_grad(dz: &[f32], rows: usize, n: usize, gb: &mut [f32]) {
+    for r in 0..rows {
+        let grow = &dz[r * n..(r + 1) * n];
+        for (b, &g) in gb.iter_mut().zip(grow) {
+            *b += g;
+        }
+    }
+}
+
+/// dW[p, j] += sum over rows of a[r, p] * dz[r, j] (A-stationary rank-1
+/// updates; `a` rows with zero entries -- ReLU sparsity -- are skipped).
+fn accumulate_weight_grad(
+    a: &[f32],
+    dz: &[f32],
+    rows: usize,
+    k: usize,
+    n: usize,
+    gw: &mut [f32],
+) {
+    for r in 0..rows {
+        let arow = &a[r * k..(r + 1) * k];
+        let grow = &dz[r * n..(r + 1) * n];
+        for (p, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let wrow = &mut gw[p * n..(p + 1) * n];
+            for (wv, &gv) in wrow.iter_mut().zip(grow) {
+                *wv += av * gv;
+            }
+        }
+    }
+}
+
+/// 2x2 max-pool (VALID, stride 2) recording the absolute source index of
+/// each maximum (first maximal element on ties) for the backward pass.
+fn maxpool2_argmax(
+    src: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    dst: &mut [f32],
+    arg: &mut [u32],
+) {
+    let oh = h / 2;
+    let ow = w / 2;
+    debug_assert_eq!(src.len(), n * h * w * c);
+    debug_assert_eq!(dst.len(), n * oh * ow * c);
+    for img in 0..n {
+        let base_in = img * h * w * c;
+        let base_out = img * oh * ow * c;
+        for y in 0..oh {
+            for x in 0..ow {
+                for ch in 0..c {
+                    let mut best = f32::NEG_INFINITY;
+                    let mut bi = base_in + (2 * y * w + 2 * x) * c + ch;
+                    for dy in 0..2usize {
+                        for dx in 0..2usize {
+                            let idx =
+                                base_in + ((2 * y + dy) * w + 2 * x + dx) * c + ch;
+                            if src[idx] > best {
+                                best = src[idx];
+                                bi = idx;
+                            }
+                        }
+                    }
+                    let o = base_out + (y * ow + x) * c + ch;
+                    dst[o] = best;
+                    arg[o] = bi as u32;
+                }
+            }
+        }
+    }
+}
+
+/// Scatter-add im2col patch gradients back onto the input plane
+/// (inverse of `packing::im2col_rows` over the same row range).
+#[allow(clippy::too_many_arguments)]
+fn col2im_add(
+    dpatch: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    row0: usize,
+    rows: usize,
+    dst: &mut [f32],
+) {
+    let k = 9 * cin;
+    debug_assert!(dpatch.len() >= rows * k);
+    debug_assert_eq!(dst.len(), n * h * w * cin);
+    for ri in 0..rows {
+        let r = row0 + ri;
+        let img = r / (h * w);
+        let y = (r / w) % h;
+        let x = r % w;
+        let img_base = img * h * w * cin;
+        let src_row = &dpatch[ri * k..(ri + 1) * k];
+        for ky in 0..3usize {
+            let sy = y as isize + ky as isize - 1;
+            if sy < 0 || sy >= h as isize {
+                continue;
+            }
+            for kx in 0..3usize {
+                let sx = x as isize + kx as isize - 1;
+                if sx < 0 || sx >= w as isize {
+                    continue;
+                }
+                let d = img_base + (sy as usize * w + sx as usize) * cin;
+                let s = (ky * 3 + kx) * cin;
+                for ci in 0..cin {
+                    dst[d + ci] += src_row[s + ci];
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+    use crate::quant::policy::NetQuant;
+    use crate::util::rng::Rng;
+
+    fn tiny() -> ArchSpec {
+        zoo::builtin_archs().remove("tiny").unwrap()
+    }
+
+    #[test]
+    fn forward_is_deterministic_and_batch_independent() {
+        let spec = tiny();
+        let params = ParamSet::init(&spec, 3);
+        let nq = NetQuant::all_float(spec.num_layers);
+        let n = 4;
+        let mut rng = Rng::new(9);
+        let img_len = 16 * 16 * 3;
+        let images: Vec<f32> =
+            (0..n * img_len).map(|_| rng.uniform() as f32).collect();
+        let mut net = NativeNet::build(&spec, n).unwrap();
+        net.set_weights(&params, &nq).unwrap();
+        let a = net.forward(&images, n).unwrap().to_vec();
+        // same inputs replay exactly
+        let b = net.forward(&images, n).unwrap().to_vec();
+        assert_eq!(a, b);
+        // each image's logits do not depend on its batch neighbours
+        let mut net1 = NativeNet::build(&spec, 1).unwrap();
+        net1.set_weights(&params, &nq).unwrap();
+        for i in 0..n {
+            let solo = net1
+                .forward(&images[i * img_len..(i + 1) * img_len], 1)
+                .unwrap()
+                .to_vec();
+            assert_eq!(&a[i * 10..(i + 1) * 10], &solo[..], "image {i}");
+        }
+    }
+
+    #[test]
+    fn pool_argmax_routes_first_max() {
+        let src = vec![1.0f32, 3.0, 3.0, 2.0]; // 2x2, c=1: ties at value 3
+        let mut dst = vec![0f32; 1];
+        let mut arg = vec![0u32; 1];
+        maxpool2_argmax(&src, 1, 2, 2, 1, &mut dst, &mut arg);
+        assert_eq!(dst[0], 3.0);
+        assert_eq!(arg[0], 1); // first maximal element wins
+    }
+
+    #[test]
+    fn col2im_inverts_im2col_adjointly() {
+        // <im2col(x), p> == <x, col2im(p)> for random x, p: the two ops
+        // must be exact adjoints or conv gradients are silently wrong
+        let (n, h, w, cin) = (2usize, 4usize, 3usize, 2usize);
+        let mut rng = Rng::new(5);
+        let x: Vec<f32> =
+            (0..n * h * w * cin).map(|_| rng.uniform() as f32 - 0.5).collect();
+        let rows = n * h * w;
+        let k = 9 * cin;
+        let p: Vec<f32> = (0..rows * k).map(|_| rng.uniform() as f32 - 0.5).collect();
+        let mut im2 = vec![0f32; rows * k];
+        packing::im2col_rows(&x, n, h, w, cin, 0, rows, &mut im2);
+        let lhs: f64 = im2
+            .iter()
+            .zip(&p)
+            .map(|(&a, &b)| a as f64 * b as f64)
+            .sum();
+        let mut back = vec![0f32; n * h * w * cin];
+        col2im_add(&p, n, h, w, cin, 0, rows, &mut back);
+        let rhs: f64 = x
+            .iter()
+            .zip(&back)
+            .map(|(&a, &b)| a as f64 * b as f64)
+            .sum();
+        assert!((lhs - rhs).abs() < 1e-3, "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn loss_decreases_under_plain_sgd() {
+        // three hand-rolled float SGD steps on one batch must reduce the
+        // loss -- a coarse end-to-end sanity check of the gradients
+        let spec = tiny();
+        let mut params = ParamSet::init(&spec, 7);
+        let nq = NetQuant::all_float(spec.num_layers);
+        let data = crate::data::synth::Dataset::generate(8, 16, 16, 11);
+        let n = 8;
+        let mut net = NativeNet::build(&spec, n).unwrap();
+        let mut grads: Vec<Vec<f32>> =
+            params.tensors.iter().map(|t| vec![0f32; t.len()]).collect();
+        let upd = vec![1.0f32; spec.num_layers];
+        let mut losses = Vec::new();
+        for _ in 0..3 {
+            net.set_weights(&params, &nq).unwrap();
+            net.forward(&data.images.data()[..n * 16 * 16 * 3], n).unwrap();
+            losses.push(net.loss(data.labels.data(), n).unwrap());
+            net.backward(data.labels.data(), n, &upd, &mut grads).unwrap();
+            for (t, g) in params.tensors.iter_mut().zip(&grads) {
+                for (p, &gv) in t.data_mut().iter_mut().zip(g) {
+                    *p -= 0.5 * gv;
+                }
+            }
+        }
+        net.set_weights(&params, &nq).unwrap();
+        net.forward(&data.images.data()[..n * 16 * 16 * 3], n).unwrap();
+        let final_loss = net.loss(data.labels.data(), n).unwrap();
+        assert!(
+            final_loss < losses[0],
+            "loss did not decrease: {losses:?} -> {final_loss}"
+        );
+    }
+}

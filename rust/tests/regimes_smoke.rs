@@ -6,7 +6,7 @@
 
 mod common;
 
-use fxpnet::coordinator::calibrate;
+use fxpnet::coordinator::backend::{Backend, XlaBackend};
 use fxpnet::coordinator::config::RunCfg;
 use fxpnet::coordinator::evaluator::EvalResult;
 use fxpnet::coordinator::grid::{self, GridRunner, SweepOpts};
@@ -19,7 +19,7 @@ use fxpnet::model::params::ParamSet;
 use fxpnet::quant::policy::{NetQuant, WidthSpec};
 
 struct Fixture {
-    engine: fxpnet::runtime::Engine,
+    backend: XlaBackend,
     base: ParamSet,
     a_stats: Vec<fxpnet::quant::calib::LayerStats>,
     train: Dataset,
@@ -51,16 +51,15 @@ fn fixture(seed: u64) -> Option<Fixture> {
     .unwrap();
     tr.run(60, 10).unwrap();
     let base = tr.params().unwrap();
-    let a_stats = calibrate::activation_stats(&engine, "tiny", &base, &train, 2)
-        .unwrap()
-        .a_stats;
-    Some(Fixture { engine, base, a_stats, train, eval, cfg: RunCfg::smoke() })
+    let backend = XlaBackend::new(engine);
+    let a_stats = backend.activation_stats("tiny", &base, &train, 2).unwrap();
+    Some(Fixture { backend, base, a_stats, train, eval, cfg: RunCfg::smoke() })
 }
 
 impl Fixture {
     fn ctx(&self) -> CellCtx<'_> {
         CellCtx {
-            engine: &self.engine,
+            backend: &self.backend,
             arch: "tiny",
             train_data: &self.train,
             eval_data: &self.eval,
@@ -113,7 +112,7 @@ fn grid_runner_single_cells_and_cache() {
     let Some(f) = fixture(23) else { return };
     let cfg = f.cfg.clone();
     let mut runner = GridRunner::new(
-        &f.engine,
+        &f.backend,
         "tiny",
         f.base.clone(),
         f.a_stats.clone(),

@@ -1,0 +1,443 @@
+//! Integration tests for the native training backend: gradient
+//! correctness against central finite differences, bit-identical sweep
+//! results for any worker count, the on-disk Proposal-1 seed-net cache,
+//! and `grid merge --prune` refusal semantics.
+//!
+//! Everything here runs in the offline build -- no artifacts, no XLA.
+
+use std::path::{Path, PathBuf};
+
+use fxpnet::coordinator::backend::{Backend, BackendSpec, SessionCfg};
+use fxpnet::coordinator::config::RunCfg;
+use fxpnet::coordinator::grid::{
+    self, p1_net_path, GridResult, ParallelGridRunner, SweepOpts,
+};
+use fxpnet::coordinator::regimes::Regime;
+use fxpnet::coordinator::shard;
+use fxpnet::coordinator::trainer::run_session;
+use fxpnet::data::loader::LoaderCfg;
+use fxpnet::data::synth::Dataset;
+use fxpnet::model::params::ParamSet;
+use fxpnet::model::zoo;
+use fxpnet::quant::calib::{CalibMethod, LayerStats};
+use fxpnet::quant::policy::{NetQuant, WidthSpec};
+use fxpnet::train::{NativeBackend, NativeNet};
+use fxpnet::util::rng::Rng;
+
+fn temp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("fxp_train_native_{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Exact bit pattern of a grid (None = n/a cell).
+fn bits(g: &GridResult) -> Vec<Option<(usize, u64, u64, u64)>> {
+    g.outcomes
+        .iter()
+        .flatten()
+        .map(|c| {
+            c.eval.map(|e| {
+                (
+                    e.n,
+                    e.top1_err.to_bits(),
+                    e.top5_err.to_bits(),
+                    e.mean_loss.to_bits(),
+                )
+            })
+        })
+        .collect()
+}
+
+// ---- gradient checks ------------------------------------------------------
+
+/// Directional finite-difference check, one direction per parameter
+/// tensor: perturbing tensor `t` by +-eps*d must move the loss by
+/// ~eps*<grad_t, d>.  Covers every layer type of the walk (conv with
+/// ReLU, max-pool routing, fc head, softmax cross-entropy).
+#[test]
+fn gradients_match_finite_differences_per_layer() {
+    let spec = zoo::make_arch(
+        "gradcheck",
+        [8, 8, 3],
+        &[("conv", 4), ("pool", 0), ("fc", 10)],
+        4,
+        4,
+    );
+    let n = 4usize;
+    let data = Dataset::generate(n, 8, 8, 17);
+    let images = data.images.data();
+    let labels = data.labels.data();
+    let params = ParamSet::init(&spec, 23);
+    let nq = NetQuant::all_float(spec.num_layers);
+
+    let mut net = NativeNet::build(&spec, n).unwrap();
+    net.set_weights(&params, &nq).unwrap();
+    net.forward(images, n).unwrap();
+    net.loss(labels, n).unwrap();
+    let upd = vec![1.0f32; spec.num_layers];
+    let mut grads: Vec<Vec<f32>> =
+        params.tensors.iter().map(|t| vec![0f32; t.len()]).collect();
+    net.backward(labels, n, &upd, &mut grads).unwrap();
+
+    let mut rng = Rng::new(5);
+    let eps = 1e-2f32;
+    for (ti, tensor) in params.tensors.iter().enumerate() {
+        // random direction supported on this tensor only
+        let dir: Vec<f32> =
+            (0..tensor.len()).map(|_| rng.normal() as f32).collect();
+        let analytic: f64 = grads[ti]
+            .iter()
+            .zip(&dir)
+            .map(|(&g, &d)| g as f64 * d as f64)
+            .sum();
+        let mut loss_at = |sign: f32| -> f64 {
+            let mut p = params.clone();
+            for (w, &d) in p.tensors[ti].data_mut().iter_mut().zip(&dir) {
+                *w += sign * eps * d;
+            }
+            net.set_weights(&p, &nq).unwrap();
+            net.forward(images, n).unwrap();
+            net.loss(labels, n).unwrap() as f64
+        };
+        let numeric = (loss_at(1.0) - loss_at(-1.0)) / (2.0 * eps as f64);
+        let tol = 0.08 * analytic.abs().max(numeric.abs()) + 1e-3;
+        assert!(
+            (numeric - analytic).abs() <= tol,
+            "tensor {ti} ({}): numeric {numeric:.6} vs analytic {analytic:.6}",
+            params.names[ti]
+        );
+    }
+}
+
+// ---- determinism across workers ------------------------------------------
+
+fn native_runner(variant: u64) -> ParallelGridRunner {
+    let backend = NativeBackend::new();
+    let spec = backend.arch("tiny").unwrap();
+    let base = ParamSet::init(&spec, 77 + variant);
+    let train = Dataset::generate(64, 16, 16, 201);
+    let eval = Dataset::generate(32, 16, 16, 202);
+    let a_stats = backend.activation_stats("tiny", &base, &train, 1).unwrap();
+    let cfg = RunCfg {
+        finetune_steps: 3,
+        phase_steps: 2,
+        calib_batches: 1,
+        workers: 1,
+        ..RunCfg::default()
+    };
+    ParallelGridRunner {
+        backend: BackendSpec::Native,
+        arch: "tiny".to_string(),
+        base,
+        a_stats,
+        train_data: train,
+        eval_data: eval,
+        cfg,
+    }
+}
+
+/// The tentpole acceptance property: a *real* (non-synthetic) native
+/// sweep produces bit-identical tables for 1, 2 and 4 workers -- which
+/// implies every cell's `TrainOutcome.history` replayed bit-for-bit
+/// (the evaluated table is a deterministic function of it).
+#[test]
+fn native_sweep_bit_identical_across_workers() {
+    let runner = native_runner(0);
+    let reference = runner
+        .run_sweep(Regime::Vanilla, &SweepOpts { workers: 1, ..Default::default() })
+        .unwrap();
+    assert!(reference.is_complete());
+    assert_eq!(reference.computed, 16);
+    for workers in [2usize, 4] {
+        let out = runner
+            .run_sweep(Regime::Vanilla, &SweepOpts { workers, ..Default::default() })
+            .unwrap();
+        assert_eq!(
+            bits(&reference.grid),
+            bits(&out.grid),
+            "native sweep differs between 1 and {workers} workers"
+        );
+    }
+}
+
+/// Two sessions with identical seeds replay the same loss history; the
+/// stochastic-rounding stream is live (different session seeds diverge).
+#[test]
+fn native_history_pinned_for_fixed_seed() {
+    let backend = NativeBackend::new();
+    let spec = backend.arch("tiny").unwrap();
+    let params = ParamSet::init(&spec, 11);
+    let w_stats = params.weight_stats();
+    let a_stats: Vec<LayerStats> = (0..spec.num_layers)
+        .map(|i| LayerStats { absmax: 2.0 + i as f32, meanabs: 0.4, meansq: 0.6 })
+        .collect();
+    let nq = NetQuant::for_cell(
+        WidthSpec::Bits(4),
+        WidthSpec::Bits(8),
+        &w_stats,
+        &a_stats,
+        CalibMethod::MinMax,
+    )
+    .unwrap();
+    let upd = vec![1.0; spec.num_layers];
+    let data = Dataset::generate(64, 16, 16, 7);
+    let run = |session_seed: u64| {
+        let mut s = backend
+            .new_session(SessionCfg {
+                arch: "tiny",
+                params: &params,
+                nq: &nq,
+                upd: &upd,
+                lr: 0.02,
+                momentum: 0.9,
+                data: data.clone(),
+                loader: LoaderCfg {
+                    batch: 16,
+                    augment: true,
+                    max_shift: 2,
+                    seed: 3,
+                },
+                max_loss: 30.0,
+                seed: session_seed,
+            })
+            .unwrap();
+        run_session(&mut *s, 8, 1).unwrap()
+    };
+    let a = run(1);
+    let b = run(1);
+    assert_eq!(a.history, b.history);
+    let c = run(2);
+    assert_ne!(
+        a.history, c.history,
+        "stochastic weight-update rounding stream appears dead"
+    );
+}
+
+/// The paper's core claim at smoke scale: fixed-point training with
+/// stochastic weight-update rounding makes progress instead of stalling.
+#[test]
+fn fixed_point_training_reduces_loss() {
+    let backend = NativeBackend::new();
+    let spec = backend.arch("tiny").unwrap();
+    let params = ParamSet::init(&spec, 42);
+    let train = Dataset::generate(128, 16, 16, 91);
+    let a_stats = backend.activation_stats("tiny", &params, &train, 2).unwrap();
+    let nq = NetQuant::for_cell(
+        WidthSpec::Bits(8),
+        WidthSpec::Bits(8),
+        &params.weight_stats(),
+        &a_stats,
+        CalibMethod::SqnrGaussian,
+    )
+    .unwrap();
+    let upd = vec![1.0; spec.num_layers];
+    let mut s = backend
+        .new_session(SessionCfg {
+            arch: "tiny",
+            params: &params,
+            nq: &nq,
+            upd: &upd,
+            lr: 0.03,
+            momentum: 0.9,
+            data: train,
+            loader: LoaderCfg { batch: 16, augment: false, max_shift: 0, seed: 1 },
+            max_loss: 30.0,
+            seed: 13,
+        })
+        .unwrap();
+    let out = run_session(&mut *s, 40, 1).unwrap();
+    assert!(!out.diverged, "{:?}", out.history);
+    let first = out.history[0].1;
+    let last = out.tail_mean(5);
+    assert!(
+        last < first,
+        "8-bit training made no progress: {first} -> {last}"
+    );
+}
+
+// ---- Proposal-1 seed-net disk cache --------------------------------------
+
+#[test]
+fn p1_net_cache_round_trips_and_marks_divergence() {
+    let dir = temp_dir("p1cache");
+    let backend = NativeBackend::new();
+    let spec = backend.arch("tiny").unwrap();
+    let params = ParamSet::init(&spec, 3);
+    let w = WidthSpec::Bits(8);
+    let fp = 0xDEAD_BEEFu64;
+
+    // nothing cached yet
+    assert!(grid::load_p1_net(&dir, "tiny", &spec.params, w, 42, fp).is_none());
+    // trained net round-trips
+    grid::save_p1_net(&dir, "tiny", w, 42, fp, 8, &Some(params.clone())).unwrap();
+    let back = grid::load_p1_net(&dir, "tiny", &spec.params, w, 42, fp)
+        .expect("cache miss after save")
+        .expect("cached net read back as diverged");
+    for (a, b) in back.tensors.iter().zip(&params.tensors) {
+        assert_eq!(a.data(), b.data());
+    }
+    // a different width/seed/fingerprint is a different cache entry
+    assert!(grid::load_p1_net(&dir, "tiny", &spec.params, WidthSpec::Bits(4), 42, fp)
+        .is_none());
+    assert!(grid::load_p1_net(&dir, "tiny", &spec.params, w, 43, fp).is_none());
+    assert!(grid::load_p1_net(&dir, "tiny", &spec.params, w, 42, fp + 1).is_none());
+    // divergence marker round-trips
+    grid::save_p1_net(&dir, "tiny", WidthSpec::Bits(4), 42, fp, 8, &None).unwrap();
+    assert!(matches!(
+        grid::load_p1_net(&dir, "tiny", &spec.params, WidthSpec::Bits(4), 42, fp),
+        Some(None)
+    ));
+    // a corrupt cache file is a miss (retrain), not an error
+    std::fs::write(p1_net_path(&dir, "tiny", w, 42, fp), b"garbage").unwrap();
+    assert!(grid::load_p1_net(&dir, "tiny", &spec.params, w, 42, fp).is_none());
+}
+
+/// The cache key fingerprints everything the seed net depends on: a
+/// different base net, step budget, or dataset is a different entry.
+#[test]
+fn p1_fingerprint_tracks_training_inputs() {
+    let runner = native_runner(9);
+    let fp = grid::p1_fingerprint(
+        &runner.base,
+        &runner.a_stats,
+        &runner.cfg,
+        &runner.train_data,
+    );
+    // stable
+    assert_eq!(
+        fp,
+        grid::p1_fingerprint(
+            &runner.base,
+            &runner.a_stats,
+            &runner.cfg,
+            &runner.train_data
+        )
+    );
+    // different base params
+    let spec = NativeBackend::new().arch("tiny").unwrap();
+    let other = ParamSet::init(&spec, 999);
+    assert_ne!(
+        fp,
+        grid::p1_fingerprint(&other, &runner.a_stats, &runner.cfg, &runner.train_data)
+    );
+    // different step budget
+    let mut cfg2 = runner.cfg.clone();
+    cfg2.finetune_steps += 1;
+    assert_ne!(
+        fp,
+        grid::p1_fingerprint(&runner.base, &runner.a_stats, &cfg2, &runner.train_data)
+    );
+    // different training set
+    let other_data = Dataset::generate(64, 16, 16, 999);
+    assert_ne!(
+        fp,
+        grid::p1_fingerprint(&runner.base, &runner.a_stats, &runner.cfg, &other_data)
+    );
+}
+
+/// A Prop1 sweep with a cell cache persists its seed nets next to the
+/// cache; a second (cold-cell, warm-seed-net) run reuses them and still
+/// produces the bit-identical table.
+#[test]
+fn p1_nets_persist_beside_cell_cache_and_replay() {
+    let runner = native_runner(1);
+    // reference: no caching at all
+    let reference = runner
+        .run_sweep(Regime::Prop1, &SweepOpts { workers: 2, ..Default::default() })
+        .unwrap();
+
+    let dir = temp_dir("p1sweep");
+    let opts = SweepOpts {
+        workers: 2,
+        cache_path: Some(dir.join("cache.json")),
+        ..Default::default()
+    };
+    let first = runner.run_sweep(Regime::Prop1, &opts).unwrap();
+    assert_eq!(bits(&reference.grid), bits(&first.grid));
+    // seed nets for every fixed-point width are now on disk
+    let fp = runner.p1_cache_fingerprint();
+    for w in [WidthSpec::Bits(4), WidthSpec::Bits(8), WidthSpec::Bits(16)] {
+        let p = p1_net_path(&dir, "tiny", w, runner.cfg.seed, fp);
+        assert!(
+            p.exists() || p.with_extension("na").exists(),
+            "seed net not cached: {}",
+            p.display()
+        );
+    }
+    // the Float "seed net" is the base itself: no file
+    assert!(
+        !p1_net_path(&dir, "tiny", WidthSpec::Float, runner.cfg.seed, fp).exists()
+    );
+
+    // second run with a fresh cell cache but warm seed nets
+    let opts2 = SweepOpts {
+        workers: 2,
+        cache_path: Some(dir.join("cache2.json")),
+        ..Default::default()
+    };
+    let second = runner.run_sweep(Regime::Prop1, &opts2).unwrap();
+    assert_eq!(bits(&reference.grid), bits(&second.grid));
+}
+
+// ---- grid merge --prune ---------------------------------------------------
+
+fn synthetic_shards(dir: &Path, count: usize) -> Vec<PathBuf> {
+    let base = dir.join("cache.json");
+    (0..count)
+        .map(|index| {
+            let opts = SweepOpts {
+                workers: 2,
+                shard: Some((index, count)),
+                cache_path: Some(base.clone()),
+                split_cache: true,
+                ..Default::default()
+            };
+            grid::run_sweep_with(
+                Regime::Vanilla,
+                "tiny",
+                42,
+                &opts,
+                |_wid| Ok(()),
+                |_, job| grid::synthetic_cell(job),
+            )
+            .unwrap();
+            opts.cache_file().unwrap()
+        })
+        .collect()
+}
+
+#[test]
+fn prune_removes_shard_caches_only_after_complete_merge() {
+    let dir = temp_dir("prune");
+    let files = synthetic_shards(&dir, 3);
+
+    // incomplete union (one shard withheld): prune must refuse and
+    // delete nothing
+    let partial = shard::merge_files(&files[..2], None).unwrap();
+    assert!(!partial.is_complete());
+    let err = shard::prune_shard_inputs(&partial).unwrap_err();
+    assert!(err.to_string().contains("refusing to prune"), "{err}");
+    for f in &files {
+        assert!(f.exists(), "refused prune deleted {}", f.display());
+    }
+
+    // complete union: prune deletes exactly the merged shard files
+    let complete = shard::merge_files(&files, None).unwrap();
+    assert!(complete.is_complete());
+    let removed = shard::prune_shard_inputs(&complete).unwrap();
+    assert_eq!(removed.len(), 3);
+    for f in &files {
+        assert!(!f.exists(), "prune left {}", f.display());
+    }
+
+    // whole-sweep caches (no shard header) are never prune targets
+    let whole = dir.join("whole.json");
+    complete.save(&whole).unwrap();
+    let merged = shard::merge_files(&[whole.clone()], None).unwrap();
+    assert!(merged.is_complete());
+    assert!(merged.shard_inputs.is_empty());
+    assert!(shard::prune_shard_inputs(&merged).unwrap().is_empty());
+    assert!(whole.exists());
+}
