@@ -11,7 +11,7 @@
 //! * `FXP_BENCH_ASSERT`         -- if set, require batched GEMM (1
 //!   thread) >= 2x the per-image direct path
 
-use fxpnet::bench::fixtures::{env_usize, int_engine_fixture};
+use fxpnet::bench::fixtures::{baseline_floor, env_usize, int_engine_fixture};
 use fxpnet::bench::{bench, Table};
 use fxpnet::data::synth::Dataset;
 use fxpnet::fixedpoint::QFormat;
@@ -107,11 +107,14 @@ fn main() {
     std::fs::write(&path, &json).expect("write BENCH_engine.json");
     println!("wrote {}", path.display());
 
-    // FXP_BENCH_ASSERT=1 gates at the CI floor (2x); a numeric value
-    // sets the floor directly (e.g. FXP_BENCH_ASSERT=4 for the paper
-    // acceptance bar on a quiet box)
+    // FXP_BENCH_ASSERT=1 gates at the committed perf-trajectory floor
+    // (BENCH_baseline.json: engine_throughput.min_speedup_gemm_1t); a
+    // numeric value sets the floor directly (e.g. FXP_BENCH_ASSERT=4
+    // for the paper acceptance bar on a quiet box)
     if let Ok(v) = std::env::var("FXP_BENCH_ASSERT") {
-        let floor: f64 = v.parse().ok().filter(|&f| f > 1.0).unwrap_or(2.0);
+        let floor: f64 = v.parse().ok().filter(|&f| f > 1.0).unwrap_or_else(
+            || baseline_floor("engine_throughput", "min_speedup_gemm_1t", 2.0),
+        );
         assert!(
             speedup_1t >= floor,
             "batched GEMM (1 thread) only {speedup_1t:.2}x the per-image \

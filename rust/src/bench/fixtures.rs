@@ -100,6 +100,37 @@ pub fn env_str(key: &str, default: &str) -> String {
     std::env::var(key).unwrap_or_else(|_| default.to_string())
 }
 
+/// Perf floor from the committed `BENCH_baseline.json` at the workspace
+/// root -- the CI perf-trajectory gate: benches compare their measured
+/// speedup *ratios* (machine-independent, unlike absolute rates) against
+/// these floors under `FXP_BENCH_ASSERT`.  A missing file or key falls
+/// back to `default`, so the benches still run from an uncommitted
+/// checkout.
+pub fn baseline_floor(bench: &str, key: &str, default: f64) -> f64 {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_baseline.json");
+    let Ok(text) = std::fs::read_to_string(&path) else {
+        eprintln!(
+            "[bench] no {} -- using built-in floor {default}",
+            path.display()
+        );
+        return default;
+    };
+    match crate::util::json::Json::parse(&text)
+        .and_then(|j| j.get(bench)?.get(key)?.as_f64())
+    {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!(
+                "[bench] BENCH_baseline.json has no {bench}.{key} ({e}); \
+                 using built-in floor {default}"
+            );
+            default
+        }
+    }
+}
+
 /// Everything a table bench needs.
 pub struct BenchEnv {
     pub backend: Box<dyn Backend>,
@@ -166,6 +197,7 @@ pub fn bench_env() -> Result<BenchEnv> {
             },
             max_loss: 30.0,
             seed: 77,
+            threads: 1,
         })?;
         run_session(&mut *tr, steps, 50)?;
         tr.params()?

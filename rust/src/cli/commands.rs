@@ -57,7 +57,17 @@ fn ok(_: ()) -> i32 {
     0
 }
 
-fn run_cfg(args: &Args) -> Result<RunCfg> {
+/// All cores (the `--threads` default for single-session commands).
+fn all_cores() -> usize {
+    std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1)
+}
+
+/// Parse the shared run flags.  `threads_default` is the command's
+/// `--threads` fallback: whole-machine for single-session commands
+/// (pretrain/train/eval/infer), 1 inside grid sweeps whose cells already
+/// run in parallel across `--workers`.  Results are bit-identical for
+/// any thread count either way.
+fn run_cfg(args: &Args, threads_default: usize) -> Result<RunCfg> {
     let d = RunCfg::default();
     let method = match args.get("calib") {
         None => d.method,
@@ -71,6 +81,7 @@ fn run_cfg(args: &Args) -> Result<RunCfg> {
         phase_steps: args.usize_or("phase-steps", d.phase_steps)?,
         seed: args.u64_or("seed", d.seed)?,
         workers: args.usize_or("workers", d.workers)?,
+        threads: args.usize_or("threads", threads_default)?.max(1),
         topk: args.usize_or("topk", d.topk)?,
         max_loss: args.f32_or("max-loss", d.max_loss)?,
         method,
@@ -142,9 +153,9 @@ fn width(args: &Args, key: &str) -> Result<WidthSpec> {
 /// either backend.
 fn pretrain(args: &Args) -> Result<()> {
     let arch = args.get_or("arch", "paper12");
-    let backend = backend_spec(args)?.build()?;
+    let cfg = run_cfg(args, all_cores())?;
+    let backend = backend_spec(args)?.build_with_threads(cfg.threads)?;
     let spec = backend.arch(&arch)?;
-    let cfg = run_cfg(args)?;
     let steps = args.usize_or("steps", 800)?;
     let lr = args.f32_or("lr", 0.05)?;
     let out = args.get_or("out", &format!("{arch}_float.ckpt"));
@@ -184,6 +195,7 @@ fn pretrain(args: &Args) -> Result<()> {
         },
         max_loss: cfg.max_loss,
         seed: derive_seed(cfg.seed, "sgd-round", &[0]),
+        threads: cfg.threads,
     })?;
     // two-stage decay at 60% and 85%
     let s1 = steps * 3 / 5;
@@ -229,9 +241,9 @@ fn pretrain(args: &Args) -> Result<()> {
 /// (`--gate` turns "did not improve" into a non-zero exit).
 fn train_cmd(args: &Args) -> Result<()> {
     let arch = args.get_or("arch", "tiny");
-    let backend = backend_spec(args)?.build()?;
+    let cfg = run_cfg(args, all_cores())?;
+    let backend = backend_spec(args)?.build_with_threads(cfg.threads)?;
     let spec = backend.arch(&arch)?;
-    let cfg = run_cfg(args)?;
     let steps = args.usize_or("steps", 100)?;
     let (train, eval_set) = datasets(args, &spec)?;
     let params = base_params(args, &spec, backend.as_ref(), cfg.seed)?;
@@ -244,10 +256,12 @@ fn train_cmd(args: &Args) -> Result<()> {
     let nq =
         NetQuant::for_cell(w, a, &params.weight_stats(), &a_stats, cfg.method)?;
     log::info!(
-        "training {arch} ({} backend) at w={} a={} for {steps} steps",
+        "training {arch} ({} backend) at w={} a={} for {steps} steps, \
+         {} threads",
         backend.name(),
         w.label(),
-        a.label()
+        a.label(),
+        cfg.threads
     );
     let mut tr = backend.new_session(SessionCfg {
         arch: &arch,
@@ -265,6 +279,7 @@ fn train_cmd(args: &Args) -> Result<()> {
         },
         max_loss: cfg.max_loss,
         seed: derive_seed(cfg.seed, "sgd-round", &[1]),
+        threads: cfg.threads,
     })?;
     let outc = run_session(&mut *tr, steps, (steps / 20).max(1))?;
     for (s, l) in &outc.history {
@@ -391,7 +406,9 @@ fn grid_run(args: &Args) -> Result<()> {
     let regime_s = args.require("regime")?;
     let regime = Regime::parse(regime_s)
         .ok_or_else(|| FxpError::config(format!("bad --regime '{regime_s}'")))?;
-    let cfg = run_cfg(args)?;
+    // --threads defaults to 1 here: cells already run in parallel
+    // across --workers, and results are bit-identical either way
+    let cfg = run_cfg(args, 1)?;
     let out_dir = args.get_or("out", "results");
     let opts = sweep_opts(args, &cfg, regime, &arch, &out_dir)?;
 
@@ -411,7 +428,7 @@ fn grid_run(args: &Args) -> Result<()> {
     }
 
     let spec = backend_spec(args)?;
-    let backend = spec.build()?;
+    let backend = spec.build_with_threads(cfg.threads)?;
     let arch_spec = backend.arch(&arch)?;
     let base = base_params(args, &arch_spec, backend.as_ref(), cfg.seed)?;
     let (train, eval_set) = datasets(args, &arch_spec)?;
@@ -538,8 +555,8 @@ fn grid_merge(args: &Args) -> Result<i32> {
 /// `fxpnet eval`: single-cell evaluation of a checkpoint.
 fn eval_cmd(args: &Args) -> Result<()> {
     let arch = args.get_or("arch", "paper12");
-    let backend = backend_spec(args)?.build()?;
-    let cfg = run_cfg(args)?;
+    let cfg = run_cfg(args, all_cores())?;
+    let backend = backend_spec(args)?.build_with_threads(cfg.threads)?;
     let spec = backend.arch(&arch)?;
     let params = load_ckpt(args, &spec)?;
     let (train, eval_set) = datasets(args, &spec)?;
@@ -571,7 +588,7 @@ fn eval_cmd(args: &Args) -> Result<()> {
 fn infer(args: &Args) -> Result<()> {
     let arch = args.get_or("arch", "paper12");
     let engine = Engine::cpu(artifacts_dir(args))?;
-    let cfg = run_cfg(args)?;
+    let cfg = run_cfg(args, all_cores())?;
     let spec = engine.manifest.arch(&arch)?.clone();
     let params = load_ckpt(args, &spec)?;
     let (train, eval_set) = datasets(args, &spec)?;
@@ -601,10 +618,7 @@ fn infer(args: &Args) -> Result<()> {
     // integer path on a slice of the eval set (batched GEMM engine,
     // row-blocks sharded over --threads workers; bit-identical logits
     // for any thread count)
-    let threads = args.usize_or(
-        "threads",
-        std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1),
-    )?;
+    let threads = cfg.threads;
     let n = args.usize_or("eval-n", 256)?.min(eval_set.len());
     let rows: Vec<usize> = (0..n).collect();
     let images = eval_set.images.gather_rows(&rows)?;
@@ -696,7 +710,7 @@ pub fn evaluate_logits(
 fn mismatch(args: &Args) -> Result<()> {
     let arch = args.get_or("arch", "paper12");
     let engine = Engine::cpu(artifacts_dir(args))?;
-    let cfg = run_cfg(args)?;
+    let cfg = run_cfg(args, 1)?;
     let spec = engine.manifest.arch(&arch)?.clone();
     let params = load_ckpt(args, &spec)?;
     let (train, _) = datasets(args, &spec)?;

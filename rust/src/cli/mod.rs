@@ -136,6 +136,10 @@ COMMANDS
                                     fresh He init from --seed)
              [--w B] [--a B]        cell widths (default 8/8)
              [--steps N] [--out F]  save the tuned net
+             [--threads N]          GEMM/gradient workers inside the
+                                    training step (default: all cores;
+                                    loss histories are bit-identical
+                                    for any count)
              [--gate]               exit non-zero unless the final loss
                                     improved on the initial loss
   grid       run one experiment grid (a paper table), in parallel
@@ -144,8 +148,13 @@ COMMANDS
              from --seed is used, e.g. for CI sweeps)
              [--out DIR] [--steps N] [--phase-steps N] [--train-n N]
              [--eval-n N] [--calib {minmax|sqnr}] [--topk K]
-             [--workers N]   worker threads (default: all cores; results
-                             are bit-identical for any worker count)
+             [--workers N]   worker threads, one cell each (default: all
+                             cores; results are bit-identical for any
+                             worker count)
+             [--threads N]   GEMM/gradient workers *inside* each cell's
+                             training/eval (default 1: cells already run
+                             in parallel across --workers; results are
+                             bit-identical for any count)
              [--shard I/N]   run only cells with flat_index % N == I
              [--resume]      skip cells already in the cell cache
              [--cache FILE]  cell cache path (default when sharding or
@@ -183,9 +192,7 @@ COMMANDS
   eval       evaluate a checkpoint at one grid cell
              --arch A --ckpt F --w {4|8|16|float} --a {4|8|16|float}
   infer      pure-integer inference + parity vs the XLA path
-             --arch A --ckpt F --w B --a B [--eval-n N]
-             [--threads N]   GEMM row-block workers (default: all cores;
-                             logits are bit-identical for any count)
+             --arch A --ckpt F --w B --a B [--eval-n N] [--threads N]
   mismatch   per-layer gradient mismatch (section 2.2 analysis)
              --arch A --ckpt F [--bits B]
   table1     print the Proposal 3 phase schedule  [--layers N]
@@ -198,6 +205,14 @@ COMMON FLAGS
                     artifacts needed); 'xla' is the AOT/PJRT path.
                     Default: xla when ARTIFACTS/manifest.json exists,
                     native otherwise
+  --threads N       one spelling everywhere (infer/train/pretrain/eval/
+                    grid): GEMM row-block + gradient workers inside one
+                    forward/step.  Accumulation order is fixed and the
+                    stochastic-rounding streams are pre-split, so every
+                    result -- logits, loss histories, grid tables -- is
+                    bit-identical for any N.  Default: all cores, except
+                    under `grid` where it is 1 (cells already run in
+                    parallel across --workers)
   --artifacts DIR   artifact directory (default: ./artifacts or
                     $FXPNET_ARTIFACTS)
 ";

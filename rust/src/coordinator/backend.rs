@@ -48,6 +48,13 @@ pub struct SessionCfg<'a> {
     /// so sessions replay bit-for-bit; the XLA backend has no host-side
     /// stochastic state and ignores it.
     pub seed: u64,
+    /// GEMM row-block workers inside one training step (the unified
+    /// `--threads` flag; 0 and 1 both mean serial).  Purely a
+    /// performance knob: the native engine's accumulation order is fixed
+    /// and its rounding streams are pre-split per (step, layer), so loss
+    /// histories are bit-identical for every value.  The XLA backend
+    /// ignores it (PJRT owns its own threading).
+    pub threads: usize,
 }
 
 /// One training/evaluation engine (see the module docs).
@@ -194,12 +201,20 @@ impl BackendSpec {
     }
 
     /// Instantiate the backend (one per sweep worker; PJRT engines are
-    /// single-threaded by design).
+    /// single-threaded by design).  Serial GEMMs -- see
+    /// [`BackendSpec::build_with_threads`] for the threaded variant.
     pub fn build(&self) -> Result<Box<dyn Backend>> {
+        self.build_with_threads(1)
+    }
+
+    /// [`BackendSpec::build`] with the native engine's GEMM row-block
+    /// worker count set (the unified `--threads` flag; results are
+    /// bit-identical for every value).  The XLA backend ignores it.
+    pub fn build_with_threads(&self, threads: usize) -> Result<Box<dyn Backend>> {
         match self {
-            BackendSpec::Native => {
-                Ok(Box::new(crate::train::NativeBackend::new()))
-            }
+            BackendSpec::Native => Ok(Box::new(
+                crate::train::NativeBackend::new().with_threads(threads),
+            )),
             BackendSpec::Xla(dir) => Ok(Box::new(XlaBackend::open(dir)?)),
         }
     }

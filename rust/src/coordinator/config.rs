@@ -33,6 +33,14 @@ pub struct RunCfg {
     pub seed: u64,
     /// worker threads for grid sweeps (0 = available parallelism)
     pub workers: usize,
+    /// GEMM row-block workers *inside* one training/eval session (the
+    /// unified `--threads` flag).  Orthogonal to `workers`: a sweep runs
+    /// `workers` cells concurrently, each cell's session sharding its
+    /// GEMMs over `threads`.  Results are bit-identical for every value
+    /// -- fixed accumulation order + pre-split rounding streams -- so
+    /// this is purely a performance knob (and is deliberately *not* part
+    /// of any cache fingerprint).
+    pub threads: usize,
     /// data augmentation during training
     pub augment: bool,
     /// evaluate top-k error with this k (paper reports Top-5 on 1000
@@ -54,6 +62,7 @@ impl Default for RunCfg {
             max_loss: 20.0,
             seed: 42,
             workers: 0,
+            threads: 1,
             augment: true,
             topk: 1,
         }

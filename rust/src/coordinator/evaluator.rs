@@ -6,7 +6,7 @@
 use crate::data::loader::sequential_batches;
 use crate::data::synth::Dataset;
 use crate::error::Result;
-use crate::inference::FixedPointNet;
+use crate::inference::{FixedPointNet, Scratch};
 use crate::model::params::ParamSet;
 use crate::quant::policy::NetQuant;
 use crate::runtime::literal::{to_literal, HostValue};
@@ -92,7 +92,43 @@ pub fn evaluate_int(
     data: &Dataset,
     threads: usize,
 ) -> Result<EvalResult> {
-    let logits = net.forward_batch_threaded(&data.images, threads)?;
+    evaluate_int_batched(net, data, data.len().max(1), threads)
+}
+
+/// [`evaluate_int`] in `chunk`-image slices through one warm [`Scratch`]
+/// arena, so the activation planes stay `chunk`-sized instead of growing
+/// with the whole dataset (the native backend evaluates full grids this
+/// way, chunked by the arch's `eval_batch`).  The integer engine is
+/// per-image exact, so the chunking -- like the thread count -- cannot
+/// change the result.
+pub fn evaluate_int_batched(
+    net: &FixedPointNet,
+    data: &Dataset,
+    chunk: usize,
+    threads: usize,
+) -> Result<EvalResult> {
+    let total = data.len();
+    let nc = net.num_classes();
+    let (h, w, c) = net.input_shape();
+    let img_len = h * w * c;
+    let chunk = chunk.max(1).min(total.max(1));
+    let mut scratch = Scratch::for_net(net, chunk, threads);
+    let mut logits = vec![0f32; total * nc];
+    let mut i = 0usize;
+    while i < total {
+        let n = chunk.min(total - i);
+        // contiguous row range of the row-major dataset tensor: feed it
+        // straight through, no per-chunk gather/copy
+        net.forward_slice_into(
+            &data.images.data()[i * img_len..(i + n) * img_len],
+            n,
+            &mut scratch,
+            threads,
+            &mut logits[i * nc..(i + n) * nc],
+        )?;
+        i += n;
+    }
+    let logits = Tensor::from_vec(&[total, nc], logits)?;
     metrics_from_logits(&logits, data.labels.data())
 }
 

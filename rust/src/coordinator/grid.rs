@@ -431,10 +431,14 @@ where
 
 /// Fingerprint of everything a float-activation seed net is a function
 /// of *besides* `(arch, weight width, base seed)`: the base parameters,
-/// the calibration stats, the training hyperparameters, and the training
-/// dataset.  Folded into the seed-net cache file name, so a cache entry
-/// can never be silently reused across a different base checkpoint, step
-/// budget, lr, or dataset -- it simply becomes a different file.
+/// the calibration stats, the training hyperparameters, the training
+/// dataset -- and the engine's stream/semantics version
+/// ([`report::CACHE_VERSION`]), since the trained weights also depend on
+/// the training arithmetic itself (e.g. the gradient accumulation tree
+/// and the rounding-stream layout, both changed in v3).  Folded into the
+/// seed-net cache file name, so a cache entry can never be silently
+/// reused across a different base checkpoint, step budget, lr, dataset,
+/// or engine version -- it simply becomes a different file.
 pub fn p1_fingerprint(
     base: &ParamSet,
     a_stats: &[LayerStats],
@@ -454,6 +458,7 @@ pub fn p1_fingerprint(
         h
     }
     let mut h = 0xCBF2_9CE4_8422_2325u64;
+    h = fnv_bytes(h, &(crate::coordinator::report::CACHE_VERSION as u64).to_le_bytes());
     for (name, t) in base.names.iter().zip(&base.tensors) {
         h = fnv_bytes(h, name.as_bytes());
         h = fnv_f32s(h, t.data());
@@ -672,7 +677,7 @@ impl ParallelGridRunner {
         let (slots, _) = pool::run_jobs(
             &ws,
             workers,
-            |_wid| self.backend.build(),
+            |_wid| self.backend.build_with_threads(self.cfg.threads),
             |backend, _i, w: &WidthSpec| {
                 // Float-width "seed net" is just the base net; not worth
                 // a cache file
@@ -736,7 +741,7 @@ impl ParallelGridRunner {
             &self.arch,
             self.cfg.seed,
             opts,
-            |_wid| self.backend.build(),
+            |_wid| self.backend.build_with_threads(self.cfg.threads),
             |backend, job| {
                 let ctx = self.cell_ctx(backend.as_ref(), job.seed);
                 let p1_net = p1.get(&job.w.label()).and_then(|o| o.as_ref());

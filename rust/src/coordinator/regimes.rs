@@ -166,6 +166,7 @@ impl<'a> CellCtx<'a> {
             // stream: keyed by the cell and the regime's stream tag,
             // like every other per-cell stochastic stream
             seed: derive_seed(self.cell_seed, "sgd-round", &[tag]),
+            threads: self.cfg.threads,
         })
     }
 

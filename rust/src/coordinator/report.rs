@@ -7,7 +7,7 @@
 //! One JSON file per (regime, arch, base seed) sweep:
 //!
 //! ```json
-//! {"version": 2, "arch": "paper12", "regime_tag": 3, "base_seed": "42",
+//! {"version": 3, "arch": "paper12", "regime_tag": 3, "base_seed": "42",
 //!  "cells": {"w=8,a=4": {"status": "ok", "n": 2048,
 //!                         "top1_err": 0.334, "top5_err": 0.071,
 //!                         "loss": 1.207},
@@ -120,8 +120,11 @@ pub fn save_grid(g: &GridResult, dir: impl AsRef<Path>, topk: usize) -> Result<(
 /// Cell-cache schema/stream version.  Bump whenever cached results stop
 /// being comparable with freshly-computed ones -- e.g. v2: the Rng
 /// stream changed (Lemire `below`, integer stochastic-requantize
-/// dither), so v1 cells must not union with v2 sweeps under `--resume`.
-pub const CACHE_VERSION: usize = 2;
+/// dither); v3: fully quantized cells report integer-engine accuracy,
+/// conv weight gradients reduce through fixed stripes, and the
+/// stochastic-rounding streams are pre-split per (step, layer) -- so v2
+/// cells must not union with v3 sweeps under `--resume`.
+pub const CACHE_VERSION: usize = 3;
 
 /// Parsed header of a cell-cache file.
 #[derive(Clone, Debug, PartialEq, Eq)]

@@ -381,7 +381,22 @@ impl FixedPointNet {
         if shape.is_empty() {
             return Err(FxpError::shape("forward_batch: scalar input"));
         }
-        let n = shape[0];
+        self.forward_slice_into(images.data(), shape[0], scratch, threads, out)
+    }
+
+    /// [`forward_batch_into`](Self::forward_batch_into) over a raw
+    /// row-major `(n, h, w, c)` image slice -- lets callers feed a
+    /// contiguous row range of a dataset tensor directly, without
+    /// copying it into a fresh tensor first (the chunked integer
+    /// evaluator's hot path).
+    pub fn forward_slice_into(
+        &self,
+        images: &[f32],
+        n: usize,
+        scratch: &mut Scratch,
+        threads: usize,
+        out: &mut [f32],
+    ) -> Result<()> {
         let img_len = self.in_h * self.in_w * self.in_c;
         if images.len() != n * img_len {
             return Err(FxpError::shape(format!(
@@ -408,7 +423,7 @@ impl FixedPointNet {
         let (mut src, mut dst): (&mut [i32], &mut [i32]) =
             (&mut act_a[..], &mut act_b[..]);
 
-        ops::encode_into(images.data(), self.input_fmt, &mut src[..n * img_len]);
+        ops::encode_into(images, self.input_fmt, &mut src[..n * img_len]);
         let (mut h, mut w) = (self.in_h, self.in_w);
         let mut c = self.in_c;
         let mut fmt = self.input_fmt;

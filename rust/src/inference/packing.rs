@@ -67,6 +67,33 @@ impl<T: Copy + Default> PackedPanels<T> {
         }
     }
 
+    /// Repack the *transpose* of a row-major `(k, n)` matrix, i.e. the
+    /// panels of the `(n, k)` matrix whose element `(j, p)` is
+    /// `w[p * n + j]` -- without materialising the transpose.  The
+    /// native trainer packs every layer's weights both ways each step
+    /// (forward and input-gradient GEMMs), so skipping the intermediate
+    /// buffer removes an O(k*n) copy per layer per step.
+    pub fn pack_transposed_into(&mut self, w: &[T], k: usize, n: usize) {
+        debug_assert_eq!(w.len(), k * n);
+        // packed matrix is (n, k): reduction length n, logical columns k
+        let panels = k.div_ceil(NR);
+        self.data.clear();
+        self.data.resize(panels * n * NR, T::default());
+        self.k = n;
+        self.n = k;
+        for jp in 0..panels {
+            let j0 = jp * NR;
+            let jw = NR.min(k - j0);
+            let dst = &mut self.data[jp * n * NR..(jp + 1) * n * NR];
+            for p in 0..n {
+                for j in 0..jw {
+                    // element (p, j0 + j) of the transpose = w[(j0+j), p]
+                    dst[p * NR + j] = w[(j0 + j) * n + p];
+                }
+            }
+        }
+    }
+
     #[inline]
     pub fn num_panels(&self) -> usize {
         self.n.div_ceil(NR)
@@ -157,6 +184,28 @@ mod tests {
                     assert_eq!(panel[p * NR + j], want, "jp={jp} p={p} j={j}");
                 }
             }
+        }
+    }
+
+    #[test]
+    fn pack_transposed_matches_explicit_transpose() {
+        // (k, n) both crossing the NR panel edge
+        let (k, n) = (NR + 5, NR + 2);
+        let w: Vec<i32> = (0..k * n).map(|i| i as i32 + 1).collect();
+        let mut wt = vec![0i32; k * n];
+        for p in 0..k {
+            for j in 0..n {
+                wt[j * k + p] = w[p * n + j];
+            }
+        }
+        let want = PackedPanels::pack(&wt, n, k);
+        let mut got = PackedPanels::pack(&[0i32; 0], 0, 0);
+        got.pack_transposed_into(&w, k, n);
+        assert_eq!(got.k, want.k);
+        assert_eq!(got.n, want.n);
+        assert_eq!(got.num_panels(), want.num_panels());
+        for jp in 0..want.num_panels() {
+            assert_eq!(got.panel(jp), want.panel(jp), "panel {jp}");
         }
     }
 

@@ -152,6 +152,18 @@ impl NetQuant {
         self.weights.len()
     }
 
+    /// True when this cell can run on the pure-integer inference engine
+    /// (`FixedPointNet`): every weight quantized and every *hidden*
+    /// activation quantized.  The head activation may stay float --
+    /// logits decode to f32 either way.  Cells failing this (the Float
+    /// rows/columns of the paper grids) only exist as simulated
+    /// quantization in a float forward.
+    pub fn integer_deployable(&self) -> bool {
+        let l = self.weights.len();
+        self.weights.iter().all(|w| w.is_some())
+            && self.acts[..l.saturating_sub(1)].iter().all(|a| a.is_some())
+    }
+
     /// Activation formats fixed-point only for layers `< k` (the Table 1
     /// phase schedule of Proposal 3: during phase p, activations of
     /// layers 0..=p are fixed point, everything above stays float).
@@ -268,6 +280,28 @@ mod tests {
             nq.with_act_prefix(4).acts.iter().filter(|a| a.is_some()).count(),
             4
         );
+    }
+
+    #[test]
+    fn integer_deployable_cases() {
+        let s = stats(3);
+        let cell = |w, a| {
+            NetQuant::for_cell(w, a, &s, &s, CalibMethod::MinMax).unwrap()
+        };
+        // fully quantized: deployable
+        assert!(cell(WidthSpec::Bits(8), WidthSpec::Bits(8)).integer_deployable());
+        // float weights or float activations: not deployable
+        assert!(!cell(WidthSpec::Float, WidthSpec::Bits(8)).integer_deployable());
+        assert!(!cell(WidthSpec::Bits(8), WidthSpec::Float).integer_deployable());
+        assert!(!NetQuant::all_float(3).integer_deployable());
+        // a float *head* activation alone is fine (logits decode anyway)
+        let mut nq = cell(WidthSpec::Bits(8), WidthSpec::Bits(8));
+        nq.acts[2] = None;
+        assert!(nq.integer_deployable());
+        // a float hidden activation is not
+        let mut nq = cell(WidthSpec::Bits(8), WidthSpec::Bits(8));
+        nq.acts[0] = None;
+        assert!(!nq.integer_deployable());
     }
 
     #[test]

@@ -9,12 +9,15 @@
 //! * **Stochastic-rounding SGD** (Gupta et al. 2015, "Deep Learning with
 //!   Limited Numerical Precision"): after the momentum update, each
 //!   quantized layer's weights are rounded back onto their Q-format grid
-//!   with `floor(x/step + u)` dither drawn from the session's own
-//!   [`Rng`] stream -- the unbiased rounding that makes sub-step
-//!   gradients accumulate in expectation instead of vanishing, which is
-//!   what lets fixed-point training converge at all (the convergence
-//!   behaviour matches the theory in Li et al., "Training Quantized
-//!   Nets: A Deeper Understanding").
+//!   with `floor(x/step + u)` dither -- the unbiased rounding that makes
+//!   sub-step gradients accumulate in expectation instead of vanishing,
+//!   which is what lets fixed-point training converge at all (the
+//!   convergence behaviour matches the theory in Li et al., "Training
+//!   Quantized Nets: A Deeper Understanding").  The dither streams are
+//!   *pre-split*: layer `li` of step `s` draws from its own [`Rng`]
+//!   seeded by `(session seed, s, li)`, so the per-layer updates can run
+//!   on `--threads` scoped workers in any schedule without changing the
+//!   draws any layer sees.
 //! * **Per-layer update masks** -- Proposal 2 (top layers only) and
 //!   Proposal 3 (one layer per phase) freeze weights through the same
 //!   `upd` vector the XLA graphs consume.
@@ -23,30 +26,42 @@
 //!   `acts = None`, no special case.
 //!
 //! Determinism contract: a session's whole loss history is a pure
-//! function of `(arch, params, NetQuant, data seed, session seed)`.
-//! The rounding RNG is seeded per cell through the grid's seed tree, so
-//! sweeps replay bit-for-bit under any `--workers` count or shard
-//! layout (pinned by rust/tests/train_native.rs).
+//! function of `(arch, params, NetQuant, data seed, session seed)` --
+//! never of `--threads` (the GEMM/gradient sharding has a fixed
+//! accumulation order, see [`net`], and the rounding streams are
+//! pre-split per step and layer) nor of `--workers`/shard layout (the
+//! rounding RNG is seeded per cell through the grid's seed tree).
+//! Pinned by rust/tests/train_native.rs.
+//!
+//! Evaluation: fully quantized cells report the *deployment-grade*
+//! number -- the trained f32 net is quantized with the cell's
+//! calibration and run through the batched zero-alloc integer GEMM
+//! engine ([`crate::inference::FixedPointNet`] via
+//! [`crate::coordinator::evaluator::evaluate_int_batched`]).  Cells with
+//! float weights or float hidden activations cannot run on the integer
+//! engine and fall back to the simulated-quantization float forward
+//! ([`NativeBackend::evaluate_simulated`]).
 
 pub mod net;
 
 use std::collections::BTreeMap;
 
 use crate::coordinator::backend::{Backend, SessionCfg};
-use crate::coordinator::evaluator::{metrics_from_logits, EvalResult};
+use crate::coordinator::evaluator::{self, metrics_from_logits, EvalResult};
 use crate::coordinator::trainer::TrainSession;
 use crate::data::loader::Loader;
 use crate::data::synth::Dataset;
 use crate::error::{FxpError, Result};
 use crate::fixedpoint::vector::quantize_slice;
-use crate::fixedpoint::RoundMode;
+use crate::fixedpoint::{QFormat, RoundMode};
+use crate::inference::FixedPointNet;
 use crate::model::manifest::ArchSpec;
 use crate::model::params::ParamSet;
 use crate::model::zoo;
 use crate::quant::calib::LayerStats;
 use crate::quant::policy::NetQuant;
-use crate::tensor::Tensor;
-use crate::util::rng::Rng;
+use crate::tensor::{Tensor, TensorF};
+use crate::util::rng::{derive_seed, Rng};
 
 pub use net::NativeNet;
 
@@ -55,12 +70,16 @@ pub use net::NativeNet;
 /// of sequential sessions (sweep workers build one each).
 pub struct NativeBackend {
     archs: BTreeMap<String, ArchSpec>,
+    /// GEMM row-block workers for evaluation/calibration forwards (and
+    /// the default for sessions opened through this backend).  Purely a
+    /// performance knob: results are bit-identical for every value.
+    threads: usize,
 }
 
 impl NativeBackend {
     /// Registry over the built-in paper architectures ([`zoo`]).
     pub fn new() -> NativeBackend {
-        NativeBackend { archs: zoo::builtin_archs() }
+        NativeBackend { archs: zoo::builtin_archs(), threads: 1 }
     }
 
     /// Add (or override) an architecture -- tests and benches inject
@@ -68,6 +87,47 @@ impl NativeBackend {
     pub fn with_arch(mut self, spec: ArchSpec) -> NativeBackend {
         self.archs.insert(spec.name.clone(), spec);
         self
+    }
+
+    /// Set the GEMM row-block worker count used by evaluation and
+    /// calibration (0 and 1 both mean serial).
+    pub fn with_threads(mut self, threads: usize) -> NativeBackend {
+        self.threads = threads.max(1);
+        self
+    }
+
+    /// Evaluate through the *simulated-quantization float forward*
+    /// ([`NativeNet`]) -- the training-time semantics.  Cells with float
+    /// weights or float hidden activations can only run here; fully
+    /// quantized cells normally take the integer engine instead (see
+    /// [`Backend::evaluate`]), and the pinned agreement between the two
+    /// paths is tested in rust/tests/eval_int_native.rs.
+    pub fn evaluate_simulated(
+        &self,
+        arch: &str,
+        params: &ParamSet,
+        nq: &NetQuant,
+        data: &Dataset,
+    ) -> Result<EvalResult> {
+        let spec = self.arch(arch)?;
+        let chunk = spec.eval_batch.max(1);
+        let mut net = NativeNet::build_threaded(&spec, chunk, self.threads)?;
+        net.set_weights(params, nq)?;
+        let total = data.len();
+        let nc = spec.num_classes;
+        let img_len = spec.input[0] * spec.input[1] * spec.input[2];
+        let mut logits = vec![0f32; total * nc];
+        let mut i = 0usize;
+        while i < total {
+            let n = chunk.min(total - i);
+            // contiguous row range of the row-major dataset tensor
+            let images = &data.images.data()[i * img_len..(i + n) * img_len];
+            let lg = net.forward(images, n)?;
+            logits[i * nc..(i + n) * nc].copy_from_slice(lg);
+            i += n;
+        }
+        let logits = Tensor::from_vec(&[total, nc], logits)?;
+        metrics_from_logits(&logits, data.labels.data())
     }
 }
 
@@ -100,6 +160,12 @@ impl Backend for NativeBackend {
         Ok(Box::new(NativeTrainer::new(&spec, cfg)?))
     }
 
+    /// Fully quantized cells report the *deployment-grade* number: the
+    /// trained f32 parameters are quantized with the cell's calibration
+    /// and evaluated on the batched zero-alloc integer GEMM engine.
+    /// Cells the integer engine cannot express (float weights or float
+    /// hidden activations) fall back to the simulated-quantization float
+    /// forward ([`NativeBackend::evaluate_simulated`]).
     fn evaluate(
         &self,
         arch: &str,
@@ -107,24 +173,20 @@ impl Backend for NativeBackend {
         nq: &NetQuant,
         data: &Dataset,
     ) -> Result<EvalResult> {
-        let spec = self.arch(arch)?;
-        let chunk = spec.eval_batch.max(1);
-        let mut net = NativeNet::build(&spec, chunk)?;
-        net.set_weights(params, nq)?;
-        let total = data.len();
-        let nc = spec.num_classes;
-        let mut logits = vec![0f32; total * nc];
-        let mut i = 0usize;
-        while i < total {
-            let n = chunk.min(total - i);
-            let rows: Vec<usize> = (i..i + n).collect();
-            let images = data.images.gather_rows(&rows)?;
-            let lg = net.forward(images.data(), n)?;
-            logits[i * nc..(i + n) * nc].copy_from_slice(lg);
-            i += n;
+        if nq.integer_deployable() {
+            let spec = self.arch(arch)?;
+            // Q16.14 input codes: negligible input error next to the
+            // 4-16 bit layer formats (same choice as `fxpnet infer`)
+            let net =
+                FixedPointNet::build(&spec, params, nq, QFormat::new(16, 14)?)?;
+            return evaluator::evaluate_int_batched(
+                &net,
+                data,
+                spec.eval_batch.max(1),
+                self.threads,
+            );
         }
-        let logits = Tensor::from_vec(&[total, nc], logits)?;
-        metrics_from_logits(&logits, data.labels.data())
+        self.evaluate_simulated(arch, params, nq, data)
     }
 
     fn activation_stats(
@@ -137,19 +199,19 @@ impl Backend for NativeBackend {
         let spec = self.arch(arch)?;
         let l = spec.num_layers;
         let chunk = spec.eval_batch.max(1);
-        let mut net = NativeNet::build(&spec, chunk)?;
+        let mut net = NativeNet::build_threaded(&spec, chunk, self.threads)?;
         // calibration always measures the *float* network
         net.set_weights(params, &NetQuant::all_float(l))?;
         let mut absmax = vec![0f32; l];
         let mut meanabs = vec![0f64; l];
         let mut meansq = vec![0f64; l];
+        let img_len = spec.input[0] * spec.input[1] * spec.input[2];
         let mut used = 0usize;
         let mut i = 0usize;
         while i < data.len() && used < batches.max(1) {
             let n = chunk.min(data.len() - i);
-            let rows: Vec<usize> = (i..i + n).collect();
-            let images = data.images.gather_rows(&rows)?;
-            net.forward(images.data(), n)?;
+            let images = &data.images.data()[i * img_len..(i + n) * img_len];
+            net.forward(images, n)?;
             for li in 0..l {
                 let a = net.layer_activation(li, n);
                 let count = a.len().max(1) as f64;
@@ -181,8 +243,8 @@ impl Backend for NativeBackend {
 
 /// One native fine-tuning session (the [`TrainSession`] the regimes
 /// drive).  Owns the float-master/grid-resident parameters, momentum
-/// buffers, gradient buffers, the prefetching data loader, and the
-/// stochastic-rounding RNG stream.
+/// buffers, gradient buffers, the prefetching data loader, and the seed
+/// of the pre-split stochastic-rounding streams.
 pub struct NativeTrainer {
     net: NativeNet,
     params: ParamSet,
@@ -193,7 +255,11 @@ pub struct NativeTrainer {
     lr: f32,
     momentum: f32,
     loader: Loader,
-    rng: Rng,
+    /// root of the per-(step, layer) stochastic-rounding streams
+    seed: u64,
+    /// scoped workers for the step's GEMMs/gradients and the per-layer
+    /// optimizer updates; bit-identical results for every value
+    threads: usize,
     max_loss: f32,
     batch: usize,
     step: usize,
@@ -223,7 +289,8 @@ impl NativeTrainer {
                 2 * spec.num_layers
             )));
         }
-        let net = NativeNet::build(spec, cfg.loader.batch)?;
+        let threads = cfg.threads.max(1);
+        let net = NativeNet::build_threaded(spec, cfg.loader.batch, threads)?;
         let vel: Vec<Vec<f32>> = cfg
             .params
             .tensors
@@ -243,7 +310,8 @@ impl NativeTrainer {
             lr: cfg.lr,
             momentum: cfg.momentum,
             loader,
-            rng: Rng::new(cfg.seed),
+            seed: cfg.seed,
+            threads,
             max_loss: cfg.max_loss,
             batch,
             step: 0,
@@ -251,9 +319,50 @@ impl NativeTrainer {
     }
 }
 
+/// One layer's momentum + SGD update over its `[w, b]` tensor/velocity
+/// pairs, with the Gupta-style stochastic snap of the weights back onto
+/// their fixed-point grid.  `rng_seed` keys this layer's own pre-split
+/// dither stream, so layers can update on any worker in any schedule
+/// without changing the draws any one of them sees.
+#[allow(clippy::too_many_arguments)]
+fn update_layer(
+    tensors: &mut [TensorF],
+    vel: &mut [Vec<f32>],
+    gw: &[f32],
+    gb: &[f32],
+    mask: f32,
+    lr: f32,
+    mu: f32,
+    w_fmt: Option<QFormat>,
+    rng_seed: u64,
+) {
+    for (ti, g) in [gw, gb].into_iter().enumerate() {
+        let v = &mut vel[ti];
+        for (vv, &gv) in v.iter_mut().zip(g) {
+            *vv = mu * *vv + gv;
+        }
+        let p = tensors[ti].data_mut();
+        for (pv, &vv) in p.iter_mut().zip(v.iter()) {
+            *pv -= lr * mask * vv;
+        }
+        if ti == 0 {
+            if let Some(fmt) = w_fmt {
+                // Gupta et al.: the stored weight lives on the
+                // fixed-point grid; the update rounds stochastically so
+                // sub-step gradients survive in expectation
+                let mut rng = Rng::new(rng_seed);
+                quantize_slice(p, fmt, RoundMode::Stochastic, Some(&mut rng));
+            }
+        }
+    }
+}
+
 impl TrainSession for NativeTrainer {
-    /// One SGD step: quantize weights -> forward -> backward -> momentum
-    /// update -> stochastic-rounding snap back onto the weight grid.
+    /// One SGD step: quantize weights -> forward -> backward -> per-layer
+    /// momentum update + stochastic-rounding snap back onto the weight
+    /// grid, the layer updates sharded over scoped workers (each layer
+    /// draws from its own pre-split `(seed, step, layer)` stream, so the
+    /// history is bit-identical for every thread count).
     fn step(&mut self) -> Result<f32> {
         self.net.set_weights(&self.params, &self.nq)?;
         let b = self.loader.next_batch();
@@ -262,41 +371,66 @@ impl TrainSession for NativeTrainer {
         let loss = self.net.loss(b.labels.data(), n)?;
         self.net.backward(b.labels.data(), n, &self.upd, &mut self.grads)?;
         let (lr, mu) = (self.lr, self.momentum);
-        for li in 0..self.upd.len() {
-            let mask = self.upd[li];
-            if mask == 0.0 {
-                // frozen layer: backward skipped its gradients, so there
-                // is nothing to integrate -- its velocity stays as-is
-                // (Proposal 3 resets momenta at every phase change
-                // anyway)
-                continue;
-            }
-            for (ti, is_weight) in [(2 * li, true), (2 * li + 1, false)] {
-                let g = &self.grads[ti];
-                let v = &mut self.vel[ti];
-                for (vv, &gv) in v.iter_mut().zip(g) {
-                    *vv = mu * *vv + gv;
-                }
-                let p = self.params.tensors[ti].data_mut();
-                for (pv, &vv) in p.iter_mut().zip(v.iter()) {
-                    *pv -= lr * mask * vv;
-                }
-                if is_weight {
-                    if let Some(fmt) = self.nq.weights[li] {
-                        // Gupta et al.: the stored weight lives on the
-                        // fixed-point grid; the update rounds
-                        // stochastically so sub-step gradients survive
-                        // in expectation
-                        quantize_slice(
-                            p,
-                            fmt,
-                            RoundMode::Stochastic,
-                            Some(&mut self.rng),
+        let step_idx = self.step as u64;
+        let seed = self.seed;
+        let num_layers = self.upd.len();
+        // contiguous layer chunks over exactly `threads` workers (not one
+        // spawn per layer); each layer's stream is pre-split, so the
+        // grouping -- like the thread count -- cannot change the draws
+        let workers = self.threads.min(num_layers.max(1));
+        std::thread::scope(|s| {
+            let mut tens_rem: &mut [TensorF] = &mut self.params.tensors;
+            let mut vel_rem: &mut [Vec<f32>] = &mut self.vel;
+            let grads = &self.grads;
+            let nq = &self.nq;
+            let upd = &self.upd;
+            let mut l0 = 0usize;
+            for wid in 0..workers {
+                let l1 = (wid + 1) * num_layers / workers;
+                let count = l1 - l0;
+                let (tchunk, tr) = tens_rem.split_at_mut(2 * count);
+                tens_rem = tr;
+                let (vchunk, vr) = vel_rem.split_at_mut(2 * count);
+                vel_rem = vr;
+                let base = l0;
+                l0 = l1;
+                let run = move || {
+                    for i in 0..count {
+                        let li = base + i;
+                        let mask = upd[li];
+                        if mask == 0.0 {
+                            // frozen layer: backward skipped its
+                            // gradients, so there is nothing to
+                            // integrate -- its velocity stays as-is
+                            // (Proposal 3 resets momenta at every phase
+                            // change anyway)
+                            continue;
+                        }
+                        let rng_seed = derive_seed(
+                            seed,
+                            "sgd-round-step",
+                            &[step_idx, li as u64],
+                        );
+                        update_layer(
+                            &mut tchunk[2 * i..2 * i + 2],
+                            &mut vchunk[2 * i..2 * i + 2],
+                            &grads[2 * li][..],
+                            &grads[2 * li + 1][..],
+                            mask,
+                            lr,
+                            mu,
+                            nq.weights[li],
+                            rng_seed,
                         );
                     }
+                };
+                if wid + 1 < workers {
+                    s.spawn(run);
+                } else {
+                    run();
                 }
             }
-        }
+        });
         self.step += 1;
         Ok(loss)
     }
@@ -373,6 +507,7 @@ mod tests {
             loader: LoaderCfg { batch: 16, augment: false, max_shift: 0, seed },
             max_loss: 30.0,
             seed,
+            threads: 1,
         }
     }
 

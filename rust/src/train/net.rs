@@ -22,8 +22,27 @@
 //! `(arch, params, quantization, data seed)`.  Max-pool ties route the
 //! gradient to the *first* maximal element.
 //!
-//! All buffers are allocated once at [`NativeNet::build`] and reused;
-//! steady-state training steps do no heap allocation.
+//! Threading ([`NativeNet::set_threads`]): the training step shards over
+//! `std::thread::scope` workers exactly like the inference engine, with
+//! the accumulation order pinned so results stay bit-identical for
+//! *every* thread count:
+//!
+//! * forward conv GEMMs shard contiguous row ranges of the im2col'd
+//!   patch matrix -- each output element is an independent fixed-order
+//!   reduction over `k`, so blocking/sharding cannot change it;
+//! * weight/bias gradients accumulate into [`GRAD_STRIPES`] fixed
+//!   per-stripe partial buffers (stripe = a contiguous range of
+//!   `ROW_BLOCK` blocks, a pure function of the layer shape) which are
+//!   reduced serially in stripe order -- the same tree for 1 thread as
+//!   for N, so the f32 sums are bit-identical;
+//! * conv input gradients shard whole *images*: each worker scatter-adds
+//!   (`col2im_add`) only into its own images' planes, walking its rows
+//!   in increasing order -- per-element accumulation order is identical
+//!   to the serial walk.
+//!
+//! All buffers are allocated once at [`NativeNet::build`] /
+//! [`NativeNet::set_threads`] and reused; steady-state training steps do
+//! no heap allocation.
 
 #![allow(clippy::needless_range_loop)]
 
@@ -39,6 +58,15 @@ use crate::quant::policy::NetQuant;
 /// Patch rows extracted per im2col + GEMM block (same rationale as the
 /// inference engine's block size: keep a block resident in L2).
 const ROW_BLOCK: usize = 64;
+
+/// Fixed number of partial-accumulation stripes for conv weight/bias
+/// gradients.  A stripe owns a contiguous range of `ROW_BLOCK` blocks --
+/// a pure function of the layer shape, never of the thread count -- and
+/// the stripe partials are reduced serially in stripe order.  This is
+/// what makes the f32 gradient sums bit-identical for any number of
+/// workers (the stripes are merely *computed* in parallel); it also caps
+/// the useful parallelism of the weight-gradient stage.
+const GRAD_STRIPES: usize = 8;
 
 /// One structural stage of the network (weighted layers carry their
 /// flat layer index `li`).
@@ -63,9 +91,14 @@ pub struct NativeNet {
     num_layers: usize,
     num_classes: usize,
     batch: usize,
+    /// GEMM row-block workers for forward/backward (results are
+    /// bit-identical for any value; see the module docs)
+    threads: usize,
+    /// length of one worker's im2col scratch slice
+    /// (`ROW_BLOCK * max conv k`)
+    patch_stride: usize,
     // per weighted layer, refreshed by `set_weights`:
     wq: Vec<Vec<f32>>,
-    wt: Vec<Vec<f32>>,
     bias: Vec<Vec<f32>>,
     packed_w: Vec<PackedPanels<f32>>,
     packed_wt: Vec<PackedPanels<f32>>,
@@ -76,8 +109,15 @@ pub struct NativeNet {
     argmax: Vec<Vec<u32>>,
     dacts: Vec<Vec<f32>>,
     probs: Vec<f32>,
+    /// per-worker im2col scratch (`threads` slices of `patch_stride`)
     patches: Vec<f32>,
+    /// per-worker input-gradient patch scratch (same layout)
     dpatches: Vec<f32>,
+    /// per-stripe conv weight-gradient partials (`GRAD_STRIPES` buffers
+    /// of the largest conv `k * cout`)
+    gw_parts: Vec<Vec<f32>>,
+    /// per-stripe conv bias-gradient partials
+    gb_parts: Vec<Vec<f32>>,
     zero_bias: Vec<f32>,
 }
 
@@ -180,8 +220,28 @@ impl NativeNet {
             })
             .max()
             .unwrap_or(0);
+        // largest conv (k * cout) / cout: sizes the gradient stripe
+        // partials (fc layers are not striped -- their row count is the
+        // batch, at most one block)
+        let conv_kn_max = stages
+            .iter()
+            .map(|st| match st {
+                Stage::Conv { cin, cout, .. } => 9 * cin * cout,
+                _ => 0,
+            })
+            .max()
+            .unwrap_or(0);
+        let conv_cout_max = stages
+            .iter()
+            .map(|st| match st {
+                Stage::Conv { cout, .. } => *cout,
+                _ => 0,
+            })
+            .max()
+            .unwrap_or(0);
         let k_max = layer_dims.iter().map(|&(k, _)| k).max().unwrap_or(0);
         let num_layers = spec.num_layers;
+        let patch_stride = ROW_BLOCK * conv_k_max;
         Ok(NativeNet {
             stages,
             shapes,
@@ -190,8 +250,9 @@ impl NativeNet {
             num_layers,
             num_classes: spec.num_classes,
             batch,
+            threads: 1,
+            patch_stride,
             wq: vec![Vec::new(); num_layers],
-            wt: vec![Vec::new(); num_layers],
             bias: vec![Vec::new(); num_layers],
             packed_w: (0..num_layers)
                 .map(|_| PackedPanels::<f32>::pack(&[], 0, 0))
@@ -205,10 +266,38 @@ impl NativeNet {
             argmax,
             dacts,
             probs: vec![0f32; batch * spec.num_classes],
-            patches: vec![0f32; ROW_BLOCK * conv_k_max],
-            dpatches: vec![0f32; ROW_BLOCK * conv_k_max],
+            patches: vec![0f32; patch_stride],
+            dpatches: vec![0f32; patch_stride],
+            gw_parts: vec![vec![0f32; conv_kn_max]; GRAD_STRIPES],
+            gb_parts: vec![vec![0f32; conv_cout_max]; GRAD_STRIPES],
             zero_bias: vec![0f32; k_max],
         })
+    }
+
+    /// [`NativeNet::build`] with the worker count set in one go.
+    pub fn build_threaded(
+        spec: &ArchSpec,
+        batch: usize,
+        threads: usize,
+    ) -> Result<NativeNet> {
+        let mut net = NativeNet::build(spec, batch)?;
+        net.set_threads(threads);
+        Ok(net)
+    }
+
+    /// Set the GEMM row-block worker count for forward/backward (0 and 1
+    /// both mean serial).  Resizes the per-worker scratch; results are
+    /// bit-identical for every value (see the module docs), so this is
+    /// purely a performance knob.
+    pub fn set_threads(&mut self, threads: usize) {
+        let threads = threads.max(1);
+        self.threads = threads;
+        self.patches.resize(threads * self.patch_stride, 0.0);
+        self.dpatches.resize(threads * self.patch_stride, 0.0);
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
     }
 
     pub fn num_classes(&self) -> usize {
@@ -257,15 +346,7 @@ impl NativeNet {
                 quantize_slice(wq, fmt, RoundMode::NearestHalfUp, None);
             }
             self.packed_w[li].pack_into(wq, k, n);
-            let wt = &mut self.wt[li];
-            wt.clear();
-            wt.resize(k * n, 0.0);
-            for p in 0..k {
-                for j in 0..n {
-                    wt[j * k + p] = wq[p * n + j];
-                }
-            }
-            self.packed_wt[li].pack_into(wt, n, k);
+            self.packed_wt[li].pack_transposed_into(wq, k, n);
             let b = params.bias(li);
             if b.len() != n {
                 return Err(FxpError::shape(format!(
@@ -299,6 +380,8 @@ impl NativeNet {
             )));
         }
         let last = self.num_layers - 1;
+        let threads = self.threads;
+        let patch_stride = self.patch_stride;
         {
             let NativeNet {
                 stages,
@@ -312,6 +395,7 @@ impl NativeNet {
                 patches,
                 ..
             } = &mut *self;
+            let packed_w = &*packed_w;
             acts[0][..images.len()].copy_from_slice(images);
             for (s, stage) in stages.iter().enumerate() {
                 let (ih, iw, ic) = shapes[s];
@@ -333,24 +417,30 @@ impl NativeNet {
                     }
                     Stage::Conv { li, cin, cout } => {
                         let rows = n * oh * ow;
-                        let k = 9 * cin;
                         let z = &mut zs[s][..rows * cout];
-                        let mut r0 = 0usize;
-                        while r0 < rows {
-                            let block = ROW_BLOCK.min(rows - r0);
-                            let pb = &mut patches[..block * k];
-                            packing::im2col_rows(src, n, ih, iw, cin, r0, block, pb);
-                            gemm::gemm_bias_f32(
-                                pb,
-                                block,
-                                k,
-                                &packed_w[li],
-                                &bias[li],
-                                &mut z[r0 * cout..(r0 + block) * cout],
-                            );
-                            r0 += block;
-                        }
-                        activate(z, &mut dst[..rows * cout], li < last, a_fmt[li]);
+                        let pw = &packed_w[li];
+                        let lb = &bias[li][..];
+                        shard_gemm_rows(
+                            rows,
+                            cout,
+                            threads,
+                            patch_stride,
+                            z,
+                            patches,
+                            |row0, out_chunk, patch| {
+                                conv_rows_gemm(
+                                    src, n, ih, iw, cin, pw, lb, row0,
+                                    out_chunk, patch,
+                                );
+                            },
+                        );
+                        activate_sharded(
+                            z,
+                            &mut dst[..rows * cout],
+                            li < last,
+                            a_fmt[li],
+                            threads,
+                        );
                     }
                     Stage::Fc { li, k, nout } => {
                         let z = &mut zs[s][..n * nout];
@@ -450,6 +540,8 @@ impl NativeNet {
         }
         let nc = self.num_classes;
         let last = self.num_layers - 1;
+        let threads = self.threads;
+        let patch_stride = self.patch_stride;
         let NativeNet {
             stages,
             shapes,
@@ -461,9 +553,12 @@ impl NativeNet {
             probs,
             patches,
             dpatches,
+            gw_parts,
+            gb_parts,
             zero_bias,
             ..
         } = &mut *self;
+        let packed_wt = &*packed_wt;
         let top = stages.len();
         // dL/dlogits = (softmax - onehot) / n
         let dl = &mut dacts[top][..n * nc];
@@ -526,59 +621,50 @@ impl NativeNet {
                 Stage::Conv { li, cin, cout } => {
                     let rows = n * oh * ow;
                     let k = 9 * cin;
-                    let dzb = &mut dz[..rows * cout];
-                    if li < last {
-                        relu_mask(dzb, &zs[s][..rows * cout]);
+                    {
+                        let dzm = &mut dz[..rows * cout];
+                        if li < last {
+                            relu_mask(dzm, &zs[s][..rows * cout]);
+                        }
                     }
+                    // shared from here on: both gradient stages read it
+                    let dzb = &dz[..rows * cout];
                     if upd[li] != 0.0 {
                         let (gw, gb) = grad_pair(grads, li);
-                        accumulate_bias_grad(dzb, rows, cout, gb);
                         let src_act = &acts[s][..n * ih * iw * ic];
-                        let mut r0 = 0usize;
-                        while r0 < rows {
-                            let block = ROW_BLOCK.min(rows - r0);
-                            let pb = &mut patches[..block * k];
-                            packing::im2col_rows(
-                                src_act, n, ih, iw, cin, r0, block, pb,
-                            );
-                            accumulate_weight_grad(
-                                pb,
-                                &dzb[r0 * cout..(r0 + block) * cout],
-                                block,
-                                k,
-                                cout,
-                                gw,
-                            );
-                            r0 += block;
-                        }
+                        conv_grads_striped(
+                            src_act,
+                            n,
+                            ih,
+                            iw,
+                            cin,
+                            cout,
+                            dzb,
+                            threads,
+                            patch_stride,
+                            patches,
+                            gw_parts,
+                            gb_parts,
+                            gw,
+                            gb,
+                        );
                     }
                     if s > 0 {
                         let in_len = n * ih * iw * ic;
-                        da_in[..in_len].fill(0.0);
-                        let mut r0 = 0usize;
-                        while r0 < rows {
-                            let block = ROW_BLOCK.min(rows - r0);
-                            let dp = &mut dpatches[..block * k];
-                            gemm::gemm_bias_f32(
-                                &dzb[r0 * cout..(r0 + block) * cout],
-                                block,
-                                cout,
-                                &packed_wt[li],
-                                &zero_bias[..k],
-                                dp,
-                            );
-                            col2im_add(
-                                dp,
-                                n,
-                                ih,
-                                iw,
-                                cin,
-                                r0,
-                                block,
-                                &mut da_in[..in_len],
-                            );
-                            r0 += block;
-                        }
+                        conv_input_grads_sharded(
+                            dzb,
+                            n,
+                            ih,
+                            iw,
+                            cin,
+                            cout,
+                            &packed_wt[li],
+                            &zero_bias[..k],
+                            threads,
+                            patch_stride,
+                            dpatches,
+                            &mut da_in[..in_len],
+                        );
                     }
                 }
             }
@@ -611,6 +697,42 @@ fn activate(z: &[f32], out: &mut [f32], relu: bool, fmt: Option<QFormat>) {
     }
 }
 
+/// [`activate`] sharded into equal element chunks over scoped workers --
+/// purely elementwise (nearest-half-up needs no RNG), so chunking cannot
+/// change a single bit, but the quantize pass over a big conv plane is
+/// a meaningful slice of the step that would otherwise stay serial.
+fn activate_sharded(
+    z: &[f32],
+    out: &mut [f32],
+    relu: bool,
+    fmt: Option<QFormat>,
+    threads: usize,
+) {
+    let total = out.len();
+    let threads = threads.max(1).min(total.max(1));
+    if threads == 1 {
+        activate(z, out, relu, fmt);
+        return;
+    }
+    let per = total.div_ceil(threads);
+    std::thread::scope(|s| {
+        let mut z_rem = &z[..total];
+        let mut out_rem: &mut [f32] = out;
+        while !out_rem.is_empty() {
+            let len = per.min(out_rem.len());
+            let (zc, zr) = z_rem.split_at(len);
+            z_rem = zr;
+            let (oc, orest) = out_rem.split_at_mut(len);
+            out_rem = orest;
+            if out_rem.is_empty() {
+                activate(zc, oc, relu, fmt);
+            } else {
+                s.spawn(move || activate(zc, oc, relu, fmt));
+            }
+        }
+    });
+}
+
 /// STE through ReLU: kill the gradient where the pre-activation was
 /// non-positive.
 fn relu_mask(dz: &mut [f32], z: &[f32]) {
@@ -625,6 +747,267 @@ fn relu_mask(dz: &mut [f32], z: &[f32]) {
 fn grad_pair(grads: &mut [Vec<f32>], li: usize) -> (&mut [f32], &mut [f32]) {
     let (a, b) = grads.split_at_mut(2 * li + 1);
     (&mut a[2 * li][..], &mut b[0][..])
+}
+
+/// Split `total` GEMM rows into per-worker contiguous ranges, give each
+/// worker its own `patch_stride` slice of im2col scratch, and run
+/// `work(first_row, out_chunk, patch_chunk)` on each (inline when one
+/// worker suffices; the last chunk runs on the calling thread).  Every
+/// output element is an independent fixed-order reduction, so the result
+/// is bit-identical for any thread count.
+fn shard_gemm_rows<W>(
+    total: usize,
+    n_out: usize,
+    threads: usize,
+    patch_stride: usize,
+    out: &mut [f32],
+    patches: &mut [f32],
+    work: W,
+) where
+    W: Fn(usize, &mut [f32], &mut [f32]) + Sync,
+{
+    let threads = threads.max(1).min(total.max(1));
+    if threads == 1 {
+        work(0, &mut out[..total * n_out], &mut patches[..patch_stride]);
+        return;
+    }
+    let rows_per = total.div_ceil(threads);
+    std::thread::scope(|s| {
+        let mut out_rem: &mut [f32] = &mut out[..total * n_out];
+        let mut patch_rem: &mut [f32] = patches;
+        let mut row0 = 0usize;
+        while row0 < total {
+            let rows = rows_per.min(total - row0);
+            let (out_chunk, orest) = out_rem.split_at_mut(rows * n_out);
+            out_rem = orest;
+            let (patch_chunk, prest) = patch_rem.split_at_mut(patch_stride);
+            patch_rem = prest;
+            let r0 = row0;
+            row0 += rows;
+            if row0 < total {
+                let work = &work;
+                s.spawn(move || work(r0, out_chunk, patch_chunk));
+            } else {
+                work(r0, out_chunk, patch_chunk);
+            }
+        }
+    });
+}
+
+/// One worker's rows of a forward conv: walk `ROW_BLOCK` blocks, im2col
+/// each into the worker's scratch, GEMM with the fused bias.
+#[allow(clippy::too_many_arguments)]
+fn conv_rows_gemm(
+    src: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    pw: &PackedPanels<f32>,
+    bias: &[f32],
+    row0: usize,
+    out: &mut [f32],
+    patch: &mut [f32],
+) {
+    let k = 9 * cin;
+    let cout = pw.n;
+    let rows = out.len() / cout;
+    let mut r = 0usize;
+    while r < rows {
+        let block = ROW_BLOCK.min(rows - r);
+        let pb = &mut patch[..block * k];
+        packing::im2col_rows(src, n, h, w, cin, row0 + r, block, pb);
+        gemm::gemm_bias_f32(
+            pb,
+            block,
+            k,
+            pw,
+            bias,
+            &mut out[r * cout..(r + block) * cout],
+        );
+        r += block;
+    }
+}
+
+/// Conv weight/bias gradients through fixed accumulation stripes: stripe
+/// `si` owns a contiguous range of `ROW_BLOCK` blocks (a pure function
+/// of the layer shape, never of the thread count), accumulates its own
+/// partial, and the partials are reduced serially in stripe order.  The
+/// sums are therefore bit-identical for every thread count -- only the
+/// stripe *computation* runs in parallel.
+#[allow(clippy::too_many_arguments)]
+fn conv_grads_striped(
+    src_act: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    cout: usize,
+    dz: &[f32],
+    threads: usize,
+    patch_stride: usize,
+    patches: &mut [f32],
+    gw_parts: &mut [Vec<f32>],
+    gb_parts: &mut [Vec<f32>],
+    gw: &mut [f32],
+    gb: &mut [f32],
+) {
+    let k = 9 * cin;
+    let rows = dz.len() / cout;
+    let blocks = rows.div_ceil(ROW_BLOCK);
+    let stripes = GRAD_STRIPES.min(blocks).max(1);
+    let stripe_work =
+        |si: usize, gw_p: &mut [f32], gb_p: &mut [f32], patch: &mut [f32]| {
+            gw_p.fill(0.0);
+            gb_p.fill(0.0);
+            let b0 = si * blocks / stripes;
+            let b1 = (si + 1) * blocks / stripes;
+            for b in b0..b1 {
+                let r0 = b * ROW_BLOCK;
+                let block = ROW_BLOCK.min(rows - r0);
+                let pb = &mut patch[..block * k];
+                packing::im2col_rows(src_act, n, h, w, cin, r0, block, pb);
+                let dzb = &dz[r0 * cout..(r0 + block) * cout];
+                accumulate_bias_grad(dzb, block, cout, gb_p);
+                accumulate_weight_grad(pb, dzb, block, k, cout, gw_p);
+            }
+        };
+    let workers = threads.max(1).min(stripes);
+    if workers == 1 {
+        // the serial path still goes through the stripe partials, so the
+        // accumulation tree is the same one every thread count reduces
+        for (si, (gw_p, gb_p)) in
+            gw_parts.iter_mut().zip(gb_parts.iter_mut()).take(stripes).enumerate()
+        {
+            stripe_work(
+                si,
+                &mut gw_p[..k * cout],
+                &mut gb_p[..cout],
+                &mut patches[..patch_stride],
+            );
+        }
+    } else {
+        std::thread::scope(|s| {
+            let mut gw_rem: &mut [Vec<f32>] = &mut gw_parts[..stripes];
+            let mut gb_rem: &mut [Vec<f32>] = &mut gb_parts[..stripes];
+            let mut patch_rem: &mut [f32] = patches;
+            let mut s0 = 0usize;
+            for wid in 0..workers {
+                let s1 = (wid + 1) * stripes / workers;
+                let count = s1 - s0;
+                let (gw_chunk, gwr) = gw_rem.split_at_mut(count);
+                gw_rem = gwr;
+                let (gb_chunk, gbr) = gb_rem.split_at_mut(count);
+                gb_rem = gbr;
+                let (patch_chunk, prest) = patch_rem.split_at_mut(patch_stride);
+                patch_rem = prest;
+                let base = s0;
+                s0 = s1;
+                let stripe_work = &stripe_work;
+                let run = move || {
+                    for (i, (gw_p, gb_p)) in
+                        gw_chunk.iter_mut().zip(gb_chunk.iter_mut()).enumerate()
+                    {
+                        stripe_work(
+                            base + i,
+                            &mut gw_p[..k * cout],
+                            &mut gb_p[..cout],
+                            &mut *patch_chunk,
+                        );
+                    }
+                };
+                if wid + 1 < workers {
+                    s.spawn(run);
+                } else {
+                    run();
+                }
+            }
+        });
+    }
+    // fixed-order reduction, identical for every thread count
+    for si in 0..stripes {
+        for (g, &p) in gw.iter_mut().zip(&gw_parts[si][..k * cout]) {
+            *g += p;
+        }
+        for (g, &p) in gb.iter_mut().zip(&gb_parts[si][..cout]) {
+            *g += p;
+        }
+    }
+}
+
+/// Conv input gradients sharded by *image*: each worker owns a
+/// contiguous image range, runs the input-gradient GEMM block by block
+/// into its own patch scratch, and scatter-adds (`col2im_add`) only into
+/// its own images' planes in increasing row order -- exactly the
+/// per-element accumulation order of the serial walk, so results are
+/// bit-identical for every thread count.
+#[allow(clippy::too_many_arguments)]
+fn conv_input_grads_sharded(
+    dz: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    cout: usize,
+    wt: &PackedPanels<f32>,
+    zero_bias: &[f32],
+    threads: usize,
+    patch_stride: usize,
+    dpatches: &mut [f32],
+    da_in: &mut [f32],
+) {
+    let k = 9 * cin;
+    let plane = h * w * cin;
+    let img_rows = h * w;
+    debug_assert_eq!(da_in.len(), n * plane);
+    debug_assert_eq!(dz.len(), n * img_rows * cout);
+    let worker = |img0: usize, da_chunk: &mut [f32], dp: &mut [f32]| {
+        da_chunk.fill(0.0);
+        let rows_w = da_chunk.len() / plane * img_rows;
+        let row_base = img0 * img_rows;
+        let mut r = 0usize;
+        while r < rows_w {
+            let block = ROW_BLOCK.min(rows_w - r);
+            let r0 = row_base + r;
+            let dpb = &mut dp[..block * k];
+            gemm::gemm_bias_f32(
+                &dz[r0 * cout..(r0 + block) * cout],
+                block,
+                cout,
+                wt,
+                zero_bias,
+                dpb,
+            );
+            col2im_add(dpb, h, w, cin, r0, block, img0, da_chunk);
+            r += block;
+        }
+    };
+    let workers = threads.max(1).min(n);
+    if workers == 1 {
+        worker(0, da_in, &mut dpatches[..patch_stride]);
+        return;
+    }
+    std::thread::scope(|s| {
+        let mut da_rem: &mut [f32] = da_in;
+        let mut dp_rem: &mut [f32] = dpatches;
+        let mut i0 = 0usize;
+        for wid in 0..workers {
+            let i1 = (wid + 1) * n / workers;
+            let imgs = i1 - i0;
+            let (da_chunk, drest) = da_rem.split_at_mut(imgs * plane);
+            da_rem = drest;
+            let (dp_chunk, prest) = dp_rem.split_at_mut(patch_stride);
+            dp_rem = prest;
+            let img0 = i0;
+            i0 = i1;
+            if wid + 1 < workers {
+                let worker = &worker;
+                s.spawn(move || worker(img0, da_chunk, dp_chunk));
+            } else {
+                worker(img0, da_chunk, dp_chunk);
+            }
+        }
+    });
 }
 
 /// db[j] += sum over rows of dz[r, j].
@@ -705,27 +1088,30 @@ fn maxpool2_argmax(
 }
 
 /// Scatter-add im2col patch gradients back onto the input plane
-/// (inverse of `packing::im2col_rows` over the same row range).
+/// (inverse of `packing::im2col_rows` over the same row range).  `dst`
+/// starts at image `img0`'s plane, so image-sharded workers can scatter
+/// into just their own slice of the batch.
 #[allow(clippy::too_many_arguments)]
 fn col2im_add(
     dpatch: &[f32],
-    n: usize,
     h: usize,
     w: usize,
     cin: usize,
     row0: usize,
     rows: usize,
+    img0: usize,
     dst: &mut [f32],
 ) {
     let k = 9 * cin;
     debug_assert!(dpatch.len() >= rows * k);
-    debug_assert_eq!(dst.len(), n * h * w * cin);
+    debug_assert_eq!(dst.len() % (h * w * cin), 0);
     for ri in 0..rows {
         let r = row0 + ri;
         let img = r / (h * w);
         let y = (r / w) % h;
         let x = r % w;
-        let img_base = img * h * w * cin;
+        debug_assert!(img >= img0);
+        let img_base = (img - img0) * h * w * cin;
         let src_row = &dpatch[ri * k..(ri + 1) * k];
         for ky in 0..3usize {
             let sy = y as isize + ky as isize - 1;
@@ -787,6 +1173,39 @@ mod tests {
     }
 
     #[test]
+    fn forward_backward_bit_identical_across_threads() {
+        // the tentpole property at the net level: logits, loss, and every
+        // gradient tensor replay bit-for-bit under any worker count
+        let spec = tiny();
+        let params = ParamSet::init(&spec, 4);
+        let nq = NetQuant::all_float(spec.num_layers);
+        let n = 8;
+        let mut rng = Rng::new(3);
+        let img_len = 16 * 16 * 3;
+        let images: Vec<f32> =
+            (0..n * img_len).map(|_| rng.uniform() as f32).collect();
+        let labels: Vec<i32> = (0..n).map(|_| rng.below(10) as i32).collect();
+        let upd = vec![1.0f32; spec.num_layers];
+        let run = |threads: usize| {
+            let mut net = NativeNet::build_threaded(&spec, n, threads).unwrap();
+            net.set_weights(&params, &nq).unwrap();
+            let logits = net.forward(&images, n).unwrap().to_vec();
+            let loss = net.loss(&labels, n).unwrap();
+            let mut grads: Vec<Vec<f32>> =
+                params.tensors.iter().map(|t| vec![0f32; t.len()]).collect();
+            net.backward(&labels, n, &upd, &mut grads).unwrap();
+            (logits, loss, grads)
+        };
+        let a = run(1);
+        for t in [2usize, 3, 8] {
+            let b = run(t);
+            assert_eq!(a.0, b.0, "{t} threads: logits differ");
+            assert_eq!(a.1.to_bits(), b.1.to_bits(), "{t} threads: loss differs");
+            assert_eq!(a.2, b.2, "{t} threads: gradients differ");
+        }
+    }
+
+    #[test]
     fn pool_argmax_routes_first_max() {
         let src = vec![1.0f32, 3.0, 3.0, 2.0]; // 2x2, c=1: ties at value 3
         let mut dst = vec![0f32; 1];
@@ -815,7 +1234,7 @@ mod tests {
             .map(|(&a, &b)| a as f64 * b as f64)
             .sum();
         let mut back = vec![0f32; n * h * w * cin];
-        col2im_add(&p, n, h, w, cin, 0, rows, &mut back);
+        col2im_add(&p, h, w, cin, 0, rows, 0, &mut back);
         let rhs: f64 = x
             .iter()
             .zip(&back)

@@ -1,0 +1,193 @@
+//! The native backend's two evaluation paths must agree: fully
+//! quantized cells run on the pure-integer batched GEMM engine (the
+//! deployment-grade number grid tables now report), while the
+//! simulated-quantization float forward remains the training-time
+//! semantics.  The paths share the weight/activation grids but differ in
+//! arithmetic -- exact integer accumulation + Q16.14 input codes vs f32
+//! rounding -- so agreement is pinned to a tolerance, not bit-exact
+//! (cf. `inference::verify::parity_report` for the XLA-side analogue).
+//!
+//! Everything here runs in the offline build -- no artifacts, no XLA.
+
+use fxpnet::coordinator::backend::{Backend, SessionCfg};
+use fxpnet::coordinator::evaluator::evaluate_int_batched;
+use fxpnet::coordinator::trainer::{run_session, upd_all};
+use fxpnet::data::loader::LoaderCfg;
+use fxpnet::data::synth::Dataset;
+use fxpnet::fixedpoint::QFormat;
+use fxpnet::inference::FixedPointNet;
+use fxpnet::model::params::ParamSet;
+use fxpnet::quant::calib::CalibMethod;
+use fxpnet::quant::policy::{NetQuant, WidthSpec};
+use fxpnet::train::NativeBackend;
+
+/// Pinned agreement tolerances: top-1/top-5 error within 5 points and
+/// mean NLL within 0.25 on a *trained* net (borderline rows can flip
+/// when one hidden activation lands on a rounding boundary; wholesale
+/// disagreement means one of the paths is wrong).
+const TRAINED_ERR_TOL: f64 = 0.05;
+const TRAINED_LOSS_TOL: f64 = 0.25;
+
+/// Looser smoke tolerance for *untrained* He-init nets, whose logits
+/// have no margin anywhere.
+const SMOKE_ERR_TOL: f64 = 0.15;
+
+#[test]
+fn integer_eval_matches_simulated_eval_on_trained_tiny() {
+    let backend = NativeBackend::new().with_threads(2);
+    let spec = backend.arch("tiny").unwrap();
+    let params = ParamSet::init(&spec, 42);
+    let train = Dataset::generate(256, 16, 16, 51);
+    let eval = Dataset::generate(256, 16, 16, 52);
+    let a_stats = backend.activation_stats("tiny", &params, &train, 2).unwrap();
+    let nq = NetQuant::for_cell(
+        WidthSpec::Bits(8),
+        WidthSpec::Bits(8),
+        &params.weight_stats(),
+        &a_stats,
+        CalibMethod::SqnrGaussian,
+    )
+    .unwrap();
+    let mut s = backend
+        .new_session(SessionCfg {
+            arch: "tiny",
+            params: &params,
+            nq: &nq,
+            upd: &upd_all(spec.num_layers),
+            lr: 0.03,
+            momentum: 0.9,
+            data: train,
+            loader: LoaderCfg { batch: 16, augment: false, max_shift: 0, seed: 5 },
+            max_loss: 30.0,
+            seed: 9,
+            threads: 2,
+        })
+        .unwrap();
+    let out = run_session(&mut *s, 30, 5).unwrap();
+    assert!(!out.diverged, "{:?}", out.history);
+    let tuned = s.params().unwrap();
+
+    // re-resolve weight formats against the tuned weights (the grid's
+    // eval convention) and compare the two paths
+    let nq_eval = NetQuant::for_cell(
+        WidthSpec::Bits(8),
+        WidthSpec::Bits(8),
+        &tuned.weight_stats(),
+        &a_stats,
+        CalibMethod::SqnrGaussian,
+    )
+    .unwrap();
+    assert!(nq_eval.integer_deployable());
+    let int_ev = backend.evaluate("tiny", &tuned, &nq_eval, &eval).unwrap();
+    let sim_ev = backend
+        .evaluate_simulated("tiny", &tuned, &nq_eval, &eval)
+        .unwrap();
+    assert_eq!(int_ev.n, 256);
+    assert_eq!(sim_ev.n, 256);
+    assert!(
+        (int_ev.top1_err - sim_ev.top1_err).abs() <= TRAINED_ERR_TOL,
+        "top-1 disagrees: integer {:.4} vs simulated {:.4}",
+        int_ev.top1_err,
+        sim_ev.top1_err
+    );
+    assert!(
+        (int_ev.top5_err - sim_ev.top5_err).abs() <= TRAINED_ERR_TOL,
+        "top-5 disagrees: integer {:.4} vs simulated {:.4}",
+        int_ev.top5_err,
+        sim_ev.top5_err
+    );
+    assert!(
+        (int_ev.mean_loss - sim_ev.mean_loss).abs() <= TRAINED_LOSS_TOL,
+        "loss disagrees: integer {:.4} vs simulated {:.4}",
+        int_ev.mean_loss,
+        sim_ev.mean_loss
+    );
+    // and the integer path is deterministic
+    let again = backend.evaluate("tiny", &tuned, &nq_eval, &eval).unwrap();
+    assert_eq!(int_ev, again);
+}
+
+/// Smoke-check every arch in the zoo: the two paths agree on He-init
+/// nets too (paper12 exercises the deep walk; shallow the CIFAR shape).
+#[test]
+fn integer_eval_agreement_smoke_all_zoo_archs() {
+    for arch in ["tiny", "shallow", "paper12"] {
+        let backend = NativeBackend::new().with_threads(2);
+        let spec = backend.arch(arch).unwrap();
+        let params = ParamSet::init(&spec, 7);
+        // one small calibration batch + a small eval slice: paper12 is
+        // ~150 MMAC/image, so the smoke stays cheap
+        let calib = Dataset::generate(16, spec.input[0], spec.input[1], 61);
+        let eval = Dataset::generate(32, spec.input[0], spec.input[1], 62);
+        let a_stats = backend.activation_stats(arch, &params, &calib, 1).unwrap();
+        let nq = NetQuant::for_cell(
+            WidthSpec::Bits(8),
+            WidthSpec::Bits(8),
+            &params.weight_stats(),
+            &a_stats,
+            CalibMethod::MinMax,
+        )
+        .unwrap();
+        assert!(nq.integer_deployable(), "{arch}");
+        let int_ev = backend.evaluate(arch, &params, &nq, &eval).unwrap();
+        let sim_ev = backend.evaluate_simulated(arch, &params, &nq, &eval).unwrap();
+        assert_eq!(int_ev.n, 32, "{arch}");
+        assert_eq!(sim_ev.n, 32, "{arch}");
+        assert!(
+            (int_ev.top1_err - sim_ev.top1_err).abs() <= SMOKE_ERR_TOL,
+            "{arch}: top-1 disagrees: integer {:.4} vs simulated {:.4}",
+            int_ev.top1_err,
+            sim_ev.top1_err
+        );
+        assert!(
+            int_ev.mean_loss.is_finite() && sim_ev.mean_loss.is_finite(),
+            "{arch}: non-finite loss"
+        );
+    }
+}
+
+/// `Backend::evaluate` routing is pinned: fully quantized cells return
+/// exactly the integer engine's numbers; cells the integer engine cannot
+/// express return exactly the simulated float forward's.
+#[test]
+fn evaluate_routes_between_integer_and_simulated() {
+    let backend = NativeBackend::new().with_threads(2);
+    let spec = backend.arch("tiny").unwrap();
+    let params = ParamSet::init(&spec, 3);
+    let calib = Dataset::generate(64, 16, 16, 71);
+    let eval = Dataset::generate(96, 16, 16, 72);
+    let a_stats = backend.activation_stats("tiny", &params, &calib, 1).unwrap();
+
+    // quantized cell -> bit-equal to the integer engine run directly
+    let nq = NetQuant::for_cell(
+        WidthSpec::Bits(8),
+        WidthSpec::Bits(8),
+        &params.weight_stats(),
+        &a_stats,
+        CalibMethod::MinMax,
+    )
+    .unwrap();
+    let via_backend = backend.evaluate("tiny", &params, &nq, &eval).unwrap();
+    let net =
+        FixedPointNet::build(&spec, &params, &nq, QFormat::new(16, 14).unwrap())
+            .unwrap();
+    let direct =
+        evaluate_int_batched(&net, &eval, spec.eval_batch.max(1), 2).unwrap();
+    assert_eq!(via_backend, direct);
+
+    // float-activation cell -> bit-equal to the simulated path
+    let nq_float = NetQuant::for_cell(
+        WidthSpec::Bits(8),
+        WidthSpec::Float,
+        &params.weight_stats(),
+        &a_stats,
+        CalibMethod::MinMax,
+    )
+    .unwrap();
+    assert!(!nq_float.integer_deployable());
+    let via_backend = backend.evaluate("tiny", &params, &nq_float, &eval).unwrap();
+    let direct = backend
+        .evaluate_simulated("tiny", &params, &nq_float, &eval)
+        .unwrap();
+    assert_eq!(via_backend, direct);
+}

@@ -162,6 +162,28 @@ fn native_sweep_bit_identical_across_workers() {
     }
 }
 
+/// `--threads` (GEMM/gradient workers *inside* each session) must be as
+/// invisible to the results as `--workers` is: the same real sweep --
+/// threaded training steps *and* threaded integer-engine evaluation --
+/// produces bit-identical tables for any per-session thread count.
+#[test]
+fn native_sweep_bit_identical_across_session_threads() {
+    let runner = native_runner(0);
+    let reference = runner
+        .run_sweep(Regime::Vanilla, &SweepOpts { workers: 1, ..Default::default() })
+        .unwrap();
+    let mut threaded = native_runner(0);
+    threaded.cfg.threads = 2;
+    let out = threaded
+        .run_sweep(Regime::Vanilla, &SweepOpts { workers: 2, ..Default::default() })
+        .unwrap();
+    assert_eq!(
+        bits(&reference.grid),
+        bits(&out.grid),
+        "native sweep differs between --threads 1 and --threads 2"
+    );
+}
+
 /// Two sessions with identical seeds replay the same loss history; the
 /// stochastic-rounding stream is live (different session seeds diverge).
 #[test]
@@ -183,7 +205,7 @@ fn native_history_pinned_for_fixed_seed() {
     .unwrap();
     let upd = vec![1.0; spec.num_layers];
     let data = Dataset::generate(64, 16, 16, 7);
-    let run = |session_seed: u64| {
+    let run = |session_seed: u64, threads: usize| {
         let mut s = backend
             .new_session(SessionCfg {
                 arch: "tiny",
@@ -201,18 +223,29 @@ fn native_history_pinned_for_fixed_seed() {
                 },
                 max_loss: 30.0,
                 seed: session_seed,
+                threads,
             })
             .unwrap();
         run_session(&mut *s, 8, 1).unwrap()
     };
-    let a = run(1);
-    let b = run(1);
+    let a = run(1, 1);
+    let b = run(1, 1);
     assert_eq!(a.history, b.history);
-    let c = run(2);
+    let c = run(2, 1);
     assert_ne!(
         a.history, c.history,
         "stochastic weight-update rounding stream appears dead"
     );
+    // the tentpole acceptance pin: --threads 1/2/4 replay byte-identical
+    // loss histories (fixed GEMM/gradient accumulation order + pre-split
+    // per-(step, layer) rounding streams)
+    for threads in [2usize, 4] {
+        let t = run(1, threads);
+        assert_eq!(
+            a.history, t.history,
+            "loss history differs between 1 and {threads} train threads"
+        );
+    }
 }
 
 /// The paper's core claim at smoke scale: fixed-point training with
@@ -245,6 +278,7 @@ fn fixed_point_training_reduces_loss() {
             loader: LoaderCfg { batch: 16, augment: false, max_shift: 0, seed: 1 },
             max_loss: 30.0,
             seed: 13,
+            threads: 2,
         })
         .unwrap();
     let out = run_session(&mut *s, 40, 1).unwrap();
