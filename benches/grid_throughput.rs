@@ -17,14 +17,18 @@ use fxpnet::bench::fixtures::env_usize;
 use fxpnet::bench::Table;
 use fxpnet::coordinator::evaluator::EvalResult;
 use fxpnet::coordinator::grid::{self, CellJob, SweepOpts};
-use fxpnet::coordinator::regimes::{CellResult, Regime};
+use fxpnet::coordinator::regimes::{CellEval, CellResult, Regime};
+use fxpnet::coordinator::trainer::AbortReason;
 use fxpnet::fixedpoint::vector::quantize_slice;
 use fxpnet::fixedpoint::{QFormat, RoundMode};
+use fxpnet::quant::policy::WidthSpec;
 use fxpnet::util::rng::Rng;
 use fxpnet::util::timer::Stopwatch;
 
-fn synthetic_cell(job: &CellJob, n: usize, rounds: usize) -> fxpnet::Result<CellResult> {
-    let mut rng = Rng::new(job.seed);
+/// Burn `rounds` rounds of real stochastic-rounding work and fold the
+/// results into a deterministic pseudo-eval.
+fn burn(seed: u64, n: usize, rounds: usize) -> fxpnet::Result<EvalResult> {
+    let mut rng = Rng::new(seed);
     let fmt = QFormat::new(8, 4)?;
     let mut xs: Vec<f32> = (0..n).map(|_| rng.uniform_in(-6.0, 6.0)).collect();
     let mut acc = 0.0f64;
@@ -36,12 +40,64 @@ fn synthetic_cell(job: &CellJob, n: usize, rounds: usize) -> fxpnet::Result<Cell
             *v += rng.uniform_in(-0.1, 0.1);
         }
     }
-    Ok(Some(EvalResult {
+    Ok(EvalResult {
         n,
         top1_err: (acc.abs() % 1.0).min(0.999),
         top5_err: 0.0,
         mean_loss: acc.abs() % 10.0,
-    }))
+    })
+}
+
+fn synthetic_cell(job: &CellJob, n: usize, rounds: usize) -> fxpnet::Result<CellResult> {
+    Ok(CellEval::Ok(burn(job.seed, n, rounds)?))
+}
+
+/// Divergence model for the early-abort comparison: the float-weight
+/// column is doomed.  A full-budget sweep burns every round before
+/// declaring those cells n/a; an early-abort sweep cuts them at
+/// `abort_round` -- the wall-clock gap is what the abort policy buys.
+fn doomed_cell(
+    job: &CellJob,
+    n: usize,
+    rounds: usize,
+    abort_round: Option<usize>,
+) -> fxpnet::Result<CellResult> {
+    if job.w != WidthSpec::Float {
+        return Ok(CellEval::Ok(burn(job.seed, n, rounds)?));
+    }
+    let budget = abort_round.unwrap_or(rounds).min(rounds);
+    burn(job.seed, n, budget)?;
+    Ok(match abort_round {
+        Some(step) => CellEval::Aborted { reason: AbortReason::NanLoss, step },
+        None => CellEval::Na,
+    })
+}
+
+fn timed_doomed_sweep(
+    workers: usize,
+    n: usize,
+    rounds: usize,
+    abort_round: Option<usize>,
+) -> (f64, usize) {
+    let sw = Stopwatch::start();
+    let out = grid::run_sweep_with(
+        Regime::Vanilla,
+        "bench",
+        42,
+        &SweepOpts { workers, ..Default::default() },
+        |_| Ok(()),
+        |_, job| doomed_cell(job, n, rounds, abort_round),
+    )
+    .expect("sweep");
+    assert!(out.is_complete());
+    let aborted = out
+        .grid
+        .outcomes
+        .iter()
+        .flatten()
+        .filter(|c| matches!(c.eval, CellEval::Aborted { .. }))
+        .count();
+    (sw.elapsed().as_secs_f64() * 1e3, aborted)
 }
 
 fn timed_sweep(workers: usize, n: usize, rounds: usize) -> (f64, usize) {
@@ -98,6 +154,36 @@ fn main() {
         w *= 2;
     }
     println!("{}", t.render());
+
+    // early-abort payoff: same grid, the 4 float-weight cells doomed;
+    // the full-budget run burns every round to n/a, the abort run cuts
+    // them at 1/8 of the budget (what the stability policy does to a
+    // NaN-loss cell almost immediately in real sweeps)
+    let workers = 4.min(max_workers.max(1));
+    let (full_ms, full_aborts) = timed_doomed_sweep(workers, n, rounds, None);
+    let abort_at = (rounds / 8).max(1);
+    let (abort_ms, aborts) =
+        timed_doomed_sweep(workers, n, rounds, Some(abort_at));
+    assert_eq!(full_aborts, 0);
+    assert_eq!(aborts, 4, "the doomed float-weight column");
+    let mut t2 = Table::new(
+        "Early abort vs full budget (16 cells, 4 doomed)",
+        &["policy", "ms", "aborted cells", "sweep speedup"],
+    );
+    t2.row(vec![
+        "full budget".into(),
+        format!("{full_ms:.1}"),
+        "0".into(),
+        "1.00x".into(),
+    ]);
+    t2.row(vec![
+        format!("abort @ round {abort_at}"),
+        format!("{abort_ms:.1}"),
+        format!("{aborts}"),
+        format!("{:.2}x", full_ms / abort_ms.max(1e-9)),
+    ]);
+    println!("{}", t2.render());
+
     if speedup_at_4 > 0.0 {
         println!(
             "4-worker speedup: {speedup_at_4:.2}x (acceptance bar: >= 2x on \

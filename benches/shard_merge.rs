@@ -41,7 +41,7 @@ fn bits(g: &GridResult) -> Vec<Option<u64>> {
     g.outcomes
         .iter()
         .flatten()
-        .map(|c| c.eval.map(|e| e.top1_err.to_bits()))
+        .map(|c| c.eval.ok().map(|e| e.top1_err.to_bits()))
         .collect()
 }
 

@@ -12,7 +12,9 @@ use crate::coordinator::phases;
 use crate::coordinator::regimes::Regime;
 use crate::coordinator::report;
 use crate::coordinator::shard::{self, LockOpts, SweepManifest};
-use crate::coordinator::trainer::{run_session, upd_all, TrainSession};
+use crate::coordinator::trainer::{
+    run_session, run_session_with, upd_all, AbortPolicy, TrainSession,
+};
 use crate::data::loader::LoaderCfg;
 use crate::data::synth::Dataset;
 use crate::error::{FxpError, Result};
@@ -25,6 +27,7 @@ use crate::model::params::ParamSet;
 use crate::quant::calib::CalibMethod;
 use crate::quant::policy::{NetQuant, WidthSpec};
 use crate::runtime::Engine;
+use crate::train::telemetry::TelemetryLog;
 use crate::util::rng::derive_seed;
 
 /// Run one command; the returned value is the process exit code (the
@@ -84,6 +87,7 @@ fn run_cfg(args: &Args, threads_default: usize) -> Result<RunCfg> {
         threads: args.usize_or("threads", threads_default)?.max(1),
         topk: args.usize_or("topk", d.topk)?,
         max_loss: args.f32_or("max-loss", d.max_loss)?,
+        early_abort: !args.has("no-early-abort"),
         method,
         ..d
     })
@@ -281,13 +285,30 @@ fn train_cmd(args: &Args) -> Result<()> {
         seed: derive_seed(cfg.seed, "sgd-round", &[1]),
         threads: cfg.threads,
     })?;
-    let outc = run_session(&mut *tr, steps, (steps / 20).max(1))?;
+    let policy = cfg.early_abort.then(AbortPolicy::default);
+    let mut sink = args.get("stability-report").map(|_| TelemetryLog::default());
+    let outc = run_session_with(
+        &mut *tr,
+        steps,
+        (steps / 20).max(1),
+        policy.as_ref(),
+        sink.as_mut(),
+    )?;
+    // the telemetry stream is written even for runs that diverge or
+    // abort -- those are exactly the runs worth inspecting
+    if let (Some(path), Some(tlog)) = (args.get("stability-report"), &sink) {
+        std::fs::write(path, tlog.to_json().to_string())?;
+        println!("wrote stability report {path} ({} steps)", tlog.len());
+    }
     for (s, l) in &outc.history {
         println!("step {s:>5}  loss {l:.4}");
     }
     let initial = outc.history.first().map(|&(_, l)| l).unwrap_or(f32::NAN);
     let final_loss = outc.final_loss().unwrap_or(f32::NAN);
     if outc.diverged {
+        if let Some((reason, step)) = outc.aborted {
+            eprintln!("aborted early at step {step}: {}", reason.as_str());
+        }
         // like pretrain: never persist a blown-up net
         return Err(FxpError::Diverged {
             step: tr.global_step(),
@@ -370,9 +391,20 @@ fn sweep_opts(
 }
 
 /// Print a finished sweep, persist the table when it is final, and
-/// explain what remains when it is not.
-fn finish_sweep(sweep: &SweepOutcome, out_dir: &str, topk: usize) -> Result<()> {
+/// explain what remains when it is not.  `stability` writes the per-cell
+/// stability report (always, even for partial sweeps -- a shard's report
+/// covers its own cells).
+fn finish_sweep(
+    sweep: &SweepOutcome,
+    out_dir: &str,
+    topk: usize,
+    stability: Option<&str>,
+) -> Result<()> {
     println!("{}", sweep.grid.render(topk));
+    if let Some(path) = stability {
+        report::save_stability_report(&sweep.grid, path)?;
+        println!("wrote stability report {path}");
+    }
     log::info!(
         "sweep: {} computed ({} failed -> n/a), {} cached, {} missing, \
          {} workers",
@@ -424,7 +456,7 @@ fn grid_run(args: &Args) -> Result<()> {
             |_wid| Ok(()),
             |_, job| grid::synthetic_cell(job),
         )?;
-        return finish_sweep(&sweep, &out_dir, cfg.topk);
+        return finish_sweep(&sweep, &out_dir, cfg.topk, args.get("stability-report"));
     }
 
     let spec = backend_spec(args)?;
@@ -449,6 +481,10 @@ fn grid_run(args: &Args) -> Result<()> {
         );
         let result = runner.run_grid(regime)?;
         println!("{}", result.render(cfg.topk));
+        if let Some(path) = args.get("stability-report") {
+            report::save_stability_report(&result, path)?;
+            println!("wrote stability report {path}");
+        }
         report::save_grid(&result, out_dir, cfg.topk)?;
         return Ok(());
     }
@@ -464,7 +500,7 @@ fn grid_run(args: &Args) -> Result<()> {
         cfg: cfg.clone(),
     };
     let sweep = runner.run_sweep(regime, &opts)?;
-    finish_sweep(&sweep, &out_dir, cfg.topk)
+    finish_sweep(&sweep, &out_dir, cfg.topk, args.get("stability-report"))
 }
 
 /// `fxpnet grid plan`: print/write the sweep manifest and per-shard
@@ -531,6 +567,10 @@ fn grid_merge(args: &Args) -> Result<i32> {
     if args.has("render") {
         let topk = args.usize_or("topk", 1)?;
         print!("{}", merged.to_grid().render(topk));
+    }
+    if let Some(path) = args.get("stability-report") {
+        report::save_stability_report(&merged.to_grid(), path)?;
+        eprintln!("wrote stability report {path}");
     }
     if args.has("check") && !merged.is_complete() {
         eprintln!("incomplete sweep: {} cells missing:", merged.missing.len());

@@ -19,8 +19,16 @@ use crate::error::{FxpError, Result};
 /// swallow the token as the switch's "value" -- and for `merge` that
 /// misparse would shift the output path onto a shard input and
 /// overwrite it.  Add every new boolean flag here.
-const KNOWN_SWITCHES: &[&str] =
-    &["check", "gate", "prune", "render", "resume", "shard-cache", "synthetic"];
+const KNOWN_SWITCHES: &[&str] = &[
+    "check",
+    "gate",
+    "no-early-abort",
+    "prune",
+    "render",
+    "resume",
+    "shard-cache",
+    "synthetic",
+];
 
 /// Parsed command line.
 #[derive(Clone, Debug, Default)]
@@ -142,6 +150,10 @@ COMMANDS
                                     for any count)
              [--gate]               exit non-zero unless the final loss
                                     improved on the initial loss
+             [--stability-report F] write per-step telemetry (loss,
+                                    per-layer gradient/update norms,
+                                    update-to-quantization-step ratio,
+                                    saturation counts) as JSON
   grid       run one experiment grid (a paper table), in parallel
              --arch A --regime {none|vanilla|prop1|prop2|prop3} --ckpt F
              (--ckpt is optional with --backend native: a fresh He init
@@ -170,6 +182,13 @@ COMMANDS
              [--synthetic]   engine-free deterministic cells (no --ckpt
                              or artifacts needed; exercises the sweep /
                              shard / cache plumbing, e.g. in CI)
+             [--stability-report F]  write the per-cell stability report
+                             (ok/na/aborted + abort reason/step) as JSON
+  NOTE: fine-tuning cells whose training is provably doomed (NaN loss,
+  sustained loss blow-up, saturation-rate or update-collapse predicates)
+  are ended early by default and render as `div@<step>`; pass
+  --no-early-abort to always burn the full step budget.  Completed
+  cells' results are bit-identical either way.
   grid plan  print the sweep manifest + per-shard cell lists, so external
              schedulers (CI matrix, cluster) can launch one job per shard
              --regime R [--arch A] [--seed S] [--shards N]
@@ -189,6 +208,8 @@ COMMANDS
              [--prune]       after a complete merge, delete the merged
                              per-shard cache.shard-I-of-N.json inputs
                              (refused while any cell is missing)
+             [--stability-report F]  write the merged sweep's per-cell
+                             stability report JSON
   eval       evaluate a checkpoint at one grid cell
              --arch A --ckpt F --w {4|8|16|float} --a {4|8|16|float}
   infer      pure-integer inference + parity vs the XLA path

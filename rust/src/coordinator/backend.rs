@@ -115,6 +115,13 @@ impl XlaBackend {
     }
 }
 
+// The XLA `Trainer` keeps the `TrainSession` telemetry defaults
+// (`set_telemetry` is a no-op, `last_step_stats` returns None): PJRT
+// owns the compiled graph, so per-layer gradient/update norms and
+// saturation counters are not observable from the host.  Under an
+// abort policy the loop still gets loss-only `StepStats`, so the
+// NaN-loss and sustained-blowup predicates work on this backend; the
+// saturation and update-collapse predicates simply never fire.
 impl Backend for XlaBackend {
     fn name(&self) -> &'static str {
         "xla"

@@ -43,6 +43,13 @@ pub struct RunCfg {
     pub threads: usize,
     /// data augmentation during training
     pub augment: bool,
+    /// end doomed fine-tuning cells early via the default
+    /// [`AbortPolicy`](crate::coordinator::trainer::AbortPolicy)
+    /// (`--no-early-abort` turns this off).  Never changes the numerics
+    /// of cells that complete: telemetry consumes no RNG draws, and a
+    /// cell the policy aborts would have ended "n/a" (or burned its full
+    /// step budget diverging) anyway.
+    pub early_abort: bool,
     /// evaluate top-k error with this k (paper reports Top-5 on 1000
     /// classes; with 10 classes we report top-1 as primary)
     pub topk: usize,
@@ -64,6 +71,7 @@ impl Default for RunCfg {
             workers: 0,
             threads: 1,
             augment: true,
+            early_abort: true,
             topk: 1,
         }
     }
@@ -94,5 +102,6 @@ mod tests {
         assert!(c.max_loss > 3.0);
         let s = RunCfg::smoke();
         assert!(s.finetune_steps < c.finetune_steps);
+        assert!(c.early_abort && s.early_abort);
     }
 }

@@ -28,7 +28,7 @@ use crate::coordinator::backend::{Backend, BackendSpec};
 use crate::coordinator::config::RunCfg;
 use crate::coordinator::evaluator::EvalResult;
 use crate::coordinator::pool::{self, PoolStats};
-use crate::coordinator::regimes::{self, CellCtx, CellResult, Regime};
+use crate::coordinator::regimes::{self, CellCtx, CellEval, CellResult, Regime};
 use crate::coordinator::report::CellCache;
 use crate::coordinator::shard::{self, LockOpts, ShardedCache};
 use crate::data::synth::Dataset;
@@ -99,18 +99,19 @@ pub fn grid_jobs(regime: Regime, base_seed: u64) -> Vec<CellJob> {
 pub struct CellOutcome {
     pub w: WidthSpec,
     pub a: WidthSpec,
-    /// None = training failed to converge (the paper's "n/a").  Sharded
-    /// partial sweeps also render not-yet-computed cells as n/a until the
-    /// shards are unioned through a shared cell cache.
-    pub eval: Option<EvalResult>,
+    /// `Na` = training failed to converge (the paper's "n/a") or, in a
+    /// sharded partial sweep, a cell left to another shard; `Aborted` =
+    /// the stability policy ended the cell early (rendered "div@{step}").
+    pub eval: CellEval,
 }
 
 impl CellOutcome {
     /// Error percentage string in the paper's table style.
     pub fn cell_str(&self, topk: usize) -> String {
         match &self.eval {
-            None => "n/a".to_string(),
-            Some(e) => {
+            CellEval::Na => "n/a".to_string(),
+            CellEval::Aborted { step, .. } => format!("div@{step}"),
+            CellEval::Ok(e) => {
                 let err = if topk >= 5 { e.top5_err } else { e.top1_err };
                 format!("{:.1}", err * 100.0)
             }
@@ -219,9 +220,9 @@ pub fn synthetic_cell(job: &CellJob) -> Result<CellResult> {
         acc += rng.uniform();
     }
     if rng.uniform() < 0.2 {
-        return Ok(None); // this cell "fails to converge"
+        return Ok(CellEval::Na); // this cell "fails to converge"
     }
-    Ok(Some(EvalResult {
+    Ok(CellEval::Ok(EvalResult {
         n: 1000 + rng.below(1000),
         top1_err: rng.uniform(),
         top5_err: rng.uniform() * 0.5,
@@ -381,9 +382,9 @@ where
                         fresh.insert(job.flat, known);
                     }
                     None => {
-                        fresh.insert(job.flat, None);
+                        fresh.insert(job.flat, CellEval::Na);
                         if let Some(c) = cache.as_mut() {
-                            c.put(job, &None);
+                            c.put(job, &CellEval::Na);
                         }
                     }
                 }
@@ -408,7 +409,7 @@ where
                 .get(&flat)
                 .or_else(|| cached_hits.get(&flat))
                 .copied()
-                .flatten();
+                .unwrap_or(CellEval::Na);
             row.push(CellOutcome { w, a, eval });
         }
         outcomes.push(row);
@@ -834,15 +835,18 @@ impl<'a> GridRunner<'a> {
         let ctx = self.ctx(cell_seed(self.cfg.seed, regime, w, a));
         let eval =
             regimes::dispatch_cell(&ctx, regime, &self.base, p1.as_ref(), w, a)?;
-        if let Some(e) = &eval {
-            log::info!(
+        match &eval {
+            CellEval::Ok(e) => log::info!(
                 "  -> top1 {:.2}% top5 {:.2}% loss {:.3}",
                 e.top1_err * 100.0,
                 e.top5_err * 100.0,
                 e.mean_loss
-            );
-        } else {
-            log::info!("  -> n/a (diverged)");
+            ),
+            CellEval::Aborted { reason, step } => log::info!(
+                "  -> aborted at step {step} ({})",
+                reason.as_str()
+            ),
+            CellEval::Na => log::info!("  -> n/a (diverged)"),
         }
         Ok(CellOutcome { w, a, eval })
     }
@@ -893,9 +897,15 @@ mod tests {
                         w,
                         a,
                         eval: if ai == 0 && wi == 0 {
-                            None
+                            CellEval::Na
+                        } else if ai == 1 && wi == 0 {
+                            CellEval::Aborted {
+                                reason:
+                                    crate::coordinator::trainer::AbortReason::NanLoss,
+                                step: 37,
+                            }
                         } else {
-                            Some(fake_eval(0.01 * (ai * 4 + wi) as f64))
+                            CellEval::Ok(fake_eval(0.01 * (ai * 4 + wi) as f64))
                         },
                     })
                     .collect()
@@ -910,12 +920,16 @@ mod tests {
         };
         let s = g.render(1);
         assert!(s.contains("n/a"));
+        assert!(s.contains("div@37"));
         assert!(s.contains("Table 3"));
         assert!(s.contains("Float"));
         // w=8 is column 1, a=4 is row 0 -> err = 0.01 * (0*4 + 1) = 1%
         let c = g.cell(W::Bits(8), W::Bits(4)).unwrap();
-        assert!(c.eval.is_some());
+        assert!(c.eval.is_ok());
         assert_eq!(c.cell_str(1), "1.0");
+        // the aborted cell renders its abort step
+        let c = g.cell(W::Bits(4), W::Bits(8)).unwrap();
+        assert_eq!(c.cell_str(1), "div@37");
     }
 
     #[test]

@@ -20,7 +20,8 @@ use crate::coordinator::config::RunCfg;
 use crate::coordinator::evaluator::EvalResult;
 use crate::coordinator::phases;
 use crate::coordinator::trainer::{
-    run_session, upd_all, upd_single, upd_top, TrainSession,
+    run_session, run_session_with, upd_all, upd_single, upd_top, AbortPolicy,
+    AbortReason, TrainSession,
 };
 use crate::data::loader::LoaderCfg;
 use crate::data::synth::Dataset;
@@ -173,10 +174,53 @@ impl<'a> CellCtx<'a> {
     fn evaluate(&self, params: &ParamSet, nq: &NetQuant) -> Result<EvalResult> {
         self.backend.evaluate(self.arch, params, nq, self.eval_data)
     }
+
+    /// The cell's early-abort policy: the conservative default predicates
+    /// when `cfg.early_abort` is on, `None` (reference full-run path)
+    /// under `--no-early-abort`.
+    pub fn abort_policy(&self) -> Option<AbortPolicy> {
+        if self.cfg.early_abort {
+            Some(AbortPolicy::default())
+        } else {
+            None
+        }
+    }
 }
 
-/// Outcome of one cell: Some(eval) or None when training diverged.
-pub type CellResult = Option<EvalResult>;
+/// Outcome of one grid cell.
+///
+/// `Na` covers the legacy divergence outcome (NaN / runaway loss with no
+/// abort policy, or a missing Prop1 seed net); `Aborted` records the
+/// abort policy ending a doomed cell early, with the predicate that
+/// fired and the global step it fired at.  Both render as a miss in the
+/// paper tables (`Aborted` shows "div@{step}" in the text table, and
+/// both serialize as `null` metrics in the table JSON, so a sweep with
+/// early abort produces byte-identical table JSON to the reference
+/// full-run sweep for every cell that completes).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum CellEval {
+    Ok(EvalResult),
+    Na,
+    Aborted { reason: AbortReason, step: usize },
+}
+
+/// Historic alias (PR 4 used `Option<EvalResult>`; `CellEval::Na` now
+/// plays `None`'s role).
+pub type CellResult = CellEval;
+
+impl CellEval {
+    /// The evaluation metrics, when the cell completed.
+    pub fn ok(self) -> Option<EvalResult> {
+        match self {
+            CellEval::Ok(e) => Some(e),
+            _ => None,
+        }
+    }
+
+    pub fn is_ok(&self) -> bool {
+        matches!(self, CellEval::Ok(_))
+    }
+}
 
 /// Run one grid cell under `regime`.
 ///
@@ -197,7 +241,7 @@ pub fn dispatch_cell(
         Regime::NoFinetune => run_no_finetune(ctx, base, w, a),
         Regime::Vanilla => run_vanilla(ctx, base, w, a),
         Regime::Prop1 | Regime::Prop2 { .. } | Regime::Prop3 => match p1 {
-            None => Ok(None), // seed training itself diverged
+            None => Ok(CellEval::Na), // seed training itself diverged
             Some(p1) => match regime {
                 Regime::Prop1 => run_prop1(ctx, p1, w, a),
                 Regime::Prop2 { top_layers } => {
@@ -227,7 +271,7 @@ pub fn run_no_finetune(
     a: WidthSpec,
 ) -> Result<CellResult> {
     let nq = ctx.resolve(base, w, a)?;
-    Ok(Some(ctx.evaluate(base, &nq)?))
+    Ok(CellEval::Ok(ctx.evaluate(base, &nq)?))
 }
 
 /// Table 3: plain fine-tuning of all layers under the cell's config.
@@ -240,14 +284,19 @@ pub fn run_vanilla(
     let nq = ctx.resolve(base, w, a)?;
     let l = nq.num_layers();
     let mut tr = ctx.trainer(base, &nq, &upd_all(l), 3)?;
-    let out = run_session(&mut *tr, ctx.cfg.finetune_steps, 10)?;
+    let policy = ctx.abort_policy();
+    let out =
+        run_session_with(&mut *tr, ctx.cfg.finetune_steps, 10, policy.as_ref(), None)?;
+    if let Some((reason, step)) = out.aborted {
+        return Ok(CellEval::Aborted { reason, step });
+    }
     if out.diverged {
-        return Ok(None);
+        return Ok(CellEval::Na);
     }
     let tuned = tr.params()?;
     // re-resolve weight formats against the *tuned* weights for eval
     let nq_eval = ctx.resolve(&tuned, w, a)?;
-    Ok(Some(ctx.evaluate(&tuned, &nq_eval)?))
+    Ok(CellEval::Ok(ctx.evaluate(&tuned, &nq_eval)?))
 }
 
 /// The "last row of Table 3": fine-tune with quantized weights but float
@@ -280,7 +329,7 @@ pub fn run_prop1(
     a: WidthSpec,
 ) -> Result<CellResult> {
     let nq = ctx.resolve(p1net, w, a)?;
-    Ok(Some(ctx.evaluate(p1net, &nq)?))
+    Ok(CellEval::Ok(ctx.evaluate(p1net, &nq)?))
 }
 
 /// Table 5 (Proposal 2): from the Prop1 net, fine-tune only the top
@@ -295,13 +344,18 @@ pub fn run_prop2(
     let nq = ctx.resolve(p1net, w, a)?;
     let l = nq.num_layers();
     let mut tr = ctx.trainer(p1net, &nq, &upd_top(l, top_layers), 7)?;
-    let out = run_session(&mut *tr, ctx.cfg.finetune_steps, 10)?;
+    let policy = ctx.abort_policy();
+    let out =
+        run_session_with(&mut *tr, ctx.cfg.finetune_steps, 10, policy.as_ref(), None)?;
+    if let Some((reason, step)) = out.aborted {
+        return Ok(CellEval::Aborted { reason, step });
+    }
     if out.diverged {
-        return Ok(None);
+        return Ok(CellEval::Na);
     }
     let tuned = tr.params()?;
     let nq_eval = ctx.resolve(&tuned, w, a)?;
-    Ok(Some(ctx.evaluate(&tuned, &nq_eval)?))
+    Ok(CellEval::Ok(ctx.evaluate(&tuned, &nq_eval)?))
 }
 
 /// Table 6 (Proposal 3): the Table 1 schedule from the Prop1 net.
@@ -320,6 +374,7 @@ pub fn run_prop3(
         let nq = full.with_act_prefix(p.act_prefix);
         ctx.trainer(p1net, &nq, &upd_single(l, p.update_layer), 11)?
     };
+    let policy = ctx.abort_policy();
     for (i, p) in sched.iter().enumerate() {
         if i > 0 {
             let nq = full.with_act_prefix(p.act_prefix);
@@ -331,15 +386,20 @@ pub fn run_prop3(
             )?;
             tr.reset_momenta()?;
         }
-        let out = run_session(&mut *tr, ctx.cfg.phase_steps, 10)?;
+        let out =
+            run_session_with(&mut *tr, ctx.cfg.phase_steps, 10, policy.as_ref(), None)?;
+        if let Some((reason, step)) = out.aborted {
+            log::warn!("prop3 phase {} aborted ({})", p.number, reason.as_str());
+            return Ok(CellEval::Aborted { reason, step });
+        }
         if out.diverged {
             log::warn!("prop3 phase {} diverged", p.number);
-            return Ok(None);
+            return Ok(CellEval::Na);
         }
     }
     let tuned = tr.params()?;
     let nq_eval = ctx.resolve(&tuned, w, a)?;
-    Ok(Some(ctx.evaluate(&tuned, &nq_eval)?))
+    Ok(CellEval::Ok(ctx.evaluate(&tuned, &nq_eval)?))
 }
 
 #[cfg(test)]

@@ -7,11 +7,13 @@
 //! One JSON file per (regime, arch, base seed) sweep:
 //!
 //! ```json
-//! {"version": 3, "arch": "paper12", "regime_tag": 3, "base_seed": "42",
+//! {"version": 4, "arch": "paper12", "regime_tag": 3, "base_seed": "42",
 //!  "cells": {"w=8,a=4": {"status": "ok", "n": 2048,
 //!                         "top1_err": 0.334, "top5_err": 0.071,
 //!                         "loss": 1.207},
-//!            "w=4,a=4": {"status": "na"}}}
+//!            "w=4,a=4": {"status": "na"},
+//!            "w=4,a=8": {"status": "aborted", "reason": "nan-loss",
+//!                         "step": 37}}}
 //! ```
 //!
 //! Per-shard caches (`--shard I/N --shard-cache`) additionally carry
@@ -21,7 +23,11 @@
 //!
 //! `"na"` records the paper's "failed to converge" outcome (including
 //! panicked cells), so resuming never retries a deterministically-dead
-//! cell.  Floats are written with Rust's shortest-round-trip formatting
+//! cell; `"aborted"` records a cell the stability policy ended early
+//! (`reason` is an [`AbortReason`] string, `step` the global step the
+//! predicate fired at), so resumed sweeps keep the abort provenance
+//! instead of flattening it to "na".  Floats are written with Rust's
+//! shortest-round-trip formatting
 //! and `base_seed` as a string, so entries reload bit-exactly; a header
 //! mismatch (different sweep) discards the stale file.  Writes go
 //! through a uniquely-named temp file + rename, making each save atomic
@@ -59,7 +65,8 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 
 use crate::coordinator::evaluator::EvalResult;
 use crate::coordinator::grid::{CellJob, GridResult};
-use crate::coordinator::regimes::{CellResult, Regime};
+use crate::coordinator::regimes::{CellEval, CellResult, Regime};
+use crate::coordinator::trainer::AbortReason;
 use crate::error::{FxpError, Result};
 use crate::util::json::Json;
 
@@ -71,25 +78,29 @@ pub fn grid_to_json(g: &GridResult) -> Json {
             rows.push(Json::obj(vec![
                 ("w", Json::Str(c.w.label())),
                 ("a", Json::Str(c.a.label())),
+                // Na and Aborted both serialize as null metrics: the
+                // table JSON of an early-abort sweep stays byte-identical
+                // to the reference full-run sweep (abort provenance lives
+                // in the cell cache and the stability report instead)
                 (
                     "top1_err",
                     match &c.eval {
-                        Some(e) => Json::Num(e.top1_err),
-                        None => Json::Null,
+                        CellEval::Ok(e) => Json::Num(e.top1_err),
+                        _ => Json::Null,
                     },
                 ),
                 (
                     "top5_err",
                     match &c.eval {
-                        Some(e) => Json::Num(e.top5_err),
-                        None => Json::Null,
+                        CellEval::Ok(e) => Json::Num(e.top5_err),
+                        _ => Json::Null,
                     },
                 ),
                 (
                     "loss",
                     match &c.eval {
-                        Some(e) => Json::Num(e.mean_loss),
-                        None => Json::Null,
+                        CellEval::Ok(e) => Json::Num(e.mean_loss),
+                        _ => Json::Null,
                     },
                 ),
             ]));
@@ -117,14 +128,82 @@ pub fn save_grid(g: &GridResult, dir: impl AsRef<Path>, topk: usize) -> Result<(
     Ok(())
 }
 
+/// Per-cell stability report of a sweep: where the table JSON hides the
+/// Na/Aborted distinction (both render as null metrics so early-abort
+/// sweeps stay byte-identical to the full-run reference), this report
+/// surfaces it -- status per cell in row-major axis order, abort
+/// reason/step where the policy fired, and summary counts.  Pure
+/// function of the grid, so `grid merge` regenerates the identical
+/// report from merged shard caches.
+pub fn stability_report_json(g: &GridResult) -> Json {
+    let mut cells = Vec::new();
+    let (mut n_ok, mut n_na, mut n_aborted) = (0usize, 0usize, 0usize);
+    for row in &g.outcomes {
+        for c in row {
+            let mut pairs = vec![
+                ("w", Json::Str(c.w.label())),
+                ("a", Json::Str(c.a.label())),
+            ];
+            match &c.eval {
+                CellEval::Ok(e) => {
+                    n_ok += 1;
+                    pairs.push(("status", Json::Str("ok".into())));
+                    pairs.push(("top1_err", Json::Num(e.top1_err)));
+                }
+                CellEval::Na => {
+                    n_na += 1;
+                    pairs.push(("status", Json::Str("na".into())));
+                }
+                CellEval::Aborted { reason, step } => {
+                    n_aborted += 1;
+                    pairs.push(("status", Json::Str("aborted".into())));
+                    pairs.push(("reason", Json::Str(reason.as_str().into())));
+                    pairs.push(("step", Json::from(*step)));
+                }
+            }
+            cells.push(Json::obj(pairs));
+        }
+    }
+    Json::obj(vec![
+        ("table", Json::from(g.regime.table_number())),
+        ("regime", Json::from(g.regime.label())),
+        ("arch", Json::Str(g.arch.clone())),
+        (
+            "summary",
+            Json::obj(vec![
+                ("ok", Json::from(n_ok)),
+                ("na", Json::from(n_na)),
+                ("aborted", Json::from(n_aborted)),
+            ]),
+        ),
+        ("cells", Json::Arr(cells)),
+    ])
+}
+
+/// Write [`stability_report_json`] to `path` (parent dirs created).
+pub fn save_stability_report(g: &GridResult, path: impl AsRef<Path>) -> Result<()> {
+    let path = path.as_ref();
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(path, stability_report_json(g).to_string())?;
+    log::info!("wrote stability report {}", path.display());
+    Ok(())
+}
+
 /// Cell-cache schema/stream version.  Bump whenever cached results stop
 /// being comparable with freshly-computed ones -- e.g. v2: the Rng
 /// stream changed (Lemire `below`, integer stochastic-requantize
 /// dither); v3: fully quantized cells report integer-engine accuracy,
 /// conv weight gradients reduce through fixed stripes, and the
-/// stochastic-rounding streams are pre-split per (step, layer) -- so v2
-/// cells must not union with v3 sweeps under `--resume`.
-pub const CACHE_VERSION: usize = 3;
+/// stochastic-rounding streams are pre-split per (step, layer); v4: the
+/// "aborted" cell status exists and sweeps run abort-aware by default,
+/// so a v3 "na" cell is not comparable with a v4 sweep's outcome for the
+/// same cell -- v3 caches must not union with v4 sweeps under
+/// `--resume`.
+pub const CACHE_VERSION: usize = 4;
 
 /// Parsed header of a cell-cache file.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -143,7 +222,7 @@ pub struct CacheHeader {
 /// silently dropping its cells.
 pub fn parse_cache_text(
     text: &str,
-) -> Result<(CacheHeader, BTreeMap<String, Option<EvalResult>>)> {
+) -> Result<(CacheHeader, BTreeMap<String, CellEval>)> {
     let j = Json::parse(text)?;
     let shard = match (j.opt("shard_index"), j.opt("shard_count")) {
         (Some(i), Some(n)) => Some((i.as_usize()?, n.as_usize()?)),
@@ -170,13 +249,22 @@ pub fn parse_cache_text(
     let mut cells = BTreeMap::new();
     for (key, cell) in j.get("cells")?.as_obj()? {
         let entry = match cell.get("status")?.as_str()? {
-            "na" => None,
-            "ok" => Some(EvalResult {
+            "na" => CellEval::Na,
+            "ok" => CellEval::Ok(EvalResult {
                 n: cell.get("n")?.as_usize()?,
                 top1_err: cell.get("top1_err")?.as_f64()?,
                 top5_err: cell.get("top5_err")?.as_f64()?,
                 mean_loss: cell.get("loss")?.as_f64()?,
             }),
+            "aborted" => {
+                let rs = cell.get("reason")?.as_str()?;
+                let reason = AbortReason::parse(rs).ok_or_else(|| {
+                    FxpError::Json(format!(
+                        "cell '{key}': bad abort reason '{rs}'"
+                    ))
+                })?;
+                CellEval::Aborted { reason, step: cell.get("step")?.as_usize()? }
+            }
             other => {
                 return Err(FxpError::Json(format!(
                     "cell '{key}': bad status '{other}'"
@@ -199,7 +287,7 @@ pub struct CellCache {
     /// shard metadata written into (and required of) the header; `None`
     /// for a whole-sweep cache
     shard: Option<(usize, usize)>,
-    cells: BTreeMap<String, Option<EvalResult>>,
+    cells: BTreeMap<String, CellEval>,
 }
 
 /// Cache key from axis labels -- the single definition of the cell-key
@@ -303,7 +391,7 @@ impl CellCache {
         arch: &str,
         regime: Regime,
         base_seed: u64,
-        cells: BTreeMap<String, Option<EvalResult>>,
+        cells: BTreeMap<String, CellEval>,
     ) -> CellCache {
         CellCache {
             path: path.as_ref().to_path_buf(),
@@ -321,7 +409,7 @@ impl CellCache {
     }
 
     /// Cached result for a cell, if any.  The outer Option is presence;
-    /// the inner `CellResult` keeps the "n/a" distinction.
+    /// the inner `CellResult` keeps the "n/a" and "aborted" distinctions.
     pub fn get(&self, job: &CellJob) -> Option<CellResult> {
         self.cells.get(&Self::key(job)).copied()
     }
@@ -332,7 +420,7 @@ impl CellCache {
         // token that would corrupt the file and discard the whole cache
         // on the next open.
         let entry = match res {
-            Some(e)
+            CellEval::Ok(e)
                 if !(e.top1_err.is_finite()
                     && e.top5_err.is_finite()
                     && e.mean_loss.is_finite()) =>
@@ -341,7 +429,7 @@ impl CellCache {
                     "cell {}: non-finite eval cached as n/a",
                     Self::key(job)
                 );
-                None
+                CellEval::Na
             }
             other => *other,
         };
@@ -360,13 +448,20 @@ impl CellCache {
         let mut cells = BTreeMap::new();
         for (key, entry) in &self.cells {
             let cell = match entry {
-                None => Json::obj(vec![("status", Json::Str("na".into()))]),
-                Some(e) => Json::obj(vec![
+                CellEval::Na => {
+                    Json::obj(vec![("status", Json::Str("na".into()))])
+                }
+                CellEval::Ok(e) => Json::obj(vec![
                     ("status", Json::Str("ok".into())),
                     ("n", Json::from(e.n)),
                     ("top1_err", Json::Num(e.top1_err)),
                     ("top5_err", Json::Num(e.top5_err)),
                     ("loss", Json::Num(e.mean_loss)),
+                ]),
+                CellEval::Aborted { reason, step } => Json::obj(vec![
+                    ("status", Json::Str("aborted".into())),
+                    ("reason", Json::Str(reason.as_str().into())),
+                    ("step", Json::from(*step)),
                 ]),
             };
             cells.insert(key.clone(), cell);
@@ -431,11 +526,15 @@ mod tests {
             a_axis: vec![W::Bits(4), W::Float],
             outcomes: vec![
                 vec![
-                    CellOutcome { w: W::Bits(4), a: W::Bits(4), eval: None },
+                    CellOutcome {
+                        w: W::Bits(4),
+                        a: W::Bits(4),
+                        eval: CellEval::Na,
+                    },
                     CellOutcome {
                         w: W::Float,
                         a: W::Bits(4),
-                        eval: Some(EvalResult {
+                        eval: CellEval::Ok(EvalResult {
                             n: 10,
                             top1_err: 0.25,
                             top5_err: 0.05,
@@ -444,8 +543,19 @@ mod tests {
                     },
                 ],
                 vec![
-                    CellOutcome { w: W::Bits(4), a: W::Float, eval: None },
-                    CellOutcome { w: W::Float, a: W::Float, eval: None },
+                    CellOutcome {
+                        w: W::Bits(4),
+                        a: W::Float,
+                        eval: CellEval::Aborted {
+                            reason: AbortReason::NanLoss,
+                            step: 37,
+                        },
+                    },
+                    CellOutcome {
+                        w: W::Float,
+                        a: W::Float,
+                        eval: CellEval::Na,
+                    },
                 ],
             ],
         }
@@ -463,6 +573,45 @@ mod tests {
             (cells[1].get("top1_err").unwrap().as_f64().unwrap() - 0.25).abs()
                 < 1e-12
         );
+        // Aborted renders exactly like Na in the table JSON: null metrics,
+        // no extra keys -- the byte-identity contract with reference runs
+        assert_eq!(*cells[2].get("top1_err").unwrap(), Json::Null);
+        assert!(cells[2].opt("reason").is_none());
+        assert!(cells[2].opt("step").is_none());
+    }
+
+    #[test]
+    fn stability_report_surfaces_abort_provenance() {
+        let j = stability_report_json(&grid());
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        let summary = parsed.get("summary").unwrap();
+        assert_eq!(summary.get("ok").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(summary.get("na").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(summary.get("aborted").unwrap().as_usize().unwrap(), 1);
+        let cells = parsed.get("cells").unwrap().as_arr().unwrap();
+        assert_eq!(cells.len(), 4);
+        assert_eq!(cells[2].get("status").unwrap().as_str().unwrap(), "aborted");
+        assert_eq!(
+            cells[2].get("reason").unwrap().as_str().unwrap(),
+            AbortReason::NanLoss.as_str()
+        );
+        assert_eq!(cells[2].get("step").unwrap().as_usize().unwrap(), 37);
+        // ok cells carry their error so the report doubles as the
+        // theory-vs-practice table; na cells stay bare
+        assert!(cells[1].opt("top1_err").is_some());
+        assert!(cells[0].opt("top1_err").is_none());
+        // deterministic serialization: two renders are byte-identical
+        assert_eq!(j.to_string(), stability_report_json(&grid()).to_string());
+    }
+
+    #[test]
+    fn stability_report_saves_to_nested_path() {
+        let dir = std::env::temp_dir().join("fxp_stability_report_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("nested").join("stability_tiny.json");
+        save_stability_report(&grid(), &path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, stability_report_json(&grid()).to_string());
     }
 
     #[test]
@@ -501,14 +650,14 @@ mod tests {
             top5_err: 1.0 / 3.0,
             mean_loss: 1e-17,
         };
-        c.put(&job(W::Bits(8), W::Bits(4)), &Some(e));
-        c.put(&job(W::Bits(4), W::Bits(4)), &None);
+        c.put(&job(W::Bits(8), W::Bits(4)), &CellEval::Ok(e));
+        c.put(&job(W::Bits(4), W::Bits(4)), &CellEval::Na);
         c.save().unwrap();
 
         let c2 = CellCache::open(&path, "tiny", Regime::Vanilla, 42).unwrap();
         assert_eq!(c2.len(), 2);
-        assert_eq!(c2.get(&job(W::Bits(4), W::Bits(4))), Some(None));
-        let back = c2.get(&job(W::Bits(8), W::Bits(4))).unwrap().unwrap();
+        assert_eq!(c2.get(&job(W::Bits(4), W::Bits(4))), Some(CellEval::Na));
+        let back = c2.get(&job(W::Bits(8), W::Bits(4))).unwrap().ok().unwrap();
         assert_eq!(back.n, e.n);
         assert_eq!(back.top1_err.to_bits(), e.top1_err.to_bits());
         assert_eq!(back.top5_err.to_bits(), e.top5_err.to_bits());
@@ -518,12 +667,53 @@ mod tests {
     }
 
     #[test]
+    fn cell_cache_round_trips_aborted_status() {
+        let dir = std::env::temp_dir().join("fxp_cellcache_abort_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("cache.json");
+        let mut c = CellCache::open(&path, "tiny", Regime::Vanilla, 42).unwrap();
+        let aborted =
+            CellEval::Aborted { reason: AbortReason::LossBlowup, step: 129 };
+        c.put(&job(W::Bits(4), W::Bits(8)), &aborted);
+        c.save().unwrap();
+
+        // tolerant reader keeps the full provenance
+        let c2 = CellCache::open(&path, "tiny", Regime::Vanilla, 42).unwrap();
+        assert_eq!(c2.get(&job(W::Bits(4), W::Bits(8))), Some(aborted));
+
+        // strict reader sees the same entry, and a corrupted reason is a
+        // hard error (grid merge must not silently drop abort provenance)
+        let text = std::fs::read_to_string(&path).unwrap();
+        let (h, cells) = parse_cache_text(&text).unwrap();
+        assert_eq!(h.version, CACHE_VERSION);
+        assert_eq!(cells.get("w=4,a=8"), Some(&aborted));
+        let bad = text.replace("loss-blowup", "mystery-reason");
+        assert!(parse_cache_text(&bad).is_err());
+    }
+
+    #[test]
+    fn put_flattens_non_finite_eval_to_na() {
+        let dir = std::env::temp_dir().join("fxp_cellcache_nonfinite_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut c = CellCache::open(dir.join("cache.json"), "tiny", Regime::Vanilla, 42)
+            .unwrap();
+        let e = EvalResult {
+            n: 10,
+            top1_err: f64::NAN,
+            top5_err: 0.1,
+            mean_loss: 1.0,
+        };
+        c.put(&job(W::Bits(4), W::Bits(4)), &CellEval::Ok(e));
+        assert_eq!(c.get(&job(W::Bits(4), W::Bits(4))), Some(CellEval::Na));
+    }
+
+    #[test]
     fn cell_cache_header_mismatch_starts_fresh() {
         let dir = std::env::temp_dir().join("fxp_cellcache_hdr_test");
         let _ = std::fs::remove_dir_all(&dir);
         let path = dir.join("cache.json");
         let mut c = CellCache::open(&path, "tiny", Regime::Vanilla, 42).unwrap();
-        c.put(&job(W::Bits(8), W::Bits(8)), &None);
+        c.put(&job(W::Bits(8), W::Bits(8)), &CellEval::Na);
         c.save().unwrap();
         // different seed => stale
         let c2 = CellCache::open(&path, "tiny", Regime::Vanilla, 43).unwrap();
@@ -553,7 +743,7 @@ mod tests {
             Some((1, 3)),
         )
         .unwrap();
-        c.put(&job(W::Bits(8), W::Bits(8)), &None);
+        c.put(&job(W::Bits(8), W::Bits(8)), &CellEval::Na);
         c.save().unwrap();
 
         // strict reader sees the shard metadata
@@ -586,12 +776,12 @@ mod tests {
         let a = dir.join("a.json");
         let sibling = dir.join("a.json.tmp");
         let mut cs = CellCache::open(&sibling, "tiny", Regime::Vanilla, 42).unwrap();
-        cs.put(&job(W::Bits(4), W::Bits(4)), &None);
+        cs.put(&job(W::Bits(4), W::Bits(4)), &CellEval::Na);
         cs.save().unwrap();
         let before = std::fs::read_to_string(&sibling).unwrap();
 
         let mut ca = CellCache::open(&a, "tiny", Regime::Vanilla, 42).unwrap();
-        ca.put(&job(W::Bits(8), W::Bits(8)), &None);
+        ca.put(&job(W::Bits(8), W::Bits(8)), &CellEval::Na);
         ca.save().unwrap();
         assert_eq!(std::fs::read_to_string(&sibling).unwrap(), before);
         // and no temp litter is left behind after a clean save

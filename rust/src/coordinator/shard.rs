@@ -36,9 +36,8 @@ use std::io::Write;
 use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
 
-use crate::coordinator::evaluator::EvalResult;
 use crate::coordinator::grid::{grid_jobs, CellOutcome, GridResult};
-use crate::coordinator::regimes::Regime;
+use crate::coordinator::regimes::{CellEval, CellResult, Regime};
 use crate::coordinator::report::{
     cell_key, parse_cache_text, CacheHeader, CellCache, CACHE_VERSION,
 };
@@ -345,14 +344,14 @@ impl ShardedCache {
         Ok(ShardedCache { inner, _lock })
     }
 
-    pub fn get(&self, job: &crate::coordinator::grid::CellJob) -> Option<Option<EvalResult>> {
+    pub fn get(&self, job: &crate::coordinator::grid::CellJob) -> Option<CellResult> {
         self.inner.get(job)
     }
 
     pub fn put(
         &mut self,
         job: &crate::coordinator::grid::CellJob,
-        res: &Option<EvalResult>,
+        res: &CellResult,
     ) {
         self.inner.put(job, res)
     }
@@ -612,7 +611,7 @@ impl SweepManifest {
 pub struct ShardFile {
     pub path: PathBuf,
     pub header: CacheHeader,
-    pub cells: BTreeMap<String, Option<EvalResult>>,
+    pub cells: BTreeMap<String, CellEval>,
 }
 
 /// Strictly read one cache file for merging.
@@ -630,7 +629,7 @@ pub struct MergeOutcome {
     pub arch: String,
     pub regime: Regime,
     pub base_seed: u64,
-    pub cells: BTreeMap<String, Option<EvalResult>>,
+    pub cells: BTreeMap<String, CellEval>,
     /// cache files actually merged
     pub merged_files: usize,
     /// `*.tmp` / `*.lock` litter skipped by name
@@ -645,16 +644,21 @@ pub struct MergeOutcome {
 }
 
 /// Bit-exact equality of two cached cell results ("n/a" only equals
-/// "n/a"; floats compare by representation, not by `==`).
-fn cells_bit_equal(a: &Option<EvalResult>, b: &Option<EvalResult>) -> bool {
+/// "n/a", an abort only equals the same abort at the same step; floats
+/// compare by representation, not by `==`).
+fn cells_bit_equal(a: &CellEval, b: &CellEval) -> bool {
     match (a, b) {
-        (None, None) => true,
-        (Some(x), Some(y)) => {
+        (CellEval::Na, CellEval::Na) => true,
+        (CellEval::Ok(x), CellEval::Ok(y)) => {
             x.n == y.n
                 && x.top1_err.to_bits() == y.top1_err.to_bits()
                 && x.top5_err.to_bits() == y.top5_err.to_bits()
                 && x.mean_loss.to_bits() == y.mean_loss.to_bits()
         }
+        (
+            CellEval::Aborted { reason: ra, step: sa },
+            CellEval::Aborted { reason: rb, step: sb },
+        ) => ra == rb && sa == sb,
         _ => false,
     }
 }
@@ -764,7 +768,7 @@ pub fn merge_files(
         }
     }
 
-    let mut cells: BTreeMap<String, Option<EvalResult>> = BTreeMap::new();
+    let mut cells: BTreeMap<String, CellEval> = BTreeMap::new();
     let mut owner: BTreeMap<String, PathBuf> = BTreeMap::new();
     let mut duplicates = 0usize;
     for f in &files {
@@ -875,7 +879,7 @@ impl MergeOutcome {
                             .cells
                             .get(&cell_key(&w.label(), &a.label()))
                             .copied()
-                            .flatten(),
+                            .unwrap_or(CellEval::Na),
                     })
                     .collect()
             })

@@ -30,6 +30,7 @@ use crate::quant::policy::NetQuant;
 use crate::runtime::literal::{to_literal, HostValue};
 use crate::runtime::{Engine, Executable};
 use crate::tensor::Tensor;
+use crate::train::telemetry::{StepStats, TelemetryLog};
 
 /// Result of a training run.
 #[derive(Clone, Debug)]
@@ -40,6 +41,9 @@ pub struct TrainOutcome {
     pub diverged: bool,
     /// steps actually executed
     pub steps: usize,
+    /// set when an [`AbortPolicy`] ended the run early: the predicate
+    /// that fired and the global step at which it did
+    pub aborted: Option<(AbortReason, usize)>,
 }
 
 impl TrainOutcome {
@@ -47,13 +51,148 @@ impl TrainOutcome {
         self.history.last().map(|&(_, l)| l)
     }
 
-    /// Mean loss over the last `n` recorded samples.
+    /// Mean loss over the last `n` recorded samples (all of them when
+    /// fewer than `n` were recorded; each sample counts exactly once).
+    /// NaN when nothing was recorded or `n == 0`.
     pub fn tail_mean(&self, n: usize) -> f32 {
-        if self.history.is_empty() {
+        let take = n.min(self.history.len());
+        if take == 0 {
             return f32::NAN;
         }
-        let tail = &self.history[self.history.len().saturating_sub(n)..];
-        tail.iter().map(|&(_, l)| l).sum::<f32>() / tail.len() as f32
+        let tail = &self.history[self.history.len() - take..];
+        tail.iter().map(|&(_, l)| l).sum::<f32>() / take as f32
+    }
+}
+
+/// Why an [`AbortPolicy`] ended a run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AbortReason {
+    /// loss went NaN/Inf or exceeded the session's `max_loss`
+    NanLoss,
+    /// loss stayed above `blowup_factor` x the starting loss for a full
+    /// window
+    LossBlowup,
+    /// the fraction of clipped quantized elements stayed above
+    /// `sat_rate` for a full window
+    Saturation,
+    /// the smallest update-to-quantization-step ratio stayed below
+    /// `collapse_ratio` for a full window (Li et al.: updates vanish
+    /// beneath the weight grid)
+    UpdateCollapse,
+}
+
+impl AbortReason {
+    /// Stable string form (cell cache / stability report schema).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            AbortReason::NanLoss => "nan-loss",
+            AbortReason::LossBlowup => "loss-blowup",
+            AbortReason::Saturation => "saturation",
+            AbortReason::UpdateCollapse => "update-collapse",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<AbortReason> {
+        match s {
+            "nan-loss" => Some(AbortReason::NanLoss),
+            "loss-blowup" => Some(AbortReason::LossBlowup),
+            "saturation" => Some(AbortReason::Saturation),
+            "update-collapse" => Some(AbortReason::UpdateCollapse),
+            _ => None,
+        }
+    }
+}
+
+/// Windowed early-abort predicates over the telemetry stream: end a
+/// provably-doomed cell before its step budget runs out.  All inputs
+/// (loss, saturation rates, update ratios) are bit-identical for any
+/// `--threads` count, so the abort decision -- both the reason and the
+/// step -- is too.  The full-run path stays the reference: policy `None`
+/// (`--no-early-abort`) is byte-identical to the pre-policy loop, and a
+/// policy can only end a run the detector would call diverged anyway or
+/// whose sustained statistics match a doomed profile.
+#[derive(Clone, Debug)]
+pub struct AbortPolicy {
+    /// consecutive flagged steps a sustained predicate needs to fire
+    pub window: usize,
+    /// sustained predicates are inert for the first `min_steps` steps
+    /// (the NaN/max-loss check is always live)
+    pub min_steps: usize,
+    /// `LossBlowup`: loss > max(blowup_factor * start, start + 1.0)
+    pub blowup_factor: f32,
+    /// `Saturation`: fraction of clipped quantized elements per step
+    pub sat_rate: f64,
+    /// `UpdateCollapse`: min per-layer mean |update| / weight step
+    pub collapse_ratio: f32,
+}
+
+impl Default for AbortPolicy {
+    fn default() -> AbortPolicy {
+        AbortPolicy {
+            window: 8,
+            min_steps: 20,
+            blowup_factor: 3.0,
+            sat_rate: 0.5,
+            collapse_ratio: 1e-3,
+        }
+    }
+}
+
+/// Consecutive-window state for one run under a policy.
+struct AbortWatch<'a> {
+    policy: &'a AbortPolicy,
+    blowup_run: usize,
+    sat_run: usize,
+    collapse_run: usize,
+}
+
+impl<'a> AbortWatch<'a> {
+    fn new(policy: &'a AbortPolicy) -> AbortWatch<'a> {
+        AbortWatch { policy, blowup_run: 0, sat_run: 0, collapse_run: 0 }
+    }
+
+    /// Feed one step's stats; `Some(reason)` when a predicate fires.
+    /// `step_in_run` counts from 1 within this `run_session_with` call.
+    fn observe(
+        &mut self,
+        step_in_run: usize,
+        st: &StepStats,
+        first_losses: &[f32],
+    ) -> Option<AbortReason> {
+        let p = self.policy;
+        if step_in_run <= p.min_steps || first_losses.is_empty() {
+            return None;
+        }
+        let start =
+            first_losses.iter().sum::<f32>() / first_losses.len() as f32;
+        if st.loss > (start * p.blowup_factor).max(start + 1.0) {
+            self.blowup_run += 1;
+        } else {
+            self.blowup_run = 0;
+        }
+        if self.blowup_run >= p.window {
+            return Some(AbortReason::LossBlowup);
+        }
+        // saturation / collapse need real quantization telemetry; a
+        // stats-less backend (loss-only records) degrades to the loss
+        // predicates above
+        let has_elems = st.layers.iter().any(|l| l.n_w + l.n_a > 0);
+        if has_elems && st.sat_rate() > p.sat_rate {
+            self.sat_run += 1;
+        } else {
+            self.sat_run = 0;
+        }
+        if self.sat_run >= p.window {
+            return Some(AbortReason::Saturation);
+        }
+        match st.min_upd_to_step() {
+            Some(r) if r < p.collapse_ratio => self.collapse_run += 1,
+            _ => self.collapse_run = 0,
+        }
+        if self.collapse_run >= p.window {
+            return Some(AbortReason::UpdateCollapse);
+        }
+        None
     }
 }
 
@@ -111,6 +250,18 @@ pub trait TrainSession {
 
     /// Divergence threshold (loss above this, or NaN/Inf, is "n/a").
     fn max_loss(&self) -> f32;
+
+    /// Turn per-step telemetry collection on/off.  Collection must never
+    /// change the session's numerics or RNG streams; backends without
+    /// telemetry ignore this (default).
+    fn set_telemetry(&mut self, _on: bool) {}
+
+    /// Stats of the most recent step, when the backend collects them
+    /// (default: none -- `run_session_with` degrades to loss-only
+    /// records).
+    fn last_step_stats(&self) -> Option<&StepStats> {
+        None
+    }
 }
 
 /// Run `steps` steps of a session with divergence detection; records the
@@ -129,7 +280,32 @@ pub fn run_session(
     steps: usize,
     record_every: usize,
 ) -> Result<TrainOutcome> {
+    run_session_with(s, steps, record_every, None, None)
+}
+
+/// [`run_session`] with optional early abort and telemetry capture.
+///
+/// * `policy` -- when set, the windowed [`AbortPolicy`] predicates end a
+///   doomed run early with `aborted = Some((reason, global_step))`; the
+///   NaN/max-loss divergence of the base loop is then reported as
+///   [`AbortReason::NanLoss`] (same step, same trajectory: telemetry
+///   collection changes no numerics, so the run is bit-identical to the
+///   no-policy run up to the abort step).
+/// * `sink` -- when set, receives one [`StepStats`] per executed step.
+///   Backends without telemetry produce loss-only records.
+///
+/// With both `None` this *is* `run_session`, byte for byte.
+pub fn run_session_with(
+    s: &mut dyn TrainSession,
+    steps: usize,
+    record_every: usize,
+    policy: Option<&AbortPolicy>,
+    mut sink: Option<&mut TelemetryLog>,
+) -> Result<TrainOutcome> {
     let max_loss = s.max_loss();
+    let collect = policy.is_some() || sink.is_some();
+    s.set_telemetry(collect);
+    let mut watch = policy.map(AbortWatch::new);
     let mut history = Vec::new();
     let mut first_losses: Vec<f32> = Vec::new();
     let mut tail: std::collections::VecDeque<f32> =
@@ -146,12 +322,46 @@ pub fn run_session(
         if i % record_every.max(1) == 0 || i + 1 == steps {
             history.push((s.global_step(), loss));
         }
+        let stats = if collect {
+            Some(s.last_step_stats().cloned().unwrap_or_else(|| StepStats {
+                step: s.global_step(),
+                loss,
+                layers: Vec::new(),
+            }))
+        } else {
+            None
+        };
+        if let (Some(log), Some(st)) = (sink.as_deref_mut(), stats.as_ref()) {
+            log.push(st.clone());
+        }
         if !loss.is_finite() || loss > max_loss {
             log::warn!(
                 "diverged at step {} (loss {loss}): marking n/a",
                 s.global_step()
             );
-            return Ok(TrainOutcome { history, diverged: true, steps: i + 1 });
+            let aborted =
+                policy.map(|_| (AbortReason::NanLoss, s.global_step()));
+            return Ok(TrainOutcome {
+                history,
+                diverged: true,
+                steps: i + 1,
+                aborted,
+            });
+        }
+        if let (Some(w), Some(st)) = (watch.as_mut(), stats.as_ref()) {
+            if let Some(reason) = w.observe(i + 1, st, &first_losses) {
+                log::warn!(
+                    "abort policy fired at step {} ({}): ending run early",
+                    s.global_step(),
+                    reason.as_str()
+                );
+                return Ok(TrainOutcome {
+                    history,
+                    diverged: true,
+                    steps: i + 1,
+                    aborted: Some((reason, s.global_step())),
+                });
+            }
         }
     }
     if steps >= 30 {
@@ -163,10 +373,15 @@ pub fn run_session(
                 "failed to converge: loss {start:.3} -> {end:.3} over {steps} \
                  steps; marking n/a"
             );
-            return Ok(TrainOutcome { history, diverged: true, steps });
+            return Ok(TrainOutcome {
+                history,
+                diverged: true,
+                steps,
+                aborted: None,
+            });
         }
     }
-    Ok(TrainOutcome { history, diverged: false, steps })
+    Ok(TrainOutcome { history, diverged: false, steps, aborted: None })
 }
 
 pub struct Trainer {
@@ -349,5 +564,233 @@ impl TrainSession for Trainer {
 
     fn max_loss(&self) -> f32 {
         self.max_loss
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::train::telemetry::LayerStepStats;
+
+    /// Loss-scripted stand-in session (no engine, no net).
+    struct Scripted {
+        losses: Vec<f32>,
+        /// per-step layer stats; recycled cyclically when shorter than
+        /// the loss script
+        layers: Vec<Vec<LayerStepStats>>,
+        step: usize,
+        last: Option<StepStats>,
+        telemetry: bool,
+    }
+
+    impl Scripted {
+        fn new(losses: Vec<f32>) -> Scripted {
+            Scripted { losses, layers: Vec::new(), step: 0, last: None, telemetry: false }
+        }
+    }
+
+    impl TrainSession for Scripted {
+        fn step(&mut self) -> Result<f32> {
+            let loss = self.losses[self.step % self.losses.len()];
+            self.step += 1;
+            if self.telemetry {
+                let layers = if self.layers.is_empty() {
+                    Vec::new()
+                } else {
+                    self.layers[(self.step - 1) % self.layers.len()].clone()
+                };
+                self.last = Some(StepStats { step: self.step, loss, layers });
+            }
+            Ok(loss)
+        }
+        fn set_config(&mut self, _: &NetQuant, _: &[f32], _: f32, _: f32) -> Result<()> {
+            Ok(())
+        }
+        fn reset_momenta(&mut self) -> Result<()> {
+            Ok(())
+        }
+        fn params(&self) -> Result<ParamSet> {
+            Ok(ParamSet { names: Vec::new(), tensors: Vec::new() })
+        }
+        fn global_step(&self) -> usize {
+            self.step
+        }
+        fn max_loss(&self) -> f32 {
+            30.0
+        }
+        fn set_telemetry(&mut self, on: bool) {
+            self.telemetry = on;
+        }
+        fn last_step_stats(&self) -> Option<&StepStats> {
+            self.last.as_ref()
+        }
+    }
+
+    fn outcome(history: &[f32]) -> TrainOutcome {
+        TrainOutcome {
+            history: history.iter().enumerate().map(|(i, &l)| (i + 1, l)).collect(),
+            diverged: false,
+            steps: history.len(),
+            aborted: None,
+        }
+    }
+
+    /// Window semantics at the boundary: with fewer than `n` samples the
+    /// tail is the whole history, each sample counted exactly once -- a
+    /// short history must never weight any sample twice.
+    #[test]
+    fn tail_mean_window_boundary() {
+        let o = outcome(&[1.0, 2.0, 3.0]);
+        // n > len: plain mean of all three, each counted once
+        assert_eq!(o.tail_mean(5), 2.0);
+        assert_eq!(o.tail_mean(3), 2.0);
+        // n < len: exactly the last n
+        assert_eq!(o.tail_mean(2), 2.5);
+        assert_eq!(o.tail_mean(1), 3.0);
+        // degenerate windows are NaN, not a panic or a fake 0
+        assert!(o.tail_mean(0).is_nan());
+        assert!(outcome(&[]).tail_mean(4).is_nan());
+    }
+
+    #[test]
+    fn abort_reason_strings_round_trip() {
+        for r in [
+            AbortReason::NanLoss,
+            AbortReason::LossBlowup,
+            AbortReason::Saturation,
+            AbortReason::UpdateCollapse,
+        ] {
+            assert_eq!(AbortReason::parse(r.as_str()), Some(r));
+        }
+        assert_eq!(AbortReason::parse("bogus"), None);
+    }
+
+    #[test]
+    fn policy_none_matches_legacy_loop() {
+        let losses: Vec<f32> = (0..40).map(|i| 2.0 - 0.01 * i as f32).collect();
+        let a = run_session(&mut Scripted::new(losses.clone()), 40, 10).unwrap();
+        let b = run_session_with(&mut Scripted::new(losses), 40, 10, None, None)
+            .unwrap();
+        assert_eq!(a.history, b.history);
+        assert_eq!(a.diverged, b.diverged);
+        assert_eq!(a.steps, b.steps);
+        assert_eq!(a.aborted, None);
+        assert_eq!(b.aborted, None);
+    }
+
+    #[test]
+    fn nan_loss_becomes_abort_under_policy() {
+        let mut losses = vec![2.0f32; 12];
+        losses[7] = f32::NAN;
+        let policy = AbortPolicy::default();
+        let out = run_session_with(
+            &mut Scripted::new(losses.clone()),
+            12,
+            1,
+            Some(&policy),
+            None,
+        )
+        .unwrap();
+        assert!(out.diverged);
+        assert_eq!(out.steps, 8);
+        assert_eq!(out.aborted, Some((AbortReason::NanLoss, 8)));
+        // without a policy: same step, same divergence, no abort record
+        let legacy = run_session(&mut Scripted::new(losses), 12, 1).unwrap();
+        assert!(legacy.diverged);
+        assert_eq!(legacy.steps, 8);
+        assert_eq!(legacy.aborted, None);
+        assert_eq!(legacy.history, out.history);
+    }
+
+    #[test]
+    fn sustained_blowup_aborts_after_window_not_before() {
+        // healthy start, then the loss parks at 4x the baseline (but
+        // under max_loss, so only the sustained predicate can see it)
+        let mut losses = vec![2.0f32; 5];
+        losses.extend(vec![8.0f32; 60]);
+        let policy = AbortPolicy::default();
+        let out = run_session_with(
+            &mut Scripted::new(losses),
+            60,
+            1,
+            Some(&policy),
+            None,
+        )
+        .unwrap();
+        assert!(out.diverged);
+        assert_eq!(out.aborted.map(|(r, _)| r), Some(AbortReason::LossBlowup));
+        // inert through min_steps, then needs `window` consecutive hits
+        let step = out.aborted.unwrap().1;
+        assert_eq!(step, policy.min_steps + policy.window);
+        assert_eq!(out.steps, step);
+    }
+
+    #[test]
+    fn saturation_and_collapse_predicates_fire_on_stats() {
+        let sat_layer = LayerStepStats {
+            active: true,
+            quantized: true,
+            grad_l2: 1.0,
+            update_l2: 0.1,
+            upd_to_step: 0.5,
+            sat_w: 90,
+            sat_a: 0,
+            n_w: 100,
+            n_a: 0,
+        };
+        let mut s = Scripted::new(vec![2.0]);
+        s.layers = vec![vec![sat_layer.clone()]];
+        let policy = AbortPolicy::default();
+        let out = run_session_with(&mut s, 60, 1, Some(&policy), None).unwrap();
+        assert_eq!(
+            out.aborted.map(|(r, _)| r),
+            Some(AbortReason::Saturation)
+        );
+        assert_eq!(out.aborted.unwrap().1, policy.min_steps + policy.window);
+
+        let collapsed = LayerStepStats {
+            upd_to_step: 1e-5,
+            sat_w: 0,
+            ..sat_layer
+        };
+        let mut s = Scripted::new(vec![2.0]);
+        s.layers = vec![vec![collapsed]];
+        let out = run_session_with(&mut s, 60, 1, Some(&policy), None).unwrap();
+        assert_eq!(
+            out.aborted.map(|(r, _)| r),
+            Some(AbortReason::UpdateCollapse)
+        );
+
+        // a healthy profile never trips anything
+        let healthy = LayerStepStats {
+            active: true,
+            quantized: true,
+            grad_l2: 1.0,
+            update_l2: 0.1,
+            upd_to_step: 0.3,
+            sat_w: 1,
+            sat_a: 2,
+            n_w: 100,
+            n_a: 1000,
+        };
+        let mut s = Scripted::new(vec![2.0, 1.9, 1.8]);
+        s.layers = vec![vec![healthy]];
+        let out = run_session_with(&mut s, 60, 1, Some(&policy), None).unwrap();
+        assert_eq!(out.aborted, None);
+        assert!(!out.diverged);
+    }
+
+    #[test]
+    fn telemetry_sink_records_every_step() {
+        let mut s = Scripted::new(vec![2.0, 1.5, 1.0, 0.5]);
+        let mut log = TelemetryLog::default();
+        let out =
+            run_session_with(&mut s, 4, 2, None, Some(&mut log)).unwrap();
+        assert_eq!(out.steps, 4);
+        assert_eq!(log.len(), 4);
+        assert_eq!(log.steps[2].step, 3);
+        assert_eq!(log.steps[2].loss, 1.0);
+        // stats-less backends produce loss-only records
+        assert!(log.steps.iter().all(|st| st.layers.is_empty()));
     }
 }

@@ -85,6 +85,21 @@ impl WideAcc {
 
     /// Figure 1 step 3: round/truncate the accumulator into `fmt`.
     pub fn requantize(&self, fmt: QFormat, mode: RoundMode, rng: Option<&mut Rng>) -> Fx {
+        self.requantize_counted(fmt, mode, rng).0
+    }
+
+    /// [`WideAcc::requantize`] plus a saturation flag: true iff the
+    /// rounded code fell outside `fmt`'s representable range and was
+    /// clipped.  `requantize` delegates here, so the returned `Fx` (and
+    /// any stochastic-rounding draw) is definitionally identical with or
+    /// without the flag -- the overflow telemetry rides along for free
+    /// (pinned by tests/properties.rs).
+    pub fn requantize_counted(
+        &self,
+        fmt: QFormat,
+        mode: RoundMode,
+        rng: Option<&mut Rng>,
+    ) -> (Fx, bool) {
         // shift = number of fractional bits to drop (may be negative)
         let shift = self.frac - fmt.frac as i32;
         let code = if shift == 0 {
@@ -113,9 +128,10 @@ impl WideAcc {
             // gaining bits: exact
             self.acc << (-shift)
         };
+        let saturated = code < fmt.qmin() as i128 || code > fmt.qmax() as i128;
         let code =
             code.clamp(fmt.qmin() as i128, fmt.qmax() as i128) as i64;
-        Fx { code, fmt }
+        (Fx { code, fmt }, saturated)
     }
 }
 

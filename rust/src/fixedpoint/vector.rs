@@ -12,21 +12,45 @@ pub fn quantize_slice(
     xs: &mut [f32],
     fmt: QFormat,
     mode: RoundMode,
-    mut rng: Option<&mut Rng>,
+    rng: Option<&mut Rng>,
 ) {
+    quantize_slice_counted(xs, fmt, mode, rng);
+}
+
+/// [`quantize_slice`] plus a saturation counter: returns how many
+/// elements' raw codes fell outside `[qmin, qmax]` and were clipped to
+/// the format bounds.  This *is* the quantizer (`quantize_slice`
+/// delegates here), so values written and RNG draws consumed are
+/// definitionally identical whether or not the count is used -- the
+/// telemetry layer can harvest clip counts without perturbing training
+/// numerics (pinned by tests/properties.rs).  The count is a plain
+/// element tally, so any partition of `xs` into sub-slices sums to the
+/// same total (u64 addition is associative), which is what makes the
+/// per-layer saturation statistics thread-invariant.
+pub fn quantize_slice_counted(
+    xs: &mut [f32],
+    fmt: QFormat,
+    mode: RoundMode,
+    mut rng: Option<&mut Rng>,
+) -> u64 {
     let step = fmt.step();
     let inv = 1.0 / step as f64;
     let (lo, hi) = (fmt.qmin() as f64, fmt.qmax() as f64);
+    let mut sat = 0u64;
     match mode {
         RoundMode::NearestHalfUp => {
             for x in xs.iter_mut() {
-                let code = ((*x as f64) * inv + 0.5).floor().clamp(lo, hi);
+                let raw = ((*x as f64) * inv + 0.5).floor();
+                sat += (raw < lo || raw > hi) as u64;
+                let code = raw.clamp(lo, hi);
                 *x = (code * step as f64) as f32;
             }
         }
         RoundMode::Floor => {
             for x in xs.iter_mut() {
-                let code = ((*x as f64) * inv).floor().clamp(lo, hi);
+                let raw = ((*x as f64) * inv).floor();
+                sat += (raw < lo || raw > hi) as u64;
+                let code = raw.clamp(lo, hi);
                 *x = (code * step as f64) as f32;
             }
         }
@@ -41,12 +65,15 @@ pub fn quantize_slice(
                 let dither = &mut us[..chunk.len()];
                 rng.fill_uniform(dither);
                 for (x, &u) in chunk.iter_mut().zip(dither.iter()) {
-                    let code = ((*x as f64) * inv + u).floor().clamp(lo, hi);
+                    let raw = ((*x as f64) * inv + u).floor();
+                    sat += (raw < lo || raw > hi) as u64;
+                    let code = raw.clamp(lo, hi);
                     *x = (code * step as f64) as f32;
                 }
             }
         }
     }
+    sat
 }
 
 /// Non-destructive quantization.

@@ -7,6 +7,16 @@ use crate::fixedpoint::{QFormat, RoundMode};
 /// specialised to i64 for the conv/fc inner loops.
 #[inline]
 pub fn requant_i64(acc: i64, acc_frac: i32, fmt: QFormat) -> i32 {
+    requant_i64_counted(acc, acc_frac, fmt).0
+}
+
+/// [`requant_i64`] plus a saturation flag: true iff the rounded code
+/// overflowed `fmt`'s range and was clipped.  `requant_i64` delegates
+/// here, so the code returned is definitionally identical with or
+/// without the flag (pinned by tests/properties.rs against
+/// `WideAcc::requantize_counted`).
+#[inline]
+pub fn requant_i64_counted(acc: i64, acc_frac: i32, fmt: QFormat) -> (i32, bool) {
     let shift = acc_frac - fmt.frac as i32;
     let code = if shift == 0 {
         acc
@@ -15,7 +25,8 @@ pub fn requant_i64(acc: i64, acc_frac: i32, fmt: QFormat) -> i32 {
     } else {
         acc << (-shift)
     };
-    code.clamp(fmt.qmin(), fmt.qmax()) as i32
+    let saturated = code < fmt.qmin() || code > fmt.qmax();
+    (code.clamp(fmt.qmin(), fmt.qmax()) as i32, saturated)
 }
 
 /// Encode a float bias onto the accumulator grid.

@@ -187,6 +187,16 @@ impl NetQuant {
         out
     }
 
+    /// Per-layer weight quantization step sizes (`None` = float layer).
+    /// The training-stability telemetry normalizes each layer's mean
+    /// absolute weight update by this step: a healthy fixed-point run
+    /// keeps the ratio well above ~1e-3, while a collapsed ratio means
+    /// every update rounds back to the same code (the Q4 pathology of
+    /// section 2.2) and the cell is doomed.
+    pub fn weight_steps(&self) -> Vec<Option<f32>> {
+        self.weights.iter().map(|w| w.map(|f| f.step())).collect()
+    }
+
     /// The runtime vectors for the executables.
     pub fn vectors(&self) -> QuantVectors {
         let mut v = QuantVectors {
@@ -321,6 +331,29 @@ mod tests {
         assert_eq!(v.w_lo, vec![-8.0, -8.0]);
         assert_eq!(v.w_hi, vec![7.0, 7.0]);
         assert!(v.w_step.iter().all(|&s| s > 0.0));
+    }
+
+    #[test]
+    fn weight_steps_per_layer() {
+        let s = stats(3);
+        let nq = NetQuant::for_cell(
+            WidthSpec::Bits(4),
+            WidthSpec::Bits(8),
+            &s,
+            &s,
+            CalibMethod::MinMax,
+        )
+        .unwrap();
+        let steps = nq.weight_steps();
+        assert_eq!(steps.len(), 3);
+        for (st, w) in steps.iter().zip(&nq.weights) {
+            assert_eq!(*st, w.map(|f| f.step()));
+            assert!(st.unwrap() > 0.0);
+        }
+        assert!(NetQuant::all_float(3)
+            .weight_steps()
+            .iter()
+            .all(|s| s.is_none()));
     }
 
     #[test]

@@ -43,6 +43,7 @@
 //! ([`NativeBackend::evaluate_simulated`]).
 
 pub mod net;
+pub mod telemetry;
 
 use std::collections::BTreeMap;
 
@@ -52,7 +53,7 @@ use crate::coordinator::trainer::TrainSession;
 use crate::data::loader::Loader;
 use crate::data::synth::Dataset;
 use crate::error::{FxpError, Result};
-use crate::fixedpoint::vector::quantize_slice;
+use crate::fixedpoint::vector::quantize_slice_counted;
 use crate::fixedpoint::{QFormat, RoundMode};
 use crate::inference::FixedPointNet;
 use crate::model::manifest::ArchSpec;
@@ -61,6 +62,7 @@ use crate::model::zoo;
 use crate::quant::calib::LayerStats;
 use crate::quant::policy::NetQuant;
 use crate::tensor::{Tensor, TensorF};
+use crate::train::telemetry::{LayerStepStats, StepStats};
 use crate::util::rng::{derive_seed, Rng};
 
 pub use net::NativeNet;
@@ -263,6 +265,10 @@ pub struct NativeTrainer {
     max_loss: f32,
     batch: usize,
     step: usize,
+    /// collect per-layer [`StepStats`] each step (off by default: the
+    /// L2-norm passes cost a little; the saturation tallies are free)
+    telemetry: bool,
+    last_stats: Option<StepStats>,
 }
 
 impl NativeTrainer {
@@ -315,6 +321,8 @@ impl NativeTrainer {
             max_loss: cfg.max_loss,
             batch,
             step: 0,
+            telemetry: false,
+            last_stats: None,
         })
     }
 }
@@ -324,6 +332,14 @@ impl NativeTrainer {
 /// their fixed-point grid.  `rng_seed` keys this layer's own pre-split
 /// dither stream, so layers can update on any worker in any schedule
 /// without changing the draws any one of them sees.
+///
+/// When `stats` is given, the layer's telemetry is filled in: gradient
+/// and update L2 norms (f64 accumulation in index order over the layer's
+/// own slices -- the reduction order never depends on thread count), the
+/// mean |weight update| / quantization-step ratio of Li et al., and the
+/// clip tally of the stochastic snap.  Collection reads values the
+/// update computes anyway and consumes no RNG, so a session trains
+/// identically with or without it.
 #[allow(clippy::too_many_arguments)]
 fn update_layer(
     tensors: &mut [TensorF],
@@ -335,7 +351,14 @@ fn update_layer(
     mu: f32,
     w_fmt: Option<QFormat>,
     rng_seed: u64,
+    stats: Option<&mut LayerStepStats>,
 ) {
+    let collect = stats.is_some();
+    let mut grad_sq = 0f64;
+    let mut upd_sq = 0f64;
+    let mut w_abs_sum = 0f64;
+    let mut sat_w = 0u64;
+    let mut n_w = 0u64;
     for (ti, g) in [gw, gb].into_iter().enumerate() {
         let v = &mut vel[ti];
         for (vv, &gv) in v.iter_mut().zip(g) {
@@ -345,15 +368,47 @@ fn update_layer(
         for (pv, &vv) in p.iter_mut().zip(v.iter()) {
             *pv -= lr * mask * vv;
         }
+        if collect {
+            for &gv in g {
+                grad_sq += gv as f64 * gv as f64;
+            }
+            for &vv in v.iter() {
+                let u = (lr * mask * vv) as f64;
+                upd_sq += u * u;
+                if ti == 0 {
+                    w_abs_sum += u.abs();
+                }
+            }
+        }
         if ti == 0 {
             if let Some(fmt) = w_fmt {
                 // Gupta et al.: the stored weight lives on the
                 // fixed-point grid; the update rounds stochastically so
                 // sub-step gradients survive in expectation
                 let mut rng = Rng::new(rng_seed);
-                quantize_slice(p, fmt, RoundMode::Stochastic, Some(&mut rng));
+                let sat =
+                    quantize_slice_counted(p, fmt, RoundMode::Stochastic, Some(&mut rng));
+                if collect {
+                    sat_w = sat;
+                    n_w = p.len() as u64;
+                }
             }
         }
+    }
+    if let Some(st) = stats {
+        st.active = true;
+        st.quantized = w_fmt.is_some();
+        st.grad_l2 = grad_sq.sqrt() as f32;
+        st.update_l2 = upd_sq.sqrt() as f32;
+        st.upd_to_step = match w_fmt {
+            Some(fmt) if n_w > 0 => {
+                ((w_abs_sum / n_w as f64) / fmt.step() as f64) as f32
+            }
+            _ => 0.0,
+        };
+        st.sat_w = sat_w;
+        st.n_w = n_w;
+        // sat_a / n_a come from the net's forward tally (see step())
     }
 }
 
@@ -378,9 +433,20 @@ impl TrainSession for NativeTrainer {
         // spawn per layer); each layer's stream is pre-split, so the
         // grouping -- like the thread count -- cannot change the draws
         let workers = self.threads.min(num_layers.max(1));
+        let collect = self.telemetry;
+        // each worker owns its layers' stats slots (same contiguous
+        // chunking as the tensors), and every norm is reduced serially
+        // inside update_layer -- so the stats, like the weights, are
+        // bit-identical for every thread count
+        let mut layer_stats: Vec<LayerStepStats> = if collect {
+            vec![LayerStepStats::default(); num_layers]
+        } else {
+            Vec::new()
+        };
         std::thread::scope(|s| {
             let mut tens_rem: &mut [TensorF] = &mut self.params.tensors;
             let mut vel_rem: &mut [Vec<f32>] = &mut self.vel;
+            let mut stats_rem: &mut [LayerStepStats] = &mut layer_stats;
             let grads = &self.grads;
             let nq = &self.nq;
             let upd = &self.upd;
@@ -392,6 +458,13 @@ impl TrainSession for NativeTrainer {
                 tens_rem = tr;
                 let (vchunk, vr) = vel_rem.split_at_mut(2 * count);
                 vel_rem = vr;
+                let schunk: &mut [LayerStepStats] = if collect {
+                    let (sc, sr) = stats_rem.split_at_mut(count);
+                    stats_rem = sr;
+                    sc
+                } else {
+                    &mut []
+                };
                 let base = l0;
                 l0 = l1;
                 let run = move || {
@@ -403,7 +476,8 @@ impl TrainSession for NativeTrainer {
                             // gradients, so there is nothing to
                             // integrate -- its velocity stays as-is
                             // (Proposal 3 resets momenta at every phase
-                            // change anyway)
+                            // change anyway); its stats slot keeps
+                            // active == false
                             continue;
                         }
                         let rng_seed = derive_seed(
@@ -421,6 +495,7 @@ impl TrainSession for NativeTrainer {
                             mu,
                             nq.weights[li],
                             rng_seed,
+                            if collect { Some(&mut schunk[i]) } else { None },
                         );
                     }
                 };
@@ -432,6 +507,19 @@ impl TrainSession for NativeTrainer {
             }
         });
         self.step += 1;
+        if collect {
+            for (li, st) in layer_stats.iter_mut().enumerate() {
+                let (sa, na) = self.net.act_saturation(li);
+                st.sat_a = sa;
+                st.n_a = na;
+                st.quantized = self.nq.weights[li].is_some();
+            }
+            self.last_stats = Some(StepStats {
+                step: self.step,
+                loss,
+                layers: layer_stats,
+            });
+        }
         Ok(loss)
     }
 
@@ -480,6 +568,17 @@ impl TrainSession for NativeTrainer {
 
     fn max_loss(&self) -> f32 {
         self.max_loss
+    }
+
+    fn set_telemetry(&mut self, on: bool) {
+        self.telemetry = on;
+        if !on {
+            self.last_stats = None;
+        }
+    }
+
+    fn last_step_stats(&self) -> Option<&StepStats> {
+        self.last_stats.as_ref()
     }
 }
 

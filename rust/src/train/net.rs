@@ -47,7 +47,7 @@
 #![allow(clippy::needless_range_loop)]
 
 use crate::error::{FxpError, Result};
-use crate::fixedpoint::vector::quantize_slice;
+use crate::fixedpoint::vector::{quantize_slice, quantize_slice_counted};
 use crate::fixedpoint::{QFormat, RoundMode};
 use crate::inference::gemm;
 use crate::inference::packing::{self, PackedPanels};
@@ -103,6 +103,17 @@ pub struct NativeNet {
     packed_w: Vec<PackedPanels<f32>>,
     packed_wt: Vec<PackedPanels<f32>>,
     a_fmt: Vec<Option<QFormat>>,
+    /// per weighted layer: activation elements clipped by the layer's
+    /// quantizer during the last forward (0 when the activations are
+    /// float).  The tally rides along the quantizer itself
+    /// (`quantize_slice_counted`), so keeping it never changes numerics.
+    act_sat: Vec<u64>,
+    /// per weighted layer: activation elements quantized during the last
+    /// forward (denominator for `act_sat`)
+    act_n: Vec<u64>,
+    /// per-worker saturation partials for `activate_sharded` (u64
+    /// addition is associative, so the chunked sum equals the serial one)
+    sat_scratch: Vec<u64>,
     // caches sized for `batch` images:
     acts: Vec<Vec<f32>>,
     zs: Vec<Vec<f32>>,
@@ -261,6 +272,9 @@ impl NativeNet {
                 .map(|_| PackedPanels::<f32>::pack(&[], 0, 0))
                 .collect(),
             a_fmt: vec![None; num_layers],
+            act_sat: vec![0; num_layers],
+            act_n: vec![0; num_layers],
+            sat_scratch: vec![0; 1],
             acts,
             zs,
             argmax,
@@ -294,6 +308,7 @@ impl NativeNet {
         self.threads = threads;
         self.patches.resize(threads * self.patch_stride, 0.0);
         self.dpatches.resize(threads * self.patch_stride, 0.0);
+        self.sat_scratch.resize(threads, 0);
     }
 
     pub fn threads(&self) -> usize {
@@ -392,6 +407,9 @@ impl NativeNet {
                 packed_w,
                 bias,
                 a_fmt,
+                act_sat,
+                act_n,
+                sat_scratch,
                 patches,
                 ..
             } = &mut *self;
@@ -434,13 +452,19 @@ impl NativeNet {
                                 );
                             },
                         );
-                        activate_sharded(
+                        act_sat[li] = activate_sharded(
                             z,
                             &mut dst[..rows * cout],
                             li < last,
                             a_fmt[li],
                             threads,
+                            sat_scratch,
                         );
+                        act_n[li] = if a_fmt[li].is_some() {
+                            (rows * cout) as u64
+                        } else {
+                            0
+                        };
                     }
                     Stage::Fc { li, k, nout } => {
                         let z = &mut zs[s][..n * nout];
@@ -452,7 +476,13 @@ impl NativeNet {
                             &bias[li],
                             z,
                         );
-                        activate(z, &mut dst[..n * nout], li < last, a_fmt[li]);
+                        act_sat[li] =
+                            activate(z, &mut dst[..n * nout], li < last, a_fmt[li]);
+                        act_n[li] = if a_fmt[li].is_some() {
+                            (n * nout) as u64
+                        } else {
+                            0
+                        };
                     }
                 }
             }
@@ -680,11 +710,23 @@ impl NativeNet {
         let (h, w, c) = self.shapes[s + 1];
         &self.acts[s + 1][..n * h * w * c]
     }
+
+    /// Activation-saturation tally of weighted layer `li` from the last
+    /// forward: `(elements clipped, elements quantized)`.  `(0, 0)` when
+    /// the layer's activations are float.  Bit-identical for any thread
+    /// count: counting happens inside the quantizer, and the per-shard
+    /// u64 partials sum to the same total under any chunking.
+    pub fn act_saturation(&self, li: usize) -> (u64, u64) {
+        (self.act_sat[li], self.act_n[li])
+    }
 }
 
 /// ReLU (optional) + simulated activation quantization from the
-/// pre-activation plane into the stage output.
-fn activate(z: &[f32], out: &mut [f32], relu: bool, fmt: Option<QFormat>) {
+/// pre-activation plane into the stage output.  Returns how many
+/// elements the quantizer clipped (0 when `fmt` is `None`) -- the count
+/// falls out of `quantize_slice_counted` for free, so the telemetry
+/// layer never pays a second pass.
+fn activate(z: &[f32], out: &mut [f32], relu: bool, fmt: Option<QFormat>) -> u64 {
     if relu {
         for (o, &v) in out.iter_mut().zip(z) {
             *o = v.max(0.0);
@@ -693,7 +735,9 @@ fn activate(z: &[f32], out: &mut [f32], relu: bool, fmt: Option<QFormat>) {
         out.copy_from_slice(z);
     }
     if let Some(f) = fmt {
-        quantize_slice(out, f, RoundMode::NearestHalfUp, None);
+        quantize_slice_counted(out, f, RoundMode::NearestHalfUp, None)
+    } else {
+        0
     }
 }
 
@@ -701,36 +745,46 @@ fn activate(z: &[f32], out: &mut [f32], relu: bool, fmt: Option<QFormat>) {
 /// purely elementwise (nearest-half-up needs no RNG), so chunking cannot
 /// change a single bit, but the quantize pass over a big conv plane is
 /// a meaningful slice of the step that would otherwise stay serial.
+/// Each worker writes its clip tally into its own `counts` slot
+/// (caller-provided scratch, at least `threads` long); the u64 partials
+/// are summed at the end, and integer addition is associative, so the
+/// total is bit-identical for every thread count.
 fn activate_sharded(
     z: &[f32],
     out: &mut [f32],
     relu: bool,
     fmt: Option<QFormat>,
     threads: usize,
-) {
+    counts: &mut [u64],
+) -> u64 {
     let total = out.len();
     let threads = threads.max(1).min(total.max(1));
     if threads == 1 {
-        activate(z, out, relu, fmt);
-        return;
+        return activate(z, out, relu, fmt);
     }
     let per = total.div_ceil(threads);
+    let nchunks = total.div_ceil(per);
+    debug_assert!(counts.len() >= nchunks);
     std::thread::scope(|s| {
         let mut z_rem = &z[..total];
         let mut out_rem: &mut [f32] = out;
+        let mut cnt_rem: &mut [u64] = counts;
         while !out_rem.is_empty() {
             let len = per.min(out_rem.len());
             let (zc, zr) = z_rem.split_at(len);
             z_rem = zr;
             let (oc, orest) = out_rem.split_at_mut(len);
             out_rem = orest;
+            let (cs, crest) = cnt_rem.split_at_mut(1);
+            cnt_rem = crest;
             if out_rem.is_empty() {
-                activate(zc, oc, relu, fmt);
+                cs[0] = activate(zc, oc, relu, fmt);
             } else {
-                s.spawn(move || activate(zc, oc, relu, fmt));
+                s.spawn(move || cs[0] = activate(zc, oc, relu, fmt));
             }
         }
     });
+    counts[..nchunks].iter().sum()
 }
 
 /// STE through ReLU: kill the gradient where the pre-activation was

@@ -1,0 +1,213 @@
+//! Training-stability telemetry: per-step, per-layer statistics of the
+//! native fixed-point trainer.
+//!
+//! The source paper attributes fixed-point training failure to gradient
+//! noise interacting with limited-precision updates; Li et al. (PAPERS.md)
+//! make that quantitative through the ratio of the typical weight update
+//! to the weight grid's quantization step.  This module records exactly
+//! those quantities each step:
+//!
+//! * `loss` -- the step's batch loss;
+//! * per layer: gradient L2 norm, update L2 norm (`lr * mask * velocity`,
+//!   i.e. what is actually subtracted from the weights), the mean
+//!   |update| / weight-quantization-step ratio (the Li et al. collapse
+//!   indicator), and saturation counts from the simulated-quantization
+//!   clamps -- weight clips from the stochastic-rounding snap in the SGD
+//!   update, activation clips from the forward pass's activation
+//!   quantizers (both harvested via
+//!   [`fixedpoint::vector::quantize_slice_counted`], whose numerics and
+//!   RNG stream are definitionally identical to the non-counting path).
+//!
+//! ## Determinism contract
+//!
+//! Every number here is bit-identical for any `--threads` count, just
+//! like the loss history:
+//!
+//! * L2 norms and update sums are accumulated serially, in index order,
+//!   inside the single worker that owns the layer (layers are never
+//!   split across update workers), so the float reduction order is
+//!   fixed;
+//! * saturation counters are u64 element tallies; the forward pass sums
+//!   one partial count per activation shard, and integer addition is
+//!   associative, so any chunking yields the same total;
+//! * telemetry consumes zero RNG draws and never writes to tensors, so
+//!   enabling it cannot change what a session trains.
+//!
+//! [`TelemetryLog::to_json`] serialises f32 stats through exact f64
+//! widening and the repo's shortest-round-trip JSON formatting, so two
+//! runs agree byte-for-byte iff they agree bit-for-bit.
+
+use crate::util::json::Json;
+
+/// One layer's statistics for one training step.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct LayerStepStats {
+    /// false for frozen layers (update mask 0): no gradient was applied,
+    /// every other field is zero
+    pub active: bool,
+    /// true when the layer's weights are quantized (a weight QFormat is
+    /// in effect); `upd_to_step` and `sat_w` are only meaningful then
+    pub quantized: bool,
+    /// L2 norm of the layer's (weight + bias) gradient
+    pub grad_l2: f32,
+    /// L2 norm of the applied update `lr * mask * velocity`
+    pub update_l2: f32,
+    /// mean |weight update| / weight quantization step (Li et al.);
+    /// 0 when the layer's weights are float or frozen
+    pub upd_to_step: f32,
+    /// weight elements clipped by the post-update quantization snap
+    pub sat_w: u64,
+    /// activation elements clipped by this layer's activation quantizer
+    /// during the step's forward pass
+    pub sat_a: u64,
+    /// weight elements quantized (denominator for `sat_w`)
+    pub n_w: u64,
+    /// activation elements quantized (denominator for `sat_a`)
+    pub n_a: u64,
+}
+
+/// One training step's record.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct StepStats {
+    /// global step index (1-based: the value of `global_step()` after
+    /// the step ran)
+    pub step: usize,
+    pub loss: f32,
+    pub layers: Vec<LayerStepStats>,
+}
+
+impl StepStats {
+    /// Fraction of quantized elements (weights + activations) clipped
+    /// this step, over all layers.  0 when nothing was quantized.
+    pub fn sat_rate(&self) -> f64 {
+        let (mut sat, mut n) = (0u64, 0u64);
+        for l in &self.layers {
+            sat += l.sat_w + l.sat_a;
+            n += l.n_w + l.n_a;
+        }
+        if n == 0 {
+            0.0
+        } else {
+            sat as f64 / n as f64
+        }
+    }
+
+    /// Smallest update-to-quantization-step ratio over active layers
+    /// with quantized weights -- the Li et al. "updates vanish beneath
+    /// the grid" indicator.  `None` when no such layer exists.
+    pub fn min_upd_to_step(&self) -> Option<f32> {
+        self.layers
+            .iter()
+            .filter(|l| l.active && l.quantized)
+            .map(|l| l.upd_to_step)
+            .fold(None, |m, x| Some(m.map_or(x, |m: f32| m.min(x))))
+    }
+
+    pub fn to_json(&self) -> Json {
+        let layers = self
+            .layers
+            .iter()
+            .map(|l| {
+                Json::obj(vec![
+                    ("active", Json::from(l.active as usize)),
+                    ("quantized", Json::from(l.quantized as usize)),
+                    ("grad_l2", Json::Num(l.grad_l2 as f64)),
+                    ("update_l2", Json::Num(l.update_l2 as f64)),
+                    ("upd_to_step", Json::Num(l.upd_to_step as f64)),
+                    ("sat_w", Json::from(l.sat_w as usize)),
+                    ("sat_a", Json::from(l.sat_a as usize)),
+                    ("n_w", Json::from(l.n_w as usize)),
+                    ("n_a", Json::from(l.n_a as usize)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("step", Json::from(self.step)),
+            ("loss", Json::Num(self.loss as f64)),
+            ("layers", Json::Arr(layers)),
+        ])
+    }
+}
+
+/// An accumulated stream of [`StepStats`] -- one entry per training
+/// step, in step order.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TelemetryLog {
+    pub steps: Vec<StepStats>,
+}
+
+impl TelemetryLog {
+    pub fn push(&mut self, s: StepStats) {
+        self.steps.push(s);
+    }
+
+    pub fn len(&self) -> usize {
+        self.steps.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.steps.is_empty()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Arr(self.steps.iter().map(StepStats::to_json).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layer(active: bool, quantized: bool, sat: u64, n: u64, r: f32) -> LayerStepStats {
+        LayerStepStats {
+            active,
+            quantized,
+            grad_l2: 1.0,
+            update_l2: 0.5,
+            upd_to_step: r,
+            sat_w: sat,
+            sat_a: 0,
+            n_w: n,
+            n_a: 0,
+        }
+    }
+
+    #[test]
+    fn sat_rate_and_min_ratio() {
+        let s = StepStats {
+            step: 3,
+            loss: 2.0,
+            layers: vec![
+                layer(true, true, 5, 10, 0.2),
+                layer(true, true, 0, 10, 0.05),
+                layer(false, true, 0, 0, 0.0),  // frozen: ignored by min
+                layer(true, false, 0, 0, 0.0),  // float: ignored by min
+            ],
+        };
+        assert_eq!(s.sat_rate(), 0.25);
+        assert_eq!(s.min_upd_to_step(), Some(0.05));
+        let empty = StepStats { step: 1, loss: 0.0, layers: vec![] };
+        assert_eq!(empty.sat_rate(), 0.0);
+        assert_eq!(empty.min_upd_to_step(), None);
+    }
+
+    #[test]
+    fn json_round_trips_and_is_deterministic() {
+        let mut log = TelemetryLog::default();
+        log.push(StepStats {
+            step: 1,
+            loss: 0.1 + 0.2,
+            layers: vec![layer(true, true, 1, 4, 0.125)],
+        });
+        let a = log.to_json().to_string();
+        let b = log.clone().to_json().to_string();
+        assert_eq!(a, b);
+        let parsed = Json::parse(&a).unwrap();
+        let steps = parsed.as_arr().unwrap();
+        assert_eq!(steps.len(), 1);
+        assert_eq!(steps[0].get("step").unwrap().as_usize().unwrap(), 1);
+        // f32 -> f64 widening is exact, so the loss round-trips bit-exactly
+        let loss = steps[0].get("loss").unwrap().as_f64().unwrap();
+        assert_eq!(loss as f32, 0.1f32 + 0.2f32);
+    }
+}

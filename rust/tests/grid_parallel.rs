@@ -33,13 +33,13 @@ fn sweep(base_seed: u64, opts: &SweepOpts) -> grid::SweepOutcome {
     .unwrap()
 }
 
-/// Exact bit pattern of a grid (None = n/a cell).
+/// Exact bit pattern of a grid (None = n/a or aborted cell).
 fn bits(g: &GridResult) -> Vec<Option<(usize, u64, u64, u64)>> {
     g.outcomes
         .iter()
         .flatten()
         .map(|c| {
-            c.eval.map(|e| {
+            c.eval.ok().map(|e| {
                 (
                     e.n,
                     e.top1_err.to_bits(),

@@ -1,11 +1,14 @@
 //! Property tests over the testutil harness: the fixed-point invariants
 //! the whole stack rests on, randomised across formats/shapes/seeds.
 
-use fxpnet::fixedpoint::vector::{quantize_slice, quantized, sqnr_db};
+use fxpnet::fixedpoint::vector::{
+    quantize_slice, quantize_slice_counted, quantized, sqnr_db,
+};
 use fxpnet::fixedpoint::{Fx, QFormat, RoundMode};
 use fxpnet::inference::ops;
 use fxpnet::quant::calib::{sqnr_optimal_empirical, CalibMethod, LayerStats};
 use fxpnet::testutil::{check, gen};
+use fxpnet::util::rng::Rng;
 
 #[test]
 fn prop_quantize_idempotent() {
@@ -220,6 +223,142 @@ fn prop_requant_i64_matches_wideacc() {
         }
         Ok(())
     });
+}
+
+// ---- saturation counters (training-stability telemetry) -------------------
+
+/// The counted quantizer's saturation tally is *exact* on a hand-built
+/// fixture: values pushed past the format bounds are counted, everything
+/// in range is not.  A Q4 accumulator fed max-magnitude codes is the
+/// paper's canonical saturating case.
+#[test]
+fn saturation_counter_exact_on_saturating_fixture() {
+    let fmt = QFormat::new(4, 2).unwrap(); // range [-2.0, 1.75], step 0.25
+    // 3 saturating values (beyond either bound), 4 in-range ones
+    let mut xs = vec![
+        fmt.max_value() * 2.0,
+        fmt.min_value() * 2.0,
+        fmt.max_value() + fmt.step(),
+        0.0,
+        fmt.max_value(),
+        fmt.min_value(),
+        0.5,
+    ];
+    let expect = quantized(&xs, fmt, RoundMode::NearestHalfUp, None);
+    let sat = quantize_slice_counted(&mut xs, fmt, RoundMode::NearestHalfUp, None);
+    assert_eq!(sat, 3);
+    // the counted path is a pure observer: identical codes out
+    assert_eq!(xs, expect);
+
+    // non-saturating fixture: zero, exactly
+    let mut ys = vec![0.0f32, fmt.step(), -fmt.step(), fmt.max_value()];
+    assert_eq!(
+        quantize_slice_counted(&mut ys, fmt, RoundMode::NearestHalfUp, None),
+        0
+    );
+}
+
+/// Counter totals are invariant under batch splitting: counting a slice
+/// equals the sum over any split of it (u64 addition is associative, so
+/// the threaded per-chunk tallies can never drift from the serial one).
+#[test]
+fn prop_saturation_count_invariant_under_batch_split() {
+    check("sat(xs) == sat(xs[..k]) + sat(xs[k..])", 200, |rng| {
+        let fmt = gen::qformat(rng);
+        let n = 1 + gen::len(rng, 300);
+        let xs = gen::normal_vec(rng, n, fmt.max_value().abs().max(1.0) * 2.0);
+        let mut whole = xs.clone();
+        let total =
+            quantize_slice_counted(&mut whole, fmt, RoundMode::NearestHalfUp, None);
+        let k = rng.below(n + 1);
+        let (mut lo, mut hi) = (xs[..k].to_vec(), xs[k..].to_vec());
+        let split = quantize_slice_counted(&mut lo, fmt, RoundMode::NearestHalfUp, None)
+            + quantize_slice_counted(&mut hi, fmt, RoundMode::NearestHalfUp, None);
+        if total != split {
+            return Err(format!("{fmt}: whole {total} != split {split} (k={k})"));
+        }
+        if lo != whole[..k] || hi != whole[k..] {
+            return Err(format!("{fmt}: split changed the quantized values"));
+        }
+        Ok(())
+    });
+}
+
+/// The counted stochastic quantizer consumes exactly the same RNG stream
+/// as the uncounted one -- counting must never shift any rounding draw
+/// (the delegation `quantize_slice -> quantize_slice_counted` is only
+/// sound if this holds).
+#[test]
+fn prop_counted_stochastic_quantizer_preserves_rng_stream() {
+    check("counted and uncounted stochastic paths agree", 100, |rng| {
+        let fmt = gen::qformat(rng);
+        let n = 1 + gen::len(rng, 400);
+        let xs = gen::normal_vec(rng, n, 4.0);
+        let seed = rng.next_u64();
+        let (mut a, mut b) = (xs.clone(), xs.clone());
+        let mut ra = Rng::new(seed);
+        let mut rb = Rng::new(seed);
+        quantize_slice(&mut a, fmt, RoundMode::Stochastic, Some(&mut ra));
+        quantize_slice_counted(&mut b, fmt, RoundMode::Stochastic, Some(&mut rb));
+        if a != b {
+            return Err(format!("{fmt}: outputs diverged"));
+        }
+        // the streams end in the same state too
+        if ra.next_u64() != rb.next_u64() {
+            return Err(format!("{fmt}: RNG stream shifted"));
+        }
+        Ok(())
+    });
+}
+
+/// The counted accumulator requantizers agree with their uncounted
+/// originals on both the code and the saturation verdict, and the
+/// verdict is exact: saturated iff the unclamped code left the range.
+#[test]
+fn prop_counted_requantizers_agree_and_flag_exactly() {
+    use fxpnet::fixedpoint::value::WideAcc;
+    check("requant_i64_counted == requantize_counted", 200, |rng| {
+        let fmt = gen::qformat(rng);
+        let acc_frac = fmt.frac as i32 + rng.below(8) as i32;
+        // mix magnitudes so both saturating and in-range cases occur
+        let scale = 10f64.powi(rng.below(9) as i32);
+        let acc_val = (rng.normal() * scale) as i64;
+        let (code_i, sat_i) = ops::requant_i64_counted(acc_val, acc_frac, fmt);
+        let wa = WideAcc { acc: acc_val as i128, frac: acc_frac };
+        let (fx, sat_w) = wa.requantize_counted(fmt, RoundMode::NearestHalfUp, None);
+        if code_i as i64 != fx.code || sat_i != sat_w {
+            return Err(format!(
+                "{fmt} acc={acc_val}@{acc_frac}: ({code_i}, {sat_i}) vs \
+                 ({}, {sat_w})",
+                fx.code
+            ));
+        }
+        // uncounted paths unchanged
+        if ops::requant_i64(acc_val, acc_frac, fmt) != code_i
+            || wa.requantize(fmt, RoundMode::NearestHalfUp, None).code != fx.code
+        {
+            return Err(format!("{fmt}: counted/uncounted code mismatch"));
+        }
+        // exactness: the flag means the clamp actually bit
+        let sat_expected = fx.code == fmt.qmin() || fx.code == fmt.qmax();
+        if sat_i && !sat_expected {
+            return Err(format!(
+                "{fmt}: flagged saturated but code {} is interior",
+                fx.code
+            ));
+        }
+        Ok(())
+    });
+    // hand-built Q4 accumulator at max magnitude: provably saturating
+    let fmt = QFormat::new(4, 2).unwrap();
+    let (code, sat) = ops::requant_i64_counted(i64::MAX / 2, fmt.frac as i32, fmt);
+    assert!(sat);
+    assert_eq!(code as i64, fmt.qmax());
+    let (code, sat) = ops::requant_i64_counted(i64::MIN / 2, fmt.frac as i32, fmt);
+    assert!(sat);
+    assert_eq!(code as i64, fmt.qmin());
+    let (_, sat) = ops::requant_i64_counted(1, fmt.frac as i32, fmt);
+    assert!(!sat);
 }
 
 #[test]

@@ -10,7 +10,7 @@ use fxpnet::coordinator::backend::{Backend, XlaBackend};
 use fxpnet::coordinator::config::RunCfg;
 use fxpnet::coordinator::evaluator::EvalResult;
 use fxpnet::coordinator::grid::{self, GridRunner, SweepOpts};
-use fxpnet::coordinator::regimes::{self, CellCtx, Regime};
+use fxpnet::coordinator::regimes::{self, CellCtx, CellEval, Regime};
 use fxpnet::coordinator::trainer::{upd_all, Trainer};
 use fxpnet::data::loader::LoaderCfg;
 use fxpnet::data::synth::Dataset;
@@ -77,21 +77,22 @@ fn all_regimes_produce_outcomes() {
     let w = WidthSpec::Bits(8);
     let a = WidthSpec::Bits(8);
 
-    let noft = regimes::run_no_finetune(&ctx, &f.base, w, a).unwrap().unwrap();
+    let noft =
+        regimes::run_no_finetune(&ctx, &f.base, w, a).unwrap().ok().unwrap();
     assert!(noft.top1_err <= 1.0 && noft.mean_loss.is_finite());
 
     let vanilla = regimes::run_vanilla(&ctx, &f.base, w, a).unwrap();
-    assert!(vanilla.is_some());
+    assert!(vanilla.is_ok());
 
     let p1net = regimes::train_float_act_net(&ctx, &f.base, w).unwrap().unwrap();
-    let p1 = regimes::run_prop1(&ctx, &p1net, w, a).unwrap().unwrap();
+    let p1 = regimes::run_prop1(&ctx, &p1net, w, a).unwrap().ok().unwrap();
     assert!(p1.mean_loss.is_finite());
 
     let p2 = regimes::run_prop2(&ctx, &p1net, w, a, 1).unwrap();
-    assert!(p2.is_some());
+    assert!(p2.is_ok());
 
     let p3 = regimes::run_prop3(&ctx, &p1net, w, a).unwrap();
-    assert!(p3.is_some());
+    assert!(p3.is_ok());
 }
 
 #[test]
@@ -123,7 +124,7 @@ fn grid_runner_single_cells_and_cache() {
     let c1 = runner
         .run_cell(Regime::NoFinetune, WidthSpec::Bits(4), WidthSpec::Bits(4))
         .unwrap();
-    assert!(c1.eval.is_some());
+    assert!(c1.eval.is_ok());
     // prop1 twice with the same weight width: cache must avoid retraining
     let t0 = std::time::Instant::now();
     runner
@@ -152,6 +153,7 @@ fn outcome_cell_strings() {
         WidthSpec::Float,
     )
     .unwrap()
+    .ok()
     .unwrap();
     // 60-step tiny net: better than chance (90%)
     assert!(out.top1_err < 0.9, "{out}");
@@ -188,9 +190,9 @@ fn panicked_and_diverged_cells_are_isolated() {
                 return Err(FxpError::config("simulated infra failure"));
             }
             if job.w == WidthSpec::Bits(4) && job.a == WidthSpec::Bits(4) {
-                return Ok(None); // ordinary divergence
+                return Ok(CellEval::Na); // ordinary divergence
             }
-            Ok(Some(fake_eval(job.seed)))
+            Ok(CellEval::Ok(fake_eval(job.seed)))
         },
     )
     .unwrap();
@@ -205,12 +207,12 @@ fn panicked_and_diverged_cells_are_isolated() {
         (WidthSpec::Bits(4), WidthSpec::Bits(4)),
     ] {
         let c = g.cell(dead.0, dead.1).unwrap();
-        assert!(c.eval.is_none(), "{dead:?} should be n/a");
+        assert_eq!(c.eval, CellEval::Na, "{dead:?} should be n/a");
         assert_eq!(c.cell_str(1), "n/a");
     }
     let mut alive = 0;
     for row in &g.outcomes {
-        alive += row.iter().filter(|c| c.eval.is_some()).count();
+        alive += row.iter().filter(|c| c.eval.is_ok()).count();
     }
     assert_eq!(alive, 13);
 }
@@ -230,7 +232,7 @@ fn single_worker_survives_repeated_panics() {
             if job.a == WidthSpec::Bits(4) {
                 panic!("whole row dies");
             }
-            Ok(Some(fake_eval(job.seed)))
+            Ok(CellEval::Ok(fake_eval(job.seed)))
         },
     )
     .unwrap();
@@ -238,7 +240,7 @@ fn single_worker_survives_repeated_panics() {
     assert_eq!(sweep.failed, 4, "the a=4 row");
     for row in &sweep.grid.outcomes {
         for c in row {
-            assert_eq!(c.eval.is_none(), c.a == WidthSpec::Bits(4));
+            assert_eq!(!c.eval.is_ok(), c.a == WidthSpec::Bits(4));
         }
     }
 }

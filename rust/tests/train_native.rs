@@ -12,9 +12,13 @@ use fxpnet::coordinator::config::RunCfg;
 use fxpnet::coordinator::grid::{
     self, p1_net_path, GridResult, ParallelGridRunner, SweepOpts,
 };
-use fxpnet::coordinator::regimes::Regime;
+use fxpnet::coordinator::regimes::{CellEval, Regime};
+use fxpnet::coordinator::report;
 use fxpnet::coordinator::shard;
-use fxpnet::coordinator::trainer::run_session;
+use fxpnet::coordinator::trainer::{
+    run_session, run_session_with, AbortPolicy, AbortReason, TrainSession,
+};
+use fxpnet::train::telemetry::TelemetryLog;
 use fxpnet::data::loader::LoaderCfg;
 use fxpnet::data::synth::Dataset;
 use fxpnet::model::params::ParamSet;
@@ -32,13 +36,13 @@ fn temp_dir(name: &str) -> PathBuf {
     dir
 }
 
-/// Exact bit pattern of a grid (None = n/a cell).
+/// Exact bit pattern of a grid (None = n/a or aborted cell).
 fn bits(g: &GridResult) -> Vec<Option<(usize, u64, u64, u64)>> {
     g.outcomes
         .iter()
         .flatten()
         .map(|c| {
-            c.eval.map(|e| {
+            c.eval.ok().map(|e| {
                 (
                     e.n,
                     e.top1_err.to_bits(),
@@ -48,6 +52,11 @@ fn bits(g: &GridResult) -> Vec<Option<(usize, u64, u64, u64)>> {
             })
         })
         .collect()
+}
+
+/// Full per-cell outcomes of a grid, abort provenance included.
+fn evals(g: &GridResult) -> Vec<CellEval> {
+    g.outcomes.iter().flatten().map(|c| c.eval).collect()
 }
 
 // ---- gradient checks ------------------------------------------------------
@@ -413,6 +422,320 @@ fn p1_nets_persist_beside_cell_cache_and_replay() {
     };
     let second = runner.run_sweep(Regime::Prop1, &opts2).unwrap();
     assert_eq!(bits(&reference.grid), bits(&second.grid));
+}
+
+// ---- training-stability telemetry + early abort ---------------------------
+
+/// Open a tiny fine-tuning session at cell (w, a): real calibration
+/// statistics, fixed seeds -- only `lr` and `threads` vary per test.
+fn tiny_session(
+    lr: f32,
+    threads: usize,
+    w: WidthSpec,
+    a: WidthSpec,
+) -> Box<dyn TrainSession> {
+    let backend = NativeBackend::new();
+    let spec = backend.arch("tiny").unwrap();
+    let params = ParamSet::init(&spec, 11);
+    let train = Dataset::generate(64, 16, 16, 7);
+    let a_stats = backend.activation_stats("tiny", &params, &train, 1).unwrap();
+    let nq = NetQuant::for_cell(
+        w,
+        a,
+        &params.weight_stats(),
+        &a_stats,
+        CalibMethod::SqnrGaussian,
+    )
+    .unwrap();
+    let upd = vec![1.0; spec.num_layers];
+    backend
+        .new_session(SessionCfg {
+            arch: "tiny",
+            params: &params,
+            nq: &nq,
+            upd: &upd,
+            lr,
+            momentum: 0.9,
+            data: train,
+            loader: LoaderCfg { batch: 16, augment: true, max_shift: 2, seed: 3 },
+            max_loss: 20.0,
+            seed: 13,
+            threads,
+        })
+        .unwrap()
+}
+
+/// The telemetry determinism pin: the full per-layer stats stream -- not
+/// just the loss history -- serialises byte-identically for any
+/// `--threads` count.
+#[test]
+fn telemetry_stream_bit_identical_across_threads() {
+    let run = |threads: usize| {
+        let mut s =
+            tiny_session(0.02, threads, WidthSpec::Bits(4), WidthSpec::Bits(8));
+        let mut tlog = TelemetryLog::default();
+        let out = run_session_with(&mut *s, 8, 1, None, Some(&mut tlog)).unwrap();
+        (out, tlog)
+    };
+    let (ref_out, ref_log) = run(1);
+    assert!(!ref_out.diverged);
+    assert_eq!(ref_log.len(), 8);
+    // the stream carries real per-layer content: a quantized layer with
+    // elements flowing through both quantizer families
+    let probe = &ref_log.steps[0];
+    assert!(probe.layers.iter().any(|l| l.quantized && l.n_w > 0));
+    assert!(probe.layers.iter().any(|l| l.n_a > 0));
+    assert!(probe.min_upd_to_step().is_some());
+    let ref_json = ref_log.to_json().to_string();
+    for threads in [2usize, 4] {
+        let (out, tlog) = run(threads);
+        assert_eq!(ref_out.history, out.history);
+        assert_eq!(
+            ref_json,
+            tlog.to_json().to_string(),
+            "telemetry stream differs between 1 and {threads} threads"
+        );
+    }
+}
+
+/// Telemetry is a pure observer: attaching a sink must not change what
+/// the session trains (it consumes no RNG draws, writes no tensors).
+#[test]
+fn telemetry_never_perturbs_training() {
+    let mut plain =
+        tiny_session(0.02, 2, WidthSpec::Bits(4), WidthSpec::Bits(8));
+    let silent = run_session(&mut *plain, 8, 1).unwrap();
+    let mut observed =
+        tiny_session(0.02, 2, WidthSpec::Bits(4), WidthSpec::Bits(8));
+    let mut tlog = TelemetryLog::default();
+    let loud =
+        run_session_with(&mut *observed, 8, 1, None, Some(&mut tlog)).unwrap();
+    assert_eq!(silent.history, loud.history);
+    assert_eq!(tlog.len(), 8);
+    for (h, s) in loud.history.iter().zip(&tlog.steps) {
+        assert_eq!(h.1.to_bits(), s.loss.to_bits());
+    }
+}
+
+/// A doomed session aborts with the same reason at the same step for
+/// every thread count, and its telemetry is bit-identical to the
+/// reference (no-policy) run over every step both executed.
+#[test]
+fn abort_decision_deterministic_and_prefix_identical() {
+    let policy = AbortPolicy::default();
+    let run = |threads: usize, policy: Option<&AbortPolicy>| {
+        let mut s =
+            tiny_session(1000.0, threads, WidthSpec::Float, WidthSpec::Float);
+        let mut tlog = TelemetryLog::default();
+        let out =
+            run_session_with(&mut *s, 30, 1, policy, Some(&mut tlog)).unwrap();
+        (out, tlog)
+    };
+    let (aborted, alog) = run(1, Some(&policy));
+    let (reason, step) = aborted.aborted.expect("lr=1000 run did not abort");
+    assert_eq!(reason, AbortReason::NanLoss);
+    assert!(aborted.diverged);
+    assert!(step < 30, "abort saved no steps");
+    for threads in [2usize, 4] {
+        let (out, tlog) = run(threads, Some(&policy));
+        assert_eq!(out.aborted, Some((reason, step)));
+        assert_eq!(
+            alog.to_json().to_string(),
+            tlog.to_json().to_string(),
+            "abort-path telemetry differs between 1 and {threads} threads"
+        );
+    }
+    // re-run with the policy off: the trajectory is untouched -- the
+    // legacy divergence check stops at the very same step with the very
+    // same stats, the outcome just loses its abort provenance
+    let (full, flog) = run(1, None);
+    assert!(full.diverged);
+    assert_eq!(full.aborted, None);
+    assert_eq!(aborted.history, full.history);
+    assert!(flog.len() >= alog.len());
+    for (i, st) in alog.steps.iter().enumerate() {
+        assert_eq!(st, &flog.steps[i], "stats diverge at step {i}");
+    }
+}
+
+/// Regression pin for the CI gate: the healthy `fxpnet train --gate`
+/// configuration (the `fixed_point_training_reduces_loss` cell) never
+/// trips the default abort predicates.
+#[test]
+fn healthy_gate_run_never_trips_default_abort_policy() {
+    let backend = NativeBackend::new();
+    let spec = backend.arch("tiny").unwrap();
+    let params = ParamSet::init(&spec, 42);
+    let train = Dataset::generate(128, 16, 16, 91);
+    let a_stats = backend.activation_stats("tiny", &params, &train, 2).unwrap();
+    let nq = NetQuant::for_cell(
+        WidthSpec::Bits(8),
+        WidthSpec::Bits(8),
+        &params.weight_stats(),
+        &a_stats,
+        CalibMethod::SqnrGaussian,
+    )
+    .unwrap();
+    let upd = vec![1.0; spec.num_layers];
+    let mut s = backend
+        .new_session(SessionCfg {
+            arch: "tiny",
+            params: &params,
+            nq: &nq,
+            upd: &upd,
+            lr: 0.03,
+            momentum: 0.9,
+            data: train,
+            loader: LoaderCfg { batch: 16, augment: false, max_shift: 0, seed: 1 },
+            max_loss: 30.0,
+            seed: 13,
+            threads: 2,
+        })
+        .unwrap();
+    let policy = AbortPolicy::default();
+    let mut tlog = TelemetryLog::default();
+    let out =
+        run_session_with(&mut *s, 40, 1, Some(&policy), Some(&mut tlog)).unwrap();
+    assert_eq!(out.aborted, None, "healthy run tripped {:?}", out.aborted);
+    assert!(!out.diverged, "{:?}", out.history);
+    assert_eq!(tlog.len(), 40);
+    // and the margins are real, not accidental: saturation stays well
+    // under the abort threshold on every step
+    for st in &tlog.steps {
+        assert!(
+            st.sat_rate() < policy.sat_rate,
+            "step {}: sat_rate {} >= {}",
+            st.step,
+            st.sat_rate(),
+            policy.sat_rate
+        );
+    }
+}
+
+/// The end-to-end sweep contract: with early abort on (the default), a
+/// known-divergent cell is cut short -- rendered `div@N`, persisted with
+/// its reason in the cell cache -- while the published table stays
+/// byte-identical to a `--no-early-abort` reference run and every
+/// completed cell stays bit-identical.
+#[test]
+fn doomed_cells_abort_early_and_complete_cells_match_reference() {
+    let dir = temp_dir("abortsweep");
+    let mk = |early_abort: bool| {
+        let mut r = native_runner(0);
+        r.cfg.lr = 1000.0; // doom the float cells; quantized clamps survive
+        r.cfg.finetune_steps = 12;
+        r.cfg.early_abort = early_abort;
+        r
+    };
+    let opts = SweepOpts {
+        workers: 2,
+        cache_path: Some(dir.join("cache.json")),
+        ..Default::default()
+    };
+    let abort_on = mk(true).run_sweep(Regime::Vanilla, &opts).unwrap();
+    let reference = mk(false)
+        .run_sweep(Regime::Vanilla, &SweepOpts { workers: 2, ..Default::default() })
+        .unwrap();
+
+    let mut saw_abort = false;
+    let cells = abort_on.grid.outcomes.iter().flatten();
+    let ref_cells = reference.grid.outcomes.iter().flatten();
+    for (cell, ref_cell) in cells.zip(ref_cells) {
+        match cell.eval {
+            CellEval::Aborted { reason, step } => {
+                saw_abort = true;
+                assert_eq!(reason, AbortReason::NanLoss);
+                assert!(
+                    step < 12,
+                    "cell (w={:?}, a={:?}) aborted at step {step}, not early",
+                    cell.w,
+                    cell.a
+                );
+                assert_eq!(cell.cell_str(1), format!("div@{step}"));
+                // the reference run burns the same trajectory to n/a
+                assert_eq!(ref_cell.eval, CellEval::Na);
+            }
+            CellEval::Ok(e) => {
+                let r = ref_cell
+                    .eval
+                    .ok()
+                    .expect("reference run lost a completed cell");
+                assert_eq!(e.n, r.n);
+                assert_eq!(e.top1_err.to_bits(), r.top1_err.to_bits());
+                assert_eq!(e.top5_err.to_bits(), r.top5_err.to_bits());
+                assert_eq!(e.mean_loss.to_bits(), r.mean_loss.to_bits());
+            }
+            CellEval::Na => assert_eq!(ref_cell.eval, CellEval::Na),
+        }
+    }
+    assert!(saw_abort, "no cell aborted under lr=1000");
+
+    // published table JSON: byte-identical (Aborted and Na both render
+    // as null metrics -- provenance lives in the cache + report only)
+    assert_eq!(
+        report::grid_to_json(&abort_on.grid).to_string(),
+        report::grid_to_json(&reference.grid).to_string()
+    );
+    // abort provenance is in the cell cache...
+    let cache_text = std::fs::read_to_string(dir.join("cache.json")).unwrap();
+    assert!(cache_text.contains("aborted"), "{cache_text}");
+    assert!(cache_text.contains(AbortReason::NanLoss.as_str()), "{cache_text}");
+    // ...and in the stability report, which regenerates byte-identically
+    let report_json = report::stability_report_json(&abort_on.grid);
+    assert!(report_json.get("summary").unwrap().get("aborted").unwrap().as_usize().unwrap() >= 1);
+    assert_eq!(
+        report_json.to_string(),
+        report::stability_report_json(&abort_on.grid).to_string()
+    );
+}
+
+/// Abort decisions are a pure function of the cell, not of how the
+/// sweep is scheduled: sharded halves merge to the exact unsharded
+/// outcome (reasons and abort steps included), and `--threads 2`
+/// reproduces it too.
+#[test]
+fn abort_decisions_identical_across_shards_and_threads() {
+    let dir = temp_dir("abortshard");
+    let mk = || {
+        let mut r = native_runner(0);
+        r.cfg.lr = 1000.0;
+        r.cfg.finetune_steps = 12;
+        r
+    };
+    let unsharded = mk()
+        .run_sweep(Regime::Vanilla, &SweepOpts { workers: 2, ..Default::default() })
+        .unwrap();
+    assert!(
+        evals(&unsharded.grid)
+            .iter()
+            .any(|e| matches!(e, CellEval::Aborted { .. })),
+        "fixture stopped producing aborts"
+    );
+
+    let base = dir.join("cache.json");
+    let files: Vec<PathBuf> = (0..2)
+        .map(|index| {
+            let opts = SweepOpts {
+                workers: 2,
+                shard: Some((index, 2)),
+                cache_path: Some(base.clone()),
+                split_cache: true,
+                ..Default::default()
+            };
+            mk().run_sweep(Regime::Vanilla, &opts).unwrap();
+            opts.cache_file().unwrap()
+        })
+        .collect();
+    let merged = shard::merge_files(&files, None).unwrap();
+    assert!(merged.is_complete());
+    assert_eq!(evals(&unsharded.grid), evals(&merged.to_grid()));
+
+    let mut threaded = mk();
+    threaded.cfg.threads = 2;
+    let out = threaded
+        .run_sweep(Regime::Vanilla, &SweepOpts { workers: 2, ..Default::default() })
+        .unwrap();
+    assert_eq!(evals(&unsharded.grid), evals(&out.grid));
 }
 
 // ---- grid merge --prune ---------------------------------------------------
