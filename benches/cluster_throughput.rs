@@ -1,0 +1,211 @@
+//! Cluster scheduling overhead: the same CPU-bound synthetic sweep run
+//! through the in-process worker pool (`grid::run_sweep_with`) and
+//! through a real loopback TCP cluster (`fxpnet cluster` coordinator +
+//! worker threads), at growing worker counts.
+//!
+//! Cells burn seeded stochastic-rounding work through the real
+//! `fixedpoint::vector` path, so the bench runs in the offline build
+//! and the comparison isolates what the wire protocol, heartbeats, and
+//! pull-scheduling cost over a shared-memory pool.  Every cluster run's
+//! cell cache must stay byte-identical to the pooled reference -- the
+//! determinism contract is asserted on every bench run, not just in CI.
+//!
+//! Scale via:
+//! * `FXP_BENCH_CELL_N`          -- floats quantized per round (default 100k)
+//! * `FXP_BENCH_CELL_ROUNDS`     -- rounds per cell (default 10)
+//! * `FXP_BENCH_CLUSTER_WORKERS` -- highest worker count tried (default 4)
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::AtomicBool;
+use std::time::{Duration, Instant};
+
+use fxpnet::bench::fixtures::env_usize;
+use fxpnet::bench::Table;
+use fxpnet::cluster::{
+    self, run_coordinator, run_worker, CellExec, ClusterOpts, HeartbeatCfg,
+    WorkerOpts,
+};
+use fxpnet::coordinator::config::RunCfg;
+use fxpnet::coordinator::evaluator::EvalResult;
+use fxpnet::coordinator::grid::{self, CellJob, SweepOpts};
+use fxpnet::coordinator::regimes::{CellEval, CellResult, Regime};
+use fxpnet::fixedpoint::vector::quantize_slice;
+use fxpnet::fixedpoint::{QFormat, RoundMode};
+use fxpnet::util::rng::Rng;
+use fxpnet::util::timer::Stopwatch;
+
+const ARCH: &str = "bench";
+const SEED: u64 = 42;
+
+fn fp() -> u64 {
+    cluster::sweep_fingerprint(ARCH, Regime::Vanilla, SEED, true, &RunCfg::smoke())
+}
+
+/// One CPU-bound cell: seeded rounding work folded into a result that
+/// is a pure function of `job.seed` -- the property that makes the
+/// pooled and clustered caches comparable byte for byte.
+fn burn_cell(job: &CellJob, n: usize, rounds: usize) -> fxpnet::Result<CellResult> {
+    let mut rng = Rng::new(job.seed);
+    let fmt = QFormat::new(8, 4)?;
+    let mut xs: Vec<f32> = (0..n).map(|_| rng.uniform_in(-6.0, 6.0)).collect();
+    let mut acc = 0.0f64;
+    for _ in 0..rounds {
+        quantize_slice(&mut xs, fmt, RoundMode::Stochastic, Some(&mut rng));
+        acc += xs.iter().map(|&v| v as f64).sum::<f64>();
+        for v in xs.iter_mut() {
+            *v += rng.uniform_in(-0.1, 0.1);
+        }
+    }
+    Ok(CellEval::Ok(EvalResult {
+        n,
+        top1_err: (acc.abs() % 1.0).min(0.999),
+        top5_err: 0.0,
+        mean_loss: acc.abs() % 10.0,
+    }))
+}
+
+struct BurnExec {
+    n: usize,
+    rounds: usize,
+}
+
+impl CellExec for BurnExec {
+    fn run(&mut self, job: &CellJob) -> fxpnet::Result<CellResult> {
+        burn_cell(job, self.n, self.rounds)
+    }
+}
+
+/// The in-process pooled sweep: the scheduling baseline.
+fn timed_pool(dir: &Path, workers: usize, n: usize, rounds: usize) -> (f64, PathBuf) {
+    let cache = dir.join("pool_cache.json");
+    let sw = Stopwatch::start();
+    let out = grid::run_sweep_with(
+        Regime::Vanilla,
+        ARCH,
+        SEED,
+        &SweepOpts {
+            workers,
+            cache_path: Some(cache.clone()),
+            ..Default::default()
+        },
+        |_| Ok(()),
+        |_, job| burn_cell(job, n, rounds),
+    )
+    .expect("pooled sweep");
+    assert!(out.is_complete());
+    (sw.elapsed().as_secs_f64() * 1e3, cache)
+}
+
+/// The same sweep through a real loopback TCP cluster.
+fn timed_cluster(dir: &Path, workers: usize, n: usize, rounds: usize) -> (f64, PathBuf) {
+    let cdir = dir.join(format!("cluster_{workers}"));
+    std::fs::create_dir_all(&cdir).expect("mkdir");
+    let opts = ClusterOpts {
+        listen: "127.0.0.1:0".into(),
+        port_file: Some(cdir.join("port")),
+        hb: HeartbeatCfg {
+            interval: Duration::from_millis(100),
+            deadline: Duration::from_millis(2000),
+        },
+        cache_path: cdir.join("cache.json"),
+        ..ClusterOpts::default()
+    };
+    let shutdown = AtomicBool::new(false);
+    let sw = Stopwatch::start();
+    let outcome = std::thread::scope(|s| {
+        let coord = s.spawn(|| {
+            run_coordinator(Regime::Vanilla, ARCH, SEED, fp(), &opts, &shutdown)
+        });
+        let port_file = cdir.join("port");
+        let deadline = Instant::now() + Duration::from_secs(10);
+        let addr = loop {
+            if let Ok(a) = std::fs::read_to_string(&port_file) {
+                let a = a.trim();
+                if !a.is_empty() {
+                    break a.to_string();
+                }
+            }
+            assert!(Instant::now() < deadline, "no port file");
+            std::thread::sleep(Duration::from_millis(5));
+        };
+        let handles: Vec<_> = (0..workers)
+            .map(|i| {
+                let connect = addr.clone();
+                s.spawn(move || {
+                    let wopts = WorkerOpts {
+                        connect,
+                        name: format!("bench-w{i}"),
+                        ..WorkerOpts::default()
+                    };
+                    run_worker(
+                        Regime::Vanilla,
+                        SEED,
+                        fp(),
+                        &mut BurnExec { n, rounds },
+                        &wopts,
+                    )
+                })
+            })
+            .collect();
+        let outcome = coord.join().expect("coordinator thread").expect("coordinator");
+        for h in handles {
+            let report = h.join().expect("worker thread").expect("worker");
+            assert!(report.sweep_complete);
+        }
+        outcome
+    });
+    let ms = sw.elapsed().as_secs_f64() * 1e3;
+    assert!(outcome.summary.complete);
+    assert_eq!(outcome.summary.redispatched, 0, "no faults injected");
+    (ms, cdir.join("cache.json"))
+}
+
+fn main() {
+    fxpnet::util::logging::init();
+    let n = env_usize("FXP_BENCH_CELL_N", 100_000);
+    let rounds = env_usize("FXP_BENCH_CELL_ROUNDS", 10);
+    let max_workers = env_usize("FXP_BENCH_CLUSTER_WORKERS", 4).max(1);
+    let dir = std::env::temp_dir().join(format!("fxp_bench_cluster_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("mkdir");
+    println!(
+        "cluster throughput: 16 cells x {rounds} rounds x {n} floats, \
+         TCP loopback vs in-process pool"
+    );
+
+    // warm-up, then the pooled baseline at the top worker count
+    // (the cache's advisory lock creates each run directory on open)
+    let _ = timed_pool(&dir.join("warmup"), 1, n / 4, 2);
+    let (pool_ms, pool_cache) = timed_pool(&dir.join("pool"), max_workers, n, rounds);
+    let reference = std::fs::read(&pool_cache).expect("pool cache");
+
+    let mut t = Table::new(
+        "Cluster sweep vs in-process pool (16 cells)",
+        &["topology", "ms", "vs pool"],
+    );
+    t.row(vec![
+        format!("pool x{max_workers}"),
+        format!("{pool_ms:.1}"),
+        "1.00x".into(),
+    ]);
+    let mut w = 1usize;
+    while w <= max_workers {
+        let (ms, cache) = timed_cluster(&dir, w, n, rounds);
+        // the determinism contract: scheduling topology is invisible in
+        // the cache, byte for byte
+        assert_eq!(
+            std::fs::read(&cache).expect("cluster cache"),
+            reference,
+            "cluster cache (workers={w}) differs from the pooled reference"
+        );
+        t.row(vec![
+            format!("cluster x{w}"),
+            format!("{ms:.1}"),
+            format!("{:.2}x", pool_ms / ms.max(1e-9)),
+        ]);
+        w *= 2;
+    }
+    println!("{}", t.render());
+    println!("cache byte-identity: OK for every topology");
+    let _ = std::fs::remove_dir_all(&dir);
+}

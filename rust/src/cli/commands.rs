@@ -1,6 +1,7 @@
 //! CLI command implementations (thin orchestration over the library).
 
 use crate::cli::{artifacts_dir, parse_shard, Args};
+use crate::cluster;
 use crate::coordinator::backend::{Backend, BackendSpec, SessionCfg};
 use crate::coordinator::calibrate;
 use crate::coordinator::config::RunCfg;
@@ -37,6 +38,7 @@ pub fn dispatch(args: &Args) -> Result<i32> {
         "pretrain" => args.no_positionals().and_then(|()| pretrain(args)).map(ok),
         "train" => args.no_positionals().and_then(|()| train_cmd(args)).map(ok),
         "grid" => grid_cmd(args),
+        "cluster" => cluster_cmd(args),
         "eval" => args.no_positionals().and_then(|()| eval_cmd(args)).map(ok),
         "infer" => args.no_positionals().and_then(|()| infer(args)).map(ok),
         "mismatch" => args.no_positionals().and_then(|()| mismatch(args)).map(ok),
@@ -590,6 +592,244 @@ fn grid_merge(args: &Args) -> Result<i32> {
         eprintln!("pruned {} superseded shard cache file(s)", removed.len());
     }
     Ok(0)
+}
+
+/// `fxpnet cluster {coordinator|worker}`: subcommand routing.
+fn cluster_cmd(args: &Args) -> Result<i32> {
+    if args.positionals().len() > 1 {
+        return Err(FxpError::config(format!(
+            "unexpected argument '{}'",
+            args.positionals()[1]
+        )));
+    }
+    match args.positionals().first().map(String::as_str) {
+        Some("coordinator") => cluster_coordinator(args),
+        Some("worker") => cluster_worker(args).map(ok),
+        other => Err(FxpError::config(format!(
+            "cluster needs a role: `fxpnet cluster coordinator` or \
+             `fxpnet cluster worker`{}",
+            other.map(|o| format!(" (got '{o}')")).unwrap_or_default()
+        ))),
+    }
+}
+
+/// The regime/config/fingerprint triple both cluster roles derive from
+/// their own flags; the handshake compares the fingerprints so a
+/// mis-flagged worker is rejected instead of poisoning the sweep.
+fn cluster_sweep(args: &Args) -> Result<(Regime, String, RunCfg, u64)> {
+    let regime_s = args.require("regime")?;
+    let regime = Regime::parse(regime_s)
+        .ok_or_else(|| FxpError::config(format!("bad --regime '{regime_s}'")))?;
+    let arch = args.get_or("arch", "paper12");
+    // threads default 1: workers run one cell at a time but machines
+    // often run several worker processes; raise --threads explicitly
+    // for one-worker-per-machine pools (results are bit-identical)
+    let cfg = run_cfg(args, 1)?;
+    let fp = cluster::sweep_fingerprint(
+        &arch,
+        regime,
+        cfg.seed,
+        args.has("synthetic"),
+        &cfg,
+    );
+    Ok((regime, arch, cfg, fp))
+}
+
+/// `fxpnet cluster coordinator`: serve one regime's grid to TCP
+/// workers; write the same cache/table artifacts as `fxpnet grid`.
+/// Exit 0 = complete, 2 = drained (SIGTERM/ctrl-C) before completion.
+fn cluster_coordinator(args: &Args) -> Result<i32> {
+    let (regime, arch, cfg, fp) = cluster_sweep(args)?;
+    let out_dir = args.get_or("out", "results");
+    let cache_path = args
+        .get("cache")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| {
+            std::path::Path::new(&out_dir)
+                .join(format!("cache_table{}_{arch}.json", regime.table_number()))
+        });
+    if let Some(dir) = cache_path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let interval = args.u64_or("heartbeat-ms", 1000)?;
+    let deadline = args.u64_or("deadline-ms", 5000)?;
+    if deadline <= interval {
+        return Err(FxpError::config(format!(
+            "--deadline-ms {deadline} must exceed --heartbeat-ms {interval} \
+             (several intervals of slack, or one lost beat kills a worker)"
+        )));
+    }
+    let opts = cluster::ClusterOpts {
+        listen: args.get_or("listen", "127.0.0.1:0"),
+        port_file: args.get("port-file").map(std::path::PathBuf::from),
+        hb: cluster::HeartbeatCfg {
+            interval: std::time::Duration::from_millis(interval),
+            deadline: std::time::Duration::from_millis(deadline),
+        },
+        retry_cap: args.usize_or("retry-cap", 5)?.max(1),
+        backoff_base: std::time::Duration::from_millis(
+            args.u64_or("backoff-ms", 100)?,
+        ),
+        summary_path: args.get("summary").map(std::path::PathBuf::from),
+        cache_path,
+        lock: LockOpts {
+            wait: std::time::Duration::from_secs_f64(
+                (args.f32_or("lock-wait", 10.0)? as f64).max(0.0),
+            ),
+            ..Default::default()
+        },
+    };
+    let shutdown = cluster::install_drain_handler();
+    let outcome =
+        cluster::run_coordinator(regime, &arch, cfg.seed, fp, &opts, shutdown)?;
+    println!("{}", outcome.grid.render(cfg.topk));
+    let s = &outcome.summary;
+    log::info!(
+        "cluster sweep: {} computed, {} cached, {} redispatched, \
+         {} duplicates, {} worker deaths, {} handshakes",
+        s.computed,
+        s.cached,
+        s.redispatched,
+        s.duplicates,
+        s.worker_deaths,
+        s.workers
+    );
+    if let Some(path) = args.get("stability-report") {
+        report::save_stability_report(&outcome.grid, path)?;
+        println!("wrote stability report {path}");
+    }
+    if s.complete {
+        report::save_grid(&outcome.grid, &out_dir, cfg.topk)?;
+        Ok(0)
+    } else {
+        println!(
+            "drained before completion: {} of {} cells done; restart the \
+             coordinator with the same --cache to resume",
+            s.computed + s.cached,
+            s.cells
+        );
+        Ok(2)
+    }
+}
+
+/// The real-backend cell executor for cluster workers: wraps
+/// [`ParallelGridRunner::run_cell_job`], memoizing (and disk-caching)
+/// the per-width float-activation seed nets across the worker's life.
+struct BackendExec {
+    runner: ParallelGridRunner,
+    backend: Box<dyn Backend>,
+    p1: std::collections::HashMap<String, Option<ParamSet>>,
+    p1_dir: Option<std::path::PathBuf>,
+}
+
+impl cluster::CellExec for BackendExec {
+    fn run(&mut self, job: &grid::CellJob) -> Result<crate::coordinator::regimes::CellResult> {
+        self.runner.run_cell_job(
+            self.backend.as_ref(),
+            &mut self.p1,
+            self.p1_dir.as_deref(),
+            job,
+        )
+    }
+}
+
+/// Resolve the coordinator address: `--connect H:P` directly, or
+/// `--port-file F` polled until the coordinator writes it (the
+/// rendezvous for `--listen 127.0.0.1:0`).
+fn cluster_connect(args: &Args) -> Result<String> {
+    if let Some(c) = args.get("connect") {
+        return Ok(c.to_string());
+    }
+    let Some(pf) = args.get("port-file") else {
+        return Err(FxpError::config(
+            "cluster worker needs --connect H:P or --port-file F",
+        ));
+    };
+    let wait = std::time::Duration::from_secs(args.u64_or("port-wait", 30)?);
+    let start = std::time::Instant::now();
+    loop {
+        match std::fs::read_to_string(pf) {
+            Ok(s) if !s.trim().is_empty() => return Ok(s.trim().to_string()),
+            _ if start.elapsed() > wait => {
+                return Err(FxpError::config(format!(
+                    "--port-file {pf}: no coordinator address after \
+                     {}s; is the coordinator running?",
+                    wait.as_secs()
+                )));
+            }
+            _ => std::thread::sleep(std::time::Duration::from_millis(50)),
+        }
+    }
+}
+
+/// `fxpnet cluster worker`: pull cells from a coordinator until
+/// drained.  Sweep flags must match the coordinator's (fingerprint
+/// handshake); `--inject` arms deterministic fault injection.
+fn cluster_worker(args: &Args) -> Result<()> {
+    let (regime, arch, cfg, fp) = cluster_sweep(args)?;
+    let d = cluster::WorkerOpts::default();
+    let wopts = cluster::WorkerOpts {
+        connect: cluster_connect(args)?,
+        name: args.get_or("name", &d.name),
+        shard: args.get("shard").map(parse_shard).transpose()?,
+        fault: args
+            .get("inject")
+            .map(cluster::FaultSpec::parse)
+            .transpose()?
+            .unwrap_or_default(),
+        reconnect_cap: args.usize_or("reconnect", d.reconnect_cap)?,
+        reconnect_backoff: std::time::Duration::from_millis(
+            args.u64_or("reconnect-backoff-ms", 200)?,
+        ),
+    };
+    log::info!(
+        "cluster worker {} -> {} (regime {}, fingerprint {fp:016x})",
+        wopts.name,
+        wopts.connect,
+        regime.label()
+    );
+    let report = if args.has("synthetic") {
+        cluster::run_worker(regime, cfg.seed, fp, &mut cluster::SyntheticExec, &wopts)?
+    } else {
+        let spec = backend_spec(args)?;
+        let backend = spec.build_with_threads(cfg.threads)?;
+        let arch_spec = backend.arch(&arch)?;
+        let base = base_params(args, &arch_spec, backend.as_ref(), cfg.seed)?;
+        let (train, eval_set) = datasets(args, &arch_spec)?;
+        let a_stats =
+            backend.activation_stats(&arch, &base, &train, cfg.calib_batches)?;
+        // seed nets are disk-cached next to the sweep's artifacts so
+        // workers (and grid runs) share the retraining work
+        let out_dir = args.get_or("out", "results");
+        std::fs::create_dir_all(&out_dir)?;
+        let mut exec = BackendExec {
+            runner: ParallelGridRunner {
+                backend: spec,
+                arch: arch.clone(),
+                base,
+                a_stats,
+                train_data: train,
+                eval_data: eval_set,
+                cfg: cfg.clone(),
+            },
+            backend,
+            p1: std::collections::HashMap::new(),
+            p1_dir: Some(std::path::PathBuf::from(out_dir)),
+        };
+        cluster::run_worker(regime, cfg.seed, fp, &mut exec, &wopts)?
+    };
+    println!(
+        "worker {}: computed {} cells, delivered {}, {} reconnects; sweep \
+         complete: {}",
+        wopts.name,
+        report.computed,
+        report.delivered,
+        report.reconnects,
+        report.sweep_complete
+    );
+    Ok(())
 }
 
 /// `fxpnet eval`: single-cell evaluation of a checkpoint.

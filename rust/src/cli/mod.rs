@@ -11,6 +11,7 @@ pub mod commands;
 
 use std::collections::BTreeMap;
 
+use crate::coordinator::shard;
 use crate::error::{FxpError, Result};
 
 /// Flags that never take a value.  The parser needs this registry
@@ -210,6 +211,46 @@ COMMANDS
                              (refused while any cell is missing)
              [--stability-report F]  write the merged sweep's per-cell
                              stability report JSON
+  cluster    elastic multi-process/multi-machine sweeps over TCP: one
+             coordinator owns the sweep, workers pull cells and may
+             come, go, or die at any time.  Same cache/table bytes as a
+             single-process `grid` run.  (`grid plan` + `--shard` stays
+             as the static-scheduler escape hatch.)
+  cluster coordinator
+             serve one regime's grid to workers, write cache + table
+             --regime R [--arch A] [--seed S] [--synthetic]
+             [--listen H:P]     bind address (default 127.0.0.1:0)
+             [--port-file F]    write the bound host:port here (the
+                                rendezvous for port 0)
+             [--cache FILE]     cell cache, same schema/path default as
+                                `grid`; resume is always on (crash
+                                recovery)
+             [--out DIR]        table/report JSON on completion
+             [--summary F]      run-accounting JSON (re-dispatches,
+                                duplicates, worker deaths...)
+             [--retry-cap N]    max attempts per cell before the run
+                                fails hard (default 5)
+             [--backoff-ms MS]  re-dispatch backoff base, doubling per
+                                attempt (default 100)
+             [--heartbeat-ms MS] worker heartbeat interval (default 1000)
+             [--deadline-ms MS] silence declaring a worker dead
+                                (default 5000)
+             [--lock-wait S]    cache lock wait (default 10)
+             exit 0 = sweep complete; 2 = drained (SIGTERM/ctrl-C)
+             before completion
+  cluster worker
+             compute cells for a coordinator until drained
+             --connect H:P (or --port-file F to poll a coordinator's
+             port file); sweep flags (--regime/--arch/--seed/--steps/
+             --synthetic/...) MUST match the coordinator's -- a sweep
+             fingerprint is checked at handshake
+             [--name S]         worker identity (default host-pid)
+             [--shard I/N]      only compute this static slice
+             [--reconnect N]    reconnect attempts (default 8)
+             [--inject drop=P,delay=MS,kill-after=N]
+                                deterministic fault injection (chaos
+                                tests): drop each send with prob P,
+                                delay sends MS, die after N cells
   eval       evaluate a checkpoint at one grid cell
              --arch A --ckpt F --w {4|8|16|float} --a {4|8|16|float}
   infer      pure-integer inference + parity vs the XLA path
@@ -246,15 +287,26 @@ pub fn artifacts_dir(args: &Args) -> String {
         .unwrap_or_else(|| "artifacts".to_string())
 }
 
-/// Parse a `--shard I/N` value.
+/// Parse a `--shard I/N` value.  Shared by `grid --shard` and
+/// `cluster worker --shard`; rejection happens at parse time through
+/// [`shard::validate_shard`], the same rule the sweep itself enforces.
 pub fn parse_shard(s: &str) -> Result<(usize, usize)> {
-    let bad = || FxpError::config(format!("bad --shard '{s}': expected I/N with I < N"));
-    let (i, n) = s.split_once('/').ok_or_else(bad)?;
-    let index: usize = i.trim().parse().map_err(|_| bad())?;
-    let count: usize = n.trim().parse().map_err(|_| bad())?;
-    if count == 0 || index >= count {
-        return Err(bad());
-    }
+    let bad = |why: &str| {
+        FxpError::config(format!("bad --shard '{s}': {why}"))
+    };
+    let (i, n) = s
+        .split_once('/')
+        .ok_or_else(|| bad("expected I/N (e.g. 0/4)"))?;
+    let index: usize = i
+        .trim()
+        .parse()
+        .map_err(|_| bad(&format!("shard index '{}' is not an integer", i.trim())))?;
+    let count: usize = n
+        .trim()
+        .parse()
+        .map_err(|_| bad(&format!("shard count '{}' is not an integer", n.trim())))?;
+    shard::validate_shard(index, count)
+        .map_err(|e| FxpError::config(format!("--shard '{s}': {e}")))?;
     Ok((index, count))
 }
 
@@ -333,5 +385,14 @@ mod tests {
         assert!(parse_shard("1").is_err());
         assert!(parse_shard("a/b").is_err());
         assert!(parse_shard("-1/2").is_err());
+        // rejection is at parse time with a message naming the rule,
+        // via the same validate_shard the sweep itself enforces
+        let e = parse_shard("4/4").unwrap_err().to_string();
+        assert!(e.contains("index"), "unhelpful message: {e}");
+        assert!(e.contains("4/4"), "message must echo the input: {e}");
+        let e = parse_shard("0/0").unwrap_err().to_string();
+        assert!(e.contains("count must be > 0"), "unhelpful message: {e}");
+        let e = parse_shard("x/2").unwrap_err().to_string();
+        assert!(e.contains("not an integer"), "unhelpful message: {e}");
     }
 }

@@ -1,0 +1,761 @@
+//! The cluster coordinator: owns the sweep, serves cells to workers.
+//!
+//! One coordinator process binds a TCP listener, opens the sweep's
+//! [`ShardedCache`] (taking its advisory lock for the whole run), and
+//! hands out cells pull-style: a worker asks, the coordinator assigns.
+//! There is no push and no scheduler state on workers, so work-stealing
+//! falls out for free -- a fast worker simply asks more often.
+//!
+//! ## Failure model
+//!
+//! * **Worker death** is detected per connection: silence past the
+//!   heartbeat deadline, an EOF while a cell is in flight, or a protocol
+//!   violation all requeue the in-flight cell.  Requeued cells back off
+//!   exponentially (`backoff_base * 2^(attempt-2)`) and count against
+//!   [`ClusterOpts::retry_cap`] total attempts; exhausting the cap is a
+//!   hard error, not a silent n/a -- per-cell determinism means a cell
+//!   that keeps killing workers will keep doing so.
+//! * **Duplicate results** (a presumed-dead worker's result arriving
+//!   after a re-dispatch completed) are idempotent: cells are a pure
+//!   function of the seed tree, so the copies must agree bit-for-bit
+//!   ([`shard::cells_bit_equal`]); any mismatch is a hard error because
+//!   it means determinism itself is broken.
+//! * **Coordinator crash** is covered by the cache: every finished cell
+//!   is flushed through the same strict v4 [`CellCache`] the
+//!   single-process sweep writes (fsync + atomic rename), and a
+//!   restarted coordinator pre-fills from it -- resume is not optional
+//!   in cluster mode.
+//! * **Graceful drain**: on SIGTERM/ctrl-C the coordinator stops
+//!   assigning, answers `Drain` to requests, waits a bounded grace for
+//!   in-flight results, then exits reporting an incomplete sweep
+//!   (exit code 2 at the CLI, like `grid --check`).
+//!
+//! [`CellCache`]: crate::coordinator::report::CellCache
+
+use std::collections::HashMap;
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::cluster::heartbeat::{DeadlineClock, HeartbeatCfg};
+use crate::cluster::proto::{read_frame, write_frame, Frame, Msg, PROTO_VERSION};
+use crate::coordinator::grid::{grid_jobs, in_shard, CellJob, CellOutcome, GridResult};
+use crate::coordinator::regimes::{CellEval, CellResult, Regime};
+use crate::coordinator::report::{CellCache, CACHE_VERSION};
+use crate::coordinator::shard::{self, LockOpts, ShardedCache};
+use crate::error::{FxpError, Result};
+use crate::quant::policy::WidthSpec;
+use crate::util::json::Json;
+
+/// How often handler threads tick their sockets (read timeout) and the
+/// accept loop polls.
+const TICK: Duration = Duration::from_millis(20);
+
+/// `Wait` backoff suggested to workers when nothing is assignable.
+const WAIT_MS: u64 = 25;
+
+/// Coordinator knobs (`fxpnet cluster coordinator` flags).
+#[derive(Clone, Debug)]
+pub struct ClusterOpts {
+    /// Bind address; port 0 picks a free port (see `port_file`).
+    pub listen: String,
+    /// File to write the bound `host:port` to once listening -- the
+    /// rendezvous mechanism for `--listen 127.0.0.1:0`.
+    pub port_file: Option<PathBuf>,
+    pub hb: HeartbeatCfg,
+    /// Maximum total attempts per cell (first dispatch included).
+    pub retry_cap: usize,
+    /// Base of the exponential re-dispatch backoff.
+    pub backoff_base: Duration,
+    /// Where to write the run summary JSON.
+    pub summary_path: Option<PathBuf>,
+    /// The sweep's cell cache (same file/schema as `fxpnet grid`).
+    pub cache_path: PathBuf,
+    pub lock: LockOpts,
+}
+
+impl Default for ClusterOpts {
+    fn default() -> Self {
+        ClusterOpts {
+            listen: "127.0.0.1:0".into(),
+            port_file: None,
+            hb: HeartbeatCfg::default(),
+            retry_cap: 5,
+            backoff_base: Duration::from_millis(100),
+            summary_path: None,
+            cache_path: PathBuf::from("cache.json"),
+            lock: LockOpts::default(),
+        }
+    }
+}
+
+/// Run accounting, written as `--summary` JSON.
+#[derive(Clone, Debug, Default)]
+pub struct ClusterSummary {
+    /// grid size
+    pub cells: usize,
+    /// cells computed by workers this run
+    pub computed: usize,
+    /// cells pre-filled from the cache (crash-resume)
+    pub cached: usize,
+    /// re-dispatches after a presumed worker death
+    pub redispatched: usize,
+    /// duplicate results that bit-matched an already-recorded cell
+    pub duplicates: usize,
+    /// connections declared dead (deadline, EOF mid-cell, violation)
+    pub worker_deaths: usize,
+    /// handshakes refused (fingerprint/version/shard mismatch)
+    pub rejected: usize,
+    /// successful worker handshakes (reconnects count again)
+    pub workers: usize,
+    /// every cell of the grid accounted for
+    pub complete: bool,
+    /// the run ended by drain (signal) rather than completion
+    pub drained: bool,
+}
+
+impl ClusterSummary {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("cells", Json::from(self.cells)),
+            ("computed", Json::from(self.computed)),
+            ("cached", Json::from(self.cached)),
+            ("redispatched", Json::from(self.redispatched)),
+            ("duplicates", Json::from(self.duplicates)),
+            ("worker_deaths", Json::from(self.worker_deaths)),
+            ("rejected", Json::from(self.rejected)),
+            ("workers", Json::from(self.workers)),
+            ("complete", Json::from(self.complete)),
+            ("drained", Json::from(self.drained)),
+        ])
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        let tmp = path.with_extension("json.tmp");
+        crate::util::durable::write_atomic(
+            path,
+            &tmp,
+            self.to_json().to_string().as_bytes(),
+        )
+    }
+}
+
+/// What a coordinator run produced.
+#[derive(Debug)]
+pub struct ClusterOutcome {
+    pub grid: GridResult,
+    pub summary: ClusterSummary,
+}
+
+/// A cell awaiting (re-)dispatch.
+#[derive(Clone, Copy, Debug)]
+struct Pending {
+    flat: usize,
+    /// attempt number the *next* dispatch will carry (1 = first)
+    attempt: usize,
+    /// backoff gate; `None` = immediately assignable
+    not_before: Option<Instant>,
+}
+
+#[derive(Default)]
+struct Stats {
+    computed: usize,
+    redispatched: usize,
+    duplicates: usize,
+    worker_deaths: usize,
+    rejected: usize,
+    workers: usize,
+}
+
+struct Shared {
+    jobs: Vec<CellJob>,
+    pending: Vec<Pending>,
+    /// flat -> attempt currently in flight
+    inflight: HashMap<usize, usize>,
+    done: HashMap<usize, CellResult>,
+    cache: ShardedCache,
+    draining: bool,
+    fatal: Option<String>,
+    stats: Stats,
+}
+
+impl Shared {
+    fn complete(&self) -> bool {
+        self.done.len() == self.jobs.len()
+    }
+
+    fn set_fatal(&mut self, reason: String) {
+        if self.fatal.is_none() {
+            log::error!("cluster fatal: {reason}");
+            self.fatal = Some(reason);
+        }
+    }
+
+    /// A connection holding `flat` died (deadline, EOF, violation).
+    fn requeue(&mut self, flat: usize, backoff_base: Duration, retry_cap: usize) {
+        self.stats.worker_deaths += 1;
+        let Some(attempt) = self.inflight.remove(&flat) else {
+            return; // its result already landed via another path
+        };
+        if self.done.contains_key(&flat) {
+            return;
+        }
+        let next = attempt + 1;
+        if next > retry_cap {
+            self.set_fatal(format!(
+                "cell flat={flat} ({}) exceeded retry cap: {retry_cap} \
+                 attempts, every worker holding it died",
+                CellCache::key(&self.jobs[flat])
+            ));
+            return;
+        }
+        self.stats.redispatched += 1;
+        // exponential backoff: 1x, 2x, 4x... of the base
+        let wait = backoff_base * (1u32 << (next - 2).min(16) as u32);
+        log::warn!(
+            "requeueing cell flat={flat} as attempt {next} (backoff {wait:?})"
+        );
+        self.pending.push(Pending {
+            flat,
+            attempt: next,
+            not_before: Some(Instant::now() + wait),
+        });
+    }
+
+    /// Record one result.  Duplicates must bit-match; first copies are
+    /// cached immediately so a coordinator crash never loses them.
+    fn record(&mut self, flat: usize, attempt: usize, eval: CellEval) {
+        self.inflight.remove(&flat);
+        if let Some(prev) = self.done.get(&flat) {
+            if shard::cells_bit_equal(prev, &eval) {
+                self.stats.duplicates += 1;
+                log::info!(
+                    "duplicate result for cell flat={flat} (attempt {attempt}) \
+                     bit-matches the recorded copy"
+                );
+            } else {
+                self.set_fatal(format!(
+                    "duplicate result for cell flat={flat} ({}) does NOT \
+                     bit-match the recorded copy: {prev:?} vs {eval:?}; \
+                     per-cell determinism is broken",
+                    CellCache::key(&self.jobs[flat])
+                ));
+            }
+            return;
+        }
+        self.done.insert(flat, eval);
+        self.stats.computed += 1;
+        self.cache.put(&self.jobs[flat], &eval);
+        if let Err(e) = self.cache.save() {
+            log::warn!("cell cache save failed: {e}");
+        }
+    }
+
+    /// Pick the next assignable cell for a worker pinned to `wshard`.
+    fn assign(&mut self, wshard: Option<(usize, usize)>) -> Option<Pending> {
+        let now = Instant::now();
+        let idx = self.pending.iter().position(|p| {
+            in_shard(p.flat, wshard)
+                && p.not_before.map(|t| t <= now).unwrap_or(true)
+        })?;
+        let p = self.pending.swap_remove(idx);
+        self.inflight.insert(p.flat, p.attempt);
+        Some(p)
+    }
+}
+
+/// Serve one sweep to TCP workers until complete, drained, or fatal.
+///
+/// `fp` is the sweep fingerprint ([`crate::cluster::sweep_fingerprint`])
+/// this coordinator's flags derive; workers whose own fingerprint
+/// differs are rejected at handshake.  `shutdown` is polled each tick --
+/// hook it to SIGTERM/SIGINT via
+/// [`crate::cluster::install_drain_handler`].
+pub fn run_coordinator(
+    regime: Regime,
+    arch: &str,
+    base_seed: u64,
+    fp: u64,
+    opts: &ClusterOpts,
+    shutdown: &AtomicBool,
+) -> Result<ClusterOutcome> {
+    let jobs = grid_jobs(regime, base_seed);
+    debug_assert!(jobs.iter().enumerate().all(|(i, j)| i == j.flat));
+
+    // crash-resume: the cache (opened under its advisory lock) pre-fills
+    // `done`; only the remainder is served
+    let cache = ShardedCache::open(
+        &opts.cache_path,
+        arch,
+        regime,
+        base_seed,
+        None,
+        &opts.lock,
+    )?;
+    let mut done = HashMap::new();
+    for job in &jobs {
+        if let Some(r) = cache.get(job) {
+            done.insert(job.flat, r);
+        }
+    }
+    let cached = done.len();
+    let pending: Vec<Pending> = jobs
+        .iter()
+        .filter(|j| !done.contains_key(&j.flat))
+        .map(|j| Pending { flat: j.flat, attempt: 1, not_before: None })
+        .collect();
+    log::info!(
+        "cluster coordinator: {} cells ({} cached, {} to serve), cache {}",
+        jobs.len(),
+        cached,
+        pending.len(),
+        cache.path().display()
+    );
+
+    let listener = TcpListener::bind(&opts.listen)?;
+    listener.set_nonblocking(true)?;
+    let addr = listener.local_addr()?;
+    log::info!("cluster coordinator listening on {addr}");
+    if let Some(pf) = &opts.port_file {
+        // atomic write: a polling worker/launcher never sees a partial
+        // address
+        let tmp = pf.with_extension("tmp");
+        crate::util::durable::write_atomic(pf, &tmp, format!("{addr}\n").as_bytes())?;
+    }
+
+    let shared = Mutex::new(Shared {
+        jobs,
+        pending,
+        inflight: HashMap::new(),
+        done,
+        cache,
+        draining: false,
+        fatal: None,
+        stats: Stats::default(),
+    });
+    let mut drained = false;
+
+    std::thread::scope(|s| -> Result<()> {
+        let mut drain_since: Option<Instant> = None;
+        loop {
+            if shutdown.load(Ordering::SeqCst) {
+                let mut sh = shared.lock().unwrap();
+                if !sh.draining {
+                    log::warn!("shutdown requested: draining (no new assignments)");
+                    sh.draining = true;
+                    drained = true;
+                    drain_since = Some(Instant::now());
+                }
+            }
+            // drain the whole accept backlog each tick: a burst of
+            // workers must not trickle in at one connection per tick
+            loop {
+                match listener.accept() {
+                    Ok((stream, peer)) => {
+                        log::info!("connection from {peer}");
+                        s.spawn(|| handle_conn(stream, &shared, fp, opts));
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                    Err(e) => {
+                        shared.lock().unwrap().set_fatal(format!("accept: {e}"));
+                        break;
+                    }
+                }
+            }
+            {
+                let sh = shared.lock().unwrap();
+                if sh.fatal.is_some() || sh.complete() {
+                    break;
+                }
+                if sh.draining {
+                    // bounded grace for in-flight results, then give up
+                    let grace_up = drain_since
+                        .map(|t| t.elapsed() > 2 * opts.hb.deadline)
+                        .unwrap_or(true);
+                    if sh.inflight.is_empty() || grace_up {
+                        break;
+                    }
+                }
+            }
+            std::thread::sleep(TICK);
+        }
+        // handler threads observe complete/draining/fatal on their next
+        // tick and exit; the scope join is bounded by the heartbeat
+        // deadline even for hung peers
+        shared.lock().unwrap().draining = true;
+        Ok(())
+    })?;
+
+    let mut sh = shared.into_inner().unwrap();
+    if let Err(e) = sh.cache.save() {
+        log::warn!("final cell cache save failed: {e}");
+    }
+    let complete = sh.complete();
+    let summary = ClusterSummary {
+        cells: sh.jobs.len(),
+        computed: sh.stats.computed,
+        cached,
+        redispatched: sh.stats.redispatched,
+        duplicates: sh.stats.duplicates,
+        worker_deaths: sh.stats.worker_deaths,
+        rejected: sh.stats.rejected,
+        workers: sh.stats.workers,
+        complete,
+        drained,
+    };
+    if let Some(p) = &opts.summary_path {
+        summary.save(p)?;
+        log::info!("summary written to {}", p.display());
+    }
+    if let Some(reason) = sh.fatal.take() {
+        return Err(FxpError::config(format!("cluster: {reason}")));
+    }
+
+    // assemble the table exactly like the single-process sweep: missing
+    // cells (drained early) render n/a
+    let w_axis = WidthSpec::paper_axis().to_vec();
+    let a_axis = WidthSpec::paper_axis().to_vec();
+    let mut outcomes = Vec::with_capacity(a_axis.len());
+    for (ai, &a) in a_axis.iter().enumerate() {
+        let mut row = Vec::with_capacity(w_axis.len());
+        for (wi, &w) in w_axis.iter().enumerate() {
+            let flat = ai * w_axis.len() + wi;
+            let eval = sh.done.get(&flat).copied().unwrap_or(CellEval::Na);
+            row.push(CellOutcome { w, a, eval });
+        }
+        outcomes.push(row);
+    }
+    Ok(ClusterOutcome {
+        grid: GridResult {
+            regime,
+            arch: arch.to_string(),
+            w_axis,
+            a_axis,
+            outcomes,
+        },
+        summary,
+    })
+}
+
+fn reply(stream: &mut TcpStream, msg: &Msg) -> Result<()> {
+    write_frame(stream, msg)
+}
+
+/// One connection's lifecycle, run on its own scoped thread.
+fn handle_conn(
+    mut stream: TcpStream,
+    shared: &Mutex<Shared>,
+    fp: u64,
+    opts: &ClusterOpts,
+) {
+    if let Err(e) = stream.set_read_timeout(Some(TICK)) {
+        log::warn!("set_read_timeout: {e}");
+        return;
+    }
+    let _ = stream.set_nodelay(true);
+
+    // handshake, bounded by the heartbeat deadline
+    let hello_deadline = Instant::now() + opts.hb.deadline;
+    let (name, wshard) = loop {
+        match read_frame(&mut stream, Some(hello_deadline)) {
+            Ok(Frame::TimedOut) => {
+                if Instant::now() >= hello_deadline {
+                    log::warn!("peer never said hello; dropping");
+                    return;
+                }
+            }
+            Ok(Frame::Eof) => return,
+            Ok(Frame::Msg(Msg::Hello {
+                proto,
+                cache_version,
+                name,
+                pid,
+                host,
+                fp: worker_fp,
+                shard: wshard,
+            })) => {
+                let mut why = None;
+                if proto != PROTO_VERSION {
+                    why = Some(format!(
+                        "protocol {proto} != coordinator {PROTO_VERSION}"
+                    ));
+                } else if cache_version != CACHE_VERSION {
+                    why = Some(format!(
+                        "cache version {cache_version} != coordinator \
+                         {CACHE_VERSION}"
+                    ));
+                } else if worker_fp != fp {
+                    why = Some(format!(
+                        "sweep fingerprint {worker_fp:016x} != coordinator \
+                         {fp:016x}: flags describe different sweeps"
+                    ));
+                } else if let Some((i, n)) = wshard {
+                    if let Err(e) = shard::validate_shard(i, n) {
+                        why = Some(e.to_string());
+                    }
+                }
+                if let Some(reason) = why {
+                    log::warn!("rejecting {name} ({host}, pid {pid}): {reason}");
+                    shared.lock().unwrap().stats.rejected += 1;
+                    let _ = reply(&mut stream, &Msg::Reject { reason });
+                    return;
+                }
+                log::info!("worker {name} ({host}, pid {pid}) joined");
+                shared.lock().unwrap().stats.workers += 1;
+                if reply(
+                    &mut stream,
+                    &Msg::Welcome {
+                        heartbeat_ms: opts.hb.interval.as_millis() as u64,
+                        deadline_ms: opts.hb.deadline.as_millis() as u64,
+                    },
+                )
+                .is_err()
+                {
+                    return;
+                }
+                break (name, wshard);
+            }
+            Ok(Frame::Msg(other)) => {
+                log::warn!("peer spoke before hello ({other:?}); dropping");
+                return;
+            }
+            Err(e) => {
+                log::warn!("bad handshake frame: {e}; dropping peer");
+                return;
+            }
+        }
+    };
+
+    let mut clock = DeadlineClock::new(opts.hb.deadline);
+    // the cell this connection is computing right now
+    let mut holding: Option<usize> = None;
+
+    // on every exit path, a held cell must be requeued
+    macro_rules! die {
+        () => {{
+            if let Some(flat) = holding {
+                log::warn!("worker {name} presumed dead holding cell {flat}");
+                shared.lock().unwrap().requeue(
+                    flat,
+                    opts.backoff_base,
+                    opts.retry_cap,
+                );
+            }
+            return;
+        }};
+    }
+
+    loop {
+        match read_frame(&mut stream, Some(clock.expires_at())) {
+            Ok(Frame::TimedOut) => {
+                if clock.expired() {
+                    log::warn!(
+                        "worker {name}: no contact for {:?}",
+                        opts.hb.deadline
+                    );
+                    die!();
+                }
+                let sh = shared.lock().unwrap();
+                if sh.fatal.is_some() && holding.is_none() {
+                    let reason = sh.fatal.clone().unwrap();
+                    drop(sh);
+                    let _ = reply(&mut stream, &Msg::Fatal { reason });
+                    return;
+                }
+            }
+            Ok(Frame::Eof) => {
+                if holding.is_some() {
+                    die!();
+                }
+                log::info!("worker {name} disconnected");
+                return;
+            }
+            Ok(Frame::Msg(Msg::Heartbeat)) => clock.touch(),
+            Ok(Frame::Msg(Msg::Request)) => {
+                clock.touch();
+                let out = {
+                    let mut sh = shared.lock().unwrap();
+                    if let Some(reason) = sh.fatal.clone() {
+                        Msg::Fatal { reason }
+                    } else if sh.complete() {
+                        Msg::Drain { complete: true }
+                    } else if sh.draining {
+                        Msg::Drain { complete: false }
+                    } else if let Some(p) = sh.assign(wshard) {
+                        holding = Some(p.flat);
+                        Msg::Assign {
+                            flat: p.flat,
+                            key: CellCache::key(&sh.jobs[p.flat]),
+                            attempt: p.attempt,
+                        }
+                    } else {
+                        Msg::Wait { ms: WAIT_MS }
+                    }
+                };
+                let assigned = matches!(out, Msg::Assign { .. });
+                let terminal = matches!(out, Msg::Drain { .. } | Msg::Fatal { .. });
+                if reply(&mut stream, &out).is_err() {
+                    die!();
+                }
+                if terminal {
+                    return;
+                }
+                if !assigned {
+                    holding = None;
+                }
+            }
+            Ok(Frame::Msg(Msg::Result { flat, key, attempt, eval })) => {
+                clock.touch();
+                let mut sh = shared.lock().unwrap();
+                let expect = sh
+                    .jobs
+                    .get(flat)
+                    .map(CellCache::key)
+                    .unwrap_or_default();
+                if key != expect {
+                    sh.set_fatal(format!(
+                        "worker {name} returned cell key '{key}' for flat \
+                         {flat}, expected '{expect}'"
+                    ));
+                    return;
+                }
+                sh.record(flat, attempt, eval);
+                holding = None;
+            }
+            Ok(Frame::Msg(Msg::Fatal { reason })) => {
+                log::warn!("worker {name} aborted: {reason}");
+                die!();
+            }
+            Ok(Frame::Msg(other)) => {
+                log::warn!(
+                    "worker {name}: protocol violation ({other:?}); dropping"
+                );
+                die!();
+            }
+            Err(e) => {
+                log::warn!("worker {name}: bad frame: {e}; dropping");
+                die!();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn requeue_backs_off_and_caps() {
+        let dir = std::env::temp_dir().join(format!(
+            "fxp_cluster_requeue_{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let cache = ShardedCache::open(
+            &dir.join("cache.json"),
+            "tiny",
+            Regime::Vanilla,
+            42,
+            None,
+            &LockOpts::default(),
+        )
+        .unwrap();
+        let jobs = grid_jobs(Regime::Vanilla, 42);
+        let n = jobs.len();
+        let mut sh = Shared {
+            jobs,
+            pending: Vec::new(),
+            inflight: HashMap::new(),
+            done: HashMap::new(),
+            cache,
+            draining: false,
+            fatal: None,
+            stats: Stats::default(),
+        };
+        let base = Duration::from_millis(10);
+
+        // attempt 1 dies -> requeued as attempt 2 with a backoff gate
+        sh.inflight.insert(3, 1);
+        sh.requeue(3, base, 3);
+        assert_eq!(sh.pending.len(), 1);
+        assert_eq!(sh.pending[0].attempt, 2);
+        assert!(sh.pending[0].not_before.is_some());
+        assert_eq!(sh.stats.redispatched, 1);
+        assert!(sh.fatal.is_none());
+
+        // immediately assignable only once the gate passes
+        assert!(sh.assign(None).is_none());
+        std::thread::sleep(Duration::from_millis(25));
+        let p = sh.assign(None).expect("gate passed");
+        assert_eq!((p.flat, p.attempt), (3, 2));
+
+        // cap exhaustion is fatal, not a silent n/a
+        sh.requeue(3, base, 3); // attempt 3 queued
+        sh.pending.clear();
+        sh.inflight.insert(3, 3);
+        sh.requeue(3, base, 3);
+        assert!(sh.fatal.as_deref().unwrap().contains("retry cap"));
+
+        // a death with no in-flight cell requeues nothing
+        let deaths = sh.stats.worker_deaths;
+        sh.requeue(n - 1, base, 3);
+        assert_eq!(sh.stats.worker_deaths, deaths + 1);
+        assert!(sh.pending.is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn duplicate_results_must_bit_match() {
+        let dir = std::env::temp_dir().join(format!(
+            "fxp_cluster_dup_{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let cache = ShardedCache::open(
+            &dir.join("cache.json"),
+            "tiny",
+            Regime::Vanilla,
+            42,
+            None,
+            &LockOpts::default(),
+        )
+        .unwrap();
+        let mut sh = Shared {
+            jobs: grid_jobs(Regime::Vanilla, 42),
+            pending: Vec::new(),
+            inflight: HashMap::new(),
+            done: HashMap::new(),
+            cache,
+            draining: false,
+            fatal: None,
+            stats: Stats::default(),
+        };
+        let ok = CellEval::Ok(crate::coordinator::evaluator::EvalResult {
+            n: 100,
+            top1_err: 0.25,
+            top5_err: 0.1,
+            mean_loss: 1.5,
+        });
+        sh.record(0, 1, ok);
+        assert_eq!(sh.stats.computed, 1);
+
+        // bit-identical duplicate: counted, harmless
+        sh.record(0, 2, ok);
+        assert_eq!(sh.stats.duplicates, 1);
+        assert!(sh.fatal.is_none());
+
+        // bit-mismatched duplicate: hard error
+        let skewed = CellEval::Ok(crate::coordinator::evaluator::EvalResult {
+            n: 100,
+            top1_err: 0.25 + f64::EPSILON,
+            top5_err: 0.1,
+            mean_loss: 1.5,
+        });
+        sh.record(0, 3, skewed);
+        assert!(sh.fatal.as_deref().unwrap().contains("bit-match"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

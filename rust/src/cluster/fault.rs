@@ -1,0 +1,250 @@
+//! Deterministic fault injection for cluster chaos tests.
+//!
+//! `--inject drop=P,delay=MS,kill-after=N` arms a [`FaultLayer`] inside
+//! a worker.  Every decision is drawn from an RNG seeded off the cell
+//! RNG tree (`derive_seed(base_seed, "fault-inject", [fnv64(name)])`),
+//! so a chaos run replays exactly: the same worker name and base seed
+//! drop the same frames and die after the same cell, which is what lets
+//! the chaos test assert a byte-identical final table.
+//!
+//! Faults model the *network and process*, never the math:
+//! - `drop=P` -- each send decision independently fails with
+//!   probability P; the worker treats it as a broken connection and
+//!   reconnects (heartbeat drops are just skipped beats).
+//! - `delay=MS` -- sleep before each send, exercising mid-frame reads
+//!   and deadline slack on the coordinator.
+//! - `kill-after=N` -- after *computing* N cells, die without sending
+//!   the Nth result: the canonical "worker killed mid-cell", guaranteed
+//!   to force a re-dispatch.  `kill-after=0` dies at the first
+//!   assignment before computing anything.
+
+use std::time::Duration;
+
+use crate::error::{FxpError, Result};
+use crate::util::rng::{derive_seed, Rng};
+
+/// FNV-1a over a name, to fold worker identity into the fault seed.
+fn fnv64(s: &str) -> u64 {
+    let mut h = 0xCBF2_9CE4_8422_2325u64;
+    for &b in s.as_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// Parsed `--inject` spec.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct FaultSpec {
+    /// Probability in [0,1] that any one send is dropped.
+    pub drop: f64,
+    /// Fixed latency added before each send.
+    pub delay: Duration,
+    /// Die after computing this many cells (0 = before the first).
+    pub kill_after: Option<usize>,
+}
+
+impl FaultSpec {
+    /// Parse `"drop=0.2,delay=50,kill-after=3"`.  Keys may appear in
+    /// any order; unknown keys are an error.
+    pub fn parse(s: &str) -> Result<FaultSpec> {
+        let mut spec = FaultSpec::default();
+        for part in s.split(',').filter(|p| !p.is_empty()) {
+            let (key, val) = part.split_once('=').ok_or_else(|| {
+                FxpError::config(format!("--inject '{part}': expected key=value"))
+            })?;
+            match key {
+                "drop" => {
+                    let p: f64 = val.parse().map_err(|_| {
+                        FxpError::config(format!("--inject drop: bad number '{val}'"))
+                    })?;
+                    if !(0.0..=1.0).contains(&p) {
+                        return Err(FxpError::config(format!(
+                            "--inject drop={p}: probability must be in [0,1]"
+                        )));
+                    }
+                    spec.drop = p;
+                }
+                "delay" => {
+                    let ms: u64 = val.parse().map_err(|_| {
+                        FxpError::config(format!("--inject delay: bad ms '{val}'"))
+                    })?;
+                    spec.delay = Duration::from_millis(ms);
+                }
+                "kill-after" => {
+                    let n: usize = val.parse().map_err(|_| {
+                        FxpError::config(format!(
+                            "--inject kill-after: bad count '{val}'"
+                        ))
+                    })?;
+                    spec.kill_after = Some(n);
+                }
+                other => {
+                    return Err(FxpError::config(format!(
+                        "--inject: unknown key '{other}' \
+                         (known: drop, delay, kill-after)"
+                    )))
+                }
+            }
+        }
+        Ok(spec)
+    }
+
+    pub fn is_noop(&self) -> bool {
+        *self == FaultSpec::default()
+    }
+}
+
+/// Frame categories that take independent drop decisions.  Keeping a
+/// counter per kind makes a decision a pure function of (seed, kind,
+/// how many frames of that kind came before) -- reconnects and retries
+/// don't shift the sequence of another kind.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SendKind {
+    Heartbeat,
+    Request,
+    Result,
+}
+
+/// Live fault state for one worker process.
+#[derive(Debug)]
+pub struct FaultLayer {
+    spec: FaultSpec,
+    seed: u64,
+    counts: [u64; 3],
+    computed: usize,
+}
+
+impl FaultLayer {
+    pub fn new(spec: FaultSpec, base_seed: u64, worker_name: &str) -> FaultLayer {
+        FaultLayer {
+            spec,
+            seed: derive_seed(base_seed, "fault-inject", &[fnv64(worker_name)]),
+            counts: [0; 3],
+            computed: 0,
+        }
+    }
+
+    fn kind_idx(kind: SendKind) -> usize {
+        match kind {
+            SendKind::Heartbeat => 0,
+            SendKind::Request => 1,
+            SendKind::Result => 2,
+        }
+    }
+
+    /// Should the next send of this kind be dropped?  Deterministic per
+    /// (seed, kind, per-kind counter); advances the counter.
+    pub fn should_drop(&mut self, kind: SendKind) -> bool {
+        if self.spec.drop <= 0.0 {
+            return false;
+        }
+        let idx = Self::kind_idx(kind);
+        let n = self.counts[idx];
+        self.counts[idx] += 1;
+        let mut rng =
+            Rng::new(derive_seed(self.seed, "drop", &[idx as u64, n]));
+        rng.uniform() < self.spec.drop
+    }
+
+    /// Latency to apply before each send (zero when not injecting).
+    pub fn delay(&self) -> Duration {
+        self.spec.delay
+    }
+
+    /// Record one computed cell; true means "die now, without sending
+    /// this result".
+    pub fn should_kill_after_compute(&mut self) -> bool {
+        self.computed += 1;
+        matches!(self.spec.kill_after, Some(n) if n > 0 && self.computed >= n)
+    }
+
+    /// True when `kill-after=0`: die on first assignment, pre-compute.
+    pub fn kill_on_assign(&self) -> bool {
+        self.spec.kill_after == Some(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_and_partial_specs() {
+        let s = FaultSpec::parse("drop=0.2,delay=50,kill-after=3").unwrap();
+        assert_eq!(s.drop, 0.2);
+        assert_eq!(s.delay, Duration::from_millis(50));
+        assert_eq!(s.kill_after, Some(3));
+
+        let s = FaultSpec::parse("kill-after=0").unwrap();
+        assert_eq!(s.kill_after, Some(0));
+        assert_eq!(s.drop, 0.0);
+
+        assert!(FaultSpec::parse("").unwrap().is_noop());
+    }
+
+    #[test]
+    fn rejects_bad_specs() {
+        for bad in ["drop", "drop=1.5", "drop=x", "delay=-3", "warp=9"] {
+            assert!(FaultSpec::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn drop_decisions_replay_exactly() {
+        let spec = FaultSpec::parse("drop=0.5").unwrap();
+        let run = |name: &str| {
+            let mut layer = FaultLayer::new(spec, 42, name);
+            (0..64)
+                .map(|i| {
+                    let kind = match i % 3 {
+                        0 => SendKind::Heartbeat,
+                        1 => SendKind::Request,
+                        _ => SendKind::Result,
+                    };
+                    layer.should_drop(kind)
+                })
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run("w0"), run("w0"), "same worker must replay");
+        assert_ne!(run("w0"), run("w1"), "workers draw independent faults");
+        let flips = run("w0").iter().filter(|&&d| d).count();
+        assert!((10..=54).contains(&flips), "drop=0.5 wildly off: {flips}/64");
+    }
+
+    #[test]
+    fn per_kind_counters_are_independent() {
+        let spec = FaultSpec::parse("drop=0.5").unwrap();
+        // results-only sequence must match the result-subsequence of a
+        // mixed run: other kinds can't perturb it
+        let mut mixed = FaultLayer::new(spec, 7, "w");
+        let mut solo = FaultLayer::new(spec, 7, "w");
+        let mut mixed_results = Vec::new();
+        for i in 0..30 {
+            if i % 2 == 0 {
+                mixed.should_drop(SendKind::Heartbeat);
+            } else {
+                mixed_results.push(mixed.should_drop(SendKind::Result));
+            }
+        }
+        let solo_results: Vec<bool> =
+            (0..15).map(|_| solo.should_drop(SendKind::Result)).collect();
+        assert_eq!(mixed_results, solo_results);
+    }
+
+    #[test]
+    fn kill_after_counts_computed_cells() {
+        let spec = FaultSpec::parse("kill-after=2").unwrap();
+        let mut layer = FaultLayer::new(spec, 1, "w");
+        assert!(!layer.kill_on_assign());
+        assert!(!layer.should_kill_after_compute());
+        assert!(layer.should_kill_after_compute());
+
+        let mut eager = FaultLayer::new(FaultSpec::parse("kill-after=0").unwrap(), 1, "w");
+        assert!(eager.kill_on_assign());
+
+        let mut never = FaultLayer::new(FaultSpec::default(), 1, "w");
+        assert!(!never.kill_on_assign());
+        assert!(!(0..100).any(|_| never.should_kill_after_compute()));
+    }
+}

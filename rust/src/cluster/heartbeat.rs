@@ -1,0 +1,79 @@
+//! Worker liveness: heartbeat contract and deadline bookkeeping.
+//!
+//! The coordinator tells each worker (in `Welcome`) how often to beat
+//! and how long silence may last.  Any frame from a worker -- heartbeat,
+//! request, result -- counts as liveness; a [`DeadlineClock`] that
+//! expires means the worker is presumed dead and its in-flight cell is
+//! requeued.  The deadline should be several heartbeat intervals so one
+//! lost or delayed beat never kills a healthy worker.
+
+use std::time::{Duration, Instant};
+
+/// Heartbeat contract handed to workers at handshake.
+#[derive(Clone, Copy, Debug)]
+pub struct HeartbeatCfg {
+    /// How often workers send `Heartbeat`.
+    pub interval: Duration,
+    /// Silence longer than this marks the worker dead.
+    pub deadline: Duration,
+}
+
+impl Default for HeartbeatCfg {
+    fn default() -> Self {
+        HeartbeatCfg {
+            interval: Duration::from_secs(1),
+            deadline: Duration::from_secs(5),
+        }
+    }
+}
+
+/// Last-contact tracker for one connection.
+#[derive(Clone, Copy, Debug)]
+pub struct DeadlineClock {
+    last: Instant,
+    deadline: Duration,
+}
+
+impl DeadlineClock {
+    pub fn new(deadline: Duration) -> Self {
+        DeadlineClock { last: Instant::now(), deadline }
+    }
+
+    /// Record contact (any frame, not just heartbeats).
+    pub fn touch(&mut self) {
+        self.last = Instant::now();
+    }
+
+    /// Has the silence exceeded the deadline?
+    pub fn expired(&self) -> bool {
+        self.last.elapsed() > self.deadline
+    }
+
+    /// Absolute instant after which [`expired`](Self::expired) holds;
+    /// useful as a read-until bound for mid-frame reads.
+    pub fn expires_at(&self) -> Instant {
+        self.last + self.deadline
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn touch_resets_the_clock() {
+        let mut c = DeadlineClock::new(Duration::from_millis(30));
+        assert!(!c.expired());
+        std::thread::sleep(Duration::from_millis(45));
+        assert!(c.expired());
+        c.touch();
+        assert!(!c.expired());
+        assert!(c.expires_at() > Instant::now());
+    }
+
+    #[test]
+    fn default_deadline_spans_several_intervals() {
+        let cfg = HeartbeatCfg::default();
+        assert!(cfg.deadline >= cfg.interval * 3);
+    }
+}

@@ -1,0 +1,173 @@
+//! Multi-machine sweep execution: `fxpnet cluster`.
+//!
+//! A coordinator process owns one regime's sweep and serves cells over
+//! plain TCP ([`proto`]) to any number of worker processes, which pull
+//! work, compute cells with the same per-cell seed tree as
+//! `fxpnet grid`, and stream results back.  The coordinator writes the
+//! same strict v4 cell cache and table JSON as a single-process sweep --
+//! cluster execution is a *scheduling* change only, and the chaos test
+//! pins the final artifacts byte-identical to a `--workers 1` reference
+//! run even while workers are killed mid-cell.
+//!
+//! `fxpnet grid --shard I/N` remains as the static-scheduler escape
+//! hatch (no coordinator process, shards merged offline); `cluster` is
+//! for elastic pools where workers come, go, and die.
+//!
+//! Module map:
+//! * [`proto`] -- length-prefixed JSON wire protocol;
+//! * [`heartbeat`] -- liveness contract and deadline clocks;
+//! * [`coordinator`] -- work-stealing scheduler, retry/backoff,
+//!   duplicate bit-verification, crash-resume, graceful drain;
+//! * [`worker`] -- pull loop, heartbeat thread, reconnects;
+//! * [`fault`] -- deterministic fault injection for chaos tests.
+
+pub mod coordinator;
+pub mod fault;
+pub mod heartbeat;
+pub mod proto;
+pub mod worker;
+
+pub use coordinator::{run_coordinator, ClusterOpts, ClusterOutcome, ClusterSummary};
+pub use fault::FaultSpec;
+pub use heartbeat::HeartbeatCfg;
+pub use worker::{run_worker, CellExec, SyntheticExec, WorkerOpts, WorkerReport};
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use crate::coordinator::config::RunCfg;
+use crate::coordinator::regimes::Regime;
+use crate::coordinator::report::CACHE_VERSION;
+use crate::util::rng::derive_seed;
+
+/// Fingerprint of everything that must agree between a coordinator and
+/// a worker for their cells to be interchangeable: the sweep identity
+/// (arch, regime, base seed), the cache schema, the executor kind
+/// (synthetic vs real), and every `RunCfg` field that shapes cell
+/// numerics.  Both sides derive it from their *own* flags; the
+/// handshake rejects a mismatch, so a mis-flagged worker can never
+/// poison a sweep with bit-different results.
+///
+/// Deliberately excluded: `workers`/`threads` (bit-identical by the
+/// engine's contract) and `topk` (rendering only).
+pub fn sweep_fingerprint(
+    arch: &str,
+    regime: Regime,
+    base_seed: u64,
+    synthetic: bool,
+    cfg: &RunCfg,
+) -> u64 {
+    fn fold_str(h: u64, domain: &str, s: &str) -> u64 {
+        let mut parts = vec![s.len() as u64];
+        parts.extend(s.as_bytes().iter().map(|&b| b as u64));
+        derive_seed(h, domain, &parts)
+    }
+    let mut h = derive_seed(0x5EED_C105, "cluster-fp", &[]);
+    h = fold_str(h, "arch", arch);
+    h = derive_seed(
+        h,
+        "sweep",
+        &[
+            regime.seed_tag(),
+            base_seed,
+            CACHE_VERSION as u64,
+            synthetic as u64,
+        ],
+    );
+    h = derive_seed(
+        h,
+        "cfg",
+        &[
+            cfg.lr.to_bits() as u64,
+            cfg.momentum.to_bits() as u64,
+            cfg.finetune_steps as u64,
+            cfg.phase_steps as u64,
+            cfg.pretrain_steps as u64,
+            cfg.pretrain_lr.to_bits() as u64,
+            cfg.calib_batches as u64,
+            cfg.method as u64,
+            cfg.max_loss.to_bits() as u64,
+            cfg.augment as u64,
+            cfg.early_abort as u64,
+        ],
+    );
+    h
+}
+
+static DRAIN: AtomicBool = AtomicBool::new(false);
+
+#[cfg(unix)]
+extern "C" fn drain_signal_handler(_sig: i32) {
+    // async-signal-safe: a single atomic store
+    DRAIN.store(true, Ordering::SeqCst);
+}
+
+/// Install SIGINT/SIGTERM handlers that flip a drain flag instead of
+/// killing the process, and return that flag for
+/// [`run_coordinator`]'s `shutdown` argument.  The coordinator then
+/// stops assigning, waits a bounded grace for in-flight cells, and
+/// exits cleanly (exit code 2 if the sweep is incomplete).
+///
+/// Std-only: uses raw `signal(2)` via FFI (no signal-handling crate is
+/// available offline).  On non-unix targets this is a no-op flag that
+/// never fires.
+pub fn install_drain_handler() -> &'static AtomicBool {
+    #[cfg(unix)]
+    {
+        extern "C" {
+            fn signal(signum: i32, handler: usize) -> usize;
+        }
+        const SIGINT: i32 = 2;
+        const SIGTERM: i32 = 15;
+        unsafe {
+            signal(SIGINT, drain_signal_handler as usize);
+            signal(SIGTERM, drain_signal_handler as usize);
+        }
+    }
+    &DRAIN
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fingerprint_separates_sweeps() {
+        let cfg = RunCfg::smoke();
+        let base = sweep_fingerprint("tiny", Regime::Vanilla, 42, true, &cfg);
+        // stable across calls
+        assert_eq!(
+            base,
+            sweep_fingerprint("tiny", Regime::Vanilla, 42, true, &cfg)
+        );
+        // every dimension separates
+        let variants = [
+            sweep_fingerprint("small", Regime::Vanilla, 42, true, &cfg),
+            sweep_fingerprint("tiny", Regime::NoFinetune, 42, true, &cfg),
+            sweep_fingerprint("tiny", Regime::Vanilla, 43, true, &cfg),
+            sweep_fingerprint("tiny", Regime::Vanilla, 42, false, &cfg),
+            sweep_fingerprint(
+                "tiny",
+                Regime::Vanilla,
+                42,
+                true,
+                &RunCfg { lr: 0.5, ..RunCfg::smoke() },
+            ),
+            sweep_fingerprint(
+                "tiny",
+                Regime::Vanilla,
+                42,
+                true,
+                &RunCfg { early_abort: false, ..RunCfg::smoke() },
+            ),
+        ];
+        for v in variants {
+            assert_ne!(base, v);
+        }
+    }
+
+    #[test]
+    fn drain_handler_returns_shared_flag() {
+        let flag = install_drain_handler();
+        assert!(!flag.load(Ordering::SeqCst) || cfg!(not(unix)));
+    }
+}

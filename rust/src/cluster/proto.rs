@@ -1,0 +1,449 @@
+//! Wire protocol for `fxpnet cluster`: length-prefixed JSON frames over
+//! a `std::net` TCP stream.
+//!
+//! ## Framing
+//!
+//! One frame = `u32` little-endian payload length, then exactly that
+//! many bytes of UTF-8 JSON (one message object carrying a `"type"`
+//! tag).  [`MAX_FRAME`] bounds the payload so a corrupt or hostile
+//! length prefix can never make a peer allocate unbounded memory.  Any
+//! framing or schema violation is an `Err` -- both endpoints respond by
+//! dropping the peer with a logged error, never by panicking (pinned by
+//! tests/cluster_proto.rs and the malformed-frame integration test).
+//!
+//! ## Message flow
+//!
+//! Workers pull; the coordinator never initiates:
+//!
+//! ```text
+//! worker                         coordinator
+//!   Hello{fp, shard?}        ->
+//!                            <-  Welcome{heartbeat_ms, deadline_ms}
+//!                                | Reject{reason}
+//!   Request                  ->
+//!                            <-  Assign{flat, key, attempt}
+//!                                | Wait{ms} | Drain{complete}
+//!                                | Fatal{reason}
+//!   Result{flat, .., eval}   ->
+//!   Heartbeat                ->      (any time, incl. mid-cell)
+//! ```
+//!
+//! Cell results ride in the cell cache's own JSON shape
+//! ([`report::cell_eval_to_json`]), so a result that crossed the wire is
+//! byte-for-byte what the cache file records -- the bit-identity
+//! contract has a single serialization to audit.
+
+use std::io::{Read, Write};
+use std::time::Instant;
+
+use crate::coordinator::regimes::CellEval;
+use crate::coordinator::report::{cell_eval_from_json, cell_eval_to_json};
+use crate::error::{FxpError, Result};
+use crate::util::json::Json;
+
+/// Protocol revision; bumped on any incompatible message change.  A
+/// mismatch is rejected at handshake.
+pub const PROTO_VERSION: usize = 1;
+
+/// Maximum frame payload in bytes.  Messages are small (a cell result
+/// is a few hundred bytes); the cap exists to bound allocation on a
+/// corrupt length prefix.
+pub const MAX_FRAME: usize = 1 << 20;
+
+/// One protocol message.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Msg {
+    /// Worker registration, once per connection.  `fp` is the sweep
+    /// fingerprint ([`crate::cluster::sweep_fingerprint`]) both sides
+    /// derive from their own flags; `shard` optionally pins the worker
+    /// to a static `I/N` slice of the grid.
+    Hello {
+        proto: usize,
+        cache_version: usize,
+        name: String,
+        pid: u64,
+        host: String,
+        fp: u64,
+        shard: Option<(usize, usize)>,
+    },
+    /// Handshake accepted; the coordinator's heartbeat contract.
+    Welcome { heartbeat_ms: u64, deadline_ms: u64 },
+    /// Handshake refused (version/fingerprint mismatch, bad shard...).
+    Reject { reason: String },
+    /// Worker asks for a cell.
+    Request,
+    /// One unit of work.  `attempt` counts dispatches of this cell (1 =
+    /// first); it rides back in `Result` so re-dispatch accounting never
+    /// guesses.
+    Assign { flat: usize, key: String, attempt: usize },
+    /// Nothing assignable right now (cells in flight elsewhere or
+    /// backing off); ask again in `ms`.
+    Wait { ms: u64 },
+    /// No more work ever: sweep complete, or the coordinator is
+    /// draining.  The worker disconnects.
+    Drain { complete: bool },
+    /// A computed cell.
+    Result { flat: usize, key: String, attempt: usize, eval: CellEval },
+    /// Liveness signal (sent from a side thread even mid-cell).
+    Heartbeat,
+    /// Unrecoverable sweep error (e.g. a bit-mismatched duplicate); the
+    /// worker aborts.
+    Fatal { reason: String },
+}
+
+fn u64_str(v: u64) -> Json {
+    // u64 round-trips as a string; Json numbers are f64 (2^53 cap)
+    Json::Str(v.to_string())
+}
+
+fn parse_u64(j: &Json, key: &str) -> Result<u64> {
+    let s = j.get(key)?.as_str()?;
+    s.parse::<u64>()
+        .map_err(|_| FxpError::Json(format!("bad u64 '{s}' for '{key}'")))
+}
+
+impl Msg {
+    pub fn to_json(&self) -> Json {
+        match self {
+            Msg::Hello { proto, cache_version, name, pid, host, fp, shard } => {
+                let mut pairs = vec![
+                    ("type", Json::from("hello")),
+                    ("proto", Json::from(*proto)),
+                    ("cache_version", Json::from(*cache_version)),
+                    ("name", Json::Str(name.clone())),
+                    ("pid", u64_str(*pid)),
+                    ("host", Json::Str(host.clone())),
+                    ("fp", u64_str(*fp)),
+                ];
+                if let Some((i, n)) = shard {
+                    pairs.push(("shard_index", Json::from(*i)));
+                    pairs.push(("shard_count", Json::from(*n)));
+                }
+                Json::obj(pairs)
+            }
+            Msg::Welcome { heartbeat_ms, deadline_ms } => Json::obj(vec![
+                ("type", Json::from("welcome")),
+                ("heartbeat_ms", Json::from(*heartbeat_ms as usize)),
+                ("deadline_ms", Json::from(*deadline_ms as usize)),
+            ]),
+            Msg::Reject { reason } => Json::obj(vec![
+                ("type", Json::from("reject")),
+                ("reason", Json::Str(reason.clone())),
+            ]),
+            Msg::Request => Json::obj(vec![("type", Json::from("request"))]),
+            Msg::Assign { flat, key, attempt } => Json::obj(vec![
+                ("type", Json::from("assign")),
+                ("flat", Json::from(*flat)),
+                ("key", Json::Str(key.clone())),
+                ("attempt", Json::from(*attempt)),
+            ]),
+            Msg::Wait { ms } => Json::obj(vec![
+                ("type", Json::from("wait")),
+                ("ms", Json::from(*ms as usize)),
+            ]),
+            Msg::Drain { complete } => Json::obj(vec![
+                ("type", Json::from("drain")),
+                ("complete", Json::from(*complete)),
+            ]),
+            Msg::Result { flat, key, attempt, eval } => Json::obj(vec![
+                ("type", Json::from("result")),
+                ("flat", Json::from(*flat)),
+                ("key", Json::Str(key.clone())),
+                ("attempt", Json::from(*attempt)),
+                // the cache's own cell encoding: non-finite evals
+                // flatten to "na" exactly like CellCache::put would
+                ("cell", cell_eval_to_json(eval)),
+            ]),
+            Msg::Heartbeat => Json::obj(vec![("type", Json::from("heartbeat"))]),
+            Msg::Fatal { reason } => Json::obj(vec![
+                ("type", Json::from("fatal")),
+                ("reason", Json::Str(reason.clone())),
+            ]),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<Msg> {
+        let ty = j.get("type")?.as_str()?;
+        Ok(match ty {
+            "hello" => {
+                let shard = match (j.opt("shard_index"), j.opt("shard_count")) {
+                    (Some(i), Some(n)) => Some((i.as_usize()?, n.as_usize()?)),
+                    (None, None) => None,
+                    _ => {
+                        return Err(FxpError::Json(
+                            "hello: half-specified shard".into(),
+                        ))
+                    }
+                };
+                Msg::Hello {
+                    proto: j.get("proto")?.as_usize()?,
+                    cache_version: j.get("cache_version")?.as_usize()?,
+                    name: j.get("name")?.as_str()?.to_string(),
+                    pid: parse_u64(j, "pid")?,
+                    host: j.get("host")?.as_str()?.to_string(),
+                    fp: parse_u64(j, "fp")?,
+                    shard,
+                }
+            }
+            "welcome" => Msg::Welcome {
+                heartbeat_ms: j.get("heartbeat_ms")?.as_usize()? as u64,
+                deadline_ms: j.get("deadline_ms")?.as_usize()? as u64,
+            },
+            "reject" => Msg::Reject {
+                reason: j.get("reason")?.as_str()?.to_string(),
+            },
+            "request" => Msg::Request,
+            "assign" => Msg::Assign {
+                flat: j.get("flat")?.as_usize()?,
+                key: j.get("key")?.as_str()?.to_string(),
+                attempt: j.get("attempt")?.as_usize()?,
+            },
+            "wait" => Msg::Wait { ms: j.get("ms")?.as_usize()? as u64 },
+            "drain" => Msg::Drain {
+                complete: match j.get("complete")? {
+                    Json::Bool(b) => *b,
+                    other => {
+                        return Err(FxpError::Json(format!(
+                            "drain: bad 'complete' {other}"
+                        )))
+                    }
+                },
+            },
+            "result" => Msg::Result {
+                flat: j.get("flat")?.as_usize()?,
+                key: j.get("key")?.as_str()?.to_string(),
+                attempt: j.get("attempt")?.as_usize()?,
+                eval: cell_eval_from_json("result", j.get("cell")?)?,
+            },
+            "heartbeat" => Msg::Heartbeat,
+            "fatal" => Msg::Fatal {
+                reason: j.get("reason")?.as_str()?.to_string(),
+            },
+            other => {
+                return Err(FxpError::Json(format!("unknown message type '{other}'")))
+            }
+        })
+    }
+}
+
+/// What one read attempt produced.
+#[derive(Debug)]
+pub enum Frame {
+    /// A complete, well-formed message.
+    Msg(Msg),
+    /// Clean EOF at a frame boundary (the peer closed).
+    Eof,
+    /// The socket's read timeout fired before any byte of a new frame
+    /// arrived -- a scheduling tick, not an error (the caller checks its
+    /// heartbeat deadline and retries).
+    TimedOut,
+}
+
+/// Encode `msg` as one frame.  Errors (rather than truncating) if the
+/// payload would exceed [`MAX_FRAME`].
+pub fn write_frame(w: &mut impl Write, msg: &Msg) -> Result<()> {
+    let payload = msg.to_json().to_string();
+    let bytes = payload.as_bytes();
+    if bytes.len() > MAX_FRAME {
+        return Err(FxpError::config(format!(
+            "frame payload {} bytes exceeds MAX_FRAME {MAX_FRAME}",
+            bytes.len()
+        )));
+    }
+    w.write_all(&(bytes.len() as u32).to_le_bytes())?;
+    w.write_all(bytes)?;
+    w.flush()?;
+    Ok(())
+}
+
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+    )
+}
+
+/// Read exactly `buf.len()` bytes, tolerating short reads and (until
+/// `deadline`) read-timeout ticks.  `started` says whether earlier bytes
+/// of this frame were already consumed: a clean EOF is only "clean"
+/// before the first byte.
+fn read_exact_deadline(
+    r: &mut impl Read,
+    buf: &mut [u8],
+    started: bool,
+    deadline: Option<Instant>,
+) -> Result<Option<()>> {
+    let mut got = 0usize;
+    while got < buf.len() {
+        match r.read(&mut buf[got..]) {
+            Ok(0) => {
+                if got == 0 && !started {
+                    return Ok(None); // peer closed at a frame boundary
+                }
+                return Err(FxpError::Json("truncated frame (peer closed)".into()));
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) if is_timeout(&e) => {
+                if got == 0 && !started {
+                    return Err(e.into()); // boundary timeout: caller's tick
+                }
+                // mid-frame: the sender paused (or a fault layer delayed
+                // it); keep waiting until the caller's deadline
+                if let Some(d) = deadline {
+                    if Instant::now() >= d {
+                        return Err(FxpError::Json(
+                            "timed out mid-frame".into(),
+                        ));
+                    }
+                }
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(Some(()))
+}
+
+/// Read one frame.  With a socket read timeout set, a quiet boundary
+/// returns [`Frame::TimedOut`] so the caller can run its deadline
+/// bookkeeping; a frame that *started* keeps reading until `deadline`.
+/// A clean close at a boundary is [`Frame::Eof`]; everything malformed
+/// (oversized length, truncation, bad JSON, unknown type) is `Err`.
+pub fn read_frame(r: &mut impl Read, deadline: Option<Instant>) -> Result<Frame> {
+    let mut len_bytes = [0u8; 4];
+    match read_exact_deadline(r, &mut len_bytes, false, deadline) {
+        Ok(None) => return Ok(Frame::Eof),
+        Ok(Some(())) => {}
+        Err(FxpError::Io(e)) if is_timeout(&e) => return Ok(Frame::TimedOut),
+        Err(e) => return Err(e),
+    }
+    let len = u32::from_le_bytes(len_bytes) as usize;
+    if len > MAX_FRAME {
+        return Err(FxpError::Json(format!(
+            "oversized frame: {len} bytes (cap {MAX_FRAME})"
+        )));
+    }
+    let mut payload = vec![0u8; len];
+    read_exact_deadline(r, &mut payload, true, deadline)?;
+    let text = std::str::from_utf8(&payload)
+        .map_err(|_| FxpError::Json("frame payload is not UTF-8".into()))?;
+    Msg::from_json(&Json::parse(text)?).map(Frame::Msg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::evaluator::EvalResult;
+    use crate::coordinator::trainer::AbortReason;
+
+    fn round_trip(m: &Msg) -> Msg {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, m).unwrap();
+        match read_frame(&mut buf.as_slice(), None).unwrap() {
+            Frame::Msg(back) => back,
+            other => panic!("expected a message, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn basic_round_trips() {
+        let msgs = vec![
+            Msg::Request,
+            Msg::Heartbeat,
+            Msg::Wait { ms: 123 },
+            Msg::Drain { complete: true },
+            Msg::Assign { flat: 7, key: "w=8,a=4".into(), attempt: 2 },
+            Msg::Result {
+                flat: 7,
+                key: "w=8,a=4".into(),
+                attempt: 2,
+                eval: CellEval::Ok(EvalResult {
+                    n: 1000,
+                    top1_err: 0.1 + 0.2,
+                    top5_err: 1.0 / 3.0,
+                    mean_loss: 1e-17,
+                }),
+            },
+            Msg::Hello {
+                proto: PROTO_VERSION,
+                cache_version: 4,
+                name: "w0".into(),
+                pid: u64::MAX,
+                host: "h".into(),
+                fp: 0xDEAD_BEEF_DEAD_BEEF,
+                shard: Some((1, 3)),
+            },
+        ];
+        for m in &msgs {
+            assert_eq!(&round_trip(m), m);
+        }
+        // bit-exactness of floats through the wire
+        if let Msg::Result { eval: CellEval::Ok(e), .. } = round_trip(&msgs[5]) {
+            assert_eq!(e.top1_err.to_bits(), (0.1f64 + 0.2).to_bits());
+            assert_eq!(e.mean_loss.to_bits(), 1e-17f64.to_bits());
+        } else {
+            panic!("result did not round trip");
+        }
+    }
+
+    #[test]
+    fn aborted_and_na_results_round_trip() {
+        for eval in [
+            CellEval::Na,
+            CellEval::Aborted { reason: AbortReason::NanLoss, step: 37 },
+        ] {
+            let m = Msg::Result { flat: 0, key: "w=4,a=4".into(), attempt: 1, eval };
+            assert_eq!(round_trip(&m), m);
+        }
+    }
+
+    #[test]
+    fn non_finite_eval_flattens_to_na_like_the_cache() {
+        let m = Msg::Result {
+            flat: 0,
+            key: "w=4,a=4".into(),
+            attempt: 1,
+            eval: CellEval::Ok(EvalResult {
+                n: 10,
+                top1_err: f64::NAN,
+                top5_err: 0.1,
+                mean_loss: 1.0,
+            }),
+        };
+        match round_trip(&m) {
+            Msg::Result { eval: CellEval::Na, .. } => {}
+            other => panic!("expected na, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn eof_and_oversize_and_garbage() {
+        // clean EOF at a boundary
+        assert!(matches!(
+            read_frame(&mut (&[] as &[u8]), None).unwrap(),
+            Frame::Eof
+        ));
+        // EOF mid-length-prefix is truncation, not clean
+        assert!(read_frame(&mut (&[1u8, 0] as &[u8]), None).is_err());
+        // oversized length prefix
+        let big = ((MAX_FRAME + 1) as u32).to_le_bytes();
+        assert!(read_frame(&mut (&big[..] as &[u8]), None).is_err());
+        // valid length, garbage payload
+        let mut buf = 3u32.to_le_bytes().to_vec();
+        buf.extend_from_slice(b"{x}");
+        assert!(read_frame(&mut buf.as_slice(), None).is_err());
+        // unknown message type
+        let payload = br#"{"type":"warp-core-breach"}"#;
+        let mut buf = (payload.len() as u32).to_le_bytes().to_vec();
+        buf.extend_from_slice(payload);
+        assert!(read_frame(&mut buf.as_slice(), None).is_err());
+    }
+
+    #[test]
+    fn oversize_is_rejected_on_the_write_side_too() {
+        let m = Msg::Fatal { reason: "x".repeat(MAX_FRAME) };
+        let mut buf = Vec::new();
+        assert!(write_frame(&mut buf, &m).is_err());
+        assert!(buf.is_empty(), "nothing must hit the wire");
+    }
+}

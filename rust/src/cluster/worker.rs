@@ -1,0 +1,393 @@
+//! The cluster worker: connect, pull cells, compute, report.
+//!
+//! A worker is stateless between cells -- everything it needs to run a
+//! cell travels in the `Assign` message plus its own flags (which must
+//! describe the same sweep as the coordinator's, enforced by the
+//! fingerprint handshake).  Determinism therefore holds regardless of
+//! which worker computes which cell, which is what makes the
+//! coordinator's duplicate bit-check meaningful.
+//!
+//! A heartbeat thread beats at the coordinator-assigned interval even
+//! while a cell is computing, so a long cell is not mistaken for a dead
+//! worker.  Connection loss (including injected drops) triggers a
+//! bounded reconnect loop with linear backoff; cells whose result could
+//! not be delivered are simply recomputed by whoever is assigned them
+//! next -- bit-identically.
+
+use std::net::TcpStream;
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::cluster::fault::{FaultLayer, FaultSpec, SendKind};
+use crate::cluster::proto::{read_frame, write_frame, Frame, Msg, PROTO_VERSION};
+use crate::coordinator::grid::{grid_jobs, CellJob};
+use crate::coordinator::regimes::{CellEval, CellResult, Regime};
+use crate::coordinator::report::{CellCache, CACHE_VERSION};
+use crate::coordinator::shard;
+use crate::error::{FxpError, Result};
+
+/// One cell executor.  Implementations: synthetic (tests/CI) and the
+/// real backend runner in the CLI.
+pub trait CellExec {
+    fn run(&mut self, job: &CellJob) -> Result<CellResult>;
+}
+
+/// The engine-free executor (`--synthetic`), same cells as
+/// `fxpnet grid --synthetic`.
+pub struct SyntheticExec;
+
+impl CellExec for SyntheticExec {
+    fn run(&mut self, job: &CellJob) -> Result<CellResult> {
+        crate::coordinator::grid::synthetic_cell(job)
+    }
+}
+
+/// Worker knobs (`fxpnet cluster worker` flags).
+#[derive(Clone, Debug)]
+pub struct WorkerOpts {
+    /// Coordinator `host:port`.
+    pub connect: String,
+    /// Identity reported at handshake (also seeds fault injection).
+    pub name: String,
+    /// Optional static `I/N` pin; the coordinator then only assigns
+    /// this worker cells of that shard.
+    pub shard: Option<(usize, usize)>,
+    /// Deterministic fault injection (`--inject`).
+    pub fault: FaultSpec,
+    /// Reconnect attempts after a lost connection before giving up.
+    pub reconnect_cap: usize,
+    /// Pause between reconnect attempts (multiplied by the attempt
+    /// number).
+    pub reconnect_backoff: Duration,
+}
+
+impl Default for WorkerOpts {
+    fn default() -> Self {
+        WorkerOpts {
+            connect: String::new(),
+            name: format!("{}-{}", shard::hostname(), std::process::id()),
+            shard: None,
+            fault: FaultSpec::default(),
+            reconnect_cap: 8,
+            reconnect_backoff: Duration::from_millis(200),
+        }
+    }
+}
+
+/// What one worker process did (its exit report).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WorkerReport {
+    /// cells computed (whether or not the result was delivered)
+    pub computed: usize,
+    /// results delivered to the coordinator
+    pub delivered: usize,
+    /// reconnects after a lost/dropped connection
+    pub reconnects: usize,
+    /// the sweep was complete when the coordinator said drain
+    pub sweep_complete: bool,
+}
+
+/// Why the inner connection loop ended.
+enum ConnEnd {
+    /// coordinator said `Drain`
+    Drained { complete: bool },
+    /// connection lost (EOF, IO error, injected drop)
+    Lost(String),
+    /// unrecoverable (Reject, Fatal, protocol violation, injected kill)
+    Fatal(FxpError),
+}
+
+/// Send a frame through the shared (heartbeat-contended) stream,
+/// applying fault injection.  `Ok(false)` = injected drop (the caller
+/// treats the connection as lost).
+fn faulty_send(
+    stream: &Mutex<TcpStream>,
+    fault: &Mutex<FaultLayer>,
+    kind: SendKind,
+    msg: &Msg,
+) -> Result<bool> {
+    let (dropped, delay) = {
+        let mut f = fault.lock().unwrap();
+        (f.should_drop(kind), f.delay())
+    };
+    if !delay.is_zero() {
+        std::thread::sleep(delay);
+    }
+    if dropped {
+        log::warn!("fault injection: dropping {kind:?} send");
+        return Ok(false);
+    }
+    write_frame(&mut *stream.lock().unwrap(), msg)?;
+    Ok(true)
+}
+
+/// Run one connection to completion (drain/loss/fatal).
+#[allow(clippy::too_many_arguments)]
+fn run_conn(
+    opts: &WorkerOpts,
+    fp: u64,
+    jobs: &[CellJob],
+    exec: &mut dyn CellExec,
+    fault: &Mutex<FaultLayer>,
+    report: &mut WorkerReport,
+) -> ConnEnd {
+    let stream = match TcpStream::connect(&opts.connect) {
+        Ok(s) => s,
+        Err(e) => return ConnEnd::Lost(format!("connect {}: {e}", opts.connect)),
+    };
+    let _ = stream.set_nodelay(true);
+    if let Err(e) = stream.set_read_timeout(Some(Duration::from_millis(50))) {
+        return ConnEnd::Lost(format!("set_read_timeout: {e}"));
+    }
+
+    // handshake (direct writes: the heartbeat thread doesn't exist yet)
+    let mut s = stream;
+    let hello = Msg::Hello {
+        proto: PROTO_VERSION,
+        cache_version: CACHE_VERSION,
+        name: opts.name.clone(),
+        pid: std::process::id() as u64,
+        host: shard::hostname(),
+        fp,
+        shard: opts.shard,
+    };
+    if let Err(e) = write_frame(&mut s, &hello) {
+        return ConnEnd::Lost(format!("hello: {e}"));
+    }
+    let welcome_by = std::time::Instant::now() + Duration::from_secs(10);
+    let hb_interval = loop {
+        match read_frame(&mut s, None) {
+            Ok(Frame::TimedOut) => {
+                if std::time::Instant::now() >= welcome_by {
+                    return ConnEnd::Lost("no welcome within 10s".into());
+                }
+            }
+            Ok(Frame::Eof) => return ConnEnd::Lost("EOF at handshake".into()),
+            Ok(Frame::Msg(Msg::Welcome { heartbeat_ms, .. })) => {
+                break Duration::from_millis(heartbeat_ms.max(10));
+            }
+            Ok(Frame::Msg(Msg::Reject { reason })) => {
+                return ConnEnd::Fatal(FxpError::config(format!(
+                    "coordinator rejected this worker: {reason}"
+                )));
+            }
+            Ok(Frame::Msg(other)) => {
+                return ConnEnd::Fatal(FxpError::config(format!(
+                    "bad handshake reply: {other:?}"
+                )));
+            }
+            Err(e) => return ConnEnd::Lost(format!("handshake: {e}")),
+        }
+    };
+
+    // split the socket: the main loop reads on one handle while the
+    // heartbeat thread and the main loop share the write side under a
+    // mutex -- a blocked read can then never starve a heartbeat
+    let write_half = match s.try_clone() {
+        Ok(w) => Arc::new(Mutex::new(w)),
+        Err(e) => return ConnEnd::Lost(format!("try_clone: {e}")),
+    };
+    let mut read_half = s;
+    let stop_hb = Arc::new(AtomicBool::new(false));
+    std::thread::scope(|scope| {
+        {
+            let hb_stream = Arc::clone(&write_half);
+            let stop = Arc::clone(&stop_hb);
+            scope.spawn(move || {
+                while !stop.load(Ordering::SeqCst) {
+                    std::thread::sleep(hb_interval);
+                    if stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let (dropped, delay) = {
+                        let mut f = fault.lock().unwrap();
+                        (f.should_drop(SendKind::Heartbeat), f.delay())
+                    };
+                    if !delay.is_zero() {
+                        std::thread::sleep(delay);
+                    }
+                    if dropped {
+                        continue; // a missed beat, not an outage
+                    }
+                    if write_frame(&mut *hb_stream.lock().unwrap(), &Msg::Heartbeat)
+                        .is_err()
+                    {
+                        break; // main loop will notice the loss too
+                    }
+                }
+            });
+        }
+        let end = conn_loop(
+            opts,
+            jobs,
+            exec,
+            fault,
+            &write_half,
+            &mut read_half,
+            report,
+        );
+        stop_hb.store(true, Ordering::SeqCst);
+        end
+    })
+}
+
+/// The request/assign/result loop on an established connection.
+#[allow(clippy::too_many_arguments)]
+fn conn_loop(
+    opts: &WorkerOpts,
+    jobs: &[CellJob],
+    exec: &mut dyn CellExec,
+    fault: &Mutex<FaultLayer>,
+    write: &Mutex<TcpStream>,
+    read: &mut TcpStream,
+    report: &mut WorkerReport,
+) -> ConnEnd {
+    loop {
+        match faulty_send(write, fault, SendKind::Request, &Msg::Request) {
+            Ok(true) => {}
+            Ok(false) => return ConnEnd::Lost("injected drop (request)".into()),
+            Err(e) => return ConnEnd::Lost(format!("request: {e}")),
+        }
+        let assigned = loop {
+            match read_frame(read, None) {
+                Ok(Frame::TimedOut) => continue,
+                Ok(Frame::Eof) => return ConnEnd::Lost("EOF".into()),
+                Ok(Frame::Msg(Msg::Wait { ms })) => {
+                    std::thread::sleep(Duration::from_millis(ms.min(1000)));
+                    break None;
+                }
+                Ok(Frame::Msg(Msg::Drain { complete })) => {
+                    return ConnEnd::Drained { complete };
+                }
+                Ok(Frame::Msg(Msg::Fatal { reason })) => {
+                    return ConnEnd::Fatal(FxpError::config(format!(
+                        "coordinator reported fatal: {reason}"
+                    )));
+                }
+                Ok(Frame::Msg(Msg::Assign { flat, key, attempt })) => {
+                    break Some((flat, key, attempt));
+                }
+                Ok(Frame::Msg(other)) => {
+                    return ConnEnd::Fatal(FxpError::config(format!(
+                        "unexpected message awaiting assignment: {other:?}"
+                    )));
+                }
+                Err(e) => return ConnEnd::Lost(format!("read: {e}")),
+            }
+        };
+        let Some((flat, key, attempt)) = assigned else {
+            continue; // waited; re-request
+        };
+
+        let job = match jobs.get(flat) {
+            Some(j) if CellCache::key(j) == key => *j,
+            _ => {
+                return ConnEnd::Fatal(FxpError::config(format!(
+                    "coordinator assigned unknown cell flat={flat} key='{key}'"
+                )));
+            }
+        };
+        if fault.lock().unwrap().kill_on_assign() {
+            return ConnEnd::Fatal(FxpError::config(
+                "fault injection: kill-after=0 (dying on first assignment)"
+                    .into(),
+            ));
+        }
+
+        log::info!("computing cell {key} (flat {flat}, attempt {attempt})");
+        // a panicking or erroring cell becomes n/a -- identical to the
+        // single-process sweep's semantics, so tables stay bit-identical
+        let eval = match std::panic::catch_unwind(AssertUnwindSafe(|| {
+            exec.run(&job)
+        })) {
+            Ok(Ok(CellEval::Ok(e)))
+                if !(e.top1_err.is_finite()
+                    && e.top5_err.is_finite()
+                    && e.mean_loss.is_finite()) =>
+            {
+                CellEval::Na
+            }
+            Ok(Ok(eval)) => eval,
+            Ok(Err(e)) => {
+                log::warn!("cell {key} failed: {e}; recording n/a");
+                CellEval::Na
+            }
+            Err(_) => {
+                log::warn!("cell {key} panicked; recording n/a");
+                CellEval::Na
+            }
+        };
+        report.computed += 1;
+
+        if fault.lock().unwrap().should_kill_after_compute() {
+            // die *between* computing and sending: the canonical
+            // mid-cell kill, guaranteeing the coordinator re-dispatches
+            return ConnEnd::Fatal(FxpError::config(format!(
+                "fault injection: kill-after reached after computing {key}"
+            )));
+        }
+
+        let msg = Msg::Result { flat, key, attempt, eval };
+        match faulty_send(write, fault, SendKind::Result, &msg) {
+            Ok(true) => report.delivered += 1,
+            Ok(false) => return ConnEnd::Lost("injected drop (result)".into()),
+            Err(e) => return ConnEnd::Lost(format!("result: {e}")),
+        }
+    }
+}
+
+/// Run a worker until the coordinator drains it, the connection is
+/// unrecoverable, or a fatal condition (including injected kills).
+///
+/// `fp` must be derived from the worker's own flags with
+/// [`crate::cluster::sweep_fingerprint`]; the coordinator compares it to
+/// its own at handshake.
+pub fn run_worker(
+    regime: Regime,
+    base_seed: u64,
+    fp: u64,
+    exec: &mut dyn CellExec,
+    opts: &WorkerOpts,
+) -> Result<WorkerReport> {
+    if let Some((i, n)) = opts.shard {
+        shard::validate_shard(i, n)?;
+    }
+    let jobs = grid_jobs(regime, base_seed);
+    let fault = Mutex::new(FaultLayer::new(opts.fault, base_seed, &opts.name));
+    let mut report = WorkerReport::default();
+    let mut lost = 0usize;
+    loop {
+        match run_conn(opts, fp, &jobs, exec, &fault, &mut report) {
+            ConnEnd::Drained { complete } => {
+                report.sweep_complete = complete;
+                log::info!(
+                    "drained by coordinator (sweep complete: {complete}); \
+                     computed {} cells, delivered {}",
+                    report.computed,
+                    report.delivered
+                );
+                return Ok(report);
+            }
+            ConnEnd::Fatal(e) => return Err(e),
+            ConnEnd::Lost(why) => {
+                lost += 1;
+                if lost > opts.reconnect_cap {
+                    return Err(FxpError::config(format!(
+                        "connection lost ({why}) and reconnect cap \
+                         {} exhausted",
+                        opts.reconnect_cap
+                    )));
+                }
+                report.reconnects += 1;
+                let wait = opts.reconnect_backoff * lost as u32;
+                log::warn!(
+                    "connection lost ({why}); reconnect {lost}/{} in {wait:?}",
+                    opts.reconnect_cap
+                );
+                std::thread::sleep(wait);
+            }
+        }
+    }
+}

@@ -239,14 +239,12 @@ pub fn in_shard(flat: usize, shard: Option<(usize, usize)>) -> bool {
 }
 
 fn check_shard(shard: Option<(usize, usize)>) -> Result<()> {
-    if let Some((index, count)) = shard {
-        if count == 0 || index >= count {
-            return Err(FxpError::config(format!(
-                "bad shard {index}/{count}: need index < count, count > 0"
-            )));
-        }
+    match shard {
+        // single source of truth for the I/N rule, shared with the CLI's
+        // --shard parsing and the cluster handshake
+        Some((index, count)) => shard::validate_shard(index, count),
+        None => Ok(()),
     }
-    Ok(())
 }
 
 /// What a sweep did, beyond the table itself.
@@ -538,10 +536,28 @@ pub fn load_p1_net(
             }
         },
         Err(e) => {
-            log::warn!(
-                "p1 net cache {}: unreadable ({e}); retraining",
-                path.display()
-            );
+            // quarantine, don't propagate: a truncated/corrupt entry
+            // (e.g. a crash mid-write on a pre-fsync build) must cost a
+            // retrain, not a cell error -- and renaming it aside keeps
+            // the evidence while letting the retrain's atomic save
+            // reclaim the path
+            let quarantined = path.with_file_name(format!(
+                "{}.corrupt",
+                path.file_name().and_then(|n| n.to_str()).unwrap_or("p1net.ckpt")
+            ));
+            match std::fs::rename(&path, &quarantined) {
+                Ok(()) => log::warn!(
+                    "p1 net cache {}: unreadable ({e}); quarantined to {}; \
+                     retraining",
+                    path.display(),
+                    quarantined.display()
+                ),
+                Err(re) => log::warn!(
+                    "p1 net cache {}: unreadable ({e}); quarantine rename \
+                     failed ({re}); retraining",
+                    path.display()
+                ),
+            }
             None
         }
     }
@@ -565,7 +581,9 @@ pub fn save_p1_net(
     }
     match net {
         None => {
-            std::fs::write(p1_na_path(dir, arch, w, base_seed, fp), b"")?;
+            let na = p1_na_path(dir, arch, w, base_seed, fp);
+            std::fs::write(&na, b"")?;
+            crate::util::durable::sync_parent_dir(&na)?;
         }
         Some(params) => {
             let path = p1_net_path(dir, arch, w, base_seed, fp);
@@ -574,8 +592,11 @@ pub fn save_p1_net(
                 path.file_name().and_then(|n| n.to_str()).unwrap_or("p1net"),
                 std::process::id()
             ));
+            // save_params fsyncs the temp file; syncing the directory
+            // after the rename completes the crash-durable sequence
             checkpoint::save_params(&tmp, arch, steps, params)?;
             std::fs::rename(&tmp, &path)?;
+            crate::util::durable::sync_parent_dir(&path)?;
         }
     }
     Ok(())
@@ -719,6 +740,65 @@ impl ParallelGridRunner {
             .zip(slots)
             .map(|(w, slot)| (w.label(), slot.flatten()))
             .collect())
+    }
+
+    /// Execute one cell job on a borrowed backend, training (and
+    /// disk-caching, when `p1_dir` is set) the width's float-activation
+    /// seed net on demand.  Cluster workers pull arbitrary cells one at
+    /// a time, so seed nets are trained lazily per width instead of in
+    /// `run_sweep`'s up-front wave; `p1` memoizes them across the
+    /// worker's lifetime.  Seeding is identical to both other runners,
+    /// so results are bit-identical to a single-process sweep.
+    pub fn run_cell_job(
+        &self,
+        backend: &dyn Backend,
+        p1: &mut HashMap<String, Option<ParamSet>>,
+        p1_dir: Option<&Path>,
+        job: &CellJob,
+    ) -> Result<CellResult> {
+        if job.regime.needs_p1_net() && !p1.contains_key(&job.w.label()) {
+            // the float-width "seed net" is just the base net; not worth
+            // a cache file (same rule as train_p1_nets)
+            let cacheable = job.w != WidthSpec::Float;
+            let fp = p1_dir.map(|_| self.p1_cache_fingerprint());
+            let loaded = match (p1_dir, fp, cacheable) {
+                (Some(dir), Some(fp), true) => {
+                    let spec = backend.arch(&self.arch)?;
+                    load_p1_net(dir, &self.arch, &spec.params, job.w, self.cfg.seed, fp)
+                }
+                _ => None,
+            };
+            let net = match loaded {
+                Some(cached) => cached,
+                None => {
+                    let ctx =
+                        self.cell_ctx(backend, p1_seed(self.cfg.seed, job.w));
+                    let net = regimes::train_float_act_net(&ctx, &self.base, job.w)?;
+                    if let (Some(dir), Some(fp), true) = (p1_dir, fp, cacheable) {
+                        if let Err(e) = save_p1_net(
+                            dir,
+                            &self.arch,
+                            job.w,
+                            self.cfg.seed,
+                            fp,
+                            self.cfg.finetune_steps as u64,
+                            &net,
+                        ) {
+                            log::warn!("p1 net cache save failed: {e}");
+                        }
+                    }
+                    net
+                }
+            };
+            p1.insert(job.w.label(), net);
+        }
+        let p1_net = if job.regime.needs_p1_net() {
+            p1.get(&job.w.label()).and_then(|o| o.as_ref())
+        } else {
+            None
+        };
+        let ctx = self.cell_ctx(backend, job.seed);
+        regimes::dispatch_cell(&ctx, job.regime, &self.base, p1_net, job.w, job.a)
     }
 
     /// Run the full paper grid for `regime` under `opts`.
@@ -948,6 +1028,27 @@ mod tests {
         for j in &jobs {
             assert_ne!(j.seed, p1_seed(42, j.w));
         }
+    }
+
+    #[test]
+    fn corrupt_p1_checkpoint_is_quarantined_not_fatal() {
+        let dir = std::env::temp_dir().join("fxp_p1_quarantine_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = p1_net_path(&dir, "tiny", W::Bits(8), 42, 0xfeed);
+        // truncated checkpoint: the magic, then EOF mid-header
+        std::fs::write(&path, b"FXPCKPT1\x04").unwrap();
+        let got = load_p1_net(&dir, "tiny", &[], W::Bits(8), 42, 0xfeed);
+        assert!(got.is_none(), "corrupt entry must mean 'retrain'");
+        assert!(!path.exists(), "corrupt file must be moved aside");
+        let quarantined = dir.join(format!(
+            "{}.corrupt",
+            path.file_name().unwrap().to_str().unwrap()
+        ));
+        assert!(quarantined.exists(), "quarantined copy must be kept");
+        // the path is free again: a missing entry, not an error loop
+        assert!(load_p1_net(&dir, "tiny", &[], W::Bits(8), 42, 0xfeed).is_none());
+        assert!(!path.exists());
     }
 
     #[test]

@@ -216,6 +216,64 @@ pub struct CacheHeader {
     pub shard: Option<(usize, usize)>,
 }
 
+/// One cell result in the cache's JSON shape -- the single encoding
+/// shared by `CellCache` files and the cluster wire protocol
+/// ([`cluster::proto`](crate::cluster::proto)), so a result round-trips
+/// bit-exactly through either (floats keep Rust's shortest-round-trip
+/// formatting).  A non-finite "ok" eval is encoded as `"na"`: JSON
+/// cannot carry NaN/inf, and a non-finite eval is the paper's
+/// divergence anyway.
+pub fn cell_eval_to_json(entry: &CellEval) -> Json {
+    match entry {
+        CellEval::Na => Json::obj(vec![("status", Json::Str("na".into()))]),
+        CellEval::Ok(e)
+            if !(e.top1_err.is_finite()
+                && e.top5_err.is_finite()
+                && e.mean_loss.is_finite()) =>
+        {
+            Json::obj(vec![("status", Json::Str("na".into()))])
+        }
+        CellEval::Ok(e) => Json::obj(vec![
+            ("status", Json::Str("ok".into())),
+            ("n", Json::from(e.n)),
+            ("top1_err", Json::Num(e.top1_err)),
+            ("top5_err", Json::Num(e.top5_err)),
+            ("loss", Json::Num(e.mean_loss)),
+        ]),
+        CellEval::Aborted { reason, step } => Json::obj(vec![
+            ("status", Json::Str("aborted".into())),
+            ("reason", Json::Str(reason.as_str().into())),
+            ("step", Json::from(*step)),
+        ]),
+    }
+}
+
+/// Strictly parse one cell's JSON ([`cell_eval_to_json`]'s inverse).
+/// `key` only labels errors.
+pub fn cell_eval_from_json(key: &str, cell: &Json) -> Result<CellEval> {
+    Ok(match cell.get("status")?.as_str()? {
+        "na" => CellEval::Na,
+        "ok" => CellEval::Ok(EvalResult {
+            n: cell.get("n")?.as_usize()?,
+            top1_err: cell.get("top1_err")?.as_f64()?,
+            top5_err: cell.get("top5_err")?.as_f64()?,
+            mean_loss: cell.get("loss")?.as_f64()?,
+        }),
+        "aborted" => {
+            let rs = cell.get("reason")?.as_str()?;
+            let reason = AbortReason::parse(rs).ok_or_else(|| {
+                FxpError::Json(format!("cell '{key}': bad abort reason '{rs}'"))
+            })?;
+            CellEval::Aborted { reason, step: cell.get("step")?.as_usize()? }
+        }
+        other => {
+            return Err(FxpError::Json(format!(
+                "cell '{key}': bad status '{other}'"
+            )))
+        }
+    })
+}
+
 /// Strictly parse a cache file's text into header + cells.  Unlike
 /// `CellCache::open`, *any* schema problem is an error -- `grid merge`
 /// must refuse a shard file it cannot fully account for rather than
@@ -248,30 +306,7 @@ pub fn parse_cache_text(
     };
     let mut cells = BTreeMap::new();
     for (key, cell) in j.get("cells")?.as_obj()? {
-        let entry = match cell.get("status")?.as_str()? {
-            "na" => CellEval::Na,
-            "ok" => CellEval::Ok(EvalResult {
-                n: cell.get("n")?.as_usize()?,
-                top1_err: cell.get("top1_err")?.as_f64()?,
-                top5_err: cell.get("top5_err")?.as_f64()?,
-                mean_loss: cell.get("loss")?.as_f64()?,
-            }),
-            "aborted" => {
-                let rs = cell.get("reason")?.as_str()?;
-                let reason = AbortReason::parse(rs).ok_or_else(|| {
-                    FxpError::Json(format!(
-                        "cell '{key}': bad abort reason '{rs}'"
-                    ))
-                })?;
-                CellEval::Aborted { reason, step: cell.get("step")?.as_usize()? }
-            }
-            other => {
-                return Err(FxpError::Json(format!(
-                    "cell '{key}': bad status '{other}'"
-                )))
-            }
-        };
-        cells.insert(key.clone(), entry);
+        cells.insert(key.clone(), cell_eval_from_json(key, cell)?);
     }
     Ok((header, cells))
 }
@@ -447,24 +482,7 @@ impl CellCache {
     fn to_json(&self) -> Json {
         let mut cells = BTreeMap::new();
         for (key, entry) in &self.cells {
-            let cell = match entry {
-                CellEval::Na => {
-                    Json::obj(vec![("status", Json::Str("na".into()))])
-                }
-                CellEval::Ok(e) => Json::obj(vec![
-                    ("status", Json::Str("ok".into())),
-                    ("n", Json::from(e.n)),
-                    ("top1_err", Json::Num(e.top1_err)),
-                    ("top5_err", Json::Num(e.top5_err)),
-                    ("loss", Json::Num(e.mean_loss)),
-                ]),
-                CellEval::Aborted { reason, step } => Json::obj(vec![
-                    ("status", Json::Str("aborted".into())),
-                    ("reason", Json::Str(reason.as_str().into())),
-                    ("step", Json::from(*step)),
-                ]),
-            };
-            cells.insert(key.clone(), cell);
+            cells.insert(key.clone(), cell_eval_to_json(entry));
         }
         let mut pairs = vec![
             ("version", Json::from(CACHE_VERSION)),
@@ -480,7 +498,11 @@ impl CellCache {
         Json::obj(pairs)
     }
 
-    /// Atomically persist (write temp file, rename over the target).
+    /// Durably persist (write temp file, fsync it, rename over the
+    /// target, fsync the directory -- see [`crate::util::durable`]): a crash or
+    /// power loss mid-save leaves either the previous cache or the new
+    /// one, never a truncated-but-renamed file that a later `--resume`
+    /// or `grid merge` would read.
     ///
     /// The temp name is unique per (process, save): `a.json` and a
     /// sibling cache `a.json.tmp` must not collide, and two processes
@@ -504,9 +526,11 @@ impl CellCache {
             std::process::id(),
             TMP_SEQ.fetch_add(1, Ordering::Relaxed)
         ));
-        std::fs::write(&tmp, self.to_json().to_string())?;
-        std::fs::rename(&tmp, &self.path)?;
-        Ok(())
+        crate::util::durable::write_atomic(
+            &self.path,
+            &tmp,
+            self.to_json().to_string().as_bytes(),
+        )
     }
 }
 

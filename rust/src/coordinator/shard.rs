@@ -305,6 +305,26 @@ impl Drop for FileLock {
 
 // -- per-shard cache ----------------------------------------------------------
 
+/// Validate a shard layout: positive count, `index < count`.  The
+/// single definition of the `I/N` rule -- the CLI's `--shard` parsing
+/// (for both `grid` and `cluster worker`), the sweep engine, and the
+/// cluster handshake all reject through it, so a bad layout fails at
+/// parse time with the same message everywhere.
+pub fn validate_shard(index: usize, count: usize) -> Result<()> {
+    if count == 0 {
+        return Err(FxpError::config(format!(
+            "bad shard {index}/{count}: shard count must be > 0"
+        )));
+    }
+    if index >= count {
+        return Err(FxpError::config(format!(
+            "bad shard {index}/{count}: shard index {index} must be < shard \
+             count {count}"
+        )));
+    }
+    Ok(())
+}
+
 /// Per-shard cache file name: `cache.json` -> `cache.shard-I-of-N.json`.
 pub fn shard_cache_path(base: &Path, index: usize, count: usize) -> PathBuf {
     let stem = base
@@ -645,8 +665,12 @@ pub struct MergeOutcome {
 
 /// Bit-exact equality of two cached cell results ("n/a" only equals
 /// "n/a", an abort only equals the same abort at the same step; floats
-/// compare by representation, not by `==`).
-fn cells_bit_equal(a: &CellEval, b: &CellEval) -> bool {
+/// compare by `to_bits`, not by `==`): the determinism contract's
+/// equality.  `grid merge` uses it to tell a harmless duplicate from a
+/// corrupt shard, and the cluster coordinator uses it to check every
+/// re-dispatched cell's result against what a presumed-dead worker
+/// already delivered.
+pub fn cells_bit_equal(a: &CellEval, b: &CellEval) -> bool {
     match (a, b) {
         (CellEval::Na, CellEval::Na) => true,
         (CellEval::Ok(x), CellEval::Ok(y)) => {

@@ -55,6 +55,7 @@
 
 pub mod bench;
 pub mod cli;
+pub mod cluster;
 pub mod coordinator;
 pub mod data;
 pub mod error;

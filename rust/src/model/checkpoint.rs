@@ -69,6 +69,9 @@ impl Checkpoint {
             w.write_all(&bytes)?;
         }
         w.flush()?;
+        // fsync: checkpoint writes feed atomic-rename caches (p1 seed
+        // nets) whose rename must never land before the data blocks do
+        w.get_ref().sync_all()?;
         Ok(())
     }
 

@@ -5,6 +5,7 @@
 //! env_logger, ...) are re-implemented here at the size this project
 //! needs (DESIGN.md section 2, substitution table).
 
+pub mod durable;
 pub mod json;
 pub mod logging;
 pub mod rng;

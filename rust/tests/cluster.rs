@@ -1,0 +1,463 @@
+//! End-to-end cluster tests: a real coordinator and real workers over
+//! loopback TCP, in one process.
+//!
+//! The contract under test is the one the module docs promise: cluster
+//! execution is a *scheduling* change only.  Whatever the workers do --
+//! die mid-cell, drop frames, reconnect, get rejected -- the final cell
+//! cache and table must be byte-identical to a single-process
+//! `run_sweep_with` reference, and every failure mode must land in the
+//! summary accounting rather than in the results.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use fxpnet::cluster::{
+    self, run_coordinator, run_worker, CellExec, ClusterOpts, ClusterOutcome,
+    FaultSpec, HeartbeatCfg, SyntheticExec, WorkerOpts,
+};
+use fxpnet::coordinator::config::RunCfg;
+use fxpnet::coordinator::grid::{self, CellJob, GridResult, SweepOpts};
+use fxpnet::coordinator::regimes::{CellResult, Regime};
+use fxpnet::coordinator::report::save_grid;
+use fxpnet::coordinator::shard::{LockOpts, ShardedCache};
+use fxpnet::error::Result;
+
+const ARCH: &str = "tiny";
+const SEED: u64 = 42;
+
+fn fp() -> u64 {
+    cluster::sweep_fingerprint(ARCH, Regime::Vanilla, SEED, true, &RunCfg::smoke())
+}
+
+fn temp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("fxp_cluster_{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Timings tuned for tests: fast heartbeats, fast death detection, fast
+/// re-dispatch -- the same code paths as production defaults, sooner.
+fn fast_opts(dir: &Path) -> ClusterOpts {
+    ClusterOpts {
+        listen: "127.0.0.1:0".into(),
+        port_file: Some(dir.join("port")),
+        hb: HeartbeatCfg {
+            interval: Duration::from_millis(50),
+            deadline: Duration::from_millis(400),
+        },
+        backoff_base: Duration::from_millis(10),
+        summary_path: Some(dir.join("summary.json")),
+        cache_path: dir.join("cache.json"),
+        ..ClusterOpts::default()
+    }
+}
+
+fn worker_opts(addr: &str, name: &str) -> WorkerOpts {
+    WorkerOpts {
+        connect: addr.to_string(),
+        name: name.to_string(),
+        reconnect_backoff: Duration::from_millis(10),
+        ..WorkerOpts::default()
+    }
+}
+
+/// The `--workers 1` single-process reference every cluster run must
+/// reproduce byte-for-byte.
+fn reference(dir: &Path) -> (grid::SweepOutcome, PathBuf) {
+    std::fs::create_dir_all(dir).unwrap();
+    let cache = dir.join("cache.json");
+    let opts = SweepOpts {
+        workers: 1,
+        cache_path: Some(cache.clone()),
+        ..SweepOpts::default()
+    };
+    let out = grid::run_sweep_with(
+        Regime::Vanilla,
+        ARCH,
+        SEED,
+        &opts,
+        |_wid| Ok(()),
+        |_, job| grid::synthetic_cell(job),
+    )
+    .unwrap();
+    assert!(out.is_complete());
+    (out, cache)
+}
+
+/// Exact bit pattern of a grid (None = n/a or aborted cell).
+fn bits(g: &GridResult) -> Vec<Option<(usize, u64, u64, u64)>> {
+    g.outcomes
+        .iter()
+        .flatten()
+        .map(|c| {
+            c.eval.ok().map(|e| {
+                (
+                    e.n,
+                    e.top1_err.to_bits(),
+                    e.top5_err.to_bits(),
+                    e.mean_loss.to_bits(),
+                )
+            })
+        })
+        .collect()
+}
+
+fn read_bytes(p: &Path) -> Vec<u8> {
+    std::fs::read(p).unwrap_or_else(|e| panic!("read {}: {e}", p.display()))
+}
+
+struct Cluster {
+    handle: JoinHandle<Result<ClusterOutcome>>,
+    addr: String,
+    shutdown: Arc<AtomicBool>,
+}
+
+fn start_coordinator(opts: ClusterOpts, fp: u64) -> Cluster {
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let flag = Arc::clone(&shutdown);
+    let port_file = opts.port_file.clone().expect("tests rendezvous via port file");
+    // a restarted coordinator must not hand out its predecessor's port
+    let _ = std::fs::remove_file(&port_file);
+    let handle = std::thread::spawn(move || {
+        run_coordinator(Regime::Vanilla, ARCH, SEED, fp, &opts, &flag)
+    });
+    // poll the atomically-written port file, exactly like a launcher
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let addr = loop {
+        if let Ok(s) = std::fs::read_to_string(&port_file) {
+            let s = s.trim();
+            if !s.is_empty() {
+                break s.to_string();
+            }
+        }
+        assert!(
+            Instant::now() < deadline,
+            "coordinator never wrote {}",
+            port_file.display()
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    };
+    Cluster { handle, addr, shutdown }
+}
+
+fn spawn_worker(opts: WorkerOpts) -> JoinHandle<Result<cluster::WorkerReport>> {
+    std::thread::spawn(move || {
+        run_worker(Regime::Vanilla, SEED, fp(), &mut SyntheticExec, &opts)
+    })
+}
+
+/// Synthetic cells slowed by a fixed pace, so multi-worker sweeps last
+/// long enough for every worker to join (and for drains/kills to land
+/// mid-sweep) without changing any cell's result.
+struct PacedExec(Duration);
+
+impl CellExec for PacedExec {
+    fn run(&mut self, job: &CellJob) -> Result<CellResult> {
+        std::thread::sleep(self.0);
+        grid::synthetic_cell(job)
+    }
+}
+
+fn spawn_paced_worker(
+    opts: WorkerOpts,
+    pace: Duration,
+) -> JoinHandle<Result<cluster::WorkerReport>> {
+    std::thread::spawn(move || {
+        run_worker(Regime::Vanilla, SEED, fp(), &mut PacedExec(pace), &opts)
+    })
+}
+
+/// Artifacts (cache file, table txt+json, grid bits) must be
+/// byte-identical to the single-process reference.
+fn assert_matches_reference(
+    outcome: &ClusterOutcome,
+    cache: &Path,
+    reference: &grid::SweepOutcome,
+    ref_cache: &Path,
+    scratch: &Path,
+) {
+    assert_eq!(bits(&outcome.grid), bits(&reference.grid));
+    assert_eq!(
+        read_bytes(cache),
+        read_bytes(ref_cache),
+        "cluster cache differs from the single-process reference"
+    );
+    let (a, b) = (scratch.join("cluster_out"), scratch.join("ref_out"));
+    save_grid(&outcome.grid, &a, 3).unwrap();
+    save_grid(&reference.grid, &b, 3).unwrap();
+    let n = outcome.grid.regime.table_number();
+    for f in [format!("table{n}_{ARCH}.txt"), format!("table{n}_{ARCH}.json")] {
+        assert_eq!(
+            read_bytes(&a.join(&f)),
+            read_bytes(&b.join(&f)),
+            "{f} differs from the reference"
+        );
+    }
+}
+
+#[test]
+fn three_workers_match_the_single_process_reference() {
+    let dir = temp_dir("basic");
+    let (reference, ref_cache) = reference(&dir.join("ref"));
+    let cdir = dir.join("cluster");
+    std::fs::create_dir_all(&cdir).unwrap();
+
+    let c = start_coordinator(fast_opts(&cdir), fp());
+    let workers: Vec<_> = (0..3)
+        .map(|i| {
+            spawn_paced_worker(
+                worker_opts(&c.addr, &format!("w{i}")),
+                Duration::from_millis(20),
+            )
+        })
+        .collect();
+
+    let outcome = c.handle.join().unwrap().unwrap();
+    for w in workers {
+        let report = w.join().unwrap().unwrap();
+        assert!(report.sweep_complete);
+    }
+    assert!(outcome.summary.complete);
+    assert!(!outcome.summary.drained);
+    assert_eq!(outcome.summary.cached, 0);
+    assert_eq!(outcome.summary.computed, outcome.summary.cells);
+    assert_eq!(outcome.summary.workers, 3);
+    assert_matches_reference(&outcome, &cdir.join("cache.json"), &reference, &ref_cache, &dir);
+
+    // summary JSON landed too
+    let summary = std::fs::read_to_string(cdir.join("summary.json")).unwrap();
+    assert!(summary.contains("\"complete\":true"), "{summary}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn chaos_killed_and_flaky_workers_leave_artifacts_byte_identical() {
+    let dir = temp_dir("chaos");
+    let (reference, ref_cache) = reference(&dir.join("ref"));
+    let cdir = dir.join("cluster");
+    std::fs::create_dir_all(&cdir).unwrap();
+
+    let c = start_coordinator(fast_opts(&cdir), fp());
+    // one worker killed mid-cell (computes its 2nd cell, dies before
+    // sending the result), one dropping/delaying frames, one steady
+    let pace = Duration::from_millis(20);
+    let victim = spawn_paced_worker(
+        WorkerOpts {
+            fault: FaultSpec::parse("kill-after=2").unwrap(),
+            ..worker_opts(&c.addr, "victim")
+        },
+        pace,
+    );
+    let flaky = spawn_paced_worker(
+        WorkerOpts {
+            fault: FaultSpec::parse("drop=0.15,delay=5").unwrap(),
+            reconnect_cap: 40,
+            ..worker_opts(&c.addr, "flaky")
+        },
+        pace,
+    );
+    let steady = spawn_paced_worker(worker_opts(&c.addr, "steady"), pace);
+
+    let outcome = c.handle.join().unwrap().unwrap();
+    let victim_err = victim.join().unwrap().expect_err("victim must die");
+    assert!(victim_err.to_string().contains("kill-after"), "{victim_err}");
+    // flaky may end drained or lose its last connection to a drop; both
+    // are fine -- the sweep's artifacts are what matters
+    let _ = flaky.join().unwrap();
+    let steady_report = steady.join().unwrap().unwrap();
+    assert!(steady_report.sweep_complete);
+
+    assert!(outcome.summary.complete);
+    assert!(
+        outcome.summary.redispatched >= 1,
+        "the mid-cell kill must force a re-dispatch: {:?}",
+        outcome.summary
+    );
+    assert!(outcome.summary.worker_deaths >= 1);
+    assert_matches_reference(&outcome, &cdir.join("cache.json"), &reference, &ref_cache, &dir);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn garbage_peers_are_dropped_without_derailing_the_sweep() {
+    let dir = temp_dir("garbage");
+    let (reference, ref_cache) = reference(&dir.join("ref"));
+    let cdir = dir.join("cluster");
+    std::fs::create_dir_all(&cdir).unwrap();
+
+    let c = start_coordinator(fast_opts(&cdir), fp());
+
+    // a peer whose length prefix exceeds MAX_FRAME, and one that sends
+    // a well-framed non-JSON payload: both must be dropped cleanly
+    let oversized = ((cluster::proto::MAX_FRAME + 1) as u32).to_le_bytes().to_vec();
+    let mut not_json = 5u32.to_le_bytes().to_vec();
+    not_json.extend_from_slice(b"hello");
+    for (what, wire) in [("oversized prefix", oversized), ("not json", not_json)] {
+        let mut s = TcpStream::connect(&c.addr).unwrap();
+        s.write_all(&wire).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let mut buf = [0u8; 64];
+        loop {
+            match s.read(&mut buf) {
+                Ok(0) => break, // coordinator closed on us: dropped
+                Ok(_) => {}
+                Err(e) => panic!("{what}: expected clean close, got {e}"),
+            }
+        }
+    }
+
+    // the sweep still completes through a well-behaved worker
+    let w = spawn_worker(worker_opts(&c.addr, "good"));
+    let outcome = c.handle.join().unwrap().unwrap();
+    assert!(w.join().unwrap().unwrap().sweep_complete);
+    assert!(outcome.summary.complete);
+    assert_matches_reference(&outcome, &cdir.join("cache.json"), &reference, &ref_cache, &dir);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn coordinator_resumes_from_a_partial_cache() {
+    let dir = temp_dir("resume");
+    let (reference, ref_cache) = reference(&dir.join("ref"));
+    let cdir = dir.join("cluster");
+    std::fs::create_dir_all(&cdir).unwrap();
+
+    // a previous coordinator "crashed" after 5 cells: seed the cache
+    let jobs = grid::grid_jobs(Regime::Vanilla, SEED);
+    {
+        let mut cache = ShardedCache::open(
+            &cdir.join("cache.json"),
+            ARCH,
+            Regime::Vanilla,
+            SEED,
+            None,
+            &LockOpts::default(),
+        )
+        .unwrap();
+        for job in &jobs[..5] {
+            let eval = grid::synthetic_cell(job).unwrap();
+            cache.put(job, &eval);
+        }
+        cache.save().unwrap();
+    } // advisory lock released here
+
+    let c = start_coordinator(fast_opts(&cdir), fp());
+    let w = spawn_worker(worker_opts(&c.addr, "w0"));
+    let outcome = c.handle.join().unwrap().unwrap();
+    assert!(w.join().unwrap().unwrap().sweep_complete);
+
+    assert!(outcome.summary.complete);
+    assert_eq!(outcome.summary.cached, 5);
+    assert_eq!(outcome.summary.computed, outcome.summary.cells - 5);
+    assert_matches_reference(&outcome, &cdir.join("cache.json"), &reference, &ref_cache, &dir);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn mismatched_fingerprints_are_rejected_at_handshake() {
+    let dir = temp_dir("fingerprint");
+    let cdir = dir.join("cluster");
+    std::fs::create_dir_all(&cdir).unwrap();
+
+    let c = start_coordinator(fast_opts(&cdir), fp());
+
+    // a worker whose flags describe a different sweep must be refused
+    let bad_opts = worker_opts(&c.addr, "misflagged");
+    let bad = std::thread::spawn(move || {
+        run_worker(Regime::Vanilla, SEED, fp() ^ 1, &mut SyntheticExec, &bad_opts)
+    });
+    let err = bad.join().unwrap().expect_err("wrong fingerprint must fail");
+    assert!(err.to_string().contains("rejected"), "{err}");
+
+    // an invalid shard pin fails before it even connects
+    let err = run_worker(
+        Regime::Vanilla,
+        SEED,
+        fp(),
+        &mut SyntheticExec,
+        &WorkerOpts { shard: Some((5, 3)), ..worker_opts(&c.addr, "badshard") },
+    )
+    .expect_err("shard 5/3 must fail validation");
+    assert!(err.to_string().contains("index"), "{err}");
+
+    let w = spawn_worker(worker_opts(&c.addr, "good"));
+    let outcome = c.handle.join().unwrap().unwrap();
+    assert!(w.join().unwrap().unwrap().sweep_complete);
+    assert!(outcome.summary.complete);
+    assert_eq!(outcome.summary.rejected, 1);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn a_cell_that_keeps_killing_workers_exceeds_the_retry_cap() {
+    let dir = temp_dir("retrycap");
+    let cdir = dir.join("cluster");
+    std::fs::create_dir_all(&cdir).unwrap();
+
+    let opts = ClusterOpts { retry_cap: 2, ..fast_opts(&cdir) };
+    let c = start_coordinator(opts, fp());
+
+    // two suicide workers in sequence, both pinned to cell flat=0 via a
+    // 1-cell shard: attempt 1 dies, attempt 2 dies, cap of 2 exceeded
+    for i in 0..2 {
+        let w = spawn_worker(WorkerOpts {
+            shard: Some((0, 16)),
+            fault: FaultSpec::parse("kill-after=1").unwrap(),
+            reconnect_cap: 2,
+            ..worker_opts(&c.addr, &format!("suicide{i}"))
+        });
+        let err = w.join().unwrap().expect_err("suicide worker must die");
+        assert!(err.to_string().contains("kill-after"), "{err}");
+    }
+
+    let err = c.handle.join().unwrap().expect_err("cap exhaustion is fatal");
+    assert!(err.to_string().contains("retry cap"), "{err}");
+
+    // the summary still lands, with the deaths accounted
+    let summary = std::fs::read_to_string(cdir.join("summary.json")).unwrap();
+    assert!(summary.contains("\"worker_deaths\":2"), "{summary}");
+    assert!(summary.contains("\"complete\":false"), "{summary}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn drain_mid_sweep_then_resume_completes_byte_identically() {
+    let dir = temp_dir("drain");
+    let (reference, ref_cache) = reference(&dir.join("ref"));
+    let cdir = dir.join("cluster");
+    std::fs::create_dir_all(&cdir).unwrap();
+
+    // phase 1: drain (as a SIGTERM handler would) partway through
+    let c = start_coordinator(fast_opts(&cdir), fp());
+    let w = spawn_paced_worker(worker_opts(&c.addr, "slow"), Duration::from_millis(40));
+    std::thread::sleep(Duration::from_millis(150));
+    c.shutdown.store(true, Ordering::SeqCst);
+
+    let outcome = c.handle.join().unwrap().unwrap();
+    let report = w.join().unwrap().unwrap();
+    assert!(!report.sweep_complete);
+    assert!(outcome.summary.drained);
+    assert!(!outcome.summary.complete);
+    assert!(
+        outcome.summary.computed >= 1
+            && outcome.summary.computed < outcome.summary.cells,
+        "drain must land mid-sweep: {:?}",
+        outcome.summary
+    );
+
+    // phase 2: a fresh coordinator resumes from the cache and finishes
+    let c2 = start_coordinator(fast_opts(&cdir), fp());
+    let w2 = spawn_worker(worker_opts(&c2.addr, "finisher"));
+    let outcome2 = c2.handle.join().unwrap().unwrap();
+    assert!(w2.join().unwrap().unwrap().sweep_complete);
+    assert!(outcome2.summary.complete);
+    assert_eq!(outcome2.summary.cached, outcome.summary.computed);
+    assert_matches_reference(&outcome2, &cdir.join("cache.json"), &reference, &ref_cache, &dir);
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,262 @@
+//! Wire-protocol property tests: every message round-trips through the
+//! frame codec -- including maximum-size frames and arbitrarily split
+//! reads -- and every malformed frame is a clean `Err` (the peer is
+//! dropped with an error, never a panic).
+
+use fxpnet::cluster::proto::{
+    read_frame, write_frame, Frame, Msg, MAX_FRAME, PROTO_VERSION,
+};
+use fxpnet::coordinator::evaluator::EvalResult;
+use fxpnet::coordinator::regimes::CellEval;
+use fxpnet::coordinator::trainer::AbortReason;
+use fxpnet::util::rng::Rng;
+
+/// A reader that hands out bytes in seeded random-size chunks, modeling
+/// TCP's freedom to split a frame at any byte boundary.
+struct SplitReader {
+    data: Vec<u8>,
+    pos: usize,
+    rng: Rng,
+}
+
+impl SplitReader {
+    fn new(data: Vec<u8>, seed: u64) -> Self {
+        SplitReader { data, pos: 0, rng: Rng::new(seed) }
+    }
+}
+
+impl std::io::Read for SplitReader {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        if self.pos >= self.data.len() {
+            return Ok(0);
+        }
+        let left = self.data.len() - self.pos;
+        // 1..=7 byte chunks: every frame gets split many ways
+        let n = (1 + self.rng.below(7)).min(left).min(buf.len());
+        buf[..n].copy_from_slice(&self.data[self.pos..self.pos + n]);
+        self.pos += n;
+        Ok(n)
+    }
+}
+
+fn all_messages() -> Vec<Msg> {
+    let evals = [
+        CellEval::Na,
+        CellEval::Aborted { reason: AbortReason::LossBlowup, step: 123 },
+        CellEval::Ok(EvalResult {
+            n: 2048,
+            top1_err: 0.1 + 0.2, // not exactly representable: bit test
+            top5_err: f64::MIN_POSITIVE,
+            mean_loss: 12345.6789,
+        }),
+    ];
+    let mut msgs = vec![
+        Msg::Request,
+        Msg::Heartbeat,
+        Msg::Wait { ms: 0 },
+        Msg::Wait { ms: u32::MAX as u64 },
+        Msg::Drain { complete: false },
+        Msg::Drain { complete: true },
+        Msg::Reject { reason: "fingerprint mismatch \"quoted\" \\ and\nnewline".into() },
+        Msg::Fatal { reason: "cell flat=3 exceeded retry cap".into() },
+        Msg::Welcome { heartbeat_ms: 50, deadline_ms: 400 },
+        Msg::Assign { flat: 15, key: "w=float,a=16".into(), attempt: 7 },
+        Msg::Hello {
+            proto: PROTO_VERSION,
+            cache_version: 4,
+            name: "worker-0".into(),
+            pid: u64::MAX,
+            host: "host.example".into(),
+            fp: u64::MAX - 1,
+            shard: None,
+        },
+        Msg::Hello {
+            proto: PROTO_VERSION,
+            cache_version: 4,
+            name: "w".into(),
+            pid: 1,
+            host: "h".into(),
+            fp: 0,
+            shard: Some((2, 3)),
+        },
+    ];
+    for (i, eval) in evals.into_iter().enumerate() {
+        msgs.push(Msg::Result {
+            flat: i,
+            key: format!("w=8,a={i}"),
+            attempt: i + 1,
+            eval,
+        });
+    }
+    msgs
+}
+
+#[test]
+fn every_message_round_trips_through_split_reads() {
+    for (i, msg) in all_messages().into_iter().enumerate() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, &msg).unwrap();
+        // several different split patterns per message
+        for seed in 0..8u64 {
+            let mut r = SplitReader::new(wire.clone(), seed * 1000 + i as u64);
+            match read_frame(&mut r, None).unwrap() {
+                Frame::Msg(back) => assert_eq!(back, msg, "msg #{i} seed {seed}"),
+                other => panic!("msg #{i}: expected message, got {other:?}"),
+            }
+            // and the stream then ends cleanly
+            assert!(matches!(read_frame(&mut r, None).unwrap(), Frame::Eof));
+        }
+    }
+}
+
+#[test]
+fn many_messages_on_one_stream() {
+    let msgs = all_messages();
+    let mut wire = Vec::new();
+    for m in &msgs {
+        write_frame(&mut wire, m).unwrap();
+    }
+    let mut r = SplitReader::new(wire, 0xFEED);
+    for (i, want) in msgs.iter().enumerate() {
+        match read_frame(&mut r, None).unwrap() {
+            Frame::Msg(got) => assert_eq!(&got, want, "stream position {i}"),
+            other => panic!("position {i}: {other:?}"),
+        }
+    }
+    assert!(matches!(read_frame(&mut r, None).unwrap(), Frame::Eof));
+}
+
+#[test]
+fn max_size_frame_exact_fit_round_trips_and_one_more_byte_fails() {
+    // find the reason length whose frame payload is exactly MAX_FRAME
+    let overhead = {
+        let m = Msg::Fatal { reason: String::new() };
+        m.to_json().to_string().len()
+    };
+    let exact = Msg::Fatal { reason: "x".repeat(MAX_FRAME - overhead) };
+    let mut wire = Vec::new();
+    write_frame(&mut wire, &exact).unwrap();
+    assert_eq!(wire.len(), 4 + MAX_FRAME);
+    let mut r = SplitReader::new(wire, 7);
+    match read_frame(&mut r, None).unwrap() {
+        Frame::Msg(back) => assert_eq!(back, exact),
+        other => panic!("{other:?}"),
+    }
+
+    let too_big = Msg::Fatal { reason: "x".repeat(MAX_FRAME - overhead + 1) };
+    let mut buf = Vec::new();
+    assert!(write_frame(&mut buf, &too_big).is_err());
+    assert!(buf.is_empty(), "an oversized frame must not hit the wire");
+}
+
+#[test]
+fn malformed_frames_error_cleanly_never_panic() {
+    let cases: Vec<(&str, Vec<u8>)> = vec![
+        ("oversized length prefix", {
+            ((MAX_FRAME + 1) as u32).to_le_bytes().to_vec()
+        }),
+        ("huge length prefix", u32::MAX.to_le_bytes().to_vec()),
+        ("truncated length prefix", vec![9, 0]),
+        ("truncated payload", {
+            let mut v = 100u32.to_le_bytes().to_vec();
+            v.extend_from_slice(b"{\"type\":\"request\"}");
+            v
+        }),
+        ("not json", {
+            let mut v = 5u32.to_le_bytes().to_vec();
+            v.extend_from_slice(b"hello");
+            v
+        }),
+        ("not utf8", {
+            let mut v = 4u32.to_le_bytes().to_vec();
+            v.extend_from_slice(&[0xFF, 0xFE, 0xFD, 0xFC]);
+            v
+        }),
+        ("json but not an object", {
+            let payload = b"[1,2,3]";
+            let mut v = (payload.len() as u32).to_le_bytes().to_vec();
+            v.extend_from_slice(payload);
+            v
+        }),
+        ("object without type", {
+            let payload = br#"{"flat":3}"#;
+            let mut v = (payload.len() as u32).to_le_bytes().to_vec();
+            v.extend_from_slice(payload);
+            v
+        }),
+        ("unknown type", {
+            let payload = br#"{"type":"subspace-anomaly"}"#;
+            let mut v = (payload.len() as u32).to_le_bytes().to_vec();
+            v.extend_from_slice(payload);
+            v
+        }),
+        ("result with bad cell status", {
+            let payload = br#"{"type":"result","flat":0,"key":"w=8,a=8","attempt":1,"cell":{"status":"meh"}}"#;
+            let mut v = (payload.len() as u32).to_le_bytes().to_vec();
+            v.extend_from_slice(payload);
+            v
+        }),
+        ("hello with half a shard", {
+            let payload = br#"{"type":"hello","proto":1,"cache_version":4,"name":"w","pid":"1","host":"h","fp":"2","shard_index":1}"#;
+            let mut v = (payload.len() as u32).to_le_bytes().to_vec();
+            v.extend_from_slice(payload);
+            v
+        }),
+        ("hello with non-numeric pid string", {
+            let payload = br#"{"type":"hello","proto":1,"cache_version":4,"name":"w","pid":"ten","host":"h","fp":"2"}"#;
+            let mut v = (payload.len() as u32).to_le_bytes().to_vec();
+            v.extend_from_slice(payload);
+            v
+        }),
+    ];
+    for (what, wire) in cases {
+        // direct read and split read must both fail cleanly
+        assert!(
+            read_frame(&mut wire.as_slice(), None).is_err(),
+            "{what}: expected an error"
+        );
+        let mut r = SplitReader::new(wire, 42);
+        assert!(
+            read_frame(&mut r, None).is_err(),
+            "{what}: expected an error through split reads"
+        );
+    }
+}
+
+#[test]
+fn float_bits_survive_the_wire_exactly() {
+    // the duplicate-result check compares to_bits(); the wire must not
+    // perturb a single bit of any representable double
+    // (-0.0 is excluded: the cache's shortest-integer rendering folds it
+    // to 0, and the wire deliberately matches the cache encoding)
+    let awkward = [
+        0.1f64 + 0.2,
+        1.0 / 3.0,
+        f64::MIN_POSITIVE,
+        f64::MAX,
+        1e-300,
+        -7.25e9,
+        12345.678901234567,
+    ];
+    for (i, &v) in awkward.iter().enumerate() {
+        let msg = Msg::Result {
+            flat: i,
+            key: "w=8,a=8".into(),
+            attempt: 1,
+            eval: CellEval::Ok(EvalResult {
+                n: 1,
+                top1_err: v.abs().min(1.0),
+                top5_err: 0.0,
+                mean_loss: v,
+            }),
+        };
+        let mut wire = Vec::new();
+        write_frame(&mut wire, &msg).unwrap();
+        match read_frame(&mut wire.as_slice(), None).unwrap() {
+            Frame::Msg(Msg::Result { eval: CellEval::Ok(e), .. }) => {
+                assert_eq!(e.mean_loss.to_bits(), v.to_bits(), "case {i}");
+            }
+            other => panic!("case {i}: {other:?}"),
+        }
+    }
+}
