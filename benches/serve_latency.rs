@@ -1,0 +1,97 @@
+//! Serve-path latency/throughput bench: starts the micro-batching
+//! daemon in-process on the CIFAR-shaped fixture net, replays the
+//! uniform and bursty traces against it, and writes `BENCH_serve.json`
+//! (p50/p95/p99 latency, achieved throughput, batch-size mix).
+//!
+//! Offered rates derive from a measured serial (single closed-loop
+//! client) baseline, so the numbers that gate CI are machine-independent
+//! ratios:
+//!
+//! * `p95_ratio_uniform`      -- uniform-trace p95 over serial p50
+//! * `throughput_ratio_bursty` -- bursty rate over serial rate (the
+//!   batching win; a batch-of-1 server cannot exceed ~1.0)
+//!
+//! Scale via:
+//! * `FXP_BENCH_SERVE_N`       -- requests per trace (default 400)
+//! * `FXP_BENCH_SERVE_BATCH`   -- daemon --max-batch (default 8)
+//! * `FXP_BENCH_SERVE_WAIT_US` -- daemon --max-wait-us (default 2000)
+//! * `FXP_BENCH_SERVE_THREADS` -- daemon engine threads (default 2)
+//! * `FXP_BENCH_ASSERT`        -- if set, enforce the `serve` ratio
+//!   gates from BENCH_baseline.json
+//!
+//! The same traces can be replayed against an out-of-process daemon via
+//! `fxpnet serve --replay` (what the CI serve-load job does).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use fxpnet::bench::fixtures::{env_usize, int_engine_fixture};
+use fxpnet::fixedpoint::QFormat;
+use fxpnet::inference::FixedPointNet;
+use fxpnet::serve::{run_server, ReplayOpts, ServeOpts, TraceKind};
+
+fn main() {
+    fxpnet::util::logging::init();
+    let n = env_usize("FXP_BENCH_SERVE_N", 400);
+    let max_batch = env_usize("FXP_BENCH_SERVE_BATCH", 8);
+    let max_wait_us = env_usize("FXP_BENCH_SERVE_WAIT_US", 2000);
+    let threads = env_usize("FXP_BENCH_SERVE_THREADS", 2);
+
+    let (spec, params, nq) = int_engine_fixture(8, 42).expect("fixture");
+    let net = FixedPointNet::build(&spec, &params, &nq, QFormat::new(16, 14).unwrap())
+        .expect("build");
+    println!(
+        "serve_latency: {} ({:.0} MMAC/img), max_batch {max_batch}, \
+         max_wait {max_wait_us}us, {threads} engine threads, {n} req/trace",
+        spec.name,
+        net.macs_per_image() as f64 / 1e6
+    );
+
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let flag = Arc::clone(&shutdown);
+    let (tx, rx) = mpsc::channel();
+    let server = std::thread::spawn(move || {
+        let opts = ServeOpts {
+            listen: "127.0.0.1:0".into(),
+            port_file: None,
+            max_batch,
+            max_wait: Duration::from_micros(max_wait_us as u64),
+            threads,
+        };
+        run_server(Arc::new(net), &opts, &flag, Some(tx))
+    });
+    let addr = rx.recv_timeout(Duration::from_secs(10)).expect("server up");
+
+    let opts = ReplayOpts {
+        requests: n,
+        clients: 0, // 2 * max_batch
+        seed: 42,
+        traces: vec![TraceKind::Uniform, TraceKind::Bursty],
+        out: None, // workspace-root BENCH_serve.json
+        assert_floors: std::env::var("FXP_BENCH_ASSERT").is_ok(),
+    };
+    let result = fxpnet::serve::replay::run_suite(&addr.to_string(), &opts);
+
+    shutdown.store(true, Ordering::SeqCst);
+    let summary = server.join().expect("server thread").expect("server run");
+    println!(
+        "daemon summary: {} requests in {} batches ({} rejected)",
+        summary.requests, summary.batches, summary.rejected
+    );
+
+    match result {
+        Ok(report) => {
+            if let Ok(gates) = report.get("gates") {
+                println!("gates: {gates}");
+            }
+            if opts.assert_floors {
+                println!("FXP_BENCH_ASSERT ok: serve ratio gates passed");
+            }
+        }
+        Err(e) => {
+            eprintln!("serve_latency: {e}");
+            std::process::exit(1);
+        }
+    }
+}

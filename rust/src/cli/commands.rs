@@ -39,6 +39,7 @@ pub fn dispatch(args: &Args) -> Result<i32> {
         "train" => args.no_positionals().and_then(|()| train_cmd(args)).map(ok),
         "grid" => grid_cmd(args),
         "cluster" => cluster_cmd(args),
+        "serve" => args.no_positionals().and_then(|()| serve_cmd(args)).map(ok),
         "eval" => args.no_positionals().and_then(|()| eval_cmd(args)).map(ok),
         "infer" => args.no_positionals().and_then(|()| infer(args)).map(ok),
         "mismatch" => args.no_positionals().and_then(|()| mismatch(args)).map(ok),
@@ -744,7 +745,7 @@ fn cluster_connect(args: &Args) -> Result<String> {
     }
     let Some(pf) = args.get("port-file") else {
         return Err(FxpError::config(
-            "cluster worker needs --connect H:P or --port-file F",
+            "need --connect H:P or --port-file F to reach the server",
         ));
     };
     let wait = std::time::Duration::from_secs(args.u64_or("port-wait", 30)?);
@@ -782,6 +783,9 @@ fn cluster_worker(args: &Args) -> Result<()> {
         reconnect_cap: args.usize_or("reconnect", d.reconnect_cap)?,
         reconnect_backoff: std::time::Duration::from_millis(
             args.u64_or("reconnect-backoff-ms", 200)?,
+        ),
+        connect_timeout: std::time::Duration::from_millis(
+            args.u64_or("connect-timeout-ms", 10_000)?.max(1),
         ),
     };
     log::info!(
@@ -829,6 +833,88 @@ fn cluster_worker(args: &Args) -> Result<()> {
         report.reconnects,
         report.sweep_complete
     );
+    Ok(())
+}
+
+/// `fxpnet serve`: the micro-batching inference daemon, or (with
+/// `--replay`) the trace-replay load bench against a running daemon.
+fn serve_cmd(args: &Args) -> Result<()> {
+    if args.has("replay") {
+        serve_replay(args)
+    } else {
+        serve_daemon(args)
+    }
+}
+
+/// Parse a `--w`/`--a` width with a default (unlike [`width`], serving
+/// has sensible defaults: the 8/8 cell).
+fn width_or(args: &Args, key: &str, default: &str) -> Result<WidthSpec> {
+    let v = args.get_or(key, default);
+    WidthSpec::parse(&v)
+        .ok_or_else(|| FxpError::config(format!("bad --{key} '{v}'")))
+}
+
+fn serve_daemon(args: &Args) -> Result<()> {
+    let arch = args.get_or("arch", "tiny");
+    let cfg = run_cfg(args, all_cores())?;
+    let w = width_or(args, "w", "8")?;
+    let a = width_or(args, "a", "8")?;
+    if w == WidthSpec::Float || a == WidthSpec::Float {
+        return Err(FxpError::config(
+            "integer serving needs fixed-point --w and --a",
+        ));
+    }
+    // same model construction as `train`/`eval`: --ckpt when given, else
+    // a fresh deterministic He init; calibration on the synthetic
+    // training stream
+    let backend = backend_spec(args)?.build_with_threads(cfg.threads)?;
+    let spec = backend.arch(&arch)?;
+    let params = base_params(args, &spec, backend.as_ref(), cfg.seed)?;
+    let (train, _eval) = datasets(args, &spec)?;
+    let a_stats =
+        backend.activation_stats(&arch, &params, &train, cfg.calib_batches)?;
+    let nq =
+        NetQuant::for_cell(w, a, &params.weight_stats(), &a_stats, cfg.method)?;
+    let net = FixedPointNet::build(&spec, &params, &nq, QFormat::new(16, 14)?)?;
+
+    let opts = crate::serve::ServeOpts {
+        listen: args.get_or("listen", "127.0.0.1:0"),
+        port_file: args.get("port-file").map(std::path::PathBuf::from),
+        max_batch: args.usize_or("max-batch", 8)?.max(1),
+        max_wait: std::time::Duration::from_micros(
+            args.u64_or("max-wait-us", 2000)?,
+        ),
+        threads: cfg.threads,
+    };
+    log::info!(
+        "serving {arch} ({w:?}/{a:?}, {:.0} MMAC/img)",
+        net.macs_per_image() as f64 / 1e6
+    );
+    let shutdown = cluster::install_drain_handler();
+    let summary =
+        crate::serve::run_server(std::sync::Arc::new(net), &opts, shutdown, None)?;
+    println!("{}", summary.to_json());
+    Ok(())
+}
+
+fn serve_replay(args: &Args) -> Result<()> {
+    let addr = cluster_connect(args)?;
+    let traces = args
+        .get_or("traces", "uniform,bursty")
+        .split(',')
+        .map(|s| crate::serve::TraceKind::parse(s.trim()))
+        .collect::<Result<Vec<_>>>()?;
+    let opts = crate::serve::ReplayOpts {
+        requests: args.usize_or("requests", 400)?,
+        clients: args.usize_or("clients", 0)?,
+        seed: args.u64_or("seed", 42)?,
+        traces,
+        out: args.get("out").map(std::path::PathBuf::from),
+        assert_floors: args.has("assert")
+            || std::env::var("FXP_BENCH_ASSERT").is_ok(),
+    };
+    let report = crate::serve::replay::run_suite(&addr, &opts)?;
+    println!("{}", report.get("gates")?);
     Ok(())
 }
 

@@ -21,11 +21,13 @@ use crate::error::{FxpError, Result};
 /// misparse would shift the output path onto a shard input and
 /// overwrite it.  Add every new boolean flag here.
 const KNOWN_SWITCHES: &[&str] = &[
+    "assert",
     "check",
     "gate",
     "no-early-abort",
     "prune",
     "render",
+    "replay",
     "resume",
     "shard-cache",
     "synthetic",
@@ -247,10 +249,51 @@ COMMANDS
              [--name S]         worker identity (default host-pid)
              [--shard I/N]      only compute this static slice
              [--reconnect N]    reconnect attempts (default 8)
+             [--connect-timeout-ms MS]
+                                TCP connect budget per attempt (default
+                                10000); replies from a connected-but-
+                                hung coordinator are additionally
+                                bounded by its advertised deadline-ms,
+                                so no coordinator failure mode can wedge
+                                a worker past its backoff budget
              [--inject drop=P,delay=MS,kill-after=N]
                                 deterministic fault injection (chaos
                                 tests): drop each send with prob P,
                                 delay sends MS, die after N cells
+  serve      micro-batching inference daemon for the pure-integer
+             engine: concurrent TCP clients' requests coalesce into one
+             GEMM batch under a latency budget; replies (logits, argmax,
+             server-side timing) are bit-identical to a batch-of-1 run
+             whatever batch a request lands in
+             [--arch A] [--ckpt F] [--w B] [--a B]
+                                model cell (defaults: tiny, 8/8, fresh
+                                He init from --seed like `train`)
+             [--listen H:P]     bind address (default 127.0.0.1:0)
+             [--port-file F]    write the bound host:port here (the
+                                rendezvous for port 0)
+             [--max-batch N]    largest GEMM batch one flush may form
+                                (default 8)
+             [--max-wait-us US] latency budget: longest a queued request
+                                waits before a partial batch flushes
+                                (default 2000)
+             SIGINT/SIGTERM drain gracefully: queued requests still
+             reply, new ones get an error, then exit 0
+  serve --replay
+             trace-replay load bench against a running daemon; writes
+             BENCH_serve.json (p50/p95/p99, throughput, batch-size mix)
+             --connect H:P (or --port-file F to poll the daemon's)
+             [--traces L]       comma list of uniform|bursty|diurnal|
+                                adversarial (default uniform,bursty);
+                                offered rates derive from a measured
+                                serial baseline, so gates are machine-
+                                independent ratios
+             [--requests N]     requests per trace (default 400)
+             [--clients N]      client connections (default 2*max_batch)
+             [--seed S]         arrival jitter + image pool seed
+             [--out F]          report path (default BENCH_serve.json)
+             [--assert]         enforce the `serve` ratio gates from
+                                BENCH_baseline.json (FXP_BENCH_ASSERT=1
+                                does the same; violations exit non-zero)
   eval       evaluate a checkpoint at one grid cell
              --arch A --ckpt F --w {4|8|16|float} --a {4|8|16|float}
   infer      pure-integer inference + parity vs the XLA path

@@ -5,11 +5,13 @@
 //!
 //! One frame = `u32` little-endian payload length, then exactly that
 //! many bytes of UTF-8 JSON (one message object carrying a `"type"`
-//! tag).  [`MAX_FRAME`] bounds the payload so a corrupt or hostile
-//! length prefix can never make a peer allocate unbounded memory.  Any
-//! framing or schema violation is an `Err` -- both endpoints respond by
-//! dropping the peer with a logged error, never by panicking (pinned by
-//! tests/cluster_proto.rs and the malformed-frame integration test).
+//! tag), via the shared codec in [`crate::netio`] (the same substrate
+//! `serve::proto` frames ride on).  [`MAX_FRAME`] bounds the payload so
+//! a corrupt or hostile length prefix can never make a peer allocate
+//! unbounded memory.  Any framing or schema violation is an `Err` --
+//! both endpoints respond by dropping the peer with a logged error,
+//! never by panicking (pinned by tests/cluster_proto.rs and the
+//! malformed-frame integration test).
 //!
 //! ## Message flow
 //!
@@ -39,16 +41,14 @@ use std::time::Instant;
 use crate::coordinator::regimes::CellEval;
 use crate::coordinator::report::{cell_eval_from_json, cell_eval_to_json};
 use crate::error::{FxpError, Result};
+use crate::netio::{self, JsonFrame};
 use crate::util::json::Json;
+
+pub use crate::netio::MAX_FRAME;
 
 /// Protocol revision; bumped on any incompatible message change.  A
 /// mismatch is rejected at handshake.
 pub const PROTO_VERSION: usize = 1;
-
-/// Maximum frame payload in bytes.  Messages are small (a cell result
-/// is a few hundred bytes); the cap exists to bound allocation on a
-/// corrupt length prefix.
-pub const MAX_FRAME: usize = 1 << 20;
 
 /// One protocol message.
 #[derive(Clone, Debug, PartialEq)]
@@ -242,66 +242,7 @@ pub enum Frame {
 /// Encode `msg` as one frame.  Errors (rather than truncating) if the
 /// payload would exceed [`MAX_FRAME`].
 pub fn write_frame(w: &mut impl Write, msg: &Msg) -> Result<()> {
-    let payload = msg.to_json().to_string();
-    let bytes = payload.as_bytes();
-    if bytes.len() > MAX_FRAME {
-        return Err(FxpError::config(format!(
-            "frame payload {} bytes exceeds MAX_FRAME {MAX_FRAME}",
-            bytes.len()
-        )));
-    }
-    w.write_all(&(bytes.len() as u32).to_le_bytes())?;
-    w.write_all(bytes)?;
-    w.flush()?;
-    Ok(())
-}
-
-fn is_timeout(e: &std::io::Error) -> bool {
-    matches!(
-        e.kind(),
-        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
-    )
-}
-
-/// Read exactly `buf.len()` bytes, tolerating short reads and (until
-/// `deadline`) read-timeout ticks.  `started` says whether earlier bytes
-/// of this frame were already consumed: a clean EOF is only "clean"
-/// before the first byte.
-fn read_exact_deadline(
-    r: &mut impl Read,
-    buf: &mut [u8],
-    started: bool,
-    deadline: Option<Instant>,
-) -> Result<Option<()>> {
-    let mut got = 0usize;
-    while got < buf.len() {
-        match r.read(&mut buf[got..]) {
-            Ok(0) => {
-                if got == 0 && !started {
-                    return Ok(None); // peer closed at a frame boundary
-                }
-                return Err(FxpError::Json("truncated frame (peer closed)".into()));
-            }
-            Ok(n) => got += n,
-            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
-            Err(e) if is_timeout(&e) => {
-                if got == 0 && !started {
-                    return Err(e.into()); // boundary timeout: caller's tick
-                }
-                // mid-frame: the sender paused (or a fault layer delayed
-                // it); keep waiting until the caller's deadline
-                if let Some(d) = deadline {
-                    if Instant::now() >= d {
-                        return Err(FxpError::Json(
-                            "timed out mid-frame".into(),
-                        ));
-                    }
-                }
-            }
-            Err(e) => return Err(e.into()),
-        }
-    }
-    Ok(Some(()))
+    netio::write_json_frame(w, &msg.to_json())
 }
 
 /// Read one frame.  With a socket read timeout set, a quiet boundary
@@ -310,24 +251,11 @@ fn read_exact_deadline(
 /// A clean close at a boundary is [`Frame::Eof`]; everything malformed
 /// (oversized length, truncation, bad JSON, unknown type) is `Err`.
 pub fn read_frame(r: &mut impl Read, deadline: Option<Instant>) -> Result<Frame> {
-    let mut len_bytes = [0u8; 4];
-    match read_exact_deadline(r, &mut len_bytes, false, deadline) {
-        Ok(None) => return Ok(Frame::Eof),
-        Ok(Some(())) => {}
-        Err(FxpError::Io(e)) if is_timeout(&e) => return Ok(Frame::TimedOut),
-        Err(e) => return Err(e),
-    }
-    let len = u32::from_le_bytes(len_bytes) as usize;
-    if len > MAX_FRAME {
-        return Err(FxpError::Json(format!(
-            "oversized frame: {len} bytes (cap {MAX_FRAME})"
-        )));
-    }
-    let mut payload = vec![0u8; len];
-    read_exact_deadline(r, &mut payload, true, deadline)?;
-    let text = std::str::from_utf8(&payload)
-        .map_err(|_| FxpError::Json("frame payload is not UTF-8".into()))?;
-    Msg::from_json(&Json::parse(text)?).map(Frame::Msg)
+    Ok(match netio::read_json_frame(r, deadline)? {
+        JsonFrame::Msg(j) => Frame::Msg(Msg::from_json(&j)?),
+        JsonFrame::Eof => Frame::Eof,
+        JsonFrame::TimedOut => Frame::TimedOut,
+    })
 }
 
 #[cfg(test)]

@@ -61,6 +61,9 @@ pub struct WorkerOpts {
     /// Pause between reconnect attempts (multiplied by the attempt
     /// number).
     pub reconnect_backoff: Duration,
+    /// TCP connect budget per attempt (a blackholed coordinator address
+    /// must not hang the worker in `connect(2)` past its backoff math).
+    pub connect_timeout: Duration,
 }
 
 impl Default for WorkerOpts {
@@ -72,6 +75,7 @@ impl Default for WorkerOpts {
             fault: FaultSpec::default(),
             reconnect_cap: 8,
             reconnect_backoff: Duration::from_millis(200),
+            connect_timeout: Duration::from_secs(10),
         }
     }
 }
@@ -123,6 +127,26 @@ fn faulty_send(
     Ok(true)
 }
 
+/// `TcpStream::connect` with a per-address timeout (std's plain
+/// `connect` has none, so a blackholed address could hang a worker for
+/// the OS default of minutes).
+fn connect_with_timeout(addr: &str, timeout: Duration) -> std::io::Result<TcpStream> {
+    use std::net::ToSocketAddrs;
+    let mut last = None;
+    for sa in addr.to_socket_addrs()? {
+        match TcpStream::connect_timeout(&sa, timeout) {
+            Ok(s) => return Ok(s),
+            Err(e) => last = Some(e),
+        }
+    }
+    Err(last.unwrap_or_else(|| {
+        std::io::Error::new(
+            std::io::ErrorKind::InvalidInput,
+            format!("'{addr}' resolved to no addresses"),
+        )
+    }))
+}
+
 /// Run one connection to completion (drain/loss/fatal).
 #[allow(clippy::too_many_arguments)]
 fn run_conn(
@@ -133,7 +157,7 @@ fn run_conn(
     fault: &Mutex<FaultLayer>,
     report: &mut WorkerReport,
 ) -> ConnEnd {
-    let stream = match TcpStream::connect(&opts.connect) {
+    let stream = match connect_with_timeout(&opts.connect, opts.connect_timeout) {
         Ok(s) => s,
         Err(e) => return ConnEnd::Lost(format!("connect {}: {e}", opts.connect)),
     };
@@ -156,17 +180,25 @@ fn run_conn(
     if let Err(e) = write_frame(&mut s, &hello) {
         return ConnEnd::Lost(format!("hello: {e}"));
     }
+    // the deadline bounds mid-frame stalls too (a coordinator that
+    // hangs after sending half a Welcome must not wedge the worker)
     let welcome_by = std::time::Instant::now() + Duration::from_secs(10);
-    let hb_interval = loop {
-        match read_frame(&mut s, None) {
+    let (hb_interval, reply_deadline) = loop {
+        match read_frame(&mut s, Some(welcome_by)) {
             Ok(Frame::TimedOut) => {
                 if std::time::Instant::now() >= welcome_by {
                     return ConnEnd::Lost("no welcome within 10s".into());
                 }
             }
             Ok(Frame::Eof) => return ConnEnd::Lost("EOF at handshake".into()),
-            Ok(Frame::Msg(Msg::Welcome { heartbeat_ms, .. })) => {
-                break Duration::from_millis(heartbeat_ms.max(10));
+            Ok(Frame::Msg(Msg::Welcome { heartbeat_ms, deadline_ms })) => {
+                // the coordinator's own liveness deadline, reused
+                // symmetrically: if IT goes silent that long while we
+                // await a reply, treat the connection as lost
+                break (
+                    Duration::from_millis(heartbeat_ms.max(10)),
+                    Duration::from_millis(deadline_ms.max(100)),
+                );
             }
             Ok(Frame::Msg(Msg::Reject { reason })) => {
                 return ConnEnd::Fatal(FxpError::config(format!(
@@ -226,6 +258,7 @@ fn run_conn(
             fault,
             &write_half,
             &mut read_half,
+            reply_deadline,
             report,
         );
         stop_hb.store(true, Ordering::SeqCst);
@@ -242,6 +275,7 @@ fn conn_loop(
     fault: &Mutex<FaultLayer>,
     write: &Mutex<TcpStream>,
     read: &mut TcpStream,
+    reply_deadline: Duration,
     report: &mut WorkerReport,
 ) -> ConnEnd {
     loop {
@@ -250,9 +284,22 @@ fn conn_loop(
             Ok(false) => return ConnEnd::Lost("injected drop (request)".into()),
             Err(e) => return ConnEnd::Lost(format!("request: {e}")),
         }
+        // a healthy coordinator answers Request promptly (Assign / Wait /
+        // Drain); silence for its own declared liveness deadline means it
+        // is hung, and reconnecting beats waiting forever.  The deadline
+        // also bounds mid-frame stalls inside read_frame.
+        let reply_by = std::time::Instant::now() + reply_deadline;
         let assigned = loop {
-            match read_frame(read, None) {
-                Ok(Frame::TimedOut) => continue,
+            match read_frame(read, Some(reply_by)) {
+                Ok(Frame::TimedOut) => {
+                    if std::time::Instant::now() >= reply_by {
+                        return ConnEnd::Lost(format!(
+                            "coordinator silent for {reply_deadline:?} \
+                             awaiting assignment"
+                        ));
+                    }
+                    continue;
+                }
                 Ok(Frame::Eof) => return ConnEnd::Lost("EOF".into()),
                 Ok(Frame::Msg(Msg::Wait { ms })) => {
                     std::thread::sleep(Duration::from_millis(ms.min(1000)));
@@ -389,5 +436,149 @@ pub fn run_worker(
                 std::thread::sleep(wait);
             }
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read as _, Write as _};
+    use std::net::TcpListener;
+    use std::time::Instant;
+
+    /// A worker pointed at `addr` with no reconnect budget: the first
+    /// `Lost` surfaces as `Err`, which is what the timeout tests await.
+    fn one_shot_worker(addr: String) -> WorkerOpts {
+        WorkerOpts {
+            connect: addr,
+            reconnect_cap: 0,
+            reconnect_backoff: Duration::from_millis(1),
+            connect_timeout: Duration::from_secs(2),
+            ..WorkerOpts::default()
+        }
+    }
+
+    fn run_one_shot(opts: &WorkerOpts) -> Result<WorkerReport> {
+        run_worker(Regime::Vanilla, 42, 0xfeed, &mut SyntheticExec, opts)
+    }
+
+    /// Fake coordinator: accept one worker, consume its Hello, send a
+    /// Welcome with the given liveness deadline, then run `after` with
+    /// the raw stream.
+    fn fake_coordinator(
+        deadline_ms: u64,
+        after: impl FnOnce(TcpStream) + Send + 'static,
+    ) -> (String, std::thread::JoinHandle<()>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let h = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            match read_frame(&mut s, None) {
+                Ok(Frame::Msg(Msg::Hello { .. })) => {}
+                other => panic!("expected Hello, got {other:?}"),
+            }
+            write_frame(&mut s, &Msg::Welcome { heartbeat_ms: 50, deadline_ms })
+                .unwrap();
+            after(s);
+        });
+        (addr, h)
+    }
+
+    #[test]
+    fn mid_frame_stall_cannot_wedge_the_worker() {
+        // Welcome, then 3 bytes of a length prefix, then silence with
+        // the socket held open: before the fix the worker's
+        // `read_frame(..., None)` waited forever mid-frame.
+        let (addr, coord) = fake_coordinator(300, |mut s| {
+            s.write_all(&[0x40, 0x00, 0x00]).unwrap();
+            let mut sink = [0u8; 256];
+            // keep the socket open (and drained) well past the
+            // worker's deadline
+            let _ = s.set_read_timeout(Some(Duration::from_millis(50)));
+            let t0 = Instant::now();
+            while t0.elapsed() < Duration::from_secs(4) {
+                match s.read(&mut sink) {
+                    Ok(0) => break, // worker hung up: done
+                    Ok(_) => {}
+                    Err(_) => {}
+                }
+            }
+        });
+        let t0 = Instant::now();
+        let err = run_one_shot(&one_shot_worker(addr)).unwrap_err();
+        let waited = t0.elapsed();
+        assert!(
+            waited < Duration::from_secs(3),
+            "worker wedged for {waited:?} on a mid-frame stall"
+        );
+        assert!(
+            err.to_string().contains("connection lost"),
+            "unexpected error: {err}"
+        );
+        coord.join().unwrap();
+    }
+
+    #[test]
+    fn silent_coordinator_trips_the_reply_deadline() {
+        // Welcome with a 300ms liveness deadline, then total silence:
+        // before the fix the worker span on boundary TimedOut ticks
+        // forever awaiting its assignment.
+        let (addr, coord) = fake_coordinator(300, |s| {
+            let mut s = s;
+            let mut sink = [0u8; 256];
+            let _ = s.set_read_timeout(Some(Duration::from_millis(50)));
+            let t0 = Instant::now();
+            while t0.elapsed() < Duration::from_secs(4) {
+                match s.read(&mut sink) {
+                    Ok(0) => break,
+                    Ok(_) => {} // drain Request/Heartbeat, reply never
+                    Err(_) => {}
+                }
+            }
+        });
+        let t0 = Instant::now();
+        let err = run_one_shot(&one_shot_worker(addr)).unwrap_err();
+        let waited = t0.elapsed();
+        assert!(
+            waited < Duration::from_secs(3),
+            "worker waited {waited:?} on a silent coordinator"
+        );
+        assert!(
+            err.to_string().contains("silent"),
+            "error should name the silence: {err}"
+        );
+        coord.join().unwrap();
+    }
+
+    #[test]
+    fn connect_failure_is_bounded_and_reported() {
+        // a port nothing listens on: connect must fail fast, not hang
+        let free = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = free.local_addr().unwrap().to_string();
+        drop(free);
+        let t0 = Instant::now();
+        let err = run_one_shot(&one_shot_worker(addr)).unwrap_err();
+        assert!(t0.elapsed() < Duration::from_secs(5));
+        assert!(err.to_string().contains("connect"), "{err}");
+    }
+
+    #[test]
+    fn welcome_deadline_floors_at_100ms() {
+        // a coordinator advertising deadline_ms=0 must not make the
+        // worker declare it hung instantly
+        let (addr, coord) = fake_coordinator(0, |mut s| {
+            // answer the first Request properly, then drain
+            loop {
+                match read_frame(&mut s, None) {
+                    Ok(Frame::Msg(Msg::Request)) => break,
+                    Ok(Frame::Msg(Msg::Heartbeat)) => continue,
+                    other => panic!("expected Request, got {other:?}"),
+                }
+            }
+            write_frame(&mut s, &Msg::Drain { complete: true }).unwrap();
+        });
+        let report = run_one_shot(&one_shot_worker(addr)).unwrap();
+        assert!(report.sweep_complete);
+        coord.join().unwrap();
     }
 }

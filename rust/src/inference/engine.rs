@@ -568,6 +568,71 @@ impl FixedPointNet {
     }
 }
 
+/// A handle-based inference session for concurrent callers: shared
+/// quantized weights behind an `Arc`, a private warm [`Scratch`] plus a
+/// logit buffer pre-sized for `max_batch`, so steady-state [`run`]
+/// calls do zero heap allocation.  Each concurrent caller (the serving
+/// daemon's batcher thread, a bench client, a test) holds its own
+/// session; the packed weight panels are shared read-only, and the
+/// integer path keeps logits bit-identical whichever session -- and
+/// whichever batch size -- computes them.
+///
+/// [`run`]: InferSession::run
+pub struct InferSession {
+    net: std::sync::Arc<FixedPointNet>,
+    scratch: Scratch,
+    out: Vec<f32>,
+    threads: usize,
+    max_batch: usize,
+}
+
+impl InferSession {
+    /// Pre-size buffers for forwards of up to `max_batch` images with
+    /// `threads` GEMM row-block workers.
+    pub fn new(
+        net: std::sync::Arc<FixedPointNet>,
+        max_batch: usize,
+        threads: usize,
+    ) -> InferSession {
+        let max_batch = max_batch.max(1);
+        let threads = threads.max(1);
+        let scratch = Scratch::for_net(&net, max_batch, threads);
+        let out = vec![0f32; max_batch * net.num_classes()];
+        InferSession { net, scratch, out, threads, max_batch }
+    }
+
+    pub fn net(&self) -> &FixedPointNet {
+        &self.net
+    }
+
+    pub fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    /// Forward `n` images (row-major `(n, h, w, c)` floats) and return
+    /// the `(n, classes)` logits slice.  `n` must not exceed
+    /// `max_batch`: the pre-sized buffers are deliberately never grown
+    /// (growth would silently break the zero-steady-state-allocation
+    /// contract the serving daemon's latency budget relies on).
+    pub fn run(&mut self, images: &[f32], n: usize) -> Result<&[f32]> {
+        if n > self.max_batch {
+            return Err(FxpError::config(format!(
+                "batch {n} exceeds session max_batch {}",
+                self.max_batch
+            )));
+        }
+        let nc = self.net.num_classes();
+        self.net.forward_slice_into(
+            images,
+            n,
+            &mut self.scratch,
+            self.threads,
+            &mut self.out[..n * nc],
+        )?;
+        Ok(&self.out[..n * nc])
+    }
+}
+
 /// Where a GEMM layer writes: requantized codes or decoded f32 logits.
 enum ConvOut<'a> {
     Codes { out: &'a mut [i32], fmt: QFormat },

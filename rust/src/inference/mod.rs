@@ -32,4 +32,4 @@ pub mod ops;
 pub mod packing;
 pub mod verify;
 
-pub use engine::{FixedPointNet, Scratch};
+pub use engine::{FixedPointNet, InferSession, Scratch};

@@ -62,8 +62,10 @@ pub mod error;
 pub mod fixedpoint;
 pub mod inference;
 pub mod model;
+pub mod netio;
 pub mod quant;
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod testutil;
 pub mod train;

@@ -1,0 +1,245 @@
+//! Shared length-prefixed frame codec: the wire substrate under both
+//! `cluster::proto` (sweep protocol) and `serve::proto` (inference
+//! protocol).
+//!
+//! One frame = `u32` little-endian payload length, then exactly that
+//! many bytes of UTF-8 JSON.  [`MAX_FRAME`] bounds the payload so a
+//! corrupt or hostile length prefix can never make a peer allocate
+//! unbounded memory.  Any framing violation is an `Err` -- endpoints
+//! respond by dropping the peer with a logged error, never by panicking
+//! (pinned by tests/cluster_proto.rs and tests/serve.rs, which run the
+//! same malformed-frame corpus against this codec).
+//!
+//! ## Timeout semantics
+//!
+//! With a socket read timeout set, a quiet frame *boundary* surfaces as
+//! [`RawFrame::TimedOut`] -- a scheduling tick for the caller's deadline
+//! bookkeeping, not an error.  A frame that *started* keeps reading
+//! through timeout ticks until `deadline` (if `Some`); hitting the
+//! deadline mid-frame is an error, because a half-frame can never be
+//! resynchronized.  A clean EOF is only "clean" at a boundary.
+
+use std::io::{Read, Write};
+use std::time::Instant;
+
+use crate::error::{FxpError, Result};
+use crate::util::json::Json;
+
+/// Maximum frame payload in bytes.  Messages are small (a cell result is
+/// a few hundred bytes; an inference request is a few tens of KB); the
+/// cap exists to bound allocation on a corrupt length prefix.
+pub const MAX_FRAME: usize = 1 << 20;
+
+/// What one raw read attempt produced.
+#[derive(Debug)]
+pub enum RawFrame {
+    /// A complete payload (length-checked, not yet parsed).
+    Payload(Vec<u8>),
+    /// Clean EOF at a frame boundary (the peer closed).
+    Eof,
+    /// The socket's read timeout fired before any byte of a new frame
+    /// arrived -- a scheduling tick, not an error.
+    TimedOut,
+}
+
+/// A raw frame with the payload parsed as one JSON value.
+#[derive(Debug)]
+pub enum JsonFrame {
+    Msg(Json),
+    Eof,
+    TimedOut,
+}
+
+/// Encode `bytes` as one frame.  Errors (rather than truncating) if the
+/// payload would exceed [`MAX_FRAME`]; nothing hits the wire on error.
+pub fn write_frame_bytes(w: &mut impl Write, bytes: &[u8]) -> Result<()> {
+    if bytes.len() > MAX_FRAME {
+        return Err(FxpError::config(format!(
+            "frame payload {} bytes exceeds MAX_FRAME {MAX_FRAME}",
+            bytes.len()
+        )));
+    }
+    w.write_all(&(bytes.len() as u32).to_le_bytes())?;
+    w.write_all(bytes)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Serialize one JSON value as a frame.
+pub fn write_json_frame(w: &mut impl Write, j: &Json) -> Result<()> {
+    write_frame_bytes(w, j.to_string().as_bytes())
+}
+
+pub(crate) fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+    )
+}
+
+/// Read exactly `buf.len()` bytes, tolerating short reads and (until
+/// `deadline`) read-timeout ticks.  `started` says whether earlier bytes
+/// of this frame were already consumed: a clean EOF is only "clean"
+/// before the first byte.
+fn read_exact_deadline(
+    r: &mut impl Read,
+    buf: &mut [u8],
+    started: bool,
+    deadline: Option<Instant>,
+) -> Result<Option<()>> {
+    let mut got = 0usize;
+    while got < buf.len() {
+        match r.read(&mut buf[got..]) {
+            Ok(0) => {
+                if got == 0 && !started {
+                    return Ok(None); // peer closed at a frame boundary
+                }
+                return Err(FxpError::Json("truncated frame (peer closed)".into()));
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) if is_timeout(&e) => {
+                if got == 0 && !started {
+                    return Err(e.into()); // boundary timeout: caller's tick
+                }
+                // mid-frame: the sender paused (or a fault layer delayed
+                // it); keep waiting until the caller's deadline
+                if let Some(d) = deadline {
+                    if Instant::now() >= d {
+                        return Err(FxpError::Json("timed out mid-frame".into()));
+                    }
+                }
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(Some(()))
+}
+
+/// Read one raw frame.  See the module docs for the boundary-vs-mid-frame
+/// timeout contract.  Everything malformed (oversized length, truncation)
+/// is `Err`.
+pub fn read_frame_bytes(r: &mut impl Read, deadline: Option<Instant>) -> Result<RawFrame> {
+    let mut len_bytes = [0u8; 4];
+    match read_exact_deadline(r, &mut len_bytes, false, deadline) {
+        Ok(None) => return Ok(RawFrame::Eof),
+        Ok(Some(())) => {}
+        Err(FxpError::Io(e)) if is_timeout(&e) => return Ok(RawFrame::TimedOut),
+        Err(e) => return Err(e),
+    }
+    let len = u32::from_le_bytes(len_bytes) as usize;
+    if len > MAX_FRAME {
+        return Err(FxpError::Json(format!(
+            "oversized frame: {len} bytes (cap {MAX_FRAME})"
+        )));
+    }
+    let mut payload = vec![0u8; len];
+    read_exact_deadline(r, &mut payload, true, deadline)?;
+    Ok(RawFrame::Payload(payload))
+}
+
+/// Read one frame and parse its payload as JSON (UTF-8 and JSON
+/// violations are `Err`, like any other malformed frame).
+pub fn read_json_frame(r: &mut impl Read, deadline: Option<Instant>) -> Result<JsonFrame> {
+    Ok(match read_frame_bytes(r, deadline)? {
+        RawFrame::Payload(p) => {
+            let text = std::str::from_utf8(&p)
+                .map_err(|_| FxpError::Json("frame payload is not UTF-8".into()))?;
+            JsonFrame::Msg(Json::parse(text)?)
+        }
+        RawFrame::Eof => JsonFrame::Eof,
+        RawFrame::TimedOut => JsonFrame::TimedOut,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn raw_round_trip_and_eof() {
+        let mut wire = Vec::new();
+        write_frame_bytes(&mut wire, b"{\"x\":1}").unwrap();
+        write_frame_bytes(&mut wire, b"").unwrap();
+        let mut r = wire.as_slice();
+        match read_frame_bytes(&mut r, None).unwrap() {
+            RawFrame::Payload(p) => assert_eq!(p, b"{\"x\":1}"),
+            other => panic!("{other:?}"),
+        }
+        match read_frame_bytes(&mut r, None).unwrap() {
+            RawFrame::Payload(p) => assert!(p.is_empty()),
+            other => panic!("{other:?}"),
+        }
+        assert!(matches!(read_frame_bytes(&mut r, None).unwrap(), RawFrame::Eof));
+    }
+
+    #[test]
+    fn json_layer_round_trips_and_rejects() {
+        let j = Json::obj(vec![("type", Json::from("ping")), ("n", Json::from(3usize))]);
+        let mut wire = Vec::new();
+        write_json_frame(&mut wire, &j).unwrap();
+        match read_json_frame(&mut wire.as_slice(), None).unwrap() {
+            JsonFrame::Msg(back) => assert_eq!(back, j),
+            other => panic!("{other:?}"),
+        }
+        // valid frame, invalid JSON payload
+        let mut bad = Vec::new();
+        write_frame_bytes(&mut bad, b"{oops").unwrap();
+        assert!(read_json_frame(&mut bad.as_slice(), None).is_err());
+        // valid frame, non-UTF-8 payload
+        let mut bad = Vec::new();
+        write_frame_bytes(&mut bad, &[0xFF, 0xFE, 0xFD]).unwrap();
+        assert!(read_json_frame(&mut bad.as_slice(), None).is_err());
+    }
+
+    #[test]
+    fn oversize_rejected_both_directions() {
+        let mut buf = Vec::new();
+        assert!(write_frame_bytes(&mut buf, &vec![0u8; MAX_FRAME + 1]).is_err());
+        assert!(buf.is_empty(), "nothing must hit the wire");
+        let wire = ((MAX_FRAME + 1) as u32).to_le_bytes();
+        assert!(read_frame_bytes(&mut (&wire[..] as &[u8]), None).is_err());
+    }
+
+    /// A reader stuck mid-frame: yields a partial frame, then times out
+    /// forever -- the shape of a hung peer behind a socket read timeout.
+    struct HungReader {
+        data: Vec<u8>,
+        pos: usize,
+    }
+
+    impl Read for HungReader {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            if self.pos >= self.data.len() {
+                return Err(std::io::Error::from(std::io::ErrorKind::WouldBlock));
+            }
+            let n = (self.data.len() - self.pos).min(buf.len());
+            buf[..n].copy_from_slice(&self.data[self.pos..self.pos + n]);
+            self.pos += n;
+            Ok(n)
+        }
+    }
+
+    #[test]
+    fn mid_frame_stall_errors_at_the_deadline() {
+        // 100-byte length prefix but only 3 payload bytes ever arrive
+        let mut data = 100u32.to_le_bytes().to_vec();
+        data.extend_from_slice(b"abc");
+        let mut r = HungReader { data, pos: 0 };
+        let deadline = Instant::now() + Duration::from_millis(30);
+        let t0 = Instant::now();
+        let err = read_frame_bytes(&mut r, Some(deadline)).unwrap_err();
+        assert!(err.to_string().contains("mid-frame"), "{err}");
+        assert!(t0.elapsed() < Duration::from_secs(5), "deadline not honored");
+    }
+
+    #[test]
+    fn boundary_stall_is_a_tick_not_an_error() {
+        let mut r = HungReader { data: Vec::new(), pos: 0 };
+        assert!(matches!(
+            read_frame_bytes(&mut r, None).unwrap(),
+            RawFrame::TimedOut
+        ));
+    }
+}

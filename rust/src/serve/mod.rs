@@ -1,0 +1,38 @@
+//! `fxpnet serve`: a micro-batching inference daemon for the
+//! pure-integer engine, plus the trace-replay load bench that gates it
+//! in CI.
+//!
+//! The deployment story the paper implies -- a fixed-point network
+//! small enough for a DSP/NPU -- is a *serving* story: many concurrent
+//! low-latency classification requests against one resident model.
+//! This module provides that last mile:
+//!
+//! * [`proto`] -- the wire protocol: length-prefixed JSON frames on the
+//!   shared [`crate::netio`] codec (same framing as the cluster
+//!   protocol), `Infer`/`Logits` plus `Ping`/`Info` introspection;
+//! * [`queue`] -- the admission queue: concurrent requests coalesce
+//!   into one GEMM batch under a latency budget (`--max-batch`,
+//!   `--max-wait-us`), strict FIFO, drain-aware;
+//! * [`server`] -- the daemon: nonblocking accept loop, handler thread
+//!   per connection, one batcher thread over a warm
+//!   [`crate::inference::InferSession`] (zero steady-state allocation),
+//!   graceful SIGINT/SIGTERM drain;
+//! * [`replay`] -- the load generator: seeded uniform / bursty /
+//!   diurnal / adversarial arrival processes, machine-independent ratio
+//!   gates against a measured serial baseline, `BENCH_serve.json`;
+//! * [`stats`] -- latency/throughput/batch-mix aggregation.
+//!
+//! Batching never changes answers: the integer engine computes each row
+//! independently, so a request's logits are bit-identical whether it
+//! rode a batch of 1 or of `max_batch` (pinned by rust/tests/serve.rs).
+
+pub mod proto;
+pub mod queue;
+pub mod replay;
+pub mod server;
+pub mod stats;
+
+pub use queue::{AdmissionQueue, Pending};
+pub use replay::{ReplayOpts, TraceKind};
+pub use server::{run_server, ServeOpts, ServeSummary};
+pub use stats::TraceStats;

@@ -1,0 +1,306 @@
+//! Wire protocol for `fxpnet serve`: length-prefixed JSON frames over
+//! TCP, on the same shared codec ([`crate::netio`]) as the cluster
+//! protocol -- one framing implementation, two message vocabularies.
+//!
+//! ## Message flow
+//!
+//! Clients send; the server replies (possibly out of request order
+//! across connections -- `id` correlates):
+//!
+//! ```text
+//! client                         server
+//!   Info                     ->
+//!                            <-  InfoReply{h,w,c,classes,...}
+//!   Infer{id, image}         ->
+//!                            <-  Logits{id, logits, argmax,
+//!                                       queue_us, batch_n, gemm_us}
+//!                                | Error{id, reason}
+//!   Ping                     ->
+//!                            <-  Pong
+//! ```
+//!
+//! `image` is `h*w*c` row-major floats in [0,1]; `logits` are the
+//! engine's f32 logits.  Both ride as JSON numbers: an f32 widened to
+//! f64 is exact, and the codec's shortest-round-trip rendering returns
+//! the identical f64, so logits cross the wire bit-for-bit -- the
+//! reply-determinism test compares `to_bits()` across batch
+//! configurations *through* this encoding.
+
+use std::io::{Read, Write};
+use std::time::Instant;
+
+use crate::error::{FxpError, Result};
+use crate::netio::{self, JsonFrame};
+use crate::util::json::Json;
+
+/// Serve-protocol revision; independent of the cluster protocol's.
+pub const SERVE_PROTO_VERSION: usize = 1;
+
+/// One serve-protocol message.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ServeMsg {
+    /// Classify one image.  `id` is client-chosen and echoed in the
+    /// reply; clients pipelining requests on one connection use it to
+    /// correlate.
+    Infer { id: u64, image: Vec<f32> },
+    /// Liveness probe.
+    Ping,
+    /// Ask for the model/batching contract (shape, classes, knobs).
+    Info,
+    /// Per-request reply: logits row, argmax, and server-side timing --
+    /// microseconds spent in the admission queue, the GEMM batch size
+    /// this request rode in, and the batch's engine microseconds.
+    Logits {
+        id: u64,
+        logits: Vec<f32>,
+        argmax: usize,
+        queue_us: u64,
+        batch_n: usize,
+        gemm_us: u64,
+    },
+    Pong,
+    InfoReply {
+        proto: usize,
+        h: usize,
+        w: usize,
+        c: usize,
+        classes: usize,
+        max_batch: usize,
+        max_wait_us: u64,
+    },
+    /// Per-request failure (`id` echoes the request) or connection-level
+    /// protocol complaint (`id` absent).
+    Error { id: Option<u64>, reason: String },
+}
+
+fn f32s_to_json(xs: &[f32]) -> Json {
+    Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect())
+}
+
+fn f32s_from_json(j: &Json) -> Result<Vec<f32>> {
+    j.as_arr()?.iter().map(|v| v.as_f64().map(|f| f as f32)).collect()
+}
+
+fn u64_num(j: &Json, key: &str) -> Result<u64> {
+    // ids/timings are counters well within 2^53; plain JSON numbers
+    let n = j.get(key)?.as_f64()?;
+    if !(n >= 0.0 && n.fract() == 0.0) {
+        return Err(FxpError::Json(format!("bad u64 {n} for '{key}'")));
+    }
+    Ok(n as u64)
+}
+
+impl ServeMsg {
+    pub fn to_json(&self) -> Json {
+        match self {
+            ServeMsg::Infer { id, image } => Json::obj(vec![
+                ("type", Json::from("infer")),
+                ("id", Json::Num(*id as f64)),
+                ("image", f32s_to_json(image)),
+            ]),
+            ServeMsg::Ping => Json::obj(vec![("type", Json::from("ping"))]),
+            ServeMsg::Info => Json::obj(vec![("type", Json::from("info"))]),
+            ServeMsg::Logits { id, logits, argmax, queue_us, batch_n, gemm_us } => {
+                Json::obj(vec![
+                    ("type", Json::from("logits")),
+                    ("id", Json::Num(*id as f64)),
+                    ("logits", f32s_to_json(logits)),
+                    ("argmax", Json::from(*argmax)),
+                    ("queue_us", Json::Num(*queue_us as f64)),
+                    ("batch_n", Json::from(*batch_n)),
+                    ("gemm_us", Json::Num(*gemm_us as f64)),
+                ])
+            }
+            ServeMsg::Pong => Json::obj(vec![("type", Json::from("pong"))]),
+            ServeMsg::InfoReply { proto, h, w, c, classes, max_batch, max_wait_us } => {
+                Json::obj(vec![
+                    ("type", Json::from("info_reply")),
+                    ("proto", Json::from(*proto)),
+                    ("h", Json::from(*h)),
+                    ("w", Json::from(*w)),
+                    ("c", Json::from(*c)),
+                    ("classes", Json::from(*classes)),
+                    ("max_batch", Json::from(*max_batch)),
+                    ("max_wait_us", Json::Num(*max_wait_us as f64)),
+                ])
+            }
+            ServeMsg::Error { id, reason } => {
+                let mut pairs = vec![
+                    ("type", Json::from("error")),
+                    ("reason", Json::Str(reason.clone())),
+                ];
+                if let Some(id) = id {
+                    pairs.push(("id", Json::Num(*id as f64)));
+                }
+                Json::obj(pairs)
+            }
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<ServeMsg> {
+        let ty = j.get("type")?.as_str()?;
+        Ok(match ty {
+            "infer" => ServeMsg::Infer {
+                id: u64_num(j, "id")?,
+                image: f32s_from_json(j.get("image")?)?,
+            },
+            "ping" => ServeMsg::Ping,
+            "info" => ServeMsg::Info,
+            "logits" => ServeMsg::Logits {
+                id: u64_num(j, "id")?,
+                logits: f32s_from_json(j.get("logits")?)?,
+                argmax: j.get("argmax")?.as_usize()?,
+                queue_us: u64_num(j, "queue_us")?,
+                batch_n: j.get("batch_n")?.as_usize()?,
+                gemm_us: u64_num(j, "gemm_us")?,
+            },
+            "pong" => ServeMsg::Pong,
+            "info_reply" => ServeMsg::InfoReply {
+                proto: j.get("proto")?.as_usize()?,
+                h: j.get("h")?.as_usize()?,
+                w: j.get("w")?.as_usize()?,
+                c: j.get("c")?.as_usize()?,
+                classes: j.get("classes")?.as_usize()?,
+                max_batch: j.get("max_batch")?.as_usize()?,
+                max_wait_us: u64_num(j, "max_wait_us")?,
+            },
+            "error" => ServeMsg::Error {
+                id: match j.opt("id") {
+                    Some(_) => Some(u64_num(j, "id")?),
+                    None => None,
+                },
+                reason: j.get("reason")?.as_str()?.to_string(),
+            },
+            other => {
+                return Err(FxpError::Json(format!(
+                    "unknown serve message type '{other}'"
+                )))
+            }
+        })
+    }
+}
+
+/// What one read attempt produced (same contract as
+/// [`crate::cluster::proto::Frame`]).
+#[derive(Debug)]
+pub enum ServeFrame {
+    Msg(ServeMsg),
+    Eof,
+    TimedOut,
+}
+
+/// Encode `msg` as one frame (errors, nothing on the wire, if the
+/// payload would exceed [`netio::MAX_FRAME`]).
+pub fn write_serve_frame(w: &mut impl Write, msg: &ServeMsg) -> Result<()> {
+    netio::write_json_frame(w, &msg.to_json())
+}
+
+/// Read one serve-protocol frame (timeout semantics per [`crate::netio`]).
+pub fn read_serve_frame(
+    r: &mut impl Read,
+    deadline: Option<Instant>,
+) -> Result<ServeFrame> {
+    Ok(match netio::read_json_frame(r, deadline)? {
+        JsonFrame::Msg(j) => ServeFrame::Msg(ServeMsg::from_json(&j)?),
+        JsonFrame::Eof => ServeFrame::Eof,
+        JsonFrame::TimedOut => ServeFrame::TimedOut,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round_trip(m: &ServeMsg) -> ServeMsg {
+        let mut buf = Vec::new();
+        write_serve_frame(&mut buf, m).unwrap();
+        match read_serve_frame(&mut buf.as_slice(), None).unwrap() {
+            ServeFrame::Msg(back) => back,
+            other => panic!("expected a message, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn all_messages_round_trip() {
+        let msgs = vec![
+            ServeMsg::Ping,
+            ServeMsg::Pong,
+            ServeMsg::Info,
+            ServeMsg::Infer { id: 0, image: vec![] },
+            ServeMsg::Infer { id: u64::MAX >> 12, image: vec![0.0, 0.25, 1.0] },
+            ServeMsg::Logits {
+                id: 7,
+                logits: vec![-1.5, 0.1 + 0.2, 3.25e-3],
+                argmax: 2,
+                queue_us: 1234,
+                batch_n: 8,
+                gemm_us: 567,
+            },
+            ServeMsg::InfoReply {
+                proto: SERVE_PROTO_VERSION,
+                h: 32,
+                w: 32,
+                c: 3,
+                classes: 10,
+                max_batch: 8,
+                max_wait_us: 2000,
+            },
+            ServeMsg::Error { id: None, reason: "bad \"frame\"\n".into() },
+            ServeMsg::Error { id: Some(3), reason: "draining".into() },
+        ];
+        for m in &msgs {
+            assert_eq!(&round_trip(m), m);
+        }
+    }
+
+    #[test]
+    fn f32_bits_survive_the_wire_exactly() {
+        // awkward values: not exactly representable in decimal, subnormal,
+        // extreme exponents -- to_bits must match after JSON round-trip
+        let awkward = [
+            0.1f32 + 0.2,
+            1.0 / 3.0,
+            f32::MIN_POSITIVE,
+            f32::MAX,
+            1e-40, // subnormal
+            -7.25e9,
+            core::f32::consts::PI,
+        ];
+        let m = ServeMsg::Logits {
+            id: 1,
+            logits: awkward.to_vec(),
+            argmax: 0,
+            queue_us: 0,
+            batch_n: 1,
+            gemm_us: 0,
+        };
+        match round_trip(&m) {
+            ServeMsg::Logits { logits, .. } => {
+                for (i, (a, b)) in awkward.iter().zip(&logits).enumerate() {
+                    assert_eq!(a.to_bits(), b.to_bits(), "logit {i}");
+                }
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn malformed_messages_error_cleanly() {
+        for (what, payload) in [
+            ("missing type", r#"{"id":3}"#),
+            ("unknown type", r#"{"type":"teleport"}"#),
+            ("infer without image", r#"{"type":"infer","id":1}"#),
+            ("infer with string id", r#"{"type":"infer","id":"x","image":[]}"#),
+            ("infer with fractional id", r#"{"type":"infer","id":1.5,"image":[]}"#),
+            ("infer with non-numeric pixel", r#"{"type":"infer","id":1,"image":["a"]}"#),
+            ("error without reason", r#"{"type":"error"}"#),
+        ] {
+            let mut wire = Vec::new();
+            netio::write_frame_bytes(&mut wire, payload.as_bytes()).unwrap();
+            assert!(
+                read_serve_frame(&mut wire.as_slice(), None).is_err(),
+                "{what}: expected an error"
+            );
+        }
+    }
+}

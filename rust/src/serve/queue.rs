@@ -1,0 +1,225 @@
+//! The admission queue: where concurrent requests coalesce into GEMM
+//! batches under a latency budget.
+//!
+//! Connection handler threads [`push`] requests; the single batcher
+//! thread blocks in [`next_batch`], which releases a batch when the
+//! first of three conditions holds:
+//!
+//! 1. **full batch** -- `max_batch` requests are queued (no waiting);
+//! 2. **latency budget** -- the *oldest* queued request has waited
+//!    `max_wait`; whatever is queued flushes (so a lone request's extra
+//!    latency is bounded by the budget, not by traffic);
+//! 3. **drain** -- [`begin_drain`] was called; everything still queued
+//!    flushes immediately, and once the queue is empty `next_batch`
+//!    returns `false` (the batcher exits).
+//!
+//! Ordering is strict FIFO: requests leave in arrival order, and a batch
+//! is always a contiguous prefix of the queue.  Determinism note: *which*
+//! batch a request lands in depends on timing, but the integer engine's
+//! row-independence makes the resulting logits bit-identical regardless
+//! (pinned by tests/serve.rs).
+//!
+//! [`push`]: AdmissionQueue::push
+//! [`next_batch`]: AdmissionQueue::next_batch
+//! [`begin_drain`]: AdmissionQueue::begin_drain
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// One admitted request, waiting for a batch slot.
+#[derive(Debug)]
+pub struct Pending {
+    /// Connection the reply goes back to.
+    pub conn: u64,
+    /// Client-chosen request id (echoed in the reply).
+    pub id: u64,
+    /// `h*w*c` row-major pixels.
+    pub image: Vec<f32>,
+    /// Admission instant (the latency-budget clock, and the source of
+    /// the reply's `queue_us`).
+    pub enqueued: Instant,
+}
+
+struct Inner {
+    q: VecDeque<Pending>,
+    draining: bool,
+}
+
+/// The shared queue between connection handlers and the batcher.
+pub struct AdmissionQueue {
+    inner: Mutex<Inner>,
+    cv: Condvar,
+    max_batch: usize,
+    max_wait: Duration,
+}
+
+impl AdmissionQueue {
+    pub fn new(max_batch: usize, max_wait: Duration) -> AdmissionQueue {
+        AdmissionQueue {
+            inner: Mutex::new(Inner { q: VecDeque::new(), draining: false }),
+            cv: Condvar::new(),
+            max_batch: max_batch.max(1),
+            max_wait,
+        }
+    }
+
+    pub fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    /// Admit a request.  Returns `false` -- and does *not* enqueue --
+    /// once draining has begun: the caller must reply with an error
+    /// instead, so no request is ever silently dropped.  (The check and
+    /// the enqueue share one lock acquisition, so a successful push is
+    /// guaranteed to be seen by the batcher before it exits.)
+    pub fn push(&self, p: Pending) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        if g.draining {
+            return false;
+        }
+        g.q.push_back(p);
+        drop(g);
+        self.cv.notify_all();
+        true
+    }
+
+    /// Stop admitting; flush what remains.  Idempotent.
+    pub fn begin_drain(&self) {
+        self.inner.lock().unwrap().draining = true;
+        self.cv.notify_all();
+    }
+
+    pub fn is_draining(&self) -> bool {
+        self.inner.lock().unwrap().draining
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Block until a batch is due (see the module docs for the three
+    /// release conditions), filling `out` (cleared first) with up to
+    /// `max_batch` requests in FIFO order.  Returns `false` exactly once
+    /// the queue is draining *and* empty -- the batcher's exit signal.
+    pub fn next_batch(&self, out: &mut Vec<Pending>) -> bool {
+        out.clear();
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if g.q.len() >= self.max_batch || (g.draining && !g.q.is_empty()) {
+                break;
+            }
+            match g.q.front() {
+                Some(front) => {
+                    let deadline = front.enqueued + self.max_wait;
+                    let now = Instant::now();
+                    if now >= deadline {
+                        break; // budget exhausted: flush a partial batch
+                    }
+                    let (g2, _) = self.cv.wait_timeout(g, deadline - now).unwrap();
+                    g = g2;
+                }
+                None => {
+                    if g.draining {
+                        return false;
+                    }
+                    g = self.cv.wait(g).unwrap();
+                }
+            }
+        }
+        let take = self.max_batch.min(g.q.len());
+        out.extend(g.q.drain(..take));
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64) -> Pending {
+        Pending { conn: 0, id, image: vec![], enqueued: Instant::now() }
+    }
+
+    #[test]
+    fn full_batch_releases_without_waiting() {
+        let q = AdmissionQueue::new(4, Duration::from_secs(60));
+        for id in 0..4 {
+            assert!(q.push(req(id)));
+        }
+        let mut batch = Vec::new();
+        let t0 = Instant::now();
+        assert!(q.next_batch(&mut batch));
+        assert!(t0.elapsed() < Duration::from_secs(5), "must not wait the budget");
+        let ids: Vec<u64> = batch.iter().map(|p| p.id).collect();
+        assert_eq!(ids, [0, 1, 2, 3], "strict FIFO");
+    }
+
+    #[test]
+    fn latency_budget_flushes_a_partial_batch_in_order() {
+        let q = AdmissionQueue::new(8, Duration::from_millis(30));
+        for id in 0..3 {
+            assert!(q.push(req(id)));
+        }
+        let mut batch = Vec::new();
+        let t0 = Instant::now();
+        assert!(q.next_batch(&mut batch));
+        let waited = t0.elapsed();
+        let ids: Vec<u64> = batch.iter().map(|p| p.id).collect();
+        assert_eq!(ids, [0, 1, 2], "partial flush keeps arrival order");
+        assert!(
+            waited < Duration::from_secs(5),
+            "budget flush took {waited:?}"
+        );
+    }
+
+    #[test]
+    fn oversize_backlog_leaves_in_fifo_chunks() {
+        let q = AdmissionQueue::new(4, Duration::from_millis(5));
+        for id in 0..10 {
+            assert!(q.push(req(id)));
+        }
+        let mut seen = Vec::new();
+        let mut sizes = Vec::new();
+        let mut batch = Vec::new();
+        q.begin_drain();
+        while q.next_batch(&mut batch) {
+            sizes.push(batch.len());
+            seen.extend(batch.iter().map(|p| p.id));
+        }
+        assert_eq!(sizes, [4, 4, 2], "chunked at max_batch, remainder last");
+        assert_eq!(seen, (0..10).collect::<Vec<u64>>(), "global FIFO order");
+    }
+
+    #[test]
+    fn drain_rejects_new_but_flushes_queued() {
+        let q = AdmissionQueue::new(8, Duration::from_secs(60));
+        assert!(q.push(req(0)));
+        q.begin_drain();
+        assert!(!q.push(req(1)), "push after drain must be rejected");
+        let mut batch = Vec::new();
+        assert!(q.next_batch(&mut batch), "queued work still flushes");
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].id, 0);
+        assert!(!q.next_batch(&mut batch), "empty + draining = exit signal");
+        assert!(batch.is_empty());
+    }
+
+    #[test]
+    fn drain_wakes_a_blocked_batcher() {
+        let q = AdmissionQueue::new(8, Duration::from_secs(60));
+        std::thread::scope(|s| {
+            let h = s.spawn(|| {
+                let mut batch = Vec::new();
+                q.next_batch(&mut batch) // blocks on the empty queue
+            });
+            std::thread::sleep(Duration::from_millis(20));
+            q.begin_drain();
+            assert!(!h.join().unwrap(), "drain must wake and release the batcher");
+        });
+    }
+}

@@ -1,0 +1,480 @@
+//! Trace-replay load generator for the serve daemon (`fxpnet serve
+//! --replay`, and the `serve_latency` bench).
+//!
+//! Replays deterministic, seeded arrival processes against a running
+//! daemon and reports client-observed latency percentiles, achieved
+//! throughput, and the server-side batch-size mix:
+//!
+//! * **uniform** -- evenly spaced arrivals with +-20% jitter, offered at
+//!   half the measured serial rate (the "healthy load" tail-latency
+//!   probe);
+//! * **bursty** -- Poisson-spaced bursts of 4..=12 simultaneous
+//!   arrivals, offered at 2x the serial rate (batching must coalesce or
+//!   drown -- the throughput probe);
+//! * **diurnal** -- a sinusoidal rate profile (3 cycles over the trace)
+//!   between 0.3x and 1.7x the base rate;
+//! * **adversarial** -- closed-loop saturation: every client fires its
+//!   next request the moment the previous reply lands (no schedule).
+//!
+//! ## Machine-independent gating
+//!
+//! Absolute rates mean nothing across machines, so offered rates are
+//! derived at runtime from a *serial baseline* -- one closed-loop client
+//! against the same daemon -- and the CI gates are ratios against that
+//! baseline (`serve` keys in `BENCH_baseline.json`, asserted under
+//! `FXP_BENCH_ASSERT` / `--assert`):
+//!
+//! * `max_p95_ratio_uniform`: uniform-trace p95 latency over serial p50;
+//! * `min_throughput_ratio_bursty`: bursty achieved rate over serial
+//!   rate -- the number that proves micro-batching actually buys
+//!   throughput (a batch-of-1 server cannot exceed ~1.0).
+
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use crate::bench::fixtures::baseline_floor;
+use crate::error::{FxpError, Result};
+use crate::serve::proto::{read_serve_frame, write_serve_frame, ServeFrame, ServeMsg};
+use crate::serve::stats::TraceStats;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// How long a replay client waits for any single reply before declaring
+/// the server hung (generous: covers a cold first batch on a loaded box).
+const REPLY_DEADLINE: Duration = Duration::from_secs(30);
+
+/// One arrival process.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TraceKind {
+    Uniform,
+    Bursty,
+    Diurnal,
+    Adversarial,
+}
+
+impl TraceKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TraceKind::Uniform => "uniform",
+            TraceKind::Bursty => "bursty",
+            TraceKind::Diurnal => "diurnal",
+            TraceKind::Adversarial => "adversarial",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<TraceKind> {
+        match s {
+            "uniform" => Ok(TraceKind::Uniform),
+            "bursty" => Ok(TraceKind::Bursty),
+            "diurnal" => Ok(TraceKind::Diurnal),
+            "adversarial" => Ok(TraceKind::Adversarial),
+            other => Err(FxpError::config(format!(
+                "unknown trace '{other}' (uniform|bursty|diurnal|adversarial)"
+            ))),
+        }
+    }
+
+    /// Offered rate as a multiple of the measured serial rate
+    /// (closed-loop traces have no schedule and return 0).
+    fn rate_factor(&self) -> f64 {
+        match self {
+            TraceKind::Uniform => 0.5,
+            TraceKind::Bursty => 2.0,
+            TraceKind::Diurnal => 1.0,
+            TraceKind::Adversarial => 0.0,
+        }
+    }
+}
+
+/// Replay knobs (`fxpnet serve --replay` flags).
+#[derive(Clone, Debug)]
+pub struct ReplayOpts {
+    /// Requests per trace.
+    pub requests: usize,
+    /// Concurrent client connections; 0 = `2 * server max_batch`.
+    pub clients: usize,
+    /// Seed for arrival jitter and the image pool.
+    pub seed: u64,
+    pub traces: Vec<TraceKind>,
+    /// Report path; `None` = `BENCH_serve.json` at the workspace root.
+    pub out: Option<PathBuf>,
+    /// Gate the ratio floors/ceilings (CI sets this via
+    /// `FXP_BENCH_ASSERT`); violations return `Err`.
+    pub assert_floors: bool,
+}
+
+impl Default for ReplayOpts {
+    fn default() -> Self {
+        ReplayOpts {
+            requests: 400,
+            clients: 0,
+            seed: 42,
+            traces: vec![TraceKind::Uniform, TraceKind::Bursty],
+            out: None,
+            assert_floors: false,
+        }
+    }
+}
+
+/// One synchronous client connection (a single request in flight).
+struct Client {
+    stream: TcpStream,
+}
+
+impl Client {
+    fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        let _ = stream.set_nodelay(true);
+        Ok(Client { stream })
+    }
+
+    fn request(&mut self, msg: &ServeMsg) -> Result<ServeMsg> {
+        write_serve_frame(&mut self.stream, msg)?;
+        match read_serve_frame(&mut self.stream, Some(Instant::now() + REPLY_DEADLINE))? {
+            ServeFrame::Msg(reply) => Ok(reply),
+            ServeFrame::Eof => {
+                Err(FxpError::config("server closed the connection"))
+            }
+            ServeFrame::TimedOut => {
+                Err(FxpError::config("no reply within the deadline"))
+            }
+        }
+    }
+
+    fn info(&mut self) -> Result<(usize, usize, usize, usize, usize, u64)> {
+        match self.request(&ServeMsg::Info)? {
+            ServeMsg::InfoReply { h, w, c, classes, max_batch, max_wait_us, .. } => {
+                Ok((h, w, c, classes, max_batch, max_wait_us))
+            }
+            other => Err(FxpError::config(format!("expected info_reply, got {other:?}"))),
+        }
+    }
+
+    /// Classify one image; returns `(latency, batch_n)` on a `Logits`
+    /// reply, `Err` on an `Error` reply or transport failure.
+    fn infer(&mut self, id: u64, image: &[f32]) -> Result<(Duration, usize)> {
+        let t0 = Instant::now();
+        match self.request(&ServeMsg::Infer { id, image: image.to_vec() })? {
+            ServeMsg::Logits { id: rid, batch_n, .. } => {
+                if rid != id {
+                    return Err(FxpError::config(format!(
+                        "reply id {rid} for request {id} (one in flight per conn)"
+                    )));
+                }
+                Ok((t0.elapsed(), batch_n))
+            }
+            ServeMsg::Error { reason, .. } => {
+                Err(FxpError::config(format!("server error: {reason}")))
+            }
+            other => Err(FxpError::config(format!("unexpected reply {other:?}"))),
+        }
+    }
+}
+
+/// Arrival offsets from trace start (empty for closed-loop kinds).
+fn arrivals(kind: TraceKind, n: usize, rate_rps: f64, rng: &mut Rng) -> Vec<Duration> {
+    let mean_gap = 1.0 / rate_rps.max(1e-9);
+    let mut out = Vec::with_capacity(n);
+    let mut t = 0.0f64;
+    match kind {
+        TraceKind::Adversarial => {}
+        TraceKind::Uniform => {
+            for _ in 0..n {
+                out.push(Duration::from_secs_f64(t));
+                t += mean_gap * (0.8 + 0.4 * rng.uniform());
+            }
+        }
+        TraceKind::Bursty => {
+            while out.len() < n {
+                let burst = 4 + rng.below(9); // 4..=12 simultaneous
+                for _ in 0..burst.min(n - out.len()) {
+                    out.push(Duration::from_secs_f64(t));
+                }
+                // exponential burst gap with the mean that preserves the
+                // offered rate: burst_size / rate
+                t += -(1.0 - rng.uniform()).ln() * mean_gap * burst as f64;
+            }
+        }
+        TraceKind::Diurnal => {
+            for i in 0..n {
+                out.push(Duration::from_secs_f64(t));
+                let phase = 2.0 * std::f64::consts::PI * 3.0 * i as f64 / n as f64;
+                let factor = 0.3 + 1.4 * (0.5 + 0.5 * phase.sin());
+                t += mean_gap / factor * (0.9 + 0.2 * rng.uniform());
+            }
+        }
+    }
+    out
+}
+
+/// Replay one trace: `clients` connections, request `i` owned by client
+/// `i % clients`.  Open-loop traces sleep each request until its
+/// scheduled offset (from a shared start instant) and then send; a
+/// connection whose previous reply overran the next slot sends
+/// immediately, so sustained overload degrades gracefully instead of
+/// piling unbounded requests onto one socket.  Latency is measured from
+/// the actual send.
+fn run_trace(
+    addr: &str,
+    kind: TraceKind,
+    n: usize,
+    offered_rps: f64,
+    clients: usize,
+    seed: u64,
+    images: &[Vec<f32>],
+) -> Result<TraceStats> {
+    let clients = clients.max(1);
+    let sched = arrivals(kind, n, offered_rps, &mut Rng::new(seed ^ 0x5eed));
+    let t_start = Instant::now();
+    // (latency_us, batch_n) per success; error count — one bucket per client
+    let mut results: Vec<Result<(Vec<(f64, usize)>, usize)>> = Vec::new();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..clients)
+            .map(|k| {
+                let sched = &sched;
+                s.spawn(move || -> Result<(Vec<(f64, usize)>, usize)> {
+                    let mut cl = Client::connect(addr)?;
+                    let mut ok = Vec::new();
+                    let mut errors = 0usize;
+                    let mut i = k;
+                    while i < n {
+                        if let Some(due) = sched.get(i) {
+                            let due = t_start + *due;
+                            let now = Instant::now();
+                            if due > now {
+                                std::thread::sleep(due - now);
+                            }
+                        }
+                        let img = &images[i % images.len()];
+                        match cl.infer(i as u64, img) {
+                            Ok((lat, batch_n)) => {
+                                ok.push((lat.as_secs_f64() * 1e6, batch_n))
+                            }
+                            Err(e) => {
+                                log::warn!("replay: request {i}: {e}");
+                                errors += 1;
+                            }
+                        }
+                        i += clients;
+                    }
+                    Ok((ok, errors))
+                })
+            })
+            .collect();
+        for h in handles {
+            results.push(h.join().unwrap_or_else(|_| {
+                Err(FxpError::config("replay client panicked"))
+            }));
+        }
+    });
+    let wall = t_start.elapsed();
+
+    let mut lats = Vec::with_capacity(n);
+    let mut batches = Vec::with_capacity(n);
+    let mut errors = 0usize;
+    for r in results {
+        let (ok, errs) = r?;
+        errors += errs;
+        for (lat, b) in ok {
+            lats.push(lat);
+            batches.push(b);
+        }
+    }
+    Ok(TraceStats::from_samples(
+        kind.name(),
+        offered_rps,
+        wall,
+        &lats,
+        &batches,
+        errors,
+    ))
+}
+
+/// Full replay session: serial baseline, the requested traces at rates
+/// derived from it, `BENCH_serve.json`, and (optionally) the ratio
+/// gates.  Returns the report JSON.
+pub fn run_suite(addr: &str, opts: &ReplayOpts) -> Result<Json> {
+    let (h, w, c, classes, max_batch, max_wait_us) = Client::connect(addr)?.info()?;
+    let px = h * w * c;
+    log::info!(
+        "replay: server model {h}x{w}x{c} -> {classes} classes, \
+         max_batch {max_batch}, max_wait {max_wait_us}us"
+    );
+    let clients = if opts.clients == 0 { 2 * max_batch } else { opts.clients };
+
+    // shape-correct image pool, seeded
+    let mut rng = Rng::new(opts.seed);
+    let images: Vec<Vec<f32>> = (0..32)
+        .map(|_| (0..px).map(|_| rng.uniform() as f32).collect())
+        .collect();
+
+    // serial baseline: one closed-loop client against the same daemon
+    // (includes the max_wait batching budget -- it is the latency a
+    // single-request deployment of *this* config actually sees)
+    let n_serial = (opts.requests / 4).max(64);
+    let serial = run_trace(
+        addr,
+        TraceKind::Adversarial,
+        n_serial,
+        0.0,
+        1,
+        opts.seed,
+        &images,
+    )?;
+    let serial = TraceStats { name: "serial".into(), ..serial };
+    log::info!(
+        "replay: serial baseline {:.1} req/s, p50 {:.0}us",
+        serial.achieved_rps,
+        serial.p50_us
+    );
+    if serial.requests == 0 {
+        return Err(FxpError::config("serial baseline produced no replies"));
+    }
+
+    let mut traces = Vec::new();
+    for &kind in &opts.traces {
+        let rate = serial.achieved_rps * kind.rate_factor();
+        let st = run_trace(addr, kind, opts.requests, rate, clients, opts.seed, &images)?;
+        log::info!(
+            "replay: {} @ {:.1} req/s offered: {:.1} req/s achieved, \
+             p95 {:.0}us, mean batch {:.2}, {} errors",
+            st.name,
+            st.offered_rps,
+            st.achieved_rps,
+            st.p95_us,
+            st.mean_batch,
+            st.errors
+        );
+        traces.push(st);
+    }
+
+    // ratio gates (machine-independent: both sides measured on this box)
+    let mut gates: Vec<(&str, Json)> = Vec::new();
+    let mut violations = Vec::new();
+    for st in &traces {
+        if st.errors > 0 {
+            violations.push(format!("{}: {} request errors", st.name, st.errors));
+        }
+        match st.name.as_str() {
+            "uniform" => {
+                let ratio = st.p95_us / serial.p50_us.max(1.0);
+                // baseline_floor is a plain numeric lookup; this key is a
+                // ceiling, not a floor
+                let cap = baseline_floor("serve", "max_p95_ratio_uniform", 25.0);
+                gates.push(("p95_ratio_uniform", Json::Num(ratio)));
+                gates.push(("max_p95_ratio_uniform", Json::Num(cap)));
+                if ratio > cap {
+                    violations.push(format!(
+                        "uniform p95 is {ratio:.2}x serial p50 (cap {cap}x)"
+                    ));
+                }
+            }
+            "bursty" => {
+                let ratio = st.achieved_rps / serial.achieved_rps;
+                let floor = baseline_floor("serve", "min_throughput_ratio_bursty", 1.1);
+                gates.push(("throughput_ratio_bursty", Json::Num(ratio)));
+                gates.push(("min_throughput_ratio_bursty", Json::Num(floor)));
+                if ratio < floor {
+                    violations.push(format!(
+                        "bursty throughput only {ratio:.2}x serial (floor {floor}x)"
+                    ));
+                }
+            }
+            _ => {}
+        }
+    }
+
+    let report = Json::obj(vec![
+        (
+            "model",
+            Json::obj(vec![
+                ("h", Json::from(h)),
+                ("w", Json::from(w)),
+                ("c", Json::from(c)),
+                ("classes", Json::from(classes)),
+                ("max_batch", Json::from(max_batch)),
+                ("max_wait_us", Json::Num(max_wait_us as f64)),
+            ]),
+        ),
+        ("clients", Json::from(clients)),
+        ("seed", Json::Num(opts.seed as f64)),
+        ("serial", serial.to_json()),
+        (
+            "traces",
+            Json::Obj(
+                traces.iter().map(|st| (st.name.clone(), st.to_json())).collect(),
+            ),
+        ),
+        ("gates", Json::obj(gates)),
+    ]);
+
+    let path = opts.out.clone().unwrap_or_else(|| {
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("..")
+            .join("BENCH_serve.json")
+    });
+    let tmp = path.with_extension("json.tmp");
+    crate::util::durable::write_atomic(&path, &tmp, report.to_string().as_bytes())?;
+    log::info!("replay: wrote {}", path.display());
+
+    if opts.assert_floors && !violations.is_empty() {
+        return Err(FxpError::config(format!(
+            "serve gates failed: {}",
+            violations.join("; ")
+        )));
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arrival_schedules_are_deterministic_and_sized() {
+        for kind in [TraceKind::Uniform, TraceKind::Bursty, TraceKind::Diurnal] {
+            let a = arrivals(kind, 100, 500.0, &mut Rng::new(7));
+            let b = arrivals(kind, 100, 500.0, &mut Rng::new(7));
+            assert_eq!(a, b, "{kind:?} must be seed-deterministic");
+            assert_eq!(a.len(), 100);
+            assert!(a.windows(2).all(|w| w[0] <= w[1]), "{kind:?} must be sorted");
+        }
+        assert!(arrivals(TraceKind::Adversarial, 100, 500.0, &mut Rng::new(7))
+            .is_empty());
+    }
+
+    #[test]
+    fn bursty_schedule_actually_bursts() {
+        let a = arrivals(TraceKind::Bursty, 200, 1000.0, &mut Rng::new(11));
+        // simultaneous arrivals: many zero gaps
+        let zero_gaps =
+            a.windows(2).filter(|w| w[1] - w[0] == Duration::ZERO).count();
+        assert!(zero_gaps >= 100, "only {zero_gaps} simultaneous pairs");
+    }
+
+    #[test]
+    fn uniform_schedule_respects_the_offered_rate() {
+        let rate = 200.0;
+        let a = arrivals(TraceKind::Uniform, 400, rate, &mut Rng::new(3));
+        let span = a.last().unwrap().as_secs_f64();
+        let measured = 399.0 / span;
+        assert!(
+            (measured - rate).abs() / rate < 0.15,
+            "offered {rate} req/s but schedule encodes {measured:.1}"
+        );
+    }
+
+    #[test]
+    fn trace_kind_parse_round_trips() {
+        for kind in [
+            TraceKind::Uniform,
+            TraceKind::Bursty,
+            TraceKind::Diurnal,
+            TraceKind::Adversarial,
+        ] {
+            assert_eq!(TraceKind::parse(kind.name()).unwrap(), kind);
+        }
+        assert!(TraceKind::parse("weekly").is_err());
+    }
+}

@@ -1,0 +1,433 @@
+//! The `fxpnet serve` daemon: accept loop, per-connection handler
+//! threads, and the single batcher thread that drains the
+//! [`AdmissionQueue`] through a warm [`InferSession`].
+//!
+//! ## Thread shape
+//!
+//! ```text
+//! accept loop (main)          handler per conn            batcher (one)
+//!   nonblocking accept   -->   read Infer frames   -->     next_batch()
+//!   poll shutdown flag         push() to queue             copy rows, run()
+//!   begin_drain on signal      reply Ping/Info inline      reply Logits per
+//!   exit when batcher done     reject while draining         request via the
+//!                                                            conn registry
+//! ```
+//!
+//! Handlers never touch the engine; the batcher never touches a read
+//! half.  Replies go through a per-connection `Arc<Mutex<TcpStream>>`
+//! write half (registry keyed by connection id), so a handler's inline
+//! `Pong` and the batcher's `Logits` can never interleave mid-frame.
+//!
+//! ## Drain (SIGINT/SIGTERM)
+//!
+//! The shutdown flag (hook it to signals via
+//! [`crate::cluster::install_drain_handler`]) triggers
+//! [`AdmissionQueue::begin_drain`]: queued requests still execute and
+//! reply, *new* requests get `Error{id, "draining"}` (never silence),
+//! new connections are refused, and once the batcher drains the queue
+//! the accept loop exits 0.  No request that was admitted is dropped --
+//! pinned by rust/tests/serve.rs.
+//!
+//! ## Determinism
+//!
+//! Replies are bit-deterministic: the integer engine computes each
+//! image's logits independently of its batch neighbours (row-blocked
+//! integer GEMM, no cross-row reduction), so whatever batch a request
+//! coalesces into, its logits -- and the deterministic first-maximum
+//! argmax -- are identical to a batch-of-1 run.
+
+use std::collections::HashMap;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::error::Result;
+use crate::inference::{FixedPointNet, InferSession};
+use crate::serve::proto::{
+    read_serve_frame, write_serve_frame, ServeFrame, ServeMsg, SERVE_PROTO_VERSION,
+};
+use crate::serve::queue::{AdmissionQueue, Pending};
+use crate::util::json::Json;
+
+/// Accept-loop poll period and handler socket read timeout (one boundary
+/// "tick"; see [`crate::netio`] timeout semantics).
+const TICK: Duration = Duration::from_millis(20);
+
+/// Per-frame budget once a client has started sending bytes: bounds how
+/// long a mid-frame stall can hold a handler thread (and thus shutdown).
+const FRAME_DEADLINE: Duration = Duration::from_secs(10);
+
+/// `fxpnet serve` knobs.
+#[derive(Clone, Debug)]
+pub struct ServeOpts {
+    /// Bind address; port 0 picks a free port (see `port_file`).
+    pub listen: String,
+    /// File to write the bound `host:port` to once listening -- the same
+    /// rendezvous mechanism as the cluster coordinator.
+    pub port_file: Option<PathBuf>,
+    /// Largest GEMM batch one flush may form (admission queue capacity
+    /// per batch, and the warm scratch sizing).
+    pub max_batch: usize,
+    /// Latency budget: a queued request waits at most this long before a
+    /// partial batch flushes.
+    pub max_wait: Duration,
+    /// Engine threads for the batched forward.
+    pub threads: usize,
+}
+
+impl Default for ServeOpts {
+    fn default() -> Self {
+        ServeOpts {
+            listen: "127.0.0.1:0".into(),
+            port_file: None,
+            max_batch: 8,
+            max_wait: Duration::from_micros(2000),
+            threads: 1,
+        }
+    }
+}
+
+/// What the daemon did over its lifetime (returned on clean drain).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ServeSummary {
+    /// Requests answered with `Logits`.
+    pub requests: u64,
+    /// GEMM batches executed.
+    pub batches: u64,
+    /// Requests refused with `Error{"draining"}`.
+    pub rejected: u64,
+    /// `batch_hist[n]` = batches of size `n` (index 0 unused).
+    pub batch_hist: Vec<u64>,
+    /// Always true on a normal exit (the only way out is a drain).
+    pub drained: bool,
+}
+
+impl ServeSummary {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("requests", Json::Num(self.requests as f64)),
+            ("batches", Json::Num(self.batches as f64)),
+            ("rejected", Json::Num(self.rejected as f64)),
+            (
+                "batch_hist",
+                Json::Arr(
+                    self.batch_hist.iter().map(|&c| Json::Num(c as f64)).collect(),
+                ),
+            ),
+            ("drained", Json::from(self.drained)),
+        ])
+    }
+}
+
+struct StatsInner {
+    requests: u64,
+    batches: u64,
+    rejected: u64,
+    hist: Vec<u64>,
+}
+
+/// State shared between the accept loop, handlers, and the batcher.
+struct Shared {
+    /// Write halves by connection id; a handler removes its entry on
+    /// exit, after which the batcher drops that conn's replies.
+    conns: Mutex<HashMap<u64, Arc<Mutex<TcpStream>>>>,
+    stats: Mutex<StatsInner>,
+    /// Set once the batcher has drained: handlers exit on their next tick.
+    done: AtomicBool,
+}
+
+/// Run the daemon until `shutdown` is observed and the queue drains.
+///
+/// `ready` (used by tests and the replay bench's in-process mode)
+/// receives the bound address once the listener is up -- the in-process
+/// equivalent of `port_file`.
+pub fn run_server(
+    net: Arc<FixedPointNet>,
+    opts: &ServeOpts,
+    shutdown: &AtomicBool,
+    ready: Option<mpsc::Sender<SocketAddr>>,
+) -> Result<ServeSummary> {
+    let listener = TcpListener::bind(&opts.listen)?;
+    listener.set_nonblocking(true)?;
+    let addr = listener.local_addr()?;
+    log::info!(
+        "serve: listening on {addr} (max_batch {}, max_wait {:?}, threads {})",
+        opts.max_batch,
+        opts.max_wait,
+        opts.threads
+    );
+    if let Some(pf) = &opts.port_file {
+        // atomic write: a polling client never sees a partial address
+        let tmp = pf.with_extension("tmp");
+        crate::util::durable::write_atomic(pf, &tmp, format!("{addr}\n").as_bytes())?;
+    }
+    if let Some(tx) = ready {
+        let _ = tx.send(addr);
+    }
+
+    let queue = AdmissionQueue::new(opts.max_batch, opts.max_wait);
+    let shared = Shared {
+        conns: Mutex::new(HashMap::new()),
+        stats: Mutex::new(StatsInner {
+            requests: 0,
+            batches: 0,
+            rejected: 0,
+            hist: vec![0; opts.max_batch + 1],
+        }),
+        done: AtomicBool::new(false),
+    };
+
+    std::thread::scope(|s| {
+        let batcher_net = net.clone();
+        let batcher = s.spawn({
+            let queue = &queue;
+            let shared = &shared;
+            let threads = opts.threads;
+            move || batcher_loop(batcher_net, queue, shared, threads)
+        });
+
+        let mut next_conn: u64 = 0;
+        loop {
+            if shutdown.load(Ordering::SeqCst) && !queue.is_draining() {
+                log::info!("serve: drain requested; flushing in-flight requests");
+                queue.begin_drain();
+            }
+            if queue.is_draining() && batcher.is_finished() {
+                break;
+            }
+            match listener.accept() {
+                Ok((stream, peer)) => {
+                    if queue.is_draining() {
+                        log::info!("serve: refusing {peer} (draining)");
+                        drop(stream);
+                        continue;
+                    }
+                    let conn = next_conn;
+                    next_conn += 1;
+                    let queue = &queue;
+                    let shared = &shared;
+                    let net = &net;
+                    let sopts = opts;
+                    s.spawn(move || handle_conn(conn, stream, queue, shared, net, sopts));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(TICK);
+                }
+                Err(e) => {
+                    log::warn!("serve: accept: {e}");
+                    std::thread::sleep(TICK);
+                }
+            }
+        }
+        // Queue is drained and the batcher has exited; tell handlers to
+        // go (they observe `done` within one tick) and let the scope
+        // join them -- bounded by TICK + FRAME_DEADLINE even for a
+        // mid-frame straggler.
+        shared.done.store(true, Ordering::SeqCst);
+        let _ = batcher.join();
+    });
+
+    let st = shared.stats.into_inner().unwrap();
+    let summary = ServeSummary {
+        requests: st.requests,
+        batches: st.batches,
+        rejected: st.rejected,
+        batch_hist: st.hist,
+        drained: true,
+    };
+    log::info!(
+        "serve: drained cleanly ({} requests in {} batches, {} rejected)",
+        summary.requests,
+        summary.batches,
+        summary.rejected
+    );
+    Ok(summary)
+}
+
+/// Send one reply on a connection's write half; errors mean the client
+/// is gone, which is the client's problem, not the server's.
+fn reply(half: &Arc<Mutex<TcpStream>>, msg: &ServeMsg) -> Result<()> {
+    let mut w = half.lock().unwrap();
+    write_serve_frame(&mut *w, msg)
+}
+
+/// Reply via the registry (the batcher's path: it has no stream of its
+/// own).  Silently drops the message if the connection has closed.
+fn reply_to(shared: &Shared, conn: u64, msg: &ServeMsg) {
+    let half = shared.conns.lock().unwrap().get(&conn).cloned();
+    if let Some(half) = half {
+        let _ = reply(&half, msg);
+    }
+}
+
+fn handle_conn(
+    conn: u64,
+    mut stream: TcpStream,
+    queue: &AdmissionQueue,
+    shared: &Shared,
+    net: &FixedPointNet,
+    opts: &ServeOpts,
+) {
+    if stream.set_read_timeout(Some(TICK)).is_err() {
+        return;
+    }
+    let _ = stream.set_nodelay(true);
+    let write_half = match stream.try_clone() {
+        Ok(s) => Arc::new(Mutex::new(s)),
+        Err(_) => return,
+    };
+    shared.conns.lock().unwrap().insert(conn, write_half.clone());
+    let (h, w, c) = net.input_shape();
+    let px = h * w * c;
+
+    loop {
+        if shared.done.load(Ordering::SeqCst) {
+            break;
+        }
+        match read_serve_frame(&mut stream, Some(Instant::now() + FRAME_DEADLINE)) {
+            // boundary tick: nothing arrived, go poll `done`
+            Ok(ServeFrame::TimedOut) => continue,
+            Ok(ServeFrame::Eof) => break,
+            Ok(ServeFrame::Msg(ServeMsg::Ping)) => {
+                if reply(&write_half, &ServeMsg::Pong).is_err() {
+                    break;
+                }
+            }
+            Ok(ServeFrame::Msg(ServeMsg::Info)) => {
+                let msg = ServeMsg::InfoReply {
+                    proto: SERVE_PROTO_VERSION,
+                    h,
+                    w,
+                    c,
+                    classes: net.num_classes(),
+                    max_batch: opts.max_batch,
+                    max_wait_us: opts.max_wait.as_micros() as u64,
+                };
+                if reply(&write_half, &msg).is_err() {
+                    break;
+                }
+            }
+            Ok(ServeFrame::Msg(ServeMsg::Infer { id, image })) => {
+                if image.len() != px {
+                    // a shape mistake is per-request, not fatal to the conn
+                    let msg = ServeMsg::Error {
+                        id: Some(id),
+                        reason: format!(
+                            "image has {} values, model wants {h}x{w}x{c} = {px}",
+                            image.len()
+                        ),
+                    };
+                    if reply(&write_half, &msg).is_err() {
+                        break;
+                    }
+                    continue;
+                }
+                let p = Pending { conn, id, image, enqueued: Instant::now() };
+                if !queue.push(p) {
+                    shared.stats.lock().unwrap().rejected += 1;
+                    let msg = ServeMsg::Error { id: Some(id), reason: "draining".into() };
+                    if reply(&write_half, &msg).is_err() {
+                        break;
+                    }
+                }
+            }
+            Ok(ServeFrame::Msg(other)) => {
+                // server->client vocabulary coming *from* a client
+                let _ = reply(
+                    &write_half,
+                    &ServeMsg::Error {
+                        id: None,
+                        reason: format!("unexpected message from client: {other:?}"),
+                    },
+                );
+                break;
+            }
+            Err(e) => {
+                // malformed frame / not-JSON / oversize / mid-frame stall:
+                // tell the client why, then hang up
+                let _ = reply(
+                    &write_half,
+                    &ServeMsg::Error { id: None, reason: format!("bad frame: {e}") },
+                );
+                break;
+            }
+        }
+    }
+    shared.conns.lock().unwrap().remove(&conn);
+}
+
+/// The single batcher: pulls FIFO batches from the queue, runs them
+/// through one warm [`InferSession`] (zero steady-state allocation --
+/// scratch, output, and the input staging buffer are all reused), and
+/// fans replies back out through the connection registry.
+fn batcher_loop(
+    net: Arc<FixedPointNet>,
+    queue: &AdmissionQueue,
+    shared: &Shared,
+    threads: usize,
+) {
+    let (h, w, c) = net.input_shape();
+    let px = h * w * c;
+    let nc = net.num_classes();
+    let max_batch = queue.max_batch();
+    let mut session = InferSession::new(net, max_batch, threads);
+    let mut input = vec![0f32; max_batch * px];
+    let mut batch: Vec<Pending> = Vec::with_capacity(max_batch);
+
+    while queue.next_batch(&mut batch) {
+        let n = batch.len();
+        for (i, p) in batch.iter().enumerate() {
+            input[i * px..(i + 1) * px].copy_from_slice(&p.image);
+        }
+        let dispatched = Instant::now();
+        let out = match session.run(&input[..n * px], n) {
+            Ok(out) => out,
+            Err(e) => {
+                log::warn!("serve: engine error on a batch of {n}: {e}");
+                for p in &batch {
+                    reply_to(
+                        shared,
+                        p.conn,
+                        &ServeMsg::Error {
+                            id: Some(p.id),
+                            reason: format!("engine: {e}"),
+                        },
+                    );
+                }
+                continue;
+            }
+        };
+        let gemm_us = dispatched.elapsed().as_micros() as u64;
+        {
+            let mut st = shared.stats.lock().unwrap();
+            st.batches += 1;
+            st.requests += n as u64;
+            st.hist[n] += 1;
+        }
+        for (i, p) in batch.iter().enumerate() {
+            let row = &out[i * nc..(i + 1) * nc];
+            // deterministic first-maximum scan (ties break to the lower
+            // class index, independent of batch layout)
+            let mut argmax = 0;
+            for (k, &v) in row.iter().enumerate() {
+                if v > row[argmax] {
+                    argmax = k;
+                }
+            }
+            reply_to(
+                shared,
+                p.conn,
+                &ServeMsg::Logits {
+                    id: p.id,
+                    logits: row.to_vec(),
+                    argmax,
+                    queue_us: dispatched.duration_since(p.enqueued).as_micros() as u64,
+                    batch_n: n,
+                    gemm_us,
+                },
+            );
+        }
+    }
+}

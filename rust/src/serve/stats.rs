@@ -1,0 +1,159 @@
+//! Latency/throughput accounting for the serve load bench.
+//!
+//! One [`TraceStats`] summarises one replayed trace: client-observed
+//! latency percentiles, achieved throughput, and the server-side batch
+//! -size distribution (from the `batch_n` field each `Logits` reply
+//! carries).  The numbers that matter for CI gating are *ratios* between
+//! traces (see `serve::replay::run_suite`), never absolute wall times,
+//! so the gates survive machine changes.
+
+use crate::util::json::Json;
+use crate::util::{mean, percentile};
+use std::time::Duration;
+
+/// Summary of one replayed trace.
+#[derive(Clone, Debug)]
+pub struct TraceStats {
+    pub name: String,
+    /// Requests that got a `Logits` reply.
+    pub requests: usize,
+    /// Requests that got an `Error` reply or a transport failure.
+    pub errors: usize,
+    pub wall_s: f64,
+    /// `requests / wall_s`.
+    pub achieved_rps: f64,
+    /// Scheduled arrival rate; 0 for closed-loop traces (no schedule).
+    pub offered_rps: f64,
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+    /// Mean GEMM batch size over replies (the batching win, directly).
+    pub mean_batch: f64,
+    /// Sparse `(batch size, reply count)` histogram, ascending by size.
+    pub batch_hist: Vec<(usize, u64)>,
+}
+
+impl TraceStats {
+    /// Aggregate raw per-request samples.  `latencies_us` and
+    /// `batch_ns` are parallel arrays over successful requests.
+    pub fn from_samples(
+        name: &str,
+        offered_rps: f64,
+        wall: Duration,
+        latencies_us: &[f64],
+        batch_ns: &[usize],
+        errors: usize,
+    ) -> TraceStats {
+        let wall_s = wall.as_secs_f64().max(1e-9);
+        let mut hist: Vec<(usize, u64)> = Vec::new();
+        for &n in batch_ns {
+            match hist.iter_mut().find(|(sz, _)| *sz == n) {
+                Some((_, cnt)) => *cnt += 1,
+                None => hist.push((n, 1)),
+            }
+        }
+        hist.sort_by_key(|&(sz, _)| sz);
+        let mean_batch = if batch_ns.is_empty() {
+            0.0
+        } else {
+            batch_ns.iter().sum::<usize>() as f64 / batch_ns.len() as f64
+        };
+        TraceStats {
+            name: name.to_string(),
+            requests: latencies_us.len(),
+            errors,
+            wall_s,
+            achieved_rps: latencies_us.len() as f64 / wall_s,
+            offered_rps,
+            mean_us: mean(latencies_us),
+            p50_us: percentile(latencies_us, 50.0),
+            p95_us: percentile(latencies_us, 95.0),
+            p99_us: percentile(latencies_us, 99.0),
+            mean_batch,
+            batch_hist: hist,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("requests", Json::from(self.requests)),
+            ("errors", Json::from(self.errors)),
+            ("wall_s", Json::Num(self.wall_s)),
+            ("achieved_rps", Json::Num(self.achieved_rps)),
+            ("offered_rps", Json::Num(self.offered_rps)),
+            ("mean_us", Json::Num(self.mean_us)),
+            ("p50_us", Json::Num(self.p50_us)),
+            ("p95_us", Json::Num(self.p95_us)),
+            ("p99_us", Json::Num(self.p99_us)),
+            ("mean_batch", Json::Num(self.mean_batch)),
+            (
+                "batch_hist",
+                Json::Obj(
+                    self.batch_hist
+                        .iter()
+                        .map(|&(sz, cnt)| (sz.to_string(), Json::Num(cnt as f64)))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aggregates_percentiles_and_histogram() {
+        let lats: Vec<f64> = (1..=100).map(|i| i as f64 * 10.0).collect();
+        let batches = [1usize, 4, 4, 8, 8, 8];
+        let st = TraceStats::from_samples(
+            "uniform",
+            50.0,
+            Duration::from_secs(2),
+            &lats,
+            &batches,
+            3,
+        );
+        assert_eq!(st.requests, 100);
+        assert_eq!(st.errors, 3);
+        assert_eq!(st.achieved_rps, 50.0);
+        assert!(st.p50_us <= st.p95_us && st.p95_us <= st.p99_us);
+        assert!((st.p99_us - 1000.0).abs() < 20.0, "p99 near the max");
+        assert_eq!(st.batch_hist, vec![(1, 1), (4, 2), (8, 3)]);
+        assert!((st.mean_batch - 33.0 / 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_trace_does_not_divide_by_zero() {
+        let st = TraceStats::from_samples(
+            "empty",
+            0.0,
+            Duration::from_secs(0),
+            &[],
+            &[],
+            0,
+        );
+        assert_eq!(st.requests, 0);
+        assert_eq!(st.mean_batch, 0.0);
+        assert!(st.achieved_rps.is_finite());
+    }
+
+    #[test]
+    fn json_has_the_gate_inputs() {
+        let st = TraceStats::from_samples(
+            "bursty",
+            100.0,
+            Duration::from_secs(1),
+            &[100.0, 200.0],
+            &[2, 2],
+            0,
+        );
+        let j = st.to_json();
+        for key in ["achieved_rps", "p95_us", "mean_batch", "batch_hist"] {
+            assert!(j.opt(key).is_some(), "missing {key}");
+        }
+    }
+}

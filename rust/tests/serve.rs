@@ -1,0 +1,383 @@
+//! End-to-end tests for the `fxpnet serve` daemon: reply-bit
+//! determinism across batch configurations, latency-budget flushes,
+//! graceful drain with no silently dropped requests, and
+//! malformed-frame handling over a real TCP connection (reusing the
+//! codec-level corpus from cluster_proto.rs against the shared
+//! `netio` framing).
+//!
+//! Runs entirely offline: the model is a small random fixture net
+//! (8x8x3 -> conv8 -> pool -> fc10), no artifacts needed.
+
+use std::collections::BTreeMap;
+use std::io::Write as _;
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use fxpnet::bench::fixtures::int_engine_cell;
+use fxpnet::fixedpoint::QFormat;
+use fxpnet::inference::{FixedPointNet, InferSession};
+use fxpnet::model::manifest::ArchSpec;
+use fxpnet::serve::proto::{
+    read_serve_frame, write_serve_frame, ServeFrame, ServeMsg, SERVE_PROTO_VERSION,
+};
+use fxpnet::serve::{run_server, ServeOpts, ServeSummary};
+use fxpnet::util::rng::Rng;
+
+const PX: usize = 8 * 8 * 3;
+const CLASSES: usize = 10;
+
+fn small_arch() -> ArchSpec {
+    ArchSpec {
+        name: "serve-net".into(),
+        input: [8, 8, 3],
+        num_classes: CLASSES,
+        num_layers: 2,
+        train_batch: 8,
+        eval_batch: 8,
+        layers: vec![
+            ("conv".into(), 8),
+            ("pool".into(), 0),
+            ("fc".into(), CLASSES),
+        ],
+        params: vec![
+            ("l0.w".into(), vec![3, 3, 3, 8]),
+            ("l0.b".into(), vec![8]),
+            ("l1.w".into(), vec![4 * 4 * 8, CLASSES]),
+            ("l1.b".into(), vec![CLASSES]),
+        ],
+        artifacts: BTreeMap::new(),
+    }
+}
+
+fn fixture_net() -> Arc<FixedPointNet> {
+    let spec = small_arch();
+    let (params, nq) = int_engine_cell(&spec, 8, 42).unwrap();
+    Arc::new(
+        FixedPointNet::build(&spec, &params, &nq, QFormat::new(16, 14).unwrap())
+            .unwrap(),
+    )
+}
+
+fn test_images(n: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| (0..PX).map(|_| rng.uniform() as f32).collect())
+        .collect()
+}
+
+/// A running daemon + the handle to stop it.
+struct TestServer {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    handle: std::thread::JoinHandle<fxpnet::Result<ServeSummary>>,
+}
+
+impl TestServer {
+    fn start(max_batch: usize, max_wait: Duration, threads: usize) -> TestServer {
+        let net = fixture_net();
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let flag = Arc::clone(&shutdown);
+        let (tx, rx) = mpsc::channel();
+        let handle = std::thread::spawn(move || {
+            let opts = ServeOpts {
+                listen: "127.0.0.1:0".into(),
+                port_file: None,
+                max_batch,
+                max_wait,
+                threads,
+            };
+            run_server(net, &opts, &flag, Some(tx))
+        });
+        let addr = rx.recv_timeout(Duration::from_secs(10)).expect("server up");
+        TestServer { addr, shutdown, handle }
+    }
+
+    fn stop(self) -> ServeSummary {
+        self.shutdown.store(true, Ordering::SeqCst);
+        self.handle.join().unwrap().unwrap()
+    }
+}
+
+fn connect(addr: SocketAddr) -> TcpStream {
+    let s = TcpStream::connect(addr).unwrap();
+    s.set_nodelay(true).unwrap();
+    s
+}
+
+fn send(s: &mut TcpStream, msg: &ServeMsg) {
+    write_serve_frame(s, msg).unwrap();
+}
+
+fn recv(s: &mut TcpStream) -> ServeMsg {
+    match read_serve_frame(s, Some(Instant::now() + Duration::from_secs(20))).unwrap()
+    {
+        ServeFrame::Msg(m) => m,
+        other => panic!("expected a message, got {other:?}"),
+    }
+}
+
+fn infer_ok(s: &mut TcpStream, id: u64, image: &[f32]) -> (Vec<f32>, usize, usize) {
+    send(s, &ServeMsg::Infer { id, image: image.to_vec() });
+    match recv(s) {
+        ServeMsg::Logits { id: rid, logits, argmax, batch_n, .. } => {
+            assert_eq!(rid, id);
+            (logits, argmax, batch_n)
+        }
+        other => panic!("expected logits for {id}, got {other:?}"),
+    }
+}
+
+#[test]
+fn ping_and_info_round_trip() {
+    let srv = TestServer::start(4, Duration::from_millis(5), 1);
+    let mut c = connect(srv.addr);
+    send(&mut c, &ServeMsg::Ping);
+    assert_eq!(recv(&mut c), ServeMsg::Pong);
+    send(&mut c, &ServeMsg::Info);
+    match recv(&mut c) {
+        ServeMsg::InfoReply { proto, h, w, c: ch, classes, max_batch, .. } => {
+            assert_eq!(proto, SERVE_PROTO_VERSION);
+            assert_eq!((h, w, ch), (8, 8, 3));
+            assert_eq!(classes, CLASSES);
+            assert_eq!(max_batch, 4);
+        }
+        other => panic!("{other:?}"),
+    }
+    drop(c);
+    srv.stop();
+}
+
+/// The tentpole determinism contract: a request's logits are
+/// bit-identical whatever batch it coalesces into -- across servers
+/// configured with max_batch 1, 4, and 8, concurrent clients, and
+/// multi-threaded GEMM -- and equal to an offline batch-of-1 reference.
+#[test]
+fn replies_are_bit_identical_for_any_batching() {
+    let images = test_images(16, 9);
+
+    // offline reference: warm session, one image at a time
+    let net = fixture_net();
+    let mut reference = InferSession::new(net, 1, 1);
+    let want: Vec<Vec<u32>> = images
+        .iter()
+        .map(|img| {
+            reference.run(img, 1).unwrap().iter().map(|v| v.to_bits()).collect()
+        })
+        .collect();
+
+    for (max_batch, threads) in [(1, 1), (4, 2), (8, 2)] {
+        // a wait budget long enough that concurrent requests really
+        // coalesce into multi-row batches
+        let srv = TestServer::start(max_batch, Duration::from_millis(40), threads);
+        let mut batch_sizes = Vec::new();
+        std::thread::scope(|s| {
+            let handles: Vec<_> = images
+                .iter()
+                .enumerate()
+                .map(|(i, img)| {
+                    let addr = srv.addr;
+                    s.spawn(move || {
+                        let mut c = connect(addr);
+                        let (logits, argmax, batch_n) =
+                            infer_ok(&mut c, i as u64, img);
+                        (i, logits, argmax, batch_n)
+                    })
+                })
+                .collect();
+            for h in handles {
+                let (i, logits, argmax, batch_n) = h.join().unwrap();
+                let got: Vec<u32> = logits.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(
+                    got, want[i],
+                    "image {i}: logits differ under max_batch={max_batch}"
+                );
+                // the argmax must match a scan of the reference bits too
+                let ref_argmax = want[i]
+                    .iter()
+                    .map(|&b| f32::from_bits(b))
+                    .enumerate()
+                    .fold(0usize, |best, (k, v)| {
+                        if v > f32::from_bits(want[i][best]) { k } else { best }
+                    });
+                assert_eq!(argmax, ref_argmax, "image {i} argmax");
+                batch_sizes.push(batch_n);
+            }
+        });
+        assert!(
+            batch_sizes.iter().all(|&b| (1..=max_batch).contains(&b)),
+            "batch sizes out of range: {batch_sizes:?}"
+        );
+        let summary = srv.stop();
+        assert_eq!(summary.requests, 16);
+        assert!(summary.drained);
+    }
+}
+
+#[test]
+fn lone_request_flushes_at_the_latency_budget_not_never() {
+    let srv = TestServer::start(8, Duration::from_millis(30), 1);
+    let images = test_images(1, 3);
+    let mut c = connect(srv.addr);
+    let t0 = Instant::now();
+    let (_, _, batch_n) = infer_ok(&mut c, 0, &images[0]);
+    let waited = t0.elapsed();
+    assert_eq!(batch_n, 1, "a lone request rides a batch of 1");
+    assert!(
+        waited < Duration::from_secs(10),
+        "single request took {waited:?}: the budget flush never fired"
+    );
+    drop(c);
+    srv.stop();
+}
+
+#[test]
+fn wrong_sized_image_is_rejected_without_killing_the_connection() {
+    let srv = TestServer::start(4, Duration::from_millis(5), 1);
+    let images = test_images(1, 5);
+    let mut c = connect(srv.addr);
+    send(&mut c, &ServeMsg::Infer { id: 77, image: vec![0.5; 5] });
+    match recv(&mut c) {
+        ServeMsg::Error { id, reason } => {
+            assert_eq!(id, Some(77), "error must echo the request id");
+            assert!(reason.contains("5"), "unhelpful reason: {reason}");
+        }
+        other => panic!("{other:?}"),
+    }
+    // the same connection still serves valid requests
+    let (logits, _, _) = infer_ok(&mut c, 78, &images[0]);
+    assert_eq!(logits.len(), CLASSES);
+    drop(c);
+    srv.stop();
+}
+
+/// Drain contract: everything admitted before the signal still gets its
+/// logits; requests arriving during the drain get an explicit
+/// `Error{"draining"}`; the daemon then exits cleanly with an accurate
+/// summary.
+#[test]
+fn drain_answers_every_admitted_request_and_rejects_late_ones() {
+    // max_batch larger than the request count and a long budget: nothing
+    // flushes until the drain itself, so every request is provably
+    // queued when the signal lands
+    let n = 12;
+    let srv = TestServer::start(16, Duration::from_secs(5), 1);
+    let images = test_images(n, 21);
+
+    let mut conns: Vec<TcpStream> = (0..n).map(|_| connect(srv.addr)).collect();
+    for (i, c) in conns.iter_mut().enumerate() {
+        send(c, &ServeMsg::Infer { id: i as u64, image: images[i].clone() });
+    }
+    // wait until the server has admitted all n (they sit in the queue;
+    // none can have flushed)
+    std::thread::sleep(Duration::from_millis(300));
+    srv.shutdown.store(true, Ordering::SeqCst);
+
+    let mut answered = 0;
+    for (i, c) in conns.iter_mut().enumerate() {
+        match recv(c) {
+            ServeMsg::Logits { id, batch_n, .. } => {
+                assert_eq!(id, i as u64);
+                assert_eq!(batch_n, n, "drain should flush all {n} as one batch");
+                answered += 1;
+            }
+            other => panic!("request {i}: {other:?}"),
+        }
+    }
+    assert_eq!(answered, n, "an admitted request was dropped in the drain");
+
+    let summary = srv.handle.join().unwrap().unwrap();
+    assert_eq!(summary.requests, n as u64);
+    assert!(summary.drained);
+    assert_eq!(
+        summary.batch_hist[n], 1,
+        "summary histogram should show the one drain batch"
+    );
+}
+
+/// The codec-level malformed corpus from cluster_proto.rs, fired at the
+/// serve daemon over real TCP: each must produce a clean per-connection
+/// failure (an `Error` reply and/or a hangup -- never a panic), and the
+/// daemon must keep serving other clients afterwards.
+#[test]
+fn malformed_frames_never_kill_the_daemon() {
+    let max = fxpnet::cluster::proto::MAX_FRAME;
+    let cases: Vec<(&str, Vec<u8>)> = vec![
+        ("oversized length prefix", ((max + 1) as u32).to_le_bytes().to_vec()),
+        ("huge length prefix", u32::MAX.to_le_bytes().to_vec()),
+        ("truncated length prefix", vec![9, 0]),
+        ("truncated payload", {
+            let mut v = 100u32.to_le_bytes().to_vec();
+            v.extend_from_slice(b"{\"type\":\"ping\"}");
+            v
+        }),
+        ("not json", {
+            let mut v = 5u32.to_le_bytes().to_vec();
+            v.extend_from_slice(b"hello");
+            v
+        }),
+        ("not utf8", {
+            let mut v = 4u32.to_le_bytes().to_vec();
+            v.extend_from_slice(&[0xFF, 0xFE, 0xFD, 0xFC]);
+            v
+        }),
+        ("json but not an object", {
+            let payload = b"[1,2,3]";
+            let mut v = (payload.len() as u32).to_le_bytes().to_vec();
+            v.extend_from_slice(payload);
+            v
+        }),
+        ("object without type", {
+            let payload = br#"{"id":3}"#;
+            let mut v = (payload.len() as u32).to_le_bytes().to_vec();
+            v.extend_from_slice(payload);
+            v
+        }),
+        ("unknown type", {
+            let payload = br#"{"type":"subspace-anomaly"}"#;
+            let mut v = (payload.len() as u32).to_le_bytes().to_vec();
+            v.extend_from_slice(payload);
+            v
+        }),
+        ("infer with string id", {
+            let payload = br#"{"type":"infer","id":"x","image":[]}"#;
+            let mut v = (payload.len() as u32).to_le_bytes().to_vec();
+            v.extend_from_slice(payload);
+            v
+        }),
+        ("server-to-client message from a client", {
+            let payload = br#"{"type":"pong"}"#;
+            let mut v = (payload.len() as u32).to_le_bytes().to_vec();
+            v.extend_from_slice(payload);
+            v
+        }),
+    ];
+
+    let srv = TestServer::start(4, Duration::from_millis(5), 1);
+    let images = test_images(1, 13);
+    for (what, bytes) in &cases {
+        let mut c = connect(srv.addr);
+        c.write_all(bytes).unwrap();
+        // closing our write side turns truncated frames into mid-frame
+        // EOF server-side (a fast, clean rejection rather than a
+        // deadline stall)
+        c.shutdown(std::net::Shutdown::Write).unwrap();
+        // the server replies Error where it can, then hangs up; all we
+        // require is no hang and no panic
+        let deadline = Some(Instant::now() + Duration::from_secs(10));
+        match read_serve_frame(&mut c, deadline) {
+            Ok(ServeFrame::Msg(ServeMsg::Error { .. })) | Ok(ServeFrame::Eof) => {}
+            Ok(other) => panic!("{what}: unexpected {other:?}"),
+            Err(_) => {} // connection reset mid-reply is acceptable too
+        }
+        drop(c);
+        // liveness probe: a well-formed client still gets served
+        let mut ok = connect(srv.addr);
+        let (logits, _, _) = infer_ok(&mut ok, 1, &images[0]);
+        assert_eq!(logits.len(), CLASSES, "{what}: daemon damaged");
+        drop(ok);
+    }
+    let summary = srv.stop();
+    assert_eq!(summary.requests, cases.len() as u64, "one probe per case");
+}
