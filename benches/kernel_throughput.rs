@@ -1,14 +1,16 @@
 //! L1/L3 kernel microbenches (the section Perf baseline numbers):
-//! host-side quantizer throughput, the integer GEMM microkernel,
-//! Tensor<->Literal conversion cost, and AOT executable latency for
-//! eval/stats on the tiny net (skipped when artifacts are absent).
+//! host-side quantizer throughput and the integer GEMM microkernel --
+//! both run once per kernel path (the scalar reference always, plus the
+//! detected SIMD ISA when the host has one; which paths ran is printed,
+//! never silently skipped) -- then Tensor<->Literal conversion cost and
+//! AOT executable latency for eval/stats on the tiny net (skipped with
+//! a message when artifacts are absent).
 
 use fxpnet::bench::bench;
 use fxpnet::data::synth::Dataset;
 use fxpnet::fixedpoint::vector::quantize_slice;
 use fxpnet::fixedpoint::{QFormat, RoundMode};
-use fxpnet::inference::gemm;
-use fxpnet::inference::packing::PackedPanels;
+use fxpnet::inference::{Isa, Kernels};
 use fxpnet::model::params::ParamSet;
 use fxpnet::quant::policy::NetQuant;
 use fxpnet::runtime::literal::{to_literal, HostValue};
@@ -22,42 +24,69 @@ fn main() {
     let mut rng = Rng::new(3);
     let n = 1 << 20;
     let xs: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
-
-    // host quantizer (the L3 twin of the L1 Pallas kernel)
     let mut buf = xs.clone();
-    let s = bench("quantize_slice 1M f32 (nearest)", 3, 20, || {
-        buf.copy_from_slice(&xs);
-        quantize_slice(&mut buf, fmt, RoundMode::NearestHalfUp, None);
-        std::hint::black_box(&buf);
-    });
-    println!("{s}  -> {:.1} Melem/s", s.throughput(n as f64) / 1e6);
 
+    // which kernel paths this host can run (scalar is the reference;
+    // the SIMD section is the point of the dispatch layer)
+    let detected = Kernels::detect();
+    let mut isas = vec![Isa::Scalar];
+    if detected == Isa::Scalar {
+        println!(
+            "kernel paths: scalar only (no AVX2/NEON on this host -- \
+             SIMD sections cannot run)"
+        );
+    } else {
+        isas.push(detected);
+        println!("kernel paths: scalar + {}", detected.name());
+    }
+
+    for &isa in &isas {
+        let kn = Kernels::for_isa(isa);
+        println!("--- kernel path: {} ---", kn.name());
+
+        // host quantizer (the L3 twin of the L1 Pallas kernel)
+        let s = bench(&format!("quantize_nearest 1M f32 [{}]", kn.name()), 3, 20, || {
+            buf.copy_from_slice(&xs);
+            kn.quantize_nearest(&mut buf, fmt);
+            std::hint::black_box(&buf);
+        });
+        println!("{s}  -> {:.1} Melem/s", s.throughput(n as f64) / 1e6);
+
+        // integer GEMM microkernel (the conv engine's inner loop):
+        // CIFAR-first-conv-shaped (k = 9*32, n = 32) over 4096 patch
+        // rows, at the operand widths that select each panel storage
+        // (Q8 -> i8 pair panels under SIMD, 8x12 -> i16, 16x12 -> i32)
+        let (rows, k, ncol) = (4096usize, 288usize, 32usize);
+        let mut irng = Rng::new(8);
+        let a: Vec<i32> = (0..rows * k).map(|_| irng.below(255) as i32 - 127).collect();
+        let w: Vec<i32> = (0..k * ncol).map(|_| irng.below(255) as i32 - 127).collect();
+        let bias: Vec<i64> = (0..ncol).map(|i| i as i64 * 10).collect();
+        let mut out = vec![0i32; rows * ncol];
+        let macs = (rows * k * ncol) as f64;
+        for (a_bits, w_bits) in [(8u8, 8u8), (8, 12), (16, 12)] {
+            let pw = kn.pack_int(&w, k, ncol, a_bits, w_bits);
+            let label = format!(
+                "gemm_requant_relu 4096x288x32 {a_bits}bx{w_bits}b [{} {} panels]",
+                kn.name(),
+                pw.kind()
+            );
+            let s = bench(&label, 2, 20, || {
+                kn.gemm_requant_relu(&a, rows, k, &pw, &bias, 9, fmt, true, &mut out);
+                std::hint::black_box(&out);
+            });
+            println!("{s}  -> {:.2} GMAC/s", s.throughput(macs) / 1e9);
+        }
+    }
+
+    // stochastic rounding stays scalar on every ISA (the dither RNG
+    // stream is part of the pinned numerics), so bench it once
     let mut srng = Rng::new(4);
-    let s = bench("quantize_slice 1M f32 (stochastic)", 3, 10, || {
+    let s = bench("quantize_slice 1M f32 (stochastic, scalar-only)", 3, 10, || {
         buf.copy_from_slice(&xs);
         quantize_slice(&mut buf, fmt, RoundMode::Stochastic, Some(&mut srng));
         std::hint::black_box(&buf);
     });
     println!("{s}  -> {:.1} Melem/s", s.throughput(n as f64) / 1e6);
-
-    // integer GEMM microkernel (the conv engine's inner loop):
-    // CIFAR-first-conv-shaped (k = 9*32, n = 32) over 4096 patch rows
-    {
-        let (rows, k, ncol) = (4096usize, 288usize, 32usize);
-        let mut irng = Rng::new(8);
-        let a: Vec<i32> = (0..rows * k).map(|_| irng.below(255) as i32 - 127).collect();
-        let w: Vec<i32> = (0..k * ncol).map(|_| irng.below(255) as i32 - 127).collect();
-        let pw = PackedPanels::pack(&w, k, ncol);
-        let bias: Vec<i64> = (0..ncol).map(|i| i as i64 * 10).collect();
-        let fmt = QFormat::new(8, 4).unwrap();
-        let mut out = vec![0i32; rows * ncol];
-        let s = bench("gemm_requant_relu 4096x288x32", 2, 20, || {
-            gemm::gemm_requant_relu(&a, rows, k, &pw, &bias, 9, fmt, true, &mut out);
-            std::hint::black_box(&out);
-        });
-        let macs = (rows * k * ncol) as f64;
-        println!("{s}  -> {:.2} GMAC/s", s.throughput(macs) / 1e9);
-    }
 
     // Tensor -> Literal conversion (per-step host boundary cost)
     let t = Tensor::from_vec(&[64, 32, 32, 3], xs[..64 * 32 * 32 * 3].to_vec()).unwrap();

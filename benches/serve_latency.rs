@@ -57,6 +57,7 @@ fn main() {
             port_file: None,
             max_batch,
             max_wait: Duration::from_micros(max_wait_us as u64),
+            max_queue: 0, // unbounded: the bench measures latency, not rejects
             threads,
         };
         run_server(Arc::new(net), &opts, &flag, Some(tx))

@@ -3,15 +3,19 @@
 //! vs `--threads`-sharded, fully offline.  Writes `BENCH_train.json`
 //! for CI artifact upload next to `BENCH_engine.json`.
 //!
-//! Two gates ride on this bench:
+//! Three gates ride on this bench:
 //!
-//! * **bit-identity** (always on): the 1-thread and N-thread runs must
-//!   produce byte-identical loss sequences -- the tentpole determinism
-//!   contract, checked here on every bench run for free;
+//! * **bit-identity** (always on): the 1-thread, N-thread, and
+//!   forced-scalar-kernel runs must all produce byte-identical loss
+//!   sequences -- the tentpole determinism contract, checked here on
+//!   every bench run for free;
 //! * **perf trajectory** (`FXP_BENCH_ASSERT`): the threaded step must be
 //!   at least `train_throughput.min_threaded_step_speedup` times the
 //!   single-threaded step, floor committed in `BENCH_baseline.json`
-//!   (a numeric `FXP_BENCH_ASSERT=2.0` overrides the floor directly).
+//!   (a numeric `FXP_BENCH_ASSERT=2.0` overrides the floor directly);
+//! * **SIMD dispatch** (`FXP_BENCH_ASSERT`, SIMD hosts only): the
+//!   auto-dispatched single-thread step must beat the forced-scalar
+//!   step by `train_throughput.min_simd_step_speedup`.
 //!
 //! Scale via:
 //! * `FXP_BENCH_TRAIN_ARCH`    -- architecture (default "shallow")
@@ -26,43 +30,52 @@
 use fxpnet::bench::fixtures::{baseline_floor, env_str, env_usize};
 use fxpnet::bench::Table;
 use fxpnet::coordinator::backend::{Backend, SessionCfg};
-use fxpnet::coordinator::trainer::upd_all;
+use fxpnet::coordinator::trainer::{upd_all, TrainSession};
 use fxpnet::data::loader::LoaderCfg;
 use fxpnet::data::synth::Dataset;
+use fxpnet::inference::{Isa, Kernels};
+use fxpnet::model::manifest::ArchSpec;
 use fxpnet::model::params::ParamSet;
 use fxpnet::quant::policy::{NetQuant, WidthSpec};
-use fxpnet::train::NativeBackend;
+use fxpnet::train::{NativeBackend, NativeTrainer};
 
-/// Run `warmup + steps` SGD steps of one fresh session; returns every
-/// loss and the wall time of the timed span.
+/// Run `warmup + steps` SGD steps of one fresh session on the given
+/// kernel facade; returns every loss and the wall time of the timed
+/// span.
 #[allow(clippy::too_many_arguments)]
 fn run_case(
-    backend: &NativeBackend,
-    arch: &str,
+    spec: &ArchSpec,
     params: &ParamSet,
     nq: &NetQuant,
     data: &Dataset,
-    batch: usize,
-    num_layers: usize,
+    kernels: &'static Kernels,
     threads: usize,
     warmup: usize,
     steps: usize,
 ) -> (Vec<f32>, f64) {
-    let mut sess = backend
-        .new_session(SessionCfg {
-            arch,
+    let mut sess = NativeTrainer::new(
+        spec,
+        SessionCfg {
+            arch: &spec.name,
             params,
             nq,
-            upd: &upd_all(num_layers),
+            upd: &upd_all(spec.num_layers),
             lr: 0.02,
             momentum: 0.9,
             data: data.clone(),
-            loader: LoaderCfg { batch, augment: true, max_shift: 2, seed: 42 },
+            loader: LoaderCfg {
+                batch: spec.train_batch,
+                augment: true,
+                max_shift: 2,
+                seed: 42,
+            },
             max_loss: 30.0,
             seed: 42,
             threads,
-        })
-        .expect("session");
+        },
+    )
+    .expect("session");
+    sess.set_kernels(kernels);
     let mut losses = Vec::with_capacity(warmup + steps);
     for _ in 0..warmup {
         losses.push(sess.step().expect("warmup step"));
@@ -100,24 +113,23 @@ fn main() {
     )
     .expect("cell");
 
+    let auto = Kernels::auto();
+    let scalar = Kernels::for_isa(Isa::Scalar);
+    let simd = auto.isa() != Isa::Scalar;
+    println!(
+        "kernel dispatch: {}{}",
+        auto.name(),
+        if simd { " (forced-scalar comparison case alongside)" } else { "" }
+    );
+
     let reps = env_usize("FXP_BENCH_TRAIN_REPS", 3).max(1);
     // best-of-reps: sessions are deterministic, so reps only differ in
     // wall time -- the min absorbs scheduler noise on shared runners
-    let run_best = |t: usize| {
+    let run_best = |kernels: &'static Kernels, t: usize| {
         let mut best: Option<(Vec<f32>, f64)> = None;
         for _ in 0..reps {
-            let (losses, dt) = run_case(
-                &backend,
-                &arch,
-                &params,
-                &nq,
-                &data,
-                spec.train_batch,
-                spec.num_layers,
-                t,
-                3,
-                steps,
-            );
+            let (losses, dt) =
+                run_case(&spec, &params, &nq, &data, kernels, t, 3, steps);
             best = Some(match best {
                 None => (losses, dt),
                 Some((prev, prev_dt)) => {
@@ -128,21 +140,34 @@ fn main() {
         }
         best.unwrap()
     };
-    let (losses_1t, dt_1t) = run_best(1);
-    let (losses_mt, dt_mt) = run_best(threads);
+    let (losses_s1, dt_s1) = run_best(scalar, 1);
+    let (losses_1t, dt_1t) = run_best(auto, 1);
+    let (losses_mt, dt_mt) = run_best(auto, threads);
 
-    // tentpole bit-identity: the thread count must not touch the math
+    // tentpole bit-identity: neither the thread count nor the kernel
+    // ISA may touch the math
     assert_eq!(
         losses_1t.iter().map(|l| l.to_bits()).collect::<Vec<_>>(),
         losses_mt.iter().map(|l| l.to_bits()).collect::<Vec<_>>(),
         "loss history differs between 1 and {threads} train threads"
     );
+    assert_eq!(
+        losses_s1.iter().map(|l| l.to_bits()).collect::<Vec<_>>(),
+        losses_1t.iter().map(|l| l.to_bits()).collect::<Vec<_>>(),
+        "loss history differs between scalar and {} kernels",
+        auto.name()
+    );
 
+    let ms_s1 = 1e3 * dt_s1 / steps as f64;
     let ms_1t = 1e3 * dt_1t / steps as f64;
     let ms_mt = 1e3 * dt_mt / steps as f64;
+    let steps_per_s_s1 = steps as f64 / dt_s1.max(1e-12);
     let steps_per_s_1t = steps as f64 / dt_1t.max(1e-12);
     let steps_per_s_mt = steps as f64 / dt_mt.max(1e-12);
     let speedup = ms_1t / ms_mt.max(1e-12);
+    // the f32-GEMM dispatch win on the whole SGD step (1.0 on
+    // scalar-only hosts where both cases run the same kernels)
+    let simd_step_speedup = ms_s1 / ms_1t.max(1e-12);
 
     let mut table = Table::new(
         &format!(
@@ -152,7 +177,13 @@ fn main() {
         &["case", "ms/step", "steps/s", "img/s", "speedup"],
     );
     for (name, ms, sps, sp) in [
-        ("1 thread".to_string(), ms_1t, steps_per_s_1t, 1.0),
+        ("1 thread, scalar kernels".to_string(), ms_s1, steps_per_s_s1, 1.0),
+        (
+            format!("1 thread, {} kernels", auto.name()),
+            ms_1t,
+            steps_per_s_1t,
+            simd_step_speedup,
+        ),
         (format!("{threads} threads"), ms_mt, steps_per_s_mt, speedup),
     ] {
         table.row(vec![
@@ -179,13 +210,17 @@ fn main() {
     let json = format!(
         "{{\n  \"bench\": \"train_throughput\",\n  \"arch\": \"{arch}\",\n  \
          \"batch\": {},\n  \"steps\": {steps},\n  \"threads\": {threads},\n  \
+         \"kernel_isa\": \"{}\",\n  \
+         \"ms_per_step_scalar_1t\": {ms_s1:.3},\n  \
          \"ms_per_step_1t\": {ms_1t:.3},\n  \"ms_per_step_mt\": {ms_mt:.3},\n  \
          \"steps_per_s_1t\": {steps_per_s_1t:.2},\n  \
          \"steps_per_s_mt\": {steps_per_s_mt:.2},\n  \
          \"speedup_threaded\": {speedup:.3},\n  \
+         \"simd_step_speedup\": {simd_step_speedup:.3},\n  \
          \"histories_bit_identical\": true,\n  \
          \"first_loss\": {:.6},\n  \"final_loss\": {:.6}\n}}\n",
         spec.train_batch,
+        auto.name(),
         losses_mt[0],
         losses_mt[losses_mt.len() - 1],
     );
@@ -219,6 +254,20 @@ fn main() {
             println!(
                 "FXP_BENCH_ASSERT: single core -- speedup gate skipped, \
                  losses finite, histories bit-identical"
+            );
+        }
+        if simd {
+            let simd_floor =
+                baseline_floor("train_throughput", "min_simd_step_speedup", 1.1);
+            assert!(
+                simd_step_speedup >= simd_floor,
+                "{} kernels only {simd_step_speedup:.2}x the forced-scalar \
+                 step (need >= {simd_floor}x)",
+                auto.name()
+            );
+            println!(
+                "FXP_BENCH_ASSERT ok: {simd_step_speedup:.2}x SIMD step \
+                 speedup over scalar kernels (floor {simd_floor}x)"
             );
         }
     }

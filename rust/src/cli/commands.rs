@@ -884,6 +884,7 @@ fn serve_daemon(args: &Args) -> Result<()> {
         max_wait: std::time::Duration::from_micros(
             args.u64_or("max-wait-us", 2000)?,
         ),
+        max_queue: args.usize_or("max-queue", 64)?,
         threads: cfg.threads,
     };
     log::info!(

@@ -276,6 +276,9 @@ COMMANDS
              [--max-wait-us US] latency budget: longest a queued request
                                 waits before a partial batch flushes
                                 (default 2000)
+             [--max-queue N]    admission queue depth bound; overflow is
+                                refused with an explicit `busy` reply
+                                (0 = unbounded, default 64)
              SIGINT/SIGTERM drain gracefully: queued requests still
              reply, new ones get an error, then exit 0
   serve --replay

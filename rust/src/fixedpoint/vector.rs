@@ -4,7 +4,36 @@
 
 use super::format::QFormat;
 use super::rounding::RoundMode;
+use crate::inference::kernels::Kernels;
 use crate::util::rng::Rng;
+
+/// Where a quantize/requantize pass reports its clip (saturation)
+/// tally.  The pass is written once, generic over the sink, so the
+/// plain and telemetry-counted entry points are definitionally the same
+/// numerics/RNG stream -- a [`NoCount`] sink compiles to nothing.
+pub trait SatSink {
+    fn clipped(&mut self, n: u64);
+}
+
+/// Discard the tally (the plain entry points).
+#[derive(Default)]
+pub struct NoCount;
+
+impl SatSink for NoCount {
+    #[inline(always)]
+    fn clipped(&mut self, _n: u64) {}
+}
+
+/// Accumulate the tally (the PR 6 telemetry entry points).
+#[derive(Default)]
+pub struct SatCount(pub u64);
+
+impl SatSink for SatCount {
+    #[inline(always)]
+    fn clipped(&mut self, n: u64) {
+        self.0 += n;
+    }
+}
 
 /// Quantize a slice in place: `x <- clip(round(x/step), qmin, qmax)*step`.
 /// Bit-identical to the Pallas kernel for `NearestHalfUp`.
@@ -14,14 +43,15 @@ pub fn quantize_slice(
     mode: RoundMode,
     rng: Option<&mut Rng>,
 ) {
-    quantize_slice_counted(xs, fmt, mode, rng);
+    quantize_pass(xs, fmt, mode, rng, &mut NoCount);
 }
 
 /// [`quantize_slice`] plus a saturation counter: returns how many
 /// elements' raw codes fell outside `[qmin, qmax]` and were clipped to
-/// the format bounds.  This *is* the quantizer (`quantize_slice`
-/// delegates here), so values written and RNG draws consumed are
-/// definitionally identical whether or not the count is used -- the
+/// the format bounds.  Both entry points delegate to the same
+/// sink-generic [`quantize_pass`], so values written and RNG draws
+/// consumed are definitionally identical whether or not the count is
+/// used -- the
 /// telemetry layer can harvest clip counts without perturbing training
 /// numerics (pinned by tests/properties.rs).  The count is a plain
 /// element tally, so any partition of `xs` into sub-slices sums to the
@@ -31,20 +61,35 @@ pub fn quantize_slice_counted(
     xs: &mut [f32],
     fmt: QFormat,
     mode: RoundMode,
-    mut rng: Option<&mut Rng>,
+    rng: Option<&mut Rng>,
 ) -> u64 {
+    let mut sink = SatCount(0);
+    quantize_pass(xs, fmt, mode, rng, &mut sink);
+    sink.0
+}
+
+/// The one quantize pass implementation, generic over the clip-tally
+/// sink.  `NearestHalfUp` (the hot mode: every activation pass, weight
+/// rounding outside stochastic SGD) routes through the process-wide
+/// [`Kernels`] facade and so vectorizes on AVX2/NEON hosts -- the SIMD
+/// pipeline is bit-identical to the scalar one by the kernel-layer
+/// parity contract.  `Floor` stays scalar, and `Stochastic` keeps the
+/// block-buffered dither loop untouched so the RNG draw stream is
+/// bit-identical to every prior release.
+pub fn quantize_pass<S: SatSink>(
+    xs: &mut [f32],
+    fmt: QFormat,
+    mode: RoundMode,
+    mut rng: Option<&mut Rng>,
+    sink: &mut S,
+) {
     let step = fmt.step();
     let inv = 1.0 / step as f64;
     let (lo, hi) = (fmt.qmin() as f64, fmt.qmax() as f64);
     let mut sat = 0u64;
     match mode {
         RoundMode::NearestHalfUp => {
-            for x in xs.iter_mut() {
-                let raw = ((*x as f64) * inv + 0.5).floor();
-                sat += (raw < lo || raw > hi) as u64;
-                let code = raw.clamp(lo, hi);
-                *x = (code * step as f64) as f32;
-            }
+            sat += Kernels::auto().quantize_nearest(xs, fmt);
         }
         RoundMode::Floor => {
             for x in xs.iter_mut() {
@@ -73,7 +118,7 @@ pub fn quantize_slice_counted(
             }
         }
     }
-    sat
+    sink.clipped(sat);
 }
 
 /// Non-destructive quantization.

@@ -25,9 +25,9 @@
 
 use crate::error::{FxpError, Result};
 use crate::fixedpoint::QFormat;
-use crate::inference::gemm;
+use crate::inference::kernels::Kernels;
 use crate::inference::ops;
-use crate::inference::packing::{self, PackedPanels};
+use crate::inference::packing::{self, IntPanels};
 use crate::model::manifest::ArchSpec;
 use crate::model::params::ParamSet;
 use crate::quant::policy::NetQuant;
@@ -43,8 +43,10 @@ struct Dense {
     /// raw weight codes -- (3, 3, cin, cout) for conv, (n_in, n_out) for
     /// fc -- used by the direct reference path
     w_codes: Vec<i32>,
-    /// the same codes as NR-column panels for the GEMM path
-    packed: PackedPanels,
+    /// the same codes as NR-column panels for the GEMM path; the kernel
+    /// facade narrows them to i16/i8 pair panels when the cell's operand
+    /// widths keep the SIMD arithmetic exact
+    packed: IntPanels,
     /// GEMM reduction length: 9*cin (conv) or n_in (fc)
     k: usize,
     /// output channels / units
@@ -70,6 +72,9 @@ enum Layer {
 /// A fully-quantized network ready for integer-only inference.
 pub struct FixedPointNet {
     layers: Vec<Layer>,
+    /// the kernel set every GEMM of this net runs on, captured at build
+    /// (weight panels are packed for it, so it cannot change afterwards)
+    kernels: &'static Kernels,
     input_fmt: QFormat,
     in_h: usize,
     in_w: usize,
@@ -136,6 +141,22 @@ impl FixedPointNet {
         nq: &NetQuant,
         input_fmt: QFormat,
     ) -> Result<FixedPointNet> {
+        Self::build_with_kernels(arch, params, nq, input_fmt, Kernels::auto())
+    }
+
+    /// [`build`](Self::build) against an explicit kernel set instead of
+    /// the process-wide auto-detected one.  Weight panels are packed for
+    /// that set (scalar keeps plain i32 panels; SIMD narrows eligible
+    /// cells to i16/i8 pair panels) and every GEMM of the net dispatches
+    /// through it -- which is how tests and benches hold a scalar net
+    /// and a SIMD net in one process and compare logits bit-for-bit.
+    pub fn build_with_kernels(
+        arch: &ArchSpec,
+        params: &ParamSet,
+        nq: &NetQuant,
+        input_fmt: QFormat,
+        kernels: &'static Kernels,
+    ) -> Result<FixedPointNet> {
         if nq.num_layers() != arch.num_layers {
             return Err(FxpError::config(format!(
                 "NetQuant has {} layers, arch {}",
@@ -180,7 +201,11 @@ impl FixedPointNet {
                         .iter()
                         .map(|&bv| ops::bias_to_acc(bv, acc_frac))
                         .collect();
-                    let packed = PackedPanels::pack(&w_codes, k, n_out);
+                    // `fmt` is still this layer's *input* format here --
+                    // its bit width is the GEMM A-operand width the
+                    // narrow-panel eligibility check needs
+                    let packed =
+                        kernels.pack_int(&w_codes, k, n_out, fmt.bits, w_fmt.bits);
                     let dense = Dense {
                         w_codes,
                         packed,
@@ -210,6 +235,7 @@ impl FixedPointNet {
         }
         Ok(FixedPointNet {
             layers,
+            kernels,
             input_fmt,
             in_h: arch.input[0],
             in_w: arch.input[1],
@@ -220,6 +246,11 @@ impl FixedPointNet {
 
     pub fn num_classes(&self) -> usize {
         self.num_classes
+    }
+
+    /// The kernel set this net was built against.
+    pub fn kernels(&self) -> &'static Kernels {
+        self.kernels
     }
 
     /// Input image shape (h, w, c).
@@ -454,6 +485,7 @@ impl FixedPointNet {
                         Some(af) => {
                             conv_gemm(
                                 d,
+                                self.kernels,
                                 &src[..rows * c],
                                 n,
                                 h,
@@ -482,6 +514,7 @@ impl FixedPointNet {
                             }
                             conv_gemm(
                                 d,
+                                self.kernels,
                                 &src[..rows * c],
                                 n,
                                 h,
@@ -506,6 +539,7 @@ impl FixedPointNet {
                         Some(af) => {
                             fc_gemm(
                                 d,
+                                self.kernels,
                                 &src[..n * k],
                                 n,
                                 threads,
@@ -527,7 +561,14 @@ impl FixedPointNet {
                                     d.n_out, self.num_classes
                                 )));
                             }
-                            fc_gemm(d, &src[..n * k], n, threads, ConvOut::Floats(&mut out[..]));
+                            fc_gemm(
+                                d,
+                                self.kernels,
+                                &src[..n * k],
+                                n,
+                                threads,
+                                ConvOut::Floats(&mut out[..]),
+                            );
                             return Ok(());
                         }
                     }
@@ -716,6 +757,7 @@ fn conv_worker<E, G: Fn(&[i32], usize, &mut [E])>(
 #[allow(clippy::too_many_arguments)]
 fn conv_gemm(
     d: &Dense,
+    kernels: &Kernels,
     src: &[i32],
     n: usize,
     h: usize,
@@ -729,7 +771,7 @@ fn conv_gemm(
     match out {
         ConvOut::Codes { out, fmt } => {
             let g = |pb: &[i32], block: usize, ob: &mut [i32]| {
-                gemm::gemm_requant_relu(
+                kernels.gemm_requant_relu(
                     pb,
                     block,
                     d.k,
@@ -747,7 +789,15 @@ fn conv_gemm(
         }
         ConvOut::Floats(out) => {
             let g = |pb: &[i32], block: usize, ob: &mut [f32]| {
-                gemm::gemm_decode(pb, block, d.k, &d.packed, &d.bias_acc, d.acc_frac, ob);
+                kernels.gemm_decode(
+                    pb,
+                    block,
+                    d.k,
+                    &d.packed,
+                    &d.bias_acc,
+                    d.acc_frac,
+                    ob,
+                );
             };
             shard_rows(total, d.n_out, threads, patch_per, out, patches, |row0, o, p| {
                 conv_worker(d, src, n, h, w, row0, o, p, &g);
@@ -759,13 +809,20 @@ fn conv_gemm(
 /// One fc layer over the whole batch: the activation matrix is already
 /// the GEMM A operand (NHWC flatten == row-major), so workers slice it
 /// directly -- no im2col, no patch scratch.
-fn fc_gemm(d: &Dense, src: &[i32], n: usize, threads: usize, out: ConvOut<'_>) {
+fn fc_gemm(
+    d: &Dense,
+    kernels: &Kernels,
+    src: &[i32],
+    n: usize,
+    threads: usize,
+    out: ConvOut<'_>,
+) {
     let mut no_patches: [i32; 0] = [];
     match out {
         ConvOut::Codes { out, fmt } => {
             shard_rows(n, d.n_out, threads, 0, out, &mut no_patches[..], |row0, o, _| {
                 let rows = o.len() / d.n_out;
-                gemm::gemm_requant_relu(
+                kernels.gemm_requant_relu(
                     &src[row0 * d.k..(row0 + rows) * d.k],
                     rows,
                     d.k,
@@ -781,7 +838,7 @@ fn fc_gemm(d: &Dense, src: &[i32], n: usize, threads: usize, out: ConvOut<'_>) {
         ConvOut::Floats(out) => {
             shard_rows(n, d.n_out, threads, 0, out, &mut no_patches[..], |row0, o, _| {
                 let rows = o.len() / d.n_out;
-                gemm::gemm_decode(
+                kernels.gemm_decode(
                     &src[row0 * d.k..(row0 + rows) * d.k],
                     rows,
                     d.k,

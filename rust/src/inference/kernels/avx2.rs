@@ -1,0 +1,352 @@
+//! AVX2 kernels (x86-64).  Every function here is `unsafe` +
+//! `#[target_feature(enable = "avx2")]`; the only callers are the
+//! [`super::Kernels`] facade methods, which hold an AVX2 facade only
+//! when runtime detection passed (see `Kernels::for_isa`).
+//!
+//! Bit-parity notes (the contract `kernel_parity` pins):
+//!
+//! * `gemm_i32` multiplies with `_mm256_mul_epi32` -- a sign-extended
+//!   32x32->64 multiply, exactly the scalar `a as i64 * b as i64` -- and
+//!   adds lanes with exact i64 adds, so any regrouping is bit-identical.
+//! * The pair kernels run `_mm256_madd_epi16` (two 16x16 products
+//!   summed into an i32 lane).  A single madd is exact because packing
+//!   eligibility bounds `|a| < 2^(a_bits-1)`, `|w| < 2^(w_bits-1)` with
+//!   `a_bits + w_bits <= 24`: each pair-sum is under `2^23`.  The i32
+//!   chunk accumulator is flushed into i64 lanes every
+//!   `PairPanels::chunk_pairs` pairs, the bound that keeps the running
+//!   i32 sums exact too.
+//! * `gemm_f32` keeps the scalar per-element reduction order (one
+//!   column per lane, separate `_mm256_mul_ps`/`_mm256_add_ps`, never
+//!   FMA) so each output's rounding history is the scalar one.
+//! * `quantize_nearest` runs the scalar f64 pipeline four lanes wide;
+//!   `max(lo, x)`/`min(hi, t)` with the bound as *first* operand
+//!   propagate a NaN `x` exactly like `f64::clamp`.
+
+use core::arch::x86_64::*;
+
+use crate::fixedpoint::QFormat;
+use crate::inference::gemm::MR;
+use crate::inference::packing::{PackedPanels, PairPanels, NR};
+
+use super::quantize_nearest_scalar;
+
+/// i32-panel GEMM: the scalar `gemm_panels::<i32>` walk, eight i64
+/// accumulator lanes at a time.
+#[target_feature(enable = "avx2")]
+pub unsafe fn gemm_i32<E: FnMut(usize, i64)>(
+    a: &[i32],
+    rows: usize,
+    k: usize,
+    pw: &PackedPanels<i32>,
+    bias_acc: &[i64],
+    mut emit: E,
+) {
+    debug_assert_eq!(pw.k, k);
+    debug_assert!(a.len() >= rows * k);
+    debug_assert_eq!(bias_acc.len(), pw.n);
+    let n = pw.n;
+    for jp in 0..pw.num_panels() {
+        let panel = pw.panel(jp);
+        let j0 = jp * NR;
+        let jw = NR.min(n - j0);
+        let mut init = [0i64; NR];
+        init[..jw].copy_from_slice(&bias_acc[j0..j0 + jw]);
+        let init_lo = _mm256_loadu_si256(init.as_ptr() as *const __m256i);
+        let init_hi = _mm256_loadu_si256(init.as_ptr().add(4) as *const __m256i);
+        let mut i = 0usize;
+        while i + MR <= rows {
+            tile_i32::<MR, E>(a, k, i, n, j0, jw, panel, init_lo, init_hi, &mut emit);
+            i += MR;
+        }
+        while i < rows {
+            tile_i32::<1, E>(a, k, i, n, j0, jw, panel, init_lo, init_hi, &mut emit);
+            i += 1;
+        }
+    }
+}
+
+#[inline]
+#[target_feature(enable = "avx2")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn tile_i32<const M: usize, E: FnMut(usize, i64)>(
+    a: &[i32],
+    k: usize,
+    base: usize,
+    n: usize,
+    j0: usize,
+    jw: usize,
+    panel: &[i32],
+    init_lo: __m256i,
+    init_hi: __m256i,
+    emit: &mut E,
+) {
+    let mut acc_lo = [init_lo; M];
+    let mut acc_hi = [init_hi; M];
+    for p in 0..k {
+        let bp = panel.as_ptr().add(p * NR);
+        let b_lo = _mm256_cvtepi32_epi64(_mm_loadu_si128(bp as *const __m128i));
+        let b_hi = _mm256_cvtepi32_epi64(_mm_loadu_si128(bp.add(4) as *const __m128i));
+        for ii in 0..M {
+            let av = _mm256_set1_epi64x(*a.get_unchecked((base + ii) * k + p) as i64);
+            acc_lo[ii] = _mm256_add_epi64(acc_lo[ii], _mm256_mul_epi32(av, b_lo));
+            acc_hi[ii] = _mm256_add_epi64(acc_hi[ii], _mm256_mul_epi32(av, b_hi));
+        }
+    }
+    let mut vals = [0i64; NR];
+    for ii in 0..M {
+        _mm256_storeu_si256(vals.as_mut_ptr() as *mut __m256i, acc_lo[ii]);
+        _mm256_storeu_si256(vals.as_mut_ptr().add(4) as *mut __m256i, acc_hi[ii]);
+        let o = (base + ii) * n + j0;
+        for (j, &v) in vals[..jw].iter().enumerate() {
+            emit(o + j, v);
+        }
+    }
+}
+
+/// i16 pair-panel GEMM: one `_mm256_madd_epi16` per packed pair-row per
+/// tile row, i32 chunks flushed into i64 lanes under the exactness
+/// budget.
+#[target_feature(enable = "avx2")]
+pub unsafe fn gemm_pair_i16<E: FnMut(usize, i64)>(
+    a: &[i32],
+    rows: usize,
+    k: usize,
+    pw: &PairPanels<i16>,
+    bias_acc: &[i64],
+    mut emit: E,
+) {
+    debug_assert_eq!(pw.k, k);
+    debug_assert!(a.len() >= rows * k);
+    debug_assert_eq!(bias_acc.len(), pw.n);
+    let n = pw.n;
+    for jp in 0..pw.num_panels() {
+        let panel = pw.panel(jp);
+        let j0 = jp * NR;
+        let jw = NR.min(n - j0);
+        let mut init = [0i64; NR];
+        init[..jw].copy_from_slice(&bias_acc[j0..j0 + jw]);
+        let mut i = 0usize;
+        while i + MR <= rows {
+            pair_tile::<MR, false, E>(
+                a, k, pw.k2, pw.chunk_pairs, i, n, j0, jw, panel.as_ptr() as *const u8,
+                &init, &mut emit,
+            );
+            i += MR;
+        }
+        while i < rows {
+            pair_tile::<1, false, E>(
+                a, k, pw.k2, pw.chunk_pairs, i, n, j0, jw, panel.as_ptr() as *const u8,
+                &init, &mut emit,
+            );
+            i += 1;
+        }
+    }
+}
+
+/// i8 pair-panel GEMM: identical to the i16 path after an
+/// order-preserving `_mm256_cvtepi8_epi16` widen of each panel row.
+#[target_feature(enable = "avx2")]
+pub unsafe fn gemm_pair_i8<E: FnMut(usize, i64)>(
+    a: &[i32],
+    rows: usize,
+    k: usize,
+    pw: &PairPanels<i8>,
+    bias_acc: &[i64],
+    mut emit: E,
+) {
+    debug_assert_eq!(pw.k, k);
+    debug_assert!(a.len() >= rows * k);
+    debug_assert_eq!(bias_acc.len(), pw.n);
+    let n = pw.n;
+    for jp in 0..pw.num_panels() {
+        let panel = pw.panel(jp);
+        let j0 = jp * NR;
+        let jw = NR.min(n - j0);
+        let mut init = [0i64; NR];
+        init[..jw].copy_from_slice(&bias_acc[j0..j0 + jw]);
+        let mut i = 0usize;
+        while i + MR <= rows {
+            pair_tile::<MR, true, E>(
+                a, k, pw.k2, pw.chunk_pairs, i, n, j0, jw, panel.as_ptr() as *const u8,
+                &init, &mut emit,
+            );
+            i += MR;
+        }
+        while i < rows {
+            pair_tile::<1, true, E>(
+                a, k, pw.k2, pw.chunk_pairs, i, n, j0, jw, panel.as_ptr() as *const u8,
+                &init, &mut emit,
+            );
+            i += 1;
+        }
+    }
+}
+
+/// Shared pair-madd tile.  `BYTE` selects the panel element width: a
+/// pair-row is 16 i16 (32 bytes) or 16 i8 (16 bytes, widened on load).
+/// The panel pointer is byte-typed so both layouts share one body.
+#[inline]
+#[target_feature(enable = "avx2")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn pair_tile<const M: usize, const BYTE: bool, E: FnMut(usize, i64)>(
+    a: &[i32],
+    k: usize,
+    k2: usize,
+    chunk_pairs: usize,
+    base: usize,
+    n: usize,
+    j0: usize,
+    jw: usize,
+    panel: *const u8,
+    init: &[i64; NR],
+    emit: &mut E,
+) {
+    let zero = _mm256_setzero_si256();
+    let mut acc_lo = [zero; M];
+    let mut acc_hi = [zero; M];
+    let mut chunks = [zero; M];
+    let mut pairs = 0usize;
+    for p2 in 0..k2 {
+        let b = if BYTE {
+            _mm256_cvtepi8_epi16(_mm_loadu_si128(
+                panel.add(p2 * 2 * NR) as *const __m128i
+            ))
+        } else {
+            _mm256_loadu_si256(panel.add(p2 * 2 * NR * 2) as *const __m256i)
+        };
+        for ii in 0..M {
+            let row = (base + ii) * k;
+            let a0 = *a.get_unchecked(row + 2 * p2);
+            let a1 = if 2 * p2 + 1 < k {
+                *a.get_unchecked(row + 2 * p2 + 1)
+            } else {
+                0
+            };
+            let apair = ((a0 as u16 as u32) | ((a1 as u16 as u32) << 16)) as i32;
+            let av = _mm256_set1_epi32(apair);
+            chunks[ii] = _mm256_add_epi32(chunks[ii], _mm256_madd_epi16(av, b));
+        }
+        pairs += 1;
+        if pairs == chunk_pairs || p2 == k2 - 1 {
+            for ii in 0..M {
+                let c = chunks[ii];
+                let lo = _mm256_cvtepi32_epi64(_mm256_castsi256_si128(c));
+                let hi = _mm256_cvtepi32_epi64(_mm256_extracti128_si256::<1>(c));
+                acc_lo[ii] = _mm256_add_epi64(acc_lo[ii], lo);
+                acc_hi[ii] = _mm256_add_epi64(acc_hi[ii], hi);
+                chunks[ii] = zero;
+            }
+            pairs = 0;
+        }
+    }
+    let mut vals = [0i64; NR];
+    for ii in 0..M {
+        _mm256_storeu_si256(vals.as_mut_ptr() as *mut __m256i, acc_lo[ii]);
+        _mm256_storeu_si256(vals.as_mut_ptr().add(4) as *mut __m256i, acc_hi[ii]);
+        let o = (base + ii) * n + j0;
+        for (j, &v) in vals[..jw].iter().enumerate() {
+            emit(o + j, init[j] + v);
+        }
+    }
+}
+
+/// f32-panel GEMM: one column per lane, scalar reduction order per
+/// element, explicit mul-then-add (no FMA contraction).
+#[target_feature(enable = "avx2")]
+pub unsafe fn gemm_f32(
+    a: &[f32],
+    rows: usize,
+    k: usize,
+    pw: &PackedPanels<f32>,
+    bias: &[f32],
+    out: &mut [f32],
+) {
+    debug_assert_eq!(pw.k, k);
+    debug_assert!(a.len() >= rows * k);
+    debug_assert_eq!(bias.len(), pw.n);
+    debug_assert_eq!(out.len(), rows * pw.n);
+    let n = pw.n;
+    for jp in 0..pw.num_panels() {
+        let panel = pw.panel(jp);
+        let j0 = jp * NR;
+        let jw = NR.min(n - j0);
+        let mut init = [0f32; NR];
+        init[..jw].copy_from_slice(&bias[j0..j0 + jw]);
+        let initv = _mm256_loadu_ps(init.as_ptr());
+        let mut i = 0usize;
+        while i + MR <= rows {
+            tile_f32::<MR>(a, k, i, n, j0, jw, panel, initv, out);
+            i += MR;
+        }
+        while i < rows {
+            tile_f32::<1>(a, k, i, n, j0, jw, panel, initv, out);
+            i += 1;
+        }
+    }
+}
+
+#[inline]
+#[target_feature(enable = "avx2")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn tile_f32<const M: usize>(
+    a: &[f32],
+    k: usize,
+    base: usize,
+    n: usize,
+    j0: usize,
+    jw: usize,
+    panel: &[f32],
+    initv: __m256,
+    out: &mut [f32],
+) {
+    let mut acc = [initv; M];
+    for p in 0..k {
+        let b = _mm256_loadu_ps(panel.as_ptr().add(p * NR));
+        for ii in 0..M {
+            let av = _mm256_set1_ps(*a.get_unchecked((base + ii) * k + p));
+            acc[ii] = _mm256_add_ps(acc[ii], _mm256_mul_ps(av, b));
+        }
+    }
+    let mut vals = [0f32; NR];
+    for ii in 0..M {
+        _mm256_storeu_ps(vals.as_mut_ptr(), acc[ii]);
+        let o = (base + ii) * n + j0;
+        out[o..o + jw].copy_from_slice(&vals[..jw]);
+    }
+}
+
+/// Nearest-half-up quantize, four f64 lanes wide, with the scalar loop
+/// finishing the tail.  Pipeline per lane is exactly the scalar one:
+/// `floor(x*inv + 0.5)`, saturation tally via ordered compares (NaN
+/// counts as in-range, like the scalar `<`/`>`), clamp with
+/// NaN-propagating max/min, `* step`, round back to f32.
+#[target_feature(enable = "avx2")]
+pub unsafe fn quantize_nearest(xs: &mut [f32], fmt: QFormat) -> u64 {
+    let step = fmt.step();
+    let inv = 1.0 / step as f64;
+    let (lo, hi) = (fmt.qmin() as f64, fmt.qmax() as f64);
+    let invv = _mm256_set1_pd(inv);
+    let half = _mm256_set1_pd(0.5);
+    let lov = _mm256_set1_pd(lo);
+    let hiv = _mm256_set1_pd(hi);
+    let stepv = _mm256_set1_pd(step as f64);
+    let mut sat = 0u64;
+    let nfull = xs.len() & !3;
+    let mut i = 0usize;
+    while i < nfull {
+        let x4 = _mm_loadu_ps(xs.as_ptr().add(i));
+        let xd = _mm256_cvtps_pd(x4);
+        let raw = _mm256_floor_pd(_mm256_add_pd(_mm256_mul_pd(xd, invv), half));
+        let under = _mm256_cmp_pd::<_CMP_LT_OQ>(raw, lov);
+        let over = _mm256_cmp_pd::<_CMP_GT_OQ>(raw, hiv);
+        let m = _mm256_movemask_pd(_mm256_or_pd(under, over));
+        sat += (m as u32).count_ones() as u64;
+        // bound first: max/min return the second operand when either is
+        // NaN, so a NaN `raw` rides through like f64::clamp
+        let code = _mm256_min_pd(hiv, _mm256_max_pd(lov, raw));
+        let y = _mm256_cvtpd_ps(_mm256_mul_pd(code, stepv));
+        _mm_storeu_ps(xs.as_mut_ptr().add(i), y);
+        i += 4;
+    }
+    sat + quantize_nearest_scalar(&mut xs[nfull..], fmt)
+}

@@ -1,0 +1,650 @@
+//! Runtime-dispatched SIMD kernel layer: one [`Kernels`] facade in
+//! front of the scalar reference microkernels (`gemm.rs`), the AVX2
+//! implementations ([`avx2`], x86-64) and the NEON implementations
+//! ([`neon`], aarch64).
+//!
+//! ## Selection
+//!
+//! The ISA is picked **once** per process by [`Kernels::auto`] --
+//! `std::arch` feature detection, overridable with
+//! `FXP_KERNEL={scalar,avx2,neon}` -- and nets capture the facade at
+//! build time ([`crate::inference::FixedPointNet::build_with_kernels`]),
+//! so a net built against one ISA keeps using it for its whole life
+//! (tests exploit this to compare scalar and SIMD nets in one process).
+//! Requesting an ISA the host cannot run normalizes to scalar with a
+//! warning; consequently an `&Kernels` whose ISA is `Avx2`/`Neon` is
+//! only obtainable when detection passed, which is what makes the
+//! `unsafe` `#[target_feature]` calls below sound.
+//!
+//! ## The bit-parity contract
+//!
+//! Every SIMD kernel computes *exactly* the scalar reference result:
+//!
+//! * integer GEMM: products widen into i64 accumulators; integer adds
+//!   are exact and order-free, so any lane regrouping is bit-identical
+//!   as long as no intermediate overflows (the narrow-panel kernels
+//!   bound their i32 madd chunks by `PairPanels::chunk_pairs`);
+//! * f32 GEMM: each output element accumulates in the same reduction
+//!   order as the scalar kernel with separate (never fused)
+//!   multiply/add, so per-element rounding is identical -- SIMD only
+//!   vectorizes *across* the `NR` independent columns;
+//! * quantize: the same f64 pipeline (`x*inv + 0.5 -> floor -> clamp ->
+//!   *step`) per lane, including NaN propagation and the saturation
+//!   tally.
+//!
+//! `engine_gemm_parity`, `rust/tests/kernel_parity.rs`, and the
+//! CI `FXP_KERNEL=scalar`-vs-auto sweep comparison pin this contract.
+
+use std::sync::OnceLock;
+
+use crate::fixedpoint::QFormat;
+use crate::inference::gemm;
+use crate::inference::ops::requant_i64;
+use crate::inference::packing::{IntPanels, NarrowCode, PackedPanels, PairPanels, NR};
+
+#[cfg(target_arch = "x86_64")]
+pub mod avx2;
+#[cfg(target_arch = "aarch64")]
+pub mod neon;
+
+/// Instruction sets the kernel layer can dispatch to.  All variants
+/// exist on every target (so `FXP_KERNEL` parsing and cross-ISA tests
+/// are portable); unsupported ones normalize to `Scalar` at lookup.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Isa {
+    Scalar,
+    Avx2,
+    Neon,
+}
+
+impl Isa {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Avx2 => "avx2",
+            Isa::Neon => "neon",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Isa> {
+        match s {
+            "scalar" => Some(Isa::Scalar),
+            "avx2" => Some(Isa::Avx2),
+            "neon" => Some(Isa::Neon),
+            _ => None,
+        }
+    }
+}
+
+/// The kernel facade: every GEMM and elementwise quantize pass in the
+/// inference and training engines goes through one of these methods,
+/// making this the single seam future ISAs plug into.
+#[derive(Debug)]
+pub struct Kernels {
+    isa: Isa,
+}
+
+static SCALAR: Kernels = Kernels { isa: Isa::Scalar };
+#[cfg(target_arch = "x86_64")]
+static AVX2: Kernels = Kernels { isa: Isa::Avx2 };
+#[cfg(target_arch = "aarch64")]
+static NEON: Kernels = Kernels { isa: Isa::Neon };
+
+static AUTO: OnceLock<&'static Kernels> = OnceLock::new();
+
+impl Kernels {
+    /// The process-wide kernel set: `FXP_KERNEL` override when set (an
+    /// unknown value warns and falls back to detection), else the best
+    /// ISA `detect` finds.  Read once; later env changes are ignored.
+    pub fn auto() -> &'static Kernels {
+        AUTO.get_or_init(|| {
+            let forced = match std::env::var("FXP_KERNEL") {
+                Ok(v) => {
+                    let want = v.trim().to_ascii_lowercase();
+                    let isa = Isa::parse(&want);
+                    if isa.is_none() {
+                        log::warn!(
+                            "kernels: unknown FXP_KERNEL '{want}' \
+                             (scalar|avx2|neon); auto-detecting"
+                        );
+                    }
+                    isa
+                }
+                Err(_) => None,
+            };
+            let k = Kernels::for_isa(forced.unwrap_or_else(Kernels::detect));
+            log::info!("kernels: using the {} path", k.name());
+            k
+        })
+    }
+
+    /// The facade for one ISA, normalized to what the host supports:
+    /// asking for AVX2/NEON on a host without it warns and returns the
+    /// scalar set.  This is the only constructor, so holding a SIMD
+    /// `&Kernels` proves feature detection passed.
+    pub fn for_isa(isa: Isa) -> &'static Kernels {
+        match isa {
+            Isa::Scalar => &SCALAR,
+            Isa::Avx2 => {
+                #[cfg(target_arch = "x86_64")]
+                {
+                    if is_x86_feature_detected!("avx2") {
+                        return &AVX2;
+                    }
+                }
+                log::warn!("kernels: avx2 unavailable on this host; using scalar");
+                &SCALAR
+            }
+            Isa::Neon => {
+                #[cfg(target_arch = "aarch64")]
+                {
+                    if std::arch::is_aarch64_feature_detected!("neon") {
+                        return &NEON;
+                    }
+                }
+                log::warn!("kernels: neon unavailable on this host; using scalar");
+                &SCALAR
+            }
+        }
+    }
+
+    /// Best ISA this host supports.
+    pub fn detect() -> Isa {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if is_x86_feature_detected!("avx2") {
+                return Isa::Avx2;
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            if std::arch::is_aarch64_feature_detected!("neon") {
+                return Isa::Neon;
+            }
+        }
+        Isa::Scalar
+    }
+
+    #[inline]
+    pub fn isa(&self) -> Isa {
+        self.isa
+    }
+
+    #[inline]
+    pub fn name(&self) -> &'static str {
+        self.isa.name()
+    }
+
+    /// Packing policy: narrow `(k, n)` i32 weight codes to i16/i8 pair
+    /// panels when this ISA has a widening-madd kernel for them and the
+    /// operand widths keep the arithmetic exact (`a_bits + w_bits <=
+    /// 24` bounds every madd pair-sum by `2^23`, far inside i32); the
+    /// scalar set always packs plain i32 panels.
+    pub fn pack_int(
+        &self,
+        w: &[i32],
+        k: usize,
+        n: usize,
+        a_bits: u8,
+        w_bits: u8,
+    ) -> IntPanels {
+        let narrow = self.isa != Isa::Scalar
+            && a_bits <= 16
+            && w_bits <= 16
+            && a_bits as u32 + w_bits as u32 <= 24;
+        if narrow && w_bits <= 8 {
+            IntPanels::I8(PairPanels::pack(w, k, n, a_bits, w_bits))
+        } else if narrow {
+            IntPanels::I16(PairPanels::pack(w, k, n, a_bits, w_bits))
+        } else {
+            IntPanels::I32(PackedPanels::pack(w, k, n))
+        }
+    }
+
+    /// Integer GEMM with the fused bias + requantize (+ ReLU) epilogue
+    /// into activation codes; `out` is row-major `(rows, pw.n())`.
+    /// Bit-identical to `gemm::gemm_requant_relu` on i32 panels.
+    #[allow(clippy::too_many_arguments)]
+    pub fn gemm_requant_relu(
+        &self,
+        a: &[i32],
+        rows: usize,
+        k: usize,
+        pw: &IntPanels,
+        bias_acc: &[i64],
+        acc_frac: i32,
+        fmt: QFormat,
+        relu: bool,
+        out: &mut [i32],
+    ) {
+        debug_assert_eq!(out.len(), rows * pw.n());
+        if relu {
+            self.gemm_int(a, rows, k, pw, bias_acc, |idx, acc| {
+                out[idx] = requant_i64(acc, acc_frac, fmt).max(0);
+            });
+        } else {
+            self.gemm_int(a, rows, k, pw, bias_acc, |idx, acc| {
+                out[idx] = requant_i64(acc, acc_frac, fmt);
+            });
+        }
+    }
+
+    /// Integer GEMM with the float-head epilogue: bias + decode to f32
+    /// logits.  Bit-identical to `gemm::gemm_decode` on i32 panels.
+    pub fn gemm_decode(
+        &self,
+        a: &[i32],
+        rows: usize,
+        k: usize,
+        pw: &IntPanels,
+        bias_acc: &[i64],
+        acc_frac: i32,
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(out.len(), rows * pw.n());
+        let s = (-(acc_frac as f64)).exp2();
+        self.gemm_int(a, rows, k, pw, bias_acc, |idx, acc| {
+            out[idx] = (acc as f64 * s) as f32;
+        });
+    }
+
+    /// Integer GEMM core: dispatch on panel storage and ISA, handing
+    /// every finished i64 accumulator (bias folded in) to `emit` exactly
+    /// once as `emit(row * n + col, acc)`.
+    pub fn gemm_int<E: FnMut(usize, i64)>(
+        &self,
+        a: &[i32],
+        rows: usize,
+        k: usize,
+        pw: &IntPanels,
+        bias_acc: &[i64],
+        emit: E,
+    ) {
+        match pw {
+            IntPanels::I32(p) => self.gemm_i32(a, rows, k, p, bias_acc, emit),
+            IntPanels::I16(p) => self.gemm_i16(a, rows, k, p, bias_acc, emit),
+            IntPanels::I8(p) => self.gemm_i8(a, rows, k, p, bias_acc, emit),
+        }
+    }
+
+    fn gemm_i32<E: FnMut(usize, i64)>(
+        &self,
+        a: &[i32],
+        rows: usize,
+        k: usize,
+        pw: &PackedPanels<i32>,
+        bias_acc: &[i64],
+        emit: E,
+    ) {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if self.isa == Isa::Avx2 {
+                // sound: a facade with isa == Avx2 only exists when
+                // detection passed (see `for_isa`)
+                unsafe { avx2::gemm_i32(a, rows, k, pw, bias_acc, emit) };
+                return;
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            if self.isa == Isa::Neon {
+                unsafe { neon::gemm_i32(a, rows, k, pw, bias_acc, emit) };
+                return;
+            }
+        }
+        gemm::gemm_panels(a, rows, k, pw, bias_acc, emit);
+    }
+
+    fn gemm_i16<E: FnMut(usize, i64)>(
+        &self,
+        a: &[i32],
+        rows: usize,
+        k: usize,
+        pw: &PairPanels<i16>,
+        bias_acc: &[i64],
+        emit: E,
+    ) {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if self.isa == Isa::Avx2 {
+                unsafe { avx2::gemm_pair_i16(a, rows, k, pw, bias_acc, emit) };
+                return;
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            if self.isa == Isa::Neon {
+                unsafe { neon::gemm_pair_i16(a, rows, k, pw, bias_acc, emit) };
+                return;
+            }
+        }
+        gemm_pair_scalar(a, rows, k, pw, bias_acc, emit);
+    }
+
+    fn gemm_i8<E: FnMut(usize, i64)>(
+        &self,
+        a: &[i32],
+        rows: usize,
+        k: usize,
+        pw: &PairPanels<i8>,
+        bias_acc: &[i64],
+        emit: E,
+    ) {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if self.isa == Isa::Avx2 {
+                unsafe { avx2::gemm_pair_i8(a, rows, k, pw, bias_acc, emit) };
+                return;
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            if self.isa == Isa::Neon {
+                unsafe { neon::gemm_pair_i8(a, rows, k, pw, bias_acc, emit) };
+                return;
+            }
+        }
+        gemm_pair_scalar(a, rows, k, pw, bias_acc, emit);
+    }
+
+    /// f32 GEMM with the bias folded into the accumulator start (the
+    /// native trainer's forward / input-gradient matmuls); `out` is
+    /// row-major `(rows, pw.n)`.  Bit-identical to
+    /// `gemm::gemm_bias_f32` -- per-element reduction order is the
+    /// scalar order on every ISA.
+    pub fn gemm_bias_f32(
+        &self,
+        a: &[f32],
+        rows: usize,
+        k: usize,
+        pw: &PackedPanels<f32>,
+        bias: &[f32],
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(out.len(), rows * pw.n);
+        #[cfg(target_arch = "x86_64")]
+        {
+            if self.isa == Isa::Avx2 {
+                unsafe { avx2::gemm_f32(a, rows, k, pw, bias, out) };
+                return;
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            if self.isa == Isa::Neon {
+                unsafe { neon::gemm_f32(a, rows, k, pw, bias, out) };
+                return;
+            }
+        }
+        gemm::gemm_bias_f32(a, rows, k, pw, bias, out);
+    }
+
+    /// Nearest-half-up quantize pass, in place; returns the saturation
+    /// (clip) tally.  Bit-identical to the scalar pipeline in
+    /// `fixedpoint::vector` including NaN propagation.  Only this
+    /// rounding mode vectorizes -- Floor and Stochastic stay scalar so
+    /// the dither RNG stream is untouched.
+    pub fn quantize_nearest(&self, xs: &mut [f32], fmt: QFormat) -> u64 {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if self.isa == Isa::Avx2 {
+                return unsafe { avx2::quantize_nearest(xs, fmt) };
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            if self.isa == Isa::Neon {
+                return unsafe { neon::quantize_nearest(xs, fmt) };
+            }
+        }
+        quantize_nearest_scalar(xs, fmt)
+    }
+}
+
+/// Scalar nearest-half-up quantize: the reference the SIMD lanes must
+/// reproduce bit-for-bit, and the tail loop they all share.  Exactly the
+/// `RoundMode::NearestHalfUp` arm of
+/// `fixedpoint::vector::quantize_slice_counted`.
+pub fn quantize_nearest_scalar(xs: &mut [f32], fmt: QFormat) -> u64 {
+    let step = fmt.step();
+    let inv = 1.0 / step as f64;
+    let (lo, hi) = (fmt.qmin() as f64, fmt.qmax() as f64);
+    let mut sat = 0u64;
+    for x in xs.iter_mut() {
+        let raw = ((*x as f64) * inv + 0.5).floor();
+        sat += (raw < lo || raw > hi) as u64;
+        let code = raw.clamp(lo, hi);
+        *x = (code * step as f64) as f32;
+    }
+    sat
+}
+
+/// Scalar reference walk of a narrow pair panel: the same i64 sums as
+/// the i32 kernel on the unpacked matrix (exact integer adds, zero pad
+/// slots contribute nothing).  Used as the fallback when a narrow panel
+/// is driven on a host whose SIMD went away (tests constructing panels
+/// explicitly) and as the parity oracle for the SIMD pair kernels.
+pub fn gemm_pair_scalar<T: NarrowCode, E: FnMut(usize, i64)>(
+    a: &[i32],
+    rows: usize,
+    k: usize,
+    pw: &PairPanels<T>,
+    bias_acc: &[i64],
+    mut emit: E,
+) {
+    debug_assert_eq!(pw.k, k);
+    debug_assert!(a.len() >= rows * k);
+    debug_assert_eq!(bias_acc.len(), pw.n);
+    let n = pw.n;
+    for jp in 0..pw.num_panels() {
+        let panel = pw.panel(jp);
+        let j0 = jp * NR;
+        let jw = NR.min(n - j0);
+        for i in 0..rows {
+            let arow = &a[i * k..(i + 1) * k];
+            for j in 0..jw {
+                let mut acc = bias_acc[j0 + j];
+                for p2 in 0..pw.k2 {
+                    let b0 = panel[p2 * 2 * NR + 2 * j].widen();
+                    let b1 = panel[p2 * 2 * NR + 2 * j + 1].widen();
+                    let a0 = arow[2 * p2] as i64;
+                    let a1 =
+                        if 2 * p2 + 1 < k { arow[2 * p2 + 1] as i64 } else { 0 };
+                    acc += a0 * b0 + a1 * b1;
+                }
+                emit(i * n + j0 + j, acc);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn q(bits: u8, frac: i8) -> QFormat {
+        QFormat::new(bits, frac).unwrap()
+    }
+
+    fn random_case(
+        seed: u64,
+        rows: usize,
+        k: usize,
+        n: usize,
+        a_bits: u8,
+        w_bits: u8,
+    ) -> (Vec<i32>, Vec<i32>, Vec<i64>) {
+        let mut rng = Rng::new(seed);
+        let (amax, wmax) = (1i64 << (a_bits - 1), 1i64 << (w_bits - 1));
+        let a: Vec<i32> = (0..rows * k)
+            .map(|_| (rng.below((2 * amax - 1) as usize) as i64 - (amax - 1)) as i32)
+            .collect();
+        let w: Vec<i32> = (0..k * n)
+            .map(|_| (rng.below((2 * wmax - 1) as usize) as i64 - (wmax - 1)) as i32)
+            .collect();
+        let bias: Vec<i64> = (0..n).map(|_| rng.below(2001) as i64 - 1000).collect();
+        (a, w, bias)
+    }
+
+    fn naive(
+        a: &[i32],
+        rows: usize,
+        k: usize,
+        w: &[i32],
+        n: usize,
+        bias: &[i64],
+    ) -> Vec<i64> {
+        let mut out = vec![0i64; rows * n];
+        for r in 0..rows {
+            for j in 0..n {
+                let mut acc = bias[j];
+                for p in 0..k {
+                    acc += a[r * k + p] as i64 * w[p * n + j] as i64;
+                }
+                out[r * n + j] = acc;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn scalar_facade_packs_i32_and_matches_gemm_panels() {
+        let (rows, k, n) = (7usize, 27usize, 10usize);
+        let (a, w, bias) = random_case(3, rows, k, n, 8, 8);
+        let ks = Kernels::for_isa(Isa::Scalar);
+        let pw = ks.pack_int(&w, k, n, 8, 8);
+        assert_eq!(pw.kind(), "i32");
+        let mut got = vec![0i64; rows * n];
+        ks.gemm_int(&a, rows, k, &pw, &bias, |idx, acc| got[idx] = acc);
+        assert_eq!(got, naive(&a, rows, k, &w, n, &bias));
+    }
+
+    #[test]
+    fn pair_scalar_matches_naive_for_both_widths() {
+        for (seed, rows, k, n) in
+            [(1u64, 1usize, 3usize, 1usize), (2, 4, 9, 8), (3, 7, 27, 10), (4, 13, 16, 17)]
+        {
+            let (a, w, bias) = random_case(seed, rows, k, n, 8, 8);
+            let want = naive(&a, rows, k, &w, n, &bias);
+            let p16: PairPanels<i16> = PairPanels::pack(&w, k, n, 8, 8);
+            let mut got = vec![0i64; rows * n];
+            gemm_pair_scalar(&a, rows, k, &p16, &bias, |idx, acc| got[idx] = acc);
+            assert_eq!(got, want, "i16 rows={rows} k={k} n={n}");
+            let p8: PairPanels<i8> = PairPanels::pack(&w, k, n, 8, 8);
+            let mut got = vec![0i64; rows * n];
+            gemm_pair_scalar(&a, rows, k, &p8, &bias, |idx, acc| got[idx] = acc);
+            assert_eq!(got, want, "i8 rows={rows} k={k} n={n}");
+        }
+    }
+
+    #[test]
+    fn pack_policy_narrows_only_when_exact_and_simd() {
+        let w = vec![0i32; 6];
+        let ks = Kernels::for_isa(Isa::Scalar);
+        assert_eq!(ks.pack_int(&w, 2, 3, 8, 8).kind(), "i32");
+        let kd = Kernels::for_isa(Kernels::detect());
+        let expect_narrow = kd.isa() != Isa::Scalar;
+        // Q8 weights -> i8 panels under SIMD
+        let kind = kd.pack_int(&w, 2, 3, 8, 8).kind();
+        assert_eq!(kind, if expect_narrow { "i8" } else { "i32" });
+        // 16-bit activations x Q8 weights stay eligible (sum = 24)
+        let kind = kd.pack_int(&w, 2, 3, 16, 8).kind();
+        assert_eq!(kind, if expect_narrow { "i8" } else { "i32" });
+        // wider weights -> i16 panels
+        let kind = kd.pack_int(&w, 2, 3, 8, 12).kind();
+        assert_eq!(kind, if expect_narrow { "i16" } else { "i32" });
+        // too wide for exact madd pair-sums -> plain i32 everywhere
+        assert_eq!(kd.pack_int(&w, 2, 3, 16, 12).kind(), "i32");
+        assert_eq!(kd.pack_int(&w, 2, 3, 32, 8).kind(), "i32");
+    }
+
+    #[test]
+    fn detected_isa_matches_scalar_bit_for_bit() {
+        let kd = Kernels::for_isa(Kernels::detect());
+        let ks = Kernels::for_isa(Isa::Scalar);
+        for (seed, rows, k, n, a_bits, w_bits) in [
+            (1u64, 1usize, 1usize, 1usize, 8u8, 8u8),
+            (2, 5, 9, 9, 8, 8),
+            (3, 13, 27, 17, 16, 8),
+            (4, 9, 10, 24, 8, 12),
+            (5, 32, 33, 7, 12, 12),
+        ] {
+            let (a, w, bias) = random_case(seed, rows, k, n, a_bits, w_bits);
+            let pw_s = ks.pack_int(&w, k, n, a_bits, w_bits);
+            let pw_d = kd.pack_int(&w, k, n, a_bits, w_bits);
+            let mut want = vec![0i64; rows * n];
+            ks.gemm_int(&a, rows, k, &pw_s, &bias, |idx, acc| want[idx] = acc);
+            let mut got = vec![0i64; rows * n];
+            kd.gemm_int(&a, rows, k, &pw_d, &bias, |idx, acc| got[idx] = acc);
+            assert_eq!(
+                got,
+                want,
+                "{} vs scalar, rows={rows} k={k} n={n} ({}b x {}b, {})",
+                kd.name(),
+                a_bits,
+                w_bits,
+                pw_d.kind()
+            );
+        }
+    }
+
+    #[test]
+    fn detected_isa_f32_gemm_matches_scalar_bit_for_bit() {
+        let kd = Kernels::for_isa(Kernels::detect());
+        for (seed, rows, k, n) in
+            [(11u64, 1usize, 3usize, 1usize), (12, 5, 9, 9), (13, 13, 27, 17)]
+        {
+            let mut rng = Rng::new(seed);
+            let a: Vec<f32> = (0..rows * k).map(|_| rng.normal() as f32).collect();
+            let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+            let bias: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let pw = PackedPanels::pack(&w, k, n);
+            let mut want = vec![0f32; rows * n];
+            gemm::gemm_bias_f32(&a, rows, k, &pw, &bias, &mut want);
+            let mut got = vec![0f32; rows * n];
+            kd.gemm_bias_f32(&a, rows, k, &pw, &bias, &mut got);
+            let want_bits: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+            let got_bits: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(got_bits, want_bits, "{} rows={rows} k={k} n={n}", kd.name());
+        }
+    }
+
+    #[test]
+    fn detected_isa_quantize_matches_scalar_bit_for_bit() {
+        let kd = Kernels::for_isa(Kernels::detect());
+        let mut rng = Rng::new(77);
+        for fmt in [q(8, 4), q(4, 1), q(16, 10), q(8, -1)] {
+            let mut xs: Vec<f32> =
+                (0..1003).map(|_| rng.uniform_in(-40.0, 40.0)).collect();
+            // poison with the edge cases the clamp must handle
+            xs[0] = f32::NAN;
+            xs[1] = f32::INFINITY;
+            xs[2] = f32::NEG_INFINITY;
+            xs[3] = 0.0;
+            xs[4] = -0.0;
+            let mut want = xs.clone();
+            let sat_want = quantize_nearest_scalar(&mut want, fmt);
+            let mut got = xs.clone();
+            let sat_got = kd.quantize_nearest(&mut got, fmt);
+            assert_eq!(sat_got, sat_want, "{} sat count {fmt}", kd.name());
+            for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                let same =
+                    g.to_bits() == w.to_bits() || (g.is_nan() && w.is_nan());
+                assert!(same, "{} {fmt} elem {i}: {g:?} vs {w:?}", kd.name());
+            }
+        }
+    }
+
+    #[test]
+    fn auto_is_a_supported_isa_and_stable() {
+        let k1 = Kernels::auto();
+        let k2 = Kernels::auto();
+        assert!(std::ptr::eq(k1, k2), "auto must pick once");
+        // whatever was picked is runnable: a tiny GEMM must not fault
+        let pw = k1.pack_int(&[1, 2, 3, 4], 2, 2, 8, 8);
+        let mut out = vec![0i64; 2];
+        k1.gemm_int(&[1, 1], 1, 2, &pw, &[0, 0], |idx, acc| out[idx] = acc);
+        assert_eq!(out, vec![4, 6]);
+    }
+}

@@ -1,0 +1,373 @@
+//! NEON kernels (aarch64).  Every function here is `unsafe` +
+//! `#[target_feature(enable = "neon")]`; the only callers are the
+//! [`super::Kernels`] facade methods, which hold a NEON facade only
+//! when runtime detection passed (see `Kernels::for_isa`).
+//!
+//! Bit-parity notes (the contract `kernel_parity` pins):
+//!
+//! * `gemm_i32` uses `vmlal_s32` -- a widening 32x32->64
+//!   multiply-accumulate, exactly the scalar `acc + a as i64 * b as
+//!   i64` -- so i64 lanes regroup the exact scalar sums.
+//! * The pair kernels widen 16x16 products with `vmull_s16` (exact in
+//!   i32) and fold each product pair straight into i64 lanes with
+//!   `vpadalq_s32` (pairwise add-accumulate long).  Unlike the AVX2
+//!   madd path there is no running i32 chunk, so no flush budget is
+//!   needed -- every add is exact by construction.
+//! * `gemm_f32` keeps the scalar per-element reduction order with
+//!   separate `vmulq_f32`/`vaddq_f32` (never `vmlaq`/`vfmaq`, which
+//!   fuse on aarch64 and would change rounding).
+//! * `quantize_nearest` runs the scalar f64 pipeline two lanes wide per
+//!   half; `vmaxq_f64`/`vminq_f64` (FMAX/FMIN) propagate NaN like
+//!   `f64::clamp`, and `vrndmq_f64` is floor.
+
+use core::arch::aarch64::*;
+
+use crate::fixedpoint::QFormat;
+use crate::inference::gemm::MR;
+use crate::inference::packing::{PackedPanels, PairPanels, NR};
+
+use super::quantize_nearest_scalar;
+
+/// i32-panel GEMM: the scalar `gemm_panels::<i32>` walk, eight i64
+/// accumulator lanes (four `int64x2_t`) at a time.
+#[target_feature(enable = "neon")]
+pub unsafe fn gemm_i32<E: FnMut(usize, i64)>(
+    a: &[i32],
+    rows: usize,
+    k: usize,
+    pw: &PackedPanels<i32>,
+    bias_acc: &[i64],
+    mut emit: E,
+) {
+    debug_assert_eq!(pw.k, k);
+    debug_assert!(a.len() >= rows * k);
+    debug_assert_eq!(bias_acc.len(), pw.n);
+    let n = pw.n;
+    for jp in 0..pw.num_panels() {
+        let panel = pw.panel(jp);
+        let j0 = jp * NR;
+        let jw = NR.min(n - j0);
+        let mut init = [0i64; NR];
+        init[..jw].copy_from_slice(&bias_acc[j0..j0 + jw]);
+        let mut i = 0usize;
+        while i + MR <= rows {
+            tile_i32::<MR, E>(a, k, i, n, j0, jw, panel, &init, &mut emit);
+            i += MR;
+        }
+        while i < rows {
+            tile_i32::<1, E>(a, k, i, n, j0, jw, panel, &init, &mut emit);
+            i += 1;
+        }
+    }
+}
+
+#[inline]
+#[target_feature(enable = "neon")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn tile_i32<const M: usize, E: FnMut(usize, i64)>(
+    a: &[i32],
+    k: usize,
+    base: usize,
+    n: usize,
+    j0: usize,
+    jw: usize,
+    panel: &[i32],
+    init: &[i64; NR],
+    emit: &mut E,
+) {
+    // four int64x2_t per row: columns (0,1) (2,3) (4,5) (6,7)
+    let mut acc = [[
+        vld1q_s64(init.as_ptr()),
+        vld1q_s64(init.as_ptr().add(2)),
+        vld1q_s64(init.as_ptr().add(4)),
+        vld1q_s64(init.as_ptr().add(6)),
+    ]; M];
+    for p in 0..k {
+        let bp = panel.as_ptr().add(p * NR);
+        let b0 = vld1q_s32(bp); // cols 0..4
+        let b1 = vld1q_s32(bp.add(4)); // cols 4..8
+        let (b0l, b0h) = (vget_low_s32(b0), vget_high_s32(b0));
+        let (b1l, b1h) = (vget_low_s32(b1), vget_high_s32(b1));
+        for ii in 0..M {
+            let av = vdup_n_s32(*a.get_unchecked((base + ii) * k + p));
+            acc[ii][0] = vmlal_s32(acc[ii][0], b0l, av);
+            acc[ii][1] = vmlal_s32(acc[ii][1], b0h, av);
+            acc[ii][2] = vmlal_s32(acc[ii][2], b1l, av);
+            acc[ii][3] = vmlal_s32(acc[ii][3], b1h, av);
+        }
+    }
+    let mut vals = [0i64; NR];
+    for ii in 0..M {
+        for (q, &v) in acc[ii].iter().enumerate() {
+            vst1q_s64(vals.as_mut_ptr().add(2 * q), v);
+        }
+        let o = (base + ii) * n + j0;
+        for (j, &v) in vals[..jw].iter().enumerate() {
+            emit(o + j, v);
+        }
+    }
+}
+
+/// i16 pair-panel GEMM.
+#[target_feature(enable = "neon")]
+pub unsafe fn gemm_pair_i16<E: FnMut(usize, i64)>(
+    a: &[i32],
+    rows: usize,
+    k: usize,
+    pw: &PairPanels<i16>,
+    bias_acc: &[i64],
+    mut emit: E,
+) {
+    debug_assert_eq!(pw.k, k);
+    debug_assert!(a.len() >= rows * k);
+    debug_assert_eq!(bias_acc.len(), pw.n);
+    let n = pw.n;
+    for jp in 0..pw.num_panels() {
+        let panel = pw.panel(jp);
+        let j0 = jp * NR;
+        let jw = NR.min(n - j0);
+        let mut init = [0i64; NR];
+        init[..jw].copy_from_slice(&bias_acc[j0..j0 + jw]);
+        let mut i = 0usize;
+        while i + MR <= rows {
+            pair_tile::<MR, false, E>(
+                a, k, pw.k2, i, n, j0, jw, panel.as_ptr() as *const u8, &init,
+                &mut emit,
+            );
+            i += MR;
+        }
+        while i < rows {
+            pair_tile::<1, false, E>(
+                a, k, pw.k2, i, n, j0, jw, panel.as_ptr() as *const u8, &init,
+                &mut emit,
+            );
+            i += 1;
+        }
+    }
+}
+
+/// i8 pair-panel GEMM: the i16 path after an order-preserving
+/// `vmovl_s8` widen of each panel row.
+#[target_feature(enable = "neon")]
+pub unsafe fn gemm_pair_i8<E: FnMut(usize, i64)>(
+    a: &[i32],
+    rows: usize,
+    k: usize,
+    pw: &PairPanels<i8>,
+    bias_acc: &[i64],
+    mut emit: E,
+) {
+    debug_assert_eq!(pw.k, k);
+    debug_assert!(a.len() >= rows * k);
+    debug_assert_eq!(bias_acc.len(), pw.n);
+    let n = pw.n;
+    for jp in 0..pw.num_panels() {
+        let panel = pw.panel(jp);
+        let j0 = jp * NR;
+        let jw = NR.min(n - j0);
+        let mut init = [0i64; NR];
+        init[..jw].copy_from_slice(&bias_acc[j0..j0 + jw]);
+        let mut i = 0usize;
+        while i + MR <= rows {
+            pair_tile::<MR, true, E>(
+                a, k, pw.k2, i, n, j0, jw, panel.as_ptr() as *const u8, &init,
+                &mut emit,
+            );
+            i += MR;
+        }
+        while i < rows {
+            pair_tile::<1, true, E>(
+                a, k, pw.k2, i, n, j0, jw, panel.as_ptr() as *const u8, &init,
+                &mut emit,
+            );
+            i += 1;
+        }
+    }
+}
+
+/// Shared pair tile.  A pair-row holds 16 narrow values
+/// `[e0,o0,e1,o1,...]` (columns x {even,odd} reduction row); the
+/// activation pair broadcasts as `[a0,a1,a0,a1]` so `vmull_s16` forms
+/// per-column partial products and `vpadalq_s32` folds each (even, odd)
+/// product pair into its column's i64 lane.  `BYTE` selects i8 panels
+/// (widened on load) vs i16.
+#[inline]
+#[target_feature(enable = "neon")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn pair_tile<const M: usize, const BYTE: bool, E: FnMut(usize, i64)>(
+    a: &[i32],
+    k: usize,
+    k2: usize,
+    base: usize,
+    n: usize,
+    j0: usize,
+    jw: usize,
+    panel: *const u8,
+    init: &[i64; NR],
+    emit: &mut E,
+) {
+    // four int64x2_t per row: columns (0,1) (2,3) (4,5) (6,7)
+    let mut acc = [[vdupq_n_s64(0); 4]; M];
+    for p2 in 0..k2 {
+        let (b_lo, b_hi) = if BYTE {
+            let raw = vld1q_s8(panel.add(p2 * 2 * NR) as *const i8);
+            (vmovl_s8(vget_low_s8(raw)), vmovl_s8(vget_high_s8(raw)))
+        } else {
+            let bp = panel.add(p2 * 2 * NR * 2) as *const i16;
+            (vld1q_s16(bp), vld1q_s16(bp.add(8)))
+        };
+        let quarters = [
+            vget_low_s16(b_lo),
+            vget_high_s16(b_lo),
+            vget_low_s16(b_hi),
+            vget_high_s16(b_hi),
+        ];
+        for ii in 0..M {
+            let row = (base + ii) * k;
+            let a0 = *a.get_unchecked(row + 2 * p2);
+            let a1 = if 2 * p2 + 1 < k {
+                *a.get_unchecked(row + 2 * p2 + 1)
+            } else {
+                0
+            };
+            let apair = (a0 as u16 as u32) | ((a1 as u16 as u32) << 16);
+            let av = vreinterpret_s16_u32(vdup_n_u32(apair)); // [a0,a1,a0,a1]
+            for (q, &bq) in quarters.iter().enumerate() {
+                acc[ii][q] = vpadalq_s32(acc[ii][q], vmull_s16(bq, av));
+            }
+        }
+    }
+    let mut vals = [0i64; NR];
+    for ii in 0..M {
+        for (q, &v) in acc[ii].iter().enumerate() {
+            vst1q_s64(vals.as_mut_ptr().add(2 * q), v);
+        }
+        let o = (base + ii) * n + j0;
+        for (j, &v) in vals[..jw].iter().enumerate() {
+            emit(o + j, init[j] + v);
+        }
+    }
+}
+
+/// f32-panel GEMM: one column per lane, scalar reduction order per
+/// element, explicit mul-then-add (no fused multiply-add).
+#[target_feature(enable = "neon")]
+pub unsafe fn gemm_f32(
+    a: &[f32],
+    rows: usize,
+    k: usize,
+    pw: &PackedPanels<f32>,
+    bias: &[f32],
+    out: &mut [f32],
+) {
+    debug_assert_eq!(pw.k, k);
+    debug_assert!(a.len() >= rows * k);
+    debug_assert_eq!(bias.len(), pw.n);
+    debug_assert_eq!(out.len(), rows * pw.n);
+    let n = pw.n;
+    for jp in 0..pw.num_panels() {
+        let panel = pw.panel(jp);
+        let j0 = jp * NR;
+        let jw = NR.min(n - j0);
+        let mut init = [0f32; NR];
+        init[..jw].copy_from_slice(&bias[j0..j0 + jw]);
+        let mut i = 0usize;
+        while i + MR <= rows {
+            tile_f32::<MR>(a, k, i, n, j0, jw, panel, &init, out);
+            i += MR;
+        }
+        while i < rows {
+            tile_f32::<1>(a, k, i, n, j0, jw, panel, &init, out);
+            i += 1;
+        }
+    }
+}
+
+#[inline]
+#[target_feature(enable = "neon")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn tile_f32<const M: usize>(
+    a: &[f32],
+    k: usize,
+    base: usize,
+    n: usize,
+    j0: usize,
+    jw: usize,
+    panel: &[f32],
+    init: &[f32; NR],
+    out: &mut [f32],
+) {
+    let init_lo = vld1q_f32(init.as_ptr());
+    let init_hi = vld1q_f32(init.as_ptr().add(4));
+    let mut acc = [[init_lo, init_hi]; M];
+    for p in 0..k {
+        let bp = panel.as_ptr().add(p * NR);
+        let b0 = vld1q_f32(bp);
+        let b1 = vld1q_f32(bp.add(4));
+        for ii in 0..M {
+            let av = vdupq_n_f32(*a.get_unchecked((base + ii) * k + p));
+            acc[ii][0] = vaddq_f32(acc[ii][0], vmulq_f32(av, b0));
+            acc[ii][1] = vaddq_f32(acc[ii][1], vmulq_f32(av, b1));
+        }
+    }
+    let mut vals = [0f32; NR];
+    for ii in 0..M {
+        vst1q_f32(vals.as_mut_ptr(), acc[ii][0]);
+        vst1q_f32(vals.as_mut_ptr().add(4), acc[ii][1]);
+        let o = (base + ii) * n + j0;
+        out[o..o + jw].copy_from_slice(&vals[..jw]);
+    }
+}
+
+/// One f64x2 half of the quantize pipeline: `floor(x*inv + 0.5)`, tally
+/// out-of-range lanes into `sat`, clamp (FMAX/FMIN propagate NaN, like
+/// `f64::clamp`), `* step`.
+#[inline]
+#[target_feature(enable = "neon")]
+unsafe fn quant_half(
+    xd: float64x2_t,
+    invv: float64x2_t,
+    half: float64x2_t,
+    lov: float64x2_t,
+    hiv: float64x2_t,
+    stepv: float64x2_t,
+    sat: &mut u64,
+) -> float64x2_t {
+    let raw = vrndmq_f64(vaddq_f64(vmulq_f64(xd, invv), half));
+    let under = vcltq_f64(raw, lov);
+    let over = vcgtq_f64(raw, hiv);
+    let m = vorrq_u64(under, over);
+    *sat += (vgetq_lane_u64::<0>(m) & 1) + (vgetq_lane_u64::<1>(m) & 1);
+    let code = vminq_f64(hiv, vmaxq_f64(lov, raw));
+    vmulq_f64(code, stepv)
+}
+
+/// Nearest-half-up quantize, four f32 at a time through two f64x2
+/// halves, with the scalar loop finishing the tail.
+#[target_feature(enable = "neon")]
+pub unsafe fn quantize_nearest(xs: &mut [f32], fmt: QFormat) -> u64 {
+    let step = fmt.step();
+    let inv = 1.0 / step as f64;
+    let (lo, hi) = (fmt.qmin() as f64, fmt.qmax() as f64);
+    let invv = vdupq_n_f64(inv);
+    let half = vdupq_n_f64(0.5);
+    let lov = vdupq_n_f64(lo);
+    let hiv = vdupq_n_f64(hi);
+    let stepv = vdupq_n_f64(step as f64);
+    let mut sat = 0u64;
+    let nfull = xs.len() & !3;
+    let mut i = 0usize;
+    while i < nfull {
+        let x4 = vld1q_f32(xs.as_ptr().add(i));
+        let y_lo = quant_half(
+            vcvt_f64_f32(vget_low_f32(x4)), invv, half, lov, hiv, stepv, &mut sat,
+        );
+        let y_hi = quant_half(
+            vcvt_f64_f32(vget_high_f32(x4)), invv, half, lov, hiv, stepv, &mut sat,
+        );
+        let y = vcombine_f32(vcvt_f32_f64(y_lo), vcvt_f32_f64(y_hi));
+        vst1q_f32(xs.as_mut_ptr().add(i), y);
+        i += 4;
+    }
+    sat + quantize_nearest_scalar(&mut xs[nfull..], fmt)
+}

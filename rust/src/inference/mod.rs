@@ -18,18 +18,26 @@
 //!
 //! * [`ops`] -- scalar/per-plane primitives and the direct per-image
 //!   reference convolution (the semantic ground truth),
-//! * [`packing`] -- build-time weight panel packing + forward-time
-//!   im2col into reusable scratch,
-//! * [`gemm`] -- the tiled i32xi32->i64 microkernel with fused
-//!   bias/requantize/ReLU (or f32-decode) epilogues,
+//! * [`packing`] -- build-time weight panel packing (i32 panels plus
+//!   i16/i8 pair panels for narrow cells) + forward-time im2col into
+//!   reusable scratch,
+//! * [`gemm`] -- the scalar reference microkernel: tiled i32xi32->i64
+//!   with fused bias/requantize/ReLU (or f32-decode) epilogues,
+//! * [`kernels`] -- the runtime-dispatched SIMD layer: one [`Kernels`]
+//!   facade over the scalar reference and the AVX2/NEON kernels
+//!   (selected once per process, `FXP_KERNEL` override, bit-identical
+//!   to scalar by contract) -- every engine GEMM and quantize pass goes
+//!   through it,
 //! * [`engine`] -- the network-level driver: batched, zero-allocation,
 //!   row-block-threaded execution over a [`Scratch`] arena, pinned
 //!   bit-for-bit to the reference path.
 
 pub mod engine;
 pub mod gemm;
+pub mod kernels;
 pub mod ops;
 pub mod packing;
 pub mod verify;
 
 pub use engine::{FixedPointNet, InferSession, Scratch};
+pub use kernels::{Isa, Kernels};

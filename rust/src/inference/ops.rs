@@ -1,5 +1,6 @@
 //! Integer layer primitives (single image, NHWC codes).
 
+use crate::fixedpoint::vector::{NoCount, SatCount, SatSink};
 use crate::fixedpoint::{QFormat, RoundMode};
 
 /// Requantize a wide accumulator value (frac = acc_frac) into `fmt`,
@@ -118,16 +119,44 @@ pub fn fc_acc(
 
 /// Requantize + ReLU a whole accumulator plane into activation codes.
 pub fn requant_relu(acc: &[i64], acc_frac: i32, fmt: QFormat, relu: bool) -> Vec<i32> {
-    acc.iter()
-        .map(|&a| {
-            let c = requant_i64(a, acc_frac, fmt);
-            if relu {
-                c.max(0)
-            } else {
-                c
-            }
-        })
-        .collect()
+    let mut out = vec![0i32; acc.len()];
+    requant_relu_pass(acc, acc_frac, fmt, relu, &mut out, &mut NoCount);
+    out
+}
+
+/// [`requant_relu`] plus the number of saturated (clipped) elements.
+pub fn requant_relu_counted(
+    acc: &[i64],
+    acc_frac: i32,
+    fmt: QFormat,
+    relu: bool,
+) -> (Vec<i32>, u64) {
+    let mut out = vec![0i32; acc.len()];
+    let mut sink = SatCount(0);
+    requant_relu_pass(acc, acc_frac, fmt, relu, &mut out, &mut sink);
+    (out, sink.0)
+}
+
+/// The one requantize-plane pass both entry points share: the saturation
+/// sink is a generic parameter (`NoCount` for the plain path, `SatCount`
+/// for telemetry), so the counted and uncounted variants are the same
+/// code and definitionally bit-identical.
+pub fn requant_relu_pass<S: SatSink>(
+    acc: &[i64],
+    acc_frac: i32,
+    fmt: QFormat,
+    relu: bool,
+    out: &mut [i32],
+    sink: &mut S,
+) {
+    debug_assert_eq!(acc.len(), out.len());
+    let mut sat = 0u64;
+    for (o, &a) in out.iter_mut().zip(acc) {
+        let (c, clipped) = requant_i64_counted(a, acc_frac, fmt);
+        sat += clipped as u64;
+        *o = if relu { c.max(0) } else { c };
+    }
+    sink.clipped(sat);
 }
 
 /// 2x2 max-pool on codes (VALID, stride 2).
@@ -338,5 +367,22 @@ mod tests {
         assert!(out[1] > 0);
         let out = requant_relu(&[-100, 50], 4, q(8, 2), false);
         assert!(out[0] < 0);
+    }
+
+    #[test]
+    fn counted_requant_plane_matches_plain_and_counts_clips() {
+        let fmt = q(8, 2);
+        let acc: Vec<i64> = (-40..40).map(|i| i * 173).collect();
+        for relu in [false, true] {
+            let plain = requant_relu(&acc, 4, fmt, relu);
+            let (counted, sat) = requant_relu_counted(&acc, 4, fmt, relu);
+            assert_eq!(plain, counted);
+            let want_sat = acc
+                .iter()
+                .filter(|&&a| requant_i64_counted(a, 4, fmt).1)
+                .count() as u64;
+            assert_eq!(sat, want_sat);
+            assert!(sat > 0, "fixture should exercise saturation");
+        }
     }
 }

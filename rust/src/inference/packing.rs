@@ -106,6 +106,160 @@ impl<T: Copy + Default> PackedPanels<T> {
     }
 }
 
+/// A narrow storage type for packed weight codes: `i16` or `i8` panels
+/// let the SIMD kernels process 2x/4x the lanes per instruction while
+/// the products still widen into the same i64 accumulators as the i32
+/// reference kernel (exact integer adds are order-free, so regrouping
+/// never changes the result bits).
+pub trait NarrowCode: Copy + Default {
+    /// Narrow an i32 code.  Only called on codes the format guarantees
+    /// fit (`QFormat::bits` bounds the magnitude), so this never wraps.
+    fn from_code(c: i32) -> Self;
+    /// Widen back for the scalar reference walk of a narrow panel.
+    fn widen(self) -> i64;
+}
+
+impl NarrowCode for i16 {
+    #[inline(always)]
+    fn from_code(c: i32) -> i16 {
+        debug_assert!(i16::try_from(c).is_ok(), "code {c} does not fit i16");
+        c as i16
+    }
+    #[inline(always)]
+    fn widen(self) -> i64 {
+        self as i64
+    }
+}
+
+impl NarrowCode for i8 {
+    #[inline(always)]
+    fn from_code(c: i32) -> i8 {
+        debug_assert!(i8::try_from(c).is_ok(), "code {c} does not fit i8");
+        c as i8
+    }
+    #[inline(always)]
+    fn widen(self) -> i64 {
+        self as i64
+    }
+}
+
+/// Narrow weight panels in *pair-interleaved* layout for widening
+/// multiply-add kernels (AVX2 `_mm256_madd_epi16` and friends consume
+/// two adjacent reduction elements per lane).
+///
+/// Reduction rows are grouped in pairs: pair-row `p2` of panel `jp`
+/// stores `2 * NR` values, laid out as
+///
+/// ```text
+/// dst[p2*2*NR + 2*j]     = w[(2*p2)    * n + j0 + j]   // even k row
+/// dst[p2*2*NR + 2*j + 1] = w[(2*p2 + 1)* n + j0 + j]   // odd  k row
+/// ```
+///
+/// with the odd slot zero when `k` is odd and `2*p2 + 1 == k` (a zero
+/// code multiplies to exactly zero, so padding never changes the sum).
+/// Columns past `n` are zero like [`PackedPanels`].
+#[derive(Clone, Debug)]
+pub struct PairPanels<T> {
+    data: Vec<T>,
+    /// reduction length of the *unpacked* matrix
+    pub k: usize,
+    /// logical column count
+    pub n: usize,
+    /// pair-row count: `k.div_ceil(2)`
+    pub k2: usize,
+    /// How many pair-sums an i32 lane can accumulate before it must be
+    /// flushed into the i64 accumulator without risking i32 overflow.
+    /// Each pair-sum is bounded by `2^(a_bits + w_bits - 1)` in
+    /// magnitude, so `(i32::MAX >> (a_bits + w_bits - 1)).max(1)` of
+    /// them always fit.
+    pub chunk_pairs: usize,
+}
+
+impl<T: NarrowCode> PairPanels<T> {
+    /// Pack a row-major `(k, n)` i32 code matrix into narrow pair
+    /// panels.  `a_bits`/`w_bits` are the operand formats' bit widths,
+    /// used only to size the overflow-safe accumulation chunk.
+    pub fn pack(w: &[i32], k: usize, n: usize, a_bits: u8, w_bits: u8) -> PairPanels<T> {
+        debug_assert_eq!(w.len(), k * n);
+        let k2 = k.div_ceil(2);
+        let panels = n.div_ceil(NR);
+        let mut data = vec![T::default(); panels * k2 * 2 * NR];
+        for jp in 0..panels {
+            let j0 = jp * NR;
+            let jw = NR.min(n - j0);
+            let dst = &mut data[jp * k2 * 2 * NR..(jp + 1) * k2 * 2 * NR];
+            for p2 in 0..k2 {
+                for j in 0..jw {
+                    dst[p2 * 2 * NR + 2 * j] = T::from_code(w[(2 * p2) * n + j0 + j]);
+                    if 2 * p2 + 1 < k {
+                        dst[p2 * 2 * NR + 2 * j + 1] =
+                            T::from_code(w[(2 * p2 + 1) * n + j0 + j]);
+                    }
+                }
+            }
+        }
+        let shift = (a_bits as u32 + w_bits as u32 - 1).min(30);
+        let chunk_pairs = ((i32::MAX >> shift) as usize).max(1);
+        PairPanels { data, k, n, k2, chunk_pairs }
+    }
+
+    #[inline]
+    pub fn num_panels(&self) -> usize {
+        self.n.div_ceil(NR)
+    }
+
+    /// Panel `jp` as a contiguous `k2 * 2 * NR` slice.
+    #[inline]
+    pub fn panel(&self, jp: usize) -> &[T] {
+        &self.data[jp * self.k2 * 2 * NR..(jp + 1) * self.k2 * 2 * NR]
+    }
+}
+
+/// The integer engine's packed-weight storage: one of three physical
+/// layouts behind a single logical `(k, n)` code matrix.  Which variant
+/// a layer gets is the [`crate::inference::kernels::Kernels`] facade's
+/// packing policy (`pack_int`): narrow panels only when the active ISA
+/// has a kernel for them and the operand widths make the widening
+/// arithmetic exact.
+#[derive(Clone, Debug)]
+pub enum IntPanels {
+    I32(PackedPanels<i32>),
+    I16(PairPanels<i16>),
+    I8(PairPanels<i8>),
+}
+
+impl IntPanels {
+    /// Reduction length of the packed matrix.
+    #[inline]
+    pub fn k(&self) -> usize {
+        match self {
+            IntPanels::I32(p) => p.k,
+            IntPanels::I16(p) => p.k,
+            IntPanels::I8(p) => p.k,
+        }
+    }
+
+    /// Logical column count of the packed matrix.
+    #[inline]
+    pub fn n(&self) -> usize {
+        match self {
+            IntPanels::I32(p) => p.n,
+            IntPanels::I16(p) => p.n,
+            IntPanels::I8(p) => p.n,
+        }
+    }
+
+    /// Storage kind, for logs and tests.
+    #[inline]
+    pub fn kind(&self) -> &'static str {
+        match self {
+            IntPanels::I32(_) => "i32",
+            IntPanels::I16(_) => "i16",
+            IntPanels::I8(_) => "i8",
+        }
+    }
+}
+
 /// Extract im2col patch rows `row0..row0+rows` of a batched NHWC code
 /// tensor into `out` (row-major `(rows, 9*cin)`).
 ///
@@ -207,6 +361,68 @@ mod tests {
         for jp in 0..want.num_panels() {
             assert_eq!(got.panel(jp), want.panel(jp), "panel {jp}");
         }
+    }
+
+    #[test]
+    fn pair_pack_layout_interleaves_reduction_pairs() {
+        // odd k exercises the zero-padded trailing pair slot; n crosses
+        // the panel edge
+        let (k, n) = (5usize, NR + 3);
+        let w: Vec<i32> = (0..k * n).map(|i| (i as i32 % 251) - 125).collect();
+        let pw: PairPanels<i16> = PairPanels::pack(&w, k, n, 8, 8);
+        assert_eq!(pw.k, k);
+        assert_eq!(pw.n, n);
+        assert_eq!(pw.k2, 3);
+        assert_eq!(pw.num_panels(), 2);
+        for jp in 0..pw.num_panels() {
+            let panel = pw.panel(jp);
+            for p2 in 0..pw.k2 {
+                for j in 0..NR {
+                    let col = jp * NR + j;
+                    let even = if col < n { w[(2 * p2) * n + col] } else { 0 };
+                    let odd = if col < n && 2 * p2 + 1 < k {
+                        w[(2 * p2 + 1) * n + col]
+                    } else {
+                        0
+                    };
+                    assert_eq!(
+                        panel[p2 * 2 * NR + 2 * j] as i32,
+                        even,
+                        "jp={jp} p2={p2} j={j} even"
+                    );
+                    assert_eq!(
+                        panel[p2 * 2 * NR + 2 * j + 1] as i32,
+                        odd,
+                        "jp={jp} p2={p2} j={j} odd"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pair_pack_chunk_budget_bounds_i32_accumulation() {
+        let w = vec![0i32; 4];
+        // Q8 x Q8: pair-sums bounded by 2^15, so 2^31/2^15 = 65535 fit
+        let p8: PairPanels<i8> = PairPanels::pack(&w, 2, 2, 8, 8);
+        assert_eq!(p8.chunk_pairs, 65535);
+        // 16+8 bit operands: pair-sums up to 2^23 -> 255 fit
+        let p16: PairPanels<i16> = PairPanels::pack(&w, 2, 2, 16, 8);
+        assert_eq!(p16.chunk_pairs, 255);
+        // worst allowed case still accumulates at least one pair
+        let pw: PairPanels<i16> = PairPanels::pack(&w, 2, 2, 16, 16);
+        assert!(pw.chunk_pairs >= 1);
+    }
+
+    #[test]
+    fn int_panels_report_shape_and_kind() {
+        let w: Vec<i32> = (0..6).collect();
+        let p = IntPanels::I32(PackedPanels::pack(&w, 2, 3));
+        assert_eq!((p.k(), p.n(), p.kind()), (2, 3, "i32"));
+        let p = IntPanels::I16(PairPanels::pack(&w, 2, 3, 8, 8));
+        assert_eq!((p.k(), p.n(), p.kind()), (2, 3, "i16"));
+        let p = IntPanels::I8(PairPanels::pack(&w, 2, 3, 8, 4));
+        assert_eq!((p.k(), p.n(), p.kind()), (2, 3, "i8"));
     }
 
     /// Reference patch extraction straight from the definition.

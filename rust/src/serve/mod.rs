@@ -12,7 +12,8 @@
 //!   protocol), `Infer`/`Logits` plus `Ping`/`Info` introspection;
 //! * [`queue`] -- the admission queue: concurrent requests coalesce
 //!   into one GEMM batch under a latency budget (`--max-batch`,
-//!   `--max-wait-us`), strict FIFO, drain-aware;
+//!   `--max-wait-us`), strict FIFO, drain-aware, with bounded depth
+//!   (`--max-queue`) rejecting overload with an explicit `Busy` reply;
 //! * [`server`] -- the daemon: nonblocking accept loop, handler thread
 //!   per connection, one batcher thread over a warm
 //!   [`crate::inference::InferSession`] (zero steady-state allocation),
@@ -32,7 +33,7 @@ pub mod replay;
 pub mod server;
 pub mod stats;
 
-pub use queue::{AdmissionQueue, Pending};
+pub use queue::{AdmissionQueue, Pending, PushOutcome};
 pub use replay::{ReplayOpts, TraceKind};
 pub use server::{run_server, ServeOpts, ServeSummary};
 pub use stats::TraceStats;

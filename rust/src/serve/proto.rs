@@ -14,10 +14,16 @@
 //!   Infer{id, image}         ->
 //!                            <-  Logits{id, logits, argmax,
 //!                                       queue_us, batch_n, gemm_us}
+//!                                | Busy{id}
 //!                                | Error{id, reason}
 //!   Ping                     ->
 //!                            <-  Pong
 //! ```
+//!
+//! `Busy` is the backpressure reject (proto v2): the admission queue is
+//! at its `--max-queue` depth, nothing was enqueued, and the client
+//! should back off and retry -- distinct from `Error` so well-behaved
+//! load generators can count rejects without string-matching reasons.
 //!
 //! `image` is `h*w*c` row-major floats in [0,1]; `logits` are the
 //! engine's f32 logits.  Both ride as JSON numbers: an f32 widened to
@@ -34,7 +40,8 @@ use crate::netio::{self, JsonFrame};
 use crate::util::json::Json;
 
 /// Serve-protocol revision; independent of the cluster protocol's.
-pub const SERVE_PROTO_VERSION: usize = 1;
+/// v2: `Busy` reject + `max_queue` in `InfoReply`.
+pub const SERVE_PROTO_VERSION: usize = 2;
 
 /// One serve-protocol message.
 #[derive(Clone, Debug, PartialEq)]
@@ -58,6 +65,9 @@ pub enum ServeMsg {
         batch_n: usize,
         gemm_us: u64,
     },
+    /// Backpressure reject: the admission queue is at `max_queue` depth;
+    /// the request was *not* enqueued.  Back off and retry.
+    Busy { id: u64 },
     Pong,
     InfoReply {
         proto: usize,
@@ -67,6 +77,8 @@ pub enum ServeMsg {
         classes: usize,
         max_batch: usize,
         max_wait_us: u64,
+        /// Admission-queue depth bound (0 = unbounded).
+        max_queue: usize,
     },
     /// Per-request failure (`id` echoes the request) or connection-level
     /// protocol complaint (`id` absent).
@@ -111,19 +123,31 @@ impl ServeMsg {
                     ("gemm_us", Json::Num(*gemm_us as f64)),
                 ])
             }
+            ServeMsg::Busy { id } => Json::obj(vec![
+                ("type", Json::from("busy")),
+                ("id", Json::Num(*id as f64)),
+            ]),
             ServeMsg::Pong => Json::obj(vec![("type", Json::from("pong"))]),
-            ServeMsg::InfoReply { proto, h, w, c, classes, max_batch, max_wait_us } => {
-                Json::obj(vec![
-                    ("type", Json::from("info_reply")),
-                    ("proto", Json::from(*proto)),
-                    ("h", Json::from(*h)),
-                    ("w", Json::from(*w)),
-                    ("c", Json::from(*c)),
-                    ("classes", Json::from(*classes)),
-                    ("max_batch", Json::from(*max_batch)),
-                    ("max_wait_us", Json::Num(*max_wait_us as f64)),
-                ])
-            }
+            ServeMsg::InfoReply {
+                proto,
+                h,
+                w,
+                c,
+                classes,
+                max_batch,
+                max_wait_us,
+                max_queue,
+            } => Json::obj(vec![
+                ("type", Json::from("info_reply")),
+                ("proto", Json::from(*proto)),
+                ("h", Json::from(*h)),
+                ("w", Json::from(*w)),
+                ("c", Json::from(*c)),
+                ("classes", Json::from(*classes)),
+                ("max_batch", Json::from(*max_batch)),
+                ("max_wait_us", Json::Num(*max_wait_us as f64)),
+                ("max_queue", Json::from(*max_queue)),
+            ]),
             ServeMsg::Error { id, reason } => {
                 let mut pairs = vec![
                     ("type", Json::from("error")),
@@ -154,6 +178,7 @@ impl ServeMsg {
                 batch_n: j.get("batch_n")?.as_usize()?,
                 gemm_us: u64_num(j, "gemm_us")?,
             },
+            "busy" => ServeMsg::Busy { id: u64_num(j, "id")? },
             "pong" => ServeMsg::Pong,
             "info_reply" => ServeMsg::InfoReply {
                 proto: j.get("proto")?.as_usize()?,
@@ -163,6 +188,7 @@ impl ServeMsg {
                 classes: j.get("classes")?.as_usize()?,
                 max_batch: j.get("max_batch")?.as_usize()?,
                 max_wait_us: u64_num(j, "max_wait_us")?,
+                max_queue: j.get("max_queue")?.as_usize()?,
             },
             "error" => ServeMsg::Error {
                 id: match j.opt("id") {
@@ -244,7 +270,9 @@ mod tests {
                 classes: 10,
                 max_batch: 8,
                 max_wait_us: 2000,
+                max_queue: 64,
             },
+            ServeMsg::Busy { id: 41 },
             ServeMsg::Error { id: None, reason: "bad \"frame\"\n".into() },
             ServeMsg::Error { id: Some(3), reason: "draining".into() },
         ];
@@ -293,6 +321,7 @@ mod tests {
             ("infer with string id", r#"{"type":"infer","id":"x","image":[]}"#),
             ("infer with fractional id", r#"{"type":"infer","id":1.5,"image":[]}"#),
             ("infer with non-numeric pixel", r#"{"type":"infer","id":1,"image":["a"]}"#),
+            ("busy without id", r#"{"type":"busy"}"#),
             ("error without reason", r#"{"type":"error"}"#),
         ] {
             let mut wire = Vec::new();

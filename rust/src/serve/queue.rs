@@ -13,6 +13,12 @@
 //!    flushes immediately, and once the queue is empty `next_batch`
 //!    returns `false` (the batcher exits).
 //!
+//! Backpressure: the queue depth is bounded by `max_queue` (0 =
+//! unbounded).  A [`push`] against a full queue is refused with
+//! [`PushOutcome::Busy`] -- the 503-style explicit reject -- so a
+//! traffic burst degrades into fast, visible rejections instead of an
+//! unbounded memory/latency pile-up behind the batcher.
+//!
 //! Ordering is strict FIFO: requests leave in arrival order, and a batch
 //! is always a contiguous prefix of the queue.  Determinism note: *which*
 //! batch a request lands in depends on timing, but the integer engine's
@@ -41,6 +47,18 @@ pub struct Pending {
     pub enqueued: Instant,
 }
 
+/// Why a [`AdmissionQueue::push`] did or did not enqueue.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PushOutcome {
+    /// Enqueued; the batcher will reply.
+    Admitted,
+    /// Refused: the queue is at `max_queue` depth.  The caller must send
+    /// an explicit busy reject so the client can back off and retry.
+    Busy,
+    /// Refused: the server is draining and admits nothing new.
+    Draining,
+}
+
 struct Inner {
     q: VecDeque<Pending>,
     draining: bool,
@@ -52,15 +70,19 @@ pub struct AdmissionQueue {
     cv: Condvar,
     max_batch: usize,
     max_wait: Duration,
+    max_queue: usize,
 }
 
 impl AdmissionQueue {
-    pub fn new(max_batch: usize, max_wait: Duration) -> AdmissionQueue {
+    /// `max_queue` bounds the admitted-but-unbatched depth (0 =
+    /// unbounded); see the module docs for the backpressure contract.
+    pub fn new(max_batch: usize, max_wait: Duration, max_queue: usize) -> AdmissionQueue {
         AdmissionQueue {
             inner: Mutex::new(Inner { q: VecDeque::new(), draining: false }),
             cv: Condvar::new(),
             max_batch: max_batch.max(1),
             max_wait,
+            max_queue,
         }
     }
 
@@ -68,20 +90,29 @@ impl AdmissionQueue {
         self.max_batch
     }
 
-    /// Admit a request.  Returns `false` -- and does *not* enqueue --
-    /// once draining has begun: the caller must reply with an error
-    /// instead, so no request is ever silently dropped.  (The check and
-    /// the enqueue share one lock acquisition, so a successful push is
-    /// guaranteed to be seen by the batcher before it exits.)
-    pub fn push(&self, p: Pending) -> bool {
+    pub fn max_queue(&self) -> usize {
+        self.max_queue
+    }
+
+    /// Admit a request.  Refusals do *not* enqueue: the caller must
+    /// reply with the matching reject ([`PushOutcome::Busy`] /
+    /// [`PushOutcome::Draining`]) instead, so no request is ever
+    /// silently dropped.  (The checks and the enqueue share one lock
+    /// acquisition, so an admitted push is guaranteed to be seen by the
+    /// batcher before it exits, and the depth bound is never raced
+    /// past.)
+    pub fn push(&self, p: Pending) -> PushOutcome {
         let mut g = self.inner.lock().unwrap();
         if g.draining {
-            return false;
+            return PushOutcome::Draining;
+        }
+        if self.max_queue > 0 && g.q.len() >= self.max_queue {
+            return PushOutcome::Busy;
         }
         g.q.push_back(p);
         drop(g);
         self.cv.notify_all();
-        true
+        PushOutcome::Admitted
     }
 
     /// Stop admitting; flush what remains.  Idempotent.
@@ -147,9 +178,9 @@ mod tests {
 
     #[test]
     fn full_batch_releases_without_waiting() {
-        let q = AdmissionQueue::new(4, Duration::from_secs(60));
+        let q = AdmissionQueue::new(4, Duration::from_secs(60), 0);
         for id in 0..4 {
-            assert!(q.push(req(id)));
+            assert_eq!(q.push(req(id)), PushOutcome::Admitted);
         }
         let mut batch = Vec::new();
         let t0 = Instant::now();
@@ -161,9 +192,9 @@ mod tests {
 
     #[test]
     fn latency_budget_flushes_a_partial_batch_in_order() {
-        let q = AdmissionQueue::new(8, Duration::from_millis(30));
+        let q = AdmissionQueue::new(8, Duration::from_millis(30), 0);
         for id in 0..3 {
-            assert!(q.push(req(id)));
+            assert_eq!(q.push(req(id)), PushOutcome::Admitted);
         }
         let mut batch = Vec::new();
         let t0 = Instant::now();
@@ -179,9 +210,9 @@ mod tests {
 
     #[test]
     fn oversize_backlog_leaves_in_fifo_chunks() {
-        let q = AdmissionQueue::new(4, Duration::from_millis(5));
+        let q = AdmissionQueue::new(4, Duration::from_millis(5), 0);
         for id in 0..10 {
-            assert!(q.push(req(id)));
+            assert_eq!(q.push(req(id)), PushOutcome::Admitted);
         }
         let mut seen = Vec::new();
         let mut sizes = Vec::new();
@@ -197,10 +228,14 @@ mod tests {
 
     #[test]
     fn drain_rejects_new_but_flushes_queued() {
-        let q = AdmissionQueue::new(8, Duration::from_secs(60));
-        assert!(q.push(req(0)));
+        let q = AdmissionQueue::new(8, Duration::from_secs(60), 0);
+        assert_eq!(q.push(req(0)), PushOutcome::Admitted);
         q.begin_drain();
-        assert!(!q.push(req(1)), "push after drain must be rejected");
+        assert_eq!(
+            q.push(req(1)),
+            PushOutcome::Draining,
+            "push after drain must be rejected"
+        );
         let mut batch = Vec::new();
         assert!(q.next_batch(&mut batch), "queued work still flushes");
         assert_eq!(batch.len(), 1);
@@ -210,8 +245,35 @@ mod tests {
     }
 
     #[test]
+    fn full_queue_pushes_back_until_a_batch_leaves() {
+        let q = AdmissionQueue::new(2, Duration::from_secs(60), 3);
+        for id in 0..3 {
+            assert_eq!(q.push(req(id)), PushOutcome::Admitted);
+        }
+        assert_eq!(q.push(req(3)), PushOutcome::Busy, "depth bound hit");
+        assert_eq!(q.len(), 3, "busy push must not enqueue");
+        let mut batch = Vec::new();
+        assert!(q.next_batch(&mut batch));
+        assert_eq!(batch.len(), 2);
+        assert_eq!(
+            q.push(req(4)),
+            PushOutcome::Admitted,
+            "capacity frees as batches leave"
+        );
+    }
+
+    #[test]
+    fn zero_max_queue_means_unbounded() {
+        let q = AdmissionQueue::new(2, Duration::from_secs(60), 0);
+        for id in 0..100 {
+            assert_eq!(q.push(req(id)), PushOutcome::Admitted);
+        }
+        assert_eq!(q.len(), 100);
+    }
+
+    #[test]
     fn drain_wakes_a_blocked_batcher() {
-        let q = AdmissionQueue::new(8, Duration::from_secs(60));
+        let q = AdmissionQueue::new(8, Duration::from_secs(60), 0);
         std::thread::scope(|s| {
             let h = s.spawn(|| {
                 let mut batch = Vec::new();

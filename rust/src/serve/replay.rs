@@ -151,9 +151,10 @@ impl Client {
         }
     }
 
-    /// Classify one image; returns `(latency, batch_n)` on a `Logits`
-    /// reply, `Err` on an `Error` reply or transport failure.
-    fn infer(&mut self, id: u64, image: &[f32]) -> Result<(Duration, usize)> {
+    /// Classify one image; distinguishes success, an explicit `Busy`
+    /// backpressure reject (expected under deliberate overload -- not a
+    /// failure), and genuine errors.
+    fn infer(&mut self, id: u64, image: &[f32]) -> Result<InferOutcome> {
         let t0 = Instant::now();
         match self.request(&ServeMsg::Infer { id, image: image.to_vec() })? {
             ServeMsg::Logits { id: rid, batch_n, .. } => {
@@ -162,7 +163,15 @@ impl Client {
                         "reply id {rid} for request {id} (one in flight per conn)"
                     )));
                 }
-                Ok((t0.elapsed(), batch_n))
+                Ok(InferOutcome::Replied(t0.elapsed(), batch_n))
+            }
+            ServeMsg::Busy { id: rid } => {
+                if rid != id {
+                    return Err(FxpError::config(format!(
+                        "busy reply id {rid} for request {id}"
+                    )));
+                }
+                Ok(InferOutcome::Busy)
             }
             ServeMsg::Error { reason, .. } => {
                 Err(FxpError::config(format!("server error: {reason}")))
@@ -170,6 +179,14 @@ impl Client {
             other => Err(FxpError::config(format!("unexpected reply {other:?}"))),
         }
     }
+}
+
+/// What one replayed request came back as.
+enum InferOutcome {
+    /// `Logits` reply: client-observed latency and the batch it rode in.
+    Replied(Duration, usize),
+    /// `Busy` backpressure reject: counted, never latency-sampled.
+    Busy,
 }
 
 /// Arrival offsets from trace start (empty for closed-loop kinds).
@@ -227,16 +244,19 @@ fn run_trace(
     let clients = clients.max(1);
     let sched = arrivals(kind, n, offered_rps, &mut Rng::new(seed ^ 0x5eed));
     let t_start = Instant::now();
-    // (latency_us, batch_n) per success; error count — one bucket per client
-    let mut results: Vec<Result<(Vec<(f64, usize)>, usize)>> = Vec::new();
+    // (latency_us, batch_n) per success; error and busy-reject counts --
+    // one bucket per client
+    type ClientTally = (Vec<(f64, usize)>, usize, usize);
+    let mut results: Vec<Result<ClientTally>> = Vec::new();
     std::thread::scope(|s| {
         let handles: Vec<_> = (0..clients)
             .map(|k| {
                 let sched = &sched;
-                s.spawn(move || -> Result<(Vec<(f64, usize)>, usize)> {
+                s.spawn(move || -> Result<ClientTally> {
                     let mut cl = Client::connect(addr)?;
                     let mut ok = Vec::new();
                     let mut errors = 0usize;
+                    let mut busy = 0usize;
                     let mut i = k;
                     while i < n {
                         if let Some(due) = sched.get(i) {
@@ -248,9 +268,10 @@ fn run_trace(
                         }
                         let img = &images[i % images.len()];
                         match cl.infer(i as u64, img) {
-                            Ok((lat, batch_n)) => {
+                            Ok(InferOutcome::Replied(lat, batch_n)) => {
                                 ok.push((lat.as_secs_f64() * 1e6, batch_n))
                             }
+                            Ok(InferOutcome::Busy) => busy += 1,
                             Err(e) => {
                                 log::warn!("replay: request {i}: {e}");
                                 errors += 1;
@@ -258,7 +279,7 @@ fn run_trace(
                         }
                         i += clients;
                     }
-                    Ok((ok, errors))
+                    Ok((ok, errors, busy))
                 })
             })
             .collect();
@@ -273,9 +294,11 @@ fn run_trace(
     let mut lats = Vec::with_capacity(n);
     let mut batches = Vec::with_capacity(n);
     let mut errors = 0usize;
+    let mut rejected = 0usize;
     for r in results {
-        let (ok, errs) = r?;
+        let (ok, errs, busy) = r?;
         errors += errs;
+        rejected += busy;
         for (lat, b) in ok {
             lats.push(lat);
             batches.push(b);
@@ -288,6 +311,7 @@ fn run_trace(
         &lats,
         &batches,
         errors,
+        rejected,
     ))
 }
 
@@ -338,13 +362,16 @@ pub fn run_suite(addr: &str, opts: &ReplayOpts) -> Result<Json> {
         let st = run_trace(addr, kind, opts.requests, rate, clients, opts.seed, &images)?;
         log::info!(
             "replay: {} @ {:.1} req/s offered: {:.1} req/s achieved, \
-             p95 {:.0}us, mean batch {:.2}, {} errors",
+             p95 {:.0}us, mean batch {:.2}, {} errors, {} busy-rejected \
+             ({:.1}% reject rate)",
             st.name,
             st.offered_rps,
             st.achieved_rps,
             st.p95_us,
             st.mean_batch,
-            st.errors
+            st.errors,
+            st.rejected,
+            100.0 * st.reject_rate()
         );
         traces.push(st);
     }
@@ -353,6 +380,8 @@ pub fn run_suite(addr: &str, opts: &ReplayOpts) -> Result<Json> {
     let mut gates: Vec<(&str, Json)> = Vec::new();
     let mut violations = Vec::new();
     for st in &traces {
+        // busy rejects are deliberate backpressure under overload, never
+        // a violation; genuine errors still fail the gate
         if st.errors > 0 {
             violations.push(format!("{}: {} request errors", st.name, st.errors));
         }

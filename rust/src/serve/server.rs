@@ -13,6 +13,11 @@
 //!                                                            conn registry
 //! ```
 //!
+//! Backpressure: the queue depth is bounded (`--max-queue`, 0 =
+//! unbounded); a push against a full queue is answered with an explicit
+//! `Busy{id}` reject -- the request is never enqueued, so overload
+//! degrades into fast rejections instead of unbounded queue latency.
+//!
 //! Handlers never touch the engine; the batcher never touches a read
 //! half.  Replies go through a per-connection `Arc<Mutex<TcpStream>>`
 //! write half (registry keyed by connection id), so a handler's inline
@@ -48,7 +53,7 @@ use crate::inference::{FixedPointNet, InferSession};
 use crate::serve::proto::{
     read_serve_frame, write_serve_frame, ServeFrame, ServeMsg, SERVE_PROTO_VERSION,
 };
-use crate::serve::queue::{AdmissionQueue, Pending};
+use crate::serve::queue::{AdmissionQueue, Pending, PushOutcome};
 use crate::util::json::Json;
 
 /// Accept-loop poll period and handler socket read timeout (one boundary
@@ -73,6 +78,10 @@ pub struct ServeOpts {
     /// Latency budget: a queued request waits at most this long before a
     /// partial batch flushes.
     pub max_wait: Duration,
+    /// Admission-queue depth bound (0 = unbounded): requests arriving
+    /// while `max_queue` are already queued get an explicit `Busy`
+    /// reject instead of piling up behind the batcher.
+    pub max_queue: usize,
     /// Engine threads for the batched forward.
     pub threads: usize,
 }
@@ -84,6 +93,7 @@ impl Default for ServeOpts {
             port_file: None,
             max_batch: 8,
             max_wait: Duration::from_micros(2000),
+            max_queue: 64,
             threads: 1,
         }
     }
@@ -98,6 +108,8 @@ pub struct ServeSummary {
     pub batches: u64,
     /// Requests refused with `Error{"draining"}`.
     pub rejected: u64,
+    /// Requests refused with `Busy` (queue at `max_queue` depth).
+    pub busy: u64,
     /// `batch_hist[n]` = batches of size `n` (index 0 unused).
     pub batch_hist: Vec<u64>,
     /// Always true on a normal exit (the only way out is a drain).
@@ -110,6 +122,7 @@ impl ServeSummary {
             ("requests", Json::Num(self.requests as f64)),
             ("batches", Json::Num(self.batches as f64)),
             ("rejected", Json::Num(self.rejected as f64)),
+            ("busy", Json::Num(self.busy as f64)),
             (
                 "batch_hist",
                 Json::Arr(
@@ -125,6 +138,7 @@ struct StatsInner {
     requests: u64,
     batches: u64,
     rejected: u64,
+    busy: u64,
     hist: Vec<u64>,
 }
 
@@ -153,9 +167,11 @@ pub fn run_server(
     listener.set_nonblocking(true)?;
     let addr = listener.local_addr()?;
     log::info!(
-        "serve: listening on {addr} (max_batch {}, max_wait {:?}, threads {})",
+        "serve: listening on {addr} (max_batch {}, max_wait {:?}, max_queue {}, \
+         threads {})",
         opts.max_batch,
         opts.max_wait,
+        opts.max_queue,
         opts.threads
     );
     if let Some(pf) = &opts.port_file {
@@ -167,13 +183,14 @@ pub fn run_server(
         let _ = tx.send(addr);
     }
 
-    let queue = AdmissionQueue::new(opts.max_batch, opts.max_wait);
+    let queue = AdmissionQueue::new(opts.max_batch, opts.max_wait, opts.max_queue);
     let shared = Shared {
         conns: Mutex::new(HashMap::new()),
         stats: Mutex::new(StatsInner {
             requests: 0,
             batches: 0,
             rejected: 0,
+            busy: 0,
             hist: vec![0; opts.max_batch + 1],
         }),
         done: AtomicBool::new(false),
@@ -234,14 +251,17 @@ pub fn run_server(
         requests: st.requests,
         batches: st.batches,
         rejected: st.rejected,
+        busy: st.busy,
         batch_hist: st.hist,
         drained: true,
     };
     log::info!(
-        "serve: drained cleanly ({} requests in {} batches, {} rejected)",
+        "serve: drained cleanly ({} requests in {} batches, {} rejected, \
+         {} busy)",
         summary.requests,
         summary.batches,
-        summary.rejected
+        summary.rejected,
+        summary.busy
     );
     Ok(summary)
 }
@@ -304,6 +324,7 @@ fn handle_conn(
                     classes: net.num_classes(),
                     max_batch: opts.max_batch,
                     max_wait_us: opts.max_wait.as_micros() as u64,
+                    max_queue: opts.max_queue,
                 };
                 if reply(&write_half, &msg).is_err() {
                     break;
@@ -325,11 +346,21 @@ fn handle_conn(
                     continue;
                 }
                 let p = Pending { conn, id, image, enqueued: Instant::now() };
-                if !queue.push(p) {
-                    shared.stats.lock().unwrap().rejected += 1;
-                    let msg = ServeMsg::Error { id: Some(id), reason: "draining".into() };
-                    if reply(&write_half, &msg).is_err() {
-                        break;
+                match queue.push(p) {
+                    PushOutcome::Admitted => {}
+                    PushOutcome::Busy => {
+                        shared.stats.lock().unwrap().busy += 1;
+                        if reply(&write_half, &ServeMsg::Busy { id }).is_err() {
+                            break;
+                        }
+                    }
+                    PushOutcome::Draining => {
+                        shared.stats.lock().unwrap().rejected += 1;
+                        let msg =
+                            ServeMsg::Error { id: Some(id), reason: "draining".into() };
+                        if reply(&write_half, &msg).is_err() {
+                            break;
+                        }
                     }
                 }
             }

@@ -19,6 +19,10 @@ pub struct TraceStats {
     pub requests: usize,
     /// Requests that got an `Error` reply or a transport failure.
     pub errors: usize,
+    /// Requests the server refused with `Busy` (admission queue full).
+    /// Expected behaviour under deliberate overload -- reported (with
+    /// `reject_rate`), never a gate violation.
+    pub rejected: usize,
     pub wall_s: f64,
     /// `requests / wall_s`.
     pub achieved_rps: f64,
@@ -44,6 +48,7 @@ impl TraceStats {
         latencies_us: &[f64],
         batch_ns: &[usize],
         errors: usize,
+        rejected: usize,
     ) -> TraceStats {
         let wall_s = wall.as_secs_f64().max(1e-9);
         let mut hist: Vec<(usize, u64)> = Vec::new();
@@ -63,6 +68,7 @@ impl TraceStats {
             name: name.to_string(),
             requests: latencies_us.len(),
             errors,
+            rejected,
             wall_s,
             achieved_rps: latencies_us.len() as f64 / wall_s,
             offered_rps,
@@ -75,11 +81,23 @@ impl TraceStats {
         }
     }
 
+    /// Fraction of attempted requests the server refused with `Busy`.
+    pub fn reject_rate(&self) -> f64 {
+        let attempted = self.requests + self.errors + self.rejected;
+        if attempted == 0 {
+            0.0
+        } else {
+            self.rejected as f64 / attempted as f64
+        }
+    }
+
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("name", Json::Str(self.name.clone())),
             ("requests", Json::from(self.requests)),
             ("errors", Json::from(self.errors)),
+            ("rejected", Json::from(self.rejected)),
+            ("reject_rate", Json::Num(self.reject_rate())),
             ("wall_s", Json::Num(self.wall_s)),
             ("achieved_rps", Json::Num(self.achieved_rps)),
             ("offered_rps", Json::Num(self.offered_rps)),
@@ -116,9 +134,12 @@ mod tests {
             &lats,
             &batches,
             3,
+            22,
         );
         assert_eq!(st.requests, 100);
         assert_eq!(st.errors, 3);
+        assert_eq!(st.rejected, 22);
+        assert!((st.reject_rate() - 22.0 / 125.0).abs() < 1e-12);
         assert_eq!(st.achieved_rps, 50.0);
         assert!(st.p50_us <= st.p95_us && st.p95_us <= st.p99_us);
         assert!((st.p99_us - 1000.0).abs() < 20.0, "p99 near the max");
@@ -135,10 +156,12 @@ mod tests {
             &[],
             &[],
             0,
+            0,
         );
         assert_eq!(st.requests, 0);
         assert_eq!(st.mean_batch, 0.0);
         assert!(st.achieved_rps.is_finite());
+        assert_eq!(st.reject_rate(), 0.0, "no attempts, no division by zero");
     }
 
     #[test]
@@ -150,9 +173,17 @@ mod tests {
             &[100.0, 200.0],
             &[2, 2],
             0,
+            5,
         );
         let j = st.to_json();
-        for key in ["achieved_rps", "p95_us", "mean_batch", "batch_hist"] {
+        for key in [
+            "achieved_rps",
+            "p95_us",
+            "mean_batch",
+            "batch_hist",
+            "rejected",
+            "reject_rate",
+        ] {
             assert!(j.opt(key).is_some(), "missing {key}");
         }
     }

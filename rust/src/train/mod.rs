@@ -325,6 +325,13 @@ impl NativeTrainer {
             last_stats: None,
         })
     }
+
+    /// Override the kernel facade of the session's net (see
+    /// [`NativeNet::set_kernels`]): a bench/test seam for scalar-vs-SIMD
+    /// comparisons; results are bit-identical for every ISA.
+    pub fn set_kernels(&mut self, kernels: &'static crate::inference::Kernels) {
+        self.net.set_kernels(kernels);
+    }
 }
 
 /// One layer's momentum + SGD update over its `[w, b]` tensor/velocity

@@ -10,9 +10,11 @@
 //! the compiled graphs).
 //!
 //! The heavy math reuses the PR 2 GEMM machinery, instantiated at f32
-//! via [`gemm::GemmScalar`]: the forward conv/fc matmuls run blocked
-//! im2col + panel-packed microkernel, and the input-gradient matmuls run
-//! the same microkernel against per-step-packed transposed weights.
+//! and dispatched through the runtime-selected [`Kernels`] facade: the
+//! forward conv/fc matmuls run blocked im2col + panel-packed microkernel
+//! (scalar reference or its bit-identical AVX2/NEON twin), and the
+//! input-gradient matmuls run the same microkernel against
+//! per-step-packed transposed weights.
 //! Weight gradients use an A-stationary rank-1 accumulation (patch rows
 //! are already materialised, so no second im2col pass is needed).
 //!
@@ -49,7 +51,7 @@
 use crate::error::{FxpError, Result};
 use crate::fixedpoint::vector::{quantize_slice, quantize_slice_counted};
 use crate::fixedpoint::{QFormat, RoundMode};
-use crate::inference::gemm;
+use crate::inference::kernels::Kernels;
 use crate::inference::packing::{self, PackedPanels};
 use crate::model::manifest::ArchSpec;
 use crate::model::params::ParamSet;
@@ -82,6 +84,10 @@ enum Stage {
 /// mask), pool argmax maps, and gradient planes.
 pub struct NativeNet {
     stages: Vec<Stage>,
+    /// the kernel set every f32 GEMM of this net dispatches through
+    /// (bit-identical to scalar by the kernel-layer parity contract, so
+    /// training numerics do not depend on the host ISA)
+    kernels: &'static Kernels,
     /// (h, w, c) per stage boundary; `shapes[0]` is the input plane.
     shapes: Vec<(usize, usize, usize)>,
     /// stage index of each weighted layer
@@ -255,6 +261,7 @@ impl NativeNet {
         let patch_stride = ROW_BLOCK * conv_k_max;
         Ok(NativeNet {
             stages,
+            kernels: Kernels::auto(),
             shapes,
             layer_stage,
             layer_dims,
@@ -313,6 +320,19 @@ impl NativeNet {
 
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// Override the kernel facade this net's GEMMs dispatch through
+    /// (default: [`Kernels::auto`]).  A performance knob only -- the
+    /// kernel layer's bit-parity contract makes every ISA compute
+    /// identical results -- exposed so benches and parity tests can
+    /// compare scalar and SIMD training in one process.
+    pub fn set_kernels(&mut self, kernels: &'static Kernels) {
+        self.kernels = kernels;
+    }
+
+    pub fn kernels(&self) -> &'static Kernels {
+        self.kernels
     }
 
     pub fn num_classes(&self) -> usize {
@@ -397,6 +417,7 @@ impl NativeNet {
         let last = self.num_layers - 1;
         let threads = self.threads;
         let patch_stride = self.patch_stride;
+        let kernels = self.kernels;
         {
             let NativeNet {
                 stages,
@@ -447,7 +468,7 @@ impl NativeNet {
                             patches,
                             |row0, out_chunk, patch| {
                                 conv_rows_gemm(
-                                    src, n, ih, iw, cin, pw, lb, row0,
+                                    kernels, src, n, ih, iw, cin, pw, lb, row0,
                                     out_chunk, patch,
                                 );
                             },
@@ -468,7 +489,7 @@ impl NativeNet {
                     }
                     Stage::Fc { li, k, nout } => {
                         let z = &mut zs[s][..n * nout];
-                        gemm::gemm_bias_f32(
+                        kernels.gemm_bias_f32(
                             &src[..n * k],
                             n,
                             k,
@@ -572,6 +593,7 @@ impl NativeNet {
         let last = self.num_layers - 1;
         let threads = self.threads;
         let patch_stride = self.patch_stride;
+        let kernels = self.kernels;
         let NativeNet {
             stages,
             shapes,
@@ -638,7 +660,7 @@ impl NativeNet {
                         );
                     }
                     if s > 0 {
-                        gemm::gemm_bias_f32(
+                        kernels.gemm_bias_f32(
                             dzb,
                             n,
                             nout,
@@ -682,6 +704,7 @@ impl NativeNet {
                     if s > 0 {
                         let in_len = n * ih * iw * ic;
                         conv_input_grads_sharded(
+                            kernels,
                             dzb,
                             n,
                             ih,
@@ -852,6 +875,7 @@ fn shard_gemm_rows<W>(
 /// each into the worker's scratch, GEMM with the fused bias.
 #[allow(clippy::too_many_arguments)]
 fn conv_rows_gemm(
+    kernels: &Kernels,
     src: &[f32],
     n: usize,
     h: usize,
@@ -871,7 +895,7 @@ fn conv_rows_gemm(
         let block = ROW_BLOCK.min(rows - r);
         let pb = &mut patch[..block * k];
         packing::im2col_rows(src, n, h, w, cin, row0 + r, block, pb);
-        gemm::gemm_bias_f32(
+        kernels.gemm_bias_f32(
             pb,
             block,
             k,
@@ -997,6 +1021,7 @@ fn conv_grads_striped(
 /// bit-identical for every thread count.
 #[allow(clippy::too_many_arguments)]
 fn conv_input_grads_sharded(
+    kernels: &Kernels,
     dz: &[f32],
     n: usize,
     h: usize,
@@ -1024,7 +1049,7 @@ fn conv_input_grads_sharded(
             let block = ROW_BLOCK.min(rows_w - r);
             let r0 = row_base + r;
             let dpb = &mut dp[..block * k];
-            gemm::gemm_bias_f32(
+            kernels.gemm_bias_f32(
                 &dz[r0 * cout..(r0 + block) * cout],
                 block,
                 cout,

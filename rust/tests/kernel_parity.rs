@@ -1,0 +1,298 @@
+//! Cross-ISA bit-parity for the runtime-dispatched kernel layer
+//! (`inference::kernels`): whatever `Kernels::detect()` finds on this
+//! host must agree with the scalar reference *bit for bit* --
+//!
+//! * raw integer GEMM over every panel storage (i32, and the narrow
+//!   i16/i8 pair panels the SIMD paths widen exactly), fuzzed over odd
+//!   shapes straddling the MR=4 / NR=8 tile edges;
+//! * the fused epilogues (`gemm_requant_relu`, `gemm_decode`);
+//! * the f32 GEMM (same per-element reduction order, never fused);
+//! * the nearest-half-up quantize pass (same f64 pipeline per lane,
+//!   including NaN and the saturation tally);
+//! * whole engines: `build_with_kernels(scalar)` vs
+//!   `build_with_kernels(auto)` logits over bit widths x thread counts.
+//!
+//! On a scalar-only host every comparison degenerates to scalar vs
+//! scalar and passes trivially; the CI kernel-matrix job additionally
+//! pins `FXP_KERNEL=scalar` vs auto across *processes* by byte-comparing
+//! sweep outputs.
+
+use fxpnet::bench::fixtures::int_engine_cell;
+use fxpnet::data::synth::Dataset;
+use fxpnet::fixedpoint::QFormat;
+use fxpnet::inference::kernels::gemm_pair_scalar;
+use fxpnet::inference::packing::{IntPanels, PackedPanels, PairPanels};
+use fxpnet::inference::{gemm, FixedPointNet, Isa, Kernels};
+use fxpnet::model::manifest::ArchSpec;
+use fxpnet::util::rng::Rng;
+use std::collections::BTreeMap;
+
+/// Shapes that straddle the microkernel tile edges: MR=4 row blocks
+/// (3/4/5), NR=8 column panels (7/8/9/17), and odd/even depths (the
+/// pair kernels consume k two at a time, so odd k exercises the
+/// guarded last pair).
+const ROWS: [usize; 5] = [1, 3, 4, 5, 9];
+const DEPTHS: [usize; 5] = [1, 7, 8, 9, 27];
+const COLS: [usize; 5] = [1, 7, 8, 9, 17];
+
+fn random_codes(rng: &mut Rng, len: usize, bits: u8) -> Vec<i32> {
+    let max = 1i64 << (bits - 1);
+    (0..len)
+        .map(|_| (rng.below((2 * max - 1) as usize) as i64 - (max - 1)) as i32)
+        .collect()
+}
+
+fn random_bias(rng: &mut Rng, n: usize) -> Vec<i64> {
+    (0..n).map(|_| rng.below(2001) as i64 - 1000).collect()
+}
+
+/// The oracle: naive triple loop in i64 (exact, order-free).
+fn naive(a: &[i32], rows: usize, k: usize, w: &[i32], n: usize, bias: &[i64]) -> Vec<i64> {
+    let mut out = vec![0i64; rows * n];
+    for r in 0..rows {
+        for j in 0..n {
+            let mut acc = bias[j];
+            for p in 0..k {
+                acc += a[r * k + p] as i64 * w[p * n + j] as i64;
+            }
+            out[r * n + j] = acc;
+        }
+    }
+    out
+}
+
+/// Fuzz the dispatched integer GEMM against both the naive oracle and
+/// the scalar facade, across shapes and operand widths that force each
+/// panel storage (i8, i16, i32) under SIMD.
+#[test]
+fn dispatched_int_gemm_is_bit_identical_across_tile_edges() {
+    let kd = Kernels::for_isa(Kernels::detect());
+    let ks = Kernels::for_isa(Isa::Scalar);
+    let mut rng = Rng::new(0xBEEF);
+    let mut cases = 0usize;
+    // (a_bits, w_bits) -> panel kind under SIMD: i8, i16, i32
+    for (a_bits, w_bits) in [(8u8, 8u8), (8, 12), (16, 12)] {
+        for rows in ROWS {
+            for k in DEPTHS {
+                for n in COLS {
+                    let a = random_codes(&mut rng, rows * k, a_bits);
+                    let w = random_codes(&mut rng, k * n, w_bits);
+                    let bias = random_bias(&mut rng, n);
+                    let want = naive(&a, rows, k, &w, n, &bias);
+
+                    let pw_s = ks.pack_int(&w, k, n, a_bits, w_bits);
+                    assert_eq!(pw_s.kind(), "i32", "scalar always packs i32");
+                    let mut scalar = vec![0i64; rows * n];
+                    ks.gemm_int(&a, rows, k, &pw_s, &bias, |i, acc| scalar[i] = acc);
+                    assert_eq!(scalar, want, "scalar facade vs naive oracle");
+
+                    let pw_d = kd.pack_int(&w, k, n, a_bits, w_bits);
+                    let mut got = vec![0i64; rows * n];
+                    kd.gemm_int(&a, rows, k, &pw_d, &bias, |i, acc| got[i] = acc);
+                    assert_eq!(
+                        got, want,
+                        "{} ({}) rows={rows} k={k} n={n} {a_bits}b x {w_bits}b",
+                        kd.name(),
+                        pw_d.kind(),
+                    );
+                    cases += 1;
+                }
+            }
+        }
+    }
+    assert_eq!(cases, 3 * ROWS.len() * DEPTHS.len() * COLS.len());
+}
+
+/// The narrow-panel scalar walk (`gemm_pair_scalar`) is itself an
+/// oracle-grade reference: pin it against naive on the same shape grid,
+/// and pin the dispatched kernel against an explicitly-built narrow
+/// panel (so the narrow SIMD paths are exercised even when `pack_int`
+/// would have chosen differently).
+#[test]
+fn narrow_pair_panels_match_naive_on_every_shape() {
+    let kd = Kernels::for_isa(Kernels::detect());
+    let mut rng = Rng::new(0xF00D);
+    for rows in ROWS {
+        for k in DEPTHS {
+            for n in COLS {
+                let a = random_codes(&mut rng, rows * k, 8);
+                let w = random_codes(&mut rng, k * n, 8);
+                let bias = random_bias(&mut rng, n);
+                let want = naive(&a, rows, k, &w, n, &bias);
+
+                let p16: PairPanels<i16> = PairPanels::pack(&w, k, n, 8, 8);
+                let mut got = vec![0i64; rows * n];
+                gemm_pair_scalar(&a, rows, k, &p16, &bias, |i, acc| got[i] = acc);
+                assert_eq!(got, want, "scalar i16 walk rows={rows} k={k} n={n}");
+
+                let mut got = vec![0i64; rows * n];
+                kd.gemm_int(&a, rows, k, &IntPanels::I16(p16), &bias, |i, acc| {
+                    got[i] = acc
+                });
+                assert_eq!(got, want, "{} i16 rows={rows} k={k} n={n}", kd.name());
+
+                let p8: PairPanels<i8> = PairPanels::pack(&w, k, n, 8, 8);
+                let mut got = vec![0i64; rows * n];
+                kd.gemm_int(&a, rows, k, &IntPanels::I8(p8), &bias, |i, acc| {
+                    got[i] = acc
+                });
+                assert_eq!(got, want, "{} i8 rows={rows} k={k} n={n}", kd.name());
+            }
+        }
+    }
+}
+
+/// The fused epilogues must agree too: requantize(+ReLU) to activation
+/// codes and decode-to-f32 logits, scalar facade vs detected facade.
+#[test]
+fn fused_epilogues_are_bit_identical() {
+    let kd = Kernels::for_isa(Kernels::detect());
+    let ks = Kernels::for_isa(Isa::Scalar);
+    let fmt = QFormat::new(8, 4).unwrap();
+    let acc_frac = 9;
+    let mut rng = Rng::new(0xCAFE);
+    for (rows, k, n) in [(1usize, 9usize, 7usize), (5, 27, 17), (8, 16, 8)] {
+        let a = random_codes(&mut rng, rows * k, 8);
+        let w = random_codes(&mut rng, k * n, 8);
+        let bias = random_bias(&mut rng, n);
+        let pw_s = ks.pack_int(&w, k, n, 8, 8);
+        let pw_d = kd.pack_int(&w, k, n, 8, 8);
+        for relu in [false, true] {
+            let mut want = vec![0i32; rows * n];
+            ks.gemm_requant_relu(&a, rows, k, &pw_s, &bias, acc_frac, fmt, relu, &mut want);
+            let mut got = vec![0i32; rows * n];
+            kd.gemm_requant_relu(&a, rows, k, &pw_d, &bias, acc_frac, fmt, relu, &mut got);
+            assert_eq!(got, want, "{} requant relu={relu} {rows}x{k}x{n}", kd.name());
+        }
+        let mut want = vec![0f32; rows * n];
+        ks.gemm_decode(&a, rows, k, &pw_s, &bias, acc_frac, &mut want);
+        let mut got = vec![0f32; rows * n];
+        kd.gemm_decode(&a, rows, k, &pw_d, &bias, acc_frac, &mut got);
+        let wb: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+        let gb: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(gb, wb, "{} decode {rows}x{k}x{n}", kd.name());
+    }
+}
+
+/// f32 GEMM: SIMD vectorizes across columns only, so every output
+/// element sees the scalar reduction order and rounds identically.
+#[test]
+fn f32_gemm_is_bit_identical_across_tile_edges() {
+    let kd = Kernels::for_isa(Kernels::detect());
+    let mut rng = Rng::new(0xD1CE);
+    for rows in ROWS {
+        for k in DEPTHS {
+            for n in COLS {
+                let a: Vec<f32> = (0..rows * k).map(|_| rng.normal() as f32).collect();
+                let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+                let bias: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+                let pw = PackedPanels::pack(&w, k, n);
+                let mut want = vec![0f32; rows * n];
+                gemm::gemm_bias_f32(&a, rows, k, &pw, &bias, &mut want);
+                let mut got = vec![0f32; rows * n];
+                kd.gemm_bias_f32(&a, rows, k, &pw, &bias, &mut got);
+                let wb: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+                let gb: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(gb, wb, "{} rows={rows} k={k} n={n}", kd.name());
+            }
+        }
+    }
+}
+
+fn small_arch() -> ArchSpec {
+    ArchSpec {
+        name: "kernel-parity-net".into(),
+        input: [8, 8, 3],
+        num_classes: 10,
+        num_layers: 2,
+        train_batch: 8,
+        eval_batch: 8,
+        layers: vec![("conv".into(), 8), ("pool".into(), 0), ("fc".into(), 10)],
+        params: vec![
+            ("l0.w".into(), vec![3, 3, 3, 8]),
+            ("l0.b".into(), vec![8]),
+            ("l1.w".into(), vec![4 * 4 * 8, 10]),
+            ("l1.b".into(), vec![10]),
+        ],
+        artifacts: BTreeMap::new(),
+    }
+}
+
+/// The whole-engine contract: a net built on the scalar facade and one
+/// built on the auto facade (same params, same quantization) produce
+/// bit-identical logits, across bit widths (4-bit cells keep i8 panels,
+/// 16-bit falls back to i32) and engine thread counts (sharding must
+/// not perturb the per-row kernels).
+#[test]
+fn engines_built_on_scalar_and_auto_kernels_agree_bit_for_bit() {
+    let spec = small_arch();
+    let data = Dataset::generate(9, 8, 8, 55);
+    let in_fmt = QFormat::new(16, 14).unwrap();
+    for &bits in &[4u8, 8, 16] {
+        let (params, nq) = int_engine_cell(&spec, bits, 700 + bits as u64).unwrap();
+        let net_s = FixedPointNet::build_with_kernels(
+            &spec,
+            &params,
+            &nq,
+            in_fmt,
+            Kernels::for_isa(Isa::Scalar),
+        )
+        .unwrap();
+        assert_eq!(net_s.kernels().isa(), Isa::Scalar);
+        let net_a =
+            FixedPointNet::build(&spec, &params, &nq, in_fmt).unwrap();
+        for &threads in &[1usize, 4] {
+            let want = net_s.forward_batch_threaded(&data.images, threads).unwrap();
+            let got = net_a.forward_batch_threaded(&data.images, threads).unwrap();
+            let wb: Vec<u32> = want.data().iter().map(|v| v.to_bits()).collect();
+            let gb: Vec<u32> = got.data().iter().map(|v| v.to_bits()).collect();
+            assert_eq!(
+                gb,
+                wb,
+                "bits={bits} threads={threads}: {} engine deviates from scalar",
+                net_a.kernels().name()
+            );
+        }
+    }
+}
+
+/// Quantize parity on adversarial values (NaN, infinities, signed
+/// zero, values exactly on the .5 rounding boundary and the clamp
+/// edges) -- plus the saturation tallies the training loop records.
+#[test]
+fn quantize_pass_parity_on_adversarial_values() {
+    use fxpnet::inference::kernels::quantize_nearest_scalar;
+    let kd = Kernels::for_isa(Kernels::detect());
+    for fmt in [
+        QFormat::new(8, 4).unwrap(),
+        QFormat::new(4, 2).unwrap(),
+        QFormat::new(16, 12).unwrap(),
+    ] {
+        let step = fmt.step();
+        let mut xs: Vec<f32> = vec![
+            f32::NAN,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            0.0,
+            -0.0,
+            step * 0.5,          // exactly on the round-half-up boundary
+            -step * 0.5,
+            step * 1.5,
+            (fmt.qmax() as f32 + 1.0) * step, // just past the clamp edge
+            (fmt.qmin() as f32 - 1.0) * step,
+            f32::MIN_POSITIVE,
+            -f32::MIN_POSITIVE,
+        ];
+        let mut rng = Rng::new(fmt.bits as u64);
+        xs.extend((0..509).map(|_| rng.uniform_in(-30.0, 30.0)));
+        let mut want = xs.clone();
+        let sat_want = quantize_nearest_scalar(&mut want, fmt);
+        let mut got = xs.clone();
+        let sat_got = kd.quantize_nearest(&mut got, fmt);
+        assert_eq!(sat_got, sat_want, "{} sat tally {fmt}", kd.name());
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            let same = g.to_bits() == w.to_bits() || (g.is_nan() && w.is_nan());
+            assert!(same, "{} {fmt} elem {i}: {g:?} vs {w:?}", kd.name());
+        }
+    }
+}

@@ -76,6 +76,15 @@ struct TestServer {
 
 impl TestServer {
     fn start(max_batch: usize, max_wait: Duration, threads: usize) -> TestServer {
+        TestServer::start_with_queue(max_batch, max_wait, threads, 0)
+    }
+
+    fn start_with_queue(
+        max_batch: usize,
+        max_wait: Duration,
+        threads: usize,
+        max_queue: usize,
+    ) -> TestServer {
         let net = fixture_net();
         let shutdown = Arc::new(AtomicBool::new(false));
         let flag = Arc::clone(&shutdown);
@@ -86,6 +95,7 @@ impl TestServer {
                 port_file: None,
                 max_batch,
                 max_wait,
+                max_queue,
                 threads,
             };
             run_server(net, &opts, &flag, Some(tx))
@@ -294,6 +304,45 @@ fn drain_answers_every_admitted_request_and_rejects_late_ones() {
         summary.batch_hist[n], 1,
         "summary histogram should show the one drain batch"
     );
+}
+
+/// Backpressure contract: with the admission queue bounded, overflow
+/// requests get an explicit `Busy{id}` reply (not an error, not a
+/// hangup), already-admitted requests are unaffected, and the summary
+/// counts the rejects separately from protocol errors.
+#[test]
+fn full_queue_replies_busy_and_admitted_requests_still_answer() {
+    // max_batch above the queue bound and a long wait budget: admitted
+    // requests provably sit in the queue, so the third push overflows
+    let srv =
+        TestServer::start_with_queue(16, Duration::from_secs(5), 1, 2);
+    let images = test_images(3, 33);
+
+    let mut conns: Vec<TcpStream> = (0..3).map(|_| connect(srv.addr)).collect();
+    for (i, c) in conns.iter_mut().enumerate().take(2) {
+        send(c, &ServeMsg::Infer { id: i as u64, image: images[i].clone() });
+    }
+    // let both handler threads admit before overflowing
+    std::thread::sleep(Duration::from_millis(300));
+    send(&mut conns[2], &ServeMsg::Infer { id: 2, image: images[2].clone() });
+    match recv(&mut conns[2]) {
+        ServeMsg::Busy { id } => assert_eq!(id, 2, "busy must echo the id"),
+        other => panic!("expected busy, got {other:?}"),
+    }
+
+    // the rejected client's connection survives: once the queue drains
+    // (here: via shutdown flush), admitted requests answer normally
+    srv.shutdown.store(true, Ordering::SeqCst);
+    for (i, c) in conns.iter_mut().enumerate().take(2) {
+        match recv(c) {
+            ServeMsg::Logits { id, .. } => assert_eq!(id, i as u64),
+            other => panic!("request {i}: {other:?}"),
+        }
+    }
+    let summary = srv.handle.join().unwrap().unwrap();
+    assert_eq!(summary.requests, 2);
+    assert_eq!(summary.busy, 1, "one busy reject in the summary");
+    assert_eq!(summary.rejected, 0, "busy is not a drain reject");
 }
 
 /// The codec-level malformed corpus from cluster_proto.rs, fired at the
