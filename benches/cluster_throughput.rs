@@ -70,8 +70,14 @@ struct BurnExec {
 }
 
 impl CellExec for BurnExec {
-    fn run(&mut self, job: &CellJob) -> fxpnet::Result<CellResult> {
-        burn_cell(job, self.n, self.rounds)
+    fn run(
+        &mut self,
+        job: &CellJob,
+    ) -> fxpnet::Result<(
+        CellResult,
+        Option<fxpnet::train::telemetry::TelemetrySummary>,
+    )> {
+        burn_cell(job, self.n, self.rounds).map(|r| (r, None))
     }
 }
 

@@ -16,7 +16,7 @@ use fxpnet::coordinator::calibrate;
 use fxpnet::coordinator::config::RunCfg;
 use fxpnet::coordinator::evaluator::evaluate;
 use fxpnet::coordinator::phases;
-use fxpnet::coordinator::regimes::{self, CellCtx};
+use fxpnet::coordinator::regimes::{self, CellCtx, CellEval};
 use fxpnet::coordinator::trainer::{upd_all, upd_single, Trainer};
 use fxpnet::data::loader::LoaderCfg;
 use fxpnet::data::synth::Dataset;
@@ -70,8 +70,8 @@ fn main() -> fxpnet::Result<()> {
     // --- vanilla -----------------------------------------------------------
     println!("vanilla 4w/4a fine-tuning ({} steps) ...", cfg.finetune_steps);
     match regimes::run_vanilla(&ctx, &base, w, a)? {
-        Some(ev) => println!("vanilla result: {ev}\n"),
-        None => println!("vanilla result: n/a (diverged)\n"),
+        (CellEval::Ok(ev), _) => println!("vanilla result: {ev}\n"),
+        _ => println!("vanilla result: n/a (diverged)\n"),
     }
 
     // --- Proposal 3, narrated ------------------------------------------------

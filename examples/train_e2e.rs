@@ -138,13 +138,15 @@ fn main() -> fxpnet::Result<()> {
     }
 
     // ---- 3. regimes: no-FT vs Proposal 3 --------------------------------
-    let noft = regimes::run_no_finetune(&ctx, &base, w8, a8)?.unwrap();
+    let noft = regimes::run_no_finetune(&ctx, &base, w8, a8)?
+        .ok()
+        .expect("no-fine-tune eval diverged");
     println!("8w/8a no fine-tune : {noft}");
 
     let p1net = regimes::train_float_act_net(&ctx, &base, w8)?
         .expect("float-act fine-tune diverged");
-    let p3 = regimes::run_prop3(&ctx, &p1net, w8, a8)?
-        .expect("proposal 3 diverged");
+    let (p3, _telemetry) = regimes::run_prop3(&ctx, &p1net, w8, a8)?;
+    let p3 = p3.ok().expect("proposal 3 diverged");
     println!("8w/8a Proposal 3   : {p3}");
 
     // ---- 4. integer-engine deployment check ----------------------------

@@ -2,6 +2,7 @@
 
 use crate::cli::{artifacts_dir, parse_shard, Args};
 use crate::cluster;
+use crate::coordinator::analytics::Analytics;
 use crate::coordinator::backend::{Backend, BackendSpec, SessionCfg};
 use crate::coordinator::calibrate;
 use crate::coordinator::config::RunCfg;
@@ -14,7 +15,7 @@ use crate::coordinator::regimes::Regime;
 use crate::coordinator::report;
 use crate::coordinator::shard::{self, LockOpts, SweepManifest};
 use crate::coordinator::trainer::{
-    run_session, run_session_with, upd_all, AbortPolicy, TrainSession,
+    run_session, run_session_with, upd_all, AbortOverlay, TrainSession,
 };
 use crate::data::loader::LoaderCfg;
 use crate::data::synth::Dataset;
@@ -40,6 +41,8 @@ pub fn dispatch(args: &Args) -> Result<i32> {
         "grid" => grid_cmd(args),
         "cluster" => cluster_cmd(args),
         "serve" => args.no_positionals().and_then(|()| serve_cmd(args)).map(ok),
+        "report" => report_cmd(args).map(ok),
+        "perf" => perf_cmd(args),
         "eval" => args.no_positionals().and_then(|()| eval_cmd(args)).map(ok),
         "infer" => args.no_positionals().and_then(|()| infer(args)).map(ok),
         "mismatch" => args.no_positionals().and_then(|()| mismatch(args)).map(ok),
@@ -91,6 +94,10 @@ fn run_cfg(args: &Args, threads_default: usize) -> Result<RunCfg> {
         topk: args.usize_or("topk", d.topk)?,
         max_loss: args.f32_or("max-loss", d.max_loss)?,
         early_abort: !args.has("no-early-abort"),
+        abort_overlay: args
+            .get("abort-policy")
+            .map(AbortOverlay::load)
+            .transpose()?,
         method,
         ..d
     })
@@ -288,7 +295,9 @@ fn train_cmd(args: &Args) -> Result<()> {
         seed: derive_seed(cfg.seed, "sgd-round", &[1]),
         threads: cfg.threads,
     })?;
-    let policy = cfg.early_abort.then(AbortPolicy::default);
+    // a single-cell train run is a vanilla fine-tune: an --abort-policy
+    // overlay's "vanilla" entry applies here, like a vanilla-regime cell
+    let policy = cfg.abort_policy("vanilla");
     let mut sink = args.get("stability-report").map(|_| TelemetryLog::default());
     let outc = run_session_with(
         &mut *tr,
@@ -300,7 +309,15 @@ fn train_cmd(args: &Args) -> Result<()> {
     // the telemetry stream is written even for runs that diverge or
     // abort -- those are exactly the runs worth inspecting
     if let (Some(path), Some(tlog)) = (args.get("stability-report"), &sink) {
-        std::fs::write(path, tlog.to_json().to_string())?;
+        let wrapped = crate::util::json::Json::obj(vec![
+            (
+                "report_version",
+                crate::util::json::Json::from(report::REPORT_VERSION),
+            ),
+            ("kind", crate::util::json::Json::Str("train-telemetry".into())),
+            ("steps", tlog.to_json()),
+        ]);
+        std::fs::write(path, wrapped.to_string())?;
         println!("wrote stability report {path} ({} steps)", tlog.len());
     }
     for (s, l) in &outc.history {
@@ -399,13 +416,21 @@ fn sweep_opts(
 /// covers its own cells).
 fn finish_sweep(
     sweep: &SweepOutcome,
+    base_seed: u64,
     out_dir: &str,
     topk: usize,
     stability: Option<&str>,
 ) -> Result<()> {
     println!("{}", sweep.grid.render(topk));
     if let Some(path) = stability {
-        report::save_stability_report(&sweep.grid, path)?;
+        report::save_stability_report(
+            &sweep.grid.arch,
+            sweep.grid.regime,
+            base_seed,
+            &sweep.cells,
+            &sweep.telemetry,
+            path,
+        )?;
         println!("wrote stability report {path}");
     }
     log::info!(
@@ -459,7 +484,13 @@ fn grid_run(args: &Args) -> Result<()> {
             |_wid| Ok(()),
             |_, job| grid::synthetic_cell(job),
         )?;
-        return finish_sweep(&sweep, &out_dir, cfg.topk, args.get("stability-report"));
+        return finish_sweep(
+            &sweep,
+            cfg.seed,
+            &out_dir,
+            cfg.topk,
+            args.get("stability-report"),
+        );
     }
 
     let spec = backend_spec(args)?;
@@ -482,10 +513,17 @@ fn grid_run(args: &Args) -> Result<()> {
             eval_set,
             cfg.clone(),
         );
-        let result = runner.run_grid(regime)?;
+        let (result, telemetry) = runner.run_grid_full(regime)?;
         println!("{}", result.render(cfg.topk));
         if let Some(path) = args.get("stability-report") {
-            report::save_stability_report(&result, path)?;
+            report::save_stability_report(
+                &result.arch,
+                result.regime,
+                cfg.seed,
+                &report::grid_cells(&result),
+                &telemetry,
+                path,
+            )?;
             println!("wrote stability report {path}");
         }
         report::save_grid(&result, out_dir, cfg.topk)?;
@@ -503,7 +541,13 @@ fn grid_run(args: &Args) -> Result<()> {
         cfg: cfg.clone(),
     };
     let sweep = runner.run_sweep(regime, &opts)?;
-    finish_sweep(&sweep, &out_dir, cfg.topk, args.get("stability-report"))
+    finish_sweep(
+        &sweep,
+        cfg.seed,
+        &out_dir,
+        cfg.topk,
+        args.get("stability-report"),
+    )
 }
 
 /// `fxpnet grid plan`: print/write the sweep manifest and per-shard
@@ -572,7 +616,17 @@ fn grid_merge(args: &Args) -> Result<i32> {
         print!("{}", merged.to_grid().render(topk));
     }
     if let Some(path) = args.get("stability-report") {
-        report::save_stability_report(&merged.to_grid(), path)?;
+        // merged shard caches carry no telemetry digests (the cache
+        // schema is status-only); the per-shard stability reports are the
+        // telemetry-bearing inputs for `fxpnet report`
+        report::save_stability_report(
+            &merged.arch,
+            merged.regime,
+            merged.base_seed,
+            &merged.cells,
+            &std::collections::BTreeMap::new(),
+            path,
+        )?;
         eprintln!("wrote stability report {path}");
     }
     if args.has("check") && !merged.is_complete() {
@@ -698,7 +752,14 @@ fn cluster_coordinator(args: &Args) -> Result<i32> {
         s.workers
     );
     if let Some(path) = args.get("stability-report") {
-        report::save_stability_report(&outcome.grid, path)?;
+        report::save_stability_report(
+            &arch,
+            regime,
+            cfg.seed,
+            &outcome.cells,
+            &outcome.telemetry,
+            path,
+        )?;
         println!("wrote stability report {path}");
     }
     if s.complete {
@@ -726,8 +787,14 @@ struct BackendExec {
 }
 
 impl cluster::CellExec for BackendExec {
-    fn run(&mut self, job: &grid::CellJob) -> Result<crate::coordinator::regimes::CellResult> {
-        self.runner.run_cell_job(
+    fn run(
+        &mut self,
+        job: &grid::CellJob,
+    ) -> Result<(
+        crate::coordinator::regimes::CellResult,
+        Option<crate::train::telemetry::TelemetrySummary>,
+    )> {
+        self.runner.run_cell_job_full(
             self.backend.as_ref(),
             &mut self.p1,
             self.p1_dir.as_deref(),
@@ -834,6 +901,227 @@ fn cluster_worker(args: &Args) -> Result<()> {
         report.sweep_complete
     );
     Ok(())
+}
+
+/// `fxpnet report <input.json>...`: grid-wide stability analytics.
+/// Inputs are merged v4 cell caches and/or v2 per-cell stability
+/// reports, auto-detected per file; the output (table and `--json`
+/// bytes) is a pure function of the union of cells, so any shard split
+/// / thread count / grid-vs-cluster provenance covering the same sweeps
+/// produces byte-identical analytics.
+fn report_cmd(args: &Args) -> Result<()> {
+    let pos = args.positionals();
+    if pos.is_empty() {
+        return Err(FxpError::config(
+            "usage: fxpnet report <cache.json|stability.json>... \
+             [--json F] [--suggest-thresholds F]",
+        ));
+    }
+    let mut analytics = Analytics::new();
+    for p in pos {
+        analytics.ingest_file(p)?;
+    }
+    print!("{}", analytics.render());
+    if let Some(path) = args.get("json") {
+        std::fs::write(path, analytics.to_json().to_string())?;
+        eprintln!("wrote analytics JSON {path}");
+    }
+    if let Some(path) = args.get("suggest-thresholds") {
+        let overlay = analytics.suggest_thresholds();
+        std::fs::write(path, overlay.to_json().to_string())?;
+        eprintln!(
+            "wrote learned abort-policy overlay {path} ({} regime \
+             entr{})",
+            overlay.regimes.len(),
+            if overlay.regimes.len() == 1 { "y" } else { "ies" }
+        );
+    }
+    Ok(())
+}
+
+/// One `fxpnet perf` comparison appended to the gate table; a violation
+/// is also pushed onto `violations` for the final error listing.
+fn perf_gate(
+    table: &mut crate::bench::Table,
+    violations: &mut Vec<String>,
+    file: &str,
+    name: &str,
+    measured: f64,
+    bound: f64,
+    ceiling: bool,
+) {
+    let ok = if ceiling { measured <= bound } else { measured >= bound };
+    table.row(vec![
+        file.to_string(),
+        name.to_string(),
+        format!("{measured:.3}"),
+        format!("{} {bound:.3}", if ceiling { "<=" } else { ">=" }),
+        if ok { "ok" } else { "FAIL" }.to_string(),
+    ]);
+    if !ok {
+        violations.push(format!(
+            "{file}: {name} = {measured:.3} violates the baseline \
+             {} {bound:.3}",
+            if ceiling { "cap" } else { "floor" }
+        ));
+    }
+}
+
+/// `fxpnet perf <BENCH.json>...`: the consolidated perf-trajectory
+/// gate.  Each measured report (`BENCH_engine.json`,
+/// `BENCH_train.json`, `BENCH_serve.json`) is diffed against the
+/// committed ratio floors in `--baseline` (default
+/// `BENCH_baseline.json`); every comparison lands in one table, and any
+/// violation names its key and exits non-zero.  Baseline sections or
+/// measured keys that are absent are skipped with a note (e.g. the
+/// threaded-step gate on a single-core host).
+fn perf_cmd(args: &Args) -> Result<i32> {
+    use crate::util::json::Json;
+    let pos = args.positionals();
+    if pos.is_empty() {
+        return Err(FxpError::config(
+            "usage: fxpnet perf <BENCH.json>... [--baseline F]",
+        ));
+    }
+    let baseline_path = args.get_or("baseline", "BENCH_baseline.json");
+    let baseline = Json::parse(&std::fs::read_to_string(&baseline_path).map_err(
+        |e| FxpError::config(format!("--baseline {baseline_path}: {e}")),
+    )?)?;
+    // a floor from `--baseline`, or None (skip + note) when the section
+    // or key is not committed
+    let bound = |section: &str, key: &str| -> Option<f64> {
+        match baseline.opt(section).map(|s| s.get(key).and_then(Json::as_f64)) {
+            Some(Ok(v)) => Some(v),
+            Some(Err(_)) | None => {
+                eprintln!(
+                    "note: baseline has no {section}.{key}; gate skipped"
+                );
+                None
+            }
+        }
+    };
+    let mut table = crate::bench::Table::new(
+        "perf-trajectory gates (measured ratios vs committed baseline)",
+        &["report", "gate", "measured", "bound", "verdict"],
+    );
+    let mut violations = Vec::new();
+    for p in pos {
+        let j = Json::parse(&std::fs::read_to_string(p).map_err(|e| {
+            FxpError::config(format!("perf input {p}: {e}"))
+        })?)?;
+        let kind = j
+            .opt("bench")
+            .map(|b| b.as_str())
+            .transpose()?
+            .map(str::to_string)
+            .or_else(|| j.opt("gates").map(|_| "serve".to_string()));
+        match kind.as_deref() {
+            Some("engine_throughput") => {
+                let isa = j.get("kernel_isa")?.as_str()?.to_string();
+                let key = if isa == "scalar" {
+                    "min_speedup_gemm_1t"
+                } else {
+                    "min_speedup_gemm_1t_simd"
+                };
+                if let Some(b) = bound("engine_throughput", key) {
+                    let m = j.get("speedup_gemm_1t")?.as_f64()?;
+                    perf_gate(&mut table, &mut violations, p, key, m, b, false);
+                }
+                if isa != "scalar" {
+                    if let Some(b) = bound("engine_throughput", "min_simd_speedup_q8") {
+                        let m = j.get("simd_speedup_q8")?.as_f64()?;
+                        perf_gate(
+                            &mut table,
+                            &mut violations,
+                            p,
+                            "min_simd_speedup_q8",
+                            m,
+                            b,
+                            false,
+                        );
+                    }
+                }
+            }
+            Some("train_throughput") => {
+                let isa = j.get("kernel_isa")?.as_str()?.to_string();
+                if j.get("threads")?.as_usize()? > 1 {
+                    if let Some(b) = bound("train_throughput", "min_threaded_step_speedup") {
+                        let m = j.get("speedup_threaded")?.as_f64()?;
+                        perf_gate(
+                            &mut table,
+                            &mut violations,
+                            p,
+                            "min_threaded_step_speedup",
+                            m,
+                            b,
+                            false,
+                        );
+                    }
+                } else {
+                    eprintln!(
+                        "note: {p}: single-threaded run; \
+                         min_threaded_step_speedup gate skipped"
+                    );
+                }
+                if isa != "scalar" {
+                    if let Some(b) = bound("train_throughput", "min_simd_step_speedup") {
+                        let m = j.get("simd_step_speedup")?.as_f64()?;
+                        perf_gate(
+                            &mut table,
+                            &mut violations,
+                            p,
+                            "min_simd_step_speedup",
+                            m,
+                            b,
+                            false,
+                        );
+                    }
+                }
+            }
+            Some("serve") => {
+                let gates = j.get("gates")?;
+                for (measured_key, bound_key, ceiling) in [
+                    ("p95_ratio_uniform", "max_p95_ratio_uniform", true),
+                    ("throughput_ratio_bursty", "min_throughput_ratio_bursty", false),
+                ] {
+                    let Some(m) = gates.opt(measured_key) else {
+                        eprintln!(
+                            "note: {p}: no measured {measured_key} (trace \
+                             not replayed); gate skipped"
+                        );
+                        continue;
+                    };
+                    if let Some(b) = bound("serve", bound_key) {
+                        perf_gate(
+                            &mut table,
+                            &mut violations,
+                            p,
+                            bound_key,
+                            m.as_f64()?,
+                            b,
+                            ceiling,
+                        );
+                    }
+                }
+            }
+            _ => {
+                return Err(FxpError::config(format!(
+                    "perf input {p} is not a recognized bench report \
+                     (expected a 'bench' key of engine_throughput / \
+                     train_throughput, or a serve report with 'gates')"
+                )));
+            }
+        }
+    }
+    print!("{}", table.render());
+    if violations.is_empty() {
+        Ok(0)
+    } else {
+        Err(FxpError::config(format!(
+            "perf gates failed:\n  {}",
+            violations.join("\n  ")
+        )))
+    }
 }
 
 /// `fxpnet serve`: the micro-batching inference daemon, or (with

@@ -297,6 +297,31 @@ COMMANDS
              [--assert]         enforce the `serve` ratio gates from
                                 BENCH_baseline.json (FXP_BENCH_ASSERT=1
                                 does the same; violations exit non-zero)
+  report     grid-wide stability analytics over finished sweeps:
+             fxpnet report <cache.json|stability.json>... [flags]
+             Inputs auto-detect per file (v4 cell cache vs v2 stability
+             report written by --stability-report); unversioned or
+             version-mismatched reports are refused.  The table and
+             --json bytes are a pure function of the union of cells, so
+             any --threads / --shard / grid-vs-cluster provenance
+             covering the same sweeps reports byte-identically.
+             [--json F]      write the analytics JSON
+             [--suggest-thresholds F]
+                             fit per-regime abort thresholds separating
+                             converged from doomed cells (deterministic
+                             closed-form, no RNG) and write an
+                             abort-policy overlay for --abort-policy; a
+                             policy learned from a sweep never aborts a
+                             cell that converged in that sweep
+  perf       the consolidated perf-trajectory gate:
+             fxpnet perf <BENCH.json>... [--baseline F]
+             Diff each measured bench report (BENCH_engine.json,
+             BENCH_train.json, BENCH_serve.json) against the committed
+             ratio floors (--baseline, default BENCH_baseline.json);
+             every comparison lands in one table and any violated key
+             exits non-zero.  Absent baseline sections or unmeasured
+             keys (e.g. the threaded gate on one core) are skipped with
+             a note
   eval       evaluate a checkpoint at one grid cell
              --arch A --ckpt F --w {4|8|16|float} --a {4|8|16|float}
   infer      pure-integer inference + parity vs the XLA path
@@ -323,6 +348,12 @@ COMMON FLAGS
                     parallel across --workers)
   --artifacts DIR   artifact directory (default: ./artifacts or
                     $FXPNET_ARTIFACTS)
+  --abort-policy F  abort-threshold overlay JSON (e.g. written by
+                    `fxpnet report --suggest-thresholds`): per-regime
+                    early-abort thresholds for train/grid/cluster runs.
+                    Ignored under --no-early-abort; cluster roles fold
+                    the resolved thresholds into the sweep fingerprint,
+                    so coordinator and workers must agree on it
 ";
 
 /// Resolve the artifacts directory.

@@ -32,7 +32,7 @@
 //!
 //! [`CellCache`]: crate::coordinator::report::CellCache
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::net::{TcpListener, TcpStream};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -47,6 +47,7 @@ use crate::coordinator::report::{CellCache, CACHE_VERSION};
 use crate::coordinator::shard::{self, LockOpts, ShardedCache};
 use crate::error::{FxpError, Result};
 use crate::quant::policy::WidthSpec;
+use crate::train::telemetry::TelemetrySummary;
 use crate::util::json::Json;
 
 /// How often handler threads tick their sockets (read timeout) and the
@@ -147,6 +148,13 @@ impl ClusterSummary {
 pub struct ClusterOutcome {
     pub grid: GridResult,
     pub summary: ClusterSummary,
+    /// every recorded cell keyed by cache cell key (drained-away cells
+    /// absent) -- the stability report's input, same shape as
+    /// `SweepOutcome::cells`
+    pub cells: BTreeMap<String, CellEval>,
+    /// telemetry digests of cells computed this run (cached pre-fills
+    /// carry none), keyed like `cells`
+    pub telemetry: BTreeMap<String, TelemetrySummary>,
 }
 
 /// A cell awaiting (re-)dispatch.
@@ -175,6 +183,8 @@ struct Shared {
     /// flat -> attempt currently in flight
     inflight: HashMap<usize, usize>,
     done: HashMap<usize, CellResult>,
+    /// flat -> stability digest of cells computed this run
+    telemetry: HashMap<usize, TelemetrySummary>,
     cache: ShardedCache,
     draining: bool,
     fatal: Option<String>,
@@ -224,9 +234,16 @@ impl Shared {
         });
     }
 
-    /// Record one result.  Duplicates must bit-match; first copies are
-    /// cached immediately so a coordinator crash never loses them.
-    fn record(&mut self, flat: usize, attempt: usize, eval: CellEval) {
+    /// Record one result.  Duplicates must bit-match (and their
+    /// telemetry digests byte-match); first copies are cached
+    /// immediately so a coordinator crash never loses them.
+    fn record(
+        &mut self,
+        flat: usize,
+        attempt: usize,
+        eval: CellEval,
+        telemetry: Option<TelemetrySummary>,
+    ) {
         self.inflight.remove(&flat);
         if let Some(prev) = self.done.get(&flat) {
             if shard::cells_bit_equal(prev, &eval) {
@@ -235,6 +252,25 @@ impl Shared {
                     "duplicate result for cell flat={flat} (attempt {attempt}) \
                      bit-matches the recorded copy"
                 );
+                match (self.telemetry.get(&flat), telemetry) {
+                    (Some(p), Some(t))
+                        if p.to_json().to_string()
+                            != t.to_json().to_string() =>
+                    {
+                        self.set_fatal(format!(
+                            "duplicate result for cell flat={flat} ({}) \
+                             bit-matches but its telemetry digest differs; \
+                             per-cell determinism is broken",
+                            CellCache::key(&self.jobs[flat])
+                        ));
+                    }
+                    // a cache-prefilled cell has no digest; a late
+                    // duplicate's is as good as a first copy's
+                    (None, Some(t)) => {
+                        self.telemetry.insert(flat, t);
+                    }
+                    _ => {}
+                }
             } else {
                 self.set_fatal(format!(
                     "duplicate result for cell flat={flat} ({}) does NOT \
@@ -246,6 +282,9 @@ impl Shared {
             return;
         }
         self.done.insert(flat, eval);
+        if let Some(t) = telemetry {
+            self.telemetry.insert(flat, t);
+        }
         self.stats.computed += 1;
         self.cache.put(&self.jobs[flat], &eval);
         if let Err(e) = self.cache.save() {
@@ -330,6 +369,7 @@ pub fn run_coordinator(
         pending,
         inflight: HashMap::new(),
         done,
+        telemetry: HashMap::new(),
         cache,
         draining: false,
         fatal: None,
@@ -419,12 +459,21 @@ pub fn run_coordinator(
     let w_axis = WidthSpec::paper_axis().to_vec();
     let a_axis = WidthSpec::paper_axis().to_vec();
     let mut outcomes = Vec::with_capacity(a_axis.len());
+    let mut cells = BTreeMap::new();
+    let mut telemetry = BTreeMap::new();
     for (ai, &a) in a_axis.iter().enumerate() {
         let mut row = Vec::with_capacity(w_axis.len());
         for (wi, &w) in w_axis.iter().enumerate() {
             let flat = ai * w_axis.len() + wi;
-            let eval = sh.done.get(&flat).copied().unwrap_or(CellEval::Na);
-            row.push(CellOutcome { w, a, eval });
+            let known = sh.done.get(&flat).copied();
+            if let Some(eval) = known {
+                let key = CellCache::key(&sh.jobs[flat]);
+                cells.insert(key.clone(), eval);
+                if let Some(t) = sh.telemetry.get(&flat) {
+                    telemetry.insert(key, t.clone());
+                }
+            }
+            row.push(CellOutcome { w, a, eval: known.unwrap_or(CellEval::Na) });
         }
         outcomes.push(row);
     }
@@ -437,6 +486,8 @@ pub fn run_coordinator(
             outcomes,
         },
         summary,
+        cells,
+        telemetry,
     })
 }
 
@@ -607,7 +658,7 @@ fn handle_conn(
                     holding = None;
                 }
             }
-            Ok(Frame::Msg(Msg::Result { flat, key, attempt, eval })) => {
+            Ok(Frame::Msg(Msg::Result { flat, key, attempt, eval, telemetry })) => {
                 clock.touch();
                 let mut sh = shared.lock().unwrap();
                 let expect = sh
@@ -622,7 +673,7 @@ fn handle_conn(
                     ));
                     return;
                 }
-                sh.record(flat, attempt, eval);
+                sh.record(flat, attempt, eval, telemetry);
                 holding = None;
             }
             Ok(Frame::Msg(Msg::Fatal { reason })) => {
@@ -670,6 +721,7 @@ mod tests {
             pending: Vec::new(),
             inflight: HashMap::new(),
             done: HashMap::new(),
+            telemetry: HashMap::new(),
             cache,
             draining: false,
             fatal: None,
@@ -728,6 +780,7 @@ mod tests {
             pending: Vec::new(),
             inflight: HashMap::new(),
             done: HashMap::new(),
+            telemetry: HashMap::new(),
             cache,
             draining: false,
             fatal: None,
@@ -739,11 +792,11 @@ mod tests {
             top5_err: 0.1,
             mean_loss: 1.5,
         });
-        sh.record(0, 1, ok);
+        sh.record(0, 1, ok, None);
         assert_eq!(sh.stats.computed, 1);
 
         // bit-identical duplicate: counted, harmless
-        sh.record(0, 2, ok);
+        sh.record(0, 2, ok, None);
         assert_eq!(sh.stats.duplicates, 1);
         assert!(sh.fatal.is_none());
 
@@ -754,7 +807,7 @@ mod tests {
             top5_err: 0.1,
             mean_loss: 1.5,
         });
-        sh.record(0, 3, skewed);
+        sh.record(0, 3, skewed, None);
         assert!(sh.fatal.as_deref().unwrap().contains("bit-match"));
         let _ = std::fs::remove_dir_all(&dir);
     }

@@ -90,6 +90,21 @@ pub fn sweep_fingerprint(
             cfg.early_abort as u64,
         ],
     );
+    // the resolved abort thresholds shape which cells end "aborted" vs
+    // burn their full budget, so two processes disagreeing on an
+    // `--abort-policy` overlay must not share a sweep.  One word per
+    // regime entry keeps the fold order deterministic (BTreeMap).
+    if cfg.early_abort {
+        if let Some(overlay) = &cfg.abort_overlay {
+            if let Some(p) = &overlay.default {
+                h = derive_seed(h, "abort-default", &p.fingerprint_words());
+            }
+            for (tag, p) in &overlay.regimes {
+                h = fold_str(h, "abort-regime", tag);
+                h = derive_seed(h, "abort-policy", &p.fingerprint_words());
+            }
+        }
+    }
     h
 }
 
@@ -158,6 +173,26 @@ mod tests {
                 42,
                 true,
                 &RunCfg { early_abort: false, ..RunCfg::smoke() },
+            ),
+            sweep_fingerprint(
+                "tiny",
+                Regime::Vanilla,
+                42,
+                true,
+                &RunCfg {
+                    abort_overlay: Some({
+                        use crate::coordinator::trainer::{
+                            AbortOverlay, AbortPolicy,
+                        };
+                        let mut o = AbortOverlay::default();
+                        o.regimes.insert(
+                            "vanilla".into(),
+                            AbortPolicy { window: 9, ..Default::default() },
+                        );
+                        o
+                    }),
+                    ..RunCfg::smoke()
+                },
             ),
         ];
         for v in variants {

@@ -42,13 +42,17 @@ use crate::coordinator::regimes::CellEval;
 use crate::coordinator::report::{cell_eval_from_json, cell_eval_to_json};
 use crate::error::{FxpError, Result};
 use crate::netio::{self, JsonFrame};
+use crate::train::telemetry::TelemetrySummary;
 use crate::util::json::Json;
 
 pub use crate::netio::MAX_FRAME;
 
 /// Protocol revision; bumped on any incompatible message change.  A
-/// mismatch is rejected at handshake.
-pub const PROTO_VERSION: usize = 1;
+/// mismatch is rejected at handshake.  v2: `Result` carries the cell's
+/// optional telemetry digest (stability analytics) -- a v1 peer would
+/// silently drop it, losing the telemetry union's determinism, so the
+/// handshake refuses the pairing instead.
+pub const PROTO_VERSION: usize = 2;
 
 /// One protocol message.
 #[derive(Clone, Debug, PartialEq)]
@@ -82,8 +86,18 @@ pub enum Msg {
     /// No more work ever: sweep complete, or the coordinator is
     /// draining.  The worker disconnects.
     Drain { complete: bool },
-    /// A computed cell.
-    Result { flat: usize, key: String, attempt: usize, eval: CellEval },
+    /// A computed cell.  `telemetry` is the run's stability digest
+    /// (`None` for evaluation-only regimes and synthetic executors); it
+    /// rides the wire in [`TelemetrySummary::to_json`]'s byte-stable
+    /// shape so a cluster sweep's stability report stays byte-identical
+    /// to a single-process reference.
+    Result {
+        flat: usize,
+        key: String,
+        attempt: usize,
+        eval: CellEval,
+        telemetry: Option<TelemetrySummary>,
+    },
     /// Liveness signal (sent from a side thread even mid-cell).
     Heartbeat,
     /// Unrecoverable sweep error (e.g. a bit-mismatched duplicate); the
@@ -145,15 +159,21 @@ impl Msg {
                 ("type", Json::from("drain")),
                 ("complete", Json::from(*complete)),
             ]),
-            Msg::Result { flat, key, attempt, eval } => Json::obj(vec![
-                ("type", Json::from("result")),
-                ("flat", Json::from(*flat)),
-                ("key", Json::Str(key.clone())),
-                ("attempt", Json::from(*attempt)),
-                // the cache's own cell encoding: non-finite evals
-                // flatten to "na" exactly like CellCache::put would
-                ("cell", cell_eval_to_json(eval)),
-            ]),
+            Msg::Result { flat, key, attempt, eval, telemetry } => {
+                let mut pairs = vec![
+                    ("type", Json::from("result")),
+                    ("flat", Json::from(*flat)),
+                    ("key", Json::Str(key.clone())),
+                    ("attempt", Json::from(*attempt)),
+                    // the cache's own cell encoding: non-finite evals
+                    // flatten to "na" exactly like CellCache::put would
+                    ("cell", cell_eval_to_json(eval)),
+                ];
+                if let Some(t) = telemetry {
+                    pairs.push(("telemetry", t.to_json()));
+                }
+                Json::obj(pairs)
+            }
             Msg::Heartbeat => Json::obj(vec![("type", Json::from("heartbeat"))]),
             Msg::Fatal { reason } => Json::obj(vec![
                 ("type", Json::from("fatal")),
@@ -214,6 +234,10 @@ impl Msg {
                 key: j.get("key")?.as_str()?.to_string(),
                 attempt: j.get("attempt")?.as_usize()?,
                 eval: cell_eval_from_json("result", j.get("cell")?)?,
+                telemetry: match j.opt("telemetry") {
+                    Some(t) => Some(TelemetrySummary::from_json(t)?),
+                    None => None,
+                },
             },
             "heartbeat" => Msg::Heartbeat,
             "fatal" => Msg::Fatal {
@@ -291,6 +315,29 @@ mod tests {
                     top5_err: 1.0 / 3.0,
                     mean_loss: 1e-17,
                 }),
+                telemetry: None,
+            },
+            Msg::Result {
+                flat: 3,
+                key: "w=4,a=8".into(),
+                attempt: 1,
+                eval: CellEval::Na,
+                telemetry: Some(TelemetrySummary {
+                    steps: 12,
+                    loss_start: 2.25,
+                    loss_peak: 3.5,
+                    loss_final: 3.5,
+                    sat_final: 0.125,
+                    sat_peak: 0.25,
+                    ratio_min: Some(1.5e-4),
+                    ratio_final: None,
+                    windows: vec![crate::train::telemetry::WindowSummary {
+                        start_step: 1,
+                        end_step: 12,
+                        count: 12,
+                        ratio_q: vec![1.5e-4, 2e-4, 3e-4, 4e-4, 5e-4],
+                    }],
+                }),
             },
             Msg::Hello {
                 proto: PROTO_VERSION,
@@ -320,7 +367,13 @@ mod tests {
             CellEval::Na,
             CellEval::Aborted { reason: AbortReason::NanLoss, step: 37 },
         ] {
-            let m = Msg::Result { flat: 0, key: "w=4,a=4".into(), attempt: 1, eval };
+            let m = Msg::Result {
+                flat: 0,
+                key: "w=4,a=4".into(),
+                attempt: 1,
+                eval,
+                telemetry: None,
+            };
             assert_eq!(round_trip(&m), m);
         }
     }
@@ -337,6 +390,7 @@ mod tests {
                 top5_err: 0.1,
                 mean_loss: 1.0,
             }),
+            telemetry: None,
         };
         match round_trip(&m) {
             Msg::Result { eval: CellEval::Na, .. } => {}

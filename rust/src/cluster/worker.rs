@@ -27,11 +27,18 @@ use crate::coordinator::regimes::{CellEval, CellResult, Regime};
 use crate::coordinator::report::{CellCache, CACHE_VERSION};
 use crate::coordinator::shard;
 use crate::error::{FxpError, Result};
+use crate::train::telemetry::TelemetrySummary;
 
 /// One cell executor.  Implementations: synthetic (tests/CI) and the
-/// real backend runner in the CLI.
+/// real backend runner in the CLI.  Alongside the result, a run returns
+/// the cell's stability-telemetry digest (`None` for evaluation-only
+/// regimes and synthetic cells), which rides back to the coordinator in
+/// `Msg::Result`.
 pub trait CellExec {
-    fn run(&mut self, job: &CellJob) -> Result<CellResult>;
+    fn run(
+        &mut self,
+        job: &CellJob,
+    ) -> Result<(CellResult, Option<TelemetrySummary>)>;
 }
 
 /// The engine-free executor (`--synthetic`), same cells as
@@ -39,8 +46,11 @@ pub trait CellExec {
 pub struct SyntheticExec;
 
 impl CellExec for SyntheticExec {
-    fn run(&mut self, job: &CellJob) -> Result<CellResult> {
-        crate::coordinator::grid::synthetic_cell(job)
+    fn run(
+        &mut self,
+        job: &CellJob,
+    ) -> Result<(CellResult, Option<TelemetrySummary>)> {
+        Ok((crate::coordinator::grid::synthetic_cell(job)?, None))
     }
 }
 
@@ -345,25 +355,28 @@ fn conn_loop(
 
         log::info!("computing cell {key} (flat {flat}, attempt {attempt})");
         // a panicking or erroring cell becomes n/a -- identical to the
-        // single-process sweep's semantics, so tables stay bit-identical
-        let eval = match std::panic::catch_unwind(AssertUnwindSafe(|| {
-            exec.run(&job)
-        })) {
-            Ok(Ok(CellEval::Ok(e)))
+        // single-process sweep's semantics, so tables stay bit-identical.
+        // Telemetry survives a non-finite flatten (the run happened and
+        // its digest is exactly what the grid path would record) but not
+        // an error/panic (no trustworthy digest exists).
+        let (eval, telemetry) = match std::panic::catch_unwind(
+            AssertUnwindSafe(|| exec.run(&job)),
+        ) {
+            Ok(Ok((CellEval::Ok(e), t)))
                 if !(e.top1_err.is_finite()
                     && e.top5_err.is_finite()
                     && e.mean_loss.is_finite()) =>
             {
-                CellEval::Na
+                (CellEval::Na, t)
             }
-            Ok(Ok(eval)) => eval,
+            Ok(Ok((eval, t))) => (eval, t),
             Ok(Err(e)) => {
                 log::warn!("cell {key} failed: {e}; recording n/a");
-                CellEval::Na
+                (CellEval::Na, None)
             }
             Err(_) => {
                 log::warn!("cell {key} panicked; recording n/a");
-                CellEval::Na
+                (CellEval::Na, None)
             }
         };
         report.computed += 1;
@@ -376,7 +389,7 @@ fn conn_loop(
             )));
         }
 
-        let msg = Msg::Result { flat, key, attempt, eval };
+        let msg = Msg::Result { flat, key, attempt, eval, telemetry };
         match faulty_send(write, fault, SendKind::Result, &msg) {
             Ok(true) => report.delivered += 1,
             Ok(false) => return ConnEnd::Lost("injected drop (result)".into()),

@@ -1,0 +1,853 @@
+//! Grid-wide stability analytics behind `fxpnet report`.
+//!
+//! Ingests any mix of merged/per-shard cell caches (v4, including
+//! aborted cells) and per-sweep stability reports (v2, which carry the
+//! per-cell [`TelemetrySummary`] digests), unions them into per-sweep
+//! datasets, and produces ONE deterministic analytics artifact:
+//! per-(regime, weight-width) aggregates of final/peak saturation rate,
+//! update-to-quantization-step ratio trajectories (fixed quantiles over
+//! the pinned [`SUMMARY_WINDOW_STEPS`] windows), abort reasons/steps,
+//! and the convergence-outcome join -- as a human table plus canonical
+//! JSON that is byte-identical regardless of how the inputs were
+//! produced (`--threads` count, `--shard I/N` split, grid vs cluster).
+//!
+//! Byte-determinism rests on three properties: cell results are pure
+//! functions of `(base seed, regime, w, a)`; every map in the pipeline
+//! is a `BTreeMap`; and floats serialize with shortest-round-trip
+//! formatting (non-finite as `"nan"`/`"inf"`/`"-inf"` strings).  The
+//! union is strict: the same cell appearing in two inputs must be
+//! bit-equal ([`cells_bit_equal`]) and its telemetry byte-equal, so
+//! mixed-backend or stale inputs fail loudly instead of averaging.
+//!
+//! `--suggest-thresholds` additionally fits per-regime abort thresholds
+//! from the ingested data (closed-form, no RNG -- see
+//! [`Analytics::suggest_thresholds`]): the learned [`AbortOverlay`] is
+//! guaranteed never to abort a cell that converged in the sweeps it was
+//! learned from, because every threshold is placed strictly outside the
+//! envelope of the converged cells' observed extremes.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::bench::Table;
+use crate::coordinator::regimes::{CellEval, Regime};
+use crate::coordinator::report::{
+    cell_eval_from_json, parse_cache_text, CACHE_VERSION, REPORT_VERSION,
+};
+use crate::coordinator::shard::cells_bit_equal;
+use crate::coordinator::trainer::{AbortOverlay, AbortPolicy};
+use crate::error::{FxpError, Result};
+use crate::train::telemetry::{
+    num_json, quantiles, TelemetrySummary, SUMMARY_WINDOW_STEPS,
+};
+use crate::util::json::Json;
+
+/// One sweep's unioned data: identity, per-cell outcomes, and the
+/// telemetry digests of every cell that trained.
+#[derive(Clone, Debug)]
+pub struct SweepData {
+    pub arch: String,
+    pub regime: Regime,
+    pub base_seed: u64,
+    pub cells: BTreeMap<String, CellEval>,
+    pub telemetry: BTreeMap<String, TelemetrySummary>,
+}
+
+/// Accumulates input files into per-sweep datasets (keyed by
+/// `(arch, regime seed-tag, base seed)`) and renders the analytics.
+#[derive(Debug, Default)]
+pub struct Analytics {
+    sweeps: BTreeMap<(String, u64, u64), SweepData>,
+}
+
+/// The weight-width label of a cache cell key (`"w=4,a=8"` -> `"4"`).
+fn width_of(key: &str) -> &str {
+    key.strip_prefix("w=")
+        .and_then(|rest| rest.split(",a=").next())
+        .unwrap_or(key)
+}
+
+impl Analytics {
+    pub fn new() -> Analytics {
+        Analytics::default()
+    }
+
+    /// Number of distinct sweeps ingested so far.
+    pub fn sweep_count(&self) -> usize {
+        self.sweeps.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sweeps.is_empty()
+    }
+
+    /// Ingested sweeps in deterministic `(arch, seed-tag, seed)` order.
+    pub fn sweeps(&self) -> impl Iterator<Item = &SweepData> {
+        self.sweeps.values()
+    }
+
+    /// Read and [`ingest_text`](Self::ingest_text) one input file.
+    pub fn ingest_file(&mut self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            FxpError::config(format!("{}: {e}", path.display()))
+        })?;
+        self.ingest_text(&path.display().to_string(), &text)
+    }
+
+    /// Ingest one input, auto-detected by its version stamps: a
+    /// `report_version` key marks a stability report (the version must
+    /// match [`REPORT_VERSION`] and the kind must be `"stability"`), a
+    /// bare `version` key marks a cell cache (must match
+    /// [`CACHE_VERSION`]).  Anything else -- including version-less
+    /// pre-v2 stability reports -- is refused with an error naming
+    /// `label`.
+    pub fn ingest_text(&mut self, label: &str, text: &str) -> Result<()> {
+        let j = Json::parse(text)
+            .map_err(|e| FxpError::Json(format!("{label}: {e}")))?;
+        if let Some(v) = j.opt("report_version") {
+            let v = v.as_usize()?;
+            if v != REPORT_VERSION {
+                return Err(FxpError::config(format!(
+                    "{label}: report_version {v} is not supported \
+                     (this build reads v{REPORT_VERSION}); regenerate the \
+                     report with this fxpnet"
+                )));
+            }
+            let kind = j.get("kind")?.as_str()?;
+            if kind != "stability" {
+                return Err(FxpError::config(format!(
+                    "{label}: kind '{kind}' is not ingestible by `fxpnet \
+                     report` (expected a 'stability' report or a cell cache)"
+                )));
+            }
+            return self.ingest_stability(label, &j);
+        }
+        if j.opt("version").is_some() {
+            let v = j.get("version")?.as_usize()?;
+            if v != CACHE_VERSION {
+                return Err(FxpError::config(format!(
+                    "{label}: cell cache version {v} is not supported \
+                     (this build reads v{CACHE_VERSION})"
+                )));
+            }
+            let (header, cells) = parse_cache_text(text)
+                .map_err(|e| FxpError::Json(format!("{label}: {e}")))?;
+            let regime =
+                Regime::from_seed_tag(header.regime_tag).ok_or_else(|| {
+                    FxpError::Json(format!(
+                        "{label}: unknown regime_tag {}",
+                        header.regime_tag
+                    ))
+                })?;
+            return self.merge(
+                label,
+                &header.arch,
+                regime,
+                header.base_seed,
+                cells,
+                BTreeMap::new(),
+            );
+        }
+        Err(FxpError::config(format!(
+            "{label}: unrecognized input -- neither a v{CACHE_VERSION} cell \
+             cache nor a v{REPORT_VERSION} stability report (pre-versioned \
+             stability reports must be regenerated)"
+        )))
+    }
+
+    fn ingest_stability(&mut self, label: &str, j: &Json) -> Result<()> {
+        let arch = j.get("arch")?.as_str()?.to_string();
+        let regime_tag = j.get("regime_tag")?.as_usize()? as u64;
+        let regime = Regime::from_seed_tag(regime_tag).ok_or_else(|| {
+            FxpError::Json(format!("{label}: unknown regime_tag {regime_tag}"))
+        })?;
+        let tag = j.get("regime")?.as_str()?;
+        if tag != regime.tag() {
+            return Err(FxpError::Json(format!(
+                "{label}: regime '{tag}' does not match regime_tag \
+                 {regime_tag} ('{}')",
+                regime.tag()
+            )));
+        }
+        let seed_str = j.get("base_seed")?.as_str()?;
+        let base_seed = seed_str.parse::<u64>().map_err(|_| {
+            FxpError::Json(format!("{label}: bad base_seed '{seed_str}'"))
+        })?;
+        let mut cells = BTreeMap::new();
+        let mut telemetry = BTreeMap::new();
+        for (key, cell) in j.get("cells")?.as_obj()? {
+            cells.insert(key.clone(), cell_eval_from_json(key, cell)?);
+            if let Some(t) = cell.opt("telemetry") {
+                telemetry.insert(
+                    key.clone(),
+                    TelemetrySummary::from_json(t).map_err(|e| {
+                        FxpError::Json(format!(
+                            "{label}: cell '{key}' telemetry: {e}"
+                        ))
+                    })?,
+                );
+            }
+        }
+        self.merge(label, &arch, regime, base_seed, cells, telemetry)
+    }
+
+    /// Union parsed cells/telemetry into the sweep's dataset.  Overlap
+    /// is fine (a cache plus the stability report derived from it, or a
+    /// resumed shard's cells appearing twice) -- but only bit-equal
+    /// overlap: a conflicting duplicate means the inputs are not views
+    /// of one sweep, and averaging them would fabricate data.
+    pub fn merge(
+        &mut self,
+        label: &str,
+        arch: &str,
+        regime: Regime,
+        base_seed: u64,
+        cells: BTreeMap<String, CellEval>,
+        telemetry: BTreeMap<String, TelemetrySummary>,
+    ) -> Result<()> {
+        let sweep = self
+            .sweeps
+            .entry((arch.to_string(), regime.seed_tag(), base_seed))
+            .or_insert_with(|| SweepData {
+                arch: arch.to_string(),
+                regime,
+                base_seed,
+                cells: BTreeMap::new(),
+                telemetry: BTreeMap::new(),
+            });
+        for (key, eval) in cells {
+            if let Some(prev) = sweep.cells.get(&key) {
+                if !cells_bit_equal(prev, &eval) {
+                    return Err(FxpError::config(format!(
+                        "{label}: cell '{key}' conflicts with an earlier \
+                         input for sweep (arch={arch}, regime={}, \
+                         seed={base_seed}) -- not views of one sweep",
+                        regime.tag()
+                    )));
+                }
+            } else {
+                sweep.cells.insert(key, eval);
+            }
+        }
+        for (key, summary) in telemetry {
+            if let Some(prev) = sweep.telemetry.get(&key) {
+                if prev.to_json().to_string() != summary.to_json().to_string() {
+                    return Err(FxpError::config(format!(
+                        "{label}: telemetry for cell '{key}' conflicts with \
+                         an earlier input for sweep (arch={arch}, regime={}, \
+                         seed={base_seed})",
+                        regime.tag()
+                    )));
+                }
+            } else {
+                sweep.telemetry.insert(key, summary);
+            }
+        }
+        Ok(())
+    }
+
+    /// Canonical analytics JSON -- a pure function of the ingested data,
+    /// byte-identical across input provenance.
+    pub fn to_json(&self) -> Json {
+        let sweeps = self
+            .sweeps
+            .values()
+            .map(|s| {
+                let mut widths: BTreeMap<String, WidthAgg> = BTreeMap::new();
+                let (mut ok, mut na, mut aborted) = (0usize, 0usize, 0usize);
+                for (key, eval) in &s.cells {
+                    let agg = widths.entry(width_of(key).to_string()).or_default();
+                    match eval {
+                        CellEval::Ok(_) => {
+                            ok += 1;
+                            agg.ok += 1;
+                        }
+                        CellEval::Na => {
+                            na += 1;
+                            agg.na += 1;
+                        }
+                        CellEval::Aborted { reason, step } => {
+                            aborted += 1;
+                            agg.aborted += 1;
+                            let e = agg
+                                .aborts
+                                .entry(reason.as_str().to_string())
+                                .or_insert((0, *step, *step));
+                            e.0 += 1;
+                            e.1 = e.1.min(*step);
+                            e.2 = e.2.max(*step);
+                        }
+                    }
+                    if let Some(t) = s.telemetry.get(key) {
+                        agg.observe(t);
+                    }
+                }
+                Json::obj(vec![
+                    ("arch", Json::Str(s.arch.clone())),
+                    ("regime", Json::Str(s.regime.tag().into())),
+                    ("regime_tag", Json::from(s.regime.seed_tag() as usize)),
+                    ("table", Json::from(s.regime.table_number())),
+                    ("base_seed", Json::Str(s.base_seed.to_string())),
+                    (
+                        "summary",
+                        Json::obj(vec![
+                            ("ok", Json::from(ok)),
+                            ("na", Json::from(na)),
+                            ("aborted", Json::from(aborted)),
+                            ("telemetry", Json::from(s.telemetry.len())),
+                        ]),
+                    ),
+                    (
+                        "widths",
+                        Json::Obj(
+                            widths
+                                .iter()
+                                .map(|(w, agg)| (w.clone(), agg.to_json()))
+                                .collect(),
+                        ),
+                    ),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("report_version", Json::from(REPORT_VERSION)),
+            ("kind", Json::Str("analytics".into())),
+            ("sweeps", Json::Arr(sweeps)),
+        ])
+    }
+
+    /// Human-readable per-(sweep, width) table of the same aggregates.
+    pub fn render(&self) -> String {
+        let mut t = Table::new(
+            "stability analytics (per regime x weight width)",
+            &[
+                "regime", "arch", "seed", "w", "ok", "na", "abrt", "tele",
+                "sat_peak", "ratio_min", "aborts",
+            ],
+        );
+        for s in self.sweeps.values() {
+            let mut widths: BTreeMap<String, WidthAgg> = BTreeMap::new();
+            for (key, eval) in &s.cells {
+                let agg = widths.entry(width_of(key).to_string()).or_default();
+                match eval {
+                    CellEval::Ok(_) => agg.ok += 1,
+                    CellEval::Na => agg.na += 1,
+                    CellEval::Aborted { reason, step } => {
+                        agg.aborted += 1;
+                        let e = agg
+                            .aborts
+                            .entry(reason.as_str().to_string())
+                            .or_insert((0, *step, *step));
+                        e.0 += 1;
+                        e.1 = e.1.min(*step);
+                        e.2 = e.2.max(*step);
+                    }
+                }
+                if let Some(tele) = s.telemetry.get(key) {
+                    agg.observe(tele);
+                }
+            }
+            for (w, agg) in &widths {
+                let sat_peak = agg
+                    .sat_peak
+                    .iter()
+                    .fold(f64::NEG_INFINITY, |m, &x| m.max(x));
+                let aborts = agg
+                    .aborts
+                    .iter()
+                    .map(|(r, (n, lo, hi))| {
+                        if lo == hi {
+                            format!("{r}x{n}@{lo}")
+                        } else {
+                            format!("{r}x{n}@{lo}-{hi}")
+                        }
+                    })
+                    .collect::<Vec<_>>()
+                    .join(" ");
+                t.row(vec![
+                    s.regime.tag().to_string(),
+                    s.arch.clone(),
+                    s.base_seed.to_string(),
+                    w.clone(),
+                    agg.ok.to_string(),
+                    agg.na.to_string(),
+                    agg.aborted.to_string(),
+                    agg.tele.to_string(),
+                    if sat_peak.is_finite() {
+                        format!("{sat_peak:.4}")
+                    } else {
+                        "-".to_string()
+                    },
+                    match agg.ratio_min {
+                        Some(r) => format!("{r:.3e}"),
+                        None => "-".to_string(),
+                    },
+                    if aborts.is_empty() { "-".to_string() } else { aborts },
+                ]);
+            }
+        }
+        t.render()
+    }
+
+    /// Fit per-regime abort thresholds from the ingested sweeps --
+    /// deterministic and closed-form (no RNG, no iteration-order
+    /// dependence).  Per regime tag:
+    ///
+    /// * cells that converged (status ok) with telemetry form the
+    ///   *safe envelope*; cells that diverged or aborted form the
+    ///   *doomed set*;
+    /// * `sat_rate`: midpoint between the highest converged `sat_peak`
+    ///   and the smallest doomed `sat_peak` above it (1.0 -- never fires
+    ///   -- when no doomed cell saturates harder than a converged one);
+    /// * `collapse_ratio`: midpoint between the smallest converged
+    ///   `ratio_min` and the largest doomed `ratio_min` below it (0.0 --
+    ///   never fires -- when the classes don't separate);
+    /// * `blowup_factor`: at least the default, raised until
+    ///   `loss_start * factor >= loss_peak` (computed in f32, nudged up
+    ///   bit-by-bit) for every converged cell whose peak exceeded
+    ///   `loss_start + 1.0`;
+    /// * `window` / `min_steps` keep their defaults;
+    /// * a regime with no converged telemetry keeps
+    ///   [`AbortPolicy::default`] (nothing safe to fit against).
+    ///
+    /// Because the live predicates are strict (`>` / `<`) and every
+    /// per-step value is bounded by the run's recorded peak/min, a
+    /// policy fit this way can never abort a cell that converged in the
+    /// data it was fit from.
+    pub fn suggest_thresholds(&self) -> AbortOverlay {
+        let mut by_tag: BTreeMap<&str, Vec<(&CellEval, &TelemetrySummary)>> =
+            BTreeMap::new();
+        for s in self.sweeps.values() {
+            for (key, eval) in &s.cells {
+                if let Some(t) = s.telemetry.get(key) {
+                    by_tag.entry(s.regime.tag()).or_default().push((eval, t));
+                }
+            }
+        }
+        let mut overlay = AbortOverlay::default();
+        for (tag, cells) in by_tag {
+            overlay.regimes.insert(tag.to_string(), fit_policy(&cells));
+        }
+        overlay
+    }
+}
+
+/// Per-(sweep, width) accumulator behind [`Analytics::to_json`].
+#[derive(Debug, Default)]
+struct WidthAgg {
+    ok: usize,
+    na: usize,
+    aborted: usize,
+    tele: usize,
+    sat_final: Vec<f64>,
+    sat_peak: Vec<f64>,
+    ratio_min: Option<f64>,
+    /// start_step -> (max end_step, contributing cells, pooled ratio_q)
+    windows: BTreeMap<usize, (usize, usize, Vec<f64>)>,
+    /// reason -> (count, first step, last step)
+    aborts: BTreeMap<String, (usize, usize, usize)>,
+}
+
+impl WidthAgg {
+    fn observe(&mut self, t: &TelemetrySummary) {
+        self.tele += 1;
+        self.sat_final.push(t.sat_final);
+        self.sat_peak.push(t.sat_peak);
+        if let Some(r) = t.ratio_min {
+            let r = r as f64;
+            self.ratio_min =
+                Some(self.ratio_min.map_or(r, |m| if r < m { r } else { m }));
+        }
+        for w in &t.windows {
+            let e = self
+                .windows
+                .entry(w.start_step)
+                .or_insert((w.end_step, 0, Vec::new()));
+            e.0 = e.0.max(w.end_step);
+            e.1 += 1;
+            e.2.extend_from_slice(&w.ratio_q);
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let q_of = |vals: &[f64]| {
+            if vals.is_empty() {
+                Json::Arr(Vec::new())
+            } else {
+                let mut sorted = vals.to_vec();
+                sorted.sort_by(f64::total_cmp);
+                Json::Arr(quantiles(&sorted).into_iter().map(num_json).collect())
+            }
+        };
+        // trajectory: per pinned window (aligned by start step, width
+        // SUMMARY_WINDOW_STEPS), fixed quantiles over the pooled per-cell
+        // window quantiles -- a cross-cell ratio-collapse profile
+        let windows = self
+            .windows
+            .iter()
+            .map(|(&start, (end, cells, pooled))| {
+                Json::obj(vec![
+                    ("start_step", Json::from(start)),
+                    ("end_step", Json::from(*end)),
+                    ("cells", Json::from(*cells)),
+                    ("ratio_q", q_of(pooled)),
+                ])
+            })
+            .collect();
+        let aborts = self
+            .aborts
+            .iter()
+            .map(|(r, (n, lo, hi))| {
+                (
+                    r.clone(),
+                    Json::obj(vec![
+                        ("count", Json::from(*n)),
+                        ("first_step", Json::from(*lo)),
+                        ("last_step", Json::from(*hi)),
+                    ]),
+                )
+            })
+            .collect();
+        Json::obj(vec![
+            ("ok", Json::from(self.ok)),
+            ("na", Json::from(self.na)),
+            ("aborted", Json::from(self.aborted)),
+            ("telemetry", Json::from(self.tele)),
+            ("window_steps", Json::from(SUMMARY_WINDOW_STEPS)),
+            ("sat_final_q", q_of(&self.sat_final)),
+            ("sat_peak_q", q_of(&self.sat_peak)),
+            (
+                "ratio_min",
+                match self.ratio_min {
+                    Some(r) => num_json(r),
+                    None => Json::Null,
+                },
+            ),
+            ("windows", Json::Arr(windows)),
+            ("aborts", Json::Obj(aborts)),
+        ])
+    }
+}
+
+/// Smallest f32 strictly above a positive finite `x`.
+fn next_up(x: f32) -> f32 {
+    f32::from_bits(x.to_bits() + 1)
+}
+
+/// Closed-form threshold fit for one regime's telemetry-bearing cells
+/// (see [`Analytics::suggest_thresholds`] for the contract).
+fn fit_policy(cells: &[(&CellEval, &TelemetrySummary)]) -> AbortPolicy {
+    let d = AbortPolicy::default();
+    let conv: Vec<&TelemetrySummary> = cells
+        .iter()
+        .filter(|(e, _)| matches!(e, CellEval::Ok(_)))
+        .map(|(_, t)| *t)
+        .collect();
+    let doomed: Vec<&TelemetrySummary> = cells
+        .iter()
+        .filter(|(e, _)| !matches!(e, CellEval::Ok(_)))
+        .map(|(_, t)| *t)
+        .collect();
+    if conv.is_empty() {
+        return d;
+    }
+
+    let conv_sat_max =
+        conv.iter().map(|t| t.sat_peak).fold(0.0f64, f64::max);
+    let doomed_sat_above = doomed
+        .iter()
+        .map(|t| t.sat_peak)
+        .filter(|&s| s > conv_sat_max)
+        .fold(None, |m: Option<f64>, x| Some(m.map_or(x, |m| m.min(x))));
+    let sat_rate = match doomed_sat_above {
+        Some(s) => (conv_sat_max + s) / 2.0,
+        None => 1.0,
+    };
+
+    let conv_ratio_min = conv
+        .iter()
+        .filter_map(|t| t.ratio_min)
+        .fold(None, |m: Option<f32>, x| Some(m.map_or(x, |m| m.min(x))));
+    let collapse_ratio = match conv_ratio_min {
+        Some(cr) => {
+            let doomed_below = doomed
+                .iter()
+                .filter_map(|t| t.ratio_min)
+                .filter(|&r| r < cr)
+                .fold(None, |m: Option<f32>, x| {
+                    Some(m.map_or(x, |m| m.max(x)))
+                });
+            match doomed_below {
+                Some(dr) => (cr + dr) / 2.0,
+                None => 0.0,
+            }
+        }
+        None => 0.0,
+    };
+
+    let mut blowup_factor = d.blowup_factor;
+    for t in &conv {
+        // the live predicate only fires when loss exceeds BOTH
+        // start*factor and start+1.0, so only peaks past start+1.0
+        // constrain the factor
+        if t.loss_start.is_finite()
+            && t.loss_start > 0.0
+            && t.loss_peak.is_finite()
+            && t.loss_peak > t.loss_start + 1.0
+        {
+            let mut need = t.loss_peak / t.loss_start;
+            // f32 division can round down; nudge until the product
+            // provably covers the peak
+            while t.loss_start * need < t.loss_peak {
+                need = next_up(need);
+            }
+            blowup_factor = blowup_factor.max(need);
+        }
+    }
+
+    AbortPolicy {
+        window: d.window,
+        min_steps: d.min_steps,
+        blowup_factor,
+        sat_rate,
+        collapse_ratio,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::evaluator::EvalResult;
+    use crate::coordinator::trainer::AbortReason;
+
+    fn summary(
+        sat_peak: f64,
+        ratio_min: Option<f32>,
+        loss_start: f32,
+        loss_peak: f32,
+    ) -> TelemetrySummary {
+        TelemetrySummary {
+            steps: 10,
+            loss_start,
+            loss_peak,
+            loss_final: loss_start,
+            sat_final: sat_peak / 2.0,
+            sat_peak,
+            ratio_min,
+            ratio_final: ratio_min,
+            windows: Vec::new(),
+        }
+    }
+
+    fn ok_eval() -> CellEval {
+        CellEval::Ok(EvalResult {
+            n: 16,
+            top1_err: 0.2,
+            top5_err: 0.1,
+            mean_loss: 1.0,
+        })
+    }
+
+    fn sweep_with(
+        cells: Vec<(&str, CellEval)>,
+        telemetry: Vec<(&str, TelemetrySummary)>,
+    ) -> Analytics {
+        let mut a = Analytics::new();
+        a.merge(
+            "test",
+            "tiny",
+            Regime::Vanilla,
+            42,
+            cells.into_iter().map(|(k, v)| (k.to_string(), v)).collect(),
+            telemetry
+                .into_iter()
+                .map(|(k, v)| (k.to_string(), v))
+                .collect(),
+        )
+        .unwrap();
+        a
+    }
+
+    #[test]
+    fn width_of_parses_cell_keys() {
+        assert_eq!(width_of("w=4,a=8"), "4");
+        assert_eq!(width_of("w=Float,a=4"), "Float");
+        assert_eq!(width_of("w=16,a=Float"), "16");
+    }
+
+    #[test]
+    fn empty_analytics_renders_and_serializes() {
+        let a = Analytics::new();
+        assert!(a.is_empty());
+        let j = a.to_json();
+        assert_eq!(j.get("kind").unwrap().as_str().unwrap(), "analytics");
+        assert_eq!(j.get("sweeps").unwrap().as_arr().unwrap().len(), 0);
+        assert!(a.render().contains("stability analytics"));
+        // a no-data overlay has no regime entries and resolves to default
+        let o = a.suggest_thresholds();
+        assert!(o.regimes.is_empty());
+        assert_eq!(o.resolve("vanilla"), AbortPolicy::default());
+    }
+
+    #[test]
+    fn conflicting_duplicate_cell_is_refused() {
+        let mut a = sweep_with(vec![("w=4,a=4", ok_eval())], vec![]);
+        // bit-equal duplicate unions fine
+        a.merge(
+            "dup",
+            "tiny",
+            Regime::Vanilla,
+            42,
+            [("w=4,a=4".to_string(), ok_eval())].into_iter().collect(),
+            BTreeMap::new(),
+        )
+        .unwrap();
+        // conflicting duplicate is an error
+        let err = a
+            .merge(
+                "bad",
+                "tiny",
+                Regime::Vanilla,
+                42,
+                [("w=4,a=4".to_string(), CellEval::Na)].into_iter().collect(),
+                BTreeMap::new(),
+            )
+            .unwrap_err();
+        assert!(err.to_string().contains("w=4,a=4"), "{err}");
+    }
+
+    #[test]
+    fn rejects_wrong_report_version_and_unversioned_input() {
+        let mut a = Analytics::new();
+        let err = a
+            .ingest_text("x", r#"{"report_version": 1, "kind": "stability"}"#)
+            .unwrap_err();
+        assert!(err.to_string().contains("report_version 1"), "{err}");
+        let err = a
+            .ingest_text("x", r#"{"table": 3, "cells": []}"#)
+            .unwrap_err();
+        assert!(err.to_string().contains("unrecognized input"), "{err}");
+        let err = a
+            .ingest_text("x", r#"{"version": 3, "cells": {}}"#)
+            .unwrap_err();
+        assert!(err.to_string().contains("version 3"), "{err}");
+        assert!(a.is_empty());
+    }
+
+    #[test]
+    fn rejects_non_stability_report_kinds() {
+        let mut a = Analytics::new();
+        let err = a
+            .ingest_text(
+                "x",
+                &format!(
+                    r#"{{"report_version": {REPORT_VERSION}, "kind": "analytics", "sweeps": []}}"#
+                ),
+            )
+            .unwrap_err();
+        assert!(err.to_string().contains("kind 'analytics'"), "{err}");
+    }
+
+    #[test]
+    fn learned_policy_separates_converged_from_doomed() {
+        let a = sweep_with(
+            vec![
+                ("w=8,a=8", ok_eval()),
+                ("w=4,a=4", CellEval::Na),
+                (
+                    "w=4,a=8",
+                    CellEval::Aborted {
+                        reason: AbortReason::UpdateCollapse,
+                        step: 50,
+                    },
+                ),
+            ],
+            vec![
+                ("w=8,a=8", summary(0.10, Some(1e-2), 2.0, 2.5)),
+                ("w=4,a=4", summary(0.80, Some(2e-5), 2.0, 9.0)),
+                ("w=4,a=8", summary(0.05, Some(1e-6), 2.0, 2.1)),
+            ],
+        );
+        let o = a.suggest_thresholds();
+        let p = o.resolve("vanilla");
+        // sat: midpoint of 0.10 (conv max) and 0.80 (smallest doomed above)
+        assert!((p.sat_rate - 0.45).abs() < 1e-12, "{}", p.sat_rate);
+        // collapse: midpoint of 1e-2 (conv min) and 2e-5 (largest doomed below)
+        assert!(p.collapse_ratio < 1e-2 && p.collapse_ratio > 2e-5);
+        // blowup: conv peak 2.5 < start+1.0 -> default stands
+        assert_eq!(p.blowup_factor, AbortPolicy::default().blowup_factor);
+        // safety: no converged cell's extremes would trip the policy
+        assert!(0.10 < p.sat_rate && 1e-2 > p.collapse_ratio);
+        // untouched regimes resolve to the overlay default (builtin)
+        assert_eq!(o.resolve("prop3"), AbortPolicy::default());
+        // determinism: byte-identical on re-fit
+        assert_eq!(
+            a.suggest_thresholds().to_json().to_string(),
+            o.to_json().to_string()
+        );
+    }
+
+    #[test]
+    fn learned_blowup_covers_converged_peak() {
+        // converged cell that spiked to 5x its start: factor must grow
+        let a = sweep_with(
+            vec![("w=8,a=8", ok_eval())],
+            vec![("w=8,a=8", summary(0.1, Some(1e-2), 2.0, 10.0))],
+        );
+        let p = a.suggest_thresholds().resolve("vanilla");
+        assert!(p.blowup_factor >= 5.0);
+        assert!(2.0f32 * p.blowup_factor >= 10.0);
+        // no doomed cells at all: sat/collapse never fire
+        assert_eq!(p.sat_rate, 1.0);
+        assert_eq!(p.collapse_ratio, 0.0);
+    }
+
+    #[test]
+    fn no_converged_regime_keeps_default_policy() {
+        let a = sweep_with(
+            vec![("w=4,a=4", CellEval::Na)],
+            vec![("w=4,a=4", summary(0.9, Some(1e-7), 2.0, 50.0))],
+        );
+        assert_eq!(
+            a.suggest_thresholds().resolve("vanilla"),
+            AbortPolicy::default()
+        );
+    }
+
+    #[test]
+    fn analytics_json_is_merge_order_invariant() {
+        let build = |order: &[usize]| {
+            let mut a = Analytics::new();
+            let parts: Vec<(String, CellEval)> = vec![
+                ("w=4,a=4".into(), CellEval::Na),
+                ("w=8,a=8".into(), ok_eval()),
+                (
+                    "w=16,a=4".into(),
+                    CellEval::Aborted {
+                        reason: AbortReason::NanLoss,
+                        step: 7,
+                    },
+                ),
+            ];
+            for &i in order {
+                let (k, v) = parts[i].clone();
+                a.merge(
+                    "t",
+                    "tiny",
+                    Regime::Vanilla,
+                    42,
+                    [(k.clone(), v)].into_iter().collect(),
+                    [(k, summary(0.2, Some(1e-3), 2.0, 2.2))]
+                        .into_iter()
+                        .collect(),
+                )
+                .unwrap();
+            }
+            a.to_json().to_string()
+        };
+        let fwd = build(&[0, 1, 2]);
+        assert_eq!(fwd, build(&[2, 0, 1]));
+        assert_eq!(fwd, build(&[1, 2, 0]));
+    }
+}

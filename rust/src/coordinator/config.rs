@@ -1,5 +1,6 @@
 //! Run configuration shared by the trainer, regimes, and grid runner.
 
+use crate::coordinator::trainer::{AbortOverlay, AbortPolicy};
 use crate::quant::calib::CalibMethod;
 
 /// Hyperparameters and workload sizes for one experiment run.
@@ -50,6 +51,11 @@ pub struct RunCfg {
     /// cell the policy aborts would have ended "n/a" (or burned its full
     /// step budget diverging) anyway.
     pub early_abort: bool,
+    /// per-regime abort-threshold overrides (`--abort-policy <file>`,
+    /// typically learned by `fxpnet report --suggest-thresholds`);
+    /// `None` keeps the built-in [`AbortPolicy::default`] everywhere.
+    /// Ignored when `early_abort` is off.
+    pub abort_overlay: Option<AbortOverlay>,
     /// evaluate top-k error with this k (paper reports Top-5 on 1000
     /// classes; with 10 classes we report top-1 as primary)
     pub topk: usize,
@@ -72,6 +78,7 @@ impl Default for RunCfg {
             threads: 1,
             augment: true,
             early_abort: true,
+            abort_overlay: None,
             topk: 1,
         }
     }
@@ -88,6 +95,20 @@ impl RunCfg {
             ..Default::default()
         }
     }
+
+    /// The effective early-abort policy for a regime tag
+    /// (`Regime::tag`): `None` under `--no-early-abort`, the overlay's
+    /// resolved policy when one is loaded, the built-in default
+    /// otherwise.
+    pub fn abort_policy(&self, tag: &str) -> Option<AbortPolicy> {
+        if !self.early_abort {
+            return None;
+        }
+        Some(match &self.abort_overlay {
+            Some(o) => o.resolve(tag),
+            None => AbortPolicy::default(),
+        })
+    }
 }
 
 #[cfg(test)]
@@ -103,5 +124,27 @@ mod tests {
         let s = RunCfg::smoke();
         assert!(s.finetune_steps < c.finetune_steps);
         assert!(c.early_abort && s.early_abort);
+    }
+
+    #[test]
+    fn abort_policy_resolution() {
+        let mut c = RunCfg::default();
+        assert_eq!(
+            c.abort_policy("vanilla").map(|p| p.window),
+            Some(AbortPolicy::default().window)
+        );
+        let mut overlay = AbortOverlay::default();
+        overlay
+            .regimes
+            .insert("vanilla".into(), AbortPolicy { window: 42, ..Default::default() });
+        c.abort_overlay = Some(overlay);
+        assert_eq!(c.abort_policy("vanilla").map(|p| p.window), Some(42));
+        // other regimes fall through to the built-in default
+        assert_eq!(
+            c.abort_policy("prop3").map(|p| p.window),
+            Some(AbortPolicy::default().window)
+        );
+        c.early_abort = false;
+        assert_eq!(c.abort_policy("vanilla"), None);
     }
 }

@@ -19,7 +19,7 @@
 //! order, shard layout, or cache hits -- so any worker count produces
 //! bit-identical `CellOutcome` tables (pinned by tests/grid_parallel.rs).
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::path::{Path, PathBuf};
 use std::sync::Mutex;
 
@@ -37,6 +37,7 @@ use crate::model::checkpoint::{self, Checkpoint};
 use crate::model::params::ParamSet;
 use crate::quant::calib::LayerStats;
 use crate::quant::policy::WidthSpec;
+use crate::train::telemetry::TelemetrySummary;
 use crate::util::rng;
 
 /// Seed of one grid cell: pure function of what the cell *is*.
@@ -251,6 +252,17 @@ fn check_shard(shard: Option<(usize, usize)>) -> Result<()> {
 #[derive(Debug)]
 pub struct SweepOutcome {
     pub grid: GridResult,
+    /// every cell with a known result (computed this run or read from
+    /// the cache), keyed by [`report::cell_key`] -- the report-ready
+    /// view: unlike `grid`, cells left to other shards are *absent*
+    /// here instead of rendered "n/a"
+    ///
+    /// [`report::cell_key`]: crate::coordinator::report::cell_key
+    pub cells: BTreeMap<String, CellEval>,
+    /// stability-telemetry digests of cells *trained in this run* (cache
+    /// hits carry none -- their telemetry lives in the stability report
+    /// written when they were computed), keyed like `cells`
+    pub telemetry: BTreeMap<String, TelemetrySummary>,
     /// cells executed in this run
     pub computed: usize,
     /// cells taken from the cache
@@ -399,16 +411,22 @@ where
     }
 
     let mut outcomes = Vec::with_capacity(a_axis.len());
+    let mut cells: BTreeMap<String, CellEval> = BTreeMap::new();
     for (ai, &a) in a_axis.iter().enumerate() {
         let mut row = Vec::with_capacity(w_axis.len());
         for (wi, &w) in w_axis.iter().enumerate() {
             let flat = ai * w_axis.len() + wi;
-            let eval = fresh
+            let known = fresh
                 .get(&flat)
                 .or_else(|| cached_hits.get(&flat))
-                .copied()
-                .unwrap_or(CellEval::Na);
-            row.push(CellOutcome { w, a, eval });
+                .copied();
+            if let Some(eval) = known {
+                cells.insert(
+                    crate::coordinator::report::cell_key(&w.label(), &a.label()),
+                    eval,
+                );
+            }
+            row.push(CellOutcome { w, a, eval: known.unwrap_or(CellEval::Na) });
         }
         outcomes.push(row);
     }
@@ -420,6 +438,8 @@ where
             a_axis,
             outcomes,
         },
+        cells,
+        telemetry: BTreeMap::new(),
         computed: todo.len(),
         cached: cached_hits.len(),
         missing,
@@ -756,6 +776,18 @@ impl ParallelGridRunner {
         p1_dir: Option<&Path>,
         job: &CellJob,
     ) -> Result<CellResult> {
+        Ok(self.run_cell_job_full(backend, p1, p1_dir, job)?.0)
+    }
+
+    /// [`run_cell_job`](Self::run_cell_job) plus the cell's stability
+    /// telemetry digest (`None` for evaluation-only regimes).
+    pub fn run_cell_job_full(
+        &self,
+        backend: &dyn Backend,
+        p1: &mut HashMap<String, Option<ParamSet>>,
+        p1_dir: Option<&Path>,
+        job: &CellJob,
+    ) -> Result<(CellResult, Option<TelemetrySummary>)> {
         if job.regime.needs_p1_net() && !p1.contains_key(&job.w.label()) {
             // the float-width "seed net" is just the base net; not worth
             // a cache file (same rule as train_p1_nets)
@@ -798,7 +830,7 @@ impl ParallelGridRunner {
             None
         };
         let ctx = self.cell_ctx(backend, job.seed);
-        regimes::dispatch_cell(&ctx, job.regime, &self.base, p1_net, job.w, job.a)
+        regimes::dispatch_cell_full(&ctx, job.regime, &self.base, p1_net, job.w, job.a)
     }
 
     /// Run the full paper grid for `regime` under `opts`.
@@ -817,7 +849,11 @@ impl ParallelGridRunner {
         } else {
             HashMap::new()
         };
-        run_sweep_with(
+        // telemetry digests stream out of the workers by cell key; the
+        // BTreeMap makes the collected set independent of completion
+        // order, so the sweep's report bytes are too
+        let telemetry = Mutex::new(BTreeMap::new());
+        let mut outcome = run_sweep_with(
             regime,
             &self.arch,
             self.cfg.seed,
@@ -826,9 +862,20 @@ impl ParallelGridRunner {
             |backend, job| {
                 let ctx = self.cell_ctx(backend.as_ref(), job.seed);
                 let p1_net = p1.get(&job.w.label()).and_then(|o| o.as_ref());
-                regimes::dispatch_cell(&ctx, job.regime, &self.base, p1_net, job.w, job.a)
+                let (eval, summary) = regimes::dispatch_cell_full(
+                    &ctx, job.regime, &self.base, p1_net, job.w, job.a,
+                )?;
+                if let Some(s) = summary {
+                    telemetry
+                        .lock()
+                        .unwrap()
+                        .insert(CellCache::key(job), s);
+                }
+                Ok(eval)
             },
-        )
+        )?;
+        outcome.telemetry = telemetry.into_inner().unwrap();
+        Ok(outcome)
     }
 }
 
@@ -901,6 +948,17 @@ impl<'a> GridRunner<'a> {
         w: WidthSpec,
         a: WidthSpec,
     ) -> Result<CellOutcome> {
+        Ok(self.run_cell_full(regime, w, a)?.0)
+    }
+
+    /// [`run_cell`](Self::run_cell) plus the cell's stability telemetry
+    /// digest (`None` for evaluation-only regimes).
+    pub fn run_cell_full(
+        &mut self,
+        regime: Regime,
+        w: WidthSpec,
+        a: WidthSpec,
+    ) -> Result<(CellOutcome, Option<TelemetrySummary>)> {
         log::info!(
             "cell [{} w={} a={}]",
             regime.label(),
@@ -913,8 +971,8 @@ impl<'a> GridRunner<'a> {
             None
         };
         let ctx = self.ctx(cell_seed(self.cfg.seed, regime, w, a));
-        let eval =
-            regimes::dispatch_cell(&ctx, regime, &self.base, p1.as_ref(), w, a)?;
+        let (eval, summary) =
+            regimes::dispatch_cell_full(&ctx, regime, &self.base, p1.as_ref(), w, a)?;
         match &eval {
             CellEval::Ok(e) => log::info!(
                 "  -> top1 {:.2}% top5 {:.2}% loss {:.3}",
@@ -928,28 +986,51 @@ impl<'a> GridRunner<'a> {
             ),
             CellEval::Na => log::info!("  -> n/a (diverged)"),
         }
-        Ok(CellOutcome { w, a, eval })
+        Ok((CellOutcome { w, a, eval }, summary))
     }
 
     /// Run the full paper grid for `regime`, serially.
     pub fn run_grid(&mut self, regime: Regime) -> Result<GridResult> {
+        Ok(self.run_grid_full(regime)?.0)
+    }
+
+    /// [`run_grid`](Self::run_grid) plus the sweep's telemetry digests
+    /// keyed by [`report::cell_key`](crate::coordinator::report::cell_key).
+    pub fn run_grid_full(
+        &mut self,
+        regime: Regime,
+    ) -> Result<(GridResult, BTreeMap<String, TelemetrySummary>)> {
         let w_axis = WidthSpec::paper_axis().to_vec();
         let a_axis = WidthSpec::paper_axis().to_vec();
         let mut outcomes = Vec::with_capacity(a_axis.len());
+        let mut telemetry = BTreeMap::new();
         for &a in &a_axis {
             let mut row = Vec::with_capacity(w_axis.len());
             for &w in &w_axis {
-                row.push(self.run_cell(regime, w, a)?);
+                let (outcome, summary) = self.run_cell_full(regime, w, a)?;
+                if let Some(s) = summary {
+                    telemetry.insert(
+                        crate::coordinator::report::cell_key(
+                            &w.label(),
+                            &a.label(),
+                        ),
+                        s,
+                    );
+                }
+                row.push(outcome);
             }
             outcomes.push(row);
         }
-        Ok(GridResult {
-            regime,
-            arch: self.arch.clone(),
-            w_axis,
-            a_axis,
-            outcomes,
-        })
+        Ok((
+            GridResult {
+                regime,
+                arch: self.arch.clone(),
+                w_axis,
+                a_axis,
+                outcomes,
+            },
+            telemetry,
+        ))
     }
 }
 

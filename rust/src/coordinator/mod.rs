@@ -25,8 +25,11 @@
 //!   `grid merge` union;
 //! * `evaluator` -- held-out top-k error;
 //! * `report`    -- paper-style table rendering, JSON result dumps, and
-//!   the per-cell sweep cache.
+//!   the per-cell sweep cache;
+//! * `analytics` -- `fxpnet report`: grid-wide stability aggregation
+//!   over caches + stability reports, and learned abort thresholds.
 
+pub mod analytics;
 pub mod backend;
 pub mod calibrate;
 pub mod config;

@@ -29,6 +29,7 @@ use crate::error::Result;
 use crate::model::params::ParamSet;
 use crate::quant::calib::LayerStats;
 use crate::quant::policy::{NetQuant, WidthSpec};
+use crate::train::telemetry::{TelemetryLog, TelemetrySummary};
 use crate::util::rng::derive_seed;
 
 /// Regime selector.
@@ -50,6 +51,20 @@ impl Regime {
             "prop2" => Some(Regime::Prop2 { top_layers: 1 }),
             "prop3" => Some(Regime::Prop3),
             _ => None,
+        }
+    }
+
+    /// Canonical short tag: the primary `parse` spelling.  Keys the
+    /// per-regime entries of an
+    /// [`AbortOverlay`](crate::coordinator::trainer::AbortOverlay) and
+    /// the regime field of stability reports, so it must stay stable.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            Regime::NoFinetune => "none",
+            Regime::Vanilla => "vanilla",
+            Regime::Prop1 => "prop1",
+            Regime::Prop2 { .. } => "prop2",
+            Regime::Prop3 => "prop3",
         }
     }
 
@@ -175,15 +190,12 @@ impl<'a> CellCtx<'a> {
         self.backend.evaluate(self.arch, params, nq, self.eval_data)
     }
 
-    /// The cell's early-abort policy: the conservative default predicates
-    /// when `cfg.early_abort` is on, `None` (reference full-run path)
-    /// under `--no-early-abort`.
-    pub fn abort_policy(&self) -> Option<AbortPolicy> {
-        if self.cfg.early_abort {
-            Some(AbortPolicy::default())
-        } else {
-            None
-        }
+    /// The cell's early-abort policy: the regime's resolved thresholds
+    /// (built-in defaults, or an `--abort-policy` overlay entry) when
+    /// `cfg.early_abort` is on, `None` (reference full-run path) under
+    /// `--no-early-abort`.
+    pub fn abort_policy(&self, regime: Regime) -> Option<AbortPolicy> {
+        self.cfg.abort_policy(regime.tag())
     }
 }
 
@@ -237,13 +249,32 @@ pub fn dispatch_cell(
     w: WidthSpec,
     a: WidthSpec,
 ) -> Result<CellResult> {
+    Ok(dispatch_cell_full(ctx, regime, base, p1, w, a)?.0)
+}
+
+/// [`dispatch_cell`] plus the cell's stability-telemetry digest.
+///
+/// Training regimes (vanilla, Proposals 2/3) always collect per-step
+/// telemetry -- collection never changes the numerics (the PR 6
+/// determinism contract, pinned in `rust/tests/train_native.rs`) -- and
+/// return its [`TelemetrySummary`].  Evaluation-only cells (no-finetune,
+/// Proposal 1, float-activation Proposal 3) train nothing and return
+/// `None`.
+pub fn dispatch_cell_full(
+    ctx: &CellCtx,
+    regime: Regime,
+    base: &ParamSet,
+    p1: Option<&ParamSet>,
+    w: WidthSpec,
+    a: WidthSpec,
+) -> Result<(CellResult, Option<TelemetrySummary>)> {
     match regime {
-        Regime::NoFinetune => run_no_finetune(ctx, base, w, a),
+        Regime::NoFinetune => Ok((run_no_finetune(ctx, base, w, a)?, None)),
         Regime::Vanilla => run_vanilla(ctx, base, w, a),
         Regime::Prop1 | Regime::Prop2 { .. } | Regime::Prop3 => match p1 {
-            None => Ok(CellEval::Na), // seed training itself diverged
+            None => Ok((CellEval::Na, None)), // seed training itself diverged
             Some(p1) => match regime {
-                Regime::Prop1 => run_prop1(ctx, p1, w, a),
+                Regime::Prop1 => Ok((run_prop1(ctx, p1, w, a)?, None)),
                 Regime::Prop2 { top_layers } => {
                     run_prop2(ctx, p1, w, a, top_layers)
                 }
@@ -252,7 +283,7 @@ pub fn dispatch_cell(
                     // already IS the answer (matches the paper: the Float
                     // row repeats across Tables 4-6)
                     if a == WidthSpec::Float {
-                        run_prop1(ctx, p1, w, a)
+                        Ok((run_prop1(ctx, p1, w, a)?, None))
                     } else {
                         run_prop3(ctx, p1, w, a)
                     }
@@ -275,28 +306,36 @@ pub fn run_no_finetune(
 }
 
 /// Table 3: plain fine-tuning of all layers under the cell's config.
+/// Returns the eval outcome plus the run's telemetry digest.
 pub fn run_vanilla(
     ctx: &CellCtx,
     base: &ParamSet,
     w: WidthSpec,
     a: WidthSpec,
-) -> Result<CellResult> {
+) -> Result<(CellResult, Option<TelemetrySummary>)> {
     let nq = ctx.resolve(base, w, a)?;
     let l = nq.num_layers();
     let mut tr = ctx.trainer(base, &nq, &upd_all(l), 3)?;
-    let policy = ctx.abort_policy();
-    let out =
-        run_session_with(&mut *tr, ctx.cfg.finetune_steps, 10, policy.as_ref(), None)?;
+    let policy = ctx.abort_policy(Regime::Vanilla);
+    let mut tlog = TelemetryLog::default();
+    let out = run_session_with(
+        &mut *tr,
+        ctx.cfg.finetune_steps,
+        10,
+        policy.as_ref(),
+        Some(&mut tlog),
+    )?;
+    let summary = TelemetrySummary::summarize(&tlog);
     if let Some((reason, step)) = out.aborted {
-        return Ok(CellEval::Aborted { reason, step });
+        return Ok((CellEval::Aborted { reason, step }, summary));
     }
     if out.diverged {
-        return Ok(CellEval::Na);
+        return Ok((CellEval::Na, summary));
     }
     let tuned = tr.params()?;
     // re-resolve weight formats against the *tuned* weights for eval
     let nq_eval = ctx.resolve(&tuned, w, a)?;
-    Ok(CellEval::Ok(ctx.evaluate(&tuned, &nq_eval)?))
+    Ok((CellEval::Ok(ctx.evaluate(&tuned, &nq_eval)?), summary))
 }
 
 /// The "last row of Table 3": fine-tune with quantized weights but float
@@ -340,22 +379,29 @@ pub fn run_prop2(
     w: WidthSpec,
     a: WidthSpec,
     top_layers: usize,
-) -> Result<CellResult> {
+) -> Result<(CellResult, Option<TelemetrySummary>)> {
     let nq = ctx.resolve(p1net, w, a)?;
     let l = nq.num_layers();
     let mut tr = ctx.trainer(p1net, &nq, &upd_top(l, top_layers), 7)?;
-    let policy = ctx.abort_policy();
-    let out =
-        run_session_with(&mut *tr, ctx.cfg.finetune_steps, 10, policy.as_ref(), None)?;
+    let policy = ctx.abort_policy(Regime::Prop2 { top_layers });
+    let mut tlog = TelemetryLog::default();
+    let out = run_session_with(
+        &mut *tr,
+        ctx.cfg.finetune_steps,
+        10,
+        policy.as_ref(),
+        Some(&mut tlog),
+    )?;
+    let summary = TelemetrySummary::summarize(&tlog);
     if let Some((reason, step)) = out.aborted {
-        return Ok(CellEval::Aborted { reason, step });
+        return Ok((CellEval::Aborted { reason, step }, summary));
     }
     if out.diverged {
-        return Ok(CellEval::Na);
+        return Ok((CellEval::Na, summary));
     }
     let tuned = tr.params()?;
     let nq_eval = ctx.resolve(&tuned, w, a)?;
-    Ok(CellEval::Ok(ctx.evaluate(&tuned, &nq_eval)?))
+    Ok((CellEval::Ok(ctx.evaluate(&tuned, &nq_eval)?), summary))
 }
 
 /// Table 6 (Proposal 3): the Table 1 schedule from the Prop1 net.
@@ -364,7 +410,7 @@ pub fn run_prop3(
     p1net: &ParamSet,
     w: WidthSpec,
     a: WidthSpec,
-) -> Result<CellResult> {
+) -> Result<(CellResult, Option<TelemetrySummary>)> {
     let full = ctx.resolve(p1net, w, a)?;
     let l = full.num_layers();
     let sched = phases::schedule(l);
@@ -374,7 +420,10 @@ pub fn run_prop3(
         let nq = full.with_act_prefix(p.act_prefix);
         ctx.trainer(p1net, &nq, &upd_single(l, p.update_layer), 11)?
     };
-    let policy = ctx.abort_policy();
+    let policy = ctx.abort_policy(Regime::Prop3);
+    // one log across all phases: global steps keep counting, so the
+    // summary windows span the whole schedule
+    let mut tlog = TelemetryLog::default();
     for (i, p) in sched.iter().enumerate() {
         if i > 0 {
             let nq = full.with_act_prefix(p.act_prefix);
@@ -386,20 +435,29 @@ pub fn run_prop3(
             )?;
             tr.reset_momenta()?;
         }
-        let out =
-            run_session_with(&mut *tr, ctx.cfg.phase_steps, 10, policy.as_ref(), None)?;
+        let out = run_session_with(
+            &mut *tr,
+            ctx.cfg.phase_steps,
+            10,
+            policy.as_ref(),
+            Some(&mut tlog),
+        )?;
         if let Some((reason, step)) = out.aborted {
             log::warn!("prop3 phase {} aborted ({})", p.number, reason.as_str());
-            return Ok(CellEval::Aborted { reason, step });
+            return Ok((
+                CellEval::Aborted { reason, step },
+                TelemetrySummary::summarize(&tlog),
+            ));
         }
         if out.diverged {
             log::warn!("prop3 phase {} diverged", p.number);
-            return Ok(CellEval::Na);
+            return Ok((CellEval::Na, TelemetrySummary::summarize(&tlog)));
         }
     }
+    let summary = TelemetrySummary::summarize(&tlog);
     let tuned = tr.params()?;
     let nq_eval = ctx.resolve(&tuned, w, a)?;
-    Ok(CellEval::Ok(ctx.evaluate(&tuned, &nq_eval)?))
+    Ok((CellEval::Ok(ctx.evaluate(&tuned, &nq_eval)?), summary))
 }
 
 #[cfg(test)]
@@ -442,6 +500,23 @@ mod tests {
         assert_eq!(Regime::from_seed_tag(0), None);
         assert_eq!(Regime::from_seed_tag(5), None); // Prop2 with 0 layers
         assert_eq!(Regime::from_seed_tag(999), None);
+    }
+
+    #[test]
+    fn regime_tags_parse_back() {
+        for r in [
+            Regime::NoFinetune,
+            Regime::Vanilla,
+            Regime::Prop1,
+            Regime::Prop2 { top_layers: 1 },
+            Regime::Prop3,
+        ] {
+            // tag is the canonical parse spelling (Prop2 re-parses with
+            // the default top_layers -- the tag keys overlay entries,
+            // not the variant's parameters)
+            assert_eq!(Regime::parse(r.tag()), Some(r));
+        }
+        assert_eq!(Regime::Prop2 { top_layers: 3 }.tag(), "prop2");
     }
 
     #[test]

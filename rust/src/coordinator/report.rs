@@ -68,6 +68,7 @@ use crate::coordinator::grid::{CellJob, GridResult};
 use crate::coordinator::regimes::{CellEval, CellResult, Regime};
 use crate::coordinator::trainer::AbortReason;
 use crate::error::{FxpError, Result};
+use crate::train::telemetry::TelemetrySummary;
 use crate::util::json::Json;
 
 /// Serialise a grid to JSON (for results/ dumps).
@@ -128,46 +129,73 @@ pub fn save_grid(g: &GridResult, dir: impl AsRef<Path>, topk: usize) -> Result<(
     Ok(())
 }
 
+/// Schema version stamped into every stability report, train-telemetry
+/// dump, and `fxpnet report` analytics output.  `fxpnet report` refuses
+/// inputs carrying a different version rather than silently
+/// misinterpreting them.  Bump whenever the report shape changes
+/// incompatibly -- v2: cells became a keyed object (cache cell keys),
+/// reports carry `report_version`/`kind`/`base_seed`, and training cells
+/// embed a [`TelemetrySummary`] digest.
+pub const REPORT_VERSION: usize = 2;
+
+/// Flatten a grid into cache-keyed cell evals (the shape
+/// [`stability_report_json`] consumes).  Useful when only a
+/// [`GridResult`] is at hand, e.g. tests re-deriving a report.
+pub fn grid_cells(g: &GridResult) -> BTreeMap<String, CellEval> {
+    let mut cells = BTreeMap::new();
+    for row in &g.outcomes {
+        for c in row {
+            cells.insert(cell_key(&c.w.label(), &c.a.label()), c.eval);
+        }
+    }
+    cells
+}
+
 /// Per-cell stability report of a sweep: where the table JSON hides the
 /// Na/Aborted distinction (both render as null metrics so early-abort
 /// sweeps stay byte-identical to the full-run reference), this report
-/// surfaces it -- status per cell in row-major axis order, abort
-/// reason/step where the policy fired, and summary counts.  Pure
-/// function of the grid, so `grid merge` regenerates the identical
-/// report from merged shard caches.
-pub fn stability_report_json(g: &GridResult) -> Json {
-    let mut cells = Vec::new();
+/// surfaces it -- status per cell (cache cell keys, [`cell_eval_to_json`]
+/// encoding), abort reason/step where the policy fired, summary counts,
+/// and for every cell that actually trained this run a
+/// [`TelemetrySummary`] digest under `"telemetry"`.  Cells live in a
+/// BTreeMap-keyed object and floats keep shortest-round-trip formatting,
+/// so the report is byte-deterministic: `grid merge` regenerates the
+/// identical report from merged shard caches, and `fxpnet report`
+/// byte-compares reports across `--threads` / `--shard` provenance.
+pub fn stability_report_json(
+    arch: &str,
+    regime: Regime,
+    base_seed: u64,
+    cells: &BTreeMap<String, CellEval>,
+    telemetry: &BTreeMap<String, TelemetrySummary>,
+) -> Json {
     let (mut n_ok, mut n_na, mut n_aborted) = (0usize, 0usize, 0usize);
-    for row in &g.outcomes {
-        for c in row {
-            let mut pairs = vec![
-                ("w", Json::Str(c.w.label())),
-                ("a", Json::Str(c.a.label())),
-            ];
-            match &c.eval {
-                CellEval::Ok(e) => {
-                    n_ok += 1;
-                    pairs.push(("status", Json::Str("ok".into())));
-                    pairs.push(("top1_err", Json::Num(e.top1_err)));
-                }
-                CellEval::Na => {
-                    n_na += 1;
-                    pairs.push(("status", Json::Str("na".into())));
-                }
-                CellEval::Aborted { reason, step } => {
-                    n_aborted += 1;
-                    pairs.push(("status", Json::Str("aborted".into())));
-                    pairs.push(("reason", Json::Str(reason.as_str().into())));
-                    pairs.push(("step", Json::from(*step)));
-                }
-            }
-            cells.push(Json::obj(pairs));
+    let mut out = BTreeMap::new();
+    for (key, eval) in cells {
+        let mut cell = match cell_eval_to_json(eval) {
+            Json::Obj(m) => m,
+            _ => unreachable!("cell_eval_to_json returns an object"),
+        };
+        // count the *encoded* status: a non-finite Ok flattens to "na"
+        // in cell_eval_to_json, and the summary must agree with the cells
+        match cell.get("status").and_then(|s| s.as_str().ok()) {
+            Some("ok") => n_ok += 1,
+            Some("aborted") => n_aborted += 1,
+            _ => n_na += 1,
         }
+        if let Some(s) = telemetry.get(key) {
+            cell.insert("telemetry".into(), s.to_json());
+        }
+        out.insert(key.clone(), Json::Obj(cell));
     }
     Json::obj(vec![
-        ("table", Json::from(g.regime.table_number())),
-        ("regime", Json::from(g.regime.label())),
-        ("arch", Json::Str(g.arch.clone())),
+        ("report_version", Json::from(REPORT_VERSION)),
+        ("kind", Json::Str("stability".into())),
+        ("table", Json::from(regime.table_number())),
+        ("regime", Json::Str(regime.tag().into())),
+        ("regime_tag", Json::from(regime.seed_tag() as usize)),
+        ("arch", Json::Str(arch.to_string())),
+        ("base_seed", Json::Str(base_seed.to_string())),
         (
             "summary",
             Json::obj(vec![
@@ -176,19 +204,30 @@ pub fn stability_report_json(g: &GridResult) -> Json {
                 ("aborted", Json::from(n_aborted)),
             ]),
         ),
-        ("cells", Json::Arr(cells)),
+        ("cells", Json::Obj(out)),
     ])
 }
 
 /// Write [`stability_report_json`] to `path` (parent dirs created).
-pub fn save_stability_report(g: &GridResult, path: impl AsRef<Path>) -> Result<()> {
+pub fn save_stability_report(
+    arch: &str,
+    regime: Regime,
+    base_seed: u64,
+    cells: &BTreeMap<String, CellEval>,
+    telemetry: &BTreeMap<String, TelemetrySummary>,
+    path: impl AsRef<Path>,
+) -> Result<()> {
     let path = path.as_ref();
     if let Some(dir) = path.parent() {
         if !dir.as_os_str().is_empty() {
             std::fs::create_dir_all(dir)?;
         }
     }
-    std::fs::write(path, stability_report_json(g).to_string())?;
+    std::fs::write(
+        path,
+        stability_report_json(arch, regime, base_seed, cells, telemetry)
+            .to_string(),
+    )?;
     log::info!("wrote stability report {}", path.display());
     Ok(())
 }
@@ -606,26 +645,58 @@ mod tests {
 
     #[test]
     fn stability_report_surfaces_abort_provenance() {
-        let j = stability_report_json(&grid());
+        use crate::train::telemetry::TelemetrySummary;
+        let g = grid();
+        let cells = grid_cells(&g);
+        assert_eq!(cells.len(), 4);
+        let mut telemetry = BTreeMap::new();
+        telemetry.insert(
+            "w=Float,a=4".to_string(),
+            TelemetrySummary {
+                steps: 3,
+                loss_start: 2.0,
+                loss_peak: 2.0,
+                loss_final: 1.5,
+                sat_final: 0.0,
+                sat_peak: 0.1,
+                ratio_min: Some(0.5),
+                ratio_final: Some(0.5),
+                windows: Vec::new(),
+            },
+        );
+        let j = stability_report_json("tiny", g.regime, 42, &cells, &telemetry);
         let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(
+            parsed.get("report_version").unwrap().as_usize().unwrap(),
+            REPORT_VERSION
+        );
+        assert_eq!(parsed.get("kind").unwrap().as_str().unwrap(), "stability");
+        assert_eq!(parsed.get("regime").unwrap().as_str().unwrap(), "prop3");
+        assert_eq!(parsed.get("base_seed").unwrap().as_str().unwrap(), "42");
         let summary = parsed.get("summary").unwrap();
         assert_eq!(summary.get("ok").unwrap().as_usize().unwrap(), 1);
         assert_eq!(summary.get("na").unwrap().as_usize().unwrap(), 2);
         assert_eq!(summary.get("aborted").unwrap().as_usize().unwrap(), 1);
-        let cells = parsed.get("cells").unwrap().as_arr().unwrap();
-        assert_eq!(cells.len(), 4);
-        assert_eq!(cells[2].get("status").unwrap().as_str().unwrap(), "aborted");
+        let out = parsed.get("cells").unwrap();
+        let aborted = out.get("w=4,a=Float").unwrap();
+        assert_eq!(aborted.get("status").unwrap().as_str().unwrap(), "aborted");
         assert_eq!(
-            cells[2].get("reason").unwrap().as_str().unwrap(),
+            aborted.get("reason").unwrap().as_str().unwrap(),
             AbortReason::NanLoss.as_str()
         );
-        assert_eq!(cells[2].get("step").unwrap().as_usize().unwrap(), 37);
-        // ok cells carry their error so the report doubles as the
-        // theory-vs-practice table; na cells stay bare
-        assert!(cells[1].opt("top1_err").is_some());
-        assert!(cells[0].opt("top1_err").is_none());
+        assert_eq!(aborted.get("step").unwrap().as_usize().unwrap(), 37);
+        // ok cells carry their metrics; the trained cell embeds its
+        // telemetry digest; na cells stay bare
+        let ok = out.get("w=Float,a=4").unwrap();
+        assert!(ok.opt("top1_err").is_some());
+        assert!(ok.opt("telemetry").is_some());
+        assert!(out.get("w=4,a=4").unwrap().opt("top1_err").is_none());
         // deterministic serialization: two renders are byte-identical
-        assert_eq!(j.to_string(), stability_report_json(&grid()).to_string());
+        assert_eq!(
+            j.to_string(),
+            stability_report_json("tiny", g.regime, 42, &cells, &telemetry)
+                .to_string()
+        );
     }
 
     #[test]
@@ -633,9 +704,17 @@ mod tests {
         let dir = std::env::temp_dir().join("fxp_stability_report_test");
         let _ = std::fs::remove_dir_all(&dir);
         let path = dir.join("nested").join("stability_tiny.json");
-        save_stability_report(&grid(), &path).unwrap();
+        let g = grid();
+        let cells = grid_cells(&g);
+        let telemetry = BTreeMap::new();
+        save_stability_report("tiny", g.regime, 42, &cells, &telemetry, &path)
+            .unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
-        assert_eq!(text, stability_report_json(&grid()).to_string());
+        assert_eq!(
+            text,
+            stability_report_json("tiny", g.regime, 42, &cells, &telemetry)
+                .to_string()
+        );
     }
 
     #[test]

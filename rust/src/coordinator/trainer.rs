@@ -31,6 +31,7 @@ use crate::runtime::literal::{to_literal, HostValue};
 use crate::runtime::{Engine, Executable};
 use crate::tensor::Tensor;
 use crate::train::telemetry::{StepStats, TelemetryLog};
+use crate::util::json::Json;
 
 /// Result of a training run.
 #[derive(Clone, Debug)]
@@ -111,7 +112,7 @@ impl AbortReason {
 /// (`--no-early-abort`) is byte-identical to the pre-policy loop, and a
 /// policy can only end a run the detector would call diverged anyway or
 /// whose sustained statistics match a doomed profile.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct AbortPolicy {
     /// consecutive flagged steps a sustained predicate needs to fire
     pub window: usize,
@@ -135,6 +136,129 @@ impl Default for AbortPolicy {
             sat_rate: 0.5,
             collapse_ratio: 1e-3,
         }
+    }
+}
+
+/// Schema version stamped into `--abort-policy` overlay files; bumped
+/// whenever the policy fields or their semantics change.
+pub const POLICY_VERSION: usize = 1;
+
+impl AbortPolicy {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("window", Json::from(self.window)),
+            ("min_steps", Json::from(self.min_steps)),
+            ("blowup_factor", Json::Num(self.blowup_factor as f64)),
+            ("sat_rate", Json::Num(self.sat_rate)),
+            ("collapse_ratio", Json::Num(self.collapse_ratio as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<AbortPolicy> {
+        Ok(AbortPolicy {
+            window: j.get("window")?.as_usize()?,
+            min_steps: j.get("min_steps")?.as_usize()?,
+            blowup_factor: j.get("blowup_factor")?.as_f64()? as f32,
+            sat_rate: j.get("sat_rate")?.as_f64()?,
+            collapse_ratio: j.get("collapse_ratio")?.as_f64()? as f32,
+        })
+    }
+
+    /// The policy's parameters as a stable word sequence for seed/cache
+    /// fingerprints (floats by bit pattern): two sweeps agree on this
+    /// iff their resolved policies are bit-identical.
+    pub fn fingerprint_words(&self) -> [u64; 5] {
+        [
+            self.window as u64,
+            self.min_steps as u64,
+            self.blowup_factor.to_bits() as u64,
+            self.sat_rate.to_bits(),
+            self.collapse_ratio.to_bits() as u64,
+        ]
+    }
+}
+
+/// Per-regime [`AbortPolicy`] overrides, loaded from a `--abort-policy`
+/// overlay file (the output of `fxpnet report --suggest-thresholds`).
+///
+/// Resolution order for a regime tag: an exact `regimes` entry, else the
+/// overlay's `default` policy, else [`AbortPolicy::default`].  The file
+/// shape is
+///
+/// ```json
+/// {"policy_version": 1, "kind": "abort-policy",
+///  "default": {"window": 8, ...},
+///  "regimes": {"vanilla": {"window": 8, ...}}}
+/// ```
+///
+/// with `default` optional and `regimes` possibly empty.  Files with a
+/// different `policy_version` are refused outright -- a stale overlay
+/// silently reinterpreted under new predicate semantics could abort
+/// cells that would converge.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct AbortOverlay {
+    pub default: Option<AbortPolicy>,
+    pub regimes: std::collections::BTreeMap<String, AbortPolicy>,
+}
+
+impl AbortOverlay {
+    /// The effective policy for one regime tag (see type docs).
+    pub fn resolve(&self, tag: &str) -> AbortPolicy {
+        self.regimes
+            .get(tag)
+            .or(self.default.as_ref())
+            .cloned()
+            .unwrap_or_default()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("policy_version", Json::from(POLICY_VERSION)),
+            ("kind", Json::from("abort-policy")),
+            (
+                "regimes",
+                Json::Obj(
+                    self.regimes
+                        .iter()
+                        .map(|(k, p)| (k.clone(), p.to_json()))
+                        .collect(),
+                ),
+            ),
+        ];
+        if let Some(d) = &self.default {
+            pairs.push(("default", d.to_json()));
+        }
+        Json::obj(pairs)
+    }
+
+    pub fn parse(text: &str) -> Result<AbortOverlay> {
+        let j = Json::parse(text)?;
+        let version = j.get("policy_version")?.as_usize()?;
+        if version != POLICY_VERSION {
+            return Err(FxpError::config(format!(
+                "abort-policy overlay has policy_version {version}, this \
+                 build expects {POLICY_VERSION}; regenerate it with \
+                 `fxpnet report --suggest-thresholds`"
+            )));
+        }
+        let mut regimes = std::collections::BTreeMap::new();
+        for (tag, p) in j.get("regimes")?.as_obj()? {
+            regimes.insert(tag.clone(), AbortPolicy::from_json(p)?);
+        }
+        let default = match j.opt("default") {
+            Some(d) => Some(AbortPolicy::from_json(d)?),
+            None => None,
+        };
+        Ok(AbortOverlay { default, regimes })
+    }
+
+    pub fn load(path: &str) -> Result<AbortOverlay> {
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            FxpError::config(format!("abort-policy overlay {path}: {e}"))
+        })?;
+        AbortOverlay::parse(&text).map_err(|e| {
+            FxpError::config(format!("abort-policy overlay {path}: {e}"))
+        })
     }
 }
 
@@ -778,6 +902,47 @@ mod tests {
         let out = run_session_with(&mut s, 60, 1, Some(&policy), None).unwrap();
         assert_eq!(out.aborted, None);
         assert!(!out.diverged);
+    }
+
+    #[test]
+    fn abort_overlay_resolution_and_round_trip() {
+        let tuned = AbortPolicy {
+            window: 12,
+            min_steps: 30,
+            blowup_factor: 4.5,
+            sat_rate: 0.7,
+            collapse_ratio: 2.5e-4,
+        };
+        let mut overlay = AbortOverlay::default();
+        overlay.regimes.insert("vanilla".into(), tuned.clone());
+        // exact regime entry wins; unknown tags fall through to the
+        // built-in default when the overlay has none of its own
+        assert_eq!(overlay.resolve("vanilla").window, 12);
+        assert_eq!(overlay.resolve("prop3").window, AbortPolicy::default().window);
+        overlay.default = Some(AbortPolicy { window: 99, ..tuned.clone() });
+        assert_eq!(overlay.resolve("prop3").window, 99);
+        assert_eq!(overlay.resolve("vanilla").window, 12);
+
+        let text = overlay.to_json().to_string();
+        let back = AbortOverlay::parse(&text).unwrap();
+        assert_eq!(back, overlay);
+        assert_eq!(
+            back.resolve("vanilla").fingerprint_words(),
+            tuned.fingerprint_words()
+        );
+    }
+
+    #[test]
+    fn abort_overlay_refuses_wrong_version() {
+        let mut j = AbortOverlay::default().to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("policy_version".into(), Json::from(POLICY_VERSION + 1));
+        }
+        let err = AbortOverlay::parse(&j.to_string()).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("policy_version"), "{msg}");
+        // and files missing the stamp entirely are refused too
+        assert!(AbortOverlay::parse("{}").is_err());
     }
 
     #[test]

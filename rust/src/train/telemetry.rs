@@ -154,6 +154,247 @@ impl TelemetryLog {
     }
 }
 
+/// Steps per trajectory window in [`TelemetrySummary`].  Pinned: the
+/// window width shapes every stability report's bytes, so changing it
+/// means bumping `report::REPORT_VERSION`.
+pub const SUMMARY_WINDOW_STEPS: usize = 25;
+
+/// Fixed quantile probabilities summarizing each window's
+/// update-to-step ratios (min / quartiles / max).
+pub const SUMMARY_QUANTILES: [f64; 5] = [0.0, 0.25, 0.5, 0.75, 1.0];
+
+/// Serialize a float that may legitimately be non-finite (a NaN-loss
+/// abort records the NaN step): finite values stay JSON numbers,
+/// non-finite become the strings `"nan"` / `"inf"` / `"-inf"` so the
+/// output is always valid JSON and still deterministic.
+pub(crate) fn num_json(v: f64) -> Json {
+    if v.is_finite() {
+        Json::Num(v)
+    } else if v.is_nan() {
+        Json::from("nan")
+    } else if v > 0.0 {
+        Json::from("inf")
+    } else {
+        Json::from("-inf")
+    }
+}
+
+pub(crate) fn num_from_json(j: &Json) -> crate::error::Result<f64> {
+    match j {
+        Json::Num(n) => Ok(*n),
+        Json::Str(s) => match s.as_str() {
+            "nan" => Ok(f64::NAN),
+            "inf" => Ok(f64::INFINITY),
+            "-inf" => Ok(f64::NEG_INFINITY),
+            _ => Err(crate::error::FxpError::Json(format!(
+                "not a number: \"{s}\""
+            ))),
+        },
+        other => {
+            Err(crate::error::FxpError::Json(format!("not a number: {other}")))
+        }
+    }
+}
+
+fn opt_f32_json(v: Option<f32>) -> Json {
+    match v {
+        Some(x) => num_json(x as f64),
+        None => Json::Null,
+    }
+}
+
+fn opt_f32_from_json(j: &Json) -> crate::error::Result<Option<f32>> {
+    match j {
+        Json::Null => Ok(None),
+        other => Ok(Some(num_from_json(other)? as f32)),
+    }
+}
+
+/// Linear-interpolation quantiles of an already-sorted slice at the
+/// [`SUMMARY_QUANTILES`] probabilities: index `p * (n-1)` between
+/// neighbours.  With `n == 1` every quantile is the single value; with
+/// all-equal inputs every quantile equals that value exactly (the
+/// interpolation `lo + (hi-lo)*frac` is `lo` when `hi == lo`).
+pub(crate) fn quantiles(sorted: &[f64]) -> Vec<f64> {
+    SUMMARY_QUANTILES
+        .iter()
+        .map(|&q| {
+            let pos = q * (sorted.len() - 1) as f64;
+            let lo = pos.floor() as usize;
+            let hi = pos.ceil() as usize;
+            let frac = pos - lo as f64;
+            sorted[lo] + (sorted[hi] - sorted[lo]) * frac
+        })
+        .collect()
+}
+
+/// Quantile summary of the update-to-step ratios over one pinned window
+/// of [`SUMMARY_WINDOW_STEPS`] consecutive steps.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WindowSummary {
+    /// global step of the window's first record
+    pub start_step: usize,
+    /// global step of the window's last record (inclusive)
+    pub end_step: usize,
+    /// steps in the window that produced a ratio (active quantized
+    /// layers existed); `ratio_q` is empty when this is 0
+    pub count: usize,
+    /// [`SUMMARY_QUANTILES`] of the per-step `min_upd_to_step` ratios
+    pub ratio_q: Vec<f64>,
+}
+
+impl WindowSummary {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("start_step", Json::from(self.start_step)),
+            ("end_step", Json::from(self.end_step)),
+            ("count", Json::from(self.count)),
+            ("ratio_q", Json::Arr(self.ratio_q.iter().map(|&r| num_json(r)).collect())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> crate::error::Result<WindowSummary> {
+        Ok(WindowSummary {
+            start_step: j.get("start_step")?.as_usize()?,
+            end_step: j.get("end_step")?.as_usize()?,
+            count: j.get("count")?.as_usize()?,
+            ratio_q: j
+                .get("ratio_q")?
+                .as_arr()?
+                .iter()
+                .map(num_from_json)
+                .collect::<crate::error::Result<_>>()?,
+        })
+    }
+}
+
+/// Compact per-run digest of a [`TelemetryLog`]: what the stability
+/// report persists per cell instead of the raw per-step stream.
+///
+/// Everything here is a deterministic pure function of the log, which is
+/// itself bit-identical for any `--threads` count -- so two summaries
+/// agree byte-for-byte iff the runs agreed bit-for-bit.  `loss_start`
+/// uses the same "mean of the first <= 5 losses" baseline as
+/// [`AbortPolicy`](crate::coordinator::trainer::AbortPolicy)'s blow-up
+/// predicate, so thresholds learned from summaries compare
+/// apples-to-apples with what the live watcher will see.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TelemetrySummary {
+    /// steps recorded (== steps executed: the sink sees every step)
+    pub steps: usize,
+    /// mean of the first <= 5 losses (the abort watcher's baseline)
+    pub loss_start: f32,
+    /// highest finite loss observed
+    pub loss_peak: f32,
+    /// last recorded loss (NaN when the run died on a NaN step)
+    pub loss_final: f32,
+    /// saturation rate of the final step
+    pub sat_final: f64,
+    /// highest per-step saturation rate over the run
+    pub sat_peak: f64,
+    /// smallest per-step `min_upd_to_step` over the run; `None` when no
+    /// step had an active quantized layer
+    pub ratio_min: Option<f32>,
+    /// final step's `min_upd_to_step`
+    pub ratio_final: Option<f32>,
+    /// ratio-trajectory quantiles over pinned step windows
+    pub windows: Vec<WindowSummary>,
+}
+
+impl TelemetrySummary {
+    /// Digest a telemetry log; `None` for an empty log (a regime that
+    /// never trained, e.g. no-finetune / Proposal 1 cells).
+    pub fn summarize(log: &TelemetryLog) -> Option<TelemetrySummary> {
+        if log.is_empty() {
+            return None;
+        }
+        let head: Vec<f32> =
+            log.steps.iter().take(5).map(|s| s.loss).collect();
+        let loss_start = head.iter().sum::<f32>() / head.len() as f32;
+        // f32::max ignores a NaN operand, so NaN-loss steps (recorded,
+        // then the run dies) cannot poison the peak
+        let loss_peak = log
+            .steps
+            .iter()
+            .map(|s| s.loss)
+            .fold(f32::NEG_INFINITY, f32::max);
+        let last = log.steps.last().expect("non-empty");
+        let sat_final = last.sat_rate();
+        let sat_peak = log
+            .steps
+            .iter()
+            .map(StepStats::sat_rate)
+            .fold(0.0f64, f64::max);
+        let ratio_min = log
+            .steps
+            .iter()
+            .filter_map(StepStats::min_upd_to_step)
+            .fold(None, |m: Option<f32>, x| Some(m.map_or(x, |m| m.min(x))));
+        let mut windows = Vec::new();
+        for chunk in log.steps.chunks(SUMMARY_WINDOW_STEPS) {
+            let mut rs: Vec<f64> = chunk
+                .iter()
+                .filter_map(StepStats::min_upd_to_step)
+                .map(|r| r as f64)
+                .collect();
+            rs.sort_by(f64::total_cmp);
+            windows.push(WindowSummary {
+                start_step: chunk[0].step,
+                end_step: chunk[chunk.len() - 1].step,
+                count: rs.len(),
+                ratio_q: if rs.is_empty() { Vec::new() } else { quantiles(&rs) },
+            });
+        }
+        Some(TelemetrySummary {
+            steps: log.len(),
+            loss_start,
+            loss_peak,
+            loss_final: last.loss,
+            sat_final,
+            sat_peak,
+            ratio_min,
+            ratio_final: last.min_upd_to_step(),
+            windows,
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("steps", Json::from(self.steps)),
+            ("loss_start", num_json(self.loss_start as f64)),
+            ("loss_peak", num_json(self.loss_peak as f64)),
+            ("loss_final", num_json(self.loss_final as f64)),
+            ("sat_final", num_json(self.sat_final)),
+            ("sat_peak", num_json(self.sat_peak)),
+            ("ratio_min", opt_f32_json(self.ratio_min)),
+            ("ratio_final", opt_f32_json(self.ratio_final)),
+            (
+                "windows",
+                Json::Arr(self.windows.iter().map(WindowSummary::to_json).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> crate::error::Result<TelemetrySummary> {
+        Ok(TelemetrySummary {
+            steps: j.get("steps")?.as_usize()?,
+            loss_start: num_from_json(j.get("loss_start")?)? as f32,
+            loss_peak: num_from_json(j.get("loss_peak")?)? as f32,
+            loss_final: num_from_json(j.get("loss_final")?)? as f32,
+            sat_final: num_from_json(j.get("sat_final")?)?,
+            sat_peak: num_from_json(j.get("sat_peak")?)?,
+            ratio_min: opt_f32_from_json(j.get("ratio_min")?)?,
+            ratio_final: opt_f32_from_json(j.get("ratio_final")?)?,
+            windows: j
+                .get("windows")?
+                .as_arr()?
+                .iter()
+                .map(WindowSummary::from_json)
+                .collect::<crate::error::Result<_>>()?,
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -209,5 +450,87 @@ mod tests {
         // f32 -> f64 widening is exact, so the loss round-trips bit-exactly
         let loss = steps[0].get("loss").unwrap().as_f64().unwrap();
         assert_eq!(loss as f32, 0.1f32 + 0.2f32);
+    }
+
+    fn log_of(ratios: &[f32]) -> TelemetryLog {
+        let mut log = TelemetryLog::default();
+        for (i, &r) in ratios.iter().enumerate() {
+            log.push(StepStats {
+                step: i + 1,
+                loss: 2.0 - 0.01 * i as f32,
+                layers: vec![layer(true, true, i as u64, 10, r)],
+            });
+        }
+        log
+    }
+
+    #[test]
+    fn summary_of_empty_log_is_none() {
+        assert_eq!(TelemetrySummary::summarize(&TelemetryLog::default()), None);
+    }
+
+    #[test]
+    fn quantiles_single_sample_all_equal() {
+        // n = 1: every quantile is the single value
+        let s = TelemetrySummary::summarize(&log_of(&[0.25])).unwrap();
+        assert_eq!(s.steps, 1);
+        assert_eq!(s.windows.len(), 1);
+        assert_eq!(s.windows[0].count, 1);
+        assert_eq!(s.windows[0].ratio_q, vec![0.25; 5]);
+        assert_eq!(s.ratio_min, Some(0.25));
+        assert_eq!(s.ratio_final, Some(0.25));
+        // all-equal: interpolation collapses to the common value exactly
+        let s = TelemetrySummary::summarize(&log_of(&[0.5; 7])).unwrap();
+        assert_eq!(s.windows[0].ratio_q, vec![0.5; 5]);
+    }
+
+    #[test]
+    fn quantiles_interpolate_and_window_split() {
+        // 30 steps: windows [1..25] and [26..30]
+        let ratios: Vec<f32> = (0..30).map(|i| i as f32).collect();
+        let s = TelemetrySummary::summarize(&log_of(&ratios)).unwrap();
+        assert_eq!(s.windows.len(), 2);
+        assert_eq!((s.windows[0].start_step, s.windows[0].end_step), (1, 25));
+        assert_eq!((s.windows[1].start_step, s.windows[1].end_step), (26, 30));
+        assert_eq!(s.windows[0].count, 25);
+        assert_eq!(s.windows[1].count, 5);
+        // window 1 holds 0..=24 sorted: min 0, median 12, max 24
+        assert_eq!(s.windows[0].ratio_q[0], 0.0);
+        assert_eq!(s.windows[0].ratio_q[2], 12.0);
+        assert_eq!(s.windows[0].ratio_q[4], 24.0);
+        // quartile of 25 values: index 0.25 * 24 = 6 exactly
+        assert_eq!(s.windows[0].ratio_q[1], 6.0);
+        // window 2 holds 25..=29: quartile interpolates at index 1.0
+        assert_eq!(s.windows[1].ratio_q[1], 26.0);
+        assert_eq!(s.ratio_min, Some(0.0));
+        assert_eq!(s.ratio_final, Some(29.0));
+    }
+
+    #[test]
+    fn summary_loss_baseline_matches_abort_watch() {
+        // loss_start = mean of the first <= 5 losses, in f32, exactly as
+        // AbortWatch computes its blow-up baseline
+        let s = TelemetrySummary::summarize(&log_of(&[0.1; 8])).unwrap();
+        let head: Vec<f32> = (0..5).map(|i| 2.0 - 0.01 * i as f32).collect();
+        let expect = head.iter().sum::<f32>() / 5.0;
+        assert_eq!(s.loss_start, expect);
+        assert_eq!(s.loss_peak, 2.0);
+        assert_eq!(s.loss_final, 2.0 - 0.01 * 7.0);
+    }
+
+    #[test]
+    fn summary_json_round_trips_including_nan() {
+        let mut log = log_of(&[0.2, 0.3]);
+        log.push(StepStats { step: 3, loss: f32::NAN, layers: vec![] });
+        let s = TelemetrySummary::summarize(&log).unwrap();
+        assert!(s.loss_final.is_nan());
+        assert_eq!(s.loss_peak, 2.0); // NaN ignored by the peak
+        assert_eq!(s.ratio_final, None); // layer-less final step
+        let text = s.to_json().to_string();
+        let back =
+            TelemetrySummary::from_json(&Json::parse(&text).unwrap()).unwrap();
+        // NaN != NaN, so compare through the serialized form
+        assert_eq!(back.to_json().to_string(), text);
+        assert!(back.loss_final.is_nan());
     }
 }

@@ -26,6 +26,7 @@ use fxpnet::coordinator::regimes::{CellResult, Regime};
 use fxpnet::coordinator::report::save_grid;
 use fxpnet::coordinator::shard::{LockOpts, ShardedCache};
 use fxpnet::error::Result;
+use fxpnet::train::telemetry::TelemetrySummary;
 
 const ARCH: &str = "tiny";
 const SEED: u64 = 42;
@@ -158,9 +159,12 @@ fn spawn_worker(opts: WorkerOpts) -> JoinHandle<Result<cluster::WorkerReport>> {
 struct PacedExec(Duration);
 
 impl CellExec for PacedExec {
-    fn run(&mut self, job: &CellJob) -> Result<CellResult> {
+    fn run(
+        &mut self,
+        job: &CellJob,
+    ) -> Result<(CellResult, Option<TelemetrySummary>)> {
         std::thread::sleep(self.0);
-        grid::synthetic_cell(job)
+        grid::synthetic_cell(job).map(|r| (r, None))
     }
 }
 

@@ -9,6 +9,7 @@ use fxpnet::cluster::proto::{
 use fxpnet::coordinator::evaluator::EvalResult;
 use fxpnet::coordinator::regimes::CellEval;
 use fxpnet::coordinator::trainer::AbortReason;
+use fxpnet::train::telemetry::{TelemetrySummary, WindowSummary};
 use fxpnet::util::rng::Rng;
 
 /// A reader that hands out bytes in seeded random-size chunks, modeling
@@ -86,8 +87,32 @@ fn all_messages() -> Vec<Msg> {
             key: format!("w=8,a={i}"),
             attempt: i + 1,
             eval,
+            telemetry: None,
         });
     }
+    // a Result carrying its stability digest (proto v2)
+    msgs.push(Msg::Result {
+        flat: 9,
+        key: "w=4,a=Float".into(),
+        attempt: 2,
+        eval: CellEval::Na,
+        telemetry: Some(TelemetrySummary {
+            steps: 40,
+            loss_start: 2.5,
+            loss_peak: 0.1f32 + 0.2, // not exactly representable: bit test
+            loss_final: 3.25,
+            sat_final: 0.0625,
+            sat_peak: 1.0 / 3.0,
+            ratio_min: Some(f32::MIN_POSITIVE),
+            ratio_final: None,
+            windows: vec![WindowSummary {
+                start_step: 0,
+                end_step: 25,
+                count: 25,
+                ratio_q: vec![1e-4, 2e-4, 3e-4, 4e-4, 5e-4],
+            }],
+        }),
+    });
     msgs
 }
 
@@ -249,6 +274,7 @@ fn float_bits_survive_the_wire_exactly() {
                 top5_err: 0.0,
                 mean_loss: v,
             }),
+            telemetry: None,
         };
         let mut wire = Vec::new();
         write_frame(&mut wire, &msg).unwrap();

@@ -81,18 +81,23 @@ fn all_regimes_produce_outcomes() {
         regimes::run_no_finetune(&ctx, &f.base, w, a).unwrap().ok().unwrap();
     assert!(noft.top1_err <= 1.0 && noft.mean_loss.is_finite());
 
-    let vanilla = regimes::run_vanilla(&ctx, &f.base, w, a).unwrap();
+    // training regimes return (outcome, telemetry digest); a cell that
+    // actually trained always carries its digest
+    let (vanilla, tele) = regimes::run_vanilla(&ctx, &f.base, w, a).unwrap();
     assert!(vanilla.is_ok());
+    assert!(tele.is_some(), "vanilla trained but produced no telemetry");
 
     let p1net = regimes::train_float_act_net(&ctx, &f.base, w).unwrap().unwrap();
     let p1 = regimes::run_prop1(&ctx, &p1net, w, a).unwrap().ok().unwrap();
     assert!(p1.mean_loss.is_finite());
 
-    let p2 = regimes::run_prop2(&ctx, &p1net, w, a, 1).unwrap();
+    let (p2, tele) = regimes::run_prop2(&ctx, &p1net, w, a, 1).unwrap();
     assert!(p2.is_ok());
+    assert!(tele.is_some(), "prop2 trained but produced no telemetry");
 
-    let p3 = regimes::run_prop3(&ctx, &p1net, w, a).unwrap();
+    let (p3, tele) = regimes::run_prop3(&ctx, &p1net, w, a).unwrap();
     assert!(p3.is_ok());
+    assert!(tele.is_some(), "prop3 trained but produced no telemetry");
 }
 
 #[test]

@@ -1,0 +1,326 @@
+//! Integration: the `fxpnet report` analytics pipeline end-to-end on
+//! real native sweeps -- byte-identical analytics JSON across thread
+//! counts, shard splits, and cache-vs-report provenance; property
+//! coverage for empty/aborted-only/single-cell inputs and quantile
+//! edges; and the acceptance pin for `--suggest-thresholds`: a policy
+//! learned from a sweep never aborts a cell that converged in it.
+//!
+//! Everything here runs in the offline build -- no artifacts, no XLA.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use fxpnet::coordinator::analytics::Analytics;
+use fxpnet::coordinator::backend::{Backend, BackendSpec};
+use fxpnet::coordinator::config::RunCfg;
+use fxpnet::coordinator::evaluator::EvalResult;
+use fxpnet::coordinator::grid::{ParallelGridRunner, SweepOpts};
+use fxpnet::coordinator::regimes::{CellEval, Regime};
+use fxpnet::coordinator::report;
+use fxpnet::coordinator::trainer::{AbortOverlay, AbortReason};
+use fxpnet::data::synth::Dataset;
+use fxpnet::model::params::ParamSet;
+use fxpnet::train::telemetry::TelemetrySummary;
+use fxpnet::train::NativeBackend;
+use fxpnet::util::json::Json;
+
+fn temp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("fxp_report_analytics_{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// The doomed native fixture from `train_native.rs`: lr=1000 NaNs the
+/// float cells while quantized clamps keep most fixed-point cells
+/// converging, so one real sweep yields Ok, Na and Aborted cells plus
+/// their telemetry digests.
+fn doomed_runner() -> ParallelGridRunner {
+    let backend = NativeBackend::new();
+    let spec = backend.arch("tiny").unwrap();
+    let base = ParamSet::init(&spec, 77);
+    let train = Dataset::generate(64, 16, 16, 201);
+    let eval = Dataset::generate(32, 16, 16, 202);
+    let a_stats = backend.activation_stats("tiny", &base, &train, 1).unwrap();
+    let cfg = RunCfg {
+        finetune_steps: 12,
+        phase_steps: 2,
+        calib_batches: 1,
+        workers: 1,
+        lr: 1000.0,
+        ..RunCfg::default()
+    };
+    ParallelGridRunner {
+        backend: BackendSpec::Native,
+        arch: "tiny".to_string(),
+        base,
+        a_stats,
+        train_data: train,
+        eval_data: eval,
+        cfg,
+    }
+}
+
+fn report_text(sweep_cells: &BTreeMap<String, CellEval>,
+               telemetry: &BTreeMap<String, TelemetrySummary>,
+               seed: u64) -> String {
+    report::stability_report_json(
+        "tiny",
+        Regime::Vanilla,
+        seed,
+        sweep_cells,
+        telemetry,
+    )
+    .to_string()
+}
+
+/// The analytics JSON must be a pure function of the sweep: the same
+/// bytes whether the inputs were produced with `--threads 2`, as two
+/// shard halves, or read back from cell caches instead of stability
+/// reports -- and regardless of ingestion order.
+#[test]
+fn analytics_bytes_identical_across_threads_shards_and_provenance() {
+    let dir = temp_dir("provenance");
+    let runner = doomed_runner();
+    let seed = runner.cfg.seed;
+    let full_cache = dir.join("cache.json");
+    let reference = runner
+        .run_sweep(
+            Regime::Vanilla,
+            &SweepOpts {
+                workers: 1,
+                cache_path: Some(full_cache.clone()),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    assert!(reference.is_complete());
+    assert!(!reference.telemetry.is_empty(), "no telemetry digests");
+    let ref_report = report_text(&reference.cells, &reference.telemetry, seed);
+
+    let mut a = Analytics::new();
+    a.ingest_text("ref", &ref_report).unwrap();
+    let want = a.to_json().to_string();
+    assert!(!a.is_empty());
+
+    // --threads 2 + 2 workers: byte-identical stability report, hence
+    // byte-identical analytics
+    let mut threaded = doomed_runner();
+    threaded.cfg.threads = 2;
+    let t2 = threaded
+        .run_sweep(Regime::Vanilla, &SweepOpts { workers: 2, ..Default::default() })
+        .unwrap();
+    assert_eq!(
+        ref_report,
+        report_text(&t2.cells, &t2.telemetry, seed),
+        "stability report differs between --threads 1 and --threads 2"
+    );
+
+    // two shard halves: each emits a partial stability report and a
+    // split cell cache
+    let base = dir.join("shard_cache.json");
+    let mut shard_inputs: Vec<String> = Vec::new();
+    for index in 0..2usize {
+        let opts = SweepOpts {
+            workers: 2,
+            shard: Some((index, 2)),
+            cache_path: Some(base.clone()),
+            split_cache: true,
+            ..Default::default()
+        };
+        let half = doomed_runner().run_sweep(Regime::Vanilla, &opts).unwrap();
+        shard_inputs.push(report_text(&half.cells, &half.telemetry, seed));
+        shard_inputs
+            .push(std::fs::read_to_string(opts.cache_file().unwrap()).unwrap());
+    }
+    // plus the full-run cache: every provenance at once, strict-unioned
+    shard_inputs.push(std::fs::read_to_string(&full_cache).unwrap());
+    shard_inputs.push(ref_report.clone());
+
+    // any ingestion order produces the same bytes
+    for order in [vec![0usize, 1, 2, 3, 4, 5], vec![5, 3, 1, 4, 2, 0], vec![2, 4, 0, 5, 1, 3]] {
+        let mut b = Analytics::new();
+        for &i in &order {
+            b.ingest_text(&format!("input{i}"), &shard_inputs[i]).unwrap();
+        }
+        assert_eq!(b.sweep_count(), 1, "inputs split into multiple sweeps");
+        assert_eq!(
+            want,
+            b.to_json().to_string(),
+            "analytics bytes differ for ingestion order {order:?}"
+        );
+    }
+
+    // the human table is deterministic too, and non-trivial
+    let rendered = a.render();
+    assert!(rendered.contains("vanilla"), "{rendered}");
+    assert_eq!(rendered, a.render());
+}
+
+/// The acceptance pin: thresholds learned from a sweep, written through
+/// the overlay JSON round-trip and fed back via `RunCfg.abort_overlay`,
+/// never abort a cell that converged in that sweep -- and the re-swept
+/// published table reproduces the reference byte-for-byte.
+#[test]
+fn learned_policy_never_aborts_converged_cells() {
+    let runner = doomed_runner();
+    let seed = runner.cfg.seed;
+    let first = runner
+        .run_sweep(Regime::Vanilla, &SweepOpts { workers: 2, ..Default::default() })
+        .unwrap();
+    let n_ok = first.cells.values().filter(|e| e.is_ok()).count();
+    let n_aborted = first
+        .cells
+        .values()
+        .filter(|e| matches!(e, CellEval::Aborted { .. }))
+        .count();
+    assert!(n_ok >= 1, "fixture produced no converged cells");
+    assert!(n_aborted >= 1, "fixture produced no aborted cells");
+
+    let text = report_text(&first.cells, &first.telemetry, seed);
+    let mut a = Analytics::new();
+    a.ingest_text("sweep", &text).unwrap();
+    let overlay = a.suggest_thresholds();
+    assert!(
+        overlay.regimes.contains_key("vanilla"),
+        "no policy fitted for the swept regime"
+    );
+
+    // deterministic: re-ingesting the same report refits the same bytes
+    let mut b = Analytics::new();
+    b.ingest_text("again", &text).unwrap();
+    assert_eq!(
+        overlay.to_json().to_string(),
+        b.suggest_thresholds().to_json().to_string()
+    );
+    // and the overlay survives its own serialization exactly
+    let parsed = AbortOverlay::parse(&overlay.to_json().to_string()).unwrap();
+    assert_eq!(parsed, overlay);
+
+    let mut under_policy = doomed_runner();
+    under_policy.cfg.abort_overlay = Some(parsed);
+    let second = under_policy
+        .run_sweep(Regime::Vanilla, &SweepOpts { workers: 2, ..Default::default() })
+        .unwrap();
+
+    for (key, eval) in &first.cells {
+        if let CellEval::Ok(e) = eval {
+            match second.cells.get(key) {
+                Some(CellEval::Ok(s)) => {
+                    assert_eq!(e.n, s.n, "{key}");
+                    assert_eq!(e.top1_err.to_bits(), s.top1_err.to_bits(), "{key}");
+                    assert_eq!(e.top5_err.to_bits(), s.top5_err.to_bits(), "{key}");
+                    assert_eq!(e.mean_loss.to_bits(), s.mean_loss.to_bits(), "{key}");
+                }
+                other => panic!(
+                    "cell {key} converged in the sweep the policy was \
+                     learned from but re-ran as {other:?} under it"
+                ),
+            }
+        }
+    }
+    // aborted/na cells both publish null metrics, so the table -- the
+    // artifact CI compares -- reproduces byte-for-byte
+    assert_eq!(
+        report::grid_to_json(&first.grid).to_string(),
+        report::grid_to_json(&second.grid).to_string()
+    );
+}
+
+/// Degenerate inputs: an aborted-only sweep yields a default policy
+/// (nothing safe to fit against), and a single-cell sweep exercises the
+/// n=1 quantile edge -- every quantile equals the one observation.
+#[test]
+fn aborted_only_and_single_cell_sweeps() {
+    let tele = TelemetrySummary {
+        steps: 9,
+        loss_start: 2.0,
+        loss_peak: 40.0,
+        loss_final: f32::NAN,
+        sat_final: 0.75,
+        sat_peak: 0.75,
+        ratio_min: Some(1e-6),
+        ratio_final: Some(1e-6),
+        windows: Vec::new(),
+    };
+    let mut cells = BTreeMap::new();
+    cells.insert(
+        "w=4,a=4".to_string(),
+        CellEval::Aborted { reason: AbortReason::NanLoss, step: 9 },
+    );
+    let mut telemetry = BTreeMap::new();
+    telemetry.insert("w=4,a=4".to_string(), tele.clone());
+
+    let mut a = Analytics::new();
+    a.ingest_text("aborted-only", &report_text(&cells, &telemetry, 11))
+        .unwrap();
+    let j = a.to_json();
+    let sweep = &j.get("sweeps").unwrap().as_arr().unwrap()[0];
+    let summary = sweep.get("summary").unwrap();
+    assert_eq!(summary.get("ok").unwrap().as_usize().unwrap(), 0);
+    assert_eq!(summary.get("aborted").unwrap().as_usize().unwrap(), 1);
+    // no converged telemetry -> the overlay falls back to the defaults
+    let p = a.suggest_thresholds().resolve("vanilla");
+    assert_eq!(p, fxpnet::coordinator::trainer::AbortPolicy::default());
+    assert!(a.render().contains("nan-loss"), "{}", a.render());
+
+    // single converged cell: all-equal quantile edge
+    let mut cells = BTreeMap::new();
+    cells.insert(
+        "w=8,a=8".to_string(),
+        CellEval::Ok(EvalResult { n: 32, top1_err: 0.25, top5_err: 0.0, mean_loss: 1.5 }),
+    );
+    let mut telemetry = BTreeMap::new();
+    telemetry.insert("w=8,a=8".to_string(), TelemetrySummary { sat_peak: 0.25, ..tele });
+    let mut a = Analytics::new();
+    a.ingest_text("single", &report_text(&cells, &telemetry, 12)).unwrap();
+    let j = a.to_json();
+    let sweep = &j.get("sweeps").unwrap().as_arr().unwrap()[0];
+    let widths = sweep.get("widths").unwrap();
+    let agg = widths.get("8").unwrap();
+    for key in ["sat_final_q", "sat_peak_q"] {
+        let q = agg.get(key).unwrap().as_arr().unwrap();
+        assert!(!q.is_empty(), "{key} empty for a telemetry-bearing cell");
+        for v in q {
+            assert_eq!(
+                v.as_f64().unwrap(),
+                q[0].as_f64().unwrap(),
+                "n=1 {key} quantiles must all equal the observation"
+            );
+        }
+    }
+}
+
+/// File-level refusals: missing files, version mismatches and
+/// unrecognized shapes error with actionable messages, and an empty
+/// analytics still renders and serializes.
+#[test]
+fn bad_files_are_refused_and_empty_analytics_degrade_gracefully() {
+    let dir = temp_dir("badfiles");
+    let mut a = Analytics::new();
+
+    let err = a.ingest_file(dir.join("nope.json")).unwrap_err().to_string();
+    assert!(err.contains("nope.json"), "{err}");
+
+    let stale = dir.join("stale.json");
+    std::fs::write(&stale, r#"{"report_version": 1, "kind": "stability"}"#)
+        .unwrap();
+    let err = a.ingest_file(&stale).unwrap_err().to_string();
+    assert!(err.contains("report_version 1"), "{err}");
+    assert!(err.contains("stale.json"), "{err}");
+
+    let legacy = dir.join("legacy.json");
+    std::fs::write(&legacy, r#"{"table": 3, "cells": {}}"#).unwrap();
+    let err = a.ingest_file(&legacy).unwrap_err().to_string();
+    assert!(err.contains("unrecognized input"), "{err}");
+
+    // nothing partial leaked in: still empty, still renders
+    assert!(a.is_empty());
+    assert_eq!(
+        a.to_json().get("sweeps").unwrap().as_arr().unwrap().len(),
+        0
+    );
+    assert!(a.render().contains("stability analytics"));
+    assert!(Json::parse(&a.to_json().to_string()).is_ok());
+}

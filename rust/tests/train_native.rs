@@ -681,11 +681,25 @@ fn doomed_cells_abort_early_and_complete_cells_match_reference() {
     assert!(cache_text.contains("aborted"), "{cache_text}");
     assert!(cache_text.contains(AbortReason::NanLoss.as_str()), "{cache_text}");
     // ...and in the stability report, which regenerates byte-identically
-    let report_json = report::stability_report_json(&abort_on.grid);
+    let seed = RunCfg::default().seed;
+    let report_json = report::stability_report_json(
+        &abort_on.grid.arch,
+        abort_on.grid.regime,
+        seed,
+        &abort_on.cells,
+        &abort_on.telemetry,
+    );
     assert!(report_json.get("summary").unwrap().get("aborted").unwrap().as_usize().unwrap() >= 1);
     assert_eq!(
         report_json.to_string(),
-        report::stability_report_json(&abort_on.grid).to_string()
+        report::stability_report_json(
+            &abort_on.grid.arch,
+            abort_on.grid.regime,
+            seed,
+            &abort_on.cells,
+            &abort_on.telemetry,
+        )
+        .to_string()
     );
 }
 
